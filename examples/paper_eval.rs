@@ -1,0 +1,154 @@
+//! End-to-end evaluation driver (EXPERIMENTS.md's source of truth).
+//!
+//! Exercises the full system on a real small workload and regenerates every
+//! table and figure of the paper's evaluation:
+//!
+//! 1. trains the HAR-4 network on synthetic data, prunes + retrains
+//!    (accuracy pipeline, the real model used below);
+//! 2. serves batched requests through the coordinator on the **PJRT**
+//!    backend (the AOT HLO artifacts — Layers 1+2 on the request path),
+//!    reporting measured latency/throughput;
+//! 3. regenerates Table 2, Table 3, Table 4, Figure 7, the GOps/n_opt/
+//!    combined analyses and the ablations, running each harness's shape
+//!    self-check.
+//!
+//! Run: `make artifacts && cargo run --release --example paper_eval`
+//! (set ZDNN_QUICK=1 for a fast smoke pass)
+
+use std::time::Instant;
+
+use anyhow::Result;
+use zynq_dnn::bench;
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::data::har;
+use zynq_dnn::nn::spec::har_4;
+use zynq_dnn::train::prune::apply_pruning;
+use zynq_dnn::train::{evaluate_q, TrainConfig, Trainer};
+use zynq_dnn::util::fmt_time;
+
+fn main() -> Result<()> {
+    let quick = bench::quick_mode();
+    let t0 = Instant::now();
+    println!("zynq-dnn paper evaluation driver (quick={quick})\n");
+
+    // ---- 1. real model: train + prune HAR-4 ------------------------------
+    let spec = har_4();
+    let (train_n, epochs) = if quick { (300, 2) } else { (1200, 6) };
+    let train = har::generate(train_n, 1);
+    let test = har::generate(train_n / 3, 2);
+    println!("[1/3] training {} on {} synthetic HAR samples…", spec.abbrev(), train.len());
+    let mut trainer = Trainer::new(spec, 21);
+    trainer.fit(
+        &train,
+        &TrainConfig {
+            epochs,
+            ..Default::default()
+        },
+    )?;
+    let dense_acc = evaluate_q(&trainer.to_weights(), &test);
+    let report = apply_pruning(&mut trainer, 0.88)?;
+    trainer.fit(
+        &train,
+        &TrainConfig {
+            epochs: (epochs / 2).max(1),
+            learning_rate: 0.015,
+            ..Default::default()
+        },
+    )?;
+    let pruned_acc = evaluate_q(&trainer.to_weights(), &test);
+    println!(
+        "      dense acc {:.1}% → pruned(q={:.3}) acc {:.1}% (Δ {:+.1} pt)\n",
+        dense_acc * 100.0,
+        report.achieved,
+        pruned_acc * 100.0,
+        (pruned_acc - dense_acc) * 100.0
+    );
+    let qnet = trainer.to_weights().quantized();
+
+    // ---- 2. serve the trained model on the PJRT backend ------------------
+    let batch = 4;
+    println!("[2/3] serving the trained model via the AOT HLO artifact (PJRT, batch {batch})…");
+    let cfg = ServerConfig {
+        network: "har4".into(),
+        batch,
+        batch_deadline_us: 2000,
+        backend: "pjrt".into(),
+        ..Default::default()
+    };
+    let factory = EngineFactory {
+        backend: "pjrt".into(),
+        batch,
+        net: qnet.clone(),
+        artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
+        native_threads: 1,
+    };
+    let server = Server::start(&cfg, factory)?;
+    let n_req = if quick { 32 } else { 256 };
+    let serve_t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let row = test.x.row(i % test.len());
+        rxs.push(server.submit(zynq_dnn::fixedpoint::quantize_slice(row))?.1);
+    }
+    let mut correct = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        if rx.recv()?.class == test.y[i % test.len()] {
+            correct += 1;
+        }
+    }
+    let wall = serve_t0.elapsed().as_secs_f64();
+    let snap = server.metrics.snapshot();
+    println!(
+        "      {} requests in {}: {:.0} req/s, mean latency {}, p95 {}, occupancy {:.2}, acc {:.1}%\n",
+        n_req,
+        fmt_time(wall),
+        n_req as f64 / wall,
+        fmt_time(snap.mean_latency_s),
+        fmt_time(snap.p95_latency_s),
+        snap.occupancy,
+        100.0 * correct as f64 / n_req as f64
+    );
+    server.shutdown()?;
+
+    // ---- 3. regenerate every table and figure ----------------------------
+    println!("[3/3] regenerating the paper's evaluation…\n");
+
+    let t2 = bench::table2::run();
+    println!("{}", bench::table2::render(&t2));
+    bench::table2::check_shape(&t2).map_err(anyhow::Error::msg)?;
+
+    let t3 = bench::table3::run();
+    println!("{}", bench::table3::render(&t3));
+    bench::table3::check_shape(&t3).map_err(anyhow::Error::msg)?;
+
+    let t4 = bench::table4::run();
+    println!("{}", bench::table4::render(&t4));
+    bench::table4::check_shape(&t4).map_err(anyhow::Error::msg)?;
+
+    let f7 = bench::fig7::run();
+    println!("{}", bench::fig7::render(&f7));
+    bench::fig7::check_shape(&f7).map_err(anyhow::Error::msg)?;
+
+    let g = bench::gops::run();
+    println!("{}", bench::gops::render(&g));
+    bench::gops::check_shape(&g).map_err(anyhow::Error::msg)?;
+
+    let n = bench::nopt::run();
+    println!("{}", bench::nopt::render(&n));
+    bench::nopt::check_shape(&n).map_err(anyhow::Error::msg)?;
+
+    let c = bench::combined::run();
+    println!("{}", bench::combined::render(&c));
+    bench::combined::check_shape(&c).map_err(anyhow::Error::msg)?;
+
+    let a = bench::ablation::run();
+    println!("{}", bench::ablation::render(&a));
+    bench::ablation::check_shape(&a).map_err(anyhow::Error::msg)?;
+
+    println!(
+        "\nALL EXPERIMENTS PASSED their shape checks in {}",
+        fmt_time(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path (Layers 1+2): Pallas kernels, the JAX network
+forward, and the AOT driver that lowers everything to HLO text artifacts.
+
+Nothing in this package is imported at runtime — the rust coordinator only
+consumes ``artifacts/``.
+"""

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for the batch-processing and pruning datapaths.
+
+``batch_mm``   — section-tiled dense fixed-point layer (paper §5.5, Fig 5)
+``sparse_mv``  — pruned/sparse layer with gathered activations (§5.6, Fig 6)
+``activations``— Q7.8 activation unit: ReLU + PLAN sigmoid (§5.4)
+``ref``        — independent pure-numpy oracle for all of the above
+"""
+
+from . import activations, batch_mm, ref, sparse_mv  # noqa: F401

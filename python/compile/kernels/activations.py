@@ -1,0 +1,106 @@
+"""Fixed-point activation functions (Layer 1 helpers).
+
+These mirror the FPGA activation unit of the paper (Section 5.4):
+
+* inputs are the 32-bit accumulators of the matrix coprocessor in Q15.16
+  (Q7.8 x Q7.8 products accumulated at full precision),
+* ReLU is plain combinational logic,
+* sigmoid uses the PLAN piecewise-linear approximation of Amin et al. [1],
+  the exact segment table the hardware implements with shifts and adds,
+* outputs are requantized to Q7.8 (the activation format fed to the next
+  layer / stored in the I/O BRAMs).
+
+Everything here is written against ``jnp`` int32 arrays with *shift/add only*
+arithmetic so that (a) it is bit-identical to the rust datapath
+(``rust/src/fixedpoint``) and (b) it traces cleanly inside Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Q formats ------------------------------------------------------------------
+FRAC_BITS = 8  # Q7.8 weights/activations
+ACC_FRAC_BITS = 16  # Q15.16 accumulator (product of two Q7.8)
+Q78_ONE = 1 << FRAC_BITS
+Q78_MIN = -(1 << 15)
+Q78_MAX = (1 << 15) - 1
+
+# PLAN sigmoid breakpoints, expressed on the Q15.16 accumulator ---------------
+_PLAN_B5 = 5 << ACC_FRAC_BITS  # 5.0
+_PLAN_B2375 = (2 << ACC_FRAC_BITS) + (3 << (ACC_FRAC_BITS - 3))  # 2.375
+_PLAN_B1 = 1 << ACC_FRAC_BITS  # 1.0
+
+# Activation selector codes shared with rust (nn::Activation) -----------------
+ACT_IDENTITY = 0
+ACT_RELU = 1
+ACT_SIGMOID = 2
+
+ACT_NAMES = {ACT_IDENTITY: "identity", ACT_RELU: "relu", ACT_SIGMOID: "sigmoid"}
+ACT_CODES = {v: k for k, v in ACT_NAMES.items()}
+
+
+def requantize_acc(acc):
+    """Q15.16 accumulator -> Q7.8 activation, round-to-nearest, saturating.
+
+    Matches rust ``fixedpoint::requantize_acc`` bit for bit.  The semantics
+    are ``sat16((acc + 128) >> 8)`` with the bias add carried at full width
+    (the hardware rounding adder is one bit wider than the accumulator);
+    implemented overflow-free in 32 bits via the identity
+    ``(acc + 128) >> 8 == (acc >> 8) + ((acc >> 7) & 1)``.
+    """
+    acc = acc.astype(jnp.int32)
+    shift = ACC_FRAC_BITS - FRAC_BITS
+    rounded = (acc >> shift) + ((acc >> (shift - 1)) & 1)
+    return jnp.clip(rounded, Q78_MIN, Q78_MAX).astype(jnp.int32)
+
+
+def relu_acc(acc):
+    """ReLU on the Q15.16 accumulator, result requantized to Q7.8."""
+    return requantize_acc(jnp.maximum(acc.astype(jnp.int32), 0))
+
+
+def plan_sigmoid_acc(acc):
+    """PLAN sigmoid (Amin et al. 1997) on the Q15.16 accumulator -> Q7.8.
+
+    Segments on x >= 0 (y in real units):
+        x >= 5.0          y = 1
+        2.375 <= x < 5.0  y = 0.03125 x + 0.84375
+        1.0   <= x < 2.375  y = 0.125 x + 0.625
+        0.0   <= x < 1.0  y = 0.25  x + 0.5
+    and y(-x) = 1 - y(x).  With x in Q15.16 and y in Q7.8 the slopes become
+    pure right-shifts: 0.03125 x -> x >> 13, 0.125 x -> x >> 11,
+    0.25 x -> x >> 10 (floor shifts, exactly as the hardware wires them).
+    """
+    acc = acc.astype(jnp.int32)
+    # |INT32_MIN| would wrap; clamping one ulp off the rail is exact here
+    # because both -2^31 and -(2^31 - 1) are deep in the y = 0 region.
+    mag = jnp.abs(jnp.maximum(acc, -(2**31 - 1)))
+    y = jnp.where(
+        mag >= _PLAN_B5,
+        Q78_ONE,
+        jnp.where(
+            mag >= _PLAN_B2375,
+            (mag >> 13) + 216,
+            jnp.where(mag >= _PLAN_B1, (mag >> 11) + 160, (mag >> 10) + 128),
+        ),
+    )
+    y = jnp.where(acc < 0, Q78_ONE - y, y)
+    return jnp.clip(y, 0, Q78_ONE).astype(jnp.int32)
+
+
+def identity_acc(acc):
+    """No activation: plain requantization (used for logits / output layers)."""
+    return requantize_acc(acc)
+
+
+def apply_activation(acc, act_code: int):
+    """Static dispatch on the activation selector (resolved at trace time,
+    the way the hardware control unit selects the function per layer)."""
+    if act_code == ACT_RELU:
+        return relu_acc(acc)
+    if act_code == ACT_SIGMOID:
+        return plan_sigmoid_acc(acc)
+    if act_code == ACT_IDENTITY:
+        return identity_acc(acc)
+    raise ValueError(f"unknown activation code {act_code!r}")

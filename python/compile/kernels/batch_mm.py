@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: section-tiled fixed-point batch matmul.
+
+This is the compute hot-spot of the paper's *batch processing* design
+(Section 5.5, Figure 5) re-thought for a TPU-shaped memory hierarchy:
+
+* the FPGA streams one *section* (``m`` rows of the weight matrix, one row
+  per hardware neuron) into on-chip FIFOs and reuses it for all ``n``
+  samples of the batch;
+* here each Pallas grid step holds one section of the weight matrix in
+  VMEM (the ``BlockSpec`` below is the analogue of the weight FIFOs) while
+  the whole activation batch stays resident (the analogue of the batch
+  memory), so every weight leaves HBM exactly once per batch — the paper's
+  key data-movement property;
+* the MXU-equivalent is the int dot: Q7.8 operands, 32-bit wrapping
+  accumulation, exactly like the DSP48 MAC cascade (16-bit multiply,
+  32-bit accumulate).
+
+Pallas runs under ``interpret=True`` everywhere in this repo: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so the kernel is lowered to plain
+HLO ops.  Structure (blocking, residency, fusion of the activation) is what
+we optimize; see DESIGN.md §8 for the VMEM/MXU estimate on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import activations as act
+
+# Section size: the paper's batch design instantiates up to m = 114 MAC units
+# (one neuron per unit, r = 1).  On the MXU the natural section is a multiple
+# of the 128-lane tile; we default to 128 and pad the output dimension.
+DEFAULT_SECTION = 128
+
+
+def _layer_kernel(x_ref, w_ref, o_ref, *, act_code: int):
+    """One grid step = one section: all n samples x one m-neuron weight block.
+
+    x_ref: (n, s_in)   Q7.8 activations, resident across the whole grid
+    w_ref: (m, s_in)   Q7.8 weights of this section (row i = neuron i)
+    o_ref: (n, m)      Q7.8 activations of the section's neurons
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    # Q7.8 x Q7.8 -> Q15.16, wrapping 32-bit accumulation (matches both the
+    # FPGA's DSP accumulators and rust's wrapping_add cross-check path).
+    acc = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = act.apply_activation(acc, act_code)
+
+
+def _pad_rows(w: jax.Array, section: int) -> jax.Array:
+    """Zero-pad the neuron dimension to a multiple of the section size.
+
+    Zero rows are dead neurons: they cost nothing functionally (outputs are
+    sliced off) and mirror the paper's handling of the last partial section.
+    """
+    s_out = w.shape[0]
+    padded = pl.cdiv(s_out, section) * section
+    if padded == s_out:
+        return w
+    return jnp.pad(w, ((0, padded - s_out), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("act_code", "section", "interpret"))
+def batch_layer(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    act_code: int = act.ACT_RELU,
+    section: int = DEFAULT_SECTION,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute one fully-connected layer for a batch of samples.
+
+    Args:
+      x: (n, s_in) int32 activations on the Q7.8 grid.
+      w: (s_out, s_in) int32 weights on the Q7.8 grid (paper layout: row i
+         holds the fan-in of output neuron i).
+      act_code: activation selector (see ``activations``), static.
+      section: neurons per grid step (the paper's ``m``), static.
+
+    Returns:
+      (n, s_out) int32 activations on the Q7.8 grid.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[1]:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape}")
+    n, s_in = x.shape
+    s_out = w.shape[0]
+    wp = _pad_rows(w, section)
+    num_sections = wp.shape[0] // section
+
+    out = pl.pallas_call(
+        functools.partial(_layer_kernel, act_code=act_code),
+        grid=(num_sections,),
+        in_specs=[
+            # Batch memory: all n samples resident for the whole layer.
+            pl.BlockSpec((n, s_in), lambda i: (0, 0)),
+            # Weight FIFO: one m-neuron section per grid step.
+            pl.BlockSpec((section, s_in), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, section), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, wp.shape[0]), jnp.int32),
+        interpret=interpret,
+    )(x, wp)
+    return out[:, :s_out]
+
+
+def vmem_bytes(n: int, s_in: int, section: int = DEFAULT_SECTION) -> int:
+    """Static VMEM residency estimate for one grid step (DESIGN.md §8):
+    activation block + weight section + output block, int32 each."""
+    return 4 * (n * s_in + section * s_in + n * section)

@@ -1,0 +1,110 @@
+"""Pure-numpy/jnp correctness oracle for the Layer-1 kernels.
+
+Deliberately written *without* Pallas and without sharing arithmetic helpers
+with the kernels: this file re-derives the Q7.8 datapath from the paper's
+definitions (Sections 3, 5.3, 5.4) so that agreement between kernel and
+oracle is a real signal, not a tautology.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+FRAC = 8  # Q7.8
+ACC_FRAC = 16  # Q15.16
+
+
+def quantize(x: np.ndarray) -> np.ndarray:
+    """f32 -> Q7.8 grid (round-to-nearest, saturate), returned as int32."""
+    q = np.rint(np.asarray(x, dtype=np.float64) * (1 << FRAC))
+    return np.clip(q, -(1 << 15), (1 << 15) - 1).astype(np.int32)
+
+
+def dequantize(q: np.ndarray) -> np.ndarray:
+    return np.asarray(q, dtype=np.float64) / (1 << FRAC)
+
+
+def _requant(acc: np.ndarray) -> np.ndarray:
+    """Q15.16 -> Q7.8: add half-ulp, arithmetic shift right 8, saturate."""
+    r = (acc.astype(np.int64) + 128) >> 8  # bias add at full width
+    return np.clip(r, -(1 << 15), (1 << 15) - 1).astype(np.int32)
+
+
+def _transfer(x_q: np.ndarray, w_q: np.ndarray) -> np.ndarray:
+    """The transfer function z_i = sum_k w_ik * a_k with 32-bit wrapping
+    accumulation (two's complement), one row of W per output neuron."""
+    x = x_q.astype(np.int64)
+    w = w_q.astype(np.int64)
+    acc = x @ w.T  # exact in int64
+    # wrap to 32 bits the way the DSP accumulator / XLA int32 dot does
+    return (acc & np.int64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+
+
+def relu(acc: np.ndarray) -> np.ndarray:
+    return _requant(np.maximum(acc, 0))
+
+
+def plan_sigmoid(acc: np.ndarray) -> np.ndarray:
+    """PLAN approximation, recomputed from the real-valued segment table."""
+    acc = acc.astype(np.int64)
+    mag = np.abs(acc)
+    y = np.empty_like(mag)
+    seg_a = mag >= (5 << ACC_FRAC)
+    seg_b = (mag >= int(2.375 * (1 << ACC_FRAC))) & ~seg_a
+    seg_c = (mag >= (1 << ACC_FRAC)) & ~seg_a & ~seg_b
+    seg_d = ~(seg_a | seg_b | seg_c)
+    y[seg_a] = 1 << FRAC
+    y[seg_b] = (mag[seg_b] >> 13) + 216
+    y[seg_c] = (mag[seg_c] >> 11) + 160
+    y[seg_d] = (mag[seg_d] >> 10) + 128
+    y = np.where(acc < 0, (1 << FRAC) - y, y)
+    return np.clip(y, 0, 1 << FRAC).astype(np.int32)
+
+
+def identity(acc: np.ndarray) -> np.ndarray:
+    return _requant(acc)
+
+
+_ACTS = {"relu": relu, "sigmoid": plan_sigmoid, "identity": identity}
+
+
+def layer(x_q: np.ndarray, w_q: np.ndarray, activation: str = "relu") -> np.ndarray:
+    """Oracle for one fully-connected layer on the Q7.8 grid."""
+    return _ACTS[activation](_transfer(x_q, w_q))
+
+
+def sparse_layer_ref(
+    x_q: np.ndarray,
+    vals: np.ndarray,
+    cols: np.ndarray,
+    s_in: int,
+    activation: str = "relu",
+) -> np.ndarray:
+    """Oracle for the pruned layer: densify then run the dense oracle."""
+    s_out, _k_max = vals.shape
+    dense = np.zeros((s_out, s_in), dtype=np.int64)
+    for o in range(s_out):
+        np.add.at(dense[o], cols[o], vals[o].astype(np.int64))
+    return layer(x_q, dense.astype(np.int32), activation)
+
+
+def forward(x_q: np.ndarray, weights, activations) -> np.ndarray:
+    """Oracle for a whole network: weights is a list of (s_out, s_in) int32
+    matrices, activations a list of names, applied layer by layer."""
+    a = x_q
+    for w, actname in zip(weights, activations):
+        a = layer(a, w, actname)
+    return a
+
+
+def sigmoid_exact(x: np.ndarray) -> np.ndarray:
+    """Real sigmoid, for measuring the PLAN approximation error."""
+    return 1.0 / (1.0 + np.exp(-np.asarray(x, dtype=np.float64)))
+
+
+def plan_max_error() -> float:
+    """Max |PLAN - sigmoid| over a dense sweep (Amin et al. cite ~0.0189)."""
+    xs = np.linspace(-8.0, 8.0, 200001)
+    acc = np.rint(xs * (1 << ACC_FRAC)).astype(np.int64)
+    y = plan_sigmoid(acc).astype(np.float64) / (1 << FRAC)
+    return float(np.max(np.abs(y - sigmoid_exact(xs))))

@@ -1,0 +1,111 @@
+"""Layer-1 Pallas kernel: pruned (sparse) fully-connected layer.
+
+Mirror of the paper's *pruning* datapath (Section 5.6, Figure 6).  The FPGA
+streams rows of the sparse weight matrix as packed tuples
+``(w_l, z_{w_l})`` — weight plus zero-run — and an offset-calculation IP
+turns the zero-runs into activation addresses, so each of the r multipliers
+gathers its own input activation per cycle.
+
+The TPU-shaped equivalent: the tuple stream is decoded *at the coordinator*
+(rust ``sparse::`` does the bit-level format) into two dense padded arrays
+
+    vals[o, l]  — remaining Q7.8 weights of output neuron o (zero padded)
+    cols[o, l]  — their column addresses (the decoded ``address_l``)
+
+and this kernel performs the gather-MAC.  ``l`` is padded to ``k_max``, the
+maximum row population of the layer — the analogue of the slowest sparse-row
+coprocessor bounding the section.  Zero padding is harmless: w = 0 tuples
+contribute nothing, exactly like the skipped weights in hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import activations as act
+
+# The pruning design instantiates m = 4 sparse-row coprocessors; a TPU block
+# wants lane-aligned tiles, so the kernel processes sections of output
+# neurons per grid step, like batch_mm.
+DEFAULT_SECTION = 128
+
+
+def _sparse_kernel(x_ref, vals_ref, cols_ref, o_ref, *, act_code: int):
+    """x: (n, s_in); vals/cols: (m, k_max); out: (n, m)."""
+    x = x_ref[...]
+    vals = vals_ref[...]
+    cols = cols_ref[...]
+    # Gather the addressed activations: (n, m, k_max).  This is the offset
+    # calculation + r-ported I/O memory of Figure 6 in one vectorized step.
+    gathered = jnp.take(x, cols, axis=1)
+    prod = gathered * vals[None, :, :]
+    acc = jnp.sum(prod.astype(jnp.int32), axis=2, dtype=jnp.int32)
+    o_ref[...] = act.apply_activation(acc, act_code)
+
+
+def _pad_rows(a: jax.Array, section: int) -> jax.Array:
+    rows = a.shape[0]
+    padded = pl.cdiv(rows, section) * section
+    if padded == rows:
+        return a
+    return jnp.pad(a, ((0, padded - rows), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("act_code", "section", "interpret"))
+def sparse_layer(
+    x: jax.Array,
+    vals: jax.Array,
+    cols: jax.Array,
+    *,
+    act_code: int = act.ACT_RELU,
+    section: int = DEFAULT_SECTION,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute one pruned fully-connected layer.
+
+    Args:
+      x: (n, s_in) int32 Q7.8 activations.
+      vals: (s_out, k_max) int32 remaining Q7.8 weights, zero padded.
+      cols: (s_out, k_max) int32 column addresses in [0, s_in), padding
+        entries must address a valid column (0 is fine, their weight is 0).
+      act_code, section: static parameters as in ``batch_mm``.
+
+    Returns:
+      (n, s_out) int32 Q7.8 activations.
+    """
+    if vals.shape != cols.shape:
+        raise ValueError(f"vals{vals.shape} != cols{cols.shape}")
+    if x.ndim != 2:
+        raise ValueError(f"x must be 2-d, got {x.shape}")
+    n, s_in = x.shape
+    s_out, k_max = vals.shape
+    vp = _pad_rows(vals, section)
+    cp = _pad_rows(cols, section)
+    num_sections = vp.shape[0] // section
+
+    out = pl.pallas_call(
+        functools.partial(_sparse_kernel, act_code=act_code),
+        grid=(num_sections,),
+        in_specs=[
+            pl.BlockSpec((n, s_in), lambda i: (0, 0)),
+            pl.BlockSpec((section, k_max), lambda i: (i, 0)),
+            pl.BlockSpec((section, k_max), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, section), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, vp.shape[0]), jnp.int32),
+        interpret=interpret,
+    )(x, vp, cp)
+    return out[:, :s_out]
+
+
+def densify(vals, cols, s_in: int):
+    """Reference helper: expand (vals, cols) back to a dense (s_out, s_in)
+    matrix.  Padding tuples (w = 0) scatter zeros, which is a no-op add."""
+    s_out, _ = vals.shape
+    dense = jnp.zeros((s_out, s_in), dtype=jnp.int32)
+    rows = jnp.arange(s_out)[:, None].repeat(vals.shape[1], axis=1)
+    return dense.at[rows, cols].add(vals)

@@ -1,0 +1,170 @@
+"""Layer 2: the JAX network forward pass, built from the Layer-1 kernels.
+
+The paper evaluates four fully-connected architectures (Table 2 footnotes)
+plus we add a small quickstart net.  Each network's forward chains
+``batch_mm.batch_layer`` (the section-tiled Pallas kernel) layer by layer,
+exactly the way the FPGA control unit sequences layers: a layer cannot start
+before the previous one finished (§4), so the graph is a plain chain.
+
+Weights are *parameters* of the jitted function, not constants: one lowered
+HLO artifact therefore serves any trained/pruned weight set of the same
+architecture (pruned networks are functionally dense matrices with zeros —
+the sparsity is exploited by the rust timing simulator and the sparse
+kernel, not by the functional artifact).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import activations as act
+from .kernels import batch_mm
+
+
+@dataclass(frozen=True)
+class NetworkSpec:
+    """Architecture of a fully-connected network, paper notation
+    s_0 x s_1 x ... x s_{L-1} (s_0 = inputs, s_{L-1} = outputs)."""
+
+    name: str
+    sizes: Tuple[int, ...]
+    # one activation per weight matrix; paper default: ReLU hidden layers,
+    # sigmoid output layer (§3)
+    activations: Tuple[str, ...] = field(default=())
+
+    def __post_init__(self):
+        if len(self.sizes) < 2:
+            raise ValueError("a network needs at least input and output sizes")
+        acts = self.activations
+        if not acts:
+            acts = ("relu",) * (len(self.sizes) - 2) + ("sigmoid",)
+            object.__setattr__(self, "activations", acts)
+        if len(self.activations) != len(self.sizes) - 1:
+            raise ValueError(
+                f"{self.name}: {len(self.activations)} activations for "
+                f"{len(self.sizes) - 1} weight matrices"
+            )
+        for a in self.activations:
+            if a not in act.ACT_CODES:
+                raise ValueError(f"unknown activation {a!r}")
+
+    @property
+    def num_layers(self) -> int:
+        """Paper's L (layer count including the input layer)."""
+        return len(self.sizes)
+
+    @property
+    def weight_shapes(self) -> List[Tuple[int, int]]:
+        """Per-matrix (s_out, s_in), paper layout (row i = output neuron i)."""
+        return [
+            (self.sizes[j + 1], self.sizes[j]) for j in range(len(self.sizes) - 1)
+        ]
+
+    @property
+    def num_parameters(self) -> int:
+        return sum(o * i for o, i in self.weight_shapes)
+
+    def abbrev(self) -> str:
+        return "x".join(str(s) for s in self.sizes)
+
+
+# The paper's evaluation networks (Table 2 footnotes a/b) ---------------------
+MNIST_4 = NetworkSpec("mnist4", (784, 800, 800, 10))
+MNIST_8 = NetworkSpec("mnist8", (784, 800, 800, 800, 800, 800, 800, 10))
+HAR_4 = NetworkSpec("har4", (561, 1200, 300, 6))
+HAR_6 = NetworkSpec("har6", (561, 2000, 1500, 750, 300, 6))
+# Small net for the quickstart example and fast tests
+QUICKSTART = NetworkSpec("quickstart", (64, 48, 10))
+
+NETWORKS = {n.name: n for n in (MNIST_4, MNIST_8, HAR_4, HAR_6, QUICKSTART)}
+
+# Parameter counts quoted in Table 2 — verified by test_model.py
+PAPER_PARAM_COUNTS = {
+    "mnist4": 1_275_200,
+    "mnist8": 3_835_200,
+    "har4": 1_035_000,
+    "har6": 5_473_800,
+}
+
+
+def forward(
+    x: jax.Array,
+    weights: Sequence[jax.Array],
+    spec: NetworkSpec,
+    *,
+    section: int = batch_mm.DEFAULT_SECTION,
+    interpret: bool = True,
+    impl: str = "pallas",
+) -> Tuple[jax.Array]:
+    """Full-network inference on the Q7.8 grid.
+
+    Args:
+      x: (n, s_0) int32 activations.
+      weights: list of (s_{j+1}, s_j) int32 matrices.
+      impl: "pallas" — the section-tiled Pallas kernel (the TPU-structural
+        artifact; under interpret mode its grid loop lowers to XLA
+        while/dynamic-slice scaffolding);
+        "fused" — the same math as one fused dot+activation per layer,
+        bit-identical, which XLA CPU executes ~8× faster (EXPERIMENTS.md
+        §Perf).  Serving artifacts use "fused"; pytest asserts equality.
+
+    Returns a 1-tuple (the AOT bridge lowers with return_tuple=True).
+    """
+    if impl not in ("pallas", "fused"):
+        raise ValueError(f"unknown impl {impl!r}")
+    shapes = spec.weight_shapes
+    if len(weights) != len(shapes):
+        raise ValueError(f"{spec.name}: expected {len(shapes)} weight matrices")
+    a = x
+    for w, (s_out, s_in), actname in zip(weights, shapes, spec.activations):
+        if tuple(w.shape) != (s_out, s_in):
+            raise ValueError(
+                f"{spec.name}: weight shape {tuple(w.shape)} != {(s_out, s_in)}"
+            )
+        if impl == "pallas":
+            a = batch_mm.batch_layer(
+                a,
+                w,
+                act_code=act.ACT_CODES[actname],
+                section=section,
+                interpret=interpret,
+            )
+        else:
+            acc = jax.lax.dot_general(
+                a,
+                w,
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            a = act.apply_activation(acc, act.ACT_CODES[actname])
+    return (a,)
+
+
+def example_args(spec: NetworkSpec, batch: int):
+    """ShapeDtypeStructs for lowering: (x, *weights), all int32 Q7.8."""
+    x = jax.ShapeDtypeStruct((batch, spec.sizes[0]), jnp.int32)
+    ws = [jax.ShapeDtypeStruct(s, jnp.int32) for s in spec.weight_shapes]
+    return (x, *ws)
+
+
+def lower(
+    spec: NetworkSpec,
+    batch: int,
+    *,
+    section: int = batch_mm.DEFAULT_SECTION,
+    impl: str = "fused",
+):
+    """jit + lower one (network, batch) variant for AOT export.
+
+    ``impl="fused"`` is the serving default (see ``forward``); the Pallas
+    variant is lowered with ``impl="pallas"`` for structural inspection.
+    """
+
+    def fn(x, *weights):
+        return forward(x, weights, spec, section=section, interpret=True, impl=impl)
+
+    return jax.jit(fn).lower(*example_args(spec, batch))

@@ -1,0 +1,114 @@
+"""Activation unit (Q7.8 / PLAN sigmoid) — kernel helpers vs oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import activations as act
+from compile.kernels import ref
+
+I32 = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+
+
+def arr(xs):
+    return np.asarray(xs, dtype=np.int32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(I32, min_size=1, max_size=64))
+def test_requantize_matches_oracle(xs):
+    got = np.asarray(act.requantize_acc(arr(xs)))
+    want = ref.identity(arr(xs))
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(I32, min_size=1, max_size=64))
+def test_relu_matches_oracle(xs):
+    got = np.asarray(act.relu_acc(arr(xs)))
+    want = ref.relu(arr(xs))
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(I32, min_size=1, max_size=64))
+def test_plan_sigmoid_matches_oracle(xs):
+    got = np.asarray(act.plan_sigmoid_acc(arr(xs)))
+    want = ref.plan_sigmoid(arr(xs))
+    assert np.array_equal(got, want)
+
+
+def test_requantize_rounding_and_saturation():
+    # +half-ulp rounds up, -half rounds toward +inf (arithmetic shift + bias)
+    assert act.requantize_acc(arr([0]))[0] == 0
+    assert act.requantize_acc(arr([127]))[0] == 0  # below half ulp
+    assert act.requantize_acc(arr([128]))[0] == 1  # exactly half -> up
+    assert act.requantize_acc(arr([-128]))[0] == 0
+    assert act.requantize_acc(arr([-129]))[0] == -1
+    # saturation at the Q7.8 rails
+    assert act.requantize_acc(arr([2**31 - 1]))[0] == 32767
+    assert act.requantize_acc(arr([-(2**31)]))[0] == -32768
+
+
+def test_relu_clamps_negative():
+    got = np.asarray(act.relu_acc(arr([-(1 << 20), -1, 0, 1 << 20])))
+    assert got[0] == 0 and got[1] == 0 and got[2] == 0
+    assert got[3] == (1 << 20) >> 8
+
+
+@pytest.mark.parametrize(
+    "x_real,expected",
+    [
+        (0.0, 128),  # sigmoid(0) = 0.5 -> 128 in Q7.8
+        (10.0, 256),  # saturates at 1.0
+        (-10.0, 0),
+        (1.0, 192),  # segment boundary: 0.25*1+0.5 = 0.75
+        (-1.0, 64),
+    ],
+)
+def test_plan_sigmoid_known_points(x_real, expected):
+    acc = arr([int(round(x_real * (1 << 16)))])
+    assert int(act.plan_sigmoid_acc(acc)[0]) == expected
+
+
+def test_plan_sigmoid_segment_boundaries_continuous():
+    """The fixed-point PLAN must not jump by more than 1 LSB at breakpoints."""
+    for b in (1.0, 2.375, 5.0):
+        lo = arr([int(b * (1 << 16)) - 1])
+        hi = arr([int(b * (1 << 16))])
+        d = abs(int(act.plan_sigmoid_acc(hi)[0]) - int(act.plan_sigmoid_acc(lo)[0]))
+        assert d <= 1, f"discontinuity {d} at x={b}"
+
+
+@settings(max_examples=200, deadline=None)
+@given(I32, I32)
+def test_plan_sigmoid_monotone(a, b):
+    lo, hi = sorted((a, b))
+    ya = int(act.plan_sigmoid_acc(arr([lo]))[0])
+    yb = int(act.plan_sigmoid_acc(arr([hi]))[0])
+    assert ya <= yb
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=-(2**31) + 1, max_value=2**31 - 1))
+def test_plan_sigmoid_symmetry(x):
+    y_pos = int(act.plan_sigmoid_acc(arr([x]))[0])
+    y_neg = int(act.plan_sigmoid_acc(arr([-x]))[0])
+    assert y_pos + y_neg == 256
+
+
+def test_plan_approximation_error_bound():
+    # Amin et al. report ~1.89% max error; our Q7.8 output adds quantization.
+    assert ref.plan_max_error() < 0.022
+
+
+def test_apply_activation_dispatch():
+    xs = arr([-(1 << 16), 0, 1 << 16])
+    assert np.array_equal(
+        np.asarray(act.apply_activation(xs, act.ACT_RELU)), ref.relu(xs)
+    )
+    assert np.array_equal(
+        np.asarray(act.apply_activation(xs, act.ACT_SIGMOID)), ref.plan_sigmoid(xs)
+    )
+    with pytest.raises(ValueError):
+        act.apply_activation(xs, 99)

@@ -1,0 +1,60 @@
+"""AOT driver: artifact emission, manifest integrity, HLO text validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    rc = aot.main(
+        ["--out-dir", str(out), "--nets", "quickstart", "--batches", "1,4", "--check"]
+    )
+    assert rc == 0
+    return out
+
+
+def test_manifest_exists_and_versioned(built):
+    m = json.loads((built / "manifest.json").read_text())
+    assert m["version"] == aot.MANIFEST_VERSION
+    assert m["qformat"] == "Q7.8"
+    assert len(m["entries"]) == 2
+
+
+def test_manifest_entries_consistent(built):
+    m = json.loads((built / "manifest.json").read_text())
+    spec = model.QUICKSTART
+    for e in m["entries"]:
+        assert e["network"] == "quickstart"
+        assert tuple(e["architecture"]) == spec.sizes
+        assert e["input_shape"] == [e["batch"], spec.sizes[0]]
+        assert e["output_shape"] == [e["batch"], spec.sizes[-1]]
+        assert [tuple(s) for s in e["weight_shapes"]] == spec.weight_shapes
+        assert e["num_parameters"] == spec.num_parameters
+        assert os.path.exists(built / e["file"])
+
+
+def test_hlo_text_is_parseable_text(built):
+    text = (built / "quickstart_b1.hlo.txt").read_text()
+    assert "ENTRY" in text and "HloModule" in text
+    # weights are runtime parameters: one input + one per weight matrix,
+    # counted in the ENTRY computation only (fusions have their own params)
+    entry = text[text.index("ENTRY") :]
+    entry = entry[: entry.index("\n}")]
+    n_params = entry.count("parameter(")
+    assert n_params == 1 + len(model.QUICKSTART.weight_shapes)
+
+
+def test_artifact_name_scheme():
+    assert aot.artifact_name("mnist8", 16) == "mnist8_b16.hlo.txt"
+
+
+def test_build_entry_fields():
+    e = aot.build_entry(model.HAR_6, 32, 128)
+    assert e["num_parameters"] == 5_473_800
+    assert e["file"] == "har6_b32.hlo.txt"
+    assert e["activations"][-1] == "sigmoid"

@@ -1,0 +1,108 @@
+"""Dense batch kernel (batch_mm) vs the independent oracle.
+
+This is the CORE L1 correctness signal: the Pallas kernel must be
+*bit-identical* to ref.py on the Q7.8 grid, across shapes, batch sizes,
+section sizes, activations, and in the wrapping-overflow regime.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import activations as act
+from compile.kernels import batch_mm, ref
+
+RNG = np.random.default_rng(0xBA7C4)
+
+
+def rand_layer(n, s_in, s_out, scale=0.25, rng=RNG):
+    x = ref.quantize(rng.uniform(-2, 2, (n, s_in)))
+    w = ref.quantize(rng.normal(0, scale, (s_out, s_in)))
+    return x, w
+
+
+@pytest.mark.parametrize("activation", ["relu", "sigmoid", "identity"])
+@pytest.mark.parametrize("n", [1, 2, 16])
+def test_bit_exact_basic(activation, n):
+    x, w = rand_layer(n, 96, 40)
+    got = np.asarray(
+        batch_mm.batch_layer(x, w, act_code=act.ACT_CODES[activation], section=32)
+    )
+    assert np.array_equal(got, ref.layer(x, w, activation))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 9),
+    s_in=st.integers(1, 70),
+    s_out=st.integers(1, 70),
+    section=st.sampled_from([8, 16, 32, 128]),
+    activation=st.sampled_from(["relu", "sigmoid", "identity"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bit_exact_shape_sweep(n, s_in, s_out, section, activation, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_layer(n, s_in, s_out, rng=rng)
+    got = np.asarray(
+        batch_mm.batch_layer(x, w, act_code=act.ACT_CODES[activation], section=section)
+    )
+    assert np.array_equal(got, ref.layer(x, w, activation))
+
+
+def test_section_not_dividing_output():
+    """Last partial section: zero-row padding must be sliced off exactly."""
+    x, w = rand_layer(3, 50, 37)
+    got = np.asarray(batch_mm.batch_layer(x, w, act_code=act.ACT_RELU, section=16))
+    assert got.shape == (3, 37)
+    assert np.array_equal(got, ref.layer(x, w, "relu"))
+
+
+def test_section_larger_than_output():
+    x, w = rand_layer(2, 20, 5)
+    got = np.asarray(batch_mm.batch_layer(x, w, act_code=act.ACT_RELU, section=128))
+    assert np.array_equal(got, ref.layer(x, w, "relu"))
+
+
+def test_wrapping_overflow_matches_oracle():
+    """Saturated Q7.8 operands overflow the 32-bit accumulator; both kernel
+    and oracle must wrap two's-complement (the DSP/XLA semantics)."""
+    n, s_in, s_out = 2, 512, 8
+    x = np.full((n, s_in), 32767, dtype=np.int32)
+    w = np.full((s_out, s_in), 32767, dtype=np.int32)
+    got = np.asarray(batch_mm.batch_layer(x, w, act_code=act.ACT_IDENTITY))
+    want = ref.layer(x, w, "identity")
+    assert np.array_equal(got, want)
+
+
+def test_zero_weights_give_activation_of_zero():
+    x, _ = rand_layer(4, 30, 10)
+    w = np.zeros((10, 30), dtype=np.int32)
+    relu_out = np.asarray(batch_mm.batch_layer(x, w, act_code=act.ACT_RELU))
+    assert np.all(relu_out == 0)
+    sig_out = np.asarray(batch_mm.batch_layer(x, w, act_code=act.ACT_SIGMOID))
+    assert np.all(sig_out == 128)  # sigmoid(0) = 0.5
+
+
+def test_shape_mismatch_raises():
+    x = np.zeros((2, 10), dtype=np.int32)
+    w = np.zeros((5, 11), dtype=np.int32)
+    with pytest.raises(ValueError):
+        batch_mm.batch_layer(x, w)
+
+
+def test_batch_rows_independent():
+    """Each sample must be unaffected by its batch neighbours (the TDM
+    scheme shares weights, never activations)."""
+    x, w = rand_layer(8, 64, 24)
+    full = np.asarray(batch_mm.batch_layer(x, w, act_code=act.ACT_RELU, section=16))
+    for i in range(0, 8, 3):
+        solo = np.asarray(
+            batch_mm.batch_layer(x[i : i + 1], w, act_code=act.ACT_RELU, section=16)
+        )
+        assert np.array_equal(full[i : i + 1], solo)
+
+
+def test_vmem_estimate_positive_and_monotone():
+    a = batch_mm.vmem_bytes(1, 784)
+    b = batch_mm.vmem_bytes(16, 784)
+    assert 0 < a < b

@@ -1,0 +1,106 @@
+"""Layer-2 model: specs, paper parameter counts, whole-network forward."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_weights(spec, seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    return [ref.quantize(rng.normal(0, scale, s)) for s in spec.weight_shapes]
+
+
+def test_paper_parameter_counts():
+    """Table 2 quotes exact parameter counts; our specs must reproduce them."""
+    for name, count in model.PAPER_PARAM_COUNTS.items():
+        assert model.NETWORKS[name].num_parameters == count, name
+
+
+def test_default_activations_relu_hidden_sigmoid_out():
+    spec = model.MNIST_4
+    assert spec.activations == ("relu", "relu", "sigmoid")
+
+
+def test_weight_shapes_paper_layout():
+    # row i of W^(j) = fan-in of output neuron i (s_{j+1} x s_j)
+    assert model.HAR_4.weight_shapes == [(1200, 561), (300, 1200), (6, 300)]
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        model.NetworkSpec("bad", (10,))
+    with pytest.raises(ValueError):
+        model.NetworkSpec("bad", (10, 5), activations=("relu", "relu"))
+    with pytest.raises(ValueError):
+        model.NetworkSpec("bad", (10, 5), activations=("tanh",))
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_quickstart_forward_bit_exact(batch):
+    spec = model.QUICKSTART
+    ws = rand_weights(spec, seed=batch)
+    rng = np.random.default_rng(99)
+    x = ref.quantize(rng.uniform(-1, 1, (batch, spec.sizes[0])))
+    got = np.asarray(model.forward(x, ws, spec)[0])
+    want = ref.forward(x, ws, spec.activations)
+    assert got.shape == (batch, spec.sizes[-1])
+    assert np.array_equal(got, want)
+
+
+def test_har4_forward_bit_exact_batch2():
+    """One real paper network end to end (moderate size, exercises padding
+    at 1200/300/6 against the 128 section)."""
+    spec = model.HAR_4
+    ws = rand_weights(spec, seed=5, scale=0.05)
+    rng = np.random.default_rng(5)
+    x = ref.quantize(rng.uniform(-1, 1, (2, spec.sizes[0])))
+    got = np.asarray(model.forward(x, ws, spec)[0])
+    want = ref.forward(x, ws, spec.activations)
+    assert np.array_equal(got, want)
+
+
+def test_forward_rejects_wrong_weight_count_and_shape():
+    spec = model.QUICKSTART
+    ws = rand_weights(spec)
+    x = np.zeros((1, spec.sizes[0]), dtype=np.int32)
+    with pytest.raises(ValueError):
+        model.forward(x, ws[:-1], spec)
+    bad = [np.zeros((7, 7), np.int32) for _ in ws]
+    with pytest.raises(ValueError):
+        model.forward(x, bad, spec)
+
+
+def test_example_args_shapes():
+    args = model.example_args(model.MNIST_4, 16)
+    assert args[0].shape == (16, 784)
+    assert [a.shape for a in args[1:]] == model.MNIST_4.weight_shapes
+
+
+def test_lower_produces_stablehlo():
+    lowered = model.lower(model.QUICKSTART, 1)
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert "func" in text
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_fused_impl_bit_equal_to_pallas(batch):
+    """The fused serving lowering must be bit-identical to the Pallas
+    kernel path (it is the same math without the interpreter scaffolding;
+    EXPERIMENTS.md §Perf records the ~8x CPU-PJRT speedup)."""
+    spec = model.QUICKSTART
+    ws = rand_weights(spec, seed=77)
+    rng = np.random.default_rng(78)
+    x = ref.quantize(rng.uniform(-1, 1, (batch, spec.sizes[0])))
+    a = np.asarray(model.forward(x, ws, spec, impl="pallas")[0])
+    b = np.asarray(model.forward(x, ws, spec, impl="fused")[0])
+    assert np.array_equal(a, b)
+
+
+def test_unknown_impl_rejected():
+    spec = model.QUICKSTART
+    ws = rand_weights(spec)
+    x = np.zeros((1, spec.sizes[0]), dtype=np.int32)
+    with pytest.raises(ValueError):
+        model.forward(x, ws, spec, impl="mosaic")

@@ -1,0 +1,96 @@
+"""Pruned/sparse kernel (sparse_mv) vs the oracle, across pruning factors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import activations as act
+from compile.kernels import ref, sparse_mv
+
+
+def prune_and_pack(w, keep_mask):
+    """Dense Q7.8 matrix + keep mask -> (vals, cols) padded arrays, the
+    decoded form of the paper's (weight, zero-run) tuple stream."""
+    s_out, _ = w.shape
+    k_max = max(1, int(keep_mask.sum(axis=1).max()))
+    vals = np.zeros((s_out, k_max), dtype=np.int32)
+    cols = np.zeros((s_out, k_max), dtype=np.int32)
+    for o in range(s_out):
+        idx = np.nonzero(keep_mask[o])[0]
+        vals[o, : len(idx)] = w[o, idx]
+        cols[o, : len(idx)] = idx
+    return vals, cols
+
+
+def rand_pruned(n, s_in, s_out, q_prune, seed=0):
+    rng = np.random.default_rng(seed)
+    x = ref.quantize(rng.uniform(-2, 2, (n, s_in)))
+    w = ref.quantize(rng.normal(0, 0.25, (s_out, s_in)))
+    keep = rng.uniform(0, 1, w.shape) >= q_prune
+    wp = np.where(keep, w, 0).astype(np.int32)
+    vals, cols = prune_and_pack(wp, keep)
+    return x, wp, vals, cols
+
+
+@pytest.mark.parametrize("q_prune", [0.0, 0.5, 0.72, 0.9, 0.94])
+@pytest.mark.parametrize("activation", ["relu", "sigmoid"])
+def test_bit_exact_vs_dense_oracle(q_prune, activation):
+    x, wp, vals, cols = rand_pruned(4, 80, 40, q_prune, seed=int(q_prune * 100))
+    got = np.asarray(
+        sparse_mv.sparse_layer(
+            x, vals, cols, act_code=act.ACT_CODES[activation], section=16
+        )
+    )
+    assert np.array_equal(got, ref.layer(x, wp, activation))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    s_in=st.integers(2, 60),
+    s_out=st.integers(1, 50),
+    q=st.floats(0.0, 0.98),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shape_sweep(n, s_in, s_out, q, seed):
+    x, wp, vals, cols = rand_pruned(n, s_in, s_out, q, seed=seed)
+    got = np.asarray(sparse_mv.sparse_layer(x, vals, cols, act_code=act.ACT_RELU))
+    assert np.array_equal(got, ref.layer(x, wp, "relu"))
+
+
+def test_fully_pruned_rows_skippable():
+    """Neurons whose rows are entirely pruned (Fig 3) produce act(0)."""
+    x, wp, vals, cols = rand_pruned(2, 40, 12, 0.5, seed=7)
+    wp[3] = 0
+    vals[3] = 0
+    cols[3] = 0
+    got = np.asarray(sparse_mv.sparse_layer(x, vals, cols, act_code=act.ACT_RELU))
+    assert np.all(got[:, 3] == 0)
+    assert np.array_equal(got, ref.layer(x, wp, "relu"))
+
+
+def test_densify_roundtrip():
+    _, wp, vals, cols = rand_pruned(1, 30, 20, 0.7, seed=3)
+    dense = np.asarray(sparse_mv.densify(vals, cols, 30))
+    assert np.array_equal(dense, wp)
+
+
+def test_sparse_equals_dense_kernel():
+    """Cross-kernel agreement: pruned layer through sparse_mv must equal the
+    same (zeros included) matrix through batch_mm."""
+    from compile.kernels import batch_mm
+
+    x, wp, vals, cols = rand_pruned(3, 64, 32, 0.8, seed=11)
+    via_sparse = np.asarray(
+        sparse_mv.sparse_layer(x, vals, cols, act_code=act.ACT_SIGMOID)
+    )
+    via_dense = np.asarray(batch_mm.batch_layer(x, wp, act_code=act.ACT_SIGMOID))
+    assert np.array_equal(via_sparse, via_dense)
+
+
+def test_vals_cols_shape_mismatch_raises():
+    x = np.zeros((1, 4), dtype=np.int32)
+    with pytest.raises(ValueError):
+        sparse_mv.sparse_layer(
+            x, np.zeros((2, 3), np.int32), np.zeros((2, 4), np.int32)
+        )

@@ -1,0 +1,12 @@
+//! `cargo bench --bench bench_gops` — regenerates the paper's gops artefact
+//! and fails (exit 1) if its qualitative shape check does not hold.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = zynq_dnn::bench::gops::run();
+    println!("{}", zynq_dnn::bench::gops::render(&r));
+    if let Err(e) = zynq_dnn::bench::gops::check_shape(&r) {
+        eprintln!("SHAPE CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+}

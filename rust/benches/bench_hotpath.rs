@@ -1,0 +1,130 @@
+//! `cargo bench --bench bench_hotpath` — microbenchmarks of the hot paths
+//! the perf pass iterates on (EXPERIMENTS.md §Perf):
+//!
+//! * i32 wrapping GEMM (naive / blocked / parallel) on paper-sized layers
+//! * f32 blocked GEMM (software baseline)
+//! * batch-design simulator (functional and timing-only)
+//! * pruning stream encode + decode
+//! * serving round-trip overhead (native backend, batch 8)
+
+use std::time::Duration;
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::nn::spec::{har_6, mnist_4, quickstart};
+use zynq_dnn::sim::batch::BatchAccelerator;
+use zynq_dnn::sim::pruning::{prune_qnetwork, SparseNetwork};
+use zynq_dnn::tensor::{gemm_f32, gemm_i32, gemm_i32_naive, gemm_i32_parallel, MatF, MatI};
+use zynq_dnn::util::rng::Xoshiro256;
+use zynq_dnn::util::threadpool::ThreadPool;
+use zynq_dnn::util::{bench_loop, fmt_time};
+
+fn report(name: &str, mean: f64, work_items: f64, unit: &str) {
+    println!(
+        "{name:<44} {:>12}   {:>12.2} M{unit}/s",
+        fmt_time(mean),
+        work_items / mean / 1e6
+    );
+}
+
+fn main() {
+    let quick = std::env::var("ZDNN_QUICK").map(|v| v == "1").unwrap_or(false);
+    let iters = if quick { 3 } else { 12 };
+    println!("hot-path microbenchmarks (iters={iters})\n");
+
+    // ---- GEMM: the 2000×1500 HAR-6 layer, batch 16 ----
+    let (n, k, o) = (16usize, 1500usize, 2000usize);
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let x = MatI::from_vec(n, k, (0..n * k).map(|_| rng.below(65536) as i32 - 32768).collect());
+    let w = MatI::from_vec(o, k, (0..o * k).map(|_| rng.below(65536) as i32 - 32768).collect());
+    let macs = (n * k * o) as f64;
+
+    let mut out = MatI::zeros(n, o);
+    let (t_naive, _) = bench_loop(1, iters.min(4), || gemm_i32_naive(&x, &w, &mut out));
+    report("gemm_i32 naive (16x1500 @ 2000x1500)", t_naive, macs, "MAC");
+
+    let (t_blocked, _) = bench_loop(1, iters, || gemm_i32(&x, &w, &mut out));
+    report("gemm_i32 blocked", t_blocked, macs, "MAC");
+
+    let pool = ThreadPool::host();
+    let (t_par, _) = bench_loop(1, iters, || gemm_i32_parallel(&pool, &x, &w, &mut out));
+    report(
+        &format!("gemm_i32 parallel ({} threads)", pool.threads()),
+        t_par,
+        macs,
+        "MAC",
+    );
+    println!(
+        "  blocked speedup {:.2}x, parallel {:.2}x\n",
+        t_naive / t_blocked,
+        t_naive / t_par
+    );
+
+    let xf = MatF::from_vec(n, k, (0..n * k).map(|_| 0.01f32).collect());
+    let wf = MatF::from_vec(o, k, (0..o * k).map(|_| 0.01f32).collect());
+    let mut outf = MatF::zeros(n, o);
+    let (t_f32, _) = bench_loop(1, iters, || gemm_f32(&xf, &wf, &mut outf));
+    report("gemm_f32 blocked (software baseline)", t_f32, 2.0 * macs, "FLOP");
+    println!();
+
+    // ---- simulator throughput ----
+    let net4 = random_qnet(&mnist_4(), 2);
+    let acc = BatchAccelerator::zedboard(16);
+    let (t_timing, _) = bench_loop(1, iters * 10, || acc.timing_only(&net4));
+    report("sim batch-16 timing-only (mnist4)", t_timing, 1.0, "run");
+
+    let xin = MatI::from_vec(16, 784, vec![64; 16 * 784]);
+    let (t_func, _) = bench_loop(1, iters.min(6), || acc.run(&net4, &xin).unwrap());
+    let sim_macs = (16 * 1_275_200) as f64;
+    report("sim batch-16 functional (mnist4)", t_func, sim_macs, "MAC");
+    println!();
+
+    // ---- sparse stream ----
+    let net6 = prune_qnetwork(&random_qnet(&har_6(), 3), 0.94);
+    let (t_enc, _) = bench_loop(1, iters.min(6), || SparseNetwork::encode(&net6).unwrap());
+    report("sparse encode (har6 @ q=0.94)", t_enc, 5_473_800.0, "weight");
+    let snet = SparseNetwork::encode(&net6).unwrap();
+    let (t_dec, _) = bench_loop(1, iters.min(6), || {
+        zynq_dnn::sparse::decode_matrix(&snet.layers[0])
+    });
+    report("sparse decode layer 0 (2000x561)", t_dec, (2000 * 561) as f64, "weight");
+    println!();
+
+    // ---- serving round-trip overhead ----
+    let qnet = random_qnet(&quickstart(), 4);
+    let server = Server::start(
+        &ServerConfig {
+            batch: 8,
+            batch_deadline_us: 100,
+            ..Default::default()
+        },
+        EngineFactory {
+            backend: "native".into(),
+            batch: 8,
+            net: qnet,
+            artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
+            native_threads: 1,
+        },
+    )
+    .unwrap();
+    let reqs = if quick { 64 } else { 512 };
+    let input: Vec<i32> = vec![32; 64];
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..reqs)
+        .map(|_| server.submit(input.clone()).unwrap().1)
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics.snapshot();
+    println!(
+        "serve round-trip: {reqs} reqs in {} -> {:.0} req/s, mean latency {}, occupancy {:.2}",
+        fmt_time(wall),
+        reqs as f64 / wall,
+        fmt_time(snap.mean_latency_s),
+        snap.occupancy
+    );
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench bench_table4` — regenerates the paper's table4 artefact
+//! and fails (exit 1) if its qualitative shape check does not hold.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = zynq_dnn::bench::table4::run();
+    println!("{}", zynq_dnn::bench::table4::render(&r));
+    if let Err(e) = zynq_dnn::bench::table4::check_shape(&r) {
+        eprintln!("SHAPE CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,145 @@
+//! **E7 (§7)**: the envisaged combined batch+pruning design — m = 6,
+//! r = 3, n = 3 on the XC7020 — projected by the paper to infer the
+//! 6-layer HAR network in ~186 µs, over 6× faster than the fastest x86
+//! system they measured.
+
+use super::report::Table;
+use super::{random_qnet, PAPER_PRUNE_FACTORS};
+use crate::nn::spec::har_6;
+use crate::perfmodel::machine::{I7_4790, I7_5600U};
+use crate::sim::batch::BatchAccelerator;
+use crate::sim::combined::CombinedAccelerator;
+use crate::sim::pruning::{prune_qnetwork, PruningAccelerator, SparseNetwork};
+
+#[derive(Debug, Clone)]
+pub struct CombinedReport {
+    /// µs per sample, combined design (m=6, r=3, n=3), HAR-6 @ q=0.94.
+    pub combined_us: f64,
+    /// Best single-technique hardware for reference.
+    pub batch16_us: f64,
+    pub pruning_us: f64,
+    /// Fastest x86 (model) on HAR-6.
+    pub best_x86_us: f64,
+    /// Feasibility of the design point on the XC7020.
+    pub fits: bool,
+    /// (m, r, n) sweep for the ablation view: (params, µs, fits).
+    pub sweep: Vec<((usize, usize, usize), f64, bool)>,
+}
+
+pub fn run() -> CombinedReport {
+    let spec = har_6();
+    let qnet = prune_qnetwork(&random_qnet(&spec, 0x77), PAPER_PRUNE_FACTORS[3]);
+    let snet = SparseNetwork::encode(&qnet).expect("encode");
+
+    let combined = CombinedAccelerator::zedboard();
+    let combined_us = combined.timing(&snet).per_sample() * 1e6;
+    let fits = combined.fits(2000);
+
+    let batch16_us = BatchAccelerator::zedboard(16)
+        .timing_only(&random_qnet(&spec, 0x78))
+        .per_sample()
+        * 1e6;
+    let pruning_us = PruningAccelerator::zedboard().timing_only(&snet).per_sample() * 1e6;
+
+    let best_x86_us = [&I7_5600U, &I7_4790]
+        .iter()
+        .flat_map(|m| [1usize, 2, 4, 8].map(|t| m.network_time(&spec, t)))
+        .fold(f64::INFINITY, f64::min)
+        * 1e6;
+
+    let mut sweep = Vec::new();
+    for m in [2usize, 4, 6, 8] {
+        for n in [1usize, 2, 3, 4, 6] {
+            let acc = CombinedAccelerator::with_params(m, 3, n);
+            sweep.push((
+                (m, 3, n),
+                acc.timing(&snet).per_sample() * 1e6,
+                acc.fits(2000),
+            ));
+        }
+    }
+
+    CombinedReport {
+        combined_us,
+        batch16_us,
+        pruning_us,
+        best_x86_us,
+        fits,
+        sweep,
+    }
+}
+
+pub fn render(r: &CombinedReport) -> String {
+    let mut tab = Table::new(
+        "§7 — combined batch+pruning design (HAR-6, q=0.94)",
+        &["Design", "µs/sample", "speedup vs best x86"],
+    );
+    let rows = [
+        ("combined m=6 r=3 n=3", r.combined_us),
+        ("batch-16 (dense)", r.batch16_us),
+        ("pruning m=4 r=3", r.pruning_us),
+        ("best x86 (model)", r.best_x86_us),
+    ];
+    for (name, us) in rows {
+        tab.row(vec![
+            name.into(),
+            format!("{us:.0}"),
+            format!("{:.1}x", r.best_x86_us / us),
+        ]);
+    }
+    tab.footnote(&format!(
+        "paper projects 186 µs and >6× vs fastest x86; design fits XC7020: {}",
+        r.fits
+    ));
+    let mut out = tab.render();
+    out.push_str("  (m,r,n) sweep [µs, fits]:");
+    for ((m, rr, n), us, fits) in &r.sweep {
+        out.push_str(&format!(" ({m},{rr},{n}):{us:.0}{}", if *fits { "" } else { "!" }));
+    }
+    out.push('\n');
+    out
+}
+
+pub fn check_shape(r: &CombinedReport) -> Result<(), String> {
+    if !r.fits {
+        return Err("paper's design point must fit the XC7020".into());
+    }
+    // combined beats both single techniques
+    if !(r.combined_us < r.pruning_us && r.combined_us < r.batch16_us) {
+        return Err(format!(
+            "combined {:.0} µs should beat pruning {:.0} and batch {:.0}",
+            r.combined_us, r.pruning_us, r.batch16_us
+        ));
+    }
+    // >4× vs best x86 (paper: >6× vs their testbed)
+    let speedup = r.best_x86_us / r.combined_us;
+    if speedup < 4.0 {
+        return Err(format!("speedup only {speedup:.1}× vs best x86"));
+    }
+    // within 2× of the paper's 186 µs projection
+    if !(90.0..400.0).contains(&r.combined_us) {
+        return Err(format!("{:.0} µs far from the 186 µs projection", r.combined_us));
+    }
+    // sweep: larger n monotonically helps at fixed m (weight reuse)…
+    let us_at = |m: usize, n: usize| {
+        r.sweep
+            .iter()
+            .find(|((mm, _, nn), ..)| *mm == m && *nn == n)
+            .map(|(_, us, _)| *us)
+            .unwrap()
+    };
+    if !(us_at(6, 3) <= us_at(6, 1)) {
+        return Err("batching does not help in the combined design".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combined_shape_holds() {
+        check_shape(&run()).unwrap();
+    }
+}

@@ -1,0 +1,133 @@
+//! **Figure 7**: per-sample *latency* vs batch size — the throughput/
+//! latency trade-off of batch processing (§6.3).  A sample's latency is
+//! the time until its whole batch finishes (the batch memory only hands
+//! outputs back to software at batch completion), so latency grows with n
+//! even as throughput improves: the paper reports ~2× at n = 8 and ~3× at
+//! n = 16 relative to n = 1.
+//!
+//! Two series per network:
+//! * `hw`   — the simulator's full-batch completion time,
+//! * `serve`— the coordinator measured end-to-end (batcher + engine) with
+//!   the sim backend, demonstrating the same trade-off at the serving
+//!   level (occupancy-limited, deadline excluded).
+
+use super::report::Table;
+use super::{paper_networks, random_qnet, PAPER_BATCH_SWEEP};
+use crate::sim::batch::BatchAccelerator;
+
+/// Latency curve for one network.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub network: String,
+    /// (batch size, average per-sample latency seconds).
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Series {
+    /// Latency multiple relative to batch 1.
+    pub fn multiple(&self, batch: usize) -> Option<f64> {
+        let base = self.points.iter().find(|(n, _)| *n == 1)?.1;
+        let at = self.points.iter().find(|(n, _)| *n == batch)?.1;
+        Some(at / base)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig7 {
+    pub series: Vec<Series>,
+}
+
+pub fn run() -> Fig7 {
+    let mut series = Vec::new();
+    for (c, spec) in paper_networks().into_iter().enumerate() {
+        let qnet = random_qnet(&spec, 0xF7 + c as u64);
+        let mut points = Vec::new();
+        for &n in &PAPER_BATCH_SWEEP {
+            let report = BatchAccelerator::zedboard(n).timing_only(&qnet);
+            // a sample's latency = the whole batch's completion time
+            points.push((n, report.total_seconds));
+        }
+        series.push(Series {
+            network: spec.name,
+            points,
+        });
+    }
+    Fig7 { series }
+}
+
+pub fn render(f: &Fig7) -> String {
+    let mut tab = Table::new(
+        "Figure 7 — average sample latency (ms) vs hardware batch size",
+        &["Network", "n=1", "n=2", "n=4", "n=8", "n=16", "n=32", "x@8", "x@16"],
+    );
+    for s in &f.series {
+        let mut row = vec![s.network.clone()];
+        for (_, secs) in &s.points {
+            row.push(format!("{:.3}", secs * 1e3));
+        }
+        row.push(format!("{:.2}", s.multiple(8).unwrap_or(f64::NAN)));
+        row.push(format!("{:.2}", s.multiple(16).unwrap_or(f64::NAN)));
+        tab.row(row);
+    }
+    tab.footnote("paper: batch 8 ≈ 2× the single-sample latency, batch 16 ≈ 3×");
+    // ASCII sparkline per network for the 'figure' feel
+    let mut out = tab.render();
+    for s in &f.series {
+        let max = s.points.iter().map(|p| p.1).fold(0.0, f64::max);
+        let bars: String = s
+            .points
+            .iter()
+            .map(|(_, v)| {
+                let lvl = (v / max * 7.0).round() as usize;
+                char::from_u32(0x2581 + lvl.min(7) as u32).unwrap()
+            })
+            .collect();
+        out.push_str(&format!("  {:<8} {}\n", s.network, bars));
+    }
+    out
+}
+
+/// Fig 7's qualitative claims.
+pub fn check_shape(f: &Fig7) -> Result<(), String> {
+    for s in &f.series {
+        // latency monotonically increases with batch size
+        let lats: Vec<f64> = s.points.iter().map(|p| p.1).collect();
+        if !lats.windows(2).all(|w| w[1] > w[0]) {
+            return Err(format!("{}: latency not monotone: {lats:?}", s.network));
+        }
+        // paper's multiples: ~2× at n=8, ~3× at n=16.  Our global 1.9 GB/s
+        // calibration leaves HAR-6 memory-bound through n=8 (the paper's
+        // own HAR-6 stream sustained ~2.3 GB/s), which compresses its
+        // multiple — accept 1.15–3.5 at n=8 and 1.5–5 at n=16.
+        let m8 = s.multiple(8).unwrap();
+        let m16 = s.multiple(16).unwrap();
+        if !(1.15..3.5).contains(&m8) {
+            return Err(format!("{}: n=8 multiple {m8:.2} out of range", s.network));
+        }
+        if !(1.5..5.0).contains(&m16) {
+            return Err(format!("{}: n=16 multiple {m16:.2} out of range", s.network));
+        }
+        if m16 <= m8 {
+            return Err(format!("{}: multiples not increasing", s.network));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_shape_holds() {
+        let f = run();
+        check_shape(&f).unwrap();
+    }
+
+    #[test]
+    fn render_has_sparklines_and_multiples() {
+        let s = render(&run());
+        assert!(s.contains("x@16"));
+        assert!(s.contains('\u{2588}') || s.contains('\u{2587}') || s.contains('\u{2586}'));
+    }
+}

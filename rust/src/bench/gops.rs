@@ -1,0 +1,132 @@
+//! **E5 (§6.1)**: GOps/s comparison with related work.  The paper reports
+//! 4.48 / 5.00 GOps/s (MNIST-8 / HAR-6, batch 16, counting MACs as 2 ops)
+//! vs Chang et al.'s 388.8 MOps/s RNN accelerator on the same ZedBoard,
+//! with 6× better throughput per DSP slice and 3× per LUT/FF; the pruning
+//! design runs 0.8 GOps/s raw ≡ 2.91 / 3.58 GOps/s dense-equivalent.
+
+use super::report::Table;
+use super::{random_qnet, PAPER_PRUNE_FACTORS};
+use crate::nn::spec::{har_6, mnist_8};
+use crate::perfmodel::gops::{gops_per_sec, gops_per_sec_pruned};
+use crate::sim::batch::BatchAccelerator;
+use crate::sim::pruning::{prune_qnetwork, PruningAccelerator, SparseNetwork};
+use crate::sim::resources::{batch_design_resources, pruning_design_resources};
+use crate::sim::zynq::XC7020;
+
+/// Related-work reference (Chang et al., RNN on the same ZedBoard).
+pub const CHANG_RNN_GOPS: f64 = 0.3888;
+pub const CHANG_RNN_DSP: usize = 50; // reported resource usage (approx.)
+
+#[derive(Debug, Clone)]
+pub struct GopsReport {
+    /// (name, gops, gops-dense-equivalent, dsp slices)
+    pub rows: Vec<(String, f64, f64, usize)>,
+}
+
+pub fn run() -> GopsReport {
+    let mut rows = Vec::new();
+
+    // batch-16 design on the two deep networks
+    for spec in [mnist_8(), har_6()] {
+        let qnet = random_qnet(&spec, 0x60);
+        let acc = BatchAccelerator::zedboard(16);
+        let t = acc.timing_only(&qnet).per_sample();
+        let g = gops_per_sec(&spec, t);
+        let res = batch_design_resources(&XC7020, 16);
+        rows.push((format!("batch-16 {}", spec.name), g, g, res.dsp_slices));
+    }
+
+    // pruning design on the same networks (raw + dense-equivalent)
+    for (spec, q) in [(mnist_8(), PAPER_PRUNE_FACTORS[1]), (har_6(), PAPER_PRUNE_FACTORS[3])] {
+        let qnet = prune_qnetwork(&random_qnet(&spec, 0x61), q);
+        let snet = SparseNetwork::encode(&qnet).expect("encode");
+        let t = PruningAccelerator::zedboard().timing_only(&snet).per_sample();
+        let raw = gops_per_sec_pruned(&spec, q, t);
+        let equiv = gops_per_sec(&spec, t);
+        let res = pruning_design_resources(&XC7020, 4, 3);
+        rows.push((format!("pruning {}", spec.name), raw, equiv, res.dsp_slices));
+    }
+
+    rows.push((
+        "Chang et al. RNN (reported)".into(),
+        CHANG_RNN_GOPS,
+        CHANG_RNN_GOPS,
+        CHANG_RNN_DSP,
+    ));
+
+    GopsReport { rows }
+}
+
+pub fn render(r: &GopsReport) -> String {
+    let mut tab = Table::new(
+        "§6.1 — GOps/s and per-DSP efficiency vs related work",
+        &["Design", "GOps/s (raw)", "GOps/s (dense-equiv)", "DSPs", "GOps/DSP"],
+    );
+    for (name, raw, equiv, dsp) in &r.rows {
+        tab.row(vec![
+            name.clone(),
+            format!("{raw:.2}"),
+            format!("{equiv:.2}"),
+            dsp.to_string(),
+            format!("{:.3}", equiv / *dsp as f64),
+        ]);
+    }
+    tab.footnote("paper: batch-16 → 4.48 / 5.00 GOps/s; pruning ≡ 2.91 / 3.58; Chang et al. 0.389");
+    tab.render()
+}
+
+pub fn check_shape(r: &GopsReport) -> Result<(), String> {
+    let find = |needle: &str| {
+        r.rows
+            .iter()
+            .find(|(n, ..)| n.contains(needle))
+            .cloned()
+            .ok_or_else(|| format!("missing row {needle}"))
+    };
+    let (_, b8, _, b8_dsp) = find("batch-16 mnist8")?;
+    let (_, bh, _, _) = find("batch-16 har6")?;
+    let (_, _, pe, _) = find("pruning har6")?;
+    let (_, chang, _, chang_dsp) = find("Chang")?;
+    // an order of magnitude over the related RNN design
+    if b8 / chang < 5.0 {
+        return Err(format!("batch-16 only {:.1}× over Chang", b8 / chang));
+    }
+    // better per-DSP efficiency (paper: 6×; accept ≥ 2×)
+    let ours = b8 / b8_dsp as f64;
+    let theirs = chang / chang_dsp as f64;
+    if ours / theirs < 2.0 {
+        return Err(format!("per-DSP ratio only {:.1}×", ours / theirs));
+    }
+    // HAR-6 sustains more GOps/s than MNIST-8 (bigger layers, paper order)
+    if bh <= b8 * 0.8 {
+        return Err(format!("har6 {bh:.2} unexpectedly below mnist8 {b8:.2}"));
+    }
+    // pruning dense-equivalent: on the *Table 2 timing basis* (0.420 ms
+    // for HAR-6) the paper's design sustains ~26 dense-equiv GOps/s; its
+    // §6.1 prose quotes 3.58 on a different (per-executed-op, per-batch)
+    // basis — we follow Table 2 and accept 5–40.
+    if !(5.0..40.0).contains(&pe) {
+        return Err(format!("pruning dense-equiv {pe:.2} out of range"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_shape_holds() {
+        check_shape(&run()).unwrap();
+    }
+
+    #[test]
+    fn batch16_gops_consistent_with_table2_times() {
+        // Table 2's 0.768 ms/sample for MNIST-8 implies ~10 GOps/s; the
+        // §6.1 prose quotes 4.48 on a per-batch basis.  Our simulator is
+        // on the Table 2 basis: expect the same decade.
+        let r = run();
+        let b8 = r.rows.iter().find(|(n, ..)| n.contains("mnist8")).unwrap().1;
+        assert!((4.0..20.0).contains(&b8), "{b8} GOps/s");
+    }
+}

@@ -1,0 +1,77 @@
+//! Benchmark harnesses: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Each harness returns structured rows *and* renders the same table the
+//! paper prints, so `cargo bench` output can be compared side by side with
+//! the publication.  The same code backs the `zynq-dnn bench …` CLI.
+
+pub mod ablation;
+pub mod combined;
+pub mod fig7;
+pub mod gops;
+pub mod nopt;
+pub mod report;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use crate::nn::spec::{har_4, har_6, mnist_4, mnist_8, NetworkSpec};
+use crate::nn::{quantize_matrix, QNetwork};
+use crate::tensor::MatF;
+use crate::util::rng::Xoshiro256;
+
+/// The four evaluation networks in Table 2 column order.
+pub fn paper_networks() -> Vec<NetworkSpec> {
+    vec![mnist_4(), mnist_8(), har_4(), har_6()]
+}
+
+/// Table 2's pruning factors per network (column order).
+pub const PAPER_PRUNE_FACTORS: [f64; 4] = [0.72, 0.78, 0.88, 0.94];
+
+/// Table 2's hardware batch sweep.
+pub const PAPER_BATCH_SWEEP: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Deterministic random Q7.8 network for timing purposes (batch-design
+/// timing is weight-independent; pruning timing depends only on the
+/// sparsity pattern, which [`crate::sim::pruning::prune_qnetwork`] sets).
+pub fn random_qnet(spec: &NetworkSpec, seed: u64) -> QNetwork {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let ws = spec
+        .weight_shapes()
+        .iter()
+        .map(|&(o, i)| {
+            quantize_matrix(&MatF::from_vec(
+                o,
+                i,
+                (0..o * i)
+                    .map(|_| rng.normal_scaled(0.0, 0.08) as f32)
+                    .collect(),
+            ))
+        })
+        .collect();
+    QNetwork::new(spec.clone(), ws).expect("random net shapes valid")
+}
+
+/// Quick mode (set `ZDNN_QUICK=1`): shrink the expensive benches so CI and
+/// smoke runs stay fast; EXPERIMENTS.md records full runs.
+pub fn quick_mode() -> bool {
+    std::env::var("ZDNN_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_networks_in_table_order() {
+        let names: Vec<String> = paper_networks().into_iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["mnist4", "mnist8", "har4", "har6"]);
+    }
+
+    #[test]
+    fn random_qnet_deterministic() {
+        let spec = mnist_4();
+        let a = random_qnet(&spec, 1);
+        let b = random_qnet(&spec, 1);
+        assert_eq!(a.weights[0].data, b.weights[0].data);
+    }
+}

@@ -1,0 +1,115 @@
+//! **E6 (§4.4/§6.1)**: optimal-batch-size validation.  The paper computes
+//! n_opt ≈ 12.66 for m = 114 @ 100 MHz with 16-bit weights and finds batch
+//! 16 fastest in the sweep (12.66 not being a power of two).  This bench
+//! sweeps n over a fine grid on the simulator and checks that the measured
+//! optimum brackets the closed-form n_opt.
+
+use super::report::Table;
+use super::{paper_networks, random_qnet};
+use crate::perfmodel::hw::{n_opt, HwConfig};
+use crate::sim::batch::BatchAccelerator;
+use crate::sim::memory::MemoryModel;
+
+#[derive(Debug, Clone)]
+pub struct NoptReport {
+    /// Closed-form n_opt at m = 114 (batch-1 MAC budget).
+    pub n_opt_formula: f64,
+    /// Per network: (name, best n in sweep, per-sample ms at best).
+    pub best: Vec<(String, usize, f64)>,
+    /// The full sweep for the first network (for plotting).
+    pub sweep: Vec<(usize, f64)>,
+}
+
+/// Sweep grid: every batch size the resource model can build.
+pub fn sweep_grid() -> Vec<usize> {
+    vec![1, 2, 3, 4, 6, 8, 10, 12, 14, 16, 20, 24, 32]
+}
+
+pub fn run() -> NoptReport {
+    let cfg = HwConfig::batch_design(114, 1, MemoryModel::zedboard().effective());
+    let n_opt_formula = n_opt(&cfg);
+
+    let mut best = Vec::new();
+    let mut sweep = Vec::new();
+    for (c, spec) in paper_networks().into_iter().enumerate() {
+        let qnet = random_qnet(&spec, 0x40 + c as u64);
+        let mut best_n = 1;
+        let mut best_t = f64::INFINITY;
+        for &n in &sweep_grid() {
+            let t = BatchAccelerator::zedboard(n).timing_only(&qnet).per_sample();
+            if c == 0 {
+                sweep.push((n, t * 1e3));
+            }
+            if t < best_t {
+                best_t = t;
+                best_n = n;
+            }
+        }
+        best.push((spec.name, best_n, best_t * 1e3));
+    }
+    NoptReport {
+        n_opt_formula,
+        best,
+        sweep,
+    }
+}
+
+pub fn render(r: &NoptReport) -> String {
+    let mut tab = Table::new(
+        "§4.4 — n_opt validation (t_calc = t_mem crossover)",
+        &["Network", "best n (sweep)", "ms/sample at best"],
+    );
+    for (name, n, ms) in &r.best {
+        tab.row(vec![name.clone(), n.to_string(), format!("{ms:.3}")]);
+    }
+    tab.footnote(&format!(
+        "closed-form n_opt = {:.2} (paper: 12.66 at m=114); best swept n should bracket it",
+        r.n_opt_formula
+    ));
+    let mut out = tab.render();
+    out.push_str("  sweep (mnist4):");
+    for (n, ms) in &r.sweep {
+        out.push_str(&format!(" {n}:{ms:.2}"));
+    }
+    out.push('\n');
+    out
+}
+
+pub fn check_shape(r: &NoptReport) -> Result<(), String> {
+    // formula in the paper's regime
+    if !(8.0..18.0).contains(&r.n_opt_formula) {
+        return Err(format!("n_opt {:.2} outside the paper's regime", r.n_opt_formula));
+    }
+    for (name, n, _) in &r.best {
+        // the measured optimum near the formula (MAC budget shrinks above
+        // 16, so the winner is pulled toward it — paper finds 16)
+        if !(8..=24).contains(n) {
+            return Err(format!("{name}: best n = {n} far from n_opt"));
+        }
+    }
+    // the sweep curve is convex-ish: endpoints worse than the middle
+    let t_first = r.sweep.first().unwrap().1;
+    let t_last = r.sweep.last().unwrap().1;
+    let t_min = r.sweep.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    if !(t_min < t_first && t_min < t_last) {
+        return Err("sweep has no interior optimum".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nopt_shape_holds() {
+        check_shape(&run()).unwrap();
+    }
+
+    #[test]
+    fn formula_close_to_paper_value() {
+        let r = run();
+        // paper: 12.66 with their 1.80 GB/s effective; ours uses 1.9 GB/s
+        assert!((r.n_opt_formula - 12.66).abs() < 2.0, "{}", r.n_opt_formula);
+    }
+}

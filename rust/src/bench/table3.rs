@@ -1,0 +1,205 @@
+//! **Table 3**: energy consumption for the MNIST 8-layer network — HW batch
+//! (n = 16), HW pruning (m = 4), ZedBoard software, and the two x86
+//! platforms across thread counts.  Power operating points are the paper's
+//! measured values (see `sim::power`); times come from our simulators and
+//! machine models, so the energy column is `P_paper × t_ours`.
+//!
+//! Also covers **E8** (§6.2): the ESE comparison — the paper estimates
+//! 1.9 mJ for its pruning approach on ESE's 3,248,128-weight LSTM layer at
+//! q = 0.888, vs ESE's 3.4 mJ.
+
+use super::report::Table;
+use super::random_qnet;
+use crate::nn::spec::mnist_8;
+use crate::perfmodel::machine::{ARM_CORTEX_A9, I7_4790, I7_5600U};
+use crate::sim::batch::BatchAccelerator;
+use crate::sim::power;
+use crate::sim::pruning::{prune_qnetwork, PruningAccelerator, SparseNetwork};
+
+/// One energy row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub device: String,
+    pub config: String,
+    pub power_w: f64,
+    pub seconds_per_sample: f64,
+    pub overall_mj: f64,
+    pub dynamic_mj: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table3 {
+    pub rows: Vec<Row>,
+    /// (ours_mj, ese_mj) for the §6.2 ESE comparison.
+    pub ese_comparison: (f64, f64),
+}
+
+pub fn run() -> Table3 {
+    let spec = mnist_8();
+    let mut rows = Vec::new();
+
+    // ---- HW batch n = 16
+    let qnet = random_qnet(&spec, 0xE0);
+    let t_batch = BatchAccelerator::zedboard(16).timing_only(&qnet).per_sample();
+    let p = power::zedboard_batch(90);
+    rows.push(Row {
+        device: "ZedBoard".into(),
+        config: "HW batch (n=16)".into(),
+        power_w: p.active_w,
+        seconds_per_sample: t_batch,
+        overall_mj: p.overall_energy(t_batch) * 1e3,
+        dynamic_mj: p.dynamic_energy(t_batch) * 1e3,
+    });
+
+    // ---- HW pruning m = 4 (q = 0.78 for MNIST-8, Table 2)
+    let pruned = prune_qnetwork(&random_qnet(&spec, 0xE1), 0.78);
+    let snet = SparseNetwork::encode(&pruned).expect("encode");
+    let t_prune = PruningAccelerator::zedboard().timing_only(&snet).per_sample();
+    let p = power::zedboard_pruning();
+    rows.push(Row {
+        device: "ZedBoard".into(),
+        config: "HW pruning (m=4)".into(),
+        power_w: p.active_w,
+        seconds_per_sample: t_prune,
+        overall_mj: p.overall_energy(t_prune) * 1e3,
+        dynamic_mj: p.dynamic_energy(t_prune) * 1e3,
+    });
+
+    // ---- ZedBoard software (ARM model)
+    let t_arm = ARM_CORTEX_A9.network_time(&spec, 1);
+    let p = power::zedboard_software();
+    rows.push(Row {
+        device: "ZedBoard".into(),
+        config: "SW BLAS".into(),
+        power_w: p.active_w,
+        seconds_per_sample: t_arm,
+        overall_mj: p.overall_energy(t_arm) * 1e3,
+        dynamic_mj: p.dynamic_energy(t_arm) * 1e3,
+    });
+
+    // ---- x86 platforms
+    type PowerFn = fn(usize) -> power::PowerModel;
+    let x86: [(_, &[usize], PowerFn); 2] = [
+        (&I7_5600U, &[1, 2, 4][..], power::i7_5600u as PowerFn),
+        (&I7_4790, &[1, 4, 8][..], power::i7_4790 as PowerFn),
+    ];
+    for (machine, threads_sweep, pm) in x86 {
+        for &threads in threads_sweep {
+            let t = machine.network_time(&spec, threads);
+            let p = pm(threads);
+            rows.push(Row {
+                device: machine.name.into(),
+                config: format!("#Threads: {threads}"),
+                power_w: p.active_w,
+                seconds_per_sample: t,
+                overall_mj: p.overall_energy(t) * 1e3,
+                dynamic_mj: p.dynamic_energy(t) * 1e3,
+            });
+        }
+    }
+
+    // ---- E8: ESE comparison (§6.2) — theoretical §4.4 estimate on ESE's
+    // LSTM workload: 3,248,128 weights at q_prune = 0.888, shaped as the
+    // stacked LSTM gate matrices (1024 output rows) so all m coprocessors
+    // stay busy, exactly as the paper's estimate assumes.
+    let ese_rows = 1024usize;
+    let ese_cols = 3_248_128usize / ese_rows + 1; // ≈ 3173 fan-in
+    let cfg = crate::perfmodel::hw::HwConfig::pruning_design(
+        crate::sim::memory::MemoryModel::zedboard().effective(),
+    );
+    let t = crate::perfmodel::hw::layer_timing(&cfg, ese_rows, ese_cols, 0.888, 1).t_proc();
+    let ours_mj = power::zedboard_pruning().overall_energy(t) * 1e3;
+    let ese_comparison = (ours_mj, 3.4);
+
+    Table3 {
+        rows,
+        ese_comparison,
+    }
+}
+
+pub fn render(t: &Table3) -> String {
+    let mut tab = Table::new(
+        "Table 3 — energy, MNIST 8-layer (power = paper's measured W, time = ours)",
+        &["Device", "Configuration", "Power (W)", "t/sample (ms)", "Overall (mJ)", "Dynamic (mJ)"],
+    );
+    for r in &t.rows {
+        tab.row(vec![
+            r.device.clone(),
+            r.config.clone(),
+            format!("{:.1}", r.power_w),
+            format!("{:.3}", r.seconds_per_sample * 1e3),
+            format!("{:.1}", r.overall_mj),
+            format!("{:.1}", r.dynamic_mj),
+        ]);
+    }
+    tab.footnote(&format!(
+        "ESE comparison (§6.2): ours {:.1} mJ vs ESE 3.4 mJ on their 3.25M-weight LSTM at q=0.888 (paper: 1.9 mJ)",
+        t.ese_comparison.0
+    ));
+    tab.footnote("paper Table 3: HW batch 3.8 mJ / 1.5 mJ; HW pruning 4.4 mJ / 1.8 mJ; SW BLAS 184.7 mJ / 68.0 mJ");
+    tab.render()
+}
+
+/// Table 3's qualitative claims.
+pub fn check_shape(t: &Table3) -> Result<(), String> {
+    let hw_batch = &t.rows[0];
+    let hw_prune = &t.rows[1];
+    let arm_sw = &t.rows[2];
+    // hardware an order of magnitude better than ZedBoard software
+    if arm_sw.overall_mj / hw_batch.overall_mj < 10.0 {
+        return Err(format!(
+            "HW/ARM-SW energy ratio too small: {} / {}",
+            arm_sw.overall_mj, hw_batch.overall_mj
+        ));
+    }
+    // ~10× better than every x86 row (paper: "almost factor 10" vs best)
+    for r in &t.rows[3..] {
+        if r.overall_mj / hw_batch.overall_mj < 5.0 {
+            return Err(format!("{} {} should be ≫ HW batch", r.device, r.config));
+        }
+    }
+    // both hardware designs in the same few-mJ decade
+    if !(0.5..20.0).contains(&hw_batch.overall_mj) || !(0.5..20.0).contains(&hw_prune.overall_mj) {
+        return Err("hardware energies out of the paper's decade".into());
+    }
+    // ESE comparison: we are more efficient (smaller mJ)
+    if t.ese_comparison.0 >= t.ese_comparison.1 {
+        return Err(format!(
+            "ESE comparison lost: {:.2} vs {:.2}",
+            t.ese_comparison.0, t.ese_comparison.1
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_shape_holds() {
+        let t = run();
+        check_shape(&t).unwrap();
+    }
+
+    #[test]
+    fn hw_batch_energy_near_paper() {
+        let t = run();
+        // paper: 3.8 mJ overall, 1.5 mJ dynamic
+        let r = &t.rows[0];
+        assert!((r.overall_mj / 3.8 - 1.0).abs() < 0.4, "{}", r.overall_mj);
+        assert!((r.dynamic_mj / 1.5 - 1.0).abs() < 0.5, "{}", r.dynamic_mj);
+    }
+
+    #[test]
+    fn ese_estimate_near_paper_1_9mj() {
+        let t = run();
+        assert!((t.ese_comparison.0 / 1.9 - 1.0).abs() < 0.5, "{}", t.ese_comparison.0);
+    }
+
+    #[test]
+    fn render_mentions_all_devices() {
+        let s = render(&run());
+        assert!(s.contains("ZedBoard") && s.contains("5600U") && s.contains("4790"));
+    }
+}

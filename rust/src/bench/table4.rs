@@ -1,0 +1,198 @@
+//! **Table 4**: accuracy vs pruning factor — train each evaluation network
+//! on the synthetic datasets, prune to the paper's per-network factors
+//! (0.72 / 0.78 / 0.88 / 0.94), retrain, and report the accuracy of the
+//! quantized Q7.8 inference (PLAN sigmoid and all), mirroring the paper's
+//! objective of ≤ 1.5 % deviation from the non-pruned baseline.
+//!
+//! Substitution note: absolute accuracies are those of the *synthetic*
+//! MNIST/HAR substitutes (DESIGN.md §2); the reproduced claim is the
+//! Δaccuracy under pruning, not the absolute number.
+
+use super::report::Table;
+use super::{paper_networks, PAPER_PRUNE_FACTORS};
+use crate::data::{har, mnist, Dataset};
+use crate::train::prune::apply_pruning;
+use crate::train::{evaluate_q, TrainConfig, Trainer};
+
+/// One network's accuracy experiment.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub network: String,
+    pub parameters: usize,
+    pub target_prune: f64,
+    pub achieved_prune: f64,
+    pub baseline_accuracy: f64,
+    pub pruned_accuracy: f64,
+}
+
+impl Row {
+    pub fn deviation(&self) -> f64 {
+        self.baseline_accuracy - self.pruned_accuracy
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Table4 {
+    pub rows: Vec<Row>,
+}
+
+/// Experiment scale (quick mode shrinks everything; full mode is what
+/// EXPERIMENTS.md records).
+struct Scale {
+    train_n: usize,
+    test_n: usize,
+    epochs: usize,
+    retrain_epochs: usize,
+}
+
+fn scale() -> Scale {
+    if super::quick_mode() {
+        Scale {
+            train_n: 400,
+            test_n: 200,
+            epochs: 2,
+            retrain_epochs: 2,
+        }
+    } else {
+        Scale {
+            train_n: 1500,
+            test_n: 600,
+            epochs: 6,
+            retrain_epochs: 4,
+        }
+    }
+}
+
+fn dataset_for(network: &str, n: usize, seed: u64) -> Dataset {
+    if network.starts_with("mnist") {
+        mnist::generate(n, seed)
+    } else {
+        har::generate(n, seed)
+    }
+}
+
+pub fn run() -> Table4 {
+    let s = scale();
+    let mut rows = Vec::new();
+    for (c, spec) in paper_networks().into_iter().enumerate() {
+        let train = dataset_for(&spec.name, s.train_n, 0x7A + c as u64);
+        let test = dataset_for(&spec.name, s.test_n, 0x17E57 + c as u64);
+
+        let mut trainer = Trainer::new(spec.clone(), 0xACC + c as u64);
+        // deep networks (6+ weight matrices) converge slower: give them
+        // proportionally more baseline epochs so the pruning Δ is measured
+        // against a converged baseline, as in the paper
+        let depth_boost = if spec.num_layers() > 5 { 2 } else { 1 };
+        let cfg = TrainConfig {
+            epochs: s.epochs * depth_boost,
+            learning_rate: 0.04,
+            batch_size: 32,
+            ..Default::default()
+        };
+        trainer.fit(&train, &cfg).expect("train");
+        let baseline = evaluate_q(&trainer.to_weights(), &test);
+
+        let report = apply_pruning(&mut trainer, PAPER_PRUNE_FACTORS[c]).expect("prune");
+        trainer
+            .fit(
+                &train,
+                &TrainConfig {
+                    epochs: s.retrain_epochs,
+                    learning_rate: 0.015,
+                    batch_size: 32,
+                    ..Default::default()
+                },
+            )
+            .expect("retrain");
+        let pruned = evaluate_q(&trainer.to_weights(), &test);
+
+        rows.push(Row {
+            network: spec.name.clone(),
+            parameters: spec.num_parameters(),
+            target_prune: PAPER_PRUNE_FACTORS[c],
+            achieved_prune: report.achieved,
+            baseline_accuracy: baseline,
+            pruned_accuracy: pruned,
+        });
+    }
+    Table4 { rows }
+}
+
+pub fn render(t: &Table4) -> String {
+    let mut tab = Table::new(
+        "Table 4 — accuracy (%) vs pruning factor (synthetic datasets)",
+        &["Network", "Params", "q_prune target", "q_prune achieved", "Baseline acc", "Pruned acc", "Δ"],
+    );
+    for r in &t.rows {
+        tab.row(vec![
+            r.network.clone(),
+            r.parameters.to_string(),
+            format!("{:.2}", r.target_prune),
+            format!("{:.3}", r.achieved_prune),
+            format!("{:.2}", r.baseline_accuracy * 100.0),
+            format!("{:.2}", r.pruned_accuracy * 100.0),
+            format!("{:+.2}", -r.deviation() * 100.0),
+        ]);
+    }
+    tab.footnote("paper (real MNIST/HAR): baselines 98.3 / 95.9; pruned 98.27 / 97.62 / 94.14 / 95.72 — objective ≤1.5% deviation");
+    tab.render()
+}
+
+/// Table 4's qualitative claims on our substrate.
+pub fn check_shape(t: &Table4) -> Result<(), String> {
+    for r in &t.rows {
+        if (r.achieved_prune - r.target_prune).abs() > 0.06 {
+            return Err(format!(
+                "{}: achieved prune {:.3} far from target {:.2}",
+                r.network, r.achieved_prune, r.target_prune
+            ));
+        }
+        if r.baseline_accuracy < 0.6 {
+            return Err(format!(
+                "{}: baseline accuracy {:.2} too low to be meaningful",
+                r.network, r.baseline_accuracy
+            ));
+        }
+        // the paper's objective, with synthetic-data headroom: ≤ 5 %
+        if r.deviation() > 0.05 {
+            return Err(format!(
+                "{}: pruning cost {:.2}% accuracy (baseline {:.2}%, pruned {:.2}%)",
+                r.network,
+                r.deviation() * 100.0,
+                r.baseline_accuracy * 100.0,
+                r.pruned_accuracy * 100.0
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    // Table 4 involves full training runs; exercised by the bench target
+    // and integration tests (tests/table4.rs) in quick mode.  Unit scope
+    // here covers the pure helpers only.
+    use super::*;
+
+    #[test]
+    fn scale_quick_smaller_than_full() {
+        std::env::set_var("ZDNN_QUICK", "1");
+        let q = scale();
+        std::env::remove_var("ZDNN_QUICK");
+        let f = scale();
+        assert!(q.train_n < f.train_n && q.epochs <= f.epochs);
+    }
+
+    #[test]
+    fn row_deviation_sign() {
+        let r = Row {
+            network: "x".into(),
+            parameters: 1,
+            target_prune: 0.9,
+            achieved_prune: 0.9,
+            baseline_accuracy: 0.95,
+            pruned_accuracy: 0.93,
+        };
+        assert!((r.deviation() - 0.02).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,157 @@
+//! Command-line argument parsing (clap is not in the offline crate set).
+//! Small positional + `--flag value` parser with typed accessors and a
+//! generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: positionals + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// Declarative flag spec for usage rendering and validation.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+pub fn parse(args: &[String], specs: &[FlagSpec]) -> Result<Args> {
+    let mut out = Args::default();
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let Some(spec) = specs.iter().find(|s| s.name == name) else {
+                bail!("unknown flag --{name}\n{}", usage(specs));
+            };
+            if spec.takes_value {
+                let value = match inline {
+                    Some(v) => v,
+                    None => it
+                        .next()
+                        .with_context(|| format!("--{name} needs a value"))?
+                        .clone(),
+                };
+                out.flags.insert(name.to_string(), value);
+            } else {
+                if inline.is_some() {
+                    bail!("--{name} takes no value");
+                }
+                out.switches.push(name.to_string());
+            }
+        } else {
+            out.positionals.push(arg.clone());
+        }
+    }
+    Ok(out)
+}
+
+pub fn usage(specs: &[FlagSpec]) -> String {
+    let mut s = String::from("flags:\n");
+    for f in specs {
+        s.push_str(&format!(
+            "  --{}{}  {}\n",
+            f.name,
+            if f.takes_value { " <value>" } else { "" },
+            f.help
+        ));
+    }
+    s
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad integer {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad number {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec {
+                name: "batch",
+                takes_value: true,
+                help: "batch size",
+            },
+            FlagSpec {
+                name: "verbose",
+                takes_value: false,
+                help: "chatty",
+            },
+        ]
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positionals_flags_switches() {
+        let a = parse(&sv(&["bench", "table2", "--batch", "16", "--verbose"]), &specs()).unwrap();
+        assert_eq!(a.positionals, vec!["bench", "table2"]);
+        assert_eq!(a.get("batch"), Some("16"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 16);
+    }
+
+    #[test]
+    fn inline_equals_form() {
+        let a = parse(&sv(&["--batch=8"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn unknown_flag_rejected_with_usage() {
+        let err = parse(&sv(&["--nope"]), &specs()).unwrap_err().to_string();
+        assert!(err.contains("unknown flag") && err.contains("--batch"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&sv(&["--batch"]), &specs()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_usize("batch", 4).unwrap(), 4);
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert!((a.get_f64("missing", 1.5).unwrap() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,164 @@
+//! Configuration substrate: a JSON parser ([`json`]) and typed config
+//! structures for the server and the bench harness, loadable from simple
+//! `key = value` files (TOML-subset) or built programmatically.
+
+pub mod json;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Serving configuration (the L3 coordinator's knobs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Network name (must exist in the artifact manifest).
+    pub network: String,
+    /// Target batch size for the dynamic batcher.
+    pub batch: usize,
+    /// Flush deadline: a partial batch is dispatched after this (µs).
+    pub batch_deadline_us: u64,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Bounded request-queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Backend: "pjrt", "native", "sim-batch", "sim-prune".
+    pub backend: String,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            network: "quickstart".into(),
+            batch: 4,
+            batch_deadline_us: 2000,
+            workers: 1,
+            queue_depth: 1024,
+            backend: "native".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Parse a `key = value` (TOML-subset) document into a map.  Supports
+/// comments (#), bare/quoted strings, integers, and ignores section
+/// headers so real TOML files also load.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key = value, got {raw:?}", lineno + 1);
+        };
+        let v = v.trim().trim_matches('"').to_string();
+        map.insert(k.trim().to_string(), v);
+    }
+    Ok(map)
+}
+
+impl ServerConfig {
+    /// Load from a `key = value` file; unknown keys are rejected so typos
+    /// fail loudly.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::from_kv_text(&text)
+    }
+
+    pub fn from_kv_text(text: &str) -> Result<Self> {
+        let map = parse_kv(text)?;
+        let mut cfg = Self::default();
+        for (k, v) in &map {
+            match k.as_str() {
+                "network" => cfg.network = v.clone(),
+                "batch" => cfg.batch = v.parse().context("batch")?,
+                "batch_deadline_us" => {
+                    cfg.batch_deadline_us = v.parse().context("batch_deadline_us")?
+                }
+                "workers" => cfg.workers = v.parse().context("workers")?,
+                "queue_depth" => cfg.queue_depth = v.parse().context("queue_depth")?,
+                "backend" => cfg.backend = v.clone(),
+                "artifacts_dir" => cfg.artifacts_dir = v.clone(),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.batch > 1024 {
+            bail!("batch must be in 1..=1024, got {}", self.batch);
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.queue_depth < self.batch {
+            bail!(
+                "queue_depth ({}) must be >= batch ({})",
+                self.queue_depth,
+                self.batch
+            );
+        }
+        match self.backend.as_str() {
+            "pjrt" | "native" | "sim-batch" | "sim-prune" => Ok(()),
+            other => bail!("unknown backend {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServerConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_kv_file() {
+        let cfg = ServerConfig::from_kv_text(
+            r#"
+            # serving config
+            [server]
+            network = "mnist4"
+            batch = 16
+            backend = "pjrt"
+            workers = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.network, "mnist4");
+        assert_eq!(cfg.batch, 16);
+        assert_eq!(cfg.backend, "pjrt");
+        assert_eq!(cfg.workers, 2);
+        // untouched keys keep defaults
+        assert_eq!(cfg.queue_depth, 1024);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ServerConfig::from_kv_text("batc = 4").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ServerConfig::from_kv_text("batch = 0").is_err());
+        assert!(ServerConfig::from_kv_text("backend = \"gpu\"").is_err());
+        assert!(ServerConfig::from_kv_text("batch = 512\nqueue_depth = 4").is_err());
+    }
+
+    #[test]
+    fn kv_parser_handles_comments_and_sections() {
+        let m = parse_kv("[a]\nx = 1 # inline\n\ny = \"two\"\n").unwrap();
+        assert_eq!(m["x"], "1");
+        assert_eq!(m["y"], "two");
+        assert!(parse_kv("justtext").is_err());
+    }
+}

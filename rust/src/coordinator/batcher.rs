@@ -1,0 +1,238 @@
+//! Dynamic batcher: groups single-sample requests into hardware batches.
+//!
+//! The FPGA batch design is built for a *fixed* n per bitstream (§5.5), so
+//! a partial batch must be padded to n (pad rows are zero samples whose
+//! outputs are discarded).  Policy:
+//!
+//! * dispatch immediately once n requests are waiting;
+//! * otherwise dispatch a padded partial batch when the oldest waiting
+//!   request has aged past the deadline;
+//! * FIFO order is preserved (no reordering across dispatches).
+//!
+//! Invariants (property-tested): every submitted request appears in
+//! exactly one batch, in submission order; occupancy never exceeds n;
+//! a non-empty batcher always dispatches within the deadline.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::Request;
+
+/// A formed batch ready for the engine.
+#[derive(Debug)]
+pub struct Batch {
+    /// The real requests (≤ n, in FIFO order).
+    pub requests: Vec<Request>,
+    /// Hardware batch size (rows in the padded input).
+    pub size: usize,
+}
+
+impl Batch {
+    pub fn occupancy(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Padded input matrix rows (zeros beyond occupancy).
+    pub fn padded_input(&self, s_in: usize) -> crate::tensor::MatI {
+        let mut x = crate::tensor::MatI::zeros(self.size, s_in);
+        for (row, req) in self.requests.iter().enumerate() {
+            x.row_mut(row).copy_from_slice(&req.input);
+        }
+        x
+    }
+}
+
+/// Batching policy state machine (single consumer).
+pub struct Batcher {
+    pending: VecDeque<Request>,
+    batch_size: usize,
+    deadline: Duration,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, deadline: Duration) -> Self {
+        assert!(batch_size >= 1);
+        Self {
+            pending: VecDeque::new(),
+            batch_size,
+            deadline,
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Time until the oldest request expires (None when empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending.front().map(|r| {
+            let age = now.duration_since(r.queued_at);
+            self.deadline.saturating_sub(age)
+        })
+    }
+
+    /// Form the next batch if policy allows.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        if self.pending.len() >= self.batch_size {
+            return Some(self.take(self.batch_size));
+        }
+        match self.pending.front() {
+            Some(oldest) if now.duration_since(oldest.queued_at) >= self.deadline => {
+                let n = self.pending.len();
+                Some(self.take(n))
+            }
+            _ => None,
+        }
+    }
+
+    /// Drain everything (shutdown path), possibly into multiple batches.
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while !self.pending.is_empty() {
+            let n = self.pending.len().min(self.batch_size);
+            out.push(self.take(n));
+        }
+        out
+    }
+
+    fn take(&mut self, n: usize) -> Batch {
+        let requests: Vec<Request> = self.pending.drain(..n).collect();
+        Batch {
+            requests,
+            size: self.batch_size,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use std::sync::mpsc;
+
+    fn mk_request(id: u64, at: Instant) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            input: vec![id as i32; 4],
+            queued_at: at,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn dispatches_full_batch_immediately() {
+        let mut b = Batcher::new(4, Duration::from_millis(10));
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push(mk_request(i, now));
+        }
+        let batch = b.poll(now).expect("full batch");
+        assert_eq!(batch.occupancy(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn holds_partial_batch_until_deadline() {
+        let mut b = Batcher::new(4, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(mk_request(0, t0));
+        assert!(b.poll(t0).is_none());
+        assert!(b.poll(t0 + Duration::from_millis(5)).is_none());
+        let batch = b.poll(t0 + Duration::from_millis(10)).expect("deadline flush");
+        assert_eq!(batch.occupancy(), 1);
+        assert_eq!(batch.size, 4);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(3, Duration::from_millis(1));
+        let now = Instant::now();
+        for i in 0..7 {
+            b.push(mk_request(i, now));
+        }
+        let b1 = b.poll(now).unwrap();
+        let b2 = b.poll(now).unwrap();
+        let ids1: Vec<u64> = b1.requests.iter().map(|r| r.id).collect();
+        let ids2: Vec<u64> = b2.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids1, vec![0, 1, 2]);
+        assert_eq!(ids2, vec![3, 4, 5]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn padded_input_zeros_beyond_occupancy() {
+        let mut b = Batcher::new(4, Duration::ZERO);
+        let now = Instant::now();
+        b.push(mk_request(7, now));
+        let batch = b.poll(now).unwrap();
+        let x = batch.padded_input(4);
+        assert_eq!(x.shape(), (4, 4));
+        assert_eq!(x.row(0), &[7, 7, 7, 7]);
+        assert!(x.row(1).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn flush_all_partitions_everything() {
+        let mut b = Batcher::new(4, Duration::from_secs(60));
+        let now = Instant::now();
+        for i in 0..10 {
+            b.push(mk_request(i, now));
+        }
+        let batches = b.flush_all();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.iter().map(|x| x.occupancy()).sum::<usize>(), 10);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn prop_every_request_in_exactly_one_batch_in_order() {
+        prop_check(200, |g| {
+            let n = g.usize(1..9);
+            let total = g.usize(0..40);
+            let mut b = Batcher::new(n, Duration::from_millis(g.u64(0..=20)));
+            let t0 = Instant::now();
+            let mut seen: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            // interleave pushes and polls
+            for step in 0..total {
+                b.push(mk_request(next_id, t0));
+                next_id += 1;
+                if step % 3 == 0 {
+                    if let Some(batch) = b.poll(t0) {
+                        if batch.occupancy() > n {
+                            return false;
+                        }
+                        seen.extend(batch.requests.iter().map(|r| r.id));
+                    }
+                }
+            }
+            for batch in b.flush_all() {
+                if batch.occupancy() > n {
+                    return false;
+                }
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            seen == (0..next_id).collect::<Vec<_>>()
+        });
+    }
+
+    #[test]
+    fn prop_deadline_bound_holds() {
+        prop_check(100, |g| {
+            let n = g.usize(2..8);
+            let dl = Duration::from_millis(g.u64(1..=50));
+            let mut b = Batcher::new(n, dl);
+            let t0 = Instant::now();
+            b.push(mk_request(0, t0));
+            // strictly before the deadline: must hold; at/after: must flush
+            let early = b.poll(t0 + dl - Duration::from_nanos(1)).is_none();
+            let late = b.poll(t0 + dl).is_some();
+            early && late
+        });
+    }
+}

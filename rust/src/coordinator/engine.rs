@@ -1,0 +1,238 @@
+//! Backend engines: interchangeable batch executors behind one trait.
+//!
+//! The PJRT handles are not `Send`, so engines are constructed *inside*
+//! the engine thread from a Send-able [`EngineFactory`].
+
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::nn::forward::{forward_q, forward_q_parallel, QNetwork};
+use crate::runtime::Runtime;
+use crate::sim::batch::BatchAccelerator;
+use crate::sim::pruning::{PruningAccelerator, SparseNetwork};
+use crate::tensor::MatI;
+use crate::util::threadpool::ThreadPool;
+
+/// A batch executor.  `infer` consumes a (batch × s_0) Q7.8 matrix and
+/// returns (batch × s_out); implementations must be bit-identical.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+    /// The hardware batch size this engine was built for.
+    fn batch(&self) -> usize;
+    fn infer(&mut self, x: &MatI) -> Result<MatI>;
+    /// Simulated seconds for the last batch (None for wall-clock engines).
+    fn simulated_seconds(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Send-able recipe for building an engine on the engine thread.
+#[derive(Clone)]
+pub struct EngineFactory {
+    pub backend: String,
+    pub batch: usize,
+    pub net: QNetwork,
+    pub artifacts_dir: PathBuf,
+    /// Threads for the native engine's parallel GEMM.
+    pub native_threads: usize,
+}
+
+impl EngineFactory {
+    pub fn build(&self) -> Result<Box<dyn Engine>> {
+        ensure!(self.batch >= 1, "batch must be >= 1");
+        Ok(match self.backend.as_str() {
+            "native" => Box::new(NativeEngine {
+                net: self.net.clone(),
+                batch: self.batch,
+                pool: (self.native_threads > 1).then(|| ThreadPool::new(self.native_threads)),
+            }),
+            "pjrt" => {
+                let mut runtime = Runtime::new(&self.artifacts_dir)?;
+                let model = runtime.load(&self.net.spec.name, self.batch)?;
+                // pin the weights on device once — per-execute literal
+                // marshalling of megabytes of weights dominated the hot
+                // path by >10× (EXPERIMENTS.md §Perf)
+                let weights = model.bind_weights(&self.net.weights)?;
+                Box::new(PjrtEngine {
+                    _runtime: runtime,
+                    model,
+                    weights,
+                    batch: self.batch,
+                })
+            }
+            "sim-batch" => Box::new(SimBatchEngine {
+                accel: BatchAccelerator::zedboard(self.batch),
+                net: self.net.clone(),
+                last_sim_seconds: None,
+            }),
+            "sim-prune" => Box::new(SimPruneEngine {
+                accel: PruningAccelerator::zedboard(),
+                snet: SparseNetwork::encode(&self.net)?,
+                batch: self.batch,
+                last_sim_seconds: None,
+            }),
+            other => bail!("unknown backend {other:?}"),
+        })
+    }
+}
+
+/// Bit-exact rust Q7.8 engine (software reference on the host).
+struct NativeEngine {
+    net: QNetwork,
+    batch: usize,
+    pool: Option<ThreadPool>,
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn infer(&mut self, x: &MatI) -> Result<MatI> {
+        match &self.pool {
+            Some(pool) => forward_q_parallel(pool, &self.net, x),
+            None => forward_q(&self.net, x),
+        }
+    }
+}
+
+/// AOT-artifact engine on the PJRT CPU client (weights pinned on device).
+struct PjrtEngine {
+    _runtime: Runtime, // keeps the client alive
+    model: std::rc::Rc<crate::runtime::CompiledModel>,
+    weights: crate::runtime::BoundWeights,
+    batch: usize,
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn infer(&mut self, x: &MatI) -> Result<MatI> {
+        self.model.execute_bound(x, &self.weights)
+    }
+}
+
+/// Cycle-level batch-design simulator engine (functional + simulated time).
+struct SimBatchEngine {
+    accel: BatchAccelerator,
+    net: QNetwork,
+    last_sim_seconds: Option<f64>,
+}
+
+impl Engine for SimBatchEngine {
+    fn name(&self) -> &'static str {
+        "sim-batch"
+    }
+    fn batch(&self) -> usize {
+        self.accel.batch
+    }
+    fn infer(&mut self, x: &MatI) -> Result<MatI> {
+        let (y, t) = self.accel.run(&self.net, x)?;
+        self.last_sim_seconds = Some(t.total_seconds);
+        Ok(y)
+    }
+    fn simulated_seconds(&self) -> Option<f64> {
+        self.last_sim_seconds
+    }
+}
+
+/// Cycle-level pruning-design simulator engine.
+struct SimPruneEngine {
+    accel: PruningAccelerator,
+    snet: SparseNetwork,
+    batch: usize,
+    last_sim_seconds: Option<f64>,
+}
+
+impl Engine for SimPruneEngine {
+    fn name(&self) -> &'static str {
+        "sim-prune"
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn infer(&mut self, x: &MatI) -> Result<MatI> {
+        let (y, t) = self.accel.run(&self.snet, x)?;
+        self.last_sim_seconds = Some(t.total_seconds);
+        Ok(y)
+    }
+    fn simulated_seconds(&self) -> Option<f64> {
+        self.last_sim_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::quickstart;
+    use crate::nn::quantize_matrix;
+    use crate::tensor::MatF;
+    use crate::util::rng::Xoshiro256;
+
+    fn factory(backend: &str, batch: usize) -> EngineFactory {
+        let spec = quickstart();
+        let mut rng = Xoshiro256::seed_from_u64(40);
+        let ws = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                quantize_matrix(&MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i).map(|_| rng.normal_scaled(0.0, 0.1) as f32).collect(),
+                ))
+            })
+            .collect();
+        EngineFactory {
+            backend: backend.into(),
+            batch,
+            net: QNetwork::new(spec, ws).unwrap(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            native_threads: 1,
+        }
+    }
+
+    fn rand_x(n: usize) -> MatI {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        quantize_matrix(&MatF::from_vec(
+            n,
+            64,
+            (0..n * 64).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        ))
+    }
+
+    #[test]
+    fn native_and_simulators_bit_identical() {
+        let x = rand_x(4);
+        let mut outs = Vec::new();
+        for backend in ["native", "sim-batch", "sim-prune"] {
+            let mut e = factory(backend, 4).build().unwrap();
+            outs.push((backend, e.infer(&x).unwrap()));
+        }
+        let base = &outs[0].1;
+        for (name, y) in &outs[1..] {
+            assert_eq!(&y.data, &base.data, "{name} diverges from native");
+        }
+    }
+
+    #[test]
+    fn sim_engines_report_simulated_time() {
+        let x = rand_x(4);
+        let mut e = factory("sim-batch", 4).build().unwrap();
+        assert!(e.simulated_seconds().is_none());
+        e.infer(&x).unwrap();
+        assert!(e.simulated_seconds().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        assert!(factory("tpu", 1).build().is_err());
+    }
+}

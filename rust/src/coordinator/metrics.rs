@@ -1,0 +1,132 @@
+//! Serving metrics: latency histograms, throughput, batching efficiency.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+/// Aggregated server metrics (mutex-guarded; updates happen once per batch,
+/// far off the per-MAC hot path).
+#[derive(Debug)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// End-to-end request latency (queue + compute).
+    latency: Histogram,
+    /// Queue-only wait.
+    queue: Histogram,
+    requests: u64,
+    batches: u64,
+    occupied_slots: u64,
+    padded_slots: u64,
+    rejected: u64,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub mean_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub mean_queue_s: f64,
+    /// Fraction of hardware batch slots carrying real samples.
+    pub occupancy: f64,
+    /// Completed requests per wall second since start.
+    pub throughput: f64,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                latency: Histogram::new(),
+                queue: Histogram::new(),
+                requests: 0,
+                batches: 0,
+                occupied_slots: 0,
+                padded_slots: 0,
+                rejected: 0,
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_batch(&self, occupancy: usize, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.occupied_slots += occupancy as u64;
+        g.padded_slots += (size - occupancy) as u64;
+    }
+
+    pub fn record_request(&self, queue_s: f64, total_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.queue.record((queue_s * 1e9) as u64);
+        g.latency.record((total_s * 1e9) as u64);
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let slots = g.occupied_slots + g.padded_slots;
+        Snapshot {
+            requests: g.requests,
+            batches: g.batches,
+            rejected: g.rejected,
+            mean_latency_s: g.latency.mean_ns() / 1e9,
+            p95_latency_s: g.latency.percentile_ns(0.95) as f64 / 1e9,
+            mean_queue_s: g.queue.mean_ns() / 1e9,
+            occupancy: if slots == 0 {
+                0.0
+            } else {
+                g.occupied_slots as f64 / slots as f64
+            },
+            throughput: g.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = ServerMetrics::new();
+        m.record_batch(3, 4);
+        m.record_batch(4, 4);
+        for _ in 0..7 {
+            m.record_request(1e-3, 2e-3);
+        }
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 7);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rejected, 1);
+        assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);
+        assert!(s.mean_latency_s > 1.9e-3 && s.mean_latency_s < 2.1e-3);
+        assert!(s.p95_latency_s >= s.mean_latency_s * 0.5);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = ServerMetrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.occupancy, 0.0);
+    }
+}

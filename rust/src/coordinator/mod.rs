@@ -1,0 +1,29 @@
+//! Layer-3 coordinator: the serving embodiment of the paper's batch-
+//! processing idea.  Inference requests arrive one sample at a time; the
+//! dynamic batcher groups them to the hardware batch size n (or flushes a
+//! padded partial batch at a deadline — the §6.3 throughput/latency
+//! trade-off, now at the serving level); an engine thread executes batches
+//! on one of the interchangeable backends:
+//!
+//! * `pjrt`       — the AOT HLO artifacts on the PJRT CPU client (L1+L2),
+//! * `native`     — the bit-identical rust Q7.8 engine,
+//! * `sim-batch`  — the cycle-level batch-design simulator (Fig 5),
+//! * `sim-prune`  — the cycle-level pruning-design simulator (Fig 6).
+//!
+//! All four produce bit-identical outputs (integration-tested), so the
+//! backend choice only moves the time axis — exactly the separation the
+//! paper draws between functional correctness and throughput.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod net;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use engine::{Engine, EngineFactory};
+pub use metrics::ServerMetrics;
+pub use net::{NetClient, NetFrontend};
+pub use request::{Request, RequestId, Response};
+pub use server::{Server, ServerHandle};

@@ -1,0 +1,318 @@
+//! TCP serving frontend: a line-oriented protocol over `std::net` so the
+//! coordinator can be driven by external clients (tokio is not in the
+//! offline crate set; blocking accept + thread-per-connection is plenty at
+//! embedded-accelerator request rates).
+//!
+//! Protocol (text, one request per line):
+//! ```text
+//! -> INFER <f32> <f32> ... <f32>\n        (s_0 values, real units)
+//! <- OK <class> <queue_us> <compute_us> <occupancy> <q78 outputs...>\n
+//! <- ERR <message>\n
+//! -> STATS\n
+//! <- STATS requests=<n> batches=<n> rejected=<n> mean_latency_us=<x> ...\n
+//! -> QUIT\n
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use super::server::ServerHandle;
+
+/// A running TCP frontend.
+pub struct NetFrontend {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl NetFrontend {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve until
+    /// [`NetFrontend::stop`].
+    pub fn start(addr: &str, server: Arc<ServerHandle>) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = thread::Builder::new()
+            .name("zdnn-net-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let srv = server.clone();
+                            conns.push(
+                                thread::Builder::new()
+                                    .name("zdnn-net-conn".into())
+                                    .spawn(move || {
+                                        let _ = handle_connection(stream, &srv);
+                                    })
+                                    .expect("spawn conn"),
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(Self {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, server: &ServerHandle) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // peer closed
+        }
+        let trimmed = line.trim_end();
+        let reply = match parse_command(trimmed) {
+            Ok(Command::Quit) => return Ok(()),
+            Ok(Command::Stats) => {
+                let s = server.metrics.snapshot();
+                format!(
+                    "STATS requests={} batches={} rejected={} mean_latency_us={:.1} p95_latency_us={:.1} occupancy={:.3} throughput={:.1}",
+                    s.requests,
+                    s.batches,
+                    s.rejected,
+                    s.mean_latency_s * 1e6,
+                    s.p95_latency_s * 1e6,
+                    s.occupancy,
+                    s.throughput
+                )
+            }
+            Ok(Command::Infer(values)) => match infer(server, values) {
+                Ok(reply) => reply,
+                Err(e) => format!("ERR {e}"),
+            },
+            Err(e) => format!("ERR {e}"),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+enum Command {
+    Infer(Vec<f32>),
+    Stats,
+    Quit,
+}
+
+fn parse_command(line: &str) -> Result<Command, String> {
+    let mut parts = line.split_ascii_whitespace();
+    match parts.next() {
+        Some("INFER") => {
+            let values: Result<Vec<f32>, _> = parts.map(str::parse::<f32>).collect();
+            match values {
+                Ok(v) if !v.is_empty() => Ok(Command::Infer(v)),
+                Ok(_) => Err("INFER needs at least one value".into()),
+                Err(e) => Err(format!("bad number: {e}")),
+            }
+        }
+        Some("STATS") => Ok(Command::Stats),
+        Some("QUIT") => Ok(Command::Quit),
+        Some(other) => Err(format!("unknown command {other:?}")),
+        None => Err("empty command".into()),
+    }
+}
+
+fn infer(server: &ServerHandle, values: Vec<f32>) -> Result<String, String> {
+    let input = crate::fixedpoint::quantize_slice(&values);
+    let resp = server
+        .infer_blocking(input)
+        .map_err(|e| format!("{e:#}"))?;
+    let mut out = format!(
+        "OK {} {:.0} {:.0} {}",
+        resp.class,
+        resp.queue_seconds * 1e6,
+        resp.compute_seconds * 1e6,
+        resp.batch_occupancy
+    );
+    for v in &resp.output {
+        out.push(' ');
+        out.push_str(&v.to_string());
+    }
+    Ok(out)
+}
+
+/// Minimal blocking client for the protocol (used by examples and tests).
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn round_trip(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+
+    /// Returns (class, q7.8 outputs).
+    pub fn infer(&mut self, values: &[f32]) -> Result<(usize, Vec<i32>)> {
+        let mut line = String::from("INFER");
+        for v in values {
+            line.push(' ');
+            line.push_str(&v.to_string());
+        }
+        let reply = self.round_trip(&line)?;
+        let mut parts = reply.split_ascii_whitespace();
+        match parts.next() {
+            Some("OK") => {
+                let class: usize = parts.next().context("missing class")?.parse()?;
+                let rest: Vec<&str> = parts.collect();
+                let outputs = rest[3..]
+                    .iter()
+                    .map(|s| s.parse::<i32>())
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok((class, outputs))
+            }
+            _ => anyhow::bail!("server error: {reply}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        self.round_trip("STATS")
+    }
+
+    pub fn quit(mut self) -> Result<()> {
+        self.writer.write_all(b"QUIT\n")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::config::ServerConfig;
+    use crate::coordinator::{EngineFactory, Server};
+    use crate::nn::spec::quickstart;
+
+    fn start_stack() -> (NetFrontend, Arc<ServerHandle>, crate::nn::QNetwork) {
+        let net = random_qnet(&quickstart(), 0xA0);
+        let cfg = ServerConfig {
+            batch: 4,
+            batch_deadline_us: 300,
+            ..Default::default()
+        };
+        let factory = EngineFactory {
+            backend: "native".into(),
+            batch: 4,
+            net: net.clone(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            native_threads: 1,
+        };
+        let server = Arc::new(Server::start(&cfg, factory).unwrap());
+        let fe = NetFrontend::start("127.0.0.1:0", server.clone()).unwrap();
+        (fe, server, net)
+    }
+
+    #[test]
+    fn infer_round_trip_matches_golden() {
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        let values: Vec<f32> = (0..64).map(|i| (i as f32) / 64.0 - 0.5).collect();
+        let (class, outputs) = client.infer(&values).unwrap();
+        let xq = crate::fixedpoint::quantize_slice(&values);
+        let x = crate::tensor::MatI::from_vec(1, 64, xq);
+        let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
+        assert_eq!(outputs, golden.row(0));
+        assert_eq!(class, crate::nn::forward::argmax_rows(&golden)[0]);
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn stats_and_errors() {
+        let (fe, _server, _) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        // protocol errors are reported, connection stays usable
+        let err = client.round_trip("FROBNICATE").unwrap();
+        assert!(err.starts_with("ERR"));
+        let err = client.round_trip("INFER notanumber").unwrap();
+        assert!(err.starts_with("ERR"));
+        // wrong width is a server-side error
+        let err = client.round_trip("INFER 1 2 3").unwrap();
+        assert!(err.starts_with("ERR"), "{err}");
+        let _ = client
+            .infer(&vec![0.25f32; 64])
+            .expect("valid infer after errors");
+        let stats = client.stats().unwrap();
+        assert!(stats.starts_with("STATS requests="), "{stats}");
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (fe, server, _) = start_stack();
+        let addr = fe.addr();
+        let mut handles = Vec::new();
+        for t in 0..3 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = NetClient::connect(&addr).unwrap();
+                for i in 0..5 {
+                    let vals: Vec<f32> = (0..64).map(|k| ((k + i + t) as f32) / 100.0).collect();
+                    c.infer(&vals).unwrap();
+                }
+                c.quit().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(server.metrics.snapshot().requests >= 15);
+        fe.stop();
+    }
+}

@@ -1,0 +1,59 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// One inference request: a single input sample on the Q7.8 grid.
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// (s_0) quantized activations.
+    pub input: Vec<i32>,
+    /// Enqueue timestamp (for end-to-end latency accounting).
+    pub queued_at: Instant,
+    /// Completion channel.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    /// (s_{L-1}) quantized output activations.
+    pub output: Vec<i32>,
+    /// Argmax class (classification convenience).
+    pub class: usize,
+    /// Seconds the request waited in the queue + batcher.
+    pub queue_seconds: f64,
+    /// Seconds of backend execution (shared by the whole batch).
+    pub compute_seconds: f64,
+    /// Samples that shared the batch (diagnostics: batching efficiency).
+    pub batch_occupancy: usize,
+}
+
+impl Response {
+    pub fn total_seconds(&self) -> f64 {
+        self.queue_seconds + self.compute_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_latency_decomposition() {
+        let r = Response {
+            id: 1,
+            output: vec![0; 10],
+            class: 3,
+            queue_seconds: 0.5e-3,
+            compute_seconds: 1.5e-3,
+            batch_occupancy: 8,
+        };
+        assert!((r.total_seconds() - 2.0e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,385 @@
+//! The serving loop: a bounded request queue in front of a dedicated
+//! engine thread running the batcher + backend.
+//!
+//! Why one engine thread: the PJRT handles are not `Send`, and the paper's
+//! accelerator is likewise a single device — parallelism comes from
+//! *batching*, not from concurrent executions.  Backpressure: `submit`
+//! fails fast once `queue_depth` requests are in flight (the embedded
+//! system's bounded-memory discipline).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::batcher::Batcher;
+use super::engine::EngineFactory;
+use super::metrics::ServerMetrics;
+use super::request::{Request, RequestId, Response};
+use crate::config::ServerConfig;
+use crate::nn::forward::argmax_rows;
+
+enum Command {
+    Infer(Request),
+    Shutdown,
+}
+
+/// Client handle: submit requests, read metrics, shut down.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Command>,
+    pub metrics: Arc<ServerMetrics>,
+    in_flight: Arc<AtomicUsize>,
+    queue_depth: usize,
+    next_id: AtomicU64,
+    engine: Option<thread::JoinHandle<Result<()>>>,
+    shutting_down: AtomicBool,
+    /// Input width the engine expects (validated at submit time).
+    pub input_width: usize,
+}
+
+/// The server: spawns the engine thread and hands out a [`ServerHandle`].
+pub struct Server;
+
+impl Server {
+    pub fn start(config: &ServerConfig, factory: EngineFactory) -> Result<ServerHandle> {
+        config.validate()?;
+        let (tx, rx) = mpsc::channel::<Command>();
+        let metrics = Arc::new(ServerMetrics::new());
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let input_width = factory.net.spec.inputs();
+
+        let m = metrics.clone();
+        let fl = in_flight.clone();
+        let batch_size = config.batch;
+        let deadline = Duration::from_micros(config.batch_deadline_us);
+        let engine = thread::Builder::new()
+            .name("zdnn-engine".into())
+            .spawn(move || engine_loop(rx, factory, batch_size, deadline, m, fl))?;
+
+        Ok(ServerHandle {
+            tx,
+            metrics,
+            in_flight,
+            queue_depth: config.queue_depth,
+            next_id: AtomicU64::new(0),
+            engine: Some(engine),
+            shutting_down: AtomicBool::new(false),
+            input_width,
+        })
+    }
+}
+
+impl ServerHandle {
+    /// Submit one sample; returns the response receiver or an immediate
+    /// backpressure error when the queue is full.
+    pub fn submit(&self, input: Vec<i32>) -> Result<(RequestId, mpsc::Receiver<Response>)> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            bail!("server is shutting down");
+        }
+        if input.len() != self.input_width {
+            bail!("input width {} != {}", input.len(), self.input_width);
+        }
+        // reserve a slot; fail fast when saturated (backpressure)
+        let mut cur = self.in_flight.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.queue_depth {
+                self.metrics.record_rejected();
+                bail!("queue full ({} in flight)", cur);
+            }
+            match self.in_flight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id,
+            input,
+            queued_at: Instant::now(),
+            reply: rtx,
+        };
+        self.tx
+            .send(Command::Infer(req))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok((id, rrx))
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer_blocking(&self, input: Vec<i32>) -> Result<Response> {
+        let (_, rx) = self.submit(input)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Graceful shutdown: drains pending requests, joins the engine.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(h) = self.engine.take() {
+            h.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_loop(
+    rx: mpsc::Receiver<Command>,
+    factory: EngineFactory,
+    batch_size: usize,
+    deadline: Duration,
+    metrics: Arc<ServerMetrics>,
+    in_flight: Arc<AtomicUsize>,
+) -> Result<()> {
+    let mut engine = factory.build()?;
+    let s_in = factory.net.spec.inputs();
+    let mut batcher = Batcher::new(batch_size, deadline);
+
+    let mut dispatch = |batcher: &mut Batcher, force: bool| -> Result<()> {
+        loop {
+            let batch = if force {
+                let mut all = batcher.flush_all();
+                if all.is_empty() {
+                    return Ok(());
+                }
+                all.remove(0)
+            } else {
+                match batcher.poll(Instant::now()) {
+                    Some(b) => b,
+                    None => return Ok(()),
+                }
+            };
+            let occupancy = batch.occupancy();
+            metrics.record_batch(occupancy, batch.size);
+            let x = batch.padded_input(s_in);
+            let t0 = Instant::now();
+            let y = engine.infer(&x)?;
+            let compute_seconds = engine
+                .simulated_seconds()
+                .unwrap_or_else(|| t0.elapsed().as_secs_f64());
+            let classes = argmax_rows(&y);
+            for (row, req) in batch.requests.into_iter().enumerate() {
+                // wait time = from enqueue until the batch started executing
+                let queue_seconds = t0.duration_since(req.queued_at).as_secs_f64();
+                let resp = Response {
+                    id: req.id,
+                    output: y.row(row).to_vec(),
+                    class: classes[row],
+                    queue_seconds,
+                    compute_seconds,
+                    batch_occupancy: occupancy,
+                };
+                metrics.record_request(resp.queue_seconds, resp.total_seconds());
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                let _ = req.reply.send(resp);
+            }
+            if !force {
+                continue; // keep draining full batches
+            }
+        }
+    };
+
+    loop {
+        // wait bounded by the batcher's deadline so partial batches flush
+        let timeout = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Command::Infer(req)) => {
+                batcher.push(req);
+                // greedily drain everything already queued so batch
+                // formation sees the full backlog (otherwise requests that
+                // aged while the engine was busy flush as singletons)
+                let mut shutdown = false;
+                while let Ok(cmd) = rx.try_recv() {
+                    match cmd {
+                        Command::Infer(r) => batcher.push(r),
+                        Command::Shutdown => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+                dispatch(&mut batcher, false)?;
+                if shutdown {
+                    dispatch(&mut batcher, true)?;
+                    return Ok(());
+                }
+            }
+            Ok(Command::Shutdown) => {
+                dispatch(&mut batcher, true)?;
+                // drain anything racing the shutdown signal
+                while let Ok(Command::Infer(req)) = rx.try_recv() {
+                    batcher.push(req);
+                }
+                dispatch(&mut batcher, true)?;
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                dispatch(&mut batcher, false)?;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                dispatch(&mut batcher, true)?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::quickstart;
+    use crate::nn::{forward_q, quantize_matrix, QNetwork};
+    use crate::tensor::{MatF, MatI};
+    use crate::util::rng::Xoshiro256;
+
+    fn test_factory(batch: usize) -> EngineFactory {
+        let spec = quickstart();
+        let mut rng = Xoshiro256::seed_from_u64(50);
+        let ws = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                quantize_matrix(&MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i).map(|_| rng.normal_scaled(0.0, 0.1) as f32).collect(),
+                ))
+            })
+            .collect();
+        EngineFactory {
+            backend: "native".into(),
+            batch,
+            net: QNetwork::new(spec, ws).unwrap(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            native_threads: 1,
+        }
+    }
+
+    fn test_config(batch: usize) -> ServerConfig {
+        ServerConfig {
+            batch,
+            batch_deadline_us: 500,
+            ..Default::default()
+        }
+    }
+
+    fn rand_sample(seed: u64) -> Vec<i32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..64)
+            .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn serves_correct_outputs() {
+        let factory = test_factory(4);
+        let net = factory.net.clone();
+        let server = Server::start(&test_config(4), factory).unwrap();
+        let mut receivers = Vec::new();
+        let mut inputs = Vec::new();
+        for i in 0..10 {
+            let input = rand_sample(i);
+            inputs.push(input.clone());
+            receivers.push(server.submit(input).unwrap());
+        }
+        for (i, (id, rx)) in receivers.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, id);
+            // verify against the golden forward
+            let x = MatI::from_vec(1, 64, inputs[i].clone());
+            let want = forward_q(&net, &x).unwrap();
+            assert_eq!(resp.output, want.row(0), "request {i}");
+            assert!(resp.batch_occupancy >= 1 && resp.batch_occupancy <= 4);
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 10);
+        assert!(snap.batches >= 3);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let server = Server::start(&test_config(8), test_factory(8)).unwrap();
+        let t0 = Instant::now();
+        let resp = server.infer_blocking(rand_sample(1)).unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(resp.batch_occupancy, 1);
+        assert!(elapsed >= Duration::from_micros(400), "{elapsed:?}");
+        assert!(elapsed < Duration::from_secs(1), "{elapsed:?}");
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let cfg = ServerConfig {
+            batch: 4,
+            queue_depth: 4,
+            batch_deadline_us: 200_000,
+            ..Default::default()
+        };
+        let server = Server::start(&cfg, test_factory(4)).unwrap();
+        // fill the queue faster than the 200 ms deadline drains it
+        let mut held = Vec::new();
+        let mut rejected = false;
+        for i in 0..64 {
+            match server.submit(rand_sample(i)) {
+                Ok(pair) => held.push(pair),
+                Err(_) => {
+                    rejected = true;
+                    break;
+                }
+            }
+        }
+        // either we saw explicit backpressure, or batches drained fast
+        // enough that 64 requests fit — with batch=4 and a 200 ms deadline
+        // the engine keeps up only via full batches; both are valid, but
+        // the queue bound must never be exceeded:
+        assert!(server.metrics.snapshot().requests <= 64);
+        if rejected {
+            assert!(server.metrics.snapshot().rejected >= 1);
+        }
+        drop(held);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn wrong_input_width_rejected() {
+        let server = Server::start(&test_config(2), test_factory(2)).unwrap();
+        assert!(server.submit(vec![0i32; 3]).is_err());
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let cfg = ServerConfig {
+            batch: 16,
+            batch_deadline_us: 1_000_000, // long deadline: only drain on shutdown
+            ..Default::default()
+        };
+        let server = Server::start(&cfg, test_factory(16)).unwrap();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| server.submit(rand_sample(i)).unwrap().1)
+            .collect();
+        server.shutdown().unwrap();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+        }
+    }
+}

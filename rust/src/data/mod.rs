@@ -1,0 +1,87 @@
+//! Synthetic datasets (DESIGN.md §2 substitution for MNIST / HAR).
+//!
+//! The paper's accuracy claims (Table 4) are about *relative* accuracy under
+//! pruning, so the substitute tasks only need to (a) match the input
+//! dimensionality and class counts of MNIST (784/10) and HAR (561/6) and
+//! (b) be learnable-but-not-trivial for the paper's architectures.
+//!
+//! * `mnist`: procedural 28×28 digit glyphs — coarse 7×7 stencils per digit,
+//!   upscaled with random shift/scale jitter, stroke thickness noise and
+//!   pixel noise; replicates MNIST's "same class, varying pen" structure.
+//! * `har`: 561-dim feature vectors drawn from class-conditional Gaussians
+//!   with shared covariance structure and overlapping activity pairs
+//!   (sitting/standing deliberately close, like the real sensor data).
+
+pub mod har;
+pub mod mnist;
+
+use crate::tensor::MatF;
+
+/// A labelled dataset split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// (samples × features), values pre-scaled to roughly [-1, 1].
+    pub x: MatF,
+    pub y: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn features(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Take the first `n` samples (cheap view-copy for small benches).
+    pub fn head(&self, n: usize) -> Dataset {
+        let n = n.min(self.len());
+        Dataset {
+            x: MatF::from_vec(n, self.x.cols, self.x.data[..n * self.x.cols].to_vec()),
+            y: self.y[..n].to_vec(),
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// Per-class counts (sanity checks / stratification tests).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &y in &self.y {
+            counts[y] += 1;
+        }
+        counts
+    }
+}
+
+/// Train/test pair, mirroring the official split sizes of the real sets.
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_truncates() {
+        let d = mnist::generate(100, 42);
+        let h = d.head(10);
+        assert_eq!(h.len(), 10);
+        assert_eq!(h.x.rows, 10);
+        assert_eq!(h.num_classes, 10);
+    }
+
+    #[test]
+    fn class_counts_sum_to_len() {
+        let d = har::generate(120, 7);
+        assert_eq!(d.class_counts().iter().sum::<usize>(), d.len());
+    }
+}

@@ -1,0 +1,236 @@
+//! Generic Qm.n fixed-point formats (paper §6.4 / ref [30]: the accuracy
+//! impact of different integer/fraction splits, and §4.1: the throughput
+//! impact of the total width).  The production datapath is Q7.8; this
+//! module parameterizes the format so the ablation bench can sweep both
+//! axes on real trained networks.
+
+use anyhow::{ensure, Result};
+
+/// A signed fixed-point format: 1 sign bit + `int_bits` + `frac_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+/// The paper's weight/activation format.
+pub const Q7_8: QFormat = QFormat {
+    int_bits: 7,
+    frac_bits: 8,
+};
+
+impl QFormat {
+    pub fn new(int_bits: u32, frac_bits: u32) -> Result<Self> {
+        ensure!(
+            int_bits + frac_bits + 1 <= 32 && frac_bits >= 1,
+            "unsupported format Q{int_bits}.{frac_bits}"
+        );
+        Ok(Self {
+            int_bits,
+            frac_bits,
+        })
+    }
+
+    /// Total stored bits (`b_weight` in §4.4).
+    pub fn total_bits(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Representable rails as raw integers.
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.int_bits + self.frac_bits)) - 1
+    }
+
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.int_bits + self.frac_bits))
+    }
+
+    /// Quantize a real value (round half to even, saturate).
+    pub fn quantize(&self, x: f64) -> i32 {
+        let q = super::round_half_even(x * f64::from(1u32 << self.frac_bits));
+        (q as i64).clamp(self.min_raw(), self.max_raw()) as i32
+    }
+
+    pub fn dequantize(&self, q: i32) -> f64 {
+        f64::from(q) / f64::from(1u32 << self.frac_bits)
+    }
+
+    /// Quantization step (1 ulp) in real units.
+    pub fn ulp(&self) -> f64 {
+        1.0 / f64::from(1u32 << self.frac_bits)
+    }
+
+    /// Largest representable magnitude in real units.
+    pub fn max_value(&self) -> f64 {
+        self.dequantize(self.max_raw() as i32)
+    }
+
+    /// Accumulator format of a product of two values in this format
+    /// (the DSP multiplier widens both fields).
+    pub fn acc_format(&self) -> QFormat {
+        QFormat {
+            int_bits: 2 * self.int_bits + 1,
+            frac_bits: 2 * self.frac_bits,
+        }
+    }
+
+    /// Requantize an accumulator of `self.acc_format()` back to `self`
+    /// (round-to-nearest via the overflow-free shift identity, saturate).
+    pub fn requantize_acc(&self, acc: i64) -> i32 {
+        let shift = self.frac_bits;
+        let rounded = (acc >> shift) + ((acc >> (shift - 1)) & 1);
+        rounded.clamp(self.min_raw(), self.max_raw()) as i32
+    }
+}
+
+/// Round-trip quantization error of a weight matrix under a format:
+/// max |w - deq(quant(w))| (the §6.4 accuracy driver).
+pub fn matrix_quant_error(format: QFormat, weights: &[f32]) -> f64 {
+    weights
+        .iter()
+        .map(|&w| {
+            let q = format.quantize(f64::from(w));
+            (f64::from(w) - format.dequantize(q)).abs()
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Run an f32 network forward with all weights/activations quantized to an
+/// arbitrary format (reference implementation for the format sweep — the
+/// production Q7.8 path in `nn::forward` is the bit-exact twin for Q7.8).
+pub fn forward_with_format(
+    format: QFormat,
+    spec: &crate::nn::spec::NetworkSpec,
+    weights: &[crate::tensor::MatF],
+    x: &crate::tensor::MatF,
+) -> crate::tensor::MatI {
+    use crate::tensor::MatI;
+    let mut a = MatI {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().map(|&v| format.quantize(f64::from(v))).collect(),
+    };
+    for (w, actfn) in weights.iter().zip(spec.activations.iter()) {
+        let wq: Vec<i32> = w.data.iter().map(|&v| format.quantize(f64::from(v))).collect();
+        let mut z = MatI::zeros(a.rows, w.rows);
+        for n in 0..a.rows {
+            for o in 0..w.rows {
+                let mut acc = 0i64;
+                let wr = &wq[o * w.cols..(o + 1) * w.cols];
+                for (xa, wv) in a.row(n).iter().zip(wr.iter()) {
+                    acc += i64::from(*xa) * i64::from(*wv);
+                }
+                // activation in real units on the widened accumulator
+                let real = acc as f64 / (1u64 << (2 * format.frac_bits)) as f64;
+                let out = actfn.apply_f32(real as f32);
+                z.set(n, o, format.quantize(f64::from(out)));
+            }
+        }
+        a = z;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q78_matches_production_quantizer() {
+        for x in [-1.0, -0.25, 0.0, 0.3, 1.5, 127.996, -128.0, 200.0] {
+            assert_eq!(Q7_8.quantize(x), crate::fixedpoint::quantize(x), "{x}");
+        }
+        assert_eq!(Q7_8.total_bits(), 16);
+        assert_eq!(Q7_8.max_raw(), 32767);
+        assert_eq!(Q7_8.min_raw(), -32768);
+    }
+
+    #[test]
+    fn narrower_formats_coarser() {
+        let q34 = QFormat::new(3, 4).unwrap(); // 8-bit
+        let q78 = Q7_8;
+        assert!(q34.ulp() > q78.ulp());
+        assert!(q34.max_value() < q78.max_value());
+        assert_eq!(q34.total_bits(), 8);
+    }
+
+    #[test]
+    fn invalid_formats_rejected() {
+        assert!(QFormat::new(20, 16).is_err());
+        assert!(QFormat::new(7, 0).is_err());
+    }
+
+    #[test]
+    fn acc_format_widens() {
+        let acc = Q7_8.acc_format();
+        assert_eq!(acc.int_bits, 15);
+        assert_eq!(acc.frac_bits, 16);
+    }
+
+    #[test]
+    fn requantize_acc_q78_matches_production() {
+        for acc in [-1000i64, -129, -128, 0, 127, 128, 70000, i64::from(i32::MAX)] {
+            let got = Q7_8.requantize_acc(acc);
+            let want = crate::fixedpoint::requantize_acc(acc.clamp(
+                i64::from(i32::MIN),
+                i64::from(i32::MAX),
+            ) as i32);
+            assert_eq!(got, want, "acc={acc}");
+        }
+    }
+
+    #[test]
+    fn quant_error_bounded_by_half_ulp() {
+        let ws: Vec<f32> = (-100..100).map(|i| i as f32 * 0.0133).collect();
+        let err = matrix_quant_error(Q7_8, &ws);
+        assert!(err <= Q7_8.ulp() / 2.0 + 1e-12, "{err}");
+    }
+
+    #[test]
+    fn format_sweep_error_monotone_in_frac_bits() {
+        let ws: Vec<f32> = (-50..50).map(|i| i as f32 * 0.017).collect();
+        let mut last = f64::INFINITY;
+        for frac in [4u32, 6, 8, 10] {
+            let f = QFormat::new(5, frac).unwrap();
+            let e = matrix_quant_error(f, &ws);
+            assert!(e <= last + 1e-12, "frac={frac}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn forward_with_q78_close_to_production_forward() {
+        use crate::nn::spec::quickstart;
+        use crate::tensor::MatF;
+        use crate::util::rng::Xoshiro256;
+        let spec = quickstart();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let ws: Vec<MatF> = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i).map(|_| rng.normal_scaled(0.0, 0.1) as f32).collect(),
+                )
+            })
+            .collect();
+        let x = MatF::from_vec(
+            2,
+            64,
+            (0..128).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        );
+        let generic = forward_with_format(Q7_8, &spec, &ws, &x);
+        let qnet = crate::nn::weights::NetworkWeights::new(spec, ws)
+            .unwrap()
+            .quantized();
+        let xq = crate::nn::quantize_matrix(&x);
+        let prod = crate::nn::forward::forward_q(&qnet, &xq).unwrap();
+        // the generic path uses exact sigmoid, production uses PLAN: allow
+        // a few Q7.8 ulps
+        for (a, b) in generic.data.iter().zip(prod.data.iter()) {
+            assert!((a - b).abs() <= 8, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Q7.8 fixed-point datapath (paper §5.3–5.4).
+//!
+//! The accelerator's number formats:
+//! * **Q7.8** — 1 sign + 7 integer + 8 fraction bits for weights and
+//!   activations (stored here in `i32` lanes to match the XLA int32
+//!   artifacts; the value range is the i16 range).
+//! * **Q15.16** — the 32-bit accumulator of a Q7.8 × Q7.8 MAC chain,
+//!   wrapping two's-complement exactly like a DSP48 accumulator and XLA's
+//!   int32 dot.
+//!
+//! Every function in this module is the bit-exact twin of
+//! `python/compile/kernels/activations.py` / `ref.py`; integration tests
+//! assert equality through the PJRT artifacts.
+
+pub mod format;
+
+/// Fraction bits of the Q7.8 activation/weight format.
+pub const FRAC_BITS: u32 = 8;
+/// Fraction bits of the Q15.16 accumulator.
+pub const ACC_FRAC_BITS: u32 = 16;
+/// 1.0 on the Q7.8 grid.
+pub const Q78_ONE: i32 = 1 << FRAC_BITS;
+/// Q7.8 rails (i16 range).
+pub const Q78_MIN: i32 = -(1 << 15);
+pub const Q78_MAX: i32 = (1 << 15) - 1;
+/// Bits per stored weight (`b_weight` in the paper's §4.4 formulas).
+pub const WEIGHT_BITS: u32 = 16;
+
+/// Round half to even (numpy `rint` semantics, which the python compile
+/// path uses when quantizing) — `f64::round` rounds half away from zero
+/// and would disagree on exact .5 ties.
+#[inline]
+pub fn round_half_even(x: f64) -> f64 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 && (r as i64) % 2 != 0 {
+        r - (x.signum())
+    } else {
+        r
+    }
+}
+
+/// f32/f64 -> Q7.8 grid (round half to even, saturate), stored in i32.
+#[inline]
+pub fn quantize(x: f64) -> i32 {
+    let q = round_half_even(x * f64::from(Q78_ONE));
+    q.clamp(f64::from(Q78_MIN), f64::from(Q78_MAX)) as i32
+}
+
+/// Q7.8 -> real value.
+#[inline]
+pub fn dequantize(q: i32) -> f64 {
+    f64::from(q) / f64::from(Q78_ONE)
+}
+
+/// Quantize a slice.
+pub fn quantize_slice(xs: &[f32]) -> Vec<i32> {
+    xs.iter().map(|&x| quantize(f64::from(x))).collect()
+}
+
+/// Dequantize a slice.
+pub fn dequantize_slice(qs: &[i32]) -> Vec<f32> {
+    qs.iter().map(|&q| dequantize(q) as f32).collect()
+}
+
+/// One MAC step on the wrapping 32-bit accumulator: `acc + w*a` where both
+/// operands are Q7.8.  This is the DSP-slice semantics (and XLA's int32
+/// dot), NOT saturating.
+#[inline(always)]
+pub fn mac(acc: i32, w: i32, a: i32) -> i32 {
+    acc.wrapping_add(w.wrapping_mul(a))
+}
+
+/// Q15.16 accumulator -> Q7.8, round-to-nearest (half away from zero via
+/// the +bias formulation), saturating.  Overflow-free identity:
+/// `(acc + 128) >> 8 == (acc >> 8) + ((acc >> 7) & 1)`.
+#[inline(always)]
+pub fn requantize_acc(acc: i32) -> i32 {
+    let shift = ACC_FRAC_BITS - FRAC_BITS;
+    let rounded = (acc >> shift) + ((acc >> (shift - 1)) & 1);
+    rounded.clamp(Q78_MIN, Q78_MAX)
+}
+
+/// ReLU on the accumulator, requantized to Q7.8.
+#[inline(always)]
+pub fn relu_acc(acc: i32) -> i32 {
+    requantize_acc(acc.max(0))
+}
+
+// PLAN segment breakpoints on the Q15.16 accumulator.
+const PLAN_B5: i64 = 5 << ACC_FRAC_BITS;
+const PLAN_B2375: i64 = (2 << ACC_FRAC_BITS) + (3 << (ACC_FRAC_BITS - 3));
+const PLAN_B1: i64 = 1 << ACC_FRAC_BITS;
+
+/// PLAN sigmoid (Amin et al. 1997) on the Q15.16 accumulator -> Q7.8 in
+/// [0, 256].  Shift/add only — the exact wiring of the paper's activation
+/// unit (§5.4) and of `activations.plan_sigmoid_acc`.
+#[inline(always)]
+pub fn plan_sigmoid_acc(acc: i32) -> i32 {
+    let mag = i64::from(acc).abs();
+    let y = if mag >= PLAN_B5 {
+        i64::from(Q78_ONE)
+    } else if mag >= PLAN_B2375 {
+        (mag >> 13) + 216
+    } else if mag >= PLAN_B1 {
+        (mag >> 11) + 160
+    } else {
+        (mag >> 10) + 128
+    };
+    let y = if acc < 0 { i64::from(Q78_ONE) - y } else { y };
+    y.clamp(0, i64::from(Q78_ONE)) as i32
+}
+
+/// No activation: plain requantization (output/logit layers).
+#[inline(always)]
+pub fn identity_acc(acc: i32) -> i32 {
+    requantize_acc(acc)
+}
+
+/// Exact real sigmoid, for PLAN error measurements.
+pub fn sigmoid_exact(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Maximum |PLAN − sigmoid| over a dense sweep (Amin et al. cite ~1.89 %;
+/// our Q7.8 output adds quantization, bound asserted < 0.022 in tests).
+pub fn plan_max_error() -> f64 {
+    let mut max_err: f64 = 0.0;
+    let n = 200_001;
+    for i in 0..n {
+        let x = -8.0 + 16.0 * (i as f64) / ((n - 1) as f64);
+        let acc = round_half_even(x * (1i64 << ACC_FRAC_BITS) as f64) as i64;
+        let acc32 = acc.clamp(i64::from(i32::MIN), i64::from(i32::MAX)) as i32;
+        let y = f64::from(plan_sigmoid_acc(acc32)) / f64::from(Q78_ONE);
+        max_err = max_err.max((y - sigmoid_exact(x)).abs());
+    }
+    max_err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn quantize_round_half_even_matches_numpy_rint() {
+        // x*256 = 0.5 -> 0 (even), 1.5 -> 2, 2.5 -> 2, -0.5 -> 0, -1.5 -> -2
+        assert_eq!(quantize(0.5 / 256.0), 0);
+        assert_eq!(quantize(1.5 / 256.0), 2);
+        assert_eq!(quantize(2.5 / 256.0), 2);
+        assert_eq!(quantize(-0.5 / 256.0), 0);
+        assert_eq!(quantize(-1.5 / 256.0), -2);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(quantize(1e9), Q78_MAX);
+        assert_eq!(quantize(-1e9), Q78_MIN);
+        assert_eq!(quantize(127.99609375), Q78_MAX); // 32767/256
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_on_grid() {
+        for q in [-32768, -255, -1, 0, 1, 255, 32767] {
+            assert_eq!(quantize(dequantize(q)), q);
+        }
+    }
+
+    #[test]
+    fn requantize_known_points() {
+        assert_eq!(requantize_acc(0), 0);
+        assert_eq!(requantize_acc(127), 0);
+        assert_eq!(requantize_acc(128), 1);
+        assert_eq!(requantize_acc(-128), 0);
+        assert_eq!(requantize_acc(-129), -1);
+        assert_eq!(requantize_acc(i32::MAX), Q78_MAX);
+        assert_eq!(requantize_acc(i32::MIN), Q78_MIN);
+    }
+
+    #[test]
+    fn requantize_identity_matches_bias_formula() {
+        prop_check(2000, |g| {
+            let acc = g.i32_full();
+            let want = ((i64::from(acc) + 128) >> 8).clamp(-32768, 32767) as i32;
+            requantize_acc(acc) == want
+        });
+    }
+
+    #[test]
+    fn plan_sigmoid_known_points() {
+        let q16 = |x: f64| (x * 65536.0).round() as i32;
+        assert_eq!(plan_sigmoid_acc(q16(0.0)), 128);
+        assert_eq!(plan_sigmoid_acc(q16(10.0)), 256);
+        assert_eq!(plan_sigmoid_acc(q16(-10.0)), 0);
+        assert_eq!(plan_sigmoid_acc(q16(1.0)), 192);
+        assert_eq!(plan_sigmoid_acc(q16(-1.0)), 64);
+    }
+
+    #[test]
+    fn plan_sigmoid_symmetry_and_monotone() {
+        prop_check(2000, |g| {
+            let x = g.i32_full();
+            let y = g.i32_full();
+            let (lo, hi) = (x.min(y), x.max(y));
+            let sym = x != i32::MIN || plan_sigmoid_acc(x) == 0;
+            let sym = sym
+                && (x == i32::MIN
+                    || plan_sigmoid_acc(x) + plan_sigmoid_acc(-x) == Q78_ONE);
+            sym && plan_sigmoid_acc(lo) <= plan_sigmoid_acc(hi)
+        });
+    }
+
+    #[test]
+    fn plan_sigmoid_int_min_is_zero() {
+        assert_eq!(plan_sigmoid_acc(i32::MIN), 0);
+    }
+
+    #[test]
+    fn plan_error_bound() {
+        assert!(plan_max_error() < 0.022);
+    }
+
+    #[test]
+    fn relu_clamps_negative_only() {
+        assert_eq!(relu_acc(-(1 << 20)), 0);
+        assert_eq!(relu_acc(1 << 20), (1 << 20) >> 8);
+        assert_eq!(relu_acc(i32::MIN), 0);
+    }
+
+    #[test]
+    fn mac_wraps_like_hardware() {
+        // 32767 * 32767 accumulated twice: wraps, does not saturate
+        let mut acc = 0i32;
+        for _ in 0..4 {
+            acc = mac(acc, 32767, 32767);
+        }
+        let want = (4i64 * 32767 * 32767) as i64;
+        assert_eq!(acc, (want & 0xFFFF_FFFF) as u32 as i32);
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs = [0.5f32, -0.25, 1.0, -128.0, 127.0];
+        let q = quantize_slice(&xs);
+        let back = dequantize_slice(&q);
+        for (x, b) in xs.iter().zip(back.iter()) {
+            assert!((x - b).abs() <= 0.5 / 256.0 + 1e-6, "{x} vs {b}");
+        }
+    }
+}

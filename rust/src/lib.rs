@@ -1,0 +1,33 @@
+//! # zynq-dnn
+//!
+//! Reproduction of *"Throughput Optimizations for FPGA-based Deep Neural
+//! Network Inference"* (Posewsky & Ziener, Microprocessors and Microsystems
+//! 2018) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — `python/compile/`: Pallas fixed-point
+//!   kernels + JAX network forward, AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — the serving coordinator (dynamic batcher,
+//!   section scheduler, PJRT runtime), the cycle-level Zynq accelerator
+//!   simulator for both paper designs (batch processing §5.5, pruning
+//!   §5.6), and every substrate they need: Q7.8 fixed point, sparse weight
+//!   streaming, trainer with magnitude pruning, synthetic datasets,
+//!   analytic §4.4 performance models, and the benchmark harnesses that
+//!   regenerate every table and figure of the paper's evaluation.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod sim;
+pub mod fixedpoint;
+pub mod nn;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,405 @@
+//! `zynq-dnn` — CLI for the FPGA-DNN-inference reproduction.
+//!
+//! Subcommands:
+//!   info                         device/resource/calibration summary
+//!   train                        train + prune + save a network
+//!   infer                        run one inference through a backend
+//!   serve                        demo serving loop with the dynamic batcher
+//!   sim                          simulate one network on both accelerators
+//!   bench <which>                regenerate a paper table/figure
+//!                                (table2|table3|table4|fig7|gops|nopt|combined|ablation|all)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use zynq_dnn::bench;
+use zynq_dnn::cli::{parse, usage, Args, FlagSpec};
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::data::{har, mnist};
+use zynq_dnn::nn::spec::by_name;
+use zynq_dnn::nn::{load_weights, save_weights};
+use zynq_dnn::sim::batch::BatchAccelerator;
+use zynq_dnn::sim::pruning::{prune_qnetwork, PruningAccelerator, SparseNetwork};
+use zynq_dnn::sim::resources::{batch_design_resources, pruning_design_resources};
+use zynq_dnn::sim::zynq::XC7020;
+use zynq_dnn::train::prune::apply_pruning;
+use zynq_dnn::train::{evaluate_f32, evaluate_q, TrainConfig, Trainer};
+use zynq_dnn::util::rng::Xoshiro256;
+
+const GLOBAL_FLAGS: &[FlagSpec] = &[
+    FlagSpec { name: "network", takes_value: true, help: "network name (mnist4|mnist8|har4|har6|quickstart)" },
+    FlagSpec { name: "batch", takes_value: true, help: "batch size" },
+    FlagSpec { name: "backend", takes_value: true, help: "pjrt|native|sim-batch|sim-prune" },
+    FlagSpec { name: "weights", takes_value: true, help: "path to a .zdnw weight file" },
+    FlagSpec { name: "out", takes_value: true, help: "output path" },
+    FlagSpec { name: "epochs", takes_value: true, help: "training epochs" },
+    FlagSpec { name: "samples", takes_value: true, help: "training samples" },
+    FlagSpec { name: "prune", takes_value: true, help: "pruning factor (0..1)" },
+    FlagSpec { name: "requests", takes_value: true, help: "requests for the serve demo" },
+    FlagSpec { name: "deadline-us", takes_value: true, help: "batcher deadline" },
+    FlagSpec { name: "quick", takes_value: false, help: "shrink expensive runs" },
+    FlagSpec { name: "artifacts", takes_value: true, help: "artifacts directory" },
+    FlagSpec { name: "listen", takes_value: true, help: "serve: expose the TCP line protocol on this address (e.g. 127.0.0.1:7878)" },
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = parse(argv, GLOBAL_FLAGS)?;
+    if args.has("quick") {
+        std::env::set_var("ZDNN_QUICK", "1");
+    }
+    let cmd = args.positionals.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "train" => train(&args),
+        "infer" => infer(&args),
+        "serve" => serve(&args),
+        "sim" => sim(&args),
+        "bench" => run_bench(&args),
+        _ => {
+            println!("zynq-dnn — FPGA DNN inference throughput reproduction\n");
+            println!("usage: zynq-dnn <info|train|infer|serve|sim|bench> [flags]\n");
+            println!("{}", usage(GLOBAL_FLAGS));
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(zynq_dnn::runtime::default_artifacts_dir)
+}
+
+fn info() -> Result<()> {
+    println!("device: Zynq XC7020 (ZedBoard)");
+    println!(
+        "  DSP {}  BRAM36 {}  LUT {}  FF {}  HP-ports {}",
+        XC7020.dsp_slices, XC7020.bram36, XC7020.luts, XC7020.flip_flops, XC7020.hp_ports
+    );
+    let mem = zynq_dnn::sim::memory::MemoryModel::zedboard();
+    println!(
+        "memory: HP peak {:.2} GB/s, effective {:.2} GB/s (calibrated)",
+        mem.hp_peak / 1e9,
+        mem.effective() / 1e9
+    );
+    println!("batch-design builds:");
+    for &(n, _) in zynq_dnn::sim::resources::PAPER_BATCH_MACS {
+        let r = batch_design_resources(&XC7020, n);
+        println!(
+            "  n={n:<3} m={:<4} dsp={:<4} bram18={:<4} lut={} fits={}",
+            r.macs,
+            r.dsp_slices,
+            r.bram18,
+            r.luts,
+            r.fits(&XC7020)
+        );
+    }
+    let p = pruning_design_resources(&XC7020, 4, 3);
+    println!(
+        "pruning design: m=4 r=3 -> {} MACs, bram18={}, fits={}",
+        p.macs,
+        p.bram18,
+        p.fits(&XC7020)
+    );
+    Ok(())
+}
+
+fn dataset_for(name: &str, n: usize, seed: u64) -> zynq_dnn::data::Dataset {
+    if name == "quickstart" {
+        // quickstart takes 64 features: 8×8 average-pooled synthetic digits
+        let full = mnist::generate(n, seed);
+        let mut x = zynq_dnn::tensor::MatF::zeros(n, 64);
+        for i in 0..n {
+            let row = full.x.row(i);
+            for j in 0..64 {
+                let (cy, cx) = (j / 8, j % 8);
+                let mut sum = 0.0f32;
+                let mut cnt = 0;
+                for py in (cy * 28 / 8)..(((cy + 1) * 28 + 7) / 8).min(28) {
+                    for px in (cx * 28 / 8)..(((cx + 1) * 28 + 7) / 8).min(28) {
+                        sum += row[py * 28 + px];
+                        cnt += 1;
+                    }
+                }
+                x.set(i, j, sum / cnt.max(1) as f32);
+            }
+        }
+        return zynq_dnn::data::Dataset {
+            x,
+            y: full.y,
+            num_classes: full.num_classes,
+        };
+    }
+    if name.starts_with("mnist") {
+        mnist::generate(n, seed)
+    } else {
+        har::generate(n, seed)
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let name = args.get_or("network", "quickstart");
+    let spec = by_name(name)?;
+    let quick = std::env::var("ZDNN_QUICK").is_ok();
+    let samples = args.get_usize("samples", if quick { 400 } else { 1500 })?;
+    let epochs = args.get_usize("epochs", if quick { 3 } else { 8 })?;
+    let prune = args.get_f64("prune", 0.0)?;
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{name}.zdnw")));
+
+    let data = dataset_for(name, samples, 0x5EED);
+    let test = dataset_for(name, samples / 3, 0x7E57);
+    eprintln!(
+        "training {name} ({}) on {} synthetic samples, {} epochs",
+        spec.abbrev(),
+        data.len(),
+        epochs
+    );
+    let mut trainer = Trainer::new(spec, 0xACC);
+    let cfg = TrainConfig {
+        epochs,
+        verbose: true,
+        ..Default::default()
+    };
+    trainer.fit(&data, &cfg)?;
+    let base_f = evaluate_f32(&trainer.to_weights(), &test);
+    let base_q = evaluate_q(&trainer.to_weights(), &test);
+    eprintln!("baseline accuracy: f32 {base_f:.3}, Q7.8 {base_q:.3}");
+
+    if prune > 0.0 {
+        let report = apply_pruning(&mut trainer, prune)?;
+        eprintln!(
+            "pruned to {:.3} (target {prune}); retraining…",
+            report.achieved
+        );
+        trainer.fit(
+            &data,
+            &TrainConfig {
+                epochs: (epochs / 2).max(1),
+                learning_rate: 0.015,
+                verbose: true,
+                ..Default::default()
+            },
+        )?;
+        let acc = evaluate_q(&trainer.to_weights(), &test);
+        eprintln!("pruned accuracy: Q7.8 {acc:.3} (Δ {:+.3})", acc - base_q);
+    }
+
+    save_weights(&out, &trainer.to_weights())?;
+    eprintln!("saved {}", out.display());
+    Ok(())
+}
+
+fn load_or_random(args: &Args, name: &str) -> Result<zynq_dnn::nn::QNetwork> {
+    match args.get("weights") {
+        Some(path) => Ok(load_weights(&PathBuf::from(path))?.quantized()),
+        None => {
+            let spec = by_name(name)?;
+            Ok(bench::random_qnet(&spec, 0xD1CE))
+        }
+    }
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let name = args.get_or("network", "quickstart");
+    let batch = args.get_usize("batch", 1)?;
+    let backend = args.get_or("backend", "native");
+    let net = load_or_random(args, name)?;
+    let factory = EngineFactory {
+        backend: backend.into(),
+        batch,
+        net: net.clone(),
+        artifacts_dir: artifacts_dir(args),
+        native_threads: 1,
+    };
+    let mut engine = factory.build()?;
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut x = zynq_dnn::tensor::MatI::zeros(batch, net.spec.inputs());
+    for v in x.data.iter_mut() {
+        *v = zynq_dnn::fixedpoint::quantize(rng.uniform(-1.0, 1.0));
+    }
+    let (y, secs) = zynq_dnn::util::timed(|| engine.infer(&x));
+    let y = y?;
+    println!(
+        "backend={backend} batch={batch} -> output {:?} in {}",
+        y.shape(),
+        zynq_dnn::util::fmt_time(secs)
+    );
+    if let Some(sim) = engine.simulated_seconds() {
+        println!(
+            "simulated accelerator time: {} ({} per sample)",
+            zynq_dnn::util::fmt_time(sim),
+            zynq_dnn::util::fmt_time(sim / batch as f64)
+        );
+    }
+    for (r, class) in zynq_dnn::nn::forward::argmax_rows(&y)
+        .iter()
+        .enumerate()
+        .take(4)
+    {
+        println!("  sample {r}: class {class}");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let name = args.get_or("network", "quickstart");
+    let batch = args.get_usize("batch", 4)?;
+    let backend = args.get_or("backend", "native");
+    let requests = args.get_usize("requests", 64)?;
+    let deadline = args.get_usize("deadline-us", 2000)? as u64;
+    let net = load_or_random(args, name)?;
+    let s_in = net.spec.inputs();
+
+    let cfg = ServerConfig {
+        network: name.into(),
+        batch,
+        batch_deadline_us: deadline,
+        backend: backend.into(),
+        ..Default::default()
+    };
+    let factory = EngineFactory {
+        backend: backend.into(),
+        batch,
+        net,
+        artifacts_dir: artifacts_dir(args),
+        native_threads: 1,
+    };
+    let server = Server::start(&cfg, factory)?;
+    eprintln!("serving {name} on {backend}, batch {batch}, deadline {deadline} µs");
+
+    if let Some(listen) = args.get("listen") {
+        // TCP mode: block on the line-protocol frontend until Ctrl-C
+        let server = std::sync::Arc::new(server);
+        let fe = zynq_dnn::coordinator::NetFrontend::start(listen, server.clone())?;
+        eprintln!(
+            "listening on {} — protocol: INFER <f32>... | STATS | QUIT",
+            fe.addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let mut rxs = Vec::new();
+    for _ in 0..requests {
+        let input: Vec<i32> = (0..s_in)
+            .map(|_| zynq_dnn::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect();
+        rxs.push(server.submit(input)?.1);
+    }
+    let mut classes = vec![0usize; 10];
+    for rx in rxs {
+        let resp = rx.recv()?;
+        if resp.class < classes.len() {
+            classes[resp.class] += 1;
+        }
+    }
+    let snap = server.metrics.snapshot();
+    println!(
+        "served {} requests in {} batches; occupancy {:.2}; mean latency {}; p95 {}; throughput {:.0}/s",
+        snap.requests,
+        snap.batches,
+        snap.occupancy,
+        zynq_dnn::util::fmt_time(snap.mean_latency_s),
+        zynq_dnn::util::fmt_time(snap.p95_latency_s),
+        snap.throughput
+    );
+    println!("class histogram: {classes:?}");
+    server.shutdown()?;
+    Ok(())
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let name = args.get_or("network", "mnist4");
+    let batch = args.get_usize("batch", 16)?;
+    let prune = args.get_f64("prune", 0.9)?;
+    let net = load_or_random(args, name)?;
+
+    let acc = BatchAccelerator::zedboard(batch);
+    let t = acc.timing_only(&net);
+    println!(
+        "batch design n={batch} (m={}): {} / sample, {} total, {} weight bytes",
+        acc.m,
+        zynq_dnn::util::fmt_time(t.per_sample()),
+        zynq_dnn::util::fmt_time(t.total_seconds),
+        t.total_weight_bytes()
+    );
+    for l in &t.layers {
+        println!(
+            "  layer {}: {}  ({} cycles, {} B, {})",
+            l.layer,
+            zynq_dnn::util::fmt_time(l.seconds),
+            l.compute_cycles,
+            l.weight_bytes,
+            if l.memory_bound { "memory-bound" } else { "compute-bound" }
+        );
+    }
+
+    let pruned = prune_qnetwork(&net, prune);
+    let snet = SparseNetwork::encode(&pruned)?;
+    let pt = PruningAccelerator::zedboard().timing_only(&snet);
+    println!(
+        "pruning design (q target {:.2}, achieved {:.3}): {} / sample, stream {} B",
+        prune,
+        snet.prune_factor(),
+        zynq_dnn::util::fmt_time(pt.per_sample()),
+        snet.stream_bytes(),
+    );
+    Ok(())
+}
+
+fn run_bench(args: &Args) -> Result<()> {
+    let which = args.positionals.get(1).map(String::as_str).unwrap_or("all");
+    let all = which == "all";
+    let mut ran = false;
+    if all || which == "table2" {
+        println!("{}", bench::table2::render(&bench::table2::run()));
+        ran = true;
+    }
+    if all || which == "table3" {
+        println!("{}", bench::table3::render(&bench::table3::run()));
+        ran = true;
+    }
+    if all || which == "table4" {
+        println!("{}", bench::table4::render(&bench::table4::run()));
+        ran = true;
+    }
+    if all || which == "fig7" {
+        println!("{}", bench::fig7::render(&bench::fig7::run()));
+        ran = true;
+    }
+    if all || which == "gops" {
+        println!("{}", bench::gops::render(&bench::gops::run()));
+        ran = true;
+    }
+    if all || which == "nopt" {
+        println!("{}", bench::nopt::render(&bench::nopt::run()));
+        ran = true;
+    }
+    if all || which == "combined" {
+        println!("{}", bench::combined::render(&bench::combined::run()));
+        ran = true;
+    }
+    if all || which == "ablation" {
+        println!("{}", bench::ablation::render(&bench::ablation::run()));
+        ran = true;
+    }
+    if !ran {
+        bail!("unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|ablation|all)");
+    }
+    Ok(())
+}

@@ -1,0 +1,257 @@
+//! Forward passes: f32 (training / software baseline) and the bit-accurate
+//! Q7.8 path that is the golden functional model for both the FPGA
+//! simulator and the PJRT artifacts.
+
+use anyhow::{ensure, Result};
+
+use super::spec::NetworkSpec;
+use crate::tensor::{gemm_f32, gemm_i32, gemm_i32_parallel, MatF, MatI};
+use crate::util::threadpool::ThreadPool;
+
+/// A network ready for Q7.8 inference: spec + quantized weights.
+#[derive(Debug, Clone)]
+pub struct QNetwork {
+    pub spec: NetworkSpec,
+    /// One (s_out × s_in) Q7.8 matrix per layer transition.
+    pub weights: Vec<MatI>,
+}
+
+impl QNetwork {
+    pub fn new(spec: NetworkSpec, weights: Vec<MatI>) -> Result<Self> {
+        let shapes = spec.weight_shapes();
+        ensure!(
+            weights.len() == shapes.len(),
+            "{}: expected {} weight matrices, got {}",
+            spec.name,
+            shapes.len(),
+            weights.len()
+        );
+        for (w, &(o, i)) in weights.iter().zip(shapes.iter()) {
+            ensure!(
+                w.shape() == (o, i),
+                "{}: weight shape {:?} != {:?}",
+                spec.name,
+                w.shape(),
+                (o, i)
+            );
+        }
+        Ok(Self { spec, weights })
+    }
+
+    /// Fraction of zero weights per layer (the measured pruning factors
+    /// `q_prune^(j)` fed to the timing simulator).
+    pub fn prune_factors(&self) -> Vec<f64> {
+        self.weights
+            .iter()
+            .map(|w| {
+                let zeros = w.data.iter().filter(|&&v| v == 0).count();
+                zeros as f64 / w.data.len() as f64
+            })
+            .collect()
+    }
+
+    /// Overall pruning factor (weights-weighted mean, paper §5.6).
+    pub fn overall_prune_factor(&self) -> f64 {
+        let zeros: usize = self
+            .weights
+            .iter()
+            .map(|w| w.data.iter().filter(|&&v| v == 0).count())
+            .sum();
+        zeros as f64 / self.spec.num_parameters() as f64
+    }
+}
+
+/// f32 forward pass: x (n × s_0) → (n × s_{L-1}).
+pub fn forward_f32(spec: &NetworkSpec, weights: &[MatF], x: &MatF) -> Result<MatF> {
+    ensure!(x.cols == spec.inputs(), "input width {} != {}", x.cols, spec.inputs());
+    ensure!(weights.len() == spec.sizes.len() - 1, "weight count mismatch");
+    let mut a = x.clone();
+    for (w, act) in weights.iter().zip(spec.activations.iter()) {
+        let mut z = MatF::zeros(a.rows, w.rows);
+        gemm_f32(&a, w, &mut z);
+        for v in z.data.iter_mut() {
+            *v = act.apply_f32(*v);
+        }
+        a = z;
+    }
+    Ok(a)
+}
+
+/// Bit-accurate Q7.8 forward pass (the golden model): x holds Q7.8 values
+/// in i32 lanes; wrapping i32 accumulation; activation per §5.4.
+pub fn forward_q(net: &QNetwork, x: &MatI) -> Result<MatI> {
+    ensure!(
+        x.cols == net.spec.inputs(),
+        "input width {} != {}",
+        x.cols,
+        net.spec.inputs()
+    );
+    let mut a = x.clone();
+    for (w, act) in net.weights.iter().zip(net.spec.activations.iter()) {
+        let mut z = MatI::zeros(a.rows, w.rows);
+        gemm_i32(&a, w, &mut z);
+        for v in z.data.iter_mut() {
+            *v = act.apply_acc(*v);
+        }
+        a = z;
+    }
+    Ok(a)
+}
+
+/// Parallel variant of [`forward_q`] (bit-identical; wrapping adds are
+/// associative mod 2^32 so row partitioning cannot change results).
+pub fn forward_q_parallel(pool: &ThreadPool, net: &QNetwork, x: &MatI) -> Result<MatI> {
+    ensure!(
+        x.cols == net.spec.inputs(),
+        "input width {} != {}",
+        x.cols,
+        net.spec.inputs()
+    );
+    let mut a = x.clone();
+    for (w, act) in net.weights.iter().zip(net.spec.activations.iter()) {
+        let mut z = MatI::zeros(a.rows, w.rows);
+        if a.rows >= 4 {
+            gemm_i32_parallel(pool, &a, w, &mut z);
+        } else {
+            gemm_i32(&a, w, &mut z);
+        }
+        for v in z.data.iter_mut() {
+            *v = act.apply_acc(*v);
+        }
+        a = z;
+    }
+    Ok(a)
+}
+
+/// Argmax over each output row (classification decision).
+pub fn argmax_rows(m: &MatI) -> Vec<usize> {
+    (0..m.rows)
+        .map(|r| {
+            let row = m.row(r);
+            row.iter()
+                .enumerate()
+                .max_by_key(|&(_, v)| *v)
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Argmax for f32 outputs.
+pub fn argmax_rows_f32(m: &MatF) -> Vec<usize> {
+    (0..m.rows)
+        .map(|r| {
+            let row = m.row(r);
+            let mut best = 0;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quantize_matrix;
+    use crate::nn::spec::quickstart;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_f(rows: usize, cols: usize, scale: f64, rng: &mut Xoshiro256) -> MatF {
+        MatF::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| rng.normal_scaled(0.0, scale) as f32)
+                .collect(),
+        )
+    }
+
+    fn rand_qnet(seed: u64) -> (QNetwork, Vec<MatF>) {
+        let spec = quickstart();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let wf: Vec<MatF> = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| rand_f(o, i, 0.1, &mut rng))
+            .collect();
+        let wq = wf.iter().map(quantize_matrix).collect();
+        (QNetwork::new(spec, wq).unwrap(), wf)
+    }
+
+    #[test]
+    fn qnetwork_validates_shapes() {
+        let spec = quickstart();
+        assert!(QNetwork::new(spec.clone(), vec![]).is_err());
+        let bad = vec![MatI::zeros(3, 3), MatI::zeros(2, 2)];
+        assert!(QNetwork::new(spec, bad).is_err());
+    }
+
+    #[test]
+    fn forward_q_shapes_and_range() {
+        let (net, _) = rand_qnet(1);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let x = quantize_matrix(&rand_f(5, 64, 0.5, &mut rng));
+        let y = forward_q(&net, &x).unwrap();
+        assert_eq!(y.shape(), (5, 10));
+        // output layer is sigmoid: all values in [0, 256]
+        assert!(y.data.iter().all(|&v| (0..=256).contains(&v)));
+    }
+
+    #[test]
+    fn forward_q_parallel_bit_equal() {
+        let pool = ThreadPool::new(3);
+        let (net, _) = rand_qnet(2);
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let x = quantize_matrix(&rand_f(16, 64, 0.5, &mut rng));
+        let a = forward_q(&net, &x).unwrap();
+        let b = forward_q_parallel(&pool, &net, &x).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn forward_f32_close_to_q_path() {
+        // quantization error per layer is bounded; on a small net the two
+        // paths must agree to a few Q7.8 ulps
+        let (net, wf) = rand_qnet(3);
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let xf = rand_f(4, 64, 0.4, &mut rng);
+        let xq = quantize_matrix(&xf);
+        let yf = forward_f32(&net.spec, &wf, &xf).unwrap();
+        let yq = forward_q(&net, &xq).unwrap();
+        for (a, b) in yf.data.iter().zip(yq.data.iter()) {
+            let diff = (f64::from(*a) - f64::from(*b) / 256.0).abs();
+            assert!(diff < 0.05, "f32 {a} vs q {b}");
+        }
+    }
+
+    #[test]
+    fn prune_factor_counts_zeros() {
+        let (mut net, _) = rand_qnet(4);
+        let total = net.weights[0].data.len();
+        for v in net.weights[0].data.iter_mut().take(total / 2) {
+            *v = 0;
+        }
+        let f = net.prune_factors();
+        assert!(f[0] >= 0.5 - 1e-9);
+        assert!(net.overall_prune_factor() > 0.0);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        let m = MatI::from_vec(2, 3, vec![1, 5, 2, 9, 0, 3]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+        let f = MatF::from_vec(1, 3, vec![0.1, 0.9, 0.5]);
+        assert_eq!(argmax_rows_f32(&f), vec![1]);
+    }
+
+    #[test]
+    fn forward_rejects_bad_input_width() {
+        let (net, _) = rand_qnet(5);
+        let x = MatI::zeros(1, 63);
+        assert!(forward_q(&net, &x).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! Fully-connected network substrate: architecture specs (paper notation
+//! `s_0 × s_1 × … × s_{L-1}`), f32 and bit-accurate Q7.8 forward passes,
+//! quantization, and the on-disk weight format.
+
+pub mod forward;
+pub mod spec;
+pub mod weights;
+
+pub use forward::{forward_f32, forward_q, forward_q_parallel, QNetwork};
+pub use spec::{Activation, NetworkSpec, MNIST_4, MNIST_8, HAR_4, HAR_6, QUICKSTART};
+pub use weights::{load_weights, save_weights, NetworkWeights};
+
+use crate::fixedpoint;
+use crate::tensor::{MatF, MatI};
+
+/// Quantize an f32 weight/activation matrix to the Q7.8 grid (i32 lanes).
+pub fn quantize_matrix(m: &MatF) -> MatI {
+    MatI {
+        rows: m.rows,
+        cols: m.cols,
+        data: m.data.iter().map(|&x| fixedpoint::quantize(f64::from(x))).collect(),
+    }
+}
+
+/// Dequantize back to f32 (for reporting / software comparison).
+pub fn dequantize_matrix(m: &MatI) -> MatF {
+    MatF {
+        rows: m.rows,
+        cols: m.cols,
+        data: m.data.iter().map(|&q| fixedpoint::dequantize(q) as f32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let m = MatF::from_vec(2, 3, vec![0.1, -0.7, 1.5, -2.25, 0.0, 100.0]);
+        let q = quantize_matrix(&m);
+        let back = dequantize_matrix(&q);
+        for (a, b) in m.data.iter().zip(back.data.iter()) {
+            assert!((a - b).abs() <= 0.5 / 256.0 + 1e-6);
+        }
+    }
+}

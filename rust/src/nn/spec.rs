@@ -1,0 +1,243 @@
+//! Network architecture specifications — the rust twin of
+//! `python/compile/model.py` (kept in sync by integration tests against the
+//! artifact manifest).
+
+use anyhow::{bail, Result};
+
+/// Activation function selector (codes shared with the python compile path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Identity,
+    Relu,
+    Sigmoid,
+}
+
+impl Activation {
+    pub fn code(self) -> u8 {
+        match self {
+            Activation::Identity => 0,
+            Activation::Relu => 1,
+            Activation::Sigmoid => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => Activation::Identity,
+            1 => Activation::Relu,
+            2 => Activation::Sigmoid,
+            _ => bail!("unknown activation code {code}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Identity => "identity",
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "identity" => Activation::Identity,
+            "relu" => Activation::Relu,
+            "sigmoid" => Activation::Sigmoid,
+            _ => bail!("unknown activation {name:?}"),
+        })
+    }
+
+    /// Apply to a Q15.16 accumulator, producing a Q7.8 activation.
+    #[inline(always)]
+    pub fn apply_acc(self, acc: i32) -> i32 {
+        match self {
+            Activation::Identity => crate::fixedpoint::identity_acc(acc),
+            Activation::Relu => crate::fixedpoint::relu_acc(acc),
+            Activation::Sigmoid => crate::fixedpoint::plan_sigmoid_acc(acc),
+        }
+    }
+
+    /// f32 counterpart used by the training/software path.  The sigmoid here
+    /// is exact; the PLAN approximation error is a hardware property that
+    /// the accuracy evaluation (Table 4 bench) quantifies separately.
+    #[inline(always)]
+    pub fn apply_f32(self, x: f32) -> f32 {
+        match self {
+            Activation::Identity => x,
+            Activation::Relu => x.max(0.0),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+}
+
+/// Architecture of a fully-connected network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkSpec {
+    pub name: String,
+    /// Neurons per layer, `s_0` = inputs, `s_{L-1}` = outputs.
+    pub sizes: Vec<usize>,
+    /// One activation per weight matrix (default: ReLU hidden, sigmoid out).
+    pub activations: Vec<Activation>,
+}
+
+impl NetworkSpec {
+    pub fn new(name: &str, sizes: &[usize]) -> Self {
+        assert!(sizes.len() >= 2, "need at least input and output sizes");
+        let mut activations = vec![Activation::Relu; sizes.len() - 2];
+        activations.push(Activation::Sigmoid);
+        Self {
+            name: name.to_string(),
+            sizes: sizes.to_vec(),
+            activations,
+        }
+    }
+
+    pub fn with_activations(mut self, acts: &[Activation]) -> Result<Self> {
+        if acts.len() != self.sizes.len() - 1 {
+            bail!(
+                "{}: {} activations for {} weight matrices",
+                self.name,
+                acts.len(),
+                self.sizes.len() - 1
+            );
+        }
+        self.activations = acts.to_vec();
+        Ok(self)
+    }
+
+    /// Paper's L: number of layers including the input layer.
+    pub fn num_layers(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Per-matrix (s_out, s_in), paper layout (row i = output neuron i).
+    pub fn weight_shapes(&self) -> Vec<(usize, usize)> {
+        (0..self.sizes.len() - 1)
+            .map(|j| (self.sizes[j + 1], self.sizes[j]))
+            .collect()
+    }
+
+    pub fn num_parameters(&self) -> usize {
+        self.weight_shapes().iter().map(|(o, i)| o * i).sum()
+    }
+
+    /// MAC operations for one sample's inference (one multiply-accumulate
+    /// per weight; the paper counts throughput in these).
+    pub fn macs_per_sample(&self) -> usize {
+        self.num_parameters()
+    }
+
+    /// `784x800x800x10`-style abbreviation used in logs and reports.
+    pub fn abbrev(&self) -> String {
+        self.sizes
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+
+    pub fn inputs(&self) -> usize {
+        self.sizes[0]
+    }
+
+    pub fn outputs(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+}
+
+/// The paper's evaluation networks (Table 2 footnotes a/b).
+pub fn mnist_4() -> NetworkSpec {
+    NetworkSpec::new("mnist4", &[784, 800, 800, 10])
+}
+pub fn mnist_8() -> NetworkSpec {
+    NetworkSpec::new("mnist8", &[784, 800, 800, 800, 800, 800, 800, 10])
+}
+pub fn har_4() -> NetworkSpec {
+    NetworkSpec::new("har4", &[561, 1200, 300, 6])
+}
+pub fn har_6() -> NetworkSpec {
+    NetworkSpec::new("har6", &[561, 2000, 1500, 750, 300, 6])
+}
+pub fn quickstart() -> NetworkSpec {
+    NetworkSpec::new("quickstart", &[64, 48, 10])
+}
+
+/// Constant-style accessors (naming parity with python's model.NETWORKS).
+pub const MNIST_4: fn() -> NetworkSpec = mnist_4;
+pub const MNIST_8: fn() -> NetworkSpec = mnist_8;
+pub const HAR_4: fn() -> NetworkSpec = har_4;
+pub const HAR_6: fn() -> NetworkSpec = har_6;
+pub const QUICKSTART: fn() -> NetworkSpec = quickstart;
+
+/// Look up one of the built-in evaluation networks by name.
+pub fn by_name(name: &str) -> Result<NetworkSpec> {
+    Ok(match name {
+        "mnist4" => mnist_4(),
+        "mnist8" => mnist_8(),
+        "har4" => har_4(),
+        "har6" => har_6(),
+        "quickstart" => quickstart(),
+        _ => bail!("unknown network {name:?} (mnist4|mnist8|har4|har6|quickstart)"),
+    })
+}
+
+/// All four paper networks in Table 2 order.
+pub fn paper_networks() -> Vec<NetworkSpec> {
+    vec![mnist_4(), mnist_8(), har_4(), har_6()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_parameter_counts_table2() {
+        assert_eq!(mnist_4().num_parameters(), 1_275_200);
+        assert_eq!(mnist_8().num_parameters(), 3_835_200);
+        assert_eq!(har_4().num_parameters(), 1_035_000);
+        assert_eq!(har_6().num_parameters(), 5_473_800);
+    }
+
+    #[test]
+    fn default_activations() {
+        let s = mnist_4();
+        assert_eq!(
+            s.activations,
+            vec![Activation::Relu, Activation::Relu, Activation::Sigmoid]
+        );
+    }
+
+    #[test]
+    fn weight_shapes_paper_layout() {
+        assert_eq!(
+            har_4().weight_shapes(),
+            vec![(1200, 561), (300, 1200), (6, 300)]
+        );
+    }
+
+    #[test]
+    fn activation_codes_roundtrip() {
+        for a in [Activation::Identity, Activation::Relu, Activation::Sigmoid] {
+            assert_eq!(Activation::from_code(a.code()).unwrap(), a);
+            assert_eq!(Activation::from_name(a.name()).unwrap(), a);
+        }
+        assert!(Activation::from_code(9).is_err());
+        assert!(Activation::from_name("tanh").is_err());
+    }
+
+    #[test]
+    fn by_name_finds_all() {
+        for n in ["mnist4", "mnist8", "har4", "har6", "quickstart"] {
+            assert_eq!(by_name(n).unwrap().name, n);
+        }
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn with_activations_validates_len() {
+        assert!(quickstart().with_activations(&[Activation::Relu]).is_err());
+        assert!(quickstart()
+            .with_activations(&[Activation::Relu, Activation::Identity])
+            .is_ok());
+    }
+}

@@ -1,0 +1,245 @@
+//! On-disk weight format (`.zdnw`): a simple self-describing binary
+//! container the trainer writes and the serving/bench paths read.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic  b"ZDNW"             4 bytes
+//! version u32                (currently 1)
+//! name_len u32, name utf-8
+//! n_sizes u32, sizes u32[]   architecture s_0 .. s_{L-1}
+//! activations u8[n_sizes-1]  codes (0 id, 1 relu, 2 sigmoid)
+//! per matrix: rows u32, cols u32, data f32[rows*cols]
+//! crc32 u32 of everything after the magic (integrity check)
+//! ```
+//! f32 is the stored format (the trainer's native precision); quantization
+//! to Q7.8 happens at load time so the same file serves software baselines
+//! and the fixed-point engines.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::spec::{Activation, NetworkSpec};
+use crate::tensor::MatF;
+
+const MAGIC: &[u8; 4] = b"ZDNW";
+const VERSION: u32 = 1;
+
+/// A trained network: spec + f32 weights.
+#[derive(Debug, Clone)]
+pub struct NetworkWeights {
+    pub spec: NetworkSpec,
+    pub weights: Vec<MatF>,
+}
+
+impl NetworkWeights {
+    pub fn new(spec: NetworkSpec, weights: Vec<MatF>) -> Result<Self> {
+        let shapes = spec.weight_shapes();
+        ensure!(weights.len() == shapes.len(), "weight count mismatch");
+        for (w, &(o, i)) in weights.iter().zip(shapes.iter()) {
+            ensure!(w.shape() == (o, i), "weight shape mismatch");
+        }
+        Ok(Self { spec, weights })
+    }
+
+    /// Quantize to a Q7.8 inference network.
+    pub fn quantized(&self) -> super::forward::QNetwork {
+        let wq = self.weights.iter().map(super::quantize_matrix).collect();
+        super::forward::QNetwork::new(self.spec.clone(), wq)
+            .expect("shapes validated at construction")
+    }
+}
+
+/// CRC-32 (IEEE), table-less bitwise variant — integrity only, not crypto.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.data.len(), "truncated weight file");
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Serialize to the `.zdnw` container.
+pub fn save_weights(path: &Path, nw: &NetworkWeights) -> Result<()> {
+    let mut body = Vec::new();
+    put_u32(&mut body, VERSION);
+    let name = nw.spec.name.as_bytes();
+    put_u32(&mut body, name.len() as u32);
+    body.extend_from_slice(name);
+    put_u32(&mut body, nw.spec.sizes.len() as u32);
+    for &s in &nw.spec.sizes {
+        put_u32(&mut body, s as u32);
+    }
+    for a in &nw.spec.activations {
+        body.push(a.code());
+    }
+    for w in &nw.weights {
+        put_u32(&mut body, w.rows as u32);
+        put_u32(&mut body, w.cols as u32);
+        for &v in &w.data {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let crc = crc32(&body);
+    let mut f = BufWriter::new(
+        File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&body)?;
+    f.write_all(&crc.to_le_bytes())?;
+    Ok(())
+}
+
+/// Load and validate a `.zdnw` container.
+pub fn load_weights(path: &Path) -> Result<NetworkWeights> {
+    let mut raw = Vec::new();
+    BufReader::new(File::open(path).with_context(|| format!("open {}", path.display()))?)
+        .read_to_end(&mut raw)?;
+    ensure!(raw.len() > 8, "file too small");
+    ensure!(&raw[..4] == MAGIC, "bad magic (not a .zdnw file)");
+    let body = &raw[4..raw.len() - 4];
+    let stored_crc = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    ensure!(crc32(body) == stored_crc, "CRC mismatch: corrupted weight file");
+
+    let mut c = Cursor { data: body, pos: 0 };
+    let version = c.u32()?;
+    ensure!(version == VERSION, "unsupported version {version}");
+    let name_len = c.u32()? as usize;
+    let name = std::str::from_utf8(c.take(name_len)?)
+        .context("name not utf-8")?
+        .to_string();
+    let n_sizes = c.u32()? as usize;
+    ensure!((2..=64).contains(&n_sizes), "implausible layer count {n_sizes}");
+    let sizes: Vec<usize> = (0..n_sizes)
+        .map(|_| c.u32().map(|v| v as usize))
+        .collect::<Result<_>>()?;
+    let mut activations = Vec::with_capacity(n_sizes - 1);
+    for _ in 0..n_sizes - 1 {
+        activations.push(Activation::from_code(c.u8()?)?);
+    }
+    let spec = NetworkSpec {
+        name,
+        sizes,
+        activations,
+    };
+    let mut weights = Vec::new();
+    for &(o, i) in &spec.weight_shapes() {
+        let rows = c.u32()? as usize;
+        let cols = c.u32()? as usize;
+        if (rows, cols) != (o, i) {
+            bail!("stored shape ({rows},{cols}) != spec ({o},{i})");
+        }
+        let bytes = c.take(rows * cols * 4)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+            .collect();
+        weights.push(MatF::from_vec(rows, cols, data));
+    }
+    ensure!(c.pos == body.len(), "trailing bytes in weight file");
+    NetworkWeights::new(spec, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::quickstart;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample() -> NetworkWeights {
+        let spec = quickstart();
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let ws = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i).map(|_| rng.normal_scaled(0.0, 0.2) as f32).collect(),
+                )
+            })
+            .collect();
+        NetworkWeights::new(spec, ws).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("zdnn_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.zdnw");
+        let nw = sample();
+        save_weights(&path, &nw).unwrap();
+        let back = load_weights(&path).unwrap();
+        assert_eq!(back.spec, nw.spec);
+        for (a, b) in back.weights.iter().zip(nw.weights.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("zdnn_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.zdnw");
+        save_weights(&path, &sample()).unwrap();
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        let err = load_weights(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC") || err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("zdnn_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("magic.zdnw");
+        std::fs::write(&path, b"NOPEnope123456789").unwrap();
+        assert!(load_weights(&path).is_err());
+    }
+
+    #[test]
+    fn quantized_matches_spec() {
+        let q = sample().quantized();
+        assert_eq!(q.spec.name, "quickstart");
+        assert_eq!(q.weights.len(), 2);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32 of "123456789" is 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,94 @@
+//! Operation counting and GOps/s reporting (paper §6.1).
+//!
+//! The paper counts MAC operations as two ops (multiply + accumulate) and
+//! reports: batch-16 → 4.48 / 5.00 GOps/s (MNIST-8 / HAR-6), pruning →
+//! 0.8 GOps/s raw, "equivalent" to 2.91 / 3.58 GOps/s dense because the
+//! removed operations still count toward the dense workload.
+
+use crate::nn::spec::NetworkSpec;
+
+/// MACs → ops (multiply + add).
+pub fn macs_to_ops(macs: usize) -> f64 {
+    2.0 * macs as f64
+}
+
+/// GOps/s given per-sample seconds (dense operation count).
+pub fn gops_per_sec(spec: &NetworkSpec, seconds_per_sample: f64) -> f64 {
+    macs_to_ops(spec.macs_per_sample()) / seconds_per_sample / 1e9
+}
+
+/// Raw GOps/s actually executed by a pruned design (only remaining MACs).
+pub fn gops_per_sec_pruned(spec: &NetworkSpec, q_prune: f64, seconds_per_sample: f64) -> f64 {
+    macs_to_ops(spec.macs_per_sample()) * (1.0 - q_prune) / seconds_per_sample / 1e9
+}
+
+/// "Dense-equivalent" GOps/s of a pruned run (the §6.1 comparison number:
+/// what a dense design would need to sustain to match the latency).
+pub fn gops_equivalent(spec: &NetworkSpec, seconds_per_sample: f64) -> f64 {
+    gops_per_sec(spec, seconds_per_sample)
+}
+
+/// Throughput-per-resource ratios used in the related-work comparison.
+#[derive(Debug, Clone)]
+pub struct ResourceEfficiency {
+    pub gops: f64,
+    pub dsp_slices: usize,
+    pub luts: usize,
+    pub ffs: usize,
+}
+
+impl ResourceEfficiency {
+    pub fn gops_per_dsp(&self) -> f64 {
+        self.gops / self.dsp_slices.max(1) as f64
+    }
+    pub fn gops_per_klut(&self) -> f64 {
+        self.gops / (self.luts.max(1) as f64 / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::{har_6, mnist_8};
+
+    #[test]
+    fn ops_counting() {
+        assert_eq!(macs_to_ops(100), 200.0);
+        // MNIST-8 at the paper's 0.768 ms/sample → ~10 GOps... the paper's
+        // 4.48 GOps/s figure implies ~1.71 ms; they count per *batch
+        // pipeline* sustained rate.  We only assert internal consistency:
+        let spec = mnist_8();
+        let g = gops_per_sec(&spec, 1.712e-3);
+        assert!((g - 4.48).abs() < 0.05, "{g}");
+    }
+
+    #[test]
+    fn har6_gops_matches_paper_figure() {
+        // 5.00 GOps/s at the implied sustained rate
+        let spec = har_6();
+        let g = gops_per_sec(&spec, 2.19e-3);
+        assert!((g - 5.0).abs() < 0.05, "{g}");
+    }
+
+    #[test]
+    fn pruned_raw_vs_equivalent() {
+        let spec = har_6();
+        let t = 0.42e-3; // Table 2 pruning HAR-6
+        let raw = gops_per_sec_pruned(&spec, 0.94, t);
+        let equiv = gops_equivalent(&spec, t);
+        assert!(raw < equiv);
+        assert!((equiv / raw - 1.0 / (1.0 - 0.94)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resource_efficiency_ratios() {
+        let e = ResourceEfficiency {
+            gops: 4.48,
+            dsp_slices: 90,
+            luts: 30_000,
+            ffs: 40_000,
+        };
+        assert!((e.gops_per_dsp() - 4.48 / 90.0).abs() < 1e-12);
+        assert!(e.gops_per_klut() > 0.0);
+    }
+}

@@ -1,0 +1,245 @@
+//! §4.4 closed-form throughput model of the FPGA accelerators.
+//!
+//! Cycle count of layer j→j+1 over N samples (general form):
+//! ```text
+//! ceil(s_{j+1}/m) · ceil(s_j·(1−q_prune)/r) · N            (compute)
+//! t_mem = s_{j+1}·s_j·b_w·q_ovh·(1−q_prune)·N / (T_mem·n)  (weights)
+//! t_proc = max(t_calc, t_mem)
+//! n_opt ≈ m·r·f_pu·b_w·q_ovh / T_mem
+//! ```
+
+use crate::nn::spec::NetworkSpec;
+
+/// Hardware configuration of one accelerator build.
+#[derive(Debug, Clone, Copy)]
+pub struct HwConfig {
+    /// Neurons processed in parallel (processing units).
+    pub m: usize,
+    /// Parallel MAC lanes per processing unit.
+    pub r: usize,
+    /// Processing-unit clock (Hz) — the paper uses 100 MHz.
+    pub f_pu: f64,
+    /// Effective memory throughput for weight streaming (bytes/s).
+    pub t_mem_bytes: f64,
+    /// Stored bits per weight (16 for Q7.8).
+    pub b_weight_bits: u32,
+    /// Stream overhead factor (1.0 dense, 4/3 for the pruned tuple format).
+    pub q_overhead: f64,
+    /// Batch size n (weight reuse factor).
+    pub batch: usize,
+}
+
+impl HwConfig {
+    /// The paper's batch-processing design at a given batch size and MAC
+    /// budget (Table 2 lists the m achievable per batch size).
+    pub fn batch_design(m: usize, batch: usize, t_mem_bytes: f64) -> Self {
+        Self {
+            m,
+            r: 1,
+            f_pu: 100e6,
+            t_mem_bytes,
+            b_weight_bits: 16,
+            q_overhead: 1.0,
+            batch,
+        }
+    }
+
+    /// The paper's pruning design: m = 4 coprocessors × r = 3 lanes.
+    pub fn pruning_design(t_mem_bytes: f64) -> Self {
+        Self {
+            m: 4,
+            r: 3,
+            f_pu: 100e6,
+            t_mem_bytes,
+            b_weight_bits: 16,
+            q_overhead: crate::sparse::Q_OVERHEAD,
+            batch: 1,
+        }
+    }
+
+    /// §7's envisaged combined design (m = 6, r = 3, n = 3).
+    pub fn combined_design(t_mem_bytes: f64) -> Self {
+        Self {
+            m: 6,
+            r: 3,
+            f_pu: 100e6,
+            t_mem_bytes,
+            b_weight_bits: 16,
+            q_overhead: crate::sparse::Q_OVERHEAD,
+            batch: 3,
+        }
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.m * self.r
+    }
+}
+
+/// Timing decomposition for one layer transition.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerTiming {
+    /// Compute-side seconds for N samples.
+    pub t_calc: f64,
+    /// Memory-side seconds for N samples.
+    pub t_mem: f64,
+}
+
+impl LayerTiming {
+    /// Compute and transfer overlap; the max dominates (§4.4).
+    pub fn t_proc(&self) -> f64 {
+        self.t_calc.max(self.t_mem)
+    }
+
+    pub fn memory_bound(&self) -> bool {
+        self.t_mem > self.t_calc
+    }
+}
+
+/// §4.4 cycle count for layer j→j+1 (exact integer form, batch design adds
+/// the m·c_a activation drain which is negligible and included by the
+/// simulator instead).
+pub fn layer_cycles(cfg: &HwConfig, s_out: usize, s_in: usize, q_prune: f64, n_samples: usize) -> u64 {
+    let sections = s_out.div_ceil(cfg.m) as u64;
+    let remaining = ((s_in as f64) * (1.0 - q_prune)).ceil() as usize;
+    let words = remaining.div_ceil(cfg.r) as u64;
+    sections * words * n_samples as u64
+}
+
+/// §4.4 timing for one layer transition over `n_samples` (N in the paper).
+pub fn layer_timing(
+    cfg: &HwConfig,
+    s_out: usize,
+    s_in: usize,
+    q_prune: f64,
+    n_samples: usize,
+) -> LayerTiming {
+    let cycles = layer_cycles(cfg, s_out, s_in, q_prune, n_samples);
+    let t_calc = cycles as f64 / cfg.f_pu;
+    let weight_bytes = (s_out as f64)
+        * (s_in as f64)
+        * (f64::from(cfg.b_weight_bits) / 8.0)
+        * cfg.q_overhead
+        * (1.0 - q_prune);
+    // weights are re-streamed once per batch of n samples
+    let t_mem = weight_bytes * (n_samples as f64 / cfg.batch as f64) / cfg.t_mem_bytes;
+    LayerTiming { t_calc, t_mem }
+}
+
+/// Whole-network processing time for N samples; per-layer q_prune may be
+/// empty (dense) or one factor per weight matrix.
+pub fn network_time(cfg: &HwConfig, spec: &NetworkSpec, q_prune: &[f64], n_samples: usize) -> f64 {
+    let shapes = spec.weight_shapes();
+    assert!(q_prune.is_empty() || q_prune.len() == shapes.len());
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(l, &(o, i))| {
+            let q = q_prune.get(l).copied().unwrap_or(0.0);
+            layer_timing(cfg, o, i, q, n_samples).t_proc()
+        })
+        .sum()
+}
+
+/// Per-sample seconds at steady state (N → one full batch).
+pub fn per_sample_time(cfg: &HwConfig, spec: &NetworkSpec, q_prune: &[f64]) -> f64 {
+    network_time(cfg, spec, q_prune, cfg.batch) / cfg.batch as f64
+}
+
+/// §4.4 optimal batch size: t_calc = t_mem.
+pub fn n_opt(cfg: &HwConfig) -> f64 {
+    (cfg.m * cfg.r) as f64 * cfg.f_pu * (f64::from(cfg.b_weight_bits) / 8.0) * cfg.q_overhead
+        / cfg.t_mem_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::{har_6, mnist_4};
+
+    /// The calibrated ZedBoard effective weight-stream throughput used
+    /// throughout the benches (see sim::memory for the derivation).
+    const T_MEM: f64 = 1.44e9;
+
+    #[test]
+    fn paper_n_opt_about_12_66() {
+        // §6.1: n_opt = 12.66 for m = 114, f_pu = 100 MHz, Q7.8.
+        // Inverting the paper's figure gives T_mem = 114·1e8·2/12.66 ≈ 1.80 GB/s.
+        let cfg = HwConfig::batch_design(114, 1, 114.0 * 100e6 * 2.0 / 12.66);
+        assert!((n_opt(&cfg) - 12.66).abs() < 0.01);
+    }
+
+    #[test]
+    fn t_proc_is_max_and_continuous() {
+        let cfg = HwConfig::batch_design(114, 8, T_MEM);
+        let t = layer_timing(&cfg, 800, 784, 0.0, 8);
+        assert!(t.t_proc() >= t.t_calc && t.t_proc() >= t.t_mem);
+        assert_eq!(t.t_proc(), t.t_calc.max(t.t_mem));
+    }
+
+    #[test]
+    fn batch_reduces_memory_time_not_compute() {
+        let c1 = HwConfig::batch_design(114, 1, T_MEM);
+        let c8 = HwConfig::batch_design(114, 8, T_MEM);
+        let t1 = layer_timing(&c1, 800, 784, 0.0, 8);
+        let t8 = layer_timing(&c8, 800, 784, 0.0, 8);
+        assert!((t1.t_calc - t8.t_calc).abs() < 1e-12);
+        assert!((t1.t_mem / t8.t_mem - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pruning_reduces_both_sides() {
+        let cfg = HwConfig::pruning_design(T_MEM);
+        let dense = layer_timing(&cfg, 2000, 561, 0.0, 1);
+        let pruned = layer_timing(&cfg, 2000, 561, 0.9, 1);
+        assert!(pruned.t_calc < dense.t_calc * 0.2);
+        assert!(pruned.t_mem < dense.t_mem * 0.2);
+    }
+
+    #[test]
+    fn small_batch_is_memory_bound_large_batch_compute_bound() {
+        // the n_opt crossover property that defines the paper's trade-off
+        let cfg1 = HwConfig::batch_design(114, 1, T_MEM);
+        let cfg32 = HwConfig::batch_design(114, 32, T_MEM);
+        assert!(layer_timing(&cfg1, 800, 784, 0.0, 1).memory_bound());
+        assert!(!layer_timing(&cfg32, 800, 784, 0.0, 32).memory_bound());
+        let opt = n_opt(&cfg1);
+        assert!(opt > 1.0 && opt < 32.0, "n_opt {opt} outside sweep");
+    }
+
+    #[test]
+    fn layer_cycles_matches_paper_formula() {
+        let cfg = HwConfig::batch_design(114, 1, T_MEM);
+        // ceil(800/114)·ceil(784/1)·1 = 8·784
+        assert_eq!(layer_cycles(&cfg, 800, 784, 0.0, 1), 8 * 784);
+        let p = HwConfig::pruning_design(T_MEM);
+        // ceil(800/4)·ceil(784·0.25/3) = 200·ceil(196/3) = 200·66
+        assert_eq!(layer_cycles(&p, 800, 784, 0.75, 1), 200 * 66);
+    }
+
+    #[test]
+    fn network_time_sums_layers() {
+        let cfg = HwConfig::batch_design(114, 16, T_MEM);
+        let spec = mnist_4();
+        let total = network_time(&cfg, &spec, &[], 16);
+        let by_hand: f64 = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| layer_timing(&cfg, o, i, 0.0, 16).t_proc())
+            .sum();
+        assert!((total - by_hand).abs() < 1e-15);
+    }
+
+    #[test]
+    fn har6_pruned_faster_than_batch16() {
+        // Table 2's headline: HAR-6 at q=0.94 (12 MACs) beats batch-16 (90)
+        let batch16 = HwConfig::batch_design(90, 16, T_MEM);
+        let pruning = HwConfig::pruning_design(T_MEM);
+        let spec = har_6();
+        let t_batch = per_sample_time(&batch16, &spec, &[]);
+        let t_prune = per_sample_time(&pruning, &spec, &[0.94; 5]);
+        assert!(
+            t_prune < t_batch,
+            "pruned {t_prune} should beat batch {t_batch}"
+        );
+    }
+}

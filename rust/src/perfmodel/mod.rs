@@ -1,0 +1,18 @@
+//! Analytic performance models.
+//!
+//! * [`hw`] — the paper's §4.4 throughput formulas for the FPGA designs:
+//!   `t_calc`, `t_mem`, `t_proc = max(...)`, and the optimal batch size
+//!   `n_opt`.  These are the closed forms the cycle simulator is validated
+//!   against (integration tests assert agreement within tolerance).
+//! * [`machine`] — cache-aware roofline models of the paper's three
+//!   software platforms (Table 1), regenerating the software rows of
+//!   Table 2 without the original hardware.
+//! * [`gops`] — operation counting and GOps/s reporting (§6.1).
+
+pub mod gops;
+pub mod hw;
+pub mod machine;
+
+pub use gops::{gops_per_sec, macs_to_ops};
+pub use hw::{HwConfig, LayerTiming};
+pub use machine::{MachineModel, ARM_CORTEX_A9, I7_4790, I7_5600U};

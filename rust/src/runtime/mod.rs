@@ -1,0 +1,309 @@
+//! PJRT runtime (the AOT bridge): loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the PJRT CPU client, and
+//! executes them from the serving hot path.  Python never runs here.
+//!
+//! Thread model: the `xla` crate's handles wrap raw pointers (not `Send`),
+//! so one [`Runtime`] lives on one engine thread; the coordinator feeds it
+//! batches through channels (see `coordinator::server`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::json::{self, Json};
+use crate::nn::spec::{Activation, NetworkSpec};
+use crate::tensor::MatI;
+
+/// One artifact in the manifest: a lowered (network, batch) variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub network: String,
+    pub architecture: Vec<usize>,
+    pub activations: Vec<String>,
+    pub batch: usize,
+    pub file: String,
+    pub input_shape: (usize, usize),
+    pub weight_shapes: Vec<(usize, usize)>,
+    pub output_shape: (usize, usize),
+    pub num_parameters: usize,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape2 = |v: &Json| -> Result<(usize, usize)> {
+            let s = v.as_usize_vec()?;
+            ensure!(s.len() == 2, "expected rank-2 shape, got {s:?}");
+            Ok((s[0], s[1]))
+        };
+        Ok(Self {
+            network: j.req("network")?.as_str()?.to_string(),
+            architecture: j.req("architecture")?.as_usize_vec()?,
+            activations: j.req("activations")?.as_str_vec()?,
+            batch: j.req("batch")?.as_usize()?,
+            file: j.req("file")?.as_str()?.to_string(),
+            input_shape: shape2(j.req("input_shape")?)?,
+            weight_shapes: j
+                .req("weight_shapes")?
+                .as_arr()?
+                .iter()
+                .map(shape2)
+                .collect::<Result<_>>()?,
+            output_shape: shape2(j.req("output_shape")?)?,
+            num_parameters: j.req("num_parameters")?.as_usize()?,
+        })
+    }
+
+    /// The rust-side spec equivalent (cross-checked against nn::spec).
+    pub fn spec(&self) -> Result<NetworkSpec> {
+        let acts = self
+            .activations
+            .iter()
+            .map(|a| Activation::from_name(a))
+            .collect::<Result<Vec<_>>>()?;
+        NetworkSpec::new(&self.network, &self.architecture).with_activations(&acts)
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = json::parse(&text)?;
+        let version = j.req("version")?.as_usize()?;
+        ensure!(version == 2, "manifest version {version} unsupported (expected 2)");
+        let entries = j
+            .req("entries")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(!entries.is_empty(), "manifest has no entries");
+        Ok(Self {
+            version,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn find(&self, network: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.network == network && e.batch == batch)
+    }
+
+    /// Batch sizes available for a network (sorted).
+    pub fn batches_for(&self, network: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.network == network)
+            .map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn networks(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.iter().map(|e| e.network.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// A compiled (network, batch) executable.
+pub struct CompiledModel {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+/// Network weights pinned as device buffers — uploaded once, reused across
+/// executions.  This is the hot-path optimization recorded in
+/// EXPERIMENTS.md §Perf: marshalling megabytes of weight literals per
+/// `execute` dominated the serving latency by >10×.
+pub struct BoundWeights {
+    buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl CompiledModel {
+    /// Execute one batch.  `x` is (batch × s_0) Q7.8/i32; `weights` are the
+    /// network's quantized matrices (passed as runtime parameters, so the
+    /// same executable serves any trained/pruned weight set).
+    pub fn execute(&self, x: &MatI, weights: &[MatI]) -> Result<MatI> {
+        let (bn, bs) = self.entry.input_shape;
+        ensure!(
+            x.shape() == (bn, bs),
+            "input shape {:?} != artifact {:?}",
+            x.shape(),
+            (bn, bs)
+        );
+        ensure!(
+            weights.len() == self.entry.weight_shapes.len(),
+            "expected {} weight matrices",
+            self.entry.weight_shapes.len()
+        );
+        let mut literals = Vec::with_capacity(1 + weights.len());
+        literals.push(
+            xla::Literal::vec1(&x.data).reshape(&[x.rows as i64, x.cols as i64])?,
+        );
+        for (w, &(o, i)) in weights.iter().zip(self.entry.weight_shapes.iter()) {
+            ensure!(w.shape() == (o, i), "weight shape {:?} != {:?}", w.shape(), (o, i));
+            literals.push(xla::Literal::vec1(&w.data).reshape(&[o as i64, i as i64])?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let data = result.to_vec::<i32>()?;
+        let (on, oc) = self.entry.output_shape;
+        ensure!(data.len() == on * oc, "output length {} != {}", data.len(), on * oc);
+        Ok(MatI::from_vec(on, oc, data))
+    }
+
+    /// Upload the weight matrices to device buffers once.
+    pub fn bind_weights(&self, weights: &[MatI]) -> Result<BoundWeights> {
+        ensure!(
+            weights.len() == self.entry.weight_shapes.len(),
+            "expected {} weight matrices",
+            self.entry.weight_shapes.len()
+        );
+        let mut buffers = Vec::with_capacity(weights.len());
+        for (w, &(o, i)) in weights.iter().zip(self.entry.weight_shapes.iter()) {
+            ensure!(w.shape() == (o, i), "weight shape {:?} != {:?}", w.shape(), (o, i));
+            buffers.push(
+                self.client
+                    .buffer_from_host_buffer::<i32>(&w.data, &[o, i], None)?,
+            );
+        }
+        Ok(BoundWeights { buffers })
+    }
+
+    /// Execute against pre-bound weights: only the activation batch crosses
+    /// the host/device boundary per call.
+    pub fn execute_bound(&self, x: &MatI, weights: &BoundWeights) -> Result<MatI> {
+        let (bn, bs) = self.entry.input_shape;
+        ensure!(
+            x.shape() == (bn, bs),
+            "input shape {:?} != artifact {:?}",
+            x.shape(),
+            (bn, bs)
+        );
+        let x_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&x.data, &[x.rows, x.cols], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weights.buffers.len());
+        args.push(&x_buf);
+        args.extend(weights.buffers.iter());
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let data = result.to_vec::<i32>()?;
+        let (on, oc) = self.entry.output_shape;
+        ensure!(data.len() == on * oc, "output length {} != {}", data.len(), on * oc);
+        Ok(MatI::from_vec(on, oc, data))
+    }
+}
+
+/// The PJRT runtime: CPU client + compile cache over the manifest.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<(String, usize), std::rc::Rc<CompiledModel>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            manifest,
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) a (network, batch) artifact.
+    pub fn load(&mut self, network: &str, batch: usize) -> Result<std::rc::Rc<CompiledModel>> {
+        let key = (network.to_string(), batch);
+        if let Some(m) = self.cache.get(&key) {
+            return Ok(m.clone());
+        }
+        let Some(entry) = self.manifest.find(network, batch).cloned() else {
+            bail!(
+                "no artifact for {network} at batch {batch}; available: {:?}",
+                self.manifest.batches_for(network)
+            );
+        };
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", entry.file))?;
+        let model = std::rc::Rc::new(CompiledModel {
+            entry,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.insert(key, model.clone());
+        Ok(model)
+    }
+}
+
+/// Locate the artifacts directory: `$ZDNN_ARTIFACTS`, else `./artifacts`
+/// relative to the workspace root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("ZDNN_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_loads_and_indexes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.networks().contains(&"quickstart".to_string()));
+        let e = m.find("quickstart", 1).expect("quickstart b1");
+        assert_eq!(e.architecture, vec![64, 48, 10]);
+        assert_eq!(e.weight_shapes, vec![(48, 64), (10, 48)]);
+        let spec = e.spec().unwrap();
+        assert_eq!(spec.num_parameters(), e.num_parameters);
+        assert!(m.find("quickstart", 999).is_none());
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent-zdnn")).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("make artifacts"), "{chain}");
+    }
+}

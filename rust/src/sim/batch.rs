@@ -1,0 +1,332 @@
+//! Batch-processing datapath simulator (paper §5.5, Figure 5).
+//!
+//! Functional + timing model of the design: per layer, the weight matrix is
+//! walked *section by section* (m neurons); each section's weights are
+//! streamed once into the weight FIFOs and reused across all n samples of
+//! the batch (time-division multiplexing).  The batch memory's BRAM
+//! crossbar swaps input/output roles between layers.
+//!
+//! Timing (two clock domains, §6):
+//! * compute: one MAC per cycle per unit → a section costs `s_j · n` PU
+//!   cycles (r = 1), plus the pipeline's activation drain `m · c_a` once
+//!   per layer;
+//! * memory: the *next* section's weights stream during the current
+//!   section's compute (double-buffered FIFOs); a section stall occurs when
+//!   the stream is slower than the compute — `t_sec = max(calc, mem)`;
+//!   the first section of each layer cannot be hidden (prologue);
+//! * software: the ARM cores copy inputs/outputs and re-arm the control
+//!   unit per sample ([`memory::BATCH_SAMPLE_OVERHEAD`], calibrated).
+//!
+//! The functional path computes every neuron exactly as the hardware would
+//! (wrapping Q7.8 MACs, §5.4 activations) and must agree bit-for-bit with
+//! `nn::forward_q` and the PJRT artifacts (integration-tested).
+
+use anyhow::{ensure, Result};
+
+use super::memory::{MemoryModel, BATCH_SAMPLE_OVERHEAD};
+use super::resources::batch_design_macs;
+use super::zynq::{Clocks, Device, PAPER_CLOCKS, XC7020};
+use super::{LayerReport, TimingReport};
+use crate::nn::forward::QNetwork;
+use crate::tensor::MatI;
+
+/// Activation-function latency in PU cycles (§5.5: ReLU and sigmoid are
+/// single-cycle).
+pub const C_A: u64 = 1;
+
+/// One configured batch-design accelerator.
+#[derive(Debug, Clone)]
+pub struct BatchAccelerator {
+    pub device: Device,
+    pub clocks: Clocks,
+    pub memory: MemoryModel,
+    /// Hardware batch size n (fixed per bitstream).
+    pub batch: usize,
+    /// Parallel processing units m (from the resource model).
+    pub m: usize,
+    /// Per-sample software overhead (input/output copies + control).
+    pub sample_overhead: f64,
+}
+
+impl BatchAccelerator {
+    /// The paper's build for a given batch size on the ZedBoard.
+    pub fn zedboard(batch: usize) -> Self {
+        let device = XC7020;
+        Self {
+            m: batch_design_macs(&device, batch),
+            device,
+            clocks: PAPER_CLOCKS,
+            memory: MemoryModel::zedboard(),
+            batch,
+            sample_overhead: BATCH_SAMPLE_OVERHEAD,
+        }
+    }
+
+    /// Simulate one full batch inference: returns the bit-accurate outputs
+    /// and the timing report.  `x` must have exactly `batch` rows.
+    pub fn run(&self, net: &QNetwork, x: &MatI) -> Result<(MatI, TimingReport)> {
+        ensure!(
+            x.rows == self.batch,
+            "batch accelerator built for n={}, got {} samples",
+            self.batch,
+            x.rows
+        );
+        ensure!(
+            x.cols == net.spec.inputs(),
+            "input width {} != {}",
+            x.cols,
+            net.spec.inputs()
+        );
+        let n = self.batch;
+        let mut layers = Vec::with_capacity(net.weights.len());
+        let mut total = 0.0f64;
+
+        // ---- per-sample software overhead (input copy, control arm)
+        total += self.sample_overhead * n as f64;
+
+        let mut act = x.clone();
+        for (j, (w, actfn)) in net
+            .weights
+            .iter()
+            .zip(net.spec.activations.iter())
+            .enumerate()
+        {
+            let s_in = w.cols;
+            let s_out = w.rows;
+            let sections = s_out.div_ceil(self.m);
+            let mut out = MatI::zeros(n, s_out);
+
+            // ---- timing: double-buffered section pipeline
+            let calc_per_section = (s_in * n) as u64; // r = 1, one MAC/cycle
+            let calc_sec = calc_per_section as f64 / self.clocks.f_pu;
+            let mut layer_seconds = 0.0f64;
+            let mut weight_bytes = 0u64;
+            let mut memory_bound = false;
+            for s in 0..sections {
+                let rows = (s_out - s * self.m).min(self.m);
+                let bytes = (rows * s_in * 2) as u64; // Q7.8 = 16 bit
+                weight_bytes += bytes;
+                let mem_sec = self.memory.stream_time(bytes);
+                if s == 0 {
+                    // prologue: first section's weights cannot be hidden
+                    layer_seconds += mem_sec + calc_sec;
+                } else {
+                    // steady state: compute overlaps the next stream
+                    if mem_sec > calc_sec {
+                        memory_bound = true;
+                    }
+                    layer_seconds += mem_sec.max(calc_sec);
+                }
+
+                // ---- functional: TDM over samples with the resident section
+                for i in 0..n {
+                    let xr = act.row(i);
+                    for (ri, neuron) in (s * self.m..s * self.m + rows).enumerate() {
+                        let wr = w.row(neuron);
+                        let mut acc = 0i32;
+                        for k in 0..s_in {
+                            acc = crate::fixedpoint::mac(acc, wr[k], xr[k]);
+                        }
+                        let _ = ri;
+                        out.set(i, neuron, actfn.apply_acc(acc));
+                    }
+                }
+            }
+            // activation drain of the last section (§5.5: m · c_a)
+            layer_seconds += (self.m as u64 * C_A) as f64 / self.clocks.f_pu;
+
+            let compute_cycles = sections as u64 * calc_per_section + self.m as u64 * C_A;
+            layers.push(LayerReport {
+                layer: j,
+                seconds: layer_seconds,
+                compute_cycles,
+                weight_bytes,
+                memory_bound,
+            });
+            total += layer_seconds;
+            act = out;
+        }
+
+        Ok((
+            act,
+            TimingReport {
+                total_seconds: total,
+                layers,
+                samples: n,
+            },
+        ))
+    }
+
+    /// Timing-only fast path (no functional compute) — used by the table
+    /// benches where the functional result is already verified elsewhere.
+    pub fn timing_only(&self, net: &QNetwork) -> TimingReport {
+        let n = self.batch;
+        let mut layers = Vec::with_capacity(net.weights.len());
+        let mut total = self.sample_overhead * n as f64;
+        for (j, w) in net.weights.iter().enumerate() {
+            let s_in = w.cols;
+            let s_out = w.rows;
+            let sections = s_out.div_ceil(self.m);
+            let calc_per_section = (s_in * n) as u64;
+            let calc_sec = calc_per_section as f64 / self.clocks.f_pu;
+            let mut layer_seconds = 0.0;
+            let mut weight_bytes = 0u64;
+            let mut memory_bound = false;
+            for s in 0..sections {
+                let rows = (s_out - s * self.m).min(self.m);
+                let bytes = (rows * s_in * 2) as u64;
+                weight_bytes += bytes;
+                let mem_sec = self.memory.stream_time(bytes);
+                if s == 0 {
+                    layer_seconds += mem_sec + calc_sec;
+                } else {
+                    memory_bound |= mem_sec > calc_sec;
+                    layer_seconds += mem_sec.max(calc_sec);
+                }
+            }
+            layer_seconds += (self.m as u64 * C_A) as f64 / self.clocks.f_pu;
+            layers.push(LayerReport {
+                layer: j,
+                seconds: layer_seconds,
+                compute_cycles: sections as u64 * calc_per_section + self.m as u64 * C_A,
+                weight_bytes,
+                memory_bound,
+            });
+            total += layer_seconds;
+        }
+        TimingReport {
+            total_seconds: total,
+            layers,
+            samples: n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::{mnist_4, quickstart};
+    use crate::nn::{forward_q, quantize_matrix};
+    use crate::tensor::MatF;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_qnet(spec: crate::nn::spec::NetworkSpec, seed: u64) -> QNetwork {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let ws = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                quantize_matrix(&MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i).map(|_| rng.normal_scaled(0.0, 0.1) as f32).collect(),
+                ))
+            })
+            .collect();
+        QNetwork::new(spec, ws).unwrap()
+    }
+
+    fn rand_input(n: usize, cols: usize, seed: u64) -> MatI {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        quantize_matrix(&MatF::from_vec(
+            n,
+            cols,
+            (0..n * cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        ))
+    }
+
+    #[test]
+    fn functional_bit_equal_to_golden_forward() {
+        let net = rand_qnet(quickstart(), 1);
+        for batch in [1, 4, 16] {
+            let acc = BatchAccelerator::zedboard(batch);
+            let x = rand_input(batch, 64, 2);
+            let (y, _) = acc.run(&net, &x).unwrap();
+            let golden = forward_q(&net, &x).unwrap();
+            assert_eq!(y.data, golden.data, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_batch_size() {
+        let net = rand_qnet(quickstart(), 3);
+        let acc = BatchAccelerator::zedboard(4);
+        assert!(acc.run(&net, &rand_input(2, 64, 1)).is_err());
+    }
+
+    #[test]
+    fn timing_only_matches_run_timing() {
+        let net = rand_qnet(quickstart(), 4);
+        let acc = BatchAccelerator::zedboard(4);
+        let x = rand_input(4, 64, 5);
+        let (_, t_full) = acc.run(&net, &x).unwrap();
+        let t_fast = acc.timing_only(&net);
+        assert!((t_full.total_seconds - t_fast.total_seconds).abs() < 1e-12);
+        assert_eq!(t_full.total_weight_bytes(), t_fast.total_weight_bytes());
+    }
+
+    #[test]
+    fn per_sample_time_improves_with_batch_then_degrades() {
+        // Table 2's qualitative arc: 1 → 16 improves, 32 (fewer MACs) worse
+        let net = rand_qnet(mnist_4(), 5);
+        let t = |n: usize| BatchAccelerator::zedboard(n).timing_only(&net).per_sample();
+        let t1 = t(1);
+        let t4 = t(4);
+        let t16 = t(16);
+        let t32 = t(32);
+        assert!(t4 < t1, "batch 4 {t4} !< batch 1 {t1}");
+        assert!(t16 < t4, "batch 16 {t16} !< batch 4 {t4}");
+        assert!(t32 > t16, "batch 32 {t32} !> batch 16 {t16}");
+    }
+
+    #[test]
+    fn batch1_memory_bound_batch32_not() {
+        let net = rand_qnet(mnist_4(), 6);
+        let t1 = BatchAccelerator::zedboard(1).timing_only(&net);
+        let t32 = BatchAccelerator::zedboard(32).timing_only(&net);
+        assert!(t1.layers[0].memory_bound);
+        assert!(!t32.layers[0].memory_bound);
+    }
+
+    #[test]
+    fn weight_traffic_independent_of_batch() {
+        // the whole point of batch processing: same weights, more samples
+        let net = rand_qnet(mnist_4(), 7);
+        let b1 = BatchAccelerator::zedboard(1).timing_only(&net);
+        let b16 = BatchAccelerator::zedboard(16).timing_only(&net);
+        assert_eq!(b1.total_weight_bytes(), b16.total_weight_bytes());
+        // = 2 bytes per parameter
+        assert_eq!(b1.total_weight_bytes(), 2 * 1_275_200);
+    }
+
+    #[test]
+    fn sim_close_to_closed_form_model() {
+        // §4.4 formula vs simulator (simulator adds prologue/drain/overhead)
+        let net = rand_qnet(mnist_4(), 8);
+        let acc = BatchAccelerator::zedboard(16);
+        let sim = acc.timing_only(&net).per_sample();
+        let cfg = crate::perfmodel::hw::HwConfig::batch_design(
+            acc.m,
+            16,
+            acc.memory.effective(),
+        );
+        let formula = crate::perfmodel::hw::per_sample_time(&cfg, &net.spec, &[]);
+        // simulator ≥ formula (overheads), within 3×
+        assert!(sim >= formula, "sim {sim} < formula {formula}");
+        assert!(sim < formula * 3.0, "sim {sim} vs formula {formula}");
+    }
+
+    #[test]
+    fn table2_mnist4_batch1_within_25pct_of_paper() {
+        let net = rand_qnet(mnist_4(), 9);
+        let ms = BatchAccelerator::zedboard(1).timing_only(&net).per_sample() * 1e3;
+        assert!((ms / 1.543 - 1.0).abs() < 0.25, "{ms} ms vs paper 1.543 ms");
+    }
+
+    #[test]
+    fn table2_mnist4_batch16_within_35pct_of_paper() {
+        let net = rand_qnet(mnist_4(), 10);
+        let ms = BatchAccelerator::zedboard(16).timing_only(&net).per_sample() * 1e3;
+        assert!((ms / 0.285 - 1.0).abs() < 0.35, "{ms} ms vs paper 0.285 ms");
+    }
+}

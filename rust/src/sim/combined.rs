@@ -1,0 +1,193 @@
+//! §7's envisaged combined design: batch processing *and* pruning in one
+//! datapath — m = 6 processing units × r = 3 tuple lanes, batch n = 3
+//! (the largest configuration whose replicated I/O memories still fit the
+//! XC7020).  The paper projects a 6-layer-HAR inference time of ~186 µs,
+//! over 6× faster than the fastest x86 system; this module implements that
+//! projection as a simulator so the ablation bench can sweep (m, r, n).
+//!
+//! Timing semantics: like the pruning datapath (per-coprocessor word
+//! streams, §5.6) but each streamed weight word is reused across the n
+//! batch samples (×n compute cycles per word, ÷n weight traffic per
+//! sample, §5.5).
+
+use anyhow::{ensure, Result};
+
+use super::memory::{MemoryModel, BATCH_SAMPLE_OVERHEAD};
+use super::pruning::SparseNetwork;
+use super::zynq::{Clocks, Device, PAPER_CLOCKS, XC7020};
+use super::{LayerReport, TimingReport};
+use crate::sparse::TUPLES_PER_WORD;
+use crate::tensor::MatI;
+
+/// Combined batch + pruning accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct CombinedAccelerator {
+    pub device: Device,
+    pub clocks: Clocks,
+    pub memory: MemoryModel,
+    pub m: usize,
+    pub r: usize,
+    pub batch: usize,
+    pub sample_overhead: f64,
+}
+
+impl CombinedAccelerator {
+    /// The paper's §7 design point.
+    pub fn zedboard() -> Self {
+        Self::with_params(6, 3, 3)
+    }
+
+    pub fn with_params(m: usize, r: usize, batch: usize) -> Self {
+        Self {
+            device: XC7020,
+            clocks: PAPER_CLOCKS,
+            memory: MemoryModel::zedboard(),
+            m,
+            r,
+            batch: batch.max(1),
+            sample_overhead: BATCH_SAMPLE_OVERHEAD,
+        }
+    }
+
+    /// BRAM feasibility: the I/O memories are replicated m·r times *and*
+    /// hold n samples each (§7's "problem might be the used memory
+    /// resources").
+    pub fn bram18_needed(&self, max_layer_width: usize) -> usize {
+        let act_brams_per_copy =
+            (max_layer_width * 2).div_ceil(18 * 1024 / 8).max(1);
+        // input+output hierarchies, m·r copies, n samples each
+        2 * self.m * self.r * self.batch * act_brams_per_copy + 2 * self.m
+    }
+
+    pub fn fits(&self, max_layer_width: usize) -> bool {
+        self.bram18_needed(max_layer_width) <= self.device.bram18()
+            && self.m * self.r <= self.device.dsp_slices
+    }
+
+    /// Timing for one *batch* of n samples (per-sample = total / n).
+    pub fn timing(&self, net: &SparseNetwork) -> TimingReport {
+        let n = self.batch;
+        let mut total = self.sample_overhead * n as f64;
+        let mut layers = Vec::with_capacity(net.layers.len());
+        for (j, sm) in net.layers.iter().enumerate() {
+            let mut cop_cycles = vec![0u64; self.m];
+            for (k, row) in sm.rows.iter().enumerate() {
+                if row.len > 0 {
+                    let words = row.len.div_ceil(TUPLES_PER_WORD) as u64;
+                    // each word's weights are applied to all n samples
+                    cop_cycles[k % self.m] += words * n as u64 + 1;
+                }
+            }
+            let calc_sec =
+                cop_cycles.iter().copied().max().unwrap_or(0) as f64 / self.clocks.f_pu;
+            // weights streamed once per batch of n samples
+            let bytes = sm.stream_bytes() as u64;
+            let mem_sec = self.memory.stream_time(bytes);
+            let seconds = calc_sec.max(mem_sec);
+            layers.push(LayerReport {
+                layer: j,
+                seconds,
+                compute_cycles: cop_cycles.iter().copied().max().unwrap_or(0),
+                weight_bytes: bytes,
+                memory_bound: mem_sec > calc_sec,
+            });
+            total += seconds;
+        }
+        TimingReport {
+            total_seconds: total,
+            layers,
+            samples: n,
+        }
+    }
+
+    /// Functional path: batch TDM over the sparse decoder (delegates to the
+    /// pruning decoder per sample — the combined datapath computes the same
+    /// function, only the schedule differs).
+    pub fn run(&self, net: &SparseNetwork, x: &MatI) -> Result<(MatI, TimingReport)> {
+        ensure!(
+            x.rows == self.batch,
+            "combined accelerator built for n={}, got {}",
+            self.batch,
+            x.rows
+        );
+        let pruning = super::pruning::PruningAccelerator {
+            device: self.device,
+            clocks: self.clocks,
+            memory: self.memory,
+            m: self.m,
+            r: self.r,
+            sample_overhead: 0.0,
+        };
+        let (y, _) = pruning.run(net, x)?;
+        Ok((y, self.timing(net)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::har_6;
+    use crate::nn::{quantize_matrix, QNetwork};
+    use crate::sim::pruning::prune_qnetwork;
+    use crate::tensor::MatF;
+    use crate::util::rng::Xoshiro256;
+
+    fn har6_pruned() -> SparseNetwork {
+        let spec = har_6();
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let ws = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                quantize_matrix(&MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i).map(|_| rng.normal_scaled(0.0, 0.1) as f32).collect(),
+                ))
+            })
+            .collect();
+        let net = QNetwork::new(spec, ws).unwrap();
+        SparseNetwork::encode(&prune_qnetwork(&net, 0.94)).unwrap()
+    }
+
+    #[test]
+    fn paper_projection_har6_order_of_186us() {
+        let acc = CombinedAccelerator::zedboard();
+        let t = acc.timing(&har6_pruned()).per_sample();
+        // §7 projects 186 µs; our calibrated substrate must land within 2×
+        assert!((90e-6..400e-6).contains(&t), "{} µs", t * 1e6);
+    }
+
+    #[test]
+    fn combined_beats_both_single_technique_designs() {
+        let snet = har6_pruned();
+        let combined = CombinedAccelerator::zedboard().timing(&snet).per_sample();
+        let pruning_only = super::super::pruning::PruningAccelerator::zedboard()
+            .timing_only(&snet)
+            .per_sample();
+        assert!(combined < pruning_only, "{combined} vs {pruning_only}");
+    }
+
+    #[test]
+    fn design_point_fits_device() {
+        let acc = CombinedAccelerator::zedboard();
+        assert!(acc.fits(2000), "m=6,r=3,n=3 must fit the XC7020");
+        // scaling any dimension much further must eventually not fit
+        assert!(!CombinedAccelerator::with_params(16, 3, 16).fits(2000));
+    }
+
+    #[test]
+    fn functional_matches_pruning_decoder() {
+        let snet = har6_pruned();
+        let acc = CombinedAccelerator::with_params(6, 3, 2);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x = quantize_matrix(&MatF::from_vec(
+            2,
+            561,
+            (0..2 * 561).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        ));
+        let (y, t) = acc.run(&snet, &x).unwrap();
+        assert_eq!(y.shape(), (2, 6));
+        assert_eq!(t.samples, 2);
+    }
+}

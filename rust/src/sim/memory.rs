@@ -1,0 +1,101 @@
+//! Weight-stream memory interface model (DDR3 ← HP ports ← DMA engines).
+//!
+//! The ZedBoard's weight path: 4 × 64-bit AXI HP ports @ 133 MHz
+//! (4.26 GB/s aggregate) in front of a 32-bit DDR3-1066 controller
+//! (4.26 GB/s peak) that is *shared* with the ARM cores.  Long DMA bursts
+//! against refresh, bank conflicts and PS traffic sustain well under peak.
+//!
+//! Calibration (documented, single-knob): the effective stream bandwidth is
+//! fitted to the *differences* between Table 2's batch-1 and batch-2 cells
+//! (those isolate the memory term: doubling the batch halves per-sample
+//! weight traffic while compute stays sub-dominant).  The MNIST fits give
+//! 1.93 GB/s, HAR-4 1.70, HAR-6 2.33 — we use 1.9 GB/s everywhere and
+//! EXPERIMENTS.md reports the resulting per-cell errors.  The paper's own
+//! n_opt = 12.66 figure implies 1.80 GB/s, consistent with this range.
+
+use super::zynq::{Clocks, Device, PAPER_CLOCKS, XC7020};
+
+/// Memory interface model.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Aggregate theoretical HP-port bandwidth (bytes/s).
+    pub hp_peak: f64,
+    /// DDR3 controller peak (bytes/s).
+    pub ddr_peak: f64,
+    /// Sustained fraction of the binding peak for long DMA bursts.
+    pub efficiency: f64,
+    /// DMA restart latency per burst (seconds) — charged once per weight
+    /// section (batch design) or per row group (pruning design).
+    pub burst_setup: f64,
+}
+
+impl MemoryModel {
+    /// The calibrated ZedBoard model.
+    pub fn zedboard() -> Self {
+        let clocks: Clocks = PAPER_CLOCKS;
+        let dev: Device = XC7020;
+        let hp_peak = dev.hp_ports as f64 * 8.0 * clocks.f_mem; // 4×64bit×133MHz
+        let ddr_peak = 4.26e9; // 32-bit DDR3-1066
+        Self {
+            hp_peak,
+            ddr_peak,
+            efficiency: 0.446, // → 1.9 GB/s effective (see module docs)
+            burst_setup: 0.0,  // folded into the per-sample software overhead
+        }
+    }
+
+    /// Effective sustained weight-stream bandwidth (bytes/s).
+    pub fn effective(&self) -> f64 {
+        self.hp_peak.min(self.ddr_peak) * self.efficiency
+    }
+
+    /// Seconds to stream `bytes` of weights.
+    pub fn stream_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.effective() + self.burst_setup
+    }
+}
+
+/// Per-sample software overhead of the batch design (§5: the ARM cores copy
+/// network inputs/outputs and re-arm the control unit per sample).
+/// Calibrated once against the large-batch MNIST-4 cells where weight
+/// traffic is amortized away and this term dominates alongside compute.
+pub const BATCH_SAMPLE_OVERHEAD: f64 = 130e-6;
+
+/// Per-sample software overhead of the pruning design (single-sample I/O
+/// memory, lighter control path).
+pub const PRUNE_SAMPLE_OVERHEAD: f64 = 40e-6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_bandwidth_in_calibrated_range() {
+        let m = MemoryModel::zedboard();
+        let eff = m.effective();
+        assert!((1.7e9..2.1e9).contains(&eff), "{eff}");
+    }
+
+    #[test]
+    fn hp_peak_is_4x64bit_133mhz() {
+        let m = MemoryModel::zedboard();
+        assert!((m.hp_peak - 4.256e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn stream_time_linear_in_bytes() {
+        let m = MemoryModel::zedboard();
+        let t1 = m.stream_time(1_000_000);
+        let t2 = m.stream_time(2_000_000);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn n_opt_with_effective_bandwidth_near_paper() {
+        // §6.1: n_opt = 12.66 for m = 114; with our 1.9 GB/s the formula
+        // gives ~12.0 — same regime, between the paper's 8 and 16 sweep
+        let m = MemoryModel::zedboard();
+        let n_opt = 114.0 * 100e6 * 2.0 / m.effective();
+        assert!((8.0..16.0).contains(&n_opt), "{n_opt}");
+    }
+}

@@ -1,0 +1,67 @@
+//! Cycle-level simulator of the paper's two accelerators on the Zynq
+//! XC7020 / ZedBoard substrate (DESIGN.md §2: the hardware substitution).
+//!
+//! The simulator is split into a **functional** path — bit-accurate Q7.8
+//! datapaths that must agree with `nn::forward_q` and the PJRT artifacts —
+//! and a **timing** path — section-level event stepping that implements the
+//! §4.4/§5.5/§5.6 cycle formulas plus the system effects the closed forms
+//! ignore (DMA prologues, per-layer control handshakes, activation drain).
+//!
+//! Modules:
+//! * [`zynq`]      — device model: clocks, DSP/BRAM/LUT budgets, HP ports
+//! * [`memory`]    — DDR3 weight-stream interface model + calibration
+//! * [`resources`] — feasible MAC count per batch size (Table 2's m column)
+//! * [`batch`]     — the batch-processing design (Fig 5)
+//! * [`pruning`]   — the pruning design (Fig 6) incl. the stream decoder
+//! * [`combined`]  — §7's envisaged combined design (m=6, r=3, n=3)
+//! * [`power`]     — power/energy model (Table 3)
+
+pub mod batch;
+pub mod combined;
+pub mod dma;
+pub mod memory;
+pub mod power;
+pub mod pruning;
+pub mod resources;
+pub mod zynq;
+
+/// Timing outcome of one simulated network inference.
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    /// End-to-end seconds for the whole run (all samples of the batch).
+    pub total_seconds: f64,
+    /// Per-layer breakdown.
+    pub layers: Vec<LayerReport>,
+    /// Samples processed.
+    pub samples: usize,
+}
+
+/// Per-layer timing detail.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    /// Layer index j (transition j → j+1).
+    pub layer: usize,
+    /// Seconds spent on this layer.
+    pub seconds: f64,
+    /// Processing-unit cycles (f_pu domain).
+    pub compute_cycles: u64,
+    /// Weight bytes streamed from DDR.
+    pub weight_bytes: u64,
+    /// True when the memory interface was the bottleneck.
+    pub memory_bound: bool,
+}
+
+impl TimingReport {
+    /// Average seconds per sample (the Table 2 metric).
+    pub fn per_sample(&self) -> f64 {
+        self.total_seconds / self.samples.max(1) as f64
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes).sum()
+    }
+
+    pub fn total_compute_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.compute_cycles).sum()
+    }
+}

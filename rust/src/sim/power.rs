@@ -1,0 +1,141 @@
+//! Power and energy model (paper §6.2, Table 3).
+//!
+//! Substitution note (DESIGN.md §2): the paper measures wall power with a
+//! shunt resistor (ZedBoard) and supply-side meters (x86).  We model each
+//! platform as `P = P_idle + P_dyn(config)` with the *measured operating
+//! points of Table 3 as calibration constants*, and compute energies as
+//! `E = P · t` with `t` coming from our simulators / machine models —
+//! i.e. the power axis is taken from the paper, the time axis is ours.
+//! That reproduces Table 3's structure (idle/overall/dynamic split) while
+//! remaining honest about what is measured here and what is cited.
+
+use crate::sim::TimingReport;
+
+/// A platform's power operating points (Watts).
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub name: &'static str,
+    pub idle_w: f64,
+    /// Active power at the referenced configuration.
+    pub active_w: f64,
+}
+
+impl PowerModel {
+    pub fn dynamic_w(&self) -> f64 {
+        self.active_w - self.idle_w
+    }
+
+    /// Energy for a run of `seconds` (J).
+    pub fn overall_energy(&self, seconds: f64) -> f64 {
+        self.active_w * seconds
+    }
+
+    /// Energy above idle (the paper's "Dynamic Energy").
+    pub fn dynamic_energy(&self, seconds: f64) -> f64 {
+        self.dynamic_w() * seconds
+    }
+
+    pub fn overall_energy_report(&self, t: &TimingReport) -> f64 {
+        self.overall_energy(t.per_sample())
+    }
+}
+
+/// ZedBoard idle (PS + board infrastructure).
+pub const ZEDBOARD_IDLE_W: f64 = 2.4;
+
+/// Table 3 operating points.
+pub fn zedboard_batch(n_macs: usize) -> PowerModel {
+    // calibrated: 90 MACs + batch memories ≈ 2.0 W dynamic (4.4 W total);
+    // scale the MAC-array share with the instantiated units
+    let mac_share = 1.25 * n_macs as f64 / 90.0;
+    PowerModel {
+        name: "ZedBoard HW batch",
+        idle_w: ZEDBOARD_IDLE_W,
+        active_w: ZEDBOARD_IDLE_W + 0.75 + mac_share,
+    }
+}
+
+pub fn zedboard_pruning() -> PowerModel {
+    // Table 3: 4.1 W at m = 4 (12 MACs + m·r replicated I/O memories)
+    PowerModel {
+        name: "ZedBoard HW pruning",
+        idle_w: ZEDBOARD_IDLE_W,
+        active_w: 4.1,
+    }
+}
+
+pub fn zedboard_software() -> PowerModel {
+    PowerModel {
+        name: "ZedBoard SW BLAS",
+        idle_w: ZEDBOARD_IDLE_W,
+        active_w: 3.8,
+    }
+}
+
+/// x86 operating points per thread count (Table 3).
+pub fn i7_5600u(threads: usize) -> PowerModel {
+    let active = match threads {
+        1 => 20.7,
+        2 => 22.6,
+        _ => 24.9,
+    };
+    PowerModel {
+        name: "Intel i7-5600U",
+        idle_w: 8.9,
+        active_w: active,
+    }
+}
+
+pub fn i7_4790(threads: usize) -> PowerModel {
+    let active = match threads {
+        1 => 65.8,
+        4 => 82.3,
+        _ => 81.8,
+    };
+    PowerModel {
+        name: "Intel i7-4790",
+        idle_w: 41.4,
+        active_w: active,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_zedboard_batch16_operating_point() {
+        let p = zedboard_batch(90);
+        assert!((p.active_w - 4.4).abs() < 0.01, "{}", p.active_w);
+        assert!((p.dynamic_w() - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn table3_energy_structure_mnist8() {
+        // paper: batch-16 runs MNIST-8 at 0.768 ms/sample → 3.8 mJ / 1.5 mJ
+        let p = zedboard_batch(90);
+        let t = 0.768e-3;
+        assert!((p.overall_energy(t) * 1e3 - 3.38).abs() < 0.2);
+        assert!((p.dynamic_energy(t) * 1e3 - 1.54).abs() < 0.1);
+    }
+
+    #[test]
+    fn hardware_order_of_magnitude_better_than_x86() {
+        // the §6.2 headline: ~10× overall energy advantage vs the i7-5600U
+        let hw = zedboard_batch(90).overall_energy(0.768e-3);
+        let sw = i7_5600u(1).overall_energy(1.603e-3);
+        assert!(sw / hw > 8.0, "ratio {}", sw / hw);
+    }
+
+    #[test]
+    fn pruning_design_lower_power_than_batch() {
+        assert!(zedboard_pruning().active_w < zedboard_batch(90).active_w);
+        assert!(zedboard_pruning().dynamic_w() > 0.0);
+    }
+
+    #[test]
+    fn x86_thread_power_monotone_until_smt() {
+        assert!(i7_5600u(2).active_w > i7_5600u(1).active_w);
+        assert!(i7_4790(4).active_w > i7_4790(1).active_w);
+    }
+}

@@ -1,0 +1,77 @@
+//! Zynq-7000 XC7020 (ZedBoard) device model: the resource and clock
+//! envelope both accelerator designs must fit (paper §5, [39]).
+
+/// Device resource budget (XC7020, Artix-7 fabric).
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub dsp_slices: usize,
+    /// 36 Kb block RAMs (each splittable into two 18 Kb halves).
+    pub bram36: usize,
+    pub luts: usize,
+    pub flip_flops: usize,
+    /// High-performance AXI ports between PS and PL.
+    pub hp_ports: usize,
+}
+
+/// The XC7020 on the ZedBoard.
+pub const XC7020: Device = Device {
+    dsp_slices: 220,
+    bram36: 140,
+    luts: 53_200,
+    flip_flops: 106_400,
+    hp_ports: 4,
+};
+
+impl Device {
+    pub fn bram18(&self) -> usize {
+        self.bram36 * 2
+    }
+
+    /// Total on-chip BRAM bytes (the paper: "less than 3 MB" on the
+    /// largest Zynq; the XC7020 has 140 × 36 Kb = 630 KB).
+    pub fn bram_bytes(&self) -> usize {
+        self.bram36 * 36 * 1024 / 8
+    }
+}
+
+/// Clock domains used by both designs (§6).
+#[derive(Debug, Clone, Copy)]
+pub struct Clocks {
+    /// Memory-interface domain (HP ports, DMA engines).
+    pub f_mem: f64,
+    /// Processing-unit domain (MACs, activation units).
+    pub f_pu: f64,
+}
+
+/// The paper's configuration: 133 MHz memory side, 100 MHz processing.
+pub const PAPER_CLOCKS: Clocks = Clocks {
+    f_mem: 133e6,
+    f_pu: 100e6,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xc7020_budget_matches_datasheet() {
+        assert_eq!(XC7020.dsp_slices, 220);
+        assert_eq!(XC7020.bram36, 140);
+        assert_eq!(XC7020.bram18(), 280);
+        // 630 KB of BRAM — the reason full DNNs cannot be embedded (§4)
+        assert_eq!(XC7020.bram_bytes(), 630 * 1024);
+    }
+
+    #[test]
+    fn paper_clock_domains() {
+        assert_eq!(PAPER_CLOCKS.f_mem, 133e6);
+        assert_eq!(PAPER_CLOCKS.f_pu, 100e6);
+    }
+
+    #[test]
+    fn mnist8_cannot_be_embedded_on_chip() {
+        // §4's motivating argument: 22 MB of weights vs < 3 MB of BRAM
+        let weights_bytes = 3_835_200 * 2;
+        assert!(weights_bytes > XC7020.bram_bytes());
+    }
+}

@@ -1,0 +1,335 @@
+//! Sparse weight streaming format of the pruning design (paper §5.6).
+//!
+//! Each row of a pruned weight matrix is encoded as a sequence of tuples
+//! `(w_l, z_{w_l})` — the remaining Q7.8 weight plus the number of zeros
+//! preceding it in the row.  `r = 3` tuples of 16 + 5 bits are packed into
+//! one 64-bit data word (63 bits used; the spare bit keeps words aligned to
+//! the memory interface).  The per-weight overhead versus dense streaming
+//! is therefore `q_overhead = 64 / (3 × 16) = 1.33̅`.
+//!
+//! Word layout (bit 63 = MSB, matching the example in §5.6):
+//! ```text
+//! [63]      unused (0)
+//! [62:47]   w_0   [46:42] z_0
+//! [41:26]   w_1   [25:21] z_1
+//! [20:5]    w_2   [4:0]   z_2
+//! ```
+//! A zero-run larger than 31 (5 bits) is encoded by emitting an explicit
+//! zero *weight* tuple (w = 0, z = 31) — functionally a no-op MAC, exactly
+//! how the streaming hardware handles long gaps.  Unused tuple slots in the
+//! final word of a row are filled with (w = 0, z = 31) so decoders never
+//! run past the row end (a zero weight never changes an accumulator).
+
+pub mod huffman;
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::MatI;
+
+/// Tuples per 64-bit word (`r` in the paper; the pruning datapath has one
+/// multiplier per tuple lane).
+pub const TUPLES_PER_WORD: usize = 3;
+/// Bits per encoded weight.
+pub const WEIGHT_BITS: u32 = 16;
+/// Bits per zero-run field.
+pub const ZRUN_BITS: u32 = 5;
+/// Maximum zero-run a single tuple can express.
+pub const MAX_ZRUN: usize = (1 << ZRUN_BITS) - 1;
+/// Memory overhead per stored weight vs dense 16-bit streaming.
+pub const Q_OVERHEAD: f64 = 64.0 / (TUPLES_PER_WORD as f64 * WEIGHT_BITS as f64);
+
+/// One decoded tuple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tuple {
+    /// Q7.8 weight (i16 range).
+    pub w: i16,
+    /// Zeros preceding this weight in the row.
+    pub z: u8,
+}
+
+/// One encoded sparse row: packed words plus the tuple count (the hardware
+/// gets the count from the control unit's metadata; padding tuples beyond
+/// `len` are (0, 31) no-ops either way).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseRow {
+    pub words: Vec<u64>,
+    /// Number of *real* tuples (remaining weights + explicit gap tuples).
+    pub len: usize,
+    /// Logical row width (s_j), needed to bound decoded addresses.
+    pub width: usize,
+}
+
+/// A whole encoded matrix: one [`SparseRow`] per output neuron.
+#[derive(Debug, Clone)]
+pub struct SparseMatrix {
+    pub rows: Vec<SparseRow>,
+    pub shape: (usize, usize),
+}
+
+#[inline]
+fn pack3(t: [Tuple; 3]) -> u64 {
+    let mut word = 0u64;
+    for (i, tu) in t.iter().enumerate() {
+        let shift = 64 - (i as u32 + 1) * (WEIGHT_BITS + ZRUN_BITS);
+        let lane = ((tu.w as u16 as u64) << ZRUN_BITS) | u64::from(tu.z & 0x1F);
+        word |= lane << shift;
+    }
+    word
+}
+
+#[inline]
+fn unpack3(word: u64) -> [Tuple; 3] {
+    let mut out = [Tuple { w: 0, z: 0 }; 3];
+    for (i, slot) in out.iter_mut().enumerate() {
+        let shift = 64 - (i as u32 + 1) * (WEIGHT_BITS + ZRUN_BITS);
+        let lane = (word >> shift) & ((1 << (WEIGHT_BITS + ZRUN_BITS)) - 1);
+        slot.w = ((lane >> ZRUN_BITS) & 0xFFFF) as u16 as i16;
+        slot.z = (lane & 0x1F) as u8;
+    }
+    out
+}
+
+/// Encode one dense row (Q7.8 values in i32 lanes) into the tuple stream.
+pub fn encode_row(dense: &[i32]) -> Result<SparseRow> {
+    let mut tuples: Vec<Tuple> = Vec::new();
+    let mut zrun = 0usize;
+    for &v in dense {
+        ensure!(
+            (-(1 << 15)..(1 << 15)).contains(&v),
+            "weight {v} outside Q7.8/i16 range"
+        );
+        if v == 0 {
+            zrun += 1;
+            continue;
+        }
+        while zrun > MAX_ZRUN {
+            // explicit gap tuple: zero weight, max zero-run
+            tuples.push(Tuple { w: 0, z: MAX_ZRUN as u8 });
+            zrun -= MAX_ZRUN + 1; // the gap tuple occupies one position
+        }
+        tuples.push(Tuple { w: v as i16, z: zrun as u8 });
+        zrun = 0;
+    }
+    // trailing zeros need no tuples: the decoder stops at the row width
+    let len = tuples.len();
+    // pad to a full word with no-op tuples
+    while tuples.len() % TUPLES_PER_WORD != 0 {
+        tuples.push(Tuple { w: 0, z: MAX_ZRUN as u8 });
+    }
+    let words = tuples
+        .chunks_exact(TUPLES_PER_WORD)
+        .map(|c| pack3([c[0], c[1], c[2]]))
+        .collect();
+    Ok(SparseRow {
+        words,
+        len,
+        width: dense.len(),
+    })
+}
+
+/// Decode a row back to dense form.  This is the software twin of the
+/// offset-calculation IP: `address_l = l + Σ_{k<l} z_k` (each tuple —
+/// including explicit gap tuples — occupies one position).
+pub fn decode_row(row: &SparseRow) -> Vec<i32> {
+    let mut dense = vec![0i32; row.width];
+    let mut addr = 0usize;
+    let mut seen = 0usize;
+    'outer: for word in &row.words {
+        for t in unpack3(*word) {
+            if seen == row.len {
+                break 'outer;
+            }
+            seen += 1;
+            addr += usize::from(t.z);
+            if addr >= row.width {
+                break 'outer;
+            }
+            dense[addr] = i32::from(t.w);
+            addr += 1;
+        }
+    }
+    dense
+}
+
+/// Encode a whole dense matrix (rows = output neurons, paper layout).
+pub fn encode_matrix(dense: &MatI) -> Result<SparseMatrix> {
+    let rows = (0..dense.rows)
+        .map(|r| encode_row(dense.row(r)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(SparseMatrix {
+        rows,
+        shape: dense.shape(),
+    })
+}
+
+/// Decode a whole matrix.
+pub fn decode_matrix(sm: &SparseMatrix) -> MatI {
+    let (r, c) = sm.shape;
+    let mut out = MatI::zeros(r, c);
+    for (i, row) in sm.rows.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(&decode_row(row));
+    }
+    out
+}
+
+impl SparseMatrix {
+    /// Total 64-bit stream words (what the DMA engines must transfer).
+    pub fn total_words(&self) -> usize {
+        self.rows.iter().map(|r| r.words.len()).sum()
+    }
+
+    /// Stream bytes on the memory interface.
+    pub fn stream_bytes(&self) -> usize {
+        self.total_words() * 8
+    }
+
+    /// Remaining (non-zero) weights.
+    pub fn remaining_weights(&self) -> usize {
+        let dense = decode_matrix(self);
+        dense.data.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Measured pruning factor `q_prune` of the encoded matrix.
+    pub fn prune_factor(&self) -> f64 {
+        let total = self.shape.0 * self.shape.1;
+        1.0 - self.remaining_weights() as f64 / total as f64
+    }
+
+    /// Effective per-remaining-weight overhead actually achieved by this
+    /// stream (≥ [`Q_OVERHEAD`] because of word padding and gap tuples).
+    pub fn effective_overhead(&self) -> f64 {
+        let remaining = self.remaining_weights();
+        if remaining == 0 {
+            return f64::INFINITY;
+        }
+        self.stream_bytes() as f64 * 8.0 / (remaining as f64 * f64::from(WEIGHT_BITS))
+    }
+
+    /// Per-row tuple counts (`ceil(nnz_k / r)` words each drive the
+    /// pruning datapath cycle model).
+    pub fn row_tuple_counts(&self) -> Vec<usize> {
+        self.rows.iter().map(|r| r.len).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn paper_example_round_trips() {
+        // §5.6: (0, -1.5, 0, 0, +0.3, -0.17, 0, 0, 0, +1.1, 0, 0, -0.2, 0, +0.1)
+        let vals = [0.0, -1.5, 0.0, 0.0, 0.3, -0.17, 0.0, 0.0, 0.0, 1.1, 0.0, 0.0, -0.2, 0.0, 0.1];
+        let dense: Vec<i32> = vals.iter().map(|&v| crate::fixedpoint::quantize(v)).collect();
+        let row = encode_row(&dense).unwrap();
+        // 6 remaining weights -> 6 tuples -> exactly 2 data words
+        assert_eq!(row.len, 6);
+        assert_eq!(row.words.len(), 2);
+        assert_eq!(decode_row(&row), dense);
+        // zero-runs per the paper: 1, 2, 0 | 3, 2, 1
+        let t0 = unpack3(row.words[0]);
+        assert_eq!([t0[0].z, t0[1].z, t0[2].z], [1, 2, 0]);
+        let t1 = unpack3(row.words[1]);
+        assert_eq!([t1[0].z, t1[1].z, t1[2].z], [3, 2, 1]);
+    }
+
+    #[test]
+    fn q_overhead_constant() {
+        assert!((Q_OVERHEAD - 64.0 / 48.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_row_encodes_to_nothing() {
+        let row = encode_row(&vec![0i32; 100]).unwrap();
+        assert_eq!(row.len, 0);
+        assert_eq!(row.words.len(), 0);
+        assert_eq!(decode_row(&row), vec![0i32; 100]);
+    }
+
+    #[test]
+    fn long_zero_run_uses_gap_tuples() {
+        let mut dense = vec![0i32; 100];
+        dense[90] = 256; // gap of 90 zeros > MAX_ZRUN
+        let row = encode_row(&dense).unwrap();
+        assert!(row.len > 1, "needs explicit gap tuples");
+        assert_eq!(decode_row(&row), dense);
+    }
+
+    #[test]
+    fn dense_row_no_overhead_tuples() {
+        let dense: Vec<i32> = (1..=9).collect();
+        let row = encode_row(&dense).unwrap();
+        assert_eq!(row.len, 9);
+        assert_eq!(row.words.len(), 3);
+        assert_eq!(decode_row(&row), dense);
+    }
+
+    #[test]
+    fn negative_weights_preserved() {
+        let dense = vec![-32768, 0, 32767, -1];
+        let row = encode_row(&dense).unwrap();
+        assert_eq!(decode_row(&row), dense);
+    }
+
+    #[test]
+    fn out_of_range_weight_rejected() {
+        assert!(encode_row(&[40000]).is_err());
+        assert!(encode_row(&[-40000]).is_err());
+    }
+
+    #[test]
+    fn matrix_roundtrip_and_stats() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let mut m = MatI::zeros(20, 50);
+        for v in m.data.iter_mut() {
+            if rng.bernoulli(0.1) {
+                *v = rng.below(65536) as i32 - 32768;
+            }
+        }
+        let sm = encode_matrix(&m).unwrap();
+        assert_eq!(decode_matrix(&sm).data, m.data);
+        let nz = m.data.iter().filter(|&&v| v != 0).count();
+        assert_eq!(sm.remaining_weights(), nz);
+        assert!((sm.prune_factor() - (1.0 - nz as f64 / 1000.0)).abs() < 1e-9);
+        assert!(sm.effective_overhead() >= Q_OVERHEAD - 1e-9);
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_rows() {
+        prop_check(300, |g| {
+            let width = g.usize(1..200);
+            let density = g.f64(0.0, 1.0);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let dense: Vec<i32> = (0..width)
+                .map(|_| {
+                    if rng.bernoulli(density) {
+                        rng.below(65536) as i32 - 32768
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let row = match encode_row(&dense) {
+                Ok(r) => r,
+                Err(_) => return false,
+            };
+            decode_row(&row) == dense
+        });
+    }
+
+    #[test]
+    fn prop_stream_size_formula() {
+        // words = ceil(tuples / 3); tuples = nnz + gap tuples
+        prop_check(100, |g| {
+            let width = g.usize(1..300);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let dense: Vec<i32> = (0..width)
+                .map(|_| if rng.bernoulli(0.15) { 7 } else { 0 })
+                .collect();
+            let row = encode_row(&dense).unwrap();
+            row.words.len() == row.len.div_ceil(TUPLES_PER_WORD)
+        });
+    }
+}

@@ -1,0 +1,385 @@
+//! Dense row-major matrices over `f32` (training / software baseline) and
+//! `i32` (Q7.8 datapath), plus the GEMM kernels the software baselines and
+//! the native inference engine run on.
+//!
+//! The `i32` GEMM uses *wrapping* accumulation to stay bit-identical to the
+//! FPGA DSP accumulators and XLA's int32 dot (see `fixedpoint`).
+
+use crate::util::threadpool::ThreadPool;
+
+/// Row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![T::default(); rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+pub type MatF = Matrix<f32>;
+pub type MatI = Matrix<i32>;
+
+impl MatF {
+    /// Map a function over all elements (new matrix).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> MatF {
+        MatF {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 GEMM: out[n][o] = x[n][k] * w[o][k]^T  (paper weight layout: row o of
+// w holds the fan-in of output neuron o)
+// ---------------------------------------------------------------------------
+
+/// Naive reference (kept as the oracle for the blocked kernels).
+pub fn gemm_f32_naive(x: &MatF, w: &MatF, out: &mut MatF) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!((out.rows, out.cols), (x.rows, w.rows));
+    for n in 0..x.rows {
+        let xr = x.row(n);
+        for o in 0..w.rows {
+            let wr = w.row(o);
+            let mut acc = 0f32;
+            for k in 0..x.cols {
+                acc += xr[k] * wr[k];
+            }
+            out.set(n, o, acc);
+        }
+    }
+}
+
+/// Register-blocked f32 GEMM (software-baseline hot path): 4 output rows
+/// share one pass over the activation row, so each x element is loaded
+/// once per 4 MACs and LLVM vectorizes four independent dot products.
+/// (Perf log in EXPERIMENTS.md §Perf: this replaced a k-panel variant that
+/// was 3× *slower* than naive — the panel re-walked the output row per
+/// k-block and defeated vectorization.)
+pub fn gemm_f32(x: &MatF, w: &MatF, out: &mut MatF) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!((out.rows, out.cols), (x.rows, w.rows));
+    let cols = x.cols;
+    // weight-stationary order (see gemm_i32_rows): W blocks hot in L1
+    // across all sample rows
+    let mut o = 0;
+    while o + 4 <= w.rows {
+        let w0 = w.row(o);
+        let w1 = w.row(o + 1);
+        let w2 = w.row(o + 2);
+        let w3 = w.row(o + 3);
+        for n in 0..x.rows {
+            let xr = x.row(n);
+            let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+            for k in 0..cols {
+                let xv = xr[k];
+                a0 += w0[k] * xv;
+                a1 += w1[k] * xv;
+                a2 += w2[k] * xv;
+                a3 += w3[k] * xv;
+            }
+            let or = out.row_mut(n);
+            or[o] = a0;
+            or[o + 1] = a1;
+            or[o + 2] = a2;
+            or[o + 3] = a3;
+        }
+        o += 4;
+    }
+    while o < w.rows {
+        let wr = w.row(o);
+        for n in 0..x.rows {
+            let xr = x.row(n);
+            let mut acc = 0f32;
+            for k in 0..cols {
+                acc += wr[k] * xr[k];
+            }
+            out.row_mut(n)[o] = acc;
+        }
+        o += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i32 wrapping GEMM (Q7.8 datapath)
+// ---------------------------------------------------------------------------
+
+/// Naive wrapping reference.
+pub fn gemm_i32_naive(x: &MatI, w: &MatI, out: &mut MatI) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!((out.rows, out.cols), (x.rows, w.rows));
+    for n in 0..x.rows {
+        let xr = x.row(n);
+        for o in 0..w.rows {
+            let wr = w.row(o);
+            let mut acc = 0i32;
+            for k in 0..x.cols {
+                acc = acc.wrapping_add(xr[k].wrapping_mul(wr[k]));
+            }
+            out.set(n, o, acc);
+        }
+    }
+}
+
+/// Register-blocked wrapping i32 GEMM: 4 output rows per pass over the
+/// activation row (see `gemm_f32`).  Wrapping adds are associative and
+/// commutative mod 2^32, so any accumulation order is bit-safe.
+pub fn gemm_i32(x: &MatI, w: &MatI, out: &mut MatI) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!((out.rows, out.cols), (x.rows, w.rows));
+    gemm_i32_rows(x, w, out, 0..x.rows, 0);
+}
+
+/// Row-range worker shared by the serial and parallel entry points.
+/// `out` holds rows `rows`, offset by `out_row0` (0 for the serial path).
+fn gemm_i32_rows(
+    x: &MatI,
+    w: &MatI,
+    out: &mut MatI,
+    rows: std::ops::Range<usize>,
+    out_row0: usize,
+) {
+    let cols = x.cols;
+    // weight-stationary loop order: a 4-row weight block (a few KB) stays
+    // in L1 while every sample row passes over it — W is streamed from
+    // DRAM once per GEMM instead of once per sample
+    let mut o = 0;
+    while o + 4 <= w.rows {
+        let w0 = w.row(o);
+        let w1 = w.row(o + 1);
+        let w2 = w.row(o + 2);
+        let w3 = w.row(o + 3);
+        for n in rows.clone() {
+            let xr = x.row(n);
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for k in 0..cols {
+                let xv = xr[k];
+                a0 = a0.wrapping_add(w0[k].wrapping_mul(xv));
+                a1 = a1.wrapping_add(w1[k].wrapping_mul(xv));
+                a2 = a2.wrapping_add(w2[k].wrapping_mul(xv));
+                a3 = a3.wrapping_add(w3[k].wrapping_mul(xv));
+            }
+            let or = out.row_mut(n - out_row0);
+            or[o] = a0;
+            or[o + 1] = a1;
+            or[o + 2] = a2;
+            or[o + 3] = a3;
+        }
+        o += 4;
+    }
+    while o < w.rows {
+        let wr = w.row(o);
+        for n in rows.clone() {
+            let xr = x.row(n);
+            let mut acc = 0i32;
+            for k in 0..cols {
+                acc = acc.wrapping_add(wr[k].wrapping_mul(xr[k]));
+            }
+            out.row_mut(n - out_row0)[o] = acc;
+        }
+        o += 1;
+    }
+}
+
+/// Parallel wrapping i32 GEMM over output *sample* rows (each worker owns a
+/// disjoint slice of `out`, so no synchronization on the hot path).
+pub fn gemm_i32_parallel(pool: &ThreadPool, x: &MatI, w: &MatI, out: &mut MatI) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!((out.rows, out.cols), (x.rows, w.rows));
+    let cols = out.cols;
+    // split out.data into per-row chunks; parallel_chunks gives disjoint rows
+    let out_ptr = out.data.as_mut_ptr() as usize;
+    pool.parallel_chunks(x.rows, 4, |range| {
+        // SAFETY: each range of rows maps to a disjoint slice of out.data
+        let slice = unsafe {
+            std::slice::from_raw_parts_mut(
+                (out_ptr as *mut i32).add(range.start * cols),
+                (range.end - range.start) * cols,
+            )
+        };
+        let mut local = MatI {
+            rows: range.end - range.start,
+            cols,
+            data: std::mem::take(&mut Vec::new()),
+        };
+        local.data = slice.to_vec();
+        gemm_i32_rows(x, w, &mut local, range.clone(), range.start);
+        slice.copy_from_slice(&local.data);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_mat_f(rows: usize, cols: usize, rng: &mut Xoshiro256) -> MatF {
+        MatF::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        )
+    }
+
+    fn rand_mat_i(rows: usize, cols: usize, rng: &mut Xoshiro256) -> MatI {
+        MatI::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| rng.i64_range())
+                .collect(),
+        )
+    }
+
+    trait I64Range {
+        fn i64_range(&mut self) -> i32;
+    }
+    impl I64Range for Xoshiro256 {
+        fn i64_range(&mut self) -> i32 {
+            (self.below(65536) as i64 - 32768) as i32
+        }
+    }
+
+    #[test]
+    fn blocked_f32_matches_naive() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for (n, k, o) in [(1, 1, 1), (3, 17, 5), (8, 300, 33), (2, 1024, 7)] {
+            let x = rand_mat_f(n, k, &mut rng);
+            let w = rand_mat_f(o, k, &mut rng);
+            let mut a = MatF::zeros(n, o);
+            let mut b = MatF::zeros(n, o);
+            gemm_f32_naive(&x, &w, &mut a);
+            gemm_f32(&x, &w, &mut b);
+            for (p, q) in a.data.iter().zip(b.data.iter()) {
+                assert!((p - q).abs() <= 1e-3 * p.abs().max(1.0), "{p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_i32_bit_equal_naive() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for (n, k, o) in [(1, 1, 1), (4, 19, 6), (5, 513, 9), (16, 784, 12)] {
+            let x = rand_mat_i(n, k, &mut rng);
+            let w = rand_mat_i(o, k, &mut rng);
+            let mut a = MatI::zeros(n, o);
+            let mut b = MatI::zeros(n, o);
+            gemm_i32_naive(&x, &w, &mut a);
+            gemm_i32(&x, &w, &mut b);
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn parallel_i32_bit_equal_naive() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x = rand_mat_i(32, 301, &mut rng);
+        let w = rand_mat_i(40, 301, &mut rng);
+        let mut a = MatI::zeros(32, 40);
+        let mut b = MatI::zeros(32, 40);
+        gemm_i32_naive(&x, &w, &mut a);
+        gemm_i32_parallel(&pool, &x, &w, &mut b);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn wrapping_overflow_consistent() {
+        // all-rails product overflows i32 thousands of times over
+        let x = MatI::from_vec(2, 600, vec![32767; 1200]);
+        let w = MatI::from_vec(3, 600, vec![32767; 1800]);
+        let mut a = MatI::zeros(2, 3);
+        let mut b = MatI::zeros(2, 3);
+        gemm_i32_naive(&x, &w, &mut a);
+        gemm_i32(&x, &w, &mut b);
+        assert_eq!(a.data, b.data);
+        let want = ((600i64 * 32767 * 32767) & 0xFFFF_FFFF) as u32 as i32;
+        assert!(a.data.iter().all(|&v| v == want));
+    }
+
+    #[test]
+    fn matrix_accessors() {
+        let mut m = MatI::zeros(2, 3);
+        m.set(1, 2, 42);
+        assert_eq!(m.get(1, 2), 42);
+        assert_eq!(m.row(1), &[0, 0, 42]);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "data length mismatch")]
+    fn from_vec_validates_len() {
+        let _ = MatI::from_vec(2, 2, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn prop_blocked_equals_naive_i32() {
+        prop_check(60, |g| {
+            let n = g.usize(1..6);
+            let k = g.usize(1..80);
+            let o = g.usize(1..20);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let x = MatI::from_vec(
+                n,
+                k,
+                (0..n * k).map(|_| rng.below(65536) as i32 - 32768).collect(),
+            );
+            let w = MatI::from_vec(
+                o,
+                k,
+                (0..o * k).map(|_| rng.below(65536) as i32 - 32768).collect(),
+            );
+            let mut a = MatI::zeros(n, o);
+            let mut b = MatI::zeros(n, o);
+            gemm_i32_naive(&x, &w, &mut a);
+            gemm_i32(&x, &w, &mut b);
+            a.data == b.data
+        });
+    }
+}

@@ -1,0 +1,457 @@
+//! Training substrate: SGD + momentum backprop for fully-connected
+//! networks, plus the paper's pruning procedure (§4.3): after initial
+//! training, weights with |w| below a threshold δ are set to zero and
+//! *kept* at zero while the remaining weights are refined.
+//!
+//! Training runs in f32 with exact activations; quantization to Q7.8 and
+//! PLAN approximation are inference-time effects measured separately
+//! (Table 4 bench).  Hidden layers train with ReLU; the output layer
+//! trains as softmax cross-entropy (the paper's sigmoid output is applied
+//! at inference, which preserves argmax).
+
+pub mod prune;
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::nn::spec::NetworkSpec;
+use crate::nn::weights::NetworkWeights;
+use crate::tensor::{gemm_f32, MatF};
+use crate::util::rng::Xoshiro256;
+
+/// Hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub learning_rate: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// Print a line per epoch when true.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 10,
+            batch_size: 32,
+            learning_rate: 0.05,
+            momentum: 0.9,
+            weight_decay: 1e-5,
+            seed: 0x5EED,
+            verbose: false,
+        }
+    }
+}
+
+/// Per-epoch progress record.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub loss: f64,
+    pub train_accuracy: f64,
+}
+
+/// Trainer state: weights + momentum buffers (+ optional pruning masks).
+pub struct Trainer {
+    pub spec: NetworkSpec,
+    pub weights: Vec<MatF>,
+    velocity: Vec<MatF>,
+    /// One mask per layer; `false` = pruned (kept at zero).  Empty until
+    /// [`prune::apply_pruning`] installs masks.
+    pub masks: Vec<Vec<bool>>,
+    rng: Xoshiro256,
+}
+
+impl Trainer {
+    /// He/Xavier-style init scaled by fan-in (ReLU-friendly).
+    pub fn new(spec: NetworkSpec, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let weights: Vec<MatF> = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                let scale = (2.0 / i as f64).sqrt();
+                MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i)
+                        .map(|_| rng.normal_scaled(0.0, scale) as f32)
+                        .collect(),
+                )
+            })
+            .collect();
+        let velocity = weights
+            .iter()
+            .map(|w| MatF::zeros(w.rows, w.cols))
+            .collect();
+        Self {
+            spec,
+            weights,
+            velocity,
+            masks: Vec::new(),
+            rng,
+        }
+    }
+
+    /// Resume from existing weights (used by the prune-retrain loop).
+    pub fn from_weights(nw: NetworkWeights, seed: u64) -> Self {
+        let velocity = nw
+            .weights
+            .iter()
+            .map(|w| MatF::zeros(w.rows, w.cols))
+            .collect();
+        Self {
+            spec: nw.spec,
+            weights: nw.weights,
+            velocity,
+            masks: Vec::new(),
+            rng: Xoshiro256::seed_from_u64(seed),
+        }
+    }
+
+    pub fn to_weights(&self) -> NetworkWeights {
+        NetworkWeights::new(self.spec.clone(), self.weights.clone())
+            .expect("trainer shapes are valid by construction")
+    }
+
+    /// One epoch of minibatch SGD; returns (mean loss, train accuracy).
+    pub fn train_epoch(&mut self, data: &Dataset) -> (f64, f64) {
+        let n = data.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let bs = 32.min(n).max(1);
+        let mut total_loss = 0.0;
+        let mut correct = 0usize;
+        for chunk in order.chunks(bs) {
+            let (loss, c) = self.train_batch(data, chunk, 0.05, 0.9, 1e-5);
+            total_loss += loss * chunk.len() as f64;
+            correct += c;
+        }
+        (total_loss / n as f64, correct as f64 / n as f64)
+    }
+
+    /// One minibatch step with explicit hyperparameters.
+    fn train_batch(
+        &mut self,
+        data: &Dataset,
+        idx: &[usize],
+        lr: f32,
+        momentum: f32,
+        weight_decay: f32,
+    ) -> (f64, usize) {
+        let bs = idx.len();
+        let in_dim = self.spec.inputs();
+        let mut x = MatF::zeros(bs, in_dim);
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(data.x.row(i));
+        }
+
+        // ---- forward, keeping activations; hidden = ReLU, output = logits
+        let layers = self.weights.len();
+        let mut acts: Vec<MatF> = Vec::with_capacity(layers + 1);
+        acts.push(x);
+        for (l, w) in self.weights.iter().enumerate() {
+            let a = acts.last().unwrap();
+            let mut z = MatF::zeros(bs, w.rows);
+            gemm_f32(a, w, &mut z);
+            if l + 1 < layers {
+                for v in z.data.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            acts.push(z);
+        }
+
+        // ---- softmax cross-entropy on the logits
+        let logits = acts.last().unwrap();
+        let classes = logits.cols;
+        let mut delta = MatF::zeros(bs, classes); // dL/dz of output layer
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for r in 0..bs {
+            let row = logits.row(r);
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f64> = row.iter().map(|&v| f64::from(v - max).exp()).collect();
+            let sum: f64 = exps.iter().sum();
+            let label = data.y[idx[r]];
+            loss -= (exps[label] / sum).max(1e-30).ln();
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == label {
+                correct += 1;
+            }
+            let d = delta.row_mut(r);
+            for c in 0..classes {
+                d[c] = ((exps[c] / sum) as f32 - if c == label { 1.0 } else { 0.0 })
+                    / bs as f32;
+            }
+        }
+
+        // ---- backward
+        let mut grads: Vec<MatF> = Vec::with_capacity(layers);
+        let mut cur_delta = delta;
+        for l in (0..layers).rev() {
+            let a_prev = &acts[l];
+            let w = &self.weights[l];
+            // grad[o][i] = sum_n delta[n][o] * a_prev[n][i]
+            let mut grad = MatF::zeros(w.rows, w.cols);
+            for n in 0..bs {
+                let dn = cur_delta.row(n);
+                let an = a_prev.row(n);
+                for o in 0..w.rows {
+                    let g = grad.row_mut(o);
+                    let d = dn[o];
+                    if d != 0.0 {
+                        for (gi, &ai) in g.iter_mut().zip(an.iter()) {
+                            *gi += d * ai;
+                        }
+                    }
+                }
+            }
+            grads.push(grad);
+            if l > 0 {
+                // delta_prev[n][i] = (sum_o delta[n][o] * w[o][i]) * relu'(z_prev)
+                let mut prev = MatF::zeros(bs, w.cols);
+                for n in 0..bs {
+                    let dn = cur_delta.row(n);
+                    let pn = prev.row_mut(n);
+                    for o in 0..w.rows {
+                        let d = dn[o];
+                        if d != 0.0 {
+                            let wr = w.row(o);
+                            for (pi, &wi) in pn.iter_mut().zip(wr.iter()) {
+                                *pi += d * wi;
+                            }
+                        }
+                    }
+                    // ReLU derivative via the stored activation
+                    let zn = acts[l].row(n);
+                    for (pi, &zi) in pn.iter_mut().zip(zn.iter()) {
+                        if zi <= 0.0 {
+                            *pi = 0.0;
+                        }
+                    }
+                }
+                cur_delta = prev;
+            }
+        }
+        grads.reverse();
+
+        // ---- SGD + momentum + weight decay, respecting pruning masks
+        for (l, grad) in grads.iter().enumerate() {
+            let w = &mut self.weights[l];
+            let v = &mut self.velocity[l];
+            let mask = self.masks.get(l);
+            for i in 0..w.data.len() {
+                if let Some(m) = mask {
+                    if !m[i] {
+                        w.data[i] = 0.0;
+                        v.data[i] = 0.0;
+                        continue;
+                    }
+                }
+                let g = grad.data[i] + weight_decay * w.data[i];
+                v.data[i] = momentum * v.data[i] - lr * g;
+                w.data[i] += v.data[i];
+            }
+        }
+        let _ = (lr, momentum, weight_decay);
+        (loss / bs as f64, correct)
+    }
+
+    /// Full training run.
+    pub fn fit(&mut self, data: &Dataset, cfg: &TrainConfig) -> Result<Vec<EpochStats>> {
+        ensure!(
+            data.features() == self.spec.inputs(),
+            "dataset features {} != network inputs {}",
+            data.features(),
+            self.spec.inputs()
+        );
+        ensure!(
+            data.num_classes == self.spec.outputs(),
+            "dataset classes {} != network outputs {}",
+            data.num_classes,
+            self.spec.outputs()
+        );
+        let mut stats = Vec::with_capacity(cfg.epochs);
+        let n = data.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        for epoch in 0..cfg.epochs {
+            self.rng.shuffle(&mut order);
+            let mut total_loss = 0.0;
+            let mut correct = 0usize;
+            for chunk in order.chunks(cfg.batch_size.max(1)) {
+                let (loss, c) = self.train_batch(
+                    data,
+                    chunk,
+                    cfg.learning_rate,
+                    cfg.momentum,
+                    cfg.weight_decay,
+                );
+                total_loss += loss * chunk.len() as f64;
+                correct += c;
+            }
+            let s = EpochStats {
+                epoch,
+                loss: total_loss / n as f64,
+                train_accuracy: correct as f64 / n as f64,
+            };
+            if cfg.verbose {
+                eprintln!(
+                    "epoch {:>3}  loss {:.4}  train-acc {:.3}",
+                    s.epoch, s.loss, s.train_accuracy
+                );
+            }
+            stats.push(s);
+        }
+        Ok(stats)
+    }
+}
+
+/// Test-set accuracy of f32 weights (exact activations).
+pub fn evaluate_f32(nw: &NetworkWeights, data: &Dataset) -> f64 {
+    let y = crate::nn::forward::forward_f32(&nw.spec, &nw.weights, &data.x)
+        .expect("shape checked");
+    let preds = crate::nn::forward::argmax_rows_f32(&y);
+    let correct = preds
+        .iter()
+        .zip(data.y.iter())
+        .filter(|(p, y)| p == y)
+        .count();
+    correct as f64 / data.len().max(1) as f64
+}
+
+/// Test-set accuracy of the quantized Q7.8 network.
+///
+/// Classification is scored on the *identity-requantized logits* of the
+/// output layer rather than its sigmoid image: sigmoid is monotone, so in
+/// exact arithmetic the argmax is identical, but the Q7.8 output grid
+/// collapses every |z| ≥ 5 to exactly 1.0 (the PLAN saturation segment),
+/// and softmax-trained networks with confident logits would lose accuracy
+/// to index-order tie-breaking — a resolution artifact of the output
+/// *encoding*, not of the datapath the paper evaluates.  Hidden layers run
+/// the full hardware path (Q7.8 wrapping MACs, ReLU requantization).
+pub fn evaluate_q(nw: &NetworkWeights, data: &Dataset) -> f64 {
+    let mut spec = nw.spec.clone();
+    if let Some(last) = spec.activations.last_mut() {
+        *last = crate::nn::spec::Activation::Identity;
+    }
+    let wq = nw.weights.iter().map(crate::nn::quantize_matrix).collect();
+    let qnet = crate::nn::forward::QNetwork::new(spec, wq).expect("shapes validated");
+    let xq = crate::nn::quantize_matrix(&data.x);
+    let y = crate::nn::forward::forward_q(&qnet, &xq).expect("shape checked");
+    let preds = crate::nn::forward::argmax_rows(&y);
+    let correct = preds
+        .iter()
+        .zip(data.y.iter())
+        .filter(|(p, y)| p == y)
+        .count();
+    correct as f64 / data.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{har, mnist};
+    use crate::nn::spec::NetworkSpec;
+
+    #[test]
+    fn loss_decreases_on_small_mnist() {
+        let data = mnist::generate(300, 1);
+        let spec = NetworkSpec::new("tiny", &[784, 32, 10]);
+        let mut t = Trainer::new(spec, 7);
+        let cfg = TrainConfig {
+            epochs: 5,
+            ..Default::default()
+        };
+        let stats = t.fit(&data, &cfg).unwrap();
+        assert!(
+            stats.last().unwrap().loss < stats.first().unwrap().loss,
+            "{:?}",
+            stats
+        );
+    }
+
+    #[test]
+    fn learns_har_to_decent_accuracy() {
+        let data = har::generate(600, 2);
+        let test = har::generate(200, 3);
+        let spec = NetworkSpec::new("tiny-har", &[561, 48, 6]);
+        let mut t = Trainer::new(spec, 8);
+        let cfg = TrainConfig {
+            epochs: 12,
+            learning_rate: 0.05,
+            ..Default::default()
+        };
+        t.fit(&data, &cfg).unwrap();
+        let acc = evaluate_f32(&t.to_weights(), &test);
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+
+    #[test]
+    fn quantized_eval_close_to_f32() {
+        let data = har::generate(400, 4);
+        let test = har::generate(150, 5);
+        let spec = NetworkSpec::new("tiny-har", &[561, 32, 6]);
+        let mut t = Trainer::new(spec, 9);
+        t.fit(
+            &data,
+            &TrainConfig {
+                epochs: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let nw = t.to_weights();
+        let f = evaluate_f32(&nw, &test);
+        let q = evaluate_q(&nw, &test);
+        assert!((f - q).abs() < 0.1, "f32 {f} vs q {q}");
+    }
+
+    #[test]
+    fn fit_validates_dataset_shape() {
+        let data = mnist::generate(10, 1);
+        let spec = NetworkSpec::new("bad", &[100, 10, 10]);
+        let mut t = Trainer::new(spec, 1);
+        assert!(t.fit(&data, &TrainConfig::default()).is_err());
+    }
+
+    #[test]
+    fn masked_weights_stay_zero_through_training() {
+        let data = har::generate(120, 6);
+        let spec = NetworkSpec::new("tiny-har", &[561, 16, 6]);
+        let mut t = Trainer::new(spec, 10);
+        // mask half of layer 0
+        let len = t.weights[0].data.len();
+        let mut mask = vec![true; len];
+        for m in mask.iter_mut().take(len / 2) {
+            *m = false;
+        }
+        for (i, keep) in mask.iter().enumerate() {
+            if !keep {
+                t.weights[0].data[i] = 0.0;
+            }
+        }
+        t.masks = vec![mask.clone(), vec![true; t.weights[1].data.len()]];
+        t.fit(
+            &data,
+            &TrainConfig {
+                epochs: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for (i, keep) in mask.iter().enumerate() {
+            if !keep {
+                assert_eq!(t.weights[0].data[i], 0.0);
+            }
+        }
+    }
+}

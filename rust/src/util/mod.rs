@@ -1,0 +1,77 @@
+//! Cross-cutting substrates: PRNG, statistics, thread pool, property
+//! testing, and wall-clock timing.  Everything here exists because the
+//! usual crates (rand, rayon, proptest, criterion) are not in the offline
+//! dependency set — see DESIGN.md §2.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+use std::time::Instant;
+
+/// Measure wall time of `f`, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Bench helper: run `f` `iters` times after `warmup` runs; returns seconds
+/// per iteration (mean) and the per-iteration samples.
+pub fn bench_loop<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (f64, Vec<f64>) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    (mean, samples)
+}
+
+/// Format seconds adaptively (ns/µs/ms/s) for report tables.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} s", seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, secs) = timed(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_counts_iters() {
+        let mut calls = 0;
+        let (_, samples) = bench_loop(2, 5, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(samples.len(), 5);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with(" s"));
+    }
+}

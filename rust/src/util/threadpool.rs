@@ -1,0 +1,205 @@
+//! Minimal scoped thread pool (tokio is not in the offline crate set; the
+//! coordinator and the parallel GEMM both run on this substrate).
+//!
+//! Design: a fixed set of workers pulling boxed jobs from a shared injector
+//! queue (mutex + condvar — contention is negligible at our job granularity,
+//! verified in the perf pass), plus a [`scope`] helper that joins borrowed
+//! closures, which is what the data-parallel kernels need.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("zdnn-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to the host (physical parallelism), at least 1.
+    pub fn host() -> Self {
+        Self::new(
+            thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        )
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    /// Run `f` on chunks of `0..n` in parallel and join (scoped: borrows OK).
+    /// Falls back to inline execution for n below `grain` to avoid overhead.
+    pub fn parallel_chunks<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let workers = self.threads();
+        if n <= grain || workers == 1 {
+            f(0..n);
+            return;
+        }
+        let chunks = workers.min(n.div_ceil(grain));
+        let chunk = n.div_ceil(chunks);
+        thread::scope(|s| {
+            for c in 0..chunks {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(n);
+                if lo >= hi {
+                    break;
+                }
+                let fref = &f;
+                s.spawn(move || fref(lo..hi));
+            }
+        });
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = sh.done_lock.lock().unwrap();
+            sh.done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_chunks_covers_range_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_chunks(1000, 16, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_small_n_runs_inline() {
+        let pool = ThreadPool::new(4);
+        let sum = AtomicU64::new(0);
+        pool.parallel_chunks(3, 8, |r| {
+            for i in r {
+                sum.fetch_add(i as u64, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn wait_idle_with_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        let cc = Arc::clone(&c);
+        pool.execute(move || {
+            cc.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+}

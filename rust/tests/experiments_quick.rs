@@ -1,0 +1,42 @@
+//! Integration: every experiment harness runs end to end in quick mode and
+//! passes its own shape check — the CI-sized version of `paper_eval`.
+
+use zynq_dnn::bench;
+
+fn quick() {
+    std::env::set_var("ZDNN_QUICK", "1");
+}
+
+#[test]
+fn table4_accuracy_pipeline_quick() {
+    quick();
+    let t = bench::table4::run();
+    bench::table4::check_shape(&t).unwrap();
+    // all four paper networks present, paper factors hit
+    assert_eq!(t.rows.len(), 4);
+    for (row, target) in t.rows.iter().zip(bench::PAPER_PRUNE_FACTORS) {
+        assert!((row.target_prune - target).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn nopt_and_combined_quick() {
+    quick();
+    bench::nopt::check_shape(&bench::nopt::run()).unwrap();
+    bench::combined::check_shape(&bench::combined::run()).unwrap();
+}
+
+#[test]
+fn ablation_quick() {
+    quick();
+    bench::ablation::check_shape(&bench::ablation::run()).unwrap();
+}
+
+#[test]
+fn renders_are_nonempty_and_contain_paper_refs() {
+    quick();
+    let t2 = bench::table2::render(&bench::table2::run());
+    assert!(t2.contains("paper"));
+    let f7 = bench::fig7::render(&bench::fig7::run());
+    assert!(f7.contains("batch 8"));
+}

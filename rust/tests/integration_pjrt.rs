@@ -1,0 +1,117 @@
+//! Integration: PJRT artifacts (Layers 1+2) vs the rust golden model.
+//! The AOT HLO must be *bit-identical* to `forward_q` — this is the
+//! contract that lets the coordinator swap backends freely.
+//!
+//! Requires `make artifacts`; tests panic with a clear message otherwise.
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::nn::forward::forward_q;
+use zynq_dnn::nn::spec::by_name;
+use zynq_dnn::nn::quantize_matrix;
+use zynq_dnn::runtime::{default_artifacts_dir, Manifest, Runtime};
+use zynq_dnn::tensor::MatF;
+use zynq_dnn::util::rng::Xoshiro256;
+
+fn require_artifacts() -> std::path::PathBuf {
+    let dir = default_artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    dir
+}
+
+fn rand_input(n: usize, cols: usize, seed: u64) -> zynq_dnn::tensor::MatI {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    quantize_matrix(&MatF::from_vec(
+        n,
+        cols,
+        (0..n * cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+    ))
+}
+
+#[test]
+fn manifest_consistent_with_rust_specs() {
+    let m = Manifest::load(&require_artifacts()).unwrap();
+    assert!(m.entries.len() >= 20, "expected the full artifact set");
+    for e in &m.entries {
+        let spec = by_name(&e.network).expect("manifest network known to rust");
+        assert_eq!(spec.sizes, e.architecture, "{}", e.network);
+        assert_eq!(spec.num_parameters(), e.num_parameters, "{}", e.network);
+        assert_eq!(
+            spec.weight_shapes(),
+            e.weight_shapes,
+            "{} weight shapes",
+            e.network
+        );
+        assert_eq!(e.input_shape, (e.batch, spec.inputs()));
+        assert_eq!(e.output_shape, (e.batch, spec.outputs()));
+    }
+    // every paper network has the full batch sweep
+    for net in ["mnist4", "mnist8", "har4", "har6"] {
+        assert_eq!(m.batches_for(net), vec![1, 2, 4, 8, 16, 32], "{net}");
+    }
+}
+
+#[test]
+fn quickstart_bit_exact_across_batches() {
+    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let spec = by_name("quickstart").unwrap();
+    let net = random_qnet(&spec, 0x111);
+    for batch in [1usize, 4] {
+        let model = rt.load("quickstart", batch).unwrap();
+        let x = rand_input(batch, spec.inputs(), 0x222 + batch as u64);
+        let got = model.execute(&x, &net.weights).unwrap();
+        let want = forward_q(&net, &x).unwrap();
+        assert_eq!(got.data, want.data, "batch {batch}");
+    }
+}
+
+#[test]
+fn mnist4_bit_exact_batch2() {
+    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let spec = by_name("mnist4").unwrap();
+    let net = random_qnet(&spec, 0x333);
+    let model = rt.load("mnist4", 2).unwrap();
+    let x = rand_input(2, 784, 0x444);
+    let got = model.execute(&x, &net.weights).unwrap();
+    let want = forward_q(&net, &x).unwrap();
+    assert_eq!(got.data, want.data);
+}
+
+#[test]
+fn har4_bit_exact_with_pruned_weights() {
+    // pruned networks reuse the dense artifact (zeros in the weights)
+    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let spec = by_name("har4").unwrap();
+    let net = zynq_dnn::sim::pruning::prune_qnetwork(&random_qnet(&spec, 0x555), 0.88);
+    let model = rt.load("har4", 1).unwrap();
+    let x = rand_input(1, 561, 0x666);
+    let got = model.execute(&x, &net.weights).unwrap();
+    let want = forward_q(&net, &x).unwrap();
+    assert_eq!(got.data, want.data);
+}
+
+#[test]
+fn wrong_shapes_rejected() {
+    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let spec = by_name("quickstart").unwrap();
+    let net = random_qnet(&spec, 0x777);
+    let model = rt.load("quickstart", 1).unwrap();
+    // wrong batch
+    let x = rand_input(2, 64, 1);
+    assert!(model.execute(&x, &net.weights).is_err());
+    // wrong weight count
+    let x = rand_input(1, 64, 1);
+    assert!(model.execute(&x, &net.weights[..1]).is_err());
+    // unknown artifact
+    assert!(rt.load("quickstart", 999).is_err());
+}
+
+#[test]
+fn compile_cache_returns_same_model() {
+    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let a = rt.load("quickstart", 1).unwrap();
+    let b = rt.load("quickstart", 1).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}

@@ -1,0 +1,105 @@
+//! Integration: the cycle-level simulators vs the golden model and the
+//! §4.4 closed forms — functional bit-exactness on real paper networks,
+//! timing agreement with the analytic formulas.
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::nn::forward::forward_q;
+use zynq_dnn::nn::spec::{har_4, mnist_4, paper_networks};
+use zynq_dnn::nn::quantize_matrix;
+use zynq_dnn::perfmodel::hw::{per_sample_time, HwConfig};
+use zynq_dnn::sim::batch::BatchAccelerator;
+use zynq_dnn::sim::pruning::{prune_qnetwork, PruningAccelerator, SparseNetwork};
+use zynq_dnn::tensor::MatF;
+use zynq_dnn::util::rng::Xoshiro256;
+
+fn rand_input(n: usize, cols: usize, seed: u64) -> zynq_dnn::tensor::MatI {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    quantize_matrix(&MatF::from_vec(
+        n,
+        cols,
+        (0..n * cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+    ))
+}
+
+#[test]
+fn batch_sim_bit_exact_on_mnist4() {
+    let net = random_qnet(&mnist_4(), 1);
+    for batch in [1usize, 4] {
+        let acc = BatchAccelerator::zedboard(batch);
+        let x = rand_input(batch, 784, 2);
+        let (y, t) = acc.run(&net, &x).unwrap();
+        assert_eq!(y.data, forward_q(&net, &x).unwrap().data, "batch {batch}");
+        assert!(t.total_seconds > 0.0);
+    }
+}
+
+#[test]
+fn pruning_sim_bit_exact_on_har4_at_paper_factor() {
+    let net = prune_qnetwork(&random_qnet(&har_4(), 3), 0.88);
+    let snet = SparseNetwork::encode(&net).unwrap();
+    let acc = PruningAccelerator::zedboard();
+    let x = rand_input(2, 561, 4);
+    let (y, _) = acc.run(&snet, &x).unwrap();
+    assert_eq!(y.data, forward_q(&net, &x).unwrap().data);
+}
+
+#[test]
+fn batch_sim_tracks_closed_form_within_overheads() {
+    // sim = closed form + (prologue + drain + per-sample software overhead);
+    // the pure t_proc part must agree within 5% once overheads are removed
+    for spec in paper_networks() {
+        let net = random_qnet(&spec, 5);
+        for batch in [1usize, 16] {
+            let acc = BatchAccelerator::zedboard(batch);
+            let sim = acc.timing_only(&net);
+            let cfg = HwConfig::batch_design(acc.m, batch, acc.memory.effective());
+            let formula = per_sample_time(&cfg, &spec, &[]);
+            let sim_core =
+                (sim.total_seconds - acc.sample_overhead * batch as f64) / batch as f64;
+            let rel = (sim_core - formula).abs() / formula;
+            assert!(
+                rel < 0.30,
+                "{} batch {batch}: sim-core {sim_core:.6} vs formula {formula:.6} ({rel:.2})",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn pruning_sim_memory_accounting_matches_encoder() {
+    let net = prune_qnetwork(&random_qnet(&har_4(), 6), 0.9);
+    let snet = SparseNetwork::encode(&net).unwrap();
+    let acc = PruningAccelerator::zedboard();
+    let t = acc.timing_only(&snet);
+    assert_eq!(t.total_weight_bytes(), snet.stream_bytes());
+}
+
+#[test]
+fn sim_batch_weight_bytes_equal_2_per_param() {
+    for spec in paper_networks() {
+        let net = random_qnet(&spec, 7);
+        let t = BatchAccelerator::zedboard(8).timing_only(&net);
+        assert_eq!(
+            t.total_weight_bytes() as usize,
+            2 * spec.num_parameters(),
+            "{}",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn all_backends_agree_on_one_network() {
+    // native, batch sim, pruning sim (at q=0 the sparse stream is dense)
+    let net = random_qnet(&har_4(), 8);
+    let x = rand_input(2, 561, 9);
+    let golden = forward_q(&net, &x).unwrap();
+
+    let (y_batch, _) = BatchAccelerator::zedboard(2).run(&net, &x).unwrap();
+    assert_eq!(y_batch.data, golden.data);
+
+    let snet = SparseNetwork::encode(&net).unwrap();
+    let (y_sparse, _) = PruningAccelerator::zedboard().run(&snet, &x).unwrap();
+    assert_eq!(y_sparse.data, golden.data);
+}
