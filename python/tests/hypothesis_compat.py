@@ -1,0 +1,36 @@
+"""Import `hypothesis` when available, else degrade property tests to skips.
+
+The offline test image does not ship `hypothesis`; without this shim the
+three property-test modules fail at *collection*, taking every
+non-property test in them down too.  With it, `@given` tests are reported
+as skipped and everything else runs.  When hypothesis is installed the
+real objects are re-exported unchanged.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(f):
+            return pytest.mark.skip(reason="hypothesis not installed")(f)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _Strategies:
+        """Stand-in for `hypothesis.strategies`: every strategy factory
+        (st.integers, st.lists, ...) returns an inert placeholder, which is
+        fine because the stubbed `given` never evaluates its arguments."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

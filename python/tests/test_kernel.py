@@ -7,7 +7,7 @@ section sizes, activations, and in the wrapping-overflow regime.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from compile.kernels import activations as act
 from compile.kernels import batch_mm, ref

@@ -1,0 +1,14 @@
+//! `cargo bench --bench bench_sparse` — dense vs sparse ExecPlan execution
+//! across prune factors 0.5–0.95 at serving batches {1, 25, 57} on the
+//! HAR-sized net, with bit-equality asserted on every configuration.
+//! Exits 1 if sparse does not beat dense at prune factor >= 0.9.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = zynq_dnn::bench::sparse::run();
+    println!("{}", zynq_dnn::bench::sparse::render(&r));
+    if let Err(e) = zynq_dnn::bench::sparse::check_shape(&r) {
+        eprintln!("SHAPE CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+}

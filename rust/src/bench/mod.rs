@@ -10,6 +10,7 @@ pub mod fig7;
 pub mod gops;
 pub mod nopt;
 pub mod report;
+pub mod sparse;
 pub mod table2;
 pub mod table3;
 pub mod table4;

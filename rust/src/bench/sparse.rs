@@ -1,0 +1,158 @@
+//! Dense vs sparse execution-plan benchmark: the host-serving twin of the
+//! paper's §5.6 pruning claim.  Compiles one dense-only and one
+//! sparse-always [`ExecPlan`](crate::exec::ExecPlan) per pruning factor
+//! and races them across serving batch sizes, cross-checking bit-equality
+//! on every configuration.  `check_shape` asserts the kernel-selection
+//! policy's premise: sparse must win wherever q_prune ≥ 0.9.
+
+use super::report::{ms, ratio, Table};
+use super::{quick_mode, random_qnet};
+use crate::exec::{ExecPlan, PlanOptions};
+use crate::nn::spec::{har_4, har_6};
+use crate::sim::pruning::prune_qnetwork;
+use crate::tensor::{MatF, MatI};
+use crate::util::bench_loop;
+use crate::util::rng::Xoshiro256;
+
+/// One (pruning factor, batch) configuration's timings.
+#[derive(Debug, Clone)]
+pub struct SparseBenchRow {
+    pub prune_target: f64,
+    pub prune_achieved: f64,
+    pub batch: usize,
+    /// Mean seconds per batch on the dense-only plan.
+    pub dense_seconds: f64,
+    /// Mean seconds per batch on the sparse-always plan.
+    pub sparse_seconds: f64,
+}
+
+impl SparseBenchRow {
+    pub fn speedup(&self) -> f64 {
+        self.dense_seconds / self.sparse_seconds
+    }
+}
+
+/// The benchmark result: rows in (prune, batch) sweep order.
+#[derive(Debug, Clone)]
+pub struct SparseBench {
+    pub network: String,
+    pub rows: Vec<SparseBenchRow>,
+}
+
+/// The sweep: paper-bracketing prune factors × the serving batch sizes the
+/// paper's Table 3 latency analysis uses (1, 25, 57).
+pub const PRUNE_SWEEP: [f64; 4] = [0.5, 0.75, 0.9, 0.95];
+pub const BATCH_SWEEP: [usize; 3] = [1, 25, 57];
+
+pub fn run() -> SparseBench {
+    let quick = quick_mode();
+    // HAR-sized evaluation net (quick mode shrinks to HAR-4 for CI)
+    let spec = if quick { har_4() } else { har_6() };
+    let iters = if quick { 5 } else { 8 };
+    let base = random_qnet(&spec, 0x5BA5);
+    let mut rng = Xoshiro256::seed_from_u64(0x5BA6);
+    let mut rows = Vec::new();
+    for &q in &PRUNE_SWEEP {
+        let pruned = prune_qnetwork(&base, q);
+        let achieved = pruned.overall_prune_factor();
+        let mut dense = ExecPlan::compile_q(&pruned, &PlanOptions::dense_only())
+            .expect("dense plan compiles");
+        let mut sparse = ExecPlan::compile_q(&pruned, &PlanOptions::sparse_always())
+            .expect("sparse plan compiles");
+        for &batch in &BATCH_SWEEP {
+            let x = crate::nn::quantize_matrix(&MatF::from_vec(
+                batch,
+                spec.inputs(),
+                (0..batch * spec.inputs())
+                    .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                    .collect(),
+            ));
+            let want: MatI = dense.run(&x).expect("dense run").clone();
+            let got = sparse.run(&x).expect("sparse run");
+            assert_eq!(got.data, want.data, "sparse diverges at q={q} batch={batch}");
+            let (dense_seconds, _) = bench_loop(1, iters, || {
+                dense.run(&x).expect("dense run");
+            });
+            let (sparse_seconds, _) = bench_loop(1, iters, || {
+                sparse.run(&x).expect("sparse run");
+            });
+            rows.push(SparseBenchRow {
+                prune_target: q,
+                prune_achieved: achieved,
+                batch,
+                dense_seconds,
+                sparse_seconds,
+            });
+        }
+    }
+    SparseBench {
+        network: spec.name,
+        rows,
+    }
+}
+
+pub fn render(b: &SparseBench) -> String {
+    let mut t = Table::new(
+        &format!("dense vs sparse ExecPlan ({})", b.network),
+        &["q_prune", "batch", "dense ms", "sparse ms", "speedup"],
+    );
+    for r in &b.rows {
+        t.row(vec![
+            format!("{:.2} ({:.3})", r.prune_target, r.prune_achieved),
+            r.batch.to_string(),
+            ms(r.dense_seconds),
+            ms(r.sparse_seconds),
+            ratio(r.speedup()),
+        ]);
+    }
+    t.footnote("outputs bit-identical on every configuration (asserted)");
+    t.footnote("sparse kernel executes the §5.6 tuple stream via a CSR view");
+    t.render()
+}
+
+/// Qualitative shape: sparse execution must beat dense at every pruning
+/// factor ≥ 0.9 (the kernel-selection policy's premise), and the speedup
+/// at the heaviest pruning must exceed the one at the lightest.
+///
+/// Judged on *per-prune-level totals across the batch sweep*, not on
+/// individual (prune, batch) cells: single cells are a handful of
+/// milliseconds and one scheduler preemption on a loaded CI runner could
+/// flip them, while the ~5–10× aggregate margin at q ≥ 0.9 is robust.
+pub fn check_shape(b: &SparseBench) -> Result<(), String> {
+    let level = |q: f64| {
+        let rs: Vec<&SparseBenchRow> = b
+            .rows
+            .iter()
+            .filter(|r| (r.prune_target - q).abs() < 1e-9)
+            .collect();
+        let dense: f64 = rs.iter().map(|r| r.dense_seconds).sum();
+        let sparse: f64 = rs.iter().map(|r| r.sparse_seconds).sum();
+        (dense, sparse)
+    };
+    let mut saw_heavy = false;
+    for &q in PRUNE_SWEEP.iter().filter(|&&q| q >= 0.9) {
+        saw_heavy = true;
+        let (dense, sparse) = level(q);
+        if sparse >= dense {
+            return Err(format!(
+                "sparse ({sparse:.6}s) not faster than dense ({dense:.6}s) across batches at q={q}"
+            ));
+        }
+    }
+    if !saw_heavy {
+        return Err("no rows with prune factor >= 0.9".to_string());
+    }
+    let speedup = |q: f64| {
+        let (dense, sparse) = level(q);
+        dense / sparse.max(f64::MIN_POSITIVE)
+    };
+    let (lo, hi) = (speedup(PRUNE_SWEEP[0]), speedup(*PRUNE_SWEEP.last().unwrap()));
+    if hi <= lo {
+        return Err(format!(
+            "speedup should grow with pruning: {lo:.2}x at q={} vs {hi:.2}x at q={}",
+            PRUNE_SWEEP[0],
+            PRUNE_SWEEP.last().unwrap()
+        ));
+    }
+    Ok(())
+}

@@ -22,7 +22,7 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Bounded request-queue depth (backpressure beyond this).
     pub queue_depth: usize,
-    /// Backend: "pjrt", "native", "sim-batch", "sim-prune".
+    /// Backend: "pjrt", "native", "native-sparse", "sim-batch", "sim-prune".
     pub backend: String,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
@@ -106,7 +106,7 @@ impl ServerConfig {
             );
         }
         match self.backend.as_str() {
-            "pjrt" | "native" | "sim-batch" | "sim-prune" => Ok(()),
+            "pjrt" | "native" | "native-sparse" | "sim-batch" | "sim-prune" => Ok(()),
             other => bail!("unknown backend {other:?}"),
         }
     }
@@ -140,6 +140,15 @@ mod tests {
         assert_eq!(cfg.workers, 2);
         // untouched keys keep defaults
         assert_eq!(cfg.queue_depth, 1024);
+    }
+
+    #[test]
+    fn native_sparse_backend_accepted() {
+        let cfg = ServerConfig {
+            backend: "native-sparse".into(),
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

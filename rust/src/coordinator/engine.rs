@@ -7,12 +7,12 @@ use std::path::PathBuf;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::nn::forward::{forward_q, forward_q_parallel, QNetwork};
+use crate::exec::{ExecPlan, PlanOptions};
+use crate::nn::forward::QNetwork;
 use crate::runtime::Runtime;
 use crate::sim::batch::BatchAccelerator;
 use crate::sim::pruning::{PruningAccelerator, SparseNetwork};
 use crate::tensor::MatI;
-use crate::util::threadpool::ThreadPool;
 
 /// A batch executor.  `infer` consumes a (batch × s_0) Q7.8 matrix and
 /// returns (batch × s_out); implementations must be bit-identical.
@@ -34,7 +34,7 @@ pub struct EngineFactory {
     pub batch: usize,
     pub net: QNetwork,
     pub artifacts_dir: PathBuf,
-    /// Threads for the native engine's parallel GEMM.
+    /// Threads for the native engines' parallel (dense and sparse) kernels.
     pub native_threads: usize,
 }
 
@@ -42,11 +42,18 @@ impl EngineFactory {
     pub fn build(&self) -> Result<Box<dyn Engine>> {
         ensure!(self.batch >= 1, "batch must be >= 1");
         Ok(match self.backend.as_str() {
-            "native" => Box::new(NativeEngine {
-                net: self.net.clone(),
-                batch: self.batch,
-                pool: (self.native_threads > 1).then(|| ThreadPool::new(self.native_threads)),
-            }),
+            "native" => Box::new(NativeEngine::compile(
+                "native",
+                &self.net,
+                self.batch,
+                PlanOptions::default().with_threads(self.native_threads),
+            )?),
+            "native-sparse" => Box::new(NativeEngine::compile(
+                "native-sparse",
+                &self.net,
+                self.batch,
+                PlanOptions::sparse_always().with_threads(self.native_threads),
+            )?),
             "pjrt" => {
                 let mut runtime = Runtime::new(&self.artifacts_dir)?;
                 let model = runtime.load(&self.net.spec.name, self.batch)?;
@@ -77,25 +84,41 @@ impl EngineFactory {
     }
 }
 
-/// Bit-exact rust Q7.8 engine (software reference on the host).
+/// Bit-exact rust Q7.8 engine (software reference on the host): one
+/// [`ExecPlan`] compiled at engine construction, reused for every batch.
+/// `native` lets the plan compiler pick kernels from the measured per-layer
+/// pruning factors; `native-sparse` forces the §5.6 tuple-stream CSR kernel
+/// on every layer, so pruned networks serve sparse end-to-end.
 struct NativeEngine {
-    net: QNetwork,
+    plan: ExecPlan,
     batch: usize,
-    pool: Option<ThreadPool>,
+    name: &'static str,
+}
+
+impl NativeEngine {
+    fn compile(
+        name: &'static str,
+        net: &QNetwork,
+        batch: usize,
+        opts: PlanOptions,
+    ) -> Result<Self> {
+        Ok(Self {
+            plan: ExecPlan::compile_q(net, &opts)?,
+            batch,
+            name,
+        })
+    }
 }
 
 impl Engine for NativeEngine {
     fn name(&self) -> &'static str {
-        "native"
+        self.name
     }
     fn batch(&self) -> usize {
         self.batch
     }
     fn infer(&mut self, x: &MatI) -> Result<MatI> {
-        match &self.pool {
-            Some(pool) => forward_q_parallel(pool, &self.net, x),
-            None => forward_q(&self.net, x),
-        }
+        Ok(self.plan.run(x)?.clone())
     }
 }
 
@@ -212,13 +235,31 @@ mod tests {
     fn native_and_simulators_bit_identical() {
         let x = rand_x(4);
         let mut outs = Vec::new();
-        for backend in ["native", "sim-batch", "sim-prune"] {
+        for backend in ["native", "native-sparse", "sim-batch", "sim-prune"] {
             let mut e = factory(backend, 4).build().unwrap();
+            assert_eq!(e.name(), backend);
             outs.push((backend, e.infer(&x).unwrap()));
         }
         let base = &outs[0].1;
         for (name, y) in &outs[1..] {
             assert_eq!(&y.data, &base.data, "{name} diverges from native");
+        }
+    }
+
+    #[test]
+    fn pruned_net_serves_sparse_bit_identical() {
+        // the end-to-end §5.6 claim: a pruned network on the sparse serving
+        // path matches the dense golden engine and the stream simulator
+        let x = rand_x(6);
+        let mut outs = Vec::new();
+        for backend in ["native", "native-sparse", "sim-batch", "sim-prune"] {
+            let mut f = factory(backend, 6);
+            f.net = crate::sim::pruning::prune_qnetwork(&f.net, 0.9);
+            outs.push((backend, f.build().unwrap().infer(&x).unwrap()));
+        }
+        let base = &outs[0].1;
+        for (name, y) in &outs[1..] {
+            assert_eq!(&y.data, &base.data, "{name} diverges on the pruned net");
         }
     }
 

@@ -5,12 +5,16 @@
 //! trade-off, now at the serving level); an engine thread executes batches
 //! on one of the interchangeable backends:
 //!
-//! * `pjrt`       — the AOT HLO artifacts on the PJRT CPU client (L1+L2),
-//! * `native`     — the bit-identical rust Q7.8 engine,
-//! * `sim-batch`  — the cycle-level batch-design simulator (Fig 5),
-//! * `sim-prune`  — the cycle-level pruning-design simulator (Fig 6).
+//! * `pjrt`          — the AOT HLO artifacts on the PJRT CPU client (L1+L2),
+//! * `native`        — the rust Q7.8 engine on a compiled
+//!   [`ExecPlan`](crate::exec::ExecPlan), which picks dense or sparse
+//!   kernels per layer from the measured pruning factors,
+//! * `native-sparse` — the same engine with the §5.6 tuple-stream CSR
+//!   kernel forced on every layer,
+//! * `sim-batch`     — the cycle-level batch-design simulator (Fig 5),
+//! * `sim-prune`     — the cycle-level pruning-design simulator (Fig 6).
 //!
-//! All four produce bit-identical outputs (integration-tested), so the
+//! All backends produce bit-identical outputs (integration-tested), so the
 //! backend choice only moves the time axis — exactly the separation the
 //! paper draws between functional correctness and throughput.
 

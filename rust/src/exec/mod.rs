@@ -1,0 +1,52 @@
+//! Compiled execution plans: per-layer kernel selection behind one
+//! [`ExecPlan`].
+//!
+//! The paper's two headline optimizations — batch processing (§5.5) and
+//! pruned weight streams (§5.6) — used to live on disjoint code paths
+//! here: `nn::forward` was dense-only and the sparse tuple format was
+//! consumed only by the cycle-level simulator, so a pruned network gained
+//! nothing on the actual serving path.  This module makes the dense/sparse
+//! choice an explicit *compilation* decision (the framing of the FPGA
+//! accelerator surveys): a plan is compiled **once** from a network and
+//! then executed per batch with zero per-layer allocation.
+//!
+//! # Kernel-selection policy
+//!
+//! For every layer transition the compiler measures the pruning factor
+//! `q_prune^(j)` (fraction of zero weights) and picks:
+//!
+//! * **`SparseQ`** when `q_prune^(j)` ≥ [`PlanOptions::sparse_threshold`]
+//!   (default [`DEFAULT_SPARSE_THRESHOLD`]) — the weights are encoded into
+//!   the §5.6 `(w, z)` tuple stream and lowered to a CSR view
+//!   ([`crate::sparse::SparseMatrix::to_csr`]), and the layer executes
+//!   directly on the compressed representation
+//!   ([`crate::tensor::spmm_i32`]).  Work scales with the *remaining*
+//!   weights, so a q = 0.9 layer does ~10 % of the dense MACs.
+//! * **`DenseQ`** otherwise — the register-blocked wrapping-i32 GEMM
+//!   ([`crate::tensor::gemm_i32`]).  Below the threshold the sparse
+//!   format's per-non-zero indexing overhead outweighs the skipped MACs.
+//! * **`DenseF32`** for plans compiled from float weights (the software
+//!   baseline path); no sparse variant exists because pruning is a
+//!   quantized-deployment technique in the paper.
+//!
+//! All Q kernels use wrapping i32 accumulation, which is associative and
+//! commutative mod 2^32 — so every plan, any thread count, any kernel mix,
+//! is **bit-identical** to the golden dense model (property-tested in
+//! [`plan`]).
+//!
+//! # Execution
+//!
+//! The plan owns two ping-pong activation buffers sized to the widest
+//! layer and an optional shared [`ThreadPool`](crate::util::threadpool::ThreadPool);
+//! `run` borrows the input, alternates layer outputs between the two
+//! buffers, and returns a reference into the plan — no `MatI::zeros` (or
+//! any other) allocation inside the per-layer loop.
+//!
+//! ```ignore
+//! let mut plan = ExecPlan::compile_q(&net, &PlanOptions::default())?;
+//! let y = plan.run(&x)?; // &MatI borrowed from the plan's buffers
+//! ```
+
+pub mod plan;
+
+pub use plan::{ExecPlan, KernelKind, PlanOptions, DEFAULT_SPARSE_THRESHOLD};

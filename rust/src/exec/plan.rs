@@ -1,0 +1,437 @@
+//! [`ExecPlan`]: a network compiled to per-layer kernels plus reusable
+//! activation buffers.  See the module docs ([`crate::exec`]) for the
+//! kernel-selection policy.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::nn::forward::QNetwork;
+use crate::nn::spec::{Activation, NetworkSpec};
+use crate::sparse;
+use crate::tensor::{
+    gemm_f32, gemm_i32, gemm_i32_parallel, spmm_i32, spmm_i32_parallel, CsrMatI, MatF, MatI,
+};
+use crate::util::threadpool::ThreadPool;
+
+/// Default minimum per-layer pruning factor at which the compiler selects
+/// the sparse kernel.  Conservative: the CSR kernel's per-non-zero
+/// indexing costs roughly 2–3 dense MACs, so sparse only wins once ≥ ~3/4
+/// of the weights are gone (the paper's evaluation networks prune to
+/// 0.72–0.94, all on the winning side for their large layers).
+pub const DEFAULT_SPARSE_THRESHOLD: f64 = 0.75;
+
+/// Plan-compilation knobs.
+#[derive(Debug, Clone)]
+pub struct PlanOptions {
+    /// Minimum measured per-layer pruning factor (zero-weight fraction in
+    /// [0, 1]) required to select `SparseQ`.  `0.0` forces sparse
+    /// everywhere; any value > 1.0 (e.g. `f64::INFINITY`) forces dense.
+    pub sparse_threshold: f64,
+    /// Worker threads for the row-partitioned parallel kernels; ≤ 1 keeps
+    /// every kernel serial.
+    pub threads: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        Self {
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+            threads: 1,
+        }
+    }
+}
+
+impl PlanOptions {
+    /// Never select the sparse kernel (the golden dense path).
+    pub fn dense_only() -> Self {
+        Self {
+            sparse_threshold: f64::INFINITY,
+            ..Self::default()
+        }
+    }
+
+    /// Select the sparse kernel for every layer (the `native-sparse`
+    /// backend; bit-identical, only the time axis moves).
+    pub fn sparse_always() -> Self {
+        Self {
+            sparse_threshold: 0.0,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+}
+
+/// Which kernel a layer compiled to (introspection for tests, benches, and
+/// reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    DenseQ,
+    SparseQ,
+    DenseF32,
+}
+
+enum Kernel {
+    /// Register-blocked wrapping-i32 GEMM on the dense Q7.8 weights.
+    DenseQ(MatI),
+    /// CSR sparse × dense wrapping GEMM derived from the §5.6 tuple stream.
+    SparseQ(CsrMatI),
+    /// f32 GEMM (software-baseline path).
+    DenseF32(MatF),
+}
+
+impl Kernel {
+    fn kind(&self) -> KernelKind {
+        match self {
+            Kernel::DenseQ(_) => KernelKind::DenseQ,
+            Kernel::SparseQ(_) => KernelKind::SparseQ,
+            Kernel::DenseF32(_) => KernelKind::DenseF32,
+        }
+    }
+}
+
+struct LayerPlan {
+    kernel: Kernel,
+    act: Activation,
+    out_dim: usize,
+}
+
+/// A network compiled for execution: per-layer kernels, double-buffered
+/// activation storage, and an optional shared thread pool.
+pub struct ExecPlan {
+    spec: NetworkSpec,
+    layers: Vec<LayerPlan>,
+    pool: Option<Arc<ThreadPool>>,
+    /// Ping-pong Q7.8 activation buffers (layer `j` writes `qbufs[j % 2]`).
+    qbufs: [MatI; 2],
+    /// Ping-pong f32 buffers (only used by `DenseF32` plans).
+    fbufs: [MatF; 2],
+}
+
+impl ExecPlan {
+    /// Compile a quantized network, choosing `SparseQ` per layer from its
+    /// measured pruning factor (see [`crate::exec`] for the policy).
+    pub fn compile_q(net: &QNetwork, opts: &PlanOptions) -> Result<Self> {
+        let prune = net.prune_factors();
+        let mut layers = Vec::with_capacity(net.weights.len());
+        for ((w, &act), &q) in net
+            .weights
+            .iter()
+            .zip(net.spec.activations.iter())
+            .zip(prune.iter())
+        {
+            let kernel = if q >= opts.sparse_threshold {
+                // encode through the paper's tuple stream so the serving
+                // path exercises the same format the hardware consumes
+                Kernel::SparseQ(sparse::encode_matrix(w)?.to_csr())
+            } else {
+                Kernel::DenseQ(w.clone())
+            };
+            layers.push(LayerPlan {
+                kernel,
+                act,
+                out_dim: w.rows,
+            });
+        }
+        Self::new(net.spec.clone(), layers, opts.threads)
+    }
+
+    /// Compile the f32 software-baseline path.
+    pub fn compile_f32(spec: &NetworkSpec, weights: &[MatF]) -> Result<Self> {
+        let shapes = spec.weight_shapes();
+        ensure!(
+            weights.len() == shapes.len(),
+            "{}: expected {} weight matrices, got {}",
+            spec.name,
+            shapes.len(),
+            weights.len()
+        );
+        let mut layers = Vec::with_capacity(weights.len());
+        for ((w, &act), &(o, i)) in weights.iter().zip(spec.activations.iter()).zip(shapes.iter())
+        {
+            ensure!(
+                w.shape() == (o, i),
+                "{}: weight shape {:?} != {:?}",
+                spec.name,
+                w.shape(),
+                (o, i)
+            );
+            layers.push(LayerPlan {
+                kernel: Kernel::DenseF32(w.clone()),
+                act,
+                out_dim: o,
+            });
+        }
+        Self::new(spec.clone(), layers, 1)
+    }
+
+    fn new(spec: NetworkSpec, layers: Vec<LayerPlan>, threads: usize) -> Result<Self> {
+        ensure!(!layers.is_empty(), "{}: network has no layers", spec.name);
+        Ok(Self {
+            spec,
+            layers,
+            pool: (threads > 1).then(|| Arc::new(ThreadPool::new(threads))),
+            qbufs: [MatI::zeros(0, 0), MatI::zeros(0, 0)],
+            fbufs: [MatF::zeros(0, 0), MatF::zeros(0, 0)],
+        })
+    }
+
+    pub fn spec(&self) -> &NetworkSpec {
+        &self.spec
+    }
+
+    /// The kernel each layer compiled to, in layer order.
+    pub fn kernels(&self) -> Vec<KernelKind> {
+        self.layers.iter().map(|l| l.kernel.kind()).collect()
+    }
+
+    /// Share this plan's pool (e.g. with a sibling plan).  `None` when the
+    /// plan was compiled single-threaded.
+    pub fn pool(&self) -> Option<Arc<ThreadPool>> {
+        self.pool.clone()
+    }
+
+    /// Execute one Q7.8 batch: `x` is (n × s_0), the result borrows the
+    /// plan's activation buffers — clone it to keep it past the next run.
+    pub fn run(&mut self, x: &MatI) -> Result<&MatI> {
+        let pool = self.pool.clone();
+        self.run_q(pool.as_deref(), x)
+    }
+
+    /// [`run`](Self::run) with a caller-borrowed pool (used by the
+    /// `forward_q_parallel` wrapper); the plan's own pool is ignored.
+    pub fn run_with(&mut self, pool: &ThreadPool, x: &MatI) -> Result<&MatI> {
+        self.run_q(Some(pool), x)
+    }
+
+    fn run_q(&mut self, pool: Option<&ThreadPool>, x: &MatI) -> Result<&MatI> {
+        ensure!(
+            x.cols == self.spec.inputs(),
+            "input width {} != {}",
+            x.cols,
+            self.spec.inputs()
+        );
+        let n = x.rows;
+        // grow the ping-pong buffers to the widest layer once, up front —
+        // the per-layer loop below only re-slices existing capacity
+        let widest = self.layers.iter().map(|l| l.out_dim).max().unwrap_or(0);
+        for b in self.qbufs.iter_mut() {
+            b.data.reserve((n * widest).saturating_sub(b.data.len()));
+        }
+        let Self { layers, qbufs, .. } = self;
+        for (j, layer) in layers.iter().enumerate() {
+            let (lo, hi) = qbufs.split_at_mut(1);
+            let (dst, prev) = if j % 2 == 0 {
+                (&mut lo[0], &hi[0])
+            } else {
+                (&mut hi[0], &lo[0])
+            };
+            let src: &MatI = if j == 0 { x } else { prev };
+            dst.rows = n;
+            dst.cols = layer.out_dim;
+            dst.data.resize(n * layer.out_dim, 0); // within capacity: no alloc
+            match &layer.kernel {
+                Kernel::DenseQ(w) => match pool {
+                    // row partitioning needs a few sample rows to win
+                    Some(p) if n >= 4 => gemm_i32_parallel(p, src, w, dst),
+                    _ => gemm_i32(src, w, dst),
+                },
+                Kernel::SparseQ(w) => match pool {
+                    // neuron partitioning parallelizes even batch 1, but
+                    // needs enough rows to amortize the fork
+                    Some(p) if w.rows() >= 64 => spmm_i32_parallel(p, src, w, dst),
+                    _ => spmm_i32(src, w, dst),
+                },
+                Kernel::DenseF32(_) => {
+                    anyhow::bail!("{}: plan was compiled for f32; use run_f32", self.spec.name)
+                }
+            }
+            for v in dst.data.iter_mut() {
+                *v = layer.act.apply_acc(*v);
+            }
+        }
+        Ok(&self.qbufs[(self.layers.len() - 1) % 2])
+    }
+
+    /// Execute one f32 batch (software-baseline plans).
+    ///
+    /// Mirrors [`run_q`](Self::run_q)'s ping-pong machinery over `fbufs`;
+    /// any change to the buffer-sizing or parity logic there must be made
+    /// here too (kept as two concrete copies rather than one generic
+    /// helper — the borrow gymnastics are the subtlest code in the file).
+    pub fn run_f32(&mut self, x: &MatF) -> Result<&MatF> {
+        ensure!(
+            x.cols == self.spec.inputs(),
+            "input width {} != {}",
+            x.cols,
+            self.spec.inputs()
+        );
+        let n = x.rows;
+        let widest = self.layers.iter().map(|l| l.out_dim).max().unwrap_or(0);
+        for b in self.fbufs.iter_mut() {
+            b.data.reserve((n * widest).saturating_sub(b.data.len()));
+        }
+        let Self { layers, fbufs, .. } = self;
+        for (j, layer) in layers.iter().enumerate() {
+            let (lo, hi) = fbufs.split_at_mut(1);
+            let (dst, prev) = if j % 2 == 0 {
+                (&mut lo[0], &hi[0])
+            } else {
+                (&mut hi[0], &lo[0])
+            };
+            let src: &MatF = if j == 0 { x } else { prev };
+            dst.rows = n;
+            dst.cols = layer.out_dim;
+            dst.data.resize(n * layer.out_dim, 0.0);
+            match &layer.kernel {
+                Kernel::DenseF32(w) => gemm_f32(src, w, dst),
+                _ => anyhow::bail!("{}: plan was compiled for Q7.8; use run", self.spec.name),
+            }
+            for v in dst.data.iter_mut() {
+                *v = layer.act.apply_f32(*v);
+            }
+        }
+        Ok(&self.fbufs[(self.layers.len() - 1) % 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quantize_matrix;
+    use crate::nn::spec::quickstart;
+    use crate::sim::pruning::prune_qnetwork;
+    use crate::tensor::gemm_i32_naive;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Xoshiro256;
+
+    /// Independent oracle: the pre-plan forward_q body (naive GEMM +
+    /// activation), deliberately *not* routed through any plan.
+    fn reference_forward_q(net: &QNetwork, x: &MatI) -> MatI {
+        let mut a = x.clone();
+        for (w, act) in net.weights.iter().zip(net.spec.activations.iter()) {
+            let mut z = MatI::zeros(a.rows, w.rows);
+            gemm_i32_naive(&a, w, &mut z);
+            for v in z.data.iter_mut() {
+                *v = act.apply_acc(*v);
+            }
+            a = z;
+        }
+        a
+    }
+
+    fn rand_qnet(spec: NetworkSpec, seed: u64) -> QNetwork {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let ws = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| {
+                quantize_matrix(&MatF::from_vec(
+                    o,
+                    i,
+                    (0..o * i).map(|_| rng.normal_scaled(0.0, 0.1) as f32).collect(),
+                ))
+            })
+            .collect();
+        QNetwork::new(spec, ws).unwrap()
+    }
+
+    fn rand_x(n: usize, cols: usize, seed: u64) -> MatI {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        quantize_matrix(&MatF::from_vec(
+            n,
+            cols,
+            (0..n * cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        ))
+    }
+
+    #[test]
+    fn policy_picks_sparse_above_threshold() {
+        let net = rand_qnet(quickstart(), 1);
+        let dense = ExecPlan::compile_q(&net, &PlanOptions::default()).unwrap();
+        assert_eq!(dense.kernels(), vec![KernelKind::DenseQ; 2]);
+        let pruned = prune_qnetwork(&net, 0.9);
+        let plan = ExecPlan::compile_q(&pruned, &PlanOptions::default()).unwrap();
+        assert_eq!(plan.kernels(), vec![KernelKind::SparseQ; 2]);
+        let forced = ExecPlan::compile_q(&pruned, &PlanOptions::dense_only()).unwrap();
+        assert_eq!(forced.kernels(), vec![KernelKind::DenseQ; 2]);
+    }
+
+    #[test]
+    fn sparse_plan_bit_identical_to_reference() {
+        for q in [0.0, 0.5, 0.9, 0.99] {
+            let net = prune_qnetwork(&rand_qnet(quickstart(), 2), q);
+            let x = rand_x(5, 64, 3);
+            let want = reference_forward_q(&net, &x);
+            for opts in [
+                PlanOptions::default(),
+                PlanOptions::sparse_always(),
+                PlanOptions::dense_only(),
+                PlanOptions::sparse_always().with_threads(3),
+                PlanOptions::dense_only().with_threads(3),
+            ] {
+                let mut plan = ExecPlan::compile_q(&net, &opts).unwrap();
+                assert_eq!(plan.run(&x).unwrap().data, want.data, "q={q} {opts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_reuses_buffers_across_calls() {
+        let net = rand_qnet(quickstart(), 4);
+        let mut plan = ExecPlan::compile_q(&net, &PlanOptions::default()).unwrap();
+        let x = rand_x(8, 64, 5);
+        let p0 = plan.run(&x).unwrap().data.as_ptr();
+        let p1 = plan.run(&x).unwrap().data.as_ptr();
+        assert_eq!(p0, p1, "second run must reuse the same activation buffer");
+    }
+
+    #[test]
+    fn plan_validates_input_and_numeric_path() {
+        let net = rand_qnet(quickstart(), 6);
+        let mut plan = ExecPlan::compile_q(&net, &PlanOptions::default()).unwrap();
+        assert!(plan.run(&MatI::zeros(1, 63)).is_err());
+        assert!(plan.run_f32(&MatF::zeros(1, 64)).is_err());
+        let spec = quickstart();
+        let wf: Vec<MatF> = spec
+            .weight_shapes()
+            .iter()
+            .map(|&(o, i)| MatF::zeros(o, i))
+            .collect();
+        let mut fplan = ExecPlan::compile_f32(&spec, &wf).unwrap();
+        assert_eq!(fplan.kernels(), vec![KernelKind::DenseF32; 2]);
+        assert!(fplan.run(&MatI::zeros(1, 64)).is_err());
+        assert!(fplan.run_f32(&MatF::zeros(1, 64)).is_ok());
+        assert!(ExecPlan::compile_f32(&spec, &wf[..1]).is_err());
+    }
+
+    #[test]
+    fn prop_plan_bit_identical_for_random_nets() {
+        // random architectures, prune factors, thresholds, batch sizes, and
+        // thread counts — every plan must match the naive dense oracle
+        prop_check(25, |g| {
+            let depth = g.usize(2..5);
+            let sizes: Vec<usize> = (0..depth).map(|_| g.usize(1..24)).collect();
+            let spec = NetworkSpec::new("prop", &sizes);
+            let q = g.f64(0.0, 1.0);
+            let seed = g.u64(0..=u64::MAX / 2);
+            let net = prune_qnetwork(&rand_qnet(spec, seed), q);
+            let n = g.usize(1..7);
+            let x = rand_x(n, sizes[0], seed ^ 1);
+            let want = reference_forward_q(&net, &x);
+            let opts = PlanOptions {
+                sparse_threshold: g.f64(0.0, 1.2),
+                threads: g.usize(1..4),
+            };
+            let mut plan = match ExecPlan::compile_q(&net, &opts) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            plan.run(&x).unwrap().data == want.data
+        });
+    }
+}

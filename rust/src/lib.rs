@@ -7,12 +7,14 @@
 //! * **Layer 1/2 (build time)** — `python/compile/`: Pallas fixed-point
 //!   kernels + JAX network forward, AOT-lowered to HLO text artifacts.
 //! * **Layer 3 (this crate)** — the serving coordinator (dynamic batcher,
-//!   section scheduler, PJRT runtime), the cycle-level Zynq accelerator
-//!   simulator for both paper designs (batch processing §5.5, pruning
-//!   §5.6), and every substrate they need: Q7.8 fixed point, sparse weight
-//!   streaming, trainer with magnitude pruning, synthetic datasets,
-//!   analytic §4.4 performance models, and the benchmark harnesses that
-//!   regenerate every table and figure of the paper's evaluation.
+//!   section scheduler, PJRT runtime), compiled execution plans that pick
+//!   dense or sparse kernels per layer (`exec`), the cycle-level Zynq
+//!   accelerator simulator for both paper designs (batch processing §5.5,
+//!   pruning §5.6), and every substrate they need: Q7.8 fixed point,
+//!   sparse weight streaming, trainer with magnitude pruning, synthetic
+//!   datasets, analytic §4.4 performance models, and the benchmark
+//!   harnesses that regenerate every table and figure of the paper's
+//!   evaluation.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
@@ -22,6 +24,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod sim;
 pub mod fixedpoint;
 pub mod nn;

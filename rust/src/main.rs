@@ -7,7 +7,7 @@
 //!   serve                        demo serving loop with the dynamic batcher
 //!   sim                          simulate one network on both accelerators
 //!   bench <which>                regenerate a paper table/figure
-//!                                (table2|table3|table4|fig7|gops|nopt|combined|ablation|all)
+//!                                (table2|table3|table4|fig7|gops|nopt|combined|ablation|sparse|all)
 
 use std::path::PathBuf;
 
@@ -31,7 +31,7 @@ use zynq_dnn::util::rng::Xoshiro256;
 const GLOBAL_FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "network", takes_value: true, help: "network name (mnist4|mnist8|har4|har6|quickstart)" },
     FlagSpec { name: "batch", takes_value: true, help: "batch size" },
-    FlagSpec { name: "backend", takes_value: true, help: "pjrt|native|sim-batch|sim-prune" },
+    FlagSpec { name: "backend", takes_value: true, help: "pjrt|native|native-sparse|sim-batch|sim-prune" },
     FlagSpec { name: "weights", takes_value: true, help: "path to a .zdnw weight file" },
     FlagSpec { name: "out", takes_value: true, help: "output path" },
     FlagSpec { name: "epochs", takes_value: true, help: "training epochs" },
@@ -398,8 +398,14 @@ fn run_bench(args: &Args) -> Result<()> {
         println!("{}", bench::ablation::render(&bench::ablation::run()));
         ran = true;
     }
+    if all || which == "sparse" {
+        println!("{}", bench::sparse::render(&bench::sparse::run()));
+        ran = true;
+    }
     if !ran {
-        bail!("unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|ablation|all)");
+        bail!(
+            "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|ablation|sparse|all)"
+        );
     }
     Ok(())
 }

@@ -5,7 +5,8 @@
 use anyhow::{ensure, Result};
 
 use super::spec::NetworkSpec;
-use crate::tensor::{gemm_f32, gemm_i32, gemm_i32_parallel, MatF, MatI};
+use crate::exec::{ExecPlan, PlanOptions};
+use crate::tensor::{MatF, MatI, Matrix};
 use crate::util::threadpool::ThreadPool;
 
 /// A network ready for Q7.8 inference: spec + quantized weights.
@@ -62,95 +63,63 @@ impl QNetwork {
 }
 
 /// f32 forward pass: x (n × s_0) → (n × s_{L-1}).
+///
+/// Thin wrapper: compiles a transient [`ExecPlan`] per call.  Hot paths
+/// (engines, benches) hold a compiled plan instead.
 pub fn forward_f32(spec: &NetworkSpec, weights: &[MatF], x: &MatF) -> Result<MatF> {
-    ensure!(x.cols == spec.inputs(), "input width {} != {}", x.cols, spec.inputs());
-    ensure!(weights.len() == spec.sizes.len() - 1, "weight count mismatch");
-    let mut a = x.clone();
-    for (w, act) in weights.iter().zip(spec.activations.iter()) {
-        let mut z = MatF::zeros(a.rows, w.rows);
-        gemm_f32(&a, w, &mut z);
-        for v in z.data.iter_mut() {
-            *v = act.apply_f32(*v);
-        }
-        a = z;
-    }
-    Ok(a)
+    let mut plan = ExecPlan::compile_f32(spec, weights)?;
+    Ok(plan.run_f32(x)?.clone())
 }
 
 /// Bit-accurate Q7.8 forward pass (the golden model): x holds Q7.8 values
 /// in i32 lanes; wrapping i32 accumulation; activation per §5.4.
+///
+/// Thin wrapper over a transient dense-only [`ExecPlan`] (dense keeps the
+/// per-call compile cheap; sparse kernels are bit-identical anyway, so
+/// plan-holding callers opt into them via [`PlanOptions`]).  Note the plan
+/// compile clones the weights, so a *per-sample* caller pays roughly one
+/// extra pass over the weight bytes — negligible for batched calls, but
+/// hot per-sample loops should compile one plan and reuse it.
 pub fn forward_q(net: &QNetwork, x: &MatI) -> Result<MatI> {
-    ensure!(
-        x.cols == net.spec.inputs(),
-        "input width {} != {}",
-        x.cols,
-        net.spec.inputs()
-    );
-    let mut a = x.clone();
-    for (w, act) in net.weights.iter().zip(net.spec.activations.iter()) {
-        let mut z = MatI::zeros(a.rows, w.rows);
-        gemm_i32(&a, w, &mut z);
-        for v in z.data.iter_mut() {
-            *v = act.apply_acc(*v);
-        }
-        a = z;
-    }
-    Ok(a)
+    let mut plan = ExecPlan::compile_q(net, &PlanOptions::dense_only())?;
+    Ok(plan.run(x)?.clone())
 }
 
 /// Parallel variant of [`forward_q`] (bit-identical; wrapping adds are
 /// associative mod 2^32 so row partitioning cannot change results).
 pub fn forward_q_parallel(pool: &ThreadPool, net: &QNetwork, x: &MatI) -> Result<MatI> {
-    ensure!(
-        x.cols == net.spec.inputs(),
-        "input width {} != {}",
-        x.cols,
-        net.spec.inputs()
-    );
-    let mut a = x.clone();
-    for (w, act) in net.weights.iter().zip(net.spec.activations.iter()) {
-        let mut z = MatI::zeros(a.rows, w.rows);
-        if a.rows >= 4 {
-            gemm_i32_parallel(pool, &a, w, &mut z);
-        } else {
-            gemm_i32(&a, w, &mut z);
-        }
-        for v in z.data.iter_mut() {
-            *v = act.apply_acc(*v);
-        }
-        a = z;
-    }
-    Ok(a)
+    let mut plan = ExecPlan::compile_q(net, &PlanOptions::dense_only())?;
+    Ok(plan.run_with(pool, x)?.clone())
 }
 
-/// Argmax over each output row (classification decision).
-pub fn argmax_rows(m: &MatI) -> Vec<usize> {
-    (0..m.rows)
-        .map(|r| {
-            let row = m.row(r);
-            row.iter()
-                .enumerate()
-                .max_by_key(|&(_, v)| *v)
-                .map(|(i, _)| i)
-                .unwrap_or(0)
-        })
-        .collect()
-}
-
-/// Argmax for f32 outputs.
-pub fn argmax_rows_f32(m: &MatF) -> Vec<usize> {
+/// Argmax over each row of any ordered matrix (classification decision).
+/// Ties break toward the *last* maximum, matching the wrapping-i32 serving
+/// path's historical behavior.  NaN never displaces the running best, but
+/// a row whose column 0 is NaN degenerately returns 0 — Q7.8 outputs are
+/// integers, and the f32 training path never emits NaN logits.
+pub fn argmax_rows_generic<T: Copy + Default + PartialOrd>(m: &Matrix<T>) -> Vec<usize> {
     (0..m.rows)
         .map(|r| {
             let row = m.row(r);
             let mut best = 0;
-            for (i, v) in row.iter().enumerate() {
-                if *v > row[best] {
+            for (i, v) in row.iter().enumerate().skip(1) {
+                if *v >= row[best] {
                     best = i;
                 }
             }
             best
         })
         .collect()
+}
+
+/// Argmax over each output row of Q7.8 logits.
+pub fn argmax_rows(m: &MatI) -> Vec<usize> {
+    argmax_rows_generic(m)
+}
+
+/// Argmax for f32 outputs.
+pub fn argmax_rows_f32(m: &MatF) -> Vec<usize> {
+    argmax_rows_generic(m)
 }
 
 #[cfg(test)]
@@ -246,6 +215,16 @@ mod tests {
         assert_eq!(argmax_rows(&m), vec![1, 0]);
         let f = MatF::from_vec(1, 3, vec![0.1, 0.9, 0.5]);
         assert_eq!(argmax_rows_f32(&f), vec![1]);
+    }
+
+    #[test]
+    fn argmax_ties_break_to_last_in_both_paths() {
+        // saturated sigmoid outputs tie often; both numeric paths must
+        // agree on the tie rule now that they share one helper
+        let m = MatI::from_vec(1, 4, vec![256, 3, 256, 1]);
+        assert_eq!(argmax_rows(&m), vec![2]);
+        let f = MatF::from_vec(1, 4, vec![1.0, 0.3, 1.0, 0.1]);
+        assert_eq!(argmax_rows_f32(&f), vec![2]);
     }
 
     #[test]

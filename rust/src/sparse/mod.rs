@@ -24,7 +24,7 @@ pub mod huffman;
 
 use anyhow::{ensure, Result};
 
-use crate::tensor::MatI;
+use crate::tensor::{CsrMatI, MatI};
 
 /// Tuples per 64-bit word (`r` in the paper; the pruning datapath has one
 /// multiplier per tuple lane).
@@ -127,11 +127,12 @@ pub fn encode_row(dense: &[i32]) -> Result<SparseRow> {
     })
 }
 
-/// Decode a row back to dense form.  This is the software twin of the
-/// offset-calculation IP: `address_l = l + Σ_{k<l} z_k` (each tuple —
-/// including explicit gap tuples — occupies one position).
-pub fn decode_row(row: &SparseRow) -> Vec<i32> {
-    let mut dense = vec![0i32; row.width];
+/// Walk a row's decoded (address, weight) pairs.  This is the software
+/// twin of the offset-calculation IP: `address_l = l + Σ_{k<l} z_k` (each
+/// tuple — including explicit gap tuples — occupies one position).  The
+/// single walk backs both [`decode_row`] and [`SparseMatrix::to_csr`] so
+/// the dense and CSR views can never desynchronize on the format.
+fn walk_row(row: &SparseRow, mut visit: impl FnMut(usize, i16)) {
     let mut addr = 0usize;
     let mut seen = 0usize;
     'outer: for word in &row.words {
@@ -144,10 +145,16 @@ pub fn decode_row(row: &SparseRow) -> Vec<i32> {
             if addr >= row.width {
                 break 'outer;
             }
-            dense[addr] = i32::from(t.w);
+            visit(addr, t.w);
             addr += 1;
         }
     }
+}
+
+/// Decode a row back to dense form.
+pub fn decode_row(row: &SparseRow) -> Vec<i32> {
+    let mut dense = vec![0i32; row.width];
+    walk_row(row, |addr, w| dense[addr] = i32::from(w));
     dense
 }
 
@@ -209,6 +216,29 @@ impl SparseMatrix {
     /// pruning datapath cycle model).
     pub fn row_tuple_counts(&self) -> Vec<usize> {
         self.rows.iter().map(|r| r.len).collect()
+    }
+
+    /// CSR view of the tuple stream for host-side sparse execution
+    /// (`exec`'s `SparseQ` kernel): walks the packed words exactly like the
+    /// offset-calculation IP, but emits (column, weight) pairs instead of a
+    /// dense row — the stream is never densified.  Explicit gap tuples
+    /// (w = 0) occupy an address but store nothing.
+    pub fn to_csr(&self) -> CsrMatI {
+        let (rows, cols) = self.shape;
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for row in &self.rows {
+            walk_row(row, |addr, w| {
+                if w != 0 {
+                    col_idx.push(addr as u32);
+                    vals.push(i32::from(w));
+                }
+            });
+            row_ptr.push(vals.len());
+        }
+        CsrMatI::new(rows, cols, row_ptr, col_idx, vals)
     }
 }
 
@@ -316,6 +346,42 @@ mod tests {
                 Err(_) => return false,
             };
             decode_row(&row) == dense
+        });
+    }
+
+    #[test]
+    fn to_csr_matches_densify_then_compress() {
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        for density in [0.0, 0.05, 0.3, 1.0] {
+            let mut m = MatI::zeros(17, 90);
+            for v in m.data.iter_mut() {
+                if rng.bernoulli(density) {
+                    *v = rng.below(65536) as i32 - 32768;
+                }
+            }
+            let sm = encode_matrix(&m).unwrap();
+            assert_eq!(sm.to_csr(), CsrMatI::from_dense(&m), "density {density}");
+        }
+    }
+
+    #[test]
+    fn prop_to_csr_roundtrip() {
+        prop_check(150, |g| {
+            let width = g.usize(1..150);
+            let density = g.f64(0.0, 1.0);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let dense: Vec<i32> = (0..width)
+                .map(|_| {
+                    if rng.bernoulli(density) {
+                        rng.below(65536) as i32 - 32768
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let m = MatI::from_vec(1, width, dense);
+            let sm = encode_matrix(&m).unwrap();
+            sm.to_csr().to_dense().data == m.data
         });
     }
 

@@ -5,6 +5,10 @@
 //! The `i32` GEMM uses *wrapping* accumulation to stay bit-identical to the
 //! FPGA DSP accumulators and XLA's int32 dot (see `fixedpoint`).
 
+pub mod sparse;
+
+pub use sparse::{spmm_i32, spmm_i32_parallel, CsrMatI};
+
 use crate::util::threadpool::ThreadPool;
 
 /// Row-major matrix.
@@ -172,19 +176,21 @@ pub fn gemm_i32_naive(x: &MatI, w: &MatI, out: &mut MatI) {
 pub fn gemm_i32(x: &MatI, w: &MatI, out: &mut MatI) {
     assert_eq!(x.cols, w.cols);
     assert_eq!((out.rows, out.cols), (x.rows, w.rows));
-    gemm_i32_rows(x, w, out, 0..x.rows, 0);
+    gemm_i32_rows(x, w, &mut out.data, 0..x.rows, 0);
 }
 
 /// Row-range worker shared by the serial and parallel entry points.
-/// `out` holds rows `rows`, offset by `out_row0` (0 for the serial path).
+/// `out` is the row-major storage (row stride `w.rows`) for sample rows
+/// `rows`, offset by `out_row0` (0 for the serial path).
 fn gemm_i32_rows(
     x: &MatI,
     w: &MatI,
-    out: &mut MatI,
+    out: &mut [i32],
     rows: std::ops::Range<usize>,
     out_row0: usize,
 ) {
     let cols = x.cols;
+    let ocols = w.rows;
     // weight-stationary loop order: a 4-row weight block (a few KB) stays
     // in L1 while every sample row passes over it — W is streamed from
     // DRAM once per GEMM instead of once per sample
@@ -204,7 +210,7 @@ fn gemm_i32_rows(
                 a2 = a2.wrapping_add(w2[k].wrapping_mul(xv));
                 a3 = a3.wrapping_add(w3[k].wrapping_mul(xv));
             }
-            let or = out.row_mut(n - out_row0);
+            let or = &mut out[(n - out_row0) * ocols..(n - out_row0 + 1) * ocols];
             or[o] = a0;
             or[o + 1] = a1;
             or[o + 2] = a2;
@@ -220,36 +226,31 @@ fn gemm_i32_rows(
             for k in 0..cols {
                 acc = acc.wrapping_add(wr[k].wrapping_mul(xr[k]));
             }
-            out.row_mut(n - out_row0)[o] = acc;
+            out[(n - out_row0) * ocols + o] = acc;
         }
         o += 1;
     }
 }
 
 /// Parallel wrapping i32 GEMM over output *sample* rows (each worker owns a
-/// disjoint slice of `out`, so no synchronization on the hot path).
+/// disjoint slice of `out` and writes results in place, so no
+/// synchronization and no scratch copies on the hot path).
 pub fn gemm_i32_parallel(pool: &ThreadPool, x: &MatI, w: &MatI, out: &mut MatI) {
     assert_eq!(x.cols, w.cols);
     assert_eq!((out.rows, out.cols), (x.rows, w.rows));
     let cols = out.cols;
-    // split out.data into per-row chunks; parallel_chunks gives disjoint rows
     let out_ptr = out.data.as_mut_ptr() as usize;
     pool.parallel_chunks(x.rows, 4, |range| {
-        // SAFETY: each range of rows maps to a disjoint slice of out.data
+        // SAFETY: each range of sample rows maps to a disjoint slice of
+        // out.data, so no two workers alias
         let slice = unsafe {
             std::slice::from_raw_parts_mut(
                 (out_ptr as *mut i32).add(range.start * cols),
                 (range.end - range.start) * cols,
             )
         };
-        let mut local = MatI {
-            rows: range.end - range.start,
-            cols,
-            data: std::mem::take(&mut Vec::new()),
-        };
-        local.data = slice.to_vec();
-        gemm_i32_rows(x, w, &mut local, range.clone(), range.start);
-        slice.copy_from_slice(&local.data);
+        let row0 = range.start;
+        gemm_i32_rows(x, w, slice, range, row0);
     });
 }
 

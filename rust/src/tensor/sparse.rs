@@ -1,0 +1,303 @@
+//! CSR sparse × dense GEMM on the Q7.8 wrapping datapath — the host-side
+//! kernel behind the `SparseQ` execution-plan kernel (`exec`), executing
+//! directly on the compressed representation instead of densifying (the
+//! EIE insight applied to the §5.6 pruned weight streams).
+//!
+//! Layout matches the dense kernels: weight row `o` holds the fan-in of
+//! output neuron `o`, so `out[n][o] = Σ_k x[n][k] · w[o][k]` with only the
+//! stored non-zeros visited.  Wrapping i32 accumulation keeps results
+//! bit-identical to [`gemm_i32`](super::gemm_i32): zero weights contribute
+//! exactly 0 to a wrapping sum, and wrapping adds are associative and
+//! commutative mod 2^32, so skipping zeros and re-ordering MACs cannot
+//! change a single bit.
+
+use std::ops::Range;
+
+use super::MatI;
+use crate::util::threadpool::ThreadPool;
+
+/// Compressed sparse row matrix over Q7.8 weights (i32 lanes).
+///
+/// `row_ptr` has `rows + 1` entries; row `o`'s non-zeros are
+/// `col_idx[row_ptr[o]..row_ptr[o+1]]` / `vals[..]`, column-sorted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrMatI {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<i32>,
+}
+
+impl CsrMatI {
+    /// Assemble from raw CSR arrays (shape and monotonicity are checked).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        vals: Vec<i32>,
+    ) -> Self {
+        assert!(cols <= u32::MAX as usize, "column index must fit u32");
+        assert_eq!(row_ptr.len(), rows + 1, "row_ptr length mismatch");
+        assert_eq!(col_idx.len(), vals.len(), "col_idx/vals length mismatch");
+        assert_eq!(row_ptr[0], 0, "row_ptr must start at 0");
+        assert_eq!(*row_ptr.last().unwrap(), vals.len(), "row_ptr end mismatch");
+        debug_assert!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "row_ptr not monotone");
+        debug_assert!(col_idx.iter().all(|&c| (c as usize) < cols), "column out of range");
+        Self {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Compress a dense matrix (drops zeros, keeps column order).
+    pub fn from_dense(m: &MatI) -> Self {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0 {
+                    col_idx.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(vals.len());
+        }
+        Self::new(m.rows, m.cols, row_ptr, col_idx, vals)
+    }
+
+    /// Densify (tests / reporting — never the serving path).
+    pub fn to_dense(&self) -> MatI {
+        let mut out = MatI::zeros(self.rows, self.cols);
+        for o in 0..self.rows {
+            let (idx, vals) = self.row(o);
+            let row = out.row_mut(o);
+            for (&k, &v) in idx.iter().zip(vals.iter()) {
+                row[k as usize] = v;
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// nnz / (rows × cols); 0 for an empty shape.
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Row `o`'s (column indices, values).
+    #[inline(always)]
+    pub fn row(&self, o: usize) -> (&[u32], &[i32]) {
+        let span = self.row_ptr[o]..self.row_ptr[o + 1];
+        (&self.col_idx[span.clone()], &self.vals[span])
+    }
+}
+
+/// Sparse × dense wrapping GEMM: `out[n][o] = Σ x[n][k]·w[o][k]` over
+/// stored non-zeros only.  Bit-identical to the dense `gemm_i32` on the
+/// densified weights.
+pub fn spmm_i32(x: &MatI, w: &CsrMatI, out: &mut MatI) {
+    assert_eq!(x.cols, w.cols());
+    assert_eq!((out.rows, out.cols), (x.rows, w.rows()));
+    let stride = out.cols;
+    // SAFETY: single caller, exclusive &mut out — the raw-pointer worker is
+    // shared with the parallel entry point, which is why it exists at all
+    unsafe { spmm_i32_cols(x, w, out.data.as_mut_ptr(), 0..w.rows(), stride) }
+}
+
+/// Column-range worker shared by the serial and parallel entry points:
+/// writes `out[n][o]` for every sample `n` and each `o` in `orange`
+/// (`out` is row-major with row stride `stride`).
+///
+/// Weight-stationary order (see `gemm_i32_rows`): one sparse row's
+/// (index, value) stream stays hot in L1 while a 4-sample register block
+/// shares each pass over it.
+///
+/// # Safety
+/// `out` must be valid for `x.rows × stride` elements, and no other thread
+/// may concurrently write any element `out[n·stride + o]` with `o` in
+/// `orange` (disjoint column ranges ⇒ disjoint writes).
+unsafe fn spmm_i32_cols(x: &MatI, w: &CsrMatI, out: *mut i32, orange: Range<usize>, stride: usize) {
+    for o in orange {
+        let (idx, vals) = w.row(o);
+        let mut n = 0;
+        while n + 4 <= x.rows {
+            let x0 = x.row(n);
+            let x1 = x.row(n + 1);
+            let x2 = x.row(n + 2);
+            let x3 = x.row(n + 3);
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for (&k, &v) in idx.iter().zip(vals.iter()) {
+                let k = k as usize;
+                a0 = a0.wrapping_add(v.wrapping_mul(x0[k]));
+                a1 = a1.wrapping_add(v.wrapping_mul(x1[k]));
+                a2 = a2.wrapping_add(v.wrapping_mul(x2[k]));
+                a3 = a3.wrapping_add(v.wrapping_mul(x3[k]));
+            }
+            out.add(n * stride + o).write(a0);
+            out.add((n + 1) * stride + o).write(a1);
+            out.add((n + 2) * stride + o).write(a2);
+            out.add((n + 3) * stride + o).write(a3);
+            n += 4;
+        }
+        while n < x.rows {
+            let xr = x.row(n);
+            let mut acc = 0i32;
+            for (&k, &v) in idx.iter().zip(vals.iter()) {
+                acc = acc.wrapping_add(v.wrapping_mul(xr[k as usize]));
+            }
+            out.add(n * stride + o).write(acc);
+            n += 1;
+        }
+    }
+}
+
+/// Parallel [`spmm_i32`], partitioned over *output-neuron* rows so batch-1
+/// inference parallelizes too (each worker owns a disjoint column set of
+/// `out`; samples are shared read-only).
+pub fn spmm_i32_parallel(pool: &ThreadPool, x: &MatI, w: &CsrMatI, out: &mut MatI) {
+    assert_eq!(x.cols, w.cols());
+    assert_eq!((out.rows, out.cols), (x.rows, w.rows()));
+    let stride = out.cols;
+    let out_ptr = out.data.as_mut_ptr() as usize;
+    pool.parallel_chunks(w.rows(), 8, |orange| {
+        // SAFETY: chunks receive disjoint `orange` ranges, so every element
+        // out[n·stride + o] is written by exactly one worker
+        unsafe { spmm_i32_cols(x, w, out_ptr as *mut i32, orange, stride) }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{gemm_i32_naive, MatI};
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_sparse(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> MatI {
+        let mut m = MatI::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            if rng.bernoulli(density) {
+                *v = rng.below(65536) as i32 - 32768;
+            }
+        }
+        m
+    }
+
+    fn rand_x(n: usize, cols: usize, rng: &mut Xoshiro256) -> MatI {
+        MatI::from_vec(
+            n,
+            cols,
+            (0..n * cols).map(|_| rng.below(65536) as i32 - 32768).collect(),
+        )
+    }
+
+    #[test]
+    fn csr_roundtrips_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for density in [0.0, 0.05, 0.5, 1.0] {
+            let m = rand_sparse(13, 29, density, &mut rng);
+            let csr = CsrMatI::from_dense(&m);
+            assert_eq!(csr.to_dense().data, m.data);
+            assert_eq!(csr.nnz(), m.data.iter().filter(|&&v| v != 0).count());
+        }
+    }
+
+    #[test]
+    fn spmm_bit_equal_dense_gemm() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for (n, k, o, d) in [(1, 1, 1, 1.0), (3, 17, 5, 0.2), (8, 300, 33, 0.05), (5, 64, 9, 0.0)] {
+            let w = rand_sparse(o, k, d, &mut rng);
+            let x = rand_x(n, k, &mut rng);
+            let mut dense = MatI::zeros(n, o);
+            let mut sparse = MatI::zeros(n, o);
+            gemm_i32_naive(&x, &w, &mut dense);
+            spmm_i32(&x, &CsrMatI::from_dense(&w), &mut sparse);
+            assert_eq!(dense.data, sparse.data, "n={n} k={k} o={o} d={d}");
+        }
+    }
+
+    #[test]
+    fn spmm_parallel_bit_equal_serial() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let w = CsrMatI::from_dense(&rand_sparse(41, 301, 0.1, &mut rng));
+        for n in [1, 4, 32] {
+            let x = rand_x(n, 301, &mut rng);
+            let mut a = MatI::zeros(n, 41);
+            let mut b = MatI::zeros(n, 41);
+            spmm_i32(&x, &w, &mut a);
+            spmm_i32_parallel(&pool, &x, &w, &mut b);
+            assert_eq!(a.data, b.data, "batch {n}");
+        }
+    }
+
+    #[test]
+    fn spmm_wrapping_overflow_consistent() {
+        // rails products overflow i32 many times over; sparse skipping must
+        // not change the wrapped result
+        let mut w = MatI::from_vec(3, 600, vec![32767; 1800]);
+        for v in w.data.iter_mut().skip(1).step_by(3) {
+            *v = 0; // make it actually sparse
+        }
+        let x = MatI::from_vec(2, 600, vec![32767; 1200]);
+        let mut dense = MatI::zeros(2, 3);
+        let mut sparse = MatI::zeros(2, 3);
+        gemm_i32_naive(&x, &w, &mut dense);
+        spmm_i32(&x, &CsrMatI::from_dense(&w), &mut sparse);
+        assert_eq!(dense.data, sparse.data);
+    }
+
+    #[test]
+    fn density_reports_fill() {
+        let m = MatI::from_vec(2, 2, vec![1, 0, 0, 3]);
+        let csr = CsrMatI::from_dense(&m);
+        assert_eq!(csr.shape(), (2, 2));
+        assert!((csr.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_spmm_equals_naive() {
+        prop_check(60, |g| {
+            let n = g.usize(1..7);
+            let k = g.usize(1..60);
+            let o = g.usize(1..20);
+            let density = g.f64(0.0, 1.0);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let w = rand_sparse(o, k, density, &mut rng);
+            let x = rand_x(n, k, &mut rng);
+            let mut dense = MatI::zeros(n, o);
+            let mut sparse = MatI::zeros(n, o);
+            gemm_i32_naive(&x, &w, &mut dense);
+            spmm_i32(&x, &CsrMatI::from_dense(&w), &mut sparse);
+            dense.data == sparse.data
+        });
+    }
+}

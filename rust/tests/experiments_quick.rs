@@ -33,6 +33,20 @@ fn ablation_quick() {
 }
 
 #[test]
+fn sparse_plan_beats_dense_at_high_pruning_quick() {
+    quick();
+    // acceptance gate for the exec subsystem: sparse plan execution wins
+    // wherever q_prune >= 0.9 (bit-equality is asserted inside run()).
+    // It compares wall-clock aggregates (~5-10x margins), so severely
+    // contended runners can opt out rather than report phantom failures.
+    if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+        eprintln!("skipping: ZDNN_SKIP_PERF=1");
+        return;
+    }
+    bench::sparse::check_shape(&bench::sparse::run()).unwrap();
+}
+
+#[test]
 fn renders_are_nonempty_and_contain_paper_refs() {
     quick();
     let t2 = bench::table2::render(&bench::table2::run());

@@ -2,7 +2,7 @@
 //! The AOT HLO must be *bit-identical* to `forward_q` — this is the
 //! contract that lets the coordinator swap backends freely.
 //!
-//! Requires `make artifacts`; tests panic with a clear message otherwise.
+//! Requires `make artifacts`; tests skip with a clear message otherwise.
 
 use zynq_dnn::bench::random_qnet;
 use zynq_dnn::nn::forward::forward_q;
@@ -12,13 +12,17 @@ use zynq_dnn::runtime::{default_artifacts_dir, Manifest, Runtime};
 use zynq_dnn::tensor::MatF;
 use zynq_dnn::util::rng::Xoshiro256;
 
-fn require_artifacts() -> std::path::PathBuf {
+/// The artifacts are an optional build product (`make artifacts`); tests
+/// skip gracefully when they are absent so `cargo test` stays green on a
+/// fresh checkout.
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
     let dir = default_artifacts_dir();
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts not built — run `make artifacts` first"
-    );
-    dir
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
 }
 
 fn rand_input(n: usize, cols: usize, seed: u64) -> zynq_dnn::tensor::MatI {
@@ -32,7 +36,8 @@ fn rand_input(n: usize, cols: usize, seed: u64) -> zynq_dnn::tensor::MatI {
 
 #[test]
 fn manifest_consistent_with_rust_specs() {
-    let m = Manifest::load(&require_artifacts()).unwrap();
+    let Some(dir) = artifacts_or_skip() else { return };
+    let m = Manifest::load(&dir).unwrap();
     assert!(m.entries.len() >= 20, "expected the full artifact set");
     for e in &m.entries {
         let spec = by_name(&e.network).expect("manifest network known to rust");
@@ -55,7 +60,8 @@ fn manifest_consistent_with_rust_specs() {
 
 #[test]
 fn quickstart_bit_exact_across_batches() {
-    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
     let spec = by_name("quickstart").unwrap();
     let net = random_qnet(&spec, 0x111);
     for batch in [1usize, 4] {
@@ -69,7 +75,8 @@ fn quickstart_bit_exact_across_batches() {
 
 #[test]
 fn mnist4_bit_exact_batch2() {
-    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
     let spec = by_name("mnist4").unwrap();
     let net = random_qnet(&spec, 0x333);
     let model = rt.load("mnist4", 2).unwrap();
@@ -82,7 +89,8 @@ fn mnist4_bit_exact_batch2() {
 #[test]
 fn har4_bit_exact_with_pruned_weights() {
     // pruned networks reuse the dense artifact (zeros in the weights)
-    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
     let spec = by_name("har4").unwrap();
     let net = zynq_dnn::sim::pruning::prune_qnetwork(&random_qnet(&spec, 0x555), 0.88);
     let model = rt.load("har4", 1).unwrap();
@@ -94,7 +102,8 @@ fn har4_bit_exact_with_pruned_weights() {
 
 #[test]
 fn wrong_shapes_rejected() {
-    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
     let spec = by_name("quickstart").unwrap();
     let net = random_qnet(&spec, 0x777);
     let model = rt.load("quickstart", 1).unwrap();
@@ -110,7 +119,8 @@ fn wrong_shapes_rejected() {
 
 #[test]
 fn compile_cache_returns_same_model() {
-    let mut rt = Runtime::new(&require_artifacts()).unwrap();
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
     let a = rt.load("quickstart", 1).unwrap();
     let b = rt.load("quickstart", 1).unwrap();
     assert!(std::rc::Rc::ptr_eq(&a, &b));

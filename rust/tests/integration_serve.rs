@@ -48,12 +48,19 @@ fn rand_inputs(n: usize, width: usize, seed: u64) -> Vec<Vec<i32>> {
 }
 
 #[test]
-fn all_four_backends_serve_identical_outputs() {
-    assert!(have_artifacts(), "run `make artifacts` first");
-    let net = random_qnet(&quickstart(), 0x90);
+fn all_backends_serve_identical_outputs() {
+    // serve a *pruned* net so native-sparse exercises real sparsity; the
+    // pjrt backend joins only when its AOT artifacts are built
+    let net = zynq_dnn::sim::pruning::prune_qnetwork(&random_qnet(&quickstart(), 0x90), 0.85);
     let inputs = rand_inputs(12, 64, 0x91);
+    let mut backends = vec!["native", "native-sparse", "sim-batch", "sim-prune"];
+    if have_artifacts() {
+        backends.push("pjrt");
+    } else {
+        eprintln!("skipping pjrt backend: artifacts not built (run `make artifacts`)");
+    }
     let mut reference: Option<Vec<Vec<i32>>> = None;
-    for backend in ["native", "pjrt", "sim-batch", "sim-prune"] {
+    for backend in backends {
         let server = Server::start(&config(4, backend), factory(backend, 4, net.clone())).unwrap();
         let rxs: Vec<_> = inputs
             .iter()
@@ -73,7 +80,10 @@ fn all_four_backends_serve_identical_outputs() {
 
 #[test]
 fn pjrt_served_accuracy_matches_direct_eval() {
-    assert!(have_artifacts(), "run `make artifacts` first");
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
     // train a small HAR-4 quickly, then serve the test set through PJRT
     let train = har::generate(400, 1);
     let test = har::generate(120, 2);

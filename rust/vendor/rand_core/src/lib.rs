@@ -1,0 +1,84 @@
+//! Offline stand-in for the crates.io `rand_core` crate (0.6 API subset):
+//! the [`RngCore`] trait, its [`Error`] type, and the `impls` helpers the
+//! workspace's xoshiro256** implementation relies on.  Swap for the real
+//! crate without touching any consumer.
+
+use std::fmt;
+
+/// The core RNG trait (rand_core 0.6 shape).
+pub trait RngCore {
+    fn next_u32(&mut self) -> u32;
+    fn next_u64(&mut self) -> u64;
+    fn fill_bytes(&mut self, dest: &mut [u8]);
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error>;
+}
+
+/// RNG error type (infallible in practice for deterministic generators).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new<M: fmt::Display>(msg: M) -> Self {
+        Self {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Helper implementations for `RngCore` methods (rand_core::impls subset).
+pub mod impls {
+    use super::RngCore;
+
+    /// Fill a byte slice from successive `next_u64` draws (little-endian).
+    pub fn fill_bytes_via_next<R: RngCore + ?Sized>(rng: &mut R, dest: &mut [u8]) {
+        let mut i = 0;
+        while i < dest.len() {
+            let chunk = rng.next_u64().to_le_bytes();
+            let n = (dest.len() - i).min(8);
+            dest[i..i + n].copy_from_slice(&chunk[..n]);
+            i += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter(u64);
+    impl RngCore for Counter {
+        fn next_u32(&mut self) -> u32 {
+            self.next_u64() as u32
+        }
+        fn next_u64(&mut self) -> u64 {
+            self.0 += 1;
+            self.0
+        }
+        fn fill_bytes(&mut self, dest: &mut [u8]) {
+            impls::fill_bytes_via_next(self, dest)
+        }
+        fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+            self.fill_bytes(dest);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn fill_bytes_covers_partial_chunks() {
+        let mut rng = Counter(0);
+        let mut buf = [0u8; 11];
+        rng.fill_bytes(&mut buf);
+        assert_eq!(buf[0], 1); // first draw, little-endian low byte
+        assert_eq!(buf[8], 2); // second draw starts at offset 8
+    }
+}
