@@ -23,7 +23,12 @@ fn main() -> Result<()> {
     let test = har::generate(400, 2);
 
     // ---- train dense baseline
-    println!("training {} ({}) on {} synthetic HAR samples…", spec.name, spec.abbrev(), train.len());
+    println!(
+        "training {} ({}) on {} synthetic HAR samples…",
+        spec.name,
+        spec.abbrev(),
+        train.len()
+    );
     let mut trainer = Trainer::new(spec.clone(), 11);
     trainer.fit(
         &train,

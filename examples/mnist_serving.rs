@@ -20,7 +20,10 @@ fn main() -> Result<()> {
     let test = mnist::generate(64, 3);
 
     println!("== simulator view (whole batches) ==");
-    println!("{:<8} {:>6} {:>14} {:>16} {:>12}", "batch n", "MACs", "ms/sample", "samples/s", "latency ms");
+    println!(
+        "{:<8} {:>6} {:>14} {:>16} {:>12}",
+        "batch n", "MACs", "ms/sample", "samples/s", "latency ms"
+    );
     for n in [1usize, 2, 4, 8, 16, 32] {
         let acc = BatchAccelerator::zedboard(n);
         let t = acc.timing_only(&qnet);
@@ -49,6 +52,7 @@ fn main() -> Result<()> {
             net: qnet.clone(),
             artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
             native_threads: 1,
+            sparse_threshold: None,
         };
         let server = Server::start(&cfg, factory)?;
         let mut rxs = Vec::new();
@@ -65,7 +69,8 @@ fn main() -> Result<()> {
         }
         let snap = server.metrics.snapshot();
         println!(
-            "batch {n:>2}: {} requests, occupancy {:.2}, mean sim compute/batch {}, mean e2e latency {}",
+            "batch {n:>2}: {} requests, occupancy {:.2}, mean sim compute/batch {}, \
+             mean e2e latency {}",
             snap.requests,
             snap.occupancy,
             fmt_time(sim_compute / rxs.len() as f64),

@@ -82,6 +82,7 @@ fn main() -> Result<()> {
         net: qnet.clone(),
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
         native_threads: 1,
+        sparse_threshold: None,
     };
     let server = Server::start(&cfg, factory)?;
     let n_req = if quick { 32 } else { 256 };
@@ -100,7 +101,8 @@ fn main() -> Result<()> {
     let wall = serve_t0.elapsed().as_secs_f64();
     let snap = server.metrics.snapshot();
     println!(
-        "      {} requests in {}: {:.0} req/s, mean latency {}, p95 {}, occupancy {:.2}, acc {:.1}%\n",
+        "      {} requests in {}: {:.0} req/s, mean latency {}, p95 {}, \
+         occupancy {:.2}, acc {:.1}%\n",
         n_req,
         fmt_time(wall),
         n_req as f64 / wall,

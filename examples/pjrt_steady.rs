@@ -4,7 +4,8 @@
 fn main() {
     let spec = zynq_dnn::nn::spec::mnist_4();
     let net = zynq_dnn::bench::random_qnet(&spec, 1);
-    let mut rt = zynq_dnn::runtime::Runtime::new(&zynq_dnn::runtime::default_artifacts_dir()).unwrap();
+    let mut rt =
+        zynq_dnn::runtime::Runtime::new(&zynq_dnn::runtime::default_artifacts_dir()).unwrap();
     let model = rt.load("mnist4", 16).unwrap();
     let x = zynq_dnn::tensor::MatI::from_vec(16, 784, vec![64; 16 * 784]);
 
@@ -13,13 +14,15 @@ fn main() {
         zynq_dnn::util::fmt_time(mean), zynq_dnn::util::fmt_time(mean / 16.0));
 
     let bound = model.bind_weights(&net.weights).unwrap();
-    let (mean_b, _) = zynq_dnn::util::bench_loop(3, 20, || model.execute_bound(&x, &bound).unwrap());
+    let (mean_b, _) =
+        zynq_dnn::util::bench_loop(3, 20, || model.execute_bound(&x, &bound).unwrap());
     println!("pjrt pinned-weights   mnist4 b16: {} /batch ({} /sample)",
         zynq_dnn::util::fmt_time(mean_b), zynq_dnn::util::fmt_time(mean_b / 16.0));
 
     let mut eng = zynq_dnn::coordinator::EngineFactory {
         backend: "native".into(), batch: 16, net: net.clone(),
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(), native_threads: 1,
+        sparse_threshold: None,
     }.build().unwrap();
     let (mean_n, _) = zynq_dnn::util::bench_loop(3, 20, || eng.infer(&x).unwrap());
     println!("native                mnist4 b16: {} /batch ({} /sample)",

@@ -79,6 +79,7 @@ fn main() -> Result<()> {
         net: qnet.clone(),
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
         native_threads: 1,
+        sparse_threshold: None,
     };
     let server = Server::start(&cfg, factory)?;
     println!("serving on the PJRT CPU client (AOT HLO artifact), batch {batch}…");

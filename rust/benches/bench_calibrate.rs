@@ -1,0 +1,15 @@
+//! `cargo bench --bench bench_calibrate` — dense/CSR kernel crossover
+//! calibration on the HAR-sized net; prints the measured pruning factor at
+//! which the sparse plan starts winning (feed it to the CLI as
+//! `--threshold`).  Exits 1 if sparse fails to win at the heaviest
+//! pruning or the speedup does not grow with the pruning factor.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = zynq_dnn::bench::calibrate::run();
+    println!("{}", zynq_dnn::bench::calibrate::render(&r));
+    if let Err(e) = zynq_dnn::bench::calibrate::check_shape(&r) {
+        eprintln!("SHAPE CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+}

@@ -105,6 +105,7 @@ fn main() {
             net: qnet,
             artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
             native_threads: 1,
+            sparse_threshold: None,
         },
     )
     .unwrap();

@@ -1,0 +1,15 @@
+//! `cargo bench --bench bench_slo` — open-loop serving SLO sweep on the
+//! sharded pool: batches {1, 25, 57} × workers {1, 2, 4} on the HAR-sized
+//! net, plus a 1-worker priority-vs-FIFO head-to-head.  Exits 1 if 4
+//! workers fail to beat 1 worker at any batch, or if the two-level queue
+//! fails to improve interactive p99 over the FIFO baseline.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = zynq_dnn::bench::slo::run();
+    println!("{}", zynq_dnn::bench::slo::render(&r));
+    if let Err(e) = zynq_dnn::bench::slo::check_shape(&r) {
+        eprintln!("SHAPE CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+}

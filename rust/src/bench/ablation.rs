@@ -75,6 +75,7 @@ pub fn run() -> AblationReport {
             net: qnet.clone(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
+            sparse_threshold: None,
         };
         let server = Server::start(&cfg, factory).expect("server");
         let mut rng = Xoshiro256::seed_from_u64(deadline_us);
@@ -180,7 +181,10 @@ pub fn render(r: &AblationReport) -> String {
             format!("{coded:.3}"),
         ]);
     }
-    t4.footnote("extension of §2's deep-compression pipeline: coding beats the 4/3 packing on skewed weights");
+    t4.footnote(
+        "extension of §2's deep-compression pipeline: coding beats the 4/3 packing on \
+         skewed weights",
+    );
     out.push_str(&t4.render());
 
     let mut t5 = Table::new(

@@ -1,0 +1,165 @@
+//! Dense-vs-CSR crossover calibration: times the two kernels on the same
+//! pruned network across a sweep of pruning factors and reports the
+//! measured crossover — the first sweep point where the sparse plan wins
+//! at every serving batch size.  This seeds the ROADMAP item of autotuning
+//! [`DEFAULT_SPARSE_THRESHOLD`](crate::exec::DEFAULT_SPARSE_THRESHOLD):
+//! until the compiler consumes it automatically, pass the printed value to
+//! the CLI as `--threshold` (wired through
+//! [`EngineFactory::sparse_threshold`](crate::coordinator::EngineFactory)).
+
+use super::report::{ms, ratio, Table};
+use super::{quick_mode, random_qnet};
+use crate::exec::{ExecPlan, PlanOptions, DEFAULT_SPARSE_THRESHOLD};
+use crate::nn::spec::{har_4, har_6};
+use crate::sim::pruning::prune_qnetwork;
+use crate::tensor::MatF;
+use crate::util::bench_loop;
+use crate::util::rng::Xoshiro256;
+
+/// One (pruning factor, batch) timing sample.
+#[derive(Debug, Clone)]
+pub struct CalibrateRow {
+    pub prune_target: f64,
+    pub prune_achieved: f64,
+    pub batch: usize,
+    pub dense_seconds: f64,
+    pub sparse_seconds: f64,
+}
+
+impl CalibrateRow {
+    pub fn speedup(&self) -> f64 {
+        self.dense_seconds / self.sparse_seconds.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// The calibration result.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub network: String,
+    pub rows: Vec<CalibrateRow>,
+}
+
+/// Prune sweep bracketing the compiled-in default from both sides.
+pub const PRUNE_SWEEP: [f64; 5] = [0.5, 0.65, 0.75, 0.85, 0.95];
+/// Latency-relevant serving batch sizes (paper Table 3 uses 1 and 25).
+pub const BATCH_SWEEP: [usize; 2] = [1, 25];
+
+pub fn run() -> Calibration {
+    let quick = quick_mode();
+    let spec = if quick { har_4() } else { har_6() };
+    let iters = if quick { 3 } else { 10 };
+    let base = random_qnet(&spec, 0xCA11);
+    let mut rng = Xoshiro256::seed_from_u64(0xCA12);
+    let mut rows = Vec::new();
+    for &q in &PRUNE_SWEEP {
+        let pruned = prune_qnetwork(&base, q);
+        let achieved = pruned.overall_prune_factor();
+        let mut dense = ExecPlan::compile_q(&pruned, &PlanOptions::dense_only())
+            .expect("dense plan compiles");
+        let mut sparse = ExecPlan::compile_q(&pruned, &PlanOptions::sparse_always())
+            .expect("sparse plan compiles");
+        for &batch in &BATCH_SWEEP {
+            let x = crate::nn::quantize_matrix(&MatF::from_vec(
+                batch,
+                spec.inputs(),
+                (0..batch * spec.inputs())
+                    .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                    .collect(),
+            ));
+            let (dense_seconds, _) = bench_loop(1, iters, || {
+                dense.run(&x).expect("dense run");
+            });
+            let (sparse_seconds, _) = bench_loop(1, iters, || {
+                sparse.run(&x).expect("sparse run");
+            });
+            rows.push(CalibrateRow {
+                prune_target: q,
+                prune_achieved: achieved,
+                batch,
+                dense_seconds,
+                sparse_seconds,
+            });
+        }
+    }
+    Calibration {
+        network: spec.name,
+        rows,
+    }
+}
+
+impl Calibration {
+    /// The measured crossover: the smallest sweep pruning factor at which
+    /// the sparse plan beats dense at *every* batch size (None when dense
+    /// wins everywhere — e.g. on hardware with very cheap dense GEMM).
+    pub fn crossover(&self) -> Option<f64> {
+        PRUNE_SWEEP.iter().copied().find(|&q| {
+            let rs: Vec<&CalibrateRow> = self
+                .rows
+                .iter()
+                .filter(|r| (r.prune_target - q).abs() < 1e-9)
+                .collect();
+            !rs.is_empty() && rs.iter().all(|r| r.sparse_seconds < r.dense_seconds)
+        })
+    }
+}
+
+pub fn render(c: &Calibration) -> String {
+    let mut t = Table::new(
+        &format!("dense/CSR kernel crossover calibration ({})", c.network),
+        &["q_prune", "batch", "dense ms", "sparse ms", "speedup"],
+    );
+    for r in &c.rows {
+        t.row(vec![
+            format!("{:.2} ({:.3})", r.prune_target, r.prune_achieved),
+            r.batch.to_string(),
+            ms(r.dense_seconds),
+            ms(r.sparse_seconds),
+            ratio(r.speedup()),
+        ]);
+    }
+    match c.crossover() {
+        Some(q) => t.footnote(&format!(
+            "measured crossover: sparse wins from q_prune ≈ {q:.2} — serve with \
+             `--threshold {q:.2}` (compiled-in default {DEFAULT_SPARSE_THRESHOLD})"
+        )),
+        None => t.footnote(&format!(
+            "no crossover in the sweep: dense wins everywhere here; keeping the \
+             compiled-in default {DEFAULT_SPARSE_THRESHOLD}"
+        )),
+    }
+    t.render()
+}
+
+/// Qualitative shape: the dense/sparse speedup must grow with the pruning
+/// factor (totalled across the batch sweep — single cells are
+/// milliseconds and scheduler-noise-prone), and at the heaviest pruning
+/// sparse must win outright.
+pub fn check_shape(c: &Calibration) -> Result<(), String> {
+    let level = |q: f64| {
+        let rs: Vec<&CalibrateRow> = c
+            .rows
+            .iter()
+            .filter(|r| (r.prune_target - q).abs() < 1e-9)
+            .collect();
+        let dense: f64 = rs.iter().map(|r| r.dense_seconds).sum();
+        let sparse: f64 = rs.iter().map(|r| r.sparse_seconds).sum();
+        (dense, sparse)
+    };
+    let (d_lo, s_lo) = level(PRUNE_SWEEP[0]);
+    let (d_hi, s_hi) = level(*PRUNE_SWEEP.last().unwrap());
+    if s_hi >= d_hi {
+        return Err(format!(
+            "sparse ({s_hi:.6}s) must beat dense ({d_hi:.6}s) at q={}",
+            PRUNE_SWEEP.last().unwrap()
+        ));
+    }
+    let (lo, hi) = (d_lo / s_lo.max(f64::MIN_POSITIVE), d_hi / s_hi.max(f64::MIN_POSITIVE));
+    if hi <= lo {
+        return Err(format!(
+            "speedup should grow with pruning: {lo:.2}x at q={} vs {hi:.2}x at q={}",
+            PRUNE_SWEEP[0],
+            PRUNE_SWEEP.last().unwrap()
+        ));
+    }
+    Ok(())
+}

@@ -5,11 +5,13 @@
 //! the publication.  The same code backs the `zynq-dnn bench …` CLI.
 
 pub mod ablation;
+pub mod calibrate;
 pub mod combined;
 pub mod fig7;
 pub mod gops;
 pub mod nopt;
 pub mod report;
+pub mod slo;
 pub mod sparse;
 pub mod table2;
 pub mod table3;

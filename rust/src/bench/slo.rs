@@ -1,0 +1,309 @@
+//! Steady-state serving SLO benchmark: open-loop arrivals against the
+//! sharded pool across hardware batch sizes × worker counts, reporting
+//! throughput-vs-tail-latency — the serving-level twin of the paper's §6
+//! throughput evaluation (batch amortization per shard, multi-instance
+//! replication across shards).
+//!
+//! Methodology: for each (workers, batch) cell the harness estimates the
+//! single-worker service capacity from a standalone plan timing, then
+//! offers an *overload* arrival rate (capacity × [`OVERLOAD`]) with a
+//! 1-in-[`INTERACTIVE_EVERY`] Interactive mix.  Open loop means arrivals
+//! do not wait for responses — exactly the regime where worker count, not
+//! batch amortization alone, bounds throughput.  A final head-to-head
+//! drives the identical workload through the classic single-FIFO server
+//! and through a 1-worker pool to isolate what the two-level priority
+//! queue buys Interactive p99 under mixed load.
+
+use std::time::{Duration, Instant};
+
+use super::report::{ms, Table};
+use super::{quick_mode, random_qnet};
+use crate::config::ServerConfig;
+use crate::coordinator::EngineFactory;
+use crate::exec::{ExecPlan, PlanOptions};
+use crate::nn::spec::{har_4, har_6};
+use crate::nn::QNetwork;
+use crate::serve::{Priority, ServePool, Serving};
+use crate::tensor::MatF;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::summarize;
+
+/// Arrival rate as a multiple of the estimated single-worker capacity.
+pub const OVERLOAD: f64 = 1.6;
+/// Every k-th request is Interactive (a 20 % interactive mix).
+pub const INTERACTIVE_EVERY: usize = 5;
+
+/// One (workers, batch) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct SloRow {
+    pub workers: usize,
+    pub batch: usize,
+    pub requests: usize,
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    /// Aggregate batch-slot occupancy across shards (NaN for the baseline).
+    pub occupancy: f64,
+    pub interactive_p99_s: f64,
+    pub bulk_p99_s: f64,
+}
+
+/// The benchmark result.
+#[derive(Debug, Clone)]
+pub struct SloBench {
+    pub network: String,
+    pub policy: String,
+    pub rows: Vec<SloRow>,
+    /// Batch size the 1-worker priority-vs-FIFO head-to-head ran at.
+    pub head_to_head_batch: usize,
+    /// Interactive p99 through the 1-worker pool (two-level queue)...
+    pub priority_interactive_p99_s: f64,
+    /// ...vs the same workload through the single-FIFO server.
+    pub fifo_interactive_p99_s: f64,
+}
+
+fn worker_sweep() -> &'static [usize] {
+    &[1, 2, 4]
+}
+
+fn batch_sweep(quick: bool) -> &'static [usize] {
+    if quick {
+        &[1, 25]
+    } else {
+        &[1, 25, 57]
+    }
+}
+
+fn factory(net: &QNetwork, batch: usize) -> EngineFactory {
+    EngineFactory {
+        backend: "native".into(),
+        batch,
+        net: net.clone(),
+        artifacts_dir: crate::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+    }
+}
+
+/// Estimate one worker's service capacity (samples/s) at a batch size from
+/// a standalone plan execution — the open-loop pacer needs a scale, not a
+/// precise number (OVERLOAD pushes past it anyway).
+fn estimate_capacity(net: &QNetwork, batch: usize, seed: u64) -> f64 {
+    let mut plan =
+        ExecPlan::compile_q(net, &PlanOptions::default()).expect("capacity plan compiles");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let s_in = net.spec.inputs();
+    let x = crate::nn::quantize_matrix(&MatF::from_vec(
+        batch,
+        s_in,
+        (0..batch * s_in).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+    ));
+    let (secs, _) = crate::util::bench_loop(1, 3, || {
+        plan.run(&x).expect("capacity run");
+    });
+    batch as f64 / secs.max(1e-9)
+}
+
+struct DriveOutcome {
+    achieved_rps: f64,
+    interactive_p99_s: f64,
+    bulk_p99_s: f64,
+}
+
+/// Submit `requests` paced at `offered_rps` (open loop), then drain every
+/// response and split client-measured latencies by priority class.
+fn drive(serving: &Serving, requests: usize, offered_rps: f64, seed: u64) -> DriveOutcome {
+    let s_in = serving.input_width();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let inputs: Vec<Vec<i32>> = (0..requests)
+        .map(|_| {
+            (0..s_in)
+                .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+                .collect()
+        })
+        .collect();
+    let dt = Duration::from_secs_f64(1.0 / offered_rps.max(1.0));
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(requests);
+    for (i, input) in inputs.into_iter().enumerate() {
+        let due = t0 + dt * (i as u32);
+        loop {
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            let left = due - now;
+            if left > Duration::from_micros(500) {
+                std::thread::sleep(left - Duration::from_micros(300));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let priority = if i % INTERACTIVE_EVERY == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Bulk
+        };
+        let rx = serving
+            .submit(input, priority)
+            .expect("slo bench sizes queue_depth to the request count")
+            .1;
+        receivers.push((priority, rx));
+    }
+    let mut interactive = Vec::new();
+    let mut bulk = Vec::new();
+    for (priority, rx) in receivers {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("response within 60s");
+        match priority {
+            Priority::Interactive => interactive.push(resp.total_seconds()),
+            Priority::Bulk => bulk.push(resp.total_seconds()),
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    DriveOutcome {
+        achieved_rps: requests as f64 / elapsed.max(1e-9),
+        interactive_p99_s: summarize(&interactive).map(|s| s.p99).unwrap_or(0.0),
+        bulk_p99_s: summarize(&bulk).map(|s| s.p99).unwrap_or(0.0),
+    }
+}
+
+fn config(net_name: &str, workers: usize, batch: usize, requests: usize) -> ServerConfig {
+    ServerConfig {
+        network: net_name.into(),
+        batch,
+        workers,
+        // queue the whole run: the SLO story is tail latency under
+        // backlog, not loss — rejections would just shrink the sample
+        queue_depth: requests.max(batch),
+        batch_deadline_us: 1000,
+        // long enough that aging cannot neutralize the priority effect
+        // inside one bench run (starvation-freedom is property-tested)
+        bulk_promote_us: 200_000,
+        backend: "native".into(),
+        ..Default::default()
+    }
+}
+
+pub fn run() -> SloBench {
+    let quick = quick_mode();
+    let spec = if quick { har_4() } else { har_6() };
+    let requests = if quick { 150 } else { 500 };
+    let net = random_qnet(&spec, 0x510);
+    let mut rows = Vec::new();
+    for &batch in batch_sweep(quick) {
+        let offered = OVERLOAD * estimate_capacity(&net, batch, 0x511 + batch as u64);
+        for &workers in worker_sweep() {
+            let cfg = config(&spec.name, workers, batch, requests);
+            let pool = ServePool::start(&cfg, factory(&net, batch)).expect("pool starts");
+            let serving = Serving::Pool(pool);
+            let out = drive(&serving, requests, offered, 0x600 + workers as u64);
+            let occupancy = match &serving {
+                Serving::Pool(p) => p.snapshot().aggregate.occupancy,
+                Serving::Single(_) => f64::NAN,
+            };
+            serving.shutdown().expect("pool shuts down");
+            rows.push(SloRow {
+                workers,
+                batch,
+                requests,
+                offered_rps: offered,
+                achieved_rps: out.achieved_rps,
+                occupancy,
+                interactive_p99_s: out.interactive_p99_s,
+                bulk_p99_s: out.bulk_p99_s,
+            });
+        }
+    }
+
+    // head-to-head at 1 worker: two-level priority queue vs single FIFO,
+    // identical workload and batch
+    let batch = batch_sweep(quick)[1];
+    let offered = OVERLOAD * estimate_capacity(&net, batch, 0x512);
+    let cfg = config(&spec.name, 1, batch, requests);
+    let pool = Serving::Pool(ServePool::start(&cfg, factory(&net, batch)).expect("pool starts"));
+    let prio = drive(&pool, requests, offered, 0x700);
+    pool.shutdown().expect("pool shuts down");
+    let single = crate::serve::start_serving(&cfg, factory(&net, batch)).expect("server starts");
+    debug_assert!(matches!(single, Serving::Single(_)));
+    let fifo = drive(&single, requests, offered, 0x700);
+    single.shutdown().expect("server shuts down");
+
+    SloBench {
+        network: spec.name,
+        policy: cfg.policy,
+        rows,
+        head_to_head_batch: batch,
+        priority_interactive_p99_s: prio.interactive_p99_s,
+        fifo_interactive_p99_s: fifo.interactive_p99_s,
+    }
+}
+
+pub fn render(b: &SloBench) -> String {
+    let mut t = Table::new(
+        &format!("serving SLO sweep ({}, open loop at {OVERLOAD}x capacity)", b.network),
+        &[
+            "batch",
+            "workers",
+            "offered/s",
+            "achieved/s",
+            "occupancy",
+            "p99 interactive ms",
+            "p99 bulk ms",
+        ],
+    );
+    for r in &b.rows {
+        t.row(vec![
+            r.batch.to_string(),
+            r.workers.to_string(),
+            format!("{:.0}", r.offered_rps),
+            format!("{:.0}", r.achieved_rps),
+            format!("{:.2}", r.occupancy),
+            ms(r.interactive_p99_s),
+            ms(r.bulk_p99_s),
+        ]);
+    }
+    t.footnote(&format!(
+        "1-worker head-to-head at batch {}: interactive p99 {} ms (two-level queue) \
+         vs {} ms (single FIFO)",
+        b.head_to_head_batch,
+        ms(b.priority_interactive_p99_s),
+        ms(b.fifo_interactive_p99_s)
+    ));
+    t.footnote("20% interactive mix; queue sized to the run, so no rejections");
+    t.render()
+}
+
+/// Acceptance shape for the sharded runtime (wall-clock — gate behind
+/// `ZDNN_SKIP_PERF` on contended runners):
+///
+/// * at every batch size, 4 workers must sustain strictly more throughput
+///   than 1 worker under the same overload arrival rate;
+/// * the two-level priority queue must give Interactive a strictly better
+///   p99 than the single-FIFO baseline under the identical mixed load.
+pub fn check_shape(b: &SloBench) -> Result<(), String> {
+    let batches: std::collections::BTreeSet<usize> = b.rows.iter().map(|r| r.batch).collect();
+    for &batch in &batches {
+        let at = |w: usize| {
+            b.rows
+                .iter()
+                .find(|r| r.batch == batch && r.workers == w)
+                .map(|r| r.achieved_rps)
+        };
+        let (Some(w1), Some(w4)) = (at(1), at(4)) else {
+            return Err(format!("missing workers 1/4 rows at batch {batch}"));
+        };
+        if w4 <= w1 {
+            return Err(format!(
+                "4 workers ({w4:.0}/s) not faster than 1 ({w1:.0}/s) at batch {batch}"
+            ));
+        }
+    }
+    if b.priority_interactive_p99_s >= b.fifo_interactive_p99_s {
+        return Err(format!(
+            "interactive p99 {:.6}s (priority) not better than {:.6}s (FIFO)",
+            b.priority_interactive_p99_s, b.fifo_interactive_p99_s
+        ));
+    }
+    Ok(())
+}

@@ -178,7 +178,8 @@ pub fn render(t: &Table2) -> String {
         }
     }
     tab.footnote(&format!(
-        "HW batch rows vs paper: mean |err| {:.1}%, worst {:.1}% (calibration: T_mem + per-sample overhead, see sim::memory)",
+        "HW batch rows vs paper: mean |err| {:.1}%, worst {:.1}% (calibration: T_mem + \
+         per-sample overhead, see sim::memory)",
         100.0 * sum / count as f64,
         100.0 * worst
     ));

@@ -133,10 +133,14 @@ pub fn render(t: &Table3) -> String {
         ]);
     }
     tab.footnote(&format!(
-        "ESE comparison (§6.2): ours {:.1} mJ vs ESE 3.4 mJ on their 3.25M-weight LSTM at q=0.888 (paper: 1.9 mJ)",
+        "ESE comparison (§6.2): ours {:.1} mJ vs ESE 3.4 mJ on their 3.25M-weight LSTM at \
+         q=0.888 (paper: 1.9 mJ)",
         t.ese_comparison.0
     ));
-    tab.footnote("paper Table 3: HW batch 3.8 mJ / 1.5 mJ; HW pruning 4.4 mJ / 1.8 mJ; SW BLAS 184.7 mJ / 68.0 mJ");
+    tab.footnote(
+        "paper Table 3: HW batch 3.8 mJ / 1.5 mJ; HW pruning 4.4 mJ / 1.8 mJ; SW BLAS \
+         184.7 mJ / 68.0 mJ",
+    );
     tab.render()
 }
 

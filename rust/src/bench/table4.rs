@@ -121,7 +121,15 @@ pub fn run() -> Table4 {
 pub fn render(t: &Table4) -> String {
     let mut tab = Table::new(
         "Table 4 — accuracy (%) vs pruning factor (synthetic datasets)",
-        &["Network", "Params", "q_prune target", "q_prune achieved", "Baseline acc", "Pruned acc", "Δ"],
+        &[
+            "Network",
+            "Params",
+            "q_prune target",
+            "q_prune achieved",
+            "Baseline acc",
+            "Pruned acc",
+            "Δ",
+        ],
     );
     for r in &t.rows {
         tab.row(vec![
@@ -134,7 +142,10 @@ pub fn render(t: &Table4) -> String {
             format!("{:+.2}", -r.deviation() * 100.0),
         ]);
     }
-    tab.footnote("paper (real MNIST/HAR): baselines 98.3 / 95.9; pruned 98.27 / 97.62 / 94.14 / 95.72 — objective ≤1.5% deviation");
+    tab.footnote(
+        "paper (real MNIST/HAR): baselines 98.3 / 95.9; pruned 98.27 / 97.62 / 94.14 / \
+         95.72 — objective ≤1.5% deviation",
+    );
     tab.render()
 }
 

@@ -18,8 +18,15 @@ pub struct ServerConfig {
     pub batch: usize,
     /// Flush deadline: a partial batch is dispatched after this (µs).
     pub batch_deadline_us: u64,
-    /// Worker threads executing batches.
+    /// Worker threads executing batches.  1 = the classic single-engine
+    /// server; > 1 = the sharded pool (one compiled plan per worker).
     pub workers: usize,
+    /// Shard-selection policy for the pool: "round-robin", "least-loaded",
+    /// or "p2c" (power-of-two-choices on queue depth).
+    pub policy: String,
+    /// Aging threshold (µs): a Bulk request older than this is promoted to
+    /// Interactive at batch-formation time so priorities cannot starve it.
+    pub bulk_promote_us: u64,
     /// Bounded request-queue depth (backpressure beyond this).
     pub queue_depth: usize,
     /// Backend: "pjrt", "native", "native-sparse", "sim-batch", "sim-prune".
@@ -35,6 +42,8 @@ impl Default for ServerConfig {
             batch: 4,
             batch_deadline_us: 2000,
             workers: 1,
+            policy: "round-robin".into(),
+            bulk_promote_us: 20_000,
             queue_depth: 1024,
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
@@ -81,6 +90,10 @@ impl ServerConfig {
                     cfg.batch_deadline_us = v.parse().context("batch_deadline_us")?
                 }
                 "workers" => cfg.workers = v.parse().context("workers")?,
+                "policy" => cfg.policy = v.clone(),
+                "bulk_promote_us" => {
+                    cfg.bulk_promote_us = v.parse().context("bulk_promote_us")?
+                }
                 "queue_depth" => cfg.queue_depth = v.parse().context("queue_depth")?,
                 "backend" => cfg.backend = v.clone(),
                 "artifacts_dir" => cfg.artifacts_dir = v.clone(),
@@ -98,6 +111,11 @@ impl ServerConfig {
         if self.workers == 0 {
             bail!("workers must be >= 1");
         }
+        if self.workers > 64 {
+            bail!("workers must be <= 64, got {}", self.workers);
+        }
+        // parse so typos fail at config time, not at pool start
+        crate::serve::Policy::parse(&self.policy)?;
         if self.queue_depth < self.batch {
             bail!(
                 "queue_depth ({}) must be >= batch ({})",
@@ -161,6 +179,27 @@ mod tests {
         assert!(ServerConfig::from_kv_text("batch = 0").is_err());
         assert!(ServerConfig::from_kv_text("backend = \"gpu\"").is_err());
         assert!(ServerConfig::from_kv_text("batch = 512\nqueue_depth = 4").is_err());
+        assert!(ServerConfig::from_kv_text("policy = \"random\"").is_err());
+        assert!(ServerConfig::from_kv_text("workers = 0").is_err());
+    }
+
+    #[test]
+    fn pool_knobs_parse() {
+        let cfg = ServerConfig::from_kv_text(
+            "workers = 4\npolicy = \"p2c\"\nbulk_promote_us = 5000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.policy, "p2c");
+        assert_eq!(cfg.bulk_promote_us, 5000);
+        for policy in ["round-robin", "least-loaded", "p2c"] {
+            ServerConfig {
+                policy: policy.into(),
+                ..Default::default()
+            }
+            .validate()
+            .unwrap();
+        }
     }
 
     #[test]

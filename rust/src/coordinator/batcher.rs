@@ -89,12 +89,23 @@ impl Batcher {
         }
     }
 
+    /// Form one batch regardless of the deadline (shutdown path): up to
+    /// `batch_size` requests, `None` when nothing is pending.  The engine
+    /// loop drains with repeated calls so every formed batch is executed
+    /// before the next is taken.
+    pub fn flush_next(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let n = self.pending.len().min(self.batch_size);
+        Some(self.take(n))
+    }
+
     /// Drain everything (shutdown path), possibly into multiple batches.
     pub fn flush_all(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        while !self.pending.is_empty() {
-            let n = self.pending.len().min(self.batch_size);
-            out.push(self.take(n));
+        while let Some(b) = self.flush_next() {
+            out.push(b);
         }
         out
     }

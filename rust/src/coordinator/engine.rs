@@ -36,24 +36,60 @@ pub struct EngineFactory {
     pub artifacts_dir: PathBuf,
     /// Threads for the native engines' parallel (dense and sparse) kernels.
     pub native_threads: usize,
+    /// Override for [`PlanOptions::sparse_threshold`] on the `native`
+    /// backend (`None` keeps the compiled-in default; `bench calibrate`
+    /// prints a measured suggestion for this knob).
+    pub sparse_threshold: Option<f64>,
 }
 
 impl EngineFactory {
+    /// The plan the native backends run on (`native` picks kernels from
+    /// measured prune factors, honouring [`Self::sparse_threshold`];
+    /// `native-sparse` forces the §5.6 CSR path).  Exposed so the sharded
+    /// pool can compile once and [`ExecPlan::clone_shared`] per worker.
+    pub fn compile_plan(&self) -> Result<ExecPlan> {
+        let mut opts = match self.backend.as_str() {
+            "native-sparse" => PlanOptions::sparse_always(),
+            _ => PlanOptions::default(),
+        };
+        if self.backend == "native" {
+            if let Some(t) = self.sparse_threshold {
+                opts.sparse_threshold = t;
+            }
+        }
+        ExecPlan::compile_q(&self.net, &opts.with_threads(self.native_threads))
+    }
+
+    /// True when [`Self::build`] would run on an [`ExecPlan`] (and shards
+    /// can therefore share one compiled plan).
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend.as_str(), "native" | "native-sparse")
+    }
+
+    /// Build a native engine around an already-compiled (possibly shared)
+    /// plan; panics on non-native backends (callers gate on
+    /// [`Self::is_native`]).
+    pub fn build_from_plan(&self, plan: ExecPlan) -> Box<dyn Engine> {
+        assert!(self.is_native(), "build_from_plan needs a native backend");
+        let name: &'static str = if self.backend == "native-sparse" {
+            "native-sparse"
+        } else {
+            "native"
+        };
+        Box::new(NativeEngine {
+            plan,
+            batch: self.batch,
+            name,
+        })
+    }
+
     pub fn build(&self) -> Result<Box<dyn Engine>> {
         ensure!(self.batch >= 1, "batch must be >= 1");
         Ok(match self.backend.as_str() {
-            "native" => Box::new(NativeEngine::compile(
-                "native",
-                &self.net,
-                self.batch,
-                PlanOptions::default().with_threads(self.native_threads),
-            )?),
-            "native-sparse" => Box::new(NativeEngine::compile(
-                "native-sparse",
-                &self.net,
-                self.batch,
-                PlanOptions::sparse_always().with_threads(self.native_threads),
-            )?),
+            "native" | "native-sparse" => {
+                let plan = self.compile_plan()?;
+                self.build_from_plan(plan)
+            }
             "pjrt" => {
                 let mut runtime = Runtime::new(&self.artifacts_dir)?;
                 let model = runtime.load(&self.net.spec.name, self.batch)?;
@@ -93,21 +129,6 @@ struct NativeEngine {
     plan: ExecPlan,
     batch: usize,
     name: &'static str,
-}
-
-impl NativeEngine {
-    fn compile(
-        name: &'static str,
-        net: &QNetwork,
-        batch: usize,
-        opts: PlanOptions,
-    ) -> Result<Self> {
-        Ok(Self {
-            plan: ExecPlan::compile_q(net, &opts)?,
-            batch,
-            name,
-        })
-    }
 }
 
 impl Engine for NativeEngine {
@@ -219,6 +240,7 @@ mod tests {
             net: QNetwork::new(spec, ws).unwrap(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
+            sparse_threshold: None,
         }
     }
 
@@ -275,5 +297,24 @@ mod tests {
     #[test]
     fn unknown_backend_rejected() {
         assert!(factory("tpu", 1).build().is_err());
+    }
+
+    #[test]
+    fn sparse_threshold_override_moves_kernel_choice() {
+        use crate::exec::KernelKind;
+        // a 50%-pruned net sits below the 0.75 default but above a 0.3
+        // override, so the override must flip the compiled kernels
+        let mut f = factory("native", 2);
+        f.net = crate::sim::pruning::prune_qnetwork(&f.net, 0.5);
+        let dense = f.compile_plan().unwrap();
+        assert!(dense.kernels().iter().all(|&k| k == KernelKind::DenseQ));
+        f.sparse_threshold = Some(0.3);
+        let sparse = f.compile_plan().unwrap();
+        assert!(sparse.kernels().iter().all(|&k| k == KernelKind::SparseQ));
+        // native-sparse ignores the override (it always forces CSR)
+        f.backend = "native-sparse".into();
+        f.sparse_threshold = Some(2.0);
+        let forced = f.compile_plan().unwrap();
+        assert!(forced.kernels().iter().all(|&k| k == KernelKind::SparseQ));
     }
 }

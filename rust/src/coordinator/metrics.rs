@@ -21,6 +21,9 @@ struct Inner {
     queue: Histogram,
     requests: u64,
     batches: u64,
+    /// Batches whose occupancy was below the hardware batch size (their
+    /// padded rows are pure waste — the §5.5 design computes them anyway).
+    padded_batches: u64,
     occupied_slots: u64,
     padded_slots: u64,
     rejected: u64,
@@ -31,10 +34,17 @@ struct Inner {
 pub struct Snapshot {
     pub requests: u64,
     pub batches: u64,
+    /// Batches executed below full occupancy (padded partial batches).
+    pub padded_batches: u64,
     pub rejected: u64,
     pub mean_latency_s: f64,
     pub p95_latency_s: f64,
     pub mean_queue_s: f64,
+    /// Batch slots that carried real samples.
+    pub occupied_slots: u64,
+    /// Batch slots computed but thrown away (padding waste: every partial
+    /// batch still executes `size` rows on the fixed-n hardware design).
+    pub padded_slots: u64,
     /// Fraction of hardware batch slots carrying real samples.
     pub occupancy: f64,
     /// Completed requests per wall second since start.
@@ -55,6 +65,7 @@ impl ServerMetrics {
                 queue: Histogram::new(),
                 requests: 0,
                 batches: 0,
+                padded_batches: 0,
                 occupied_slots: 0,
                 padded_slots: 0,
                 rejected: 0,
@@ -63,9 +74,17 @@ impl ServerMetrics {
         }
     }
 
+    /// Record one executed batch: `occupancy` real samples in a padded
+    /// batch of `size` rows.  Both are kept so partial batches (deadline
+    /// flushes and shutdown drains report `size = n` with occupancy < n)
+    /// surface their padded-slot waste instead of hiding it.
     pub fn record_batch(&self, occupancy: usize, size: usize) {
+        debug_assert!(occupancy <= size, "occupancy {occupancy} > size {size}");
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
+        if occupancy < size {
+            g.padded_batches += 1;
+        }
         g.occupied_slots += occupancy as u64;
         g.padded_slots += (size - occupancy) as u64;
     }
@@ -87,10 +106,13 @@ impl ServerMetrics {
         Snapshot {
             requests: g.requests,
             batches: g.batches,
+            padded_batches: g.padded_batches,
             rejected: g.rejected,
             mean_latency_s: g.latency.mean_ns() / 1e9,
             p95_latency_s: g.latency.percentile_ns(0.95) as f64 / 1e9,
             mean_queue_s: g.queue.mean_ns() / 1e9,
+            occupied_slots: g.occupied_slots,
+            padded_slots: g.padded_slots,
             occupancy: if slots == 0 {
                 0.0
             } else {
@@ -117,7 +139,10 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 7);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.padded_batches, 1, "the 3-of-4 batch ran padded");
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.occupied_slots, 7);
+        assert_eq!(s.padded_slots, 1);
         assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);
         assert!(s.mean_latency_s > 1.9e-3 && s.mean_latency_s < 2.1e-3);
         assert!(s.p95_latency_s >= s.mean_latency_s * 0.5);

@@ -110,7 +110,8 @@ fn handle_connection(stream: TcpStream, server: &ServerHandle) -> Result<()> {
             Ok(Command::Stats) => {
                 let s = server.metrics.snapshot();
                 format!(
-                    "STATS requests={} batches={} rejected={} mean_latency_us={:.1} p95_latency_us={:.1} occupancy={:.3} throughput={:.1}",
+                    "STATS requests={} batches={} rejected={} mean_latency_us={:.1} \
+                     p95_latency_us={:.1} occupancy={:.3} throughput={:.1}",
                     s.requests,
                     s.batches,
                     s.rejected,
@@ -252,6 +253,7 @@ mod tests {
             net: net.clone(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
+            sparse_threshold: None,
         };
         let server = Arc::new(Server::start(&cfg, factory).unwrap());
         let fe = NetFrontend::start("127.0.0.1:0", server.clone()).unwrap();

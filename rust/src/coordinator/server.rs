@@ -138,6 +138,57 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Execute every batch the batcher is ready to form.  `force` drains the
+/// backlog one batch at a time regardless of the deadline (shutdown path) —
+/// never take `flush_all` in one go here: executing only the head of that
+/// vector used to drop every later batch, losing its requests.
+fn dispatch_ready(
+    batcher: &mut Batcher,
+    engine: &mut dyn super::engine::Engine,
+    s_in: usize,
+    force: bool,
+    metrics: &ServerMetrics,
+    in_flight: &AtomicUsize,
+) -> Result<()> {
+    loop {
+        let batch = if force {
+            match batcher.flush_next() {
+                Some(b) => b,
+                None => return Ok(()),
+            }
+        } else {
+            match batcher.poll(Instant::now()) {
+                Some(b) => b,
+                None => return Ok(()),
+            }
+        };
+        let occupancy = batch.occupancy();
+        metrics.record_batch(occupancy, batch.size);
+        let x = batch.padded_input(s_in);
+        let t0 = Instant::now();
+        let y = engine.infer(&x)?;
+        let compute_seconds = engine
+            .simulated_seconds()
+            .unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        let classes = argmax_rows(&y);
+        for (row, req) in batch.requests.into_iter().enumerate() {
+            // wait time = from enqueue until the batch started executing
+            let queue_seconds = t0.duration_since(req.queued_at).as_secs_f64();
+            let resp = Response {
+                id: req.id,
+                output: y.row(row).to_vec(),
+                class: classes[row],
+                queue_seconds,
+                compute_seconds,
+                batch_occupancy: occupancy,
+            };
+            metrics.record_request(resp.queue_seconds, resp.total_seconds());
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            let _ = req.reply.send(resp);
+        }
+    }
+}
+
 fn engine_loop(
     rx: mpsc::Receiver<Command>,
     factory: EngineFactory,
@@ -151,47 +202,7 @@ fn engine_loop(
     let mut batcher = Batcher::new(batch_size, deadline);
 
     let mut dispatch = |batcher: &mut Batcher, force: bool| -> Result<()> {
-        loop {
-            let batch = if force {
-                let mut all = batcher.flush_all();
-                if all.is_empty() {
-                    return Ok(());
-                }
-                all.remove(0)
-            } else {
-                match batcher.poll(Instant::now()) {
-                    Some(b) => b,
-                    None => return Ok(()),
-                }
-            };
-            let occupancy = batch.occupancy();
-            metrics.record_batch(occupancy, batch.size);
-            let x = batch.padded_input(s_in);
-            let t0 = Instant::now();
-            let y = engine.infer(&x)?;
-            let compute_seconds = engine
-                .simulated_seconds()
-                .unwrap_or_else(|| t0.elapsed().as_secs_f64());
-            let classes = argmax_rows(&y);
-            for (row, req) in batch.requests.into_iter().enumerate() {
-                // wait time = from enqueue until the batch started executing
-                let queue_seconds = t0.duration_since(req.queued_at).as_secs_f64();
-                let resp = Response {
-                    id: req.id,
-                    output: y.row(row).to_vec(),
-                    class: classes[row],
-                    queue_seconds,
-                    compute_seconds,
-                    batch_occupancy: occupancy,
-                };
-                metrics.record_request(resp.queue_seconds, resp.total_seconds());
-                in_flight.fetch_sub(1, Ordering::SeqCst);
-                let _ = req.reply.send(resp);
-            }
-            if !force {
-                continue; // keep draining full batches
-            }
-        }
+        dispatch_ready(batcher, engine.as_mut(), s_in, force, &metrics, &in_flight)
     };
 
     loop {
@@ -269,6 +280,7 @@ mod tests {
             net: QNetwork::new(spec, ws).unwrap(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
+            sparse_threshold: None,
         }
     }
 
@@ -381,5 +393,35 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
         }
+    }
+
+    #[test]
+    fn forced_dispatch_serves_every_pending_batch() {
+        // regression: the force path used to flush_all() and execute only
+        // the first batch, silently dropping requests 4.. here
+        let factory = test_factory(4);
+        let mut engine = factory.build().unwrap();
+        let metrics = ServerMetrics::new();
+        let in_flight = AtomicUsize::new(11);
+        let mut batcher = Batcher::new(4, Duration::from_secs(60));
+        let mut rxs = Vec::new();
+        for i in 0..11u64 {
+            let (tx, rx) = mpsc::channel();
+            batcher.push(Request {
+                id: i,
+                input: rand_sample(i),
+                queued_at: Instant::now(),
+                reply: tx,
+            });
+            rxs.push(rx);
+        }
+        dispatch_ready(&mut batcher, engine.as_mut(), 64, true, &metrics, &in_flight).unwrap();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert!(rx.try_recv().is_ok(), "request {i} lost on forced drain");
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 11);
+        assert_eq!(snap.batches, 3);
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0);
     }
 }

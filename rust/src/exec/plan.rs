@@ -75,13 +75,28 @@ pub enum KernelKind {
     DenseF32,
 }
 
+/// Kernels hold their weight storage behind `Arc` so sharded serving can
+/// replicate a compiled plan per worker ([`ExecPlan::clone_shared`])
+/// without duplicating megabytes of weights: clones share the read-only
+/// dense/CSR storage and own only their activation buffers.
 enum Kernel {
     /// Register-blocked wrapping-i32 GEMM on the dense Q7.8 weights.
-    DenseQ(MatI),
+    DenseQ(Arc<MatI>),
     /// CSR sparse × dense wrapping GEMM derived from the §5.6 tuple stream.
-    SparseQ(CsrMatI),
+    SparseQ(Arc<CsrMatI>),
     /// f32 GEMM (software-baseline path).
-    DenseF32(MatF),
+    DenseF32(Arc<MatF>),
+}
+
+impl Clone for Kernel {
+    /// Cheap: clones the `Arc` handle, not the weight storage.
+    fn clone(&self) -> Self {
+        match self {
+            Kernel::DenseQ(w) => Kernel::DenseQ(Arc::clone(w)),
+            Kernel::SparseQ(w) => Kernel::SparseQ(Arc::clone(w)),
+            Kernel::DenseF32(w) => Kernel::DenseF32(Arc::clone(w)),
+        }
+    }
 }
 
 impl Kernel {
@@ -94,6 +109,7 @@ impl Kernel {
     }
 }
 
+#[derive(Clone)]
 struct LayerPlan {
     kernel: Kernel,
     act: Activation,
@@ -127,9 +143,9 @@ impl ExecPlan {
             let kernel = if q >= opts.sparse_threshold {
                 // encode through the paper's tuple stream so the serving
                 // path exercises the same format the hardware consumes
-                Kernel::SparseQ(sparse::encode_matrix(w)?.to_csr())
+                Kernel::SparseQ(Arc::new(sparse::encode_matrix(w)?.to_csr()))
             } else {
-                Kernel::DenseQ(w.clone())
+                Kernel::DenseQ(Arc::new(w.clone()))
             };
             layers.push(LayerPlan {
                 kernel,
@@ -161,7 +177,7 @@ impl ExecPlan {
                 (o, i)
             );
             layers.push(LayerPlan {
-                kernel: Kernel::DenseF32(w.clone()),
+                kernel: Kernel::DenseF32(Arc::new(w.clone())),
                 act,
                 out_dim: o,
             });
@@ -193,6 +209,20 @@ impl ExecPlan {
     /// plan was compiled single-threaded.
     pub fn pool(&self) -> Option<Arc<ThreadPool>> {
         self.pool.clone()
+    }
+
+    /// Replicate this plan for another worker: the clone shares the
+    /// read-only kernel storage (dense weights / CSR streams, behind `Arc`)
+    /// and the thread pool, but owns fresh activation buffers — so N
+    /// serving shards cost N activation buffers, not N weight copies.
+    pub fn clone_shared(&self) -> Self {
+        Self {
+            spec: self.spec.clone(),
+            layers: self.layers.clone(),
+            pool: self.pool.clone(),
+            qbufs: [MatI::zeros(0, 0), MatI::zeros(0, 0)],
+            fbufs: [MatF::zeros(0, 0), MatF::zeros(0, 0)],
+        }
     }
 
     /// Execute one Q7.8 batch: `x` is (n × s_0), the result borrows the
@@ -407,6 +437,28 @@ mod tests {
         assert!(fplan.run(&MatI::zeros(1, 64)).is_err());
         assert!(fplan.run_f32(&MatF::zeros(1, 64)).is_ok());
         assert!(ExecPlan::compile_f32(&spec, &wf[..1]).is_err());
+    }
+
+    #[test]
+    fn clone_shared_shares_weights_but_not_buffers() {
+        let net = prune_qnetwork(&rand_qnet(quickstart(), 7), 0.9);
+        let mut plan = ExecPlan::compile_q(&net, &PlanOptions::default()).unwrap();
+        let mut twin = plan.clone_shared();
+        // kernel storage is shared: same Arc allocation per layer
+        for (a, b) in plan.layers.iter().zip(twin.layers.iter()) {
+            match (&a.kernel, &b.kernel) {
+                (Kernel::DenseQ(x), Kernel::DenseQ(y)) => assert!(Arc::ptr_eq(x, y)),
+                (Kernel::SparseQ(x), Kernel::SparseQ(y)) => assert!(Arc::ptr_eq(x, y)),
+                (Kernel::DenseF32(x), Kernel::DenseF32(y)) => assert!(Arc::ptr_eq(x, y)),
+                _ => panic!("clone changed kernel kinds"),
+            }
+        }
+        // outputs bit-identical, activation buffers independent
+        let x = rand_x(4, 64, 8);
+        let a = plan.run(&x).unwrap();
+        let b = twin.run(&x).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data.as_ptr(), b.data.as_ptr(), "buffers must not be shared");
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! * **Layer 1/2 (build time)** — `python/compile/`: Pallas fixed-point
 //!   kernels + JAX network forward, AOT-lowered to HLO text artifacts.
 //! * **Layer 3 (this crate)** — the serving coordinator (dynamic batcher,
-//!   section scheduler, PJRT runtime), compiled execution plans that pick
+//!   section scheduler, PJRT runtime), the sharded serving pool with
+//!   priority dispatch (`serve`), compiled execution plans that pick
 //!   dense or sparse kernels per layer (`exec`), the cycle-level Zynq
 //!   accelerator simulator for both paper designs (batch processing §5.5,
 //!   pruning §5.6), and every substrate they need: Q7.8 fixed point,
@@ -30,6 +31,7 @@ pub mod fixedpoint;
 pub mod nn;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod train;

@@ -5,18 +5,24 @@
 //!   train                        train + prune + save a network
 //!   infer                        run one inference through a backend
 //!   serve                        demo serving loop with the dynamic batcher
+//!                                (delegates to the sharded pool when --workers > 1)
+//!   serve-pool                   sharded pool demo: mixed-priority traffic,
+//!                                per-shard + aggregate metrics
 //!   sim                          simulate one network on both accelerators
-//!   bench <which>                regenerate a paper table/figure
-//!                                (table2|table3|table4|fig7|gops|nopt|combined|ablation|sparse|all)
+//!   bench <which>                regenerate a paper table/figure, or run the
+//!                                serving benches (table2|table3|table4|fig7|
+//!                                gops|nopt|combined|ablation|sparse|slo|
+//!                                calibrate|all)
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use zynq_dnn::bench;
 use zynq_dnn::cli::{parse, usage, Args, FlagSpec};
 use zynq_dnn::config::ServerConfig;
 use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::serve::{start_serving, Priority, Serving};
 use zynq_dnn::data::{har, mnist};
 use zynq_dnn::nn::spec::by_name;
 use zynq_dnn::nn::{load_weights, save_weights};
@@ -29,19 +35,96 @@ use zynq_dnn::train::{evaluate_f32, evaluate_q, TrainConfig, Trainer};
 use zynq_dnn::util::rng::Xoshiro256;
 
 const GLOBAL_FLAGS: &[FlagSpec] = &[
-    FlagSpec { name: "network", takes_value: true, help: "network name (mnist4|mnist8|har4|har6|quickstart)" },
-    FlagSpec { name: "batch", takes_value: true, help: "batch size" },
-    FlagSpec { name: "backend", takes_value: true, help: "pjrt|native|native-sparse|sim-batch|sim-prune" },
-    FlagSpec { name: "weights", takes_value: true, help: "path to a .zdnw weight file" },
-    FlagSpec { name: "out", takes_value: true, help: "output path" },
-    FlagSpec { name: "epochs", takes_value: true, help: "training epochs" },
-    FlagSpec { name: "samples", takes_value: true, help: "training samples" },
-    FlagSpec { name: "prune", takes_value: true, help: "pruning factor (0..1)" },
-    FlagSpec { name: "requests", takes_value: true, help: "requests for the serve demo" },
-    FlagSpec { name: "deadline-us", takes_value: true, help: "batcher deadline" },
-    FlagSpec { name: "quick", takes_value: false, help: "shrink expensive runs" },
-    FlagSpec { name: "artifacts", takes_value: true, help: "artifacts directory" },
-    FlagSpec { name: "listen", takes_value: true, help: "serve: expose the TCP line protocol on this address (e.g. 127.0.0.1:7878)" },
+    FlagSpec {
+        name: "network",
+        takes_value: true,
+        help: "network name (mnist4|mnist8|har4|har6|quickstart)",
+    },
+    FlagSpec {
+        name: "batch",
+        takes_value: true,
+        help: "batch size",
+    },
+    FlagSpec {
+        name: "backend",
+        takes_value: true,
+        help: "pjrt|native|native-sparse|sim-batch|sim-prune",
+    },
+    FlagSpec {
+        name: "weights",
+        takes_value: true,
+        help: "path to a .zdnw weight file",
+    },
+    FlagSpec {
+        name: "out",
+        takes_value: true,
+        help: "output path",
+    },
+    FlagSpec {
+        name: "epochs",
+        takes_value: true,
+        help: "training epochs",
+    },
+    FlagSpec {
+        name: "samples",
+        takes_value: true,
+        help: "training samples",
+    },
+    FlagSpec {
+        name: "prune",
+        takes_value: true,
+        help: "pruning factor (0..1)",
+    },
+    FlagSpec {
+        name: "requests",
+        takes_value: true,
+        help: "requests for the serve demo",
+    },
+    FlagSpec {
+        name: "deadline-us",
+        takes_value: true,
+        help: "batcher deadline",
+    },
+    FlagSpec {
+        name: "quick",
+        takes_value: false,
+        help: "shrink expensive runs",
+    },
+    FlagSpec {
+        name: "artifacts",
+        takes_value: true,
+        help: "artifacts directory",
+    },
+    FlagSpec {
+        name: "listen",
+        takes_value: true,
+        help: "serve: expose the TCP line protocol on this address (e.g. 127.0.0.1:7878)",
+    },
+    FlagSpec {
+        name: "workers",
+        takes_value: true,
+        help: "serving shards (1 = single engine)",
+    },
+    FlagSpec {
+        name: "policy",
+        takes_value: true,
+        help: "shard selection: round-robin|least-loaded|p2c",
+    },
+    FlagSpec {
+        name: "promote-us",
+        takes_value: true,
+        help: "bulk aging threshold before promotion",
+    },
+    FlagSpec {
+        name: "interactive-every",
+        takes_value: true,
+        help: "serve-pool: every k-th request is interactive",
+    },
+    FlagSpec {
+        name: "threshold",
+        takes_value: true,
+        help: "native backend: sparse kernel threshold override (see bench calibrate)",
+    },
 ];
 
 fn main() {
@@ -63,11 +146,12 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => train(&args),
         "infer" => infer(&args),
         "serve" => serve(&args),
+        "serve-pool" => serve_pool(&args),
         "sim" => sim(&args),
         "bench" => run_bench(&args),
         _ => {
             println!("zynq-dnn — FPGA DNN inference throughput reproduction\n");
-            println!("usage: zynq-dnn <info|train|infer|serve|sim|bench> [flags]\n");
+            println!("usage: zynq-dnn <info|train|infer|serve|serve-pool|sim|bench> [flags]\n");
             println!("{}", usage(GLOBAL_FLAGS));
             Ok(())
         }
@@ -78,6 +162,13 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     args.get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(zynq_dnn::runtime::default_artifacts_dir)
+}
+
+fn sparse_threshold(args: &Args) -> Result<Option<f64>> {
+    Ok(match args.get("threshold") {
+        Some(v) => Some(v.parse().with_context(|| format!("--threshold: bad number {v:?}"))?),
+        None => None,
+    })
 }
 
 fn info() -> Result<()> {
@@ -223,6 +314,7 @@ fn infer(args: &Args) -> Result<()> {
         net: net.clone(),
         artifacts_dir: artifacts_dir(args),
         native_threads: 1,
+        sparse_threshold: sparse_threshold(args)?,
     };
     let mut engine = factory.build()?;
     let mut rng = Xoshiro256::seed_from_u64(1);
@@ -260,6 +352,17 @@ fn serve(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native");
     let requests = args.get_usize("requests", 64)?;
     let deadline = args.get_usize("deadline-us", 2000)? as u64;
+    let workers = args.get_usize("workers", 1)?;
+    if workers > 1 {
+        if args.get("listen").is_some() {
+            // NetFrontend drives ServerHandle only — refuse loudly rather
+            // than silently serving a local demo without the socket
+            bail!("--listen requires --workers 1 (the TCP frontend is not pool-aware yet)");
+        }
+        // the single-engine demo below (and the TCP frontend) are built
+        // around ServerHandle; the sharded path has its own demo
+        return serve_pool(args);
+    }
     let net = load_or_random(args, name)?;
     let s_in = net.spec.inputs();
 
@@ -276,6 +379,7 @@ fn serve(args: &Args) -> Result<()> {
         net,
         artifacts_dir: artifacts_dir(args),
         native_threads: 1,
+        sparse_threshold: sparse_threshold(args)?,
     };
     let server = Server::start(&cfg, factory)?;
     eprintln!("serving {name} on {backend}, batch {batch}, deadline {deadline} µs");
@@ -310,7 +414,8 @@ fn serve(args: &Args) -> Result<()> {
     }
     let snap = server.metrics.snapshot();
     println!(
-        "served {} requests in {} batches; occupancy {:.2}; mean latency {}; p95 {}; throughput {:.0}/s",
+        "served {} requests in {} batches; occupancy {:.2}; mean latency {}; p95 {}; \
+         throughput {:.0}/s",
         snap.requests,
         snap.batches,
         snap.occupancy,
@@ -320,6 +425,114 @@ fn serve(args: &Args) -> Result<()> {
     );
     println!("class histogram: {classes:?}");
     server.shutdown()?;
+    Ok(())
+}
+
+fn serve_pool(args: &Args) -> Result<()> {
+    let name = args.get_or("network", "quickstart");
+    let batch = args.get_usize("batch", 4)?;
+    let backend = args.get_or("backend", "native");
+    let requests = args.get_usize("requests", 256)?;
+    let deadline = args.get_usize("deadline-us", 2000)? as u64;
+    let workers = args.get_usize("workers", 4)?;
+    let policy = args.get_or("policy", "round-robin");
+    let promote = args.get_usize("promote-us", 20_000)? as u64;
+    let every = args.get_usize("interactive-every", 5)?.max(1);
+    let net = load_or_random(args, name)?;
+    let s_in = net.spec.inputs();
+
+    let cfg = ServerConfig {
+        network: name.into(),
+        batch,
+        batch_deadline_us: deadline,
+        workers,
+        policy: policy.into(),
+        bulk_promote_us: promote,
+        queue_depth: requests.max(1024),
+        backend: backend.into(),
+        ..Default::default()
+    };
+    let factory = EngineFactory {
+        backend: backend.into(),
+        batch,
+        net,
+        artifacts_dir: artifacts_dir(args),
+        native_threads: 1,
+        sparse_threshold: sparse_threshold(args)?,
+    };
+    let serving = start_serving(&cfg, factory)?;
+    eprintln!(
+        "pool: {name} on {backend}, {} worker(s), batch {batch}, policy {policy}, \
+         1/{every} interactive",
+        serving.workers()
+    );
+
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let input: Vec<i32> = (0..s_in)
+            .map(|_| zynq_dnn::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let prio = if i % every == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Bulk
+        };
+        rxs.push(serving.submit(input, prio)?.1);
+    }
+    for rx in rxs {
+        rx.recv()?;
+    }
+
+    match &serving {
+        Serving::Pool(pool) => {
+            let snap = pool.snapshot();
+            for (i, s) in snap.shards.iter().enumerate() {
+                println!(
+                    "shard {i}: {} req in {} batches ({} padded, {} wasted slots), \
+                     occupancy {:.2}, p99 {}",
+                    s.requests,
+                    s.batches,
+                    s.padded_batches,
+                    s.padded_slots,
+                    s.occupancy,
+                    zynq_dnn::util::fmt_time(s.p99_latency_s)
+                );
+            }
+            let a = &snap.aggregate;
+            println!(
+                "aggregate: {} req; occupancy {:.2}; p50 {} p95 {} p99 {}; \
+                 interactive p99 {} ({} req); bulk p99 {} ({} req, {} promoted); \
+                 throughput {:.0}/s",
+                a.requests,
+                a.occupancy,
+                zynq_dnn::util::fmt_time(a.p50_latency_s),
+                zynq_dnn::util::fmt_time(a.p95_latency_s),
+                zynq_dnn::util::fmt_time(a.p99_latency_s),
+                zynq_dnn::util::fmt_time(a.interactive_p99_s),
+                a.interactive_requests,
+                zynq_dnn::util::fmt_time(a.bulk_p99_s),
+                a.bulk_requests,
+                a.promoted,
+                a.throughput
+            );
+        }
+        Serving::Single(server) => {
+            let snap = server.metrics.snapshot();
+            println!(
+                "served {} requests in {} batches ({} padded, {} wasted slots); \
+                 occupancy {:.2}; p95 {}; throughput {:.0}/s",
+                snap.requests,
+                snap.batches,
+                snap.padded_batches,
+                snap.padded_slots,
+                snap.occupancy,
+                zynq_dnn::util::fmt_time(snap.p95_latency_s),
+                snap.throughput
+            );
+        }
+    }
+    serving.shutdown()?;
     Ok(())
 }
 
@@ -402,9 +615,28 @@ fn run_bench(args: &Args) -> Result<()> {
         println!("{}", bench::sparse::render(&bench::sparse::run()));
         ran = true;
     }
+    if all || which == "calibrate" {
+        println!("{}", bench::calibrate::render(&bench::calibrate::run()));
+        ran = true;
+    }
+    if all || which == "slo" {
+        let slo = bench::slo::run();
+        println!("{}", bench::slo::render(&slo));
+        // the CI smoke job runs `bench slo --quick`: scheduler regressions
+        // must fail the build, not just print a slower table
+        if let Err(e) = bench::slo::check_shape(&slo) {
+            if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+                eprintln!("slo shape check FAILED (ignored, ZDNN_SKIP_PERF=1): {e}");
+            } else {
+                bail!("slo shape check failed: {e}");
+            }
+        }
+        ran = true;
+    }
     if !ran {
         bail!(
-            "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|ablation|sparse|all)"
+            "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|\
+             ablation|sparse|calibrate|slo|all)"
         );
     }
     Ok(())

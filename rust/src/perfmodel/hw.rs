@@ -98,7 +98,13 @@ impl LayerTiming {
 /// §4.4 cycle count for layer j→j+1 (exact integer form, batch design adds
 /// the m·c_a activation drain which is negligible and included by the
 /// simulator instead).
-pub fn layer_cycles(cfg: &HwConfig, s_out: usize, s_in: usize, q_prune: f64, n_samples: usize) -> u64 {
+pub fn layer_cycles(
+    cfg: &HwConfig,
+    s_out: usize,
+    s_in: usize,
+    q_prune: f64,
+    n_samples: usize,
+) -> u64 {
     let sections = s_out.div_ceil(cfg.m) as u64;
     let remaining = ((s_in as f64) * (1.0 - q_prune)).ceil() as usize;
     let words = remaining.div_ceil(cfg.r) as u64;

@@ -1,0 +1,405 @@
+//! Priority-aware dispatch: the two-level queue each shard runs, plus the
+//! shard-selection policies the pool's front door uses.
+//!
+//! # Two-level queue ([`PriorityBatcher`])
+//!
+//! Requests carry a [`Priority`]: `Interactive` (latency-sensitive) or
+//! `Bulk` (throughput traffic).  At batch-formation time interactive
+//! requests preempt bulk — a formed batch is filled from the interactive
+//! queue first and only then topped up from the bulk queue.  Two rules
+//! keep this starvation-free and predictable:
+//!
+//! * **Aging**: a bulk request older than `promote_after` is *promoted* —
+//!   it competes with interactive requests in global FIFO order (by
+//!   enqueue time), so a steady interactive flood cannot hold it back
+//!   forever.  Promoted bulk is never overtaken by a younger request
+//!   (property-tested below).
+//! * **Deadline**: the flush deadline applies to the oldest request of
+//!   either class, so a lone bulk request still dispatches within the
+//!   deadline even when no interactive traffic arrives.
+//!
+//! # Shard selection ([`Policy`])
+//!
+//! * `round-robin` — rotate submissions across shards.
+//! * `least-loaded` — scan per-shard queue depths, pick the minimum.
+//! * `p2c` — power-of-two-choices: sample two shards, pick the shallower
+//!   queue; O(1) with near-least-loaded balance (the classic
+//!   load-balancing result, and EIE's distribution-unit discipline).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::request::Request;
+use crate::tensor::MatI;
+
+/// Request priority class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive: preempts Bulk at batch-formation time.
+    Interactive,
+    /// Throughput traffic: fills remaining batch slots; aging promotes it.
+    Bulk,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "interactive" | "i" => Ok(Priority::Interactive),
+            "bulk" | "b" => Ok(Priority::Bulk),
+            other => bail!("unknown priority {other:?} (interactive|bulk)"),
+        }
+    }
+}
+
+/// Shard-selection policy for the pool front door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+    PowerOfTwo,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" | "rr" => Ok(Policy::RoundRobin),
+            "least-loaded" | "ll" => Ok(Policy::LeastLoaded),
+            "p2c" | "power-of-two" => Ok(Policy::PowerOfTwo),
+            other => bail!("unknown policy {other:?} (round-robin|least-loaded|p2c)"),
+        }
+    }
+}
+
+/// A formed batch with per-request priorities (the shard needs them for
+/// the per-class latency metrics).
+#[derive(Debug)]
+pub struct PrioBatch {
+    /// (request, class) in dispatch order, ≤ `size` entries.
+    pub requests: Vec<(Request, Priority)>,
+    /// Hardware batch size (rows in the padded input).
+    pub size: usize,
+    /// How many Bulk requests in this batch were promoted by aging.
+    pub promoted: usize,
+}
+
+impl PrioBatch {
+    pub fn occupancy(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Padded input matrix rows (zeros beyond occupancy).
+    pub fn padded_input(&self, s_in: usize) -> MatI {
+        let mut x = MatI::zeros(self.size, s_in);
+        for (row, (req, _)) in self.requests.iter().enumerate() {
+            x.row_mut(row).copy_from_slice(&req.input);
+        }
+        x
+    }
+}
+
+/// Two-level batching queue (single consumer: one shard thread).
+pub struct PriorityBatcher {
+    interactive: VecDeque<Request>,
+    bulk: VecDeque<Request>,
+    batch_size: usize,
+    deadline: Duration,
+    promote_after: Duration,
+}
+
+impl PriorityBatcher {
+    pub fn new(batch_size: usize, deadline: Duration, promote_after: Duration) -> Self {
+        assert!(batch_size >= 1);
+        Self {
+            interactive: VecDeque::new(),
+            bulk: VecDeque::new(),
+            batch_size,
+            deadline,
+            promote_after,
+        }
+    }
+
+    pub fn push(&mut self, req: Request, priority: Priority) {
+        match priority {
+            Priority::Interactive => self.interactive.push_back(req),
+            Priority::Bulk => self.bulk.push_back(req),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.interactive.len() + self.bulk.len()
+    }
+
+    fn oldest_queued_at(&self) -> Option<Instant> {
+        match (self.interactive.front(), self.bulk.front()) {
+            (Some(i), Some(b)) => Some(i.queued_at.min(b.queued_at)),
+            (Some(i), None) => Some(i.queued_at),
+            (None, Some(b)) => Some(b.queued_at),
+            (None, None) => None,
+        }
+    }
+
+    /// Time until the oldest request (either class) hits the flush
+    /// deadline (None when empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest_queued_at().map(|at| {
+            let age = now.duration_since(at);
+            self.deadline.saturating_sub(age)
+        })
+    }
+
+    /// Form the next batch if policy allows: immediately at `batch_size`
+    /// ready requests, or a padded partial once the oldest request of
+    /// either class has aged past the deadline.
+    pub fn poll(&mut self, now: Instant) -> Option<PrioBatch> {
+        if self.pending() >= self.batch_size {
+            return Some(self.form(now));
+        }
+        match self.oldest_queued_at() {
+            Some(at) if now.duration_since(at) >= self.deadline => Some(self.form(now)),
+            _ => None,
+        }
+    }
+
+    /// Form one batch regardless of the deadline (shutdown drain); `None`
+    /// when nothing is pending.
+    pub fn flush_next(&mut self, now: Instant) -> Option<PrioBatch> {
+        if self.pending() == 0 {
+            None
+        } else {
+            Some(self.form(now))
+        }
+    }
+
+    /// Batch-formation rule: interactive first (FIFO), bulk fills the
+    /// remaining slots (FIFO) — except that a *promoted* bulk request
+    /// (older than `promote_after`) competes in global FIFO order and is
+    /// therefore taken before any younger interactive request.
+    fn form(&mut self, now: Instant) -> PrioBatch {
+        let mut requests = Vec::with_capacity(self.batch_size.min(self.pending()));
+        let mut promoted = 0;
+        while requests.len() < self.batch_size {
+            let take_bulk = match (self.interactive.front(), self.bulk.front()) {
+                (Some(i), Some(b)) => {
+                    now.duration_since(b.queued_at) >= self.promote_after
+                        && b.queued_at <= i.queued_at
+                }
+                (None, Some(_)) => true,
+                (Some(_), None) => false,
+                (None, None) => break,
+            };
+            if take_bulk {
+                let req = self.bulk.pop_front().unwrap();
+                if now.duration_since(req.queued_at) >= self.promote_after {
+                    promoted += 1;
+                }
+                requests.push((req, Priority::Bulk));
+            } else {
+                let req = self.interactive.pop_front().unwrap();
+                requests.push((req, Priority::Interactive));
+            }
+        }
+        PrioBatch {
+            requests,
+            size: self.batch_size,
+            promoted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use std::sync::mpsc;
+
+    fn mk_request(id: u64, at: Instant) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            input: vec![id as i32; 4],
+            queued_at: at,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn policy_and_priority_parse() {
+        assert_eq!(Policy::parse("round-robin").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("ll").unwrap(), Policy::LeastLoaded);
+        assert_eq!(Policy::parse("p2c").unwrap(), Policy::PowerOfTwo);
+        assert!(Policy::parse("random").is_err());
+        assert_eq!(Priority::parse("interactive").unwrap(), Priority::Interactive);
+        assert_eq!(Priority::parse("b").unwrap(), Priority::Bulk);
+        assert!(Priority::parse("background").is_err());
+    }
+
+    #[test]
+    fn interactive_preempts_bulk_in_batch_formation() {
+        let t0 = Instant::now();
+        let mut q = PriorityBatcher::new(3, Duration::from_millis(10), Duration::from_secs(60));
+        q.push(mk_request(0, t0), Priority::Bulk);
+        q.push(mk_request(1, t0), Priority::Bulk);
+        q.push(mk_request(2, t0), Priority::Interactive);
+        q.push(mk_request(3, t0), Priority::Interactive);
+        let batch = q.poll(t0).expect("3 ready");
+        let order: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        // interactive 2, 3 jump ahead of bulk 0; one bulk slot remains
+        assert_eq!(order, vec![2, 3, 0]);
+        assert_eq!(batch.promoted, 0);
+        assert_eq!(q.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_flushes_lone_bulk_request() {
+        let t0 = Instant::now();
+        let mut q = PriorityBatcher::new(8, Duration::from_millis(5), Duration::from_secs(60));
+        q.push(mk_request(0, t0), Priority::Bulk);
+        assert!(q.poll(t0).is_none());
+        assert_eq!(
+            q.time_to_deadline(t0 + Duration::from_millis(3)),
+            Some(Duration::from_millis(2))
+        );
+        let batch = q.poll(t0 + Duration::from_millis(5)).expect("deadline flush");
+        assert_eq!(batch.occupancy(), 1);
+        assert_eq!(batch.size, 8);
+    }
+
+    #[test]
+    fn aging_promotes_bulk_over_interactive_flood() {
+        // an interactive flood fills every batch; without aging the bulk
+        // request would wait forever
+        let t0 = Instant::now();
+        let promote = Duration::from_millis(10);
+        let mut q = PriorityBatcher::new(2, Duration::from_millis(1), promote);
+        q.push(mk_request(0, t0), Priority::Bulk);
+        let mut next_id = 1;
+        // flood while the bulk request is younger than the threshold: every
+        // formed batch must be pure interactive
+        for step in 0..5 {
+            let now = t0 + Duration::from_millis(step);
+            q.push(mk_request(next_id, now), Priority::Interactive);
+            q.push(mk_request(next_id + 1, now), Priority::Interactive);
+            next_id += 2;
+            let batch = q.poll(now).expect("full batch");
+            assert!(
+                batch.requests.iter().all(|(_, p)| *p == Priority::Interactive),
+                "bulk dispatched before promotion at step {step}"
+            );
+        }
+        // past the threshold the promoted bulk request must win the very
+        // next batch even though fresh interactive traffic keeps arriving
+        let now = t0 + promote;
+        q.push(mk_request(next_id, now), Priority::Interactive);
+        q.push(mk_request(next_id + 1, now), Priority::Interactive);
+        let batch = q.poll(now).expect("full batch");
+        assert_eq!(batch.requests[0].0.id, 0, "promoted bulk must dispatch first");
+        assert_eq!(batch.promoted, 1);
+    }
+
+    #[test]
+    fn prop_every_request_in_exactly_one_batch_fifo_per_class() {
+        prop_check(150, |g| {
+            let n = g.usize(1..8);
+            let total = g.usize(0..40);
+            let mut q = PriorityBatcher::new(
+                n,
+                Duration::from_millis(g.u64(0..=20)),
+                Duration::from_millis(g.u64(0..=30)),
+            );
+            let t0 = Instant::now();
+            let mut seen: Vec<(u64, Priority)> = Vec::new();
+            let mut pushed: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            let mut now = t0;
+            let collect = |seen: &mut Vec<(u64, Priority)>, batch: &PrioBatch| {
+                seen.extend(batch.requests.iter().map(|(r, p)| (r.id, *p)));
+            };
+            for step in 0..total {
+                now += Duration::from_millis(g.u64(0..=3));
+                let prio = if g.bool(0.5) {
+                    Priority::Interactive
+                } else {
+                    Priority::Bulk
+                };
+                q.push(mk_request(next_id, now), prio);
+                pushed.push(next_id);
+                next_id += 1;
+                if step % 3 == 0 {
+                    if let Some(batch) = q.poll(now) {
+                        if batch.occupancy() > n {
+                            return false;
+                        }
+                        collect(&mut seen, &batch);
+                    }
+                }
+            }
+            while let Some(batch) = q.flush_next(now) {
+                if batch.occupancy() > n {
+                    return false;
+                }
+                collect(&mut seen, &batch);
+            }
+            // exactly once: ids unique and complete (set equality via sort)
+            let mut sorted: Vec<u64> = seen.iter().map(|(id, _)| *id).collect();
+            sorted.sort_unstable();
+            if sorted != pushed {
+                return false;
+            }
+            // FIFO within each priority class: dispatch order of a class
+            // must be its submission (id) order
+            for class in [Priority::Interactive, Priority::Bulk] {
+                let ids: Vec<u64> =
+                    seen.iter().filter(|(_, p)| *p == class).map(|(id, _)| *id).collect();
+                if ids.windows(2).any(|w| w[0] > w[1]) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_promoted_bulk_never_overtaken() {
+        // the no-starvation invariant: whenever a *promoted* bulk request
+        // is still pending after a batch forms, nothing younger than it was
+        // dispatched in that batch — so its position in the effective FIFO
+        // only ever improves and it must eventually dispatch
+        prop_check(150, |g| {
+            let n = g.usize(1..6);
+            let promote = Duration::from_millis(g.u64(1..=10));
+            let mut q = PriorityBatcher::new(n, Duration::from_millis(1), promote);
+            let t0 = Instant::now();
+            let mut now = t0;
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1..30) {
+                now += Duration::from_millis(g.u64(0..=4));
+                for _ in 0..g.usize(0..4) {
+                    let prio = if g.bool(0.6) {
+                        Priority::Interactive
+                    } else {
+                        Priority::Bulk
+                    };
+                    q.push(mk_request(next_id, now), prio);
+                    next_id += 1;
+                }
+                if let Some(batch) = q.poll(now) {
+                    // oldest still-pending promoted bulk request
+                    let oldest_promoted = q
+                        .bulk
+                        .iter()
+                        .filter(|r| now.duration_since(r.queued_at) >= promote)
+                        .map(|r| r.queued_at)
+                        .min();
+                    if let Some(cutoff) = oldest_promoted {
+                        if batch.requests.iter().any(|(r, _)| r.queued_at > cutoff) {
+                            return false; // a younger request overtook it
+                        }
+                    }
+                }
+            }
+            true
+        });
+    }
+}

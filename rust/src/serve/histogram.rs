@@ -1,0 +1,272 @@
+//! Per-shard serving metrics: latency recorders with p50/p95/p99, batch
+//! occupancy and padded-slot waste, and per-priority-class breakdowns.
+//!
+//! Each shard owns one [`ShardMetrics`] (mutex-guarded; touched once per
+//! batch and once per response, far off the per-MAC hot path).  The pool
+//! aggregates by merging the underlying log-bucketed histograms
+//! ([`crate::util::stats::Histogram`]), so aggregate percentiles are
+//! computed over the union of samples rather than averaged per shard.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+use super::dispatch::Priority;
+
+/// Seconds-facing wrapper over the nanosecond log-bucketed [`Histogram`]:
+/// records latencies and reports the percentiles the SLO bench plots.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    hist: Histogram,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_s(&mut self, seconds: f64) {
+        self.hist.record((seconds.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.hist.count()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.hist.mean_ns() / 1e9
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.hist.max_ns() as f64 / 1e9
+    }
+
+    pub fn percentile_s(&self, q: f64) -> f64 {
+        self.hist.percentile_ns(q) as f64 / 1e9
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        self.percentile_s(0.50)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        self.percentile_s(0.95)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        self.percentile_s(0.99)
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.hist.merge(&other.hist);
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+struct Inner {
+    /// End-to-end latency (queue + compute), all classes.
+    latency: LatencyRecorder,
+    /// Queue-only wait, all classes.
+    queue: LatencyRecorder,
+    /// End-to-end latency per priority class.
+    interactive: LatencyRecorder,
+    bulk: LatencyRecorder,
+    requests: u64,
+    batches: u64,
+    padded_batches: u64,
+    occupied_slots: u64,
+    padded_slots: u64,
+    /// Bulk requests that aged past the promotion threshold before dispatch.
+    promoted: u64,
+}
+
+/// One shard's metrics (the pool holds one per worker plus merges them on
+/// demand for the aggregate view).
+#[derive(Debug)]
+pub struct ShardMetrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+impl Default for ShardMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time view of one shard (or of the merged pool).
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    /// Batches executed below full occupancy (their padding is waste).
+    pub padded_batches: u64,
+    pub occupied_slots: u64,
+    pub padded_slots: u64,
+    /// Bulk requests promoted by aging before dispatch.
+    pub promoted: u64,
+    /// Fraction of batch slots carrying real samples.
+    pub occupancy: f64,
+    /// Completed requests per wall second since start.
+    pub throughput: f64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_queue_s: f64,
+    pub interactive_requests: u64,
+    pub interactive_p99_s: f64,
+    pub bulk_requests: u64,
+    pub bulk_p99_s: f64,
+}
+
+impl ShardMetrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            started: Instant::now(),
+        }
+    }
+
+    /// One executed batch: `occupancy` real samples padded to `size` rows,
+    /// `promoted` of them Bulk requests promoted by aging.
+    pub fn record_batch(&self, occupancy: usize, size: usize, promoted: usize) {
+        debug_assert!(occupancy <= size);
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        if occupancy < size {
+            g.padded_batches += 1;
+        }
+        g.occupied_slots += occupancy as u64;
+        g.padded_slots += (size - occupancy) as u64;
+        g.promoted += promoted as u64;
+    }
+
+    pub fn record_request(&self, priority: Priority, queue_s: f64, total_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.queue.record_s(queue_s);
+        g.latency.record_s(total_s);
+        match priority {
+            Priority::Interactive => g.interactive.record_s(total_s),
+            Priority::Bulk => g.bulk.record_s(total_s),
+        }
+    }
+
+    pub fn snapshot(&self) -> ShardSnapshot {
+        let g = self.inner.lock().unwrap();
+        Self::render(&g, self.started.elapsed().as_secs_f64())
+    }
+
+    /// Merge many shards into one aggregate snapshot (histograms are
+    /// merged, so percentiles reflect the union of samples).
+    pub fn merged<'a, I: IntoIterator<Item = &'a ShardMetrics>>(all: I) -> ShardSnapshot {
+        let mut acc = Inner::default();
+        let mut elapsed: f64 = 0.0;
+        for m in all {
+            let g = m.inner.lock().unwrap();
+            acc.latency.merge(&g.latency);
+            acc.queue.merge(&g.queue);
+            acc.interactive.merge(&g.interactive);
+            acc.bulk.merge(&g.bulk);
+            acc.requests += g.requests;
+            acc.batches += g.batches;
+            acc.padded_batches += g.padded_batches;
+            acc.occupied_slots += g.occupied_slots;
+            acc.padded_slots += g.padded_slots;
+            acc.promoted += g.promoted;
+            elapsed = elapsed.max(m.started.elapsed().as_secs_f64());
+        }
+        Self::render(&acc, elapsed)
+    }
+
+    fn render(g: &Inner, elapsed_s: f64) -> ShardSnapshot {
+        let slots = g.occupied_slots + g.padded_slots;
+        ShardSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            padded_batches: g.padded_batches,
+            occupied_slots: g.occupied_slots,
+            padded_slots: g.padded_slots,
+            promoted: g.promoted,
+            occupancy: if slots == 0 {
+                0.0
+            } else {
+                g.occupied_slots as f64 / slots as f64
+            },
+            throughput: g.requests as f64 / elapsed_s.max(1e-9),
+            mean_latency_s: g.latency.mean_s(),
+            p50_latency_s: g.latency.p50_s(),
+            p95_latency_s: g.latency.p95_s(),
+            p99_latency_s: g.latency.p99_s(),
+            mean_queue_s: g.queue.mean_s(),
+            interactive_requests: g.interactive.count(),
+            interactive_p99_s: g.interactive.p99_s(),
+            bulk_requests: g.bulk.count(),
+            bulk_p99_s: g.bulk.p99_s(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_percentiles_monotone() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=1000u64 {
+            r.record_s(i as f64 * 1e-6);
+        }
+        assert_eq!(r.count(), 1000);
+        assert!(r.p50_s() <= r.p95_s());
+        assert!(r.p95_s() <= r.p99_s());
+        assert!(r.mean_s() > 0.0);
+        assert!(r.max_s() >= 0.9e-3);
+    }
+
+    #[test]
+    fn shard_metrics_accumulate_by_class() {
+        let m = ShardMetrics::new();
+        m.record_batch(3, 4, 1);
+        m.record_batch(4, 4, 0);
+        for _ in 0..5 {
+            m.record_request(Priority::Interactive, 1e-4, 1e-3);
+        }
+        for _ in 0..2 {
+            m.record_request(Priority::Bulk, 5e-3, 8e-3);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 7);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.padded_batches, 1);
+        assert_eq!(s.occupied_slots, 7);
+        assert_eq!(s.padded_slots, 1);
+        assert_eq!(s.promoted, 1);
+        assert_eq!(s.interactive_requests, 5);
+        assert_eq!(s.bulk_requests, 2);
+        assert!(s.bulk_p99_s > s.interactive_p99_s);
+        assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_unions_shards() {
+        let a = ShardMetrics::new();
+        let b = ShardMetrics::new();
+        a.record_batch(2, 2, 0);
+        b.record_batch(1, 2, 0);
+        a.record_request(Priority::Interactive, 1e-4, 1e-3);
+        a.record_request(Priority::Bulk, 1e-4, 2e-3);
+        b.record_request(Priority::Bulk, 1e-4, 4e-3);
+        let s = ShardMetrics::merged([&a, &b]);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.occupied_slots, 3);
+        assert_eq!(s.padded_slots, 1);
+        assert_eq!(s.interactive_requests, 1);
+        assert_eq!(s.bulk_requests, 2);
+        // merged p99 must be at least the larger shard's sample bucket
+        assert!(s.p99_latency_s >= 4e-3);
+    }
+}

@@ -1,0 +1,40 @@
+//! Sharded serving runtime: the fleet-throughput layer between the
+//! coordinator and the compiled execution plans.
+//!
+//! The paper's throughput comes from amortizing weight transfers across a
+//! batch (§5.5); a *host* serving that accelerator design still leaves
+//! (N-1)/N of a N-core machine idle if one engine thread executes every
+//! batch.  This module replicates the compiled
+//! [`ExecPlan`](crate::exec::ExecPlan) across worker shards — one engine
+//! per thread, weights shared read-only behind `Arc`
+//! ([`ExecPlan::clone_shared`](crate::exec::ExecPlan::clone_shared)) — the
+//! multi-instance scaling route the FPGA accelerator surveys describe, and
+//! the same load-balanced work sharding EIE uses across processing
+//! elements.
+//!
+//! Pieces:
+//!
+//! * [`dispatch`] — request [`Priority`] classes, the two-level
+//!   [`PriorityBatcher`] each shard runs (interactive preempts bulk at
+//!   batch formation; aging promotes bulk so nothing starves), and the
+//!   shard-selection [`Policy`] (round-robin, least-loaded,
+//!   power-of-two-choices).
+//! * [`shard`] — the worker loop: one engine + one priority batcher.
+//! * [`pool`] — [`ServePool`]/[`PoolHandle`]: the front door with
+//!   pool-wide backpressure, plus [`start_serving`], which delegates
+//!   between the classic single-engine server and the pool on
+//!   `ServerConfig::workers`.
+//! * [`histogram`] — per-shard latency recorders (p50/p95/p99), batch
+//!   occupancy, padded-slot waste, and per-priority breakdowns, mergeable
+//!   into a pool aggregate.
+//!
+//! The SLO benchmark over this runtime lives in [`crate::bench::slo`].
+
+pub mod dispatch;
+pub mod histogram;
+pub mod pool;
+pub(crate) mod shard;
+
+pub use dispatch::{Policy, PrioBatch, Priority, PriorityBatcher};
+pub use histogram::{LatencyRecorder, ShardMetrics, ShardSnapshot};
+pub use pool::{start_serving, PoolHandle, PoolSnapshot, ServePool, Serving};

@@ -1,0 +1,466 @@
+//! The sharded serving pool: N worker shards, each running one engine on a
+//! shared-weight [`ExecPlan`](crate::exec::ExecPlan) replica, fronted by a
+//! policy-driven dispatcher with pool-wide backpressure.
+//!
+//! For native backends the plan is compiled **once** and replicated with
+//! [`ExecPlan::clone_shared`](crate::exec::ExecPlan::clone_shared): shards
+//! share the read-only dense/CSR weight storage behind `Arc` and own only
+//! their activation buffers, so memory scales with activations — not with
+//! `workers × weights`.  Non-native backends (simulators, PJRT) construct
+//! their engine inside the shard thread exactly like the single-engine
+//! coordinator does.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::dispatch::{Policy, Priority};
+use super::histogram::{ShardMetrics, ShardSnapshot};
+use super::shard::{shard_loop, ShardCommand, ShardConfig};
+use crate::config::ServerConfig;
+use crate::coordinator::engine::EngineFactory;
+use crate::coordinator::request::{Request, RequestId, Response};
+use crate::coordinator::server::{Server, ServerHandle};
+
+/// The pool starter (mirrors [`Server`]).
+pub struct ServePool;
+
+struct Shard {
+    tx: mpsc::Sender<ShardCommand>,
+    depth: Arc<AtomicUsize>,
+    metrics: Arc<ShardMetrics>,
+    thread: Option<thread::JoinHandle<Result<()>>>,
+}
+
+/// Client handle to a running pool: submit prioritized requests, read
+/// per-shard and aggregate metrics, shut down.
+pub struct PoolHandle {
+    shards: Vec<Shard>,
+    policy: Policy,
+    rr: AtomicUsize,
+    seed: AtomicU64,
+    in_flight: Arc<AtomicUsize>,
+    queue_depth: usize,
+    next_id: AtomicU64,
+    shutting_down: AtomicBool,
+    /// Input width every shard's engine expects (validated at submit).
+    pub input_width: usize,
+}
+
+/// Pool-wide view: the merged aggregate plus each shard's snapshot.
+#[derive(Debug, Clone)]
+pub struct PoolSnapshot {
+    pub aggregate: ShardSnapshot,
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl ServePool {
+    pub fn start(config: &ServerConfig, factory: EngineFactory) -> Result<PoolHandle> {
+        config.validate()?;
+        let policy = Policy::parse(&config.policy)?;
+        let workers = config.workers;
+        let input_width = factory.net.spec.inputs();
+        // compile once, replicate cheaply: plan compilation (and any CSR
+        // encoding) happens here, on the caller thread, so errors surface
+        // at start rather than inside a worker
+        let shared_plan = if factory.is_native() {
+            Some(factory.compile_plan()?)
+        } else {
+            None
+        };
+        let shard_cfg = ShardConfig {
+            batch: config.batch,
+            deadline: Duration::from_micros(config.batch_deadline_us),
+            promote_after: Duration::from_micros(config.bulk_promote_us),
+        };
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let mut shards = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::channel::<ShardCommand>();
+            let metrics = Arc::new(ShardMetrics::new());
+            let depth = Arc::new(AtomicUsize::new(0));
+            let plan = shared_plan.as_ref().map(|p| p.clone_shared());
+            let f = factory.clone();
+            let m = metrics.clone();
+            let d = depth.clone();
+            let fl = in_flight.clone();
+            let thread = thread::Builder::new()
+                .name(format!("zdnn-shard-{i}"))
+                .spawn(move || shard_loop(rx, f, plan, shard_cfg, m, d, fl))?;
+            shards.push(Shard {
+                tx,
+                depth,
+                metrics,
+                thread: Some(thread),
+            });
+        }
+        Ok(PoolHandle {
+            shards,
+            policy,
+            rr: AtomicUsize::new(0),
+            seed: AtomicU64::new(0x5EED_CAFE),
+            in_flight,
+            queue_depth: config.queue_depth,
+            next_id: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            input_width,
+        })
+    }
+}
+
+/// SplitMix64: cheap stateless mixing for power-of-two-choices sampling
+/// (quality far beyond what shard picking needs, and allocation-free).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl PoolHandle {
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Pick a shard for the next request under the configured policy.
+    fn pick_shard(&self) -> usize {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        match self.policy {
+            Policy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            Policy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_depth = usize::MAX;
+                for (i, s) in self.shards.iter().enumerate() {
+                    let d = s.depth.load(Ordering::Relaxed);
+                    if d < best_depth {
+                        best = i;
+                        best_depth = d;
+                    }
+                }
+                best
+            }
+            Policy::PowerOfTwo => {
+                let r = splitmix64(self.seed.fetch_add(1, Ordering::Relaxed));
+                let a = (r as usize) % n;
+                // sample b from the remaining n-1 shards so a != b
+                let b = (a + 1 + ((r >> 32) as usize) % (n - 1)) % n;
+                let da = self.shards[a].depth.load(Ordering::Relaxed);
+                let db = self.shards[b].depth.load(Ordering::Relaxed);
+                if da <= db {
+                    a
+                } else {
+                    b
+                }
+            }
+        }
+    }
+
+    /// Submit one sample at a priority; returns the response receiver or
+    /// an immediate backpressure error when the pool is saturated.
+    pub fn submit(
+        &self,
+        input: Vec<i32>,
+        priority: Priority,
+    ) -> Result<(RequestId, mpsc::Receiver<Response>)> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            bail!("pool is shutting down");
+        }
+        if input.len() != self.input_width {
+            bail!("input width {} != {}", input.len(), self.input_width);
+        }
+        // reserve a pool-wide slot; fail fast when saturated
+        let mut cur = self.in_flight.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.queue_depth {
+                bail!("pool queue full ({cur} in flight)");
+            }
+            match self.in_flight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+        let shard = self.pick_shard();
+        self.shards[shard].depth.fetch_add(1, Ordering::SeqCst);
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id,
+            input,
+            queued_at: std::time::Instant::now(),
+            reply: rtx,
+        };
+        if self.shards[shard]
+            .tx
+            .send(ShardCommand::Infer(req, priority))
+            .is_err()
+        {
+            self.shards[shard].depth.fetch_sub(1, Ordering::SeqCst);
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            bail!("shard {shard} thread gone");
+        }
+        Ok((id, rrx))
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
+        let (_, rx) = self.submit(input, priority)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Aggregate + per-shard metrics.
+    pub fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            aggregate: ShardMetrics::merged(self.shards.iter().map(|s| s.metrics.as_ref())),
+            shards: self.shards.iter().map(|s| s.metrics.snapshot()).collect(),
+        }
+    }
+
+    /// Graceful shutdown: every shard drains its backlog, then joins.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for s in &self.shards {
+            let _ = s.tx.send(ShardCommand::Shutdown);
+        }
+        let mut first_err = None;
+        for s in self.shards.iter_mut() {
+            if let Some(h) = s.thread.take() {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                    Err(_) => {
+                        first_err = first_err.or_else(|| Some(anyhow::anyhow!("shard panicked")))
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for PoolHandle {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            let _ = s.tx.send(ShardCommand::Shutdown);
+        }
+        for s in self.shards.iter_mut() {
+            if let Some(h) = s.thread.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// A running serving stack, single-engine or sharded — whichever
+/// [`start_serving`] picked from `config.workers`.
+pub enum Serving {
+    Single(ServerHandle),
+    Pool(PoolHandle),
+}
+
+/// The one serving entry point: delegates to the sharded pool when
+/// `workers > 1`, otherwise to the classic single-engine [`Server`]
+/// (whose FIFO batcher ignores priorities by construction).
+pub fn start_serving(config: &ServerConfig, factory: EngineFactory) -> Result<Serving> {
+    if config.workers > 1 {
+        Ok(Serving::Pool(ServePool::start(config, factory)?))
+    } else {
+        Ok(Serving::Single(Server::start(config, factory)?))
+    }
+}
+
+impl Serving {
+    pub fn workers(&self) -> usize {
+        match self {
+            Serving::Single(_) => 1,
+            Serving::Pool(p) => p.workers(),
+        }
+    }
+
+    pub fn input_width(&self) -> usize {
+        match self {
+            Serving::Single(s) => s.input_width,
+            Serving::Pool(p) => p.input_width,
+        }
+    }
+
+    /// Submit one sample (the single-engine server has one FIFO class, so
+    /// `priority` only shapes scheduling on the pool).
+    pub fn submit(
+        &self,
+        input: Vec<i32>,
+        priority: Priority,
+    ) -> Result<(RequestId, mpsc::Receiver<Response>)> {
+        match self {
+            Serving::Single(s) => s.submit(input),
+            Serving::Pool(p) => p.submit(input, priority),
+        }
+    }
+
+    pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
+        let (_, rx) = self.submit(input, priority)?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(self) -> Result<()> {
+        match self {
+            Serving::Single(s) => s.shutdown(),
+            Serving::Pool(p) => p.shutdown(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::nn::forward_q;
+    use crate::nn::spec::quickstart;
+    use crate::tensor::MatI;
+    use crate::util::rng::Xoshiro256;
+
+    fn test_factory(batch: usize) -> EngineFactory {
+        EngineFactory {
+            backend: "native".into(),
+            batch,
+            net: random_qnet(&quickstart(), 0x5EED),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            native_threads: 1,
+            sparse_threshold: None,
+        }
+    }
+
+    fn test_config(workers: usize, batch: usize, policy: &str) -> ServerConfig {
+        ServerConfig {
+            workers,
+            batch,
+            policy: policy.into(),
+            batch_deadline_us: 500,
+            bulk_promote_us: 5_000,
+            ..Default::default()
+        }
+    }
+
+    fn rand_sample(seed: u64) -> Vec<i32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..64)
+            .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn pool_serves_correct_outputs_on_every_policy() {
+        for policy in ["round-robin", "least-loaded", "p2c"] {
+            let factory = test_factory(4);
+            let net = factory.net.clone();
+            let pool = ServePool::start(&test_config(3, 4, policy), factory).unwrap();
+            let mut pairs = Vec::new();
+            for i in 0..24u64 {
+                let input = rand_sample(i);
+                let prio = if i % 3 == 0 {
+                    Priority::Interactive
+                } else {
+                    Priority::Bulk
+                };
+                pairs.push((input.clone(), pool.submit(input, prio).unwrap()));
+            }
+            for (i, (input, (id, rx))) in pairs.into_iter().enumerate() {
+                let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                assert_eq!(resp.id, id);
+                let want = forward_q(&net, &MatI::from_vec(1, 64, input)).unwrap();
+                assert_eq!(resp.output, want.row(0), "request {i} ({policy})");
+            }
+            let snap = pool.snapshot();
+            assert_eq!(snap.aggregate.requests, 24, "{policy}");
+            assert_eq!(snap.shards.len(), 3);
+            pool.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_load_evenly() {
+        let pool = ServePool::start(&test_config(4, 1, "round-robin"), test_factory(1)).unwrap();
+        let rxs: Vec<_> = (0..20u64)
+            .map(|i| pool.submit(rand_sample(i), Priority::Bulk).unwrap().1)
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let snap = pool.snapshot();
+        for (i, s) in snap.shards.iter().enumerate() {
+            assert_eq!(s.requests, 5, "shard {i} should get 20/4 requests");
+        }
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pool_backpressure_bounds_in_flight() {
+        // batch == queue_depth and a long deadline: no shard can dispatch
+        // before the submit loop finishes (4 pending per shard < batch 8),
+        // so exactly queue_depth submits are accepted and the rest bounce
+        let cfg = ServerConfig {
+            workers: 2,
+            batch: 8,
+            queue_depth: 8,
+            batch_deadline_us: 2_000_000,
+            ..Default::default()
+        };
+        let pool = ServePool::start(&cfg, test_factory(8)).unwrap();
+        let mut held = Vec::new();
+        let mut rejected = 0;
+        for i in 0..64u64 {
+            match pool.submit(rand_sample(i), Priority::Bulk) {
+                Ok(pair) => held.push(pair),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert_eq!(held.len(), 8, "pool must accept exactly queue_depth");
+        assert_eq!(rejected, 56);
+        // shutdown force-drains the padded partial batches; every accepted
+        // request still gets its response
+        let rxs: Vec<_> = held.into_iter().map(|(_, rx)| rx).collect();
+        pool.shutdown().unwrap();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+        }
+    }
+
+    #[test]
+    fn pool_rejects_wrong_width_and_validates_policy() {
+        let pool = ServePool::start(&test_config(2, 2, "p2c"), test_factory(2)).unwrap();
+        assert!(pool.submit(vec![0; 3], Priority::Bulk).is_err());
+        pool.shutdown().unwrap();
+        assert!(ServePool::start(&test_config(2, 2, "bogus"), test_factory(2)).is_err());
+    }
+
+    #[test]
+    fn start_serving_picks_by_workers() {
+        let single = start_serving(&test_config(1, 2, "round-robin"), test_factory(2)).unwrap();
+        assert!(matches!(single, Serving::Single(_)));
+        assert_eq!(single.workers(), 1);
+        assert_eq!(single.input_width(), 64);
+        let resp = single.infer_blocking(rand_sample(1), Priority::Interactive).unwrap();
+        assert_eq!(resp.output.len(), 10);
+        single.shutdown().unwrap();
+
+        let pool = start_serving(&test_config(2, 2, "round-robin"), test_factory(2)).unwrap();
+        assert!(matches!(pool, Serving::Pool(_)));
+        assert_eq!(pool.workers(), 2);
+        let resp = pool.infer_blocking(rand_sample(2), Priority::Bulk).unwrap();
+        assert_eq!(resp.output.len(), 10);
+        pool.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,166 @@
+//! One serving shard: a worker thread owning its own engine (for native
+//! backends, an [`ExecPlan`] replica sharing the pool's read-only weight
+//! storage) and a two-level [`PriorityBatcher`].
+//!
+//! The loop mirrors the single-engine coordinator loop: block on the
+//! command channel bounded by the batcher deadline, greedily drain the
+//! backlog so batch formation sees every queued request, execute ready
+//! batches, and on shutdown force-drain one batch at a time.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::dispatch::{Priority, PriorityBatcher};
+use super::histogram::ShardMetrics;
+use crate::coordinator::engine::{Engine, EngineFactory};
+use crate::coordinator::request::{Request, Response};
+use crate::exec::ExecPlan;
+use crate::nn::forward::argmax_rows;
+
+/// Commands flowing from the pool front door to a shard thread.
+pub(crate) enum ShardCommand {
+    Infer(Request, Priority),
+    Shutdown,
+}
+
+/// Batching knobs a shard runs with (derived from `ServerConfig`).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ShardConfig {
+    pub batch: usize,
+    pub deadline: Duration,
+    pub promote_after: Duration,
+}
+
+/// Execute every batch the batcher will currently form; `force` drains the
+/// backlog one batch per iteration regardless of the deadline.
+///
+/// Deliberate mirror of `coordinator::server::dispatch_ready` over the
+/// priority batcher (that one stays priority-free so the single-engine
+/// server's semantics are untouched); a change to either execute/reply
+/// body — especially the infer-error path, which strands `in_flight` in
+/// both — must be made in the other too (ROADMAP: unify over a
+/// batch-view trait once a toolchain session can verify the refactor).
+fn run_ready(
+    batcher: &mut PriorityBatcher,
+    engine: &mut dyn Engine,
+    s_in: usize,
+    force: bool,
+    metrics: &ShardMetrics,
+    depth: &AtomicUsize,
+    in_flight: &AtomicUsize,
+) -> Result<()> {
+    loop {
+        let now = Instant::now();
+        let batch = if force {
+            batcher.flush_next(now)
+        } else {
+            batcher.poll(now)
+        };
+        let Some(batch) = batch else {
+            return Ok(());
+        };
+        let occupancy = batch.occupancy();
+        metrics.record_batch(occupancy, batch.size, batch.promoted);
+        let x = batch.padded_input(s_in);
+        let t0 = Instant::now();
+        let y = engine.infer(&x)?;
+        let compute_seconds = engine
+            .simulated_seconds()
+            .unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        let classes = argmax_rows(&y);
+        for (row, (req, priority)) in batch.requests.into_iter().enumerate() {
+            let queue_seconds = t0.duration_since(req.queued_at).as_secs_f64();
+            let resp = Response {
+                id: req.id,
+                output: y.row(row).to_vec(),
+                class: classes[row],
+                queue_seconds,
+                compute_seconds,
+                batch_occupancy: occupancy,
+            };
+            metrics.record_request(priority, resp.queue_seconds, resp.total_seconds());
+            depth.fetch_sub(1, Ordering::SeqCst);
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            let _ = req.reply.send(resp);
+        }
+    }
+}
+
+/// The shard thread body.  Engine construction happens here (PJRT handles
+/// are not `Send`); native backends receive a pre-compiled plan replica
+/// instead so N shards share one set of weights.
+pub(crate) fn shard_loop(
+    rx: mpsc::Receiver<ShardCommand>,
+    factory: EngineFactory,
+    shared_plan: Option<ExecPlan>,
+    cfg: ShardConfig,
+    metrics: Arc<ShardMetrics>,
+    depth: Arc<AtomicUsize>,
+    in_flight: Arc<AtomicUsize>,
+) -> Result<()> {
+    let mut engine = match shared_plan {
+        Some(plan) => factory.build_from_plan(plan),
+        None => factory.build()?,
+    };
+    let s_in = factory.net.spec.inputs();
+    let mut batcher = PriorityBatcher::new(cfg.batch, cfg.deadline, cfg.promote_after);
+
+    let mut drain = |batcher: &mut PriorityBatcher, force: bool| -> Result<()> {
+        run_ready(
+            batcher,
+            engine.as_mut(),
+            s_in,
+            force,
+            &metrics,
+            &depth,
+            &in_flight,
+        )
+    };
+
+    loop {
+        let timeout = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(ShardCommand::Infer(req, prio)) => {
+                batcher.push(req, prio);
+                // greedily drain the channel so batch formation (and the
+                // interactive-first rule) sees the full backlog
+                let mut shutdown = false;
+                while let Ok(cmd) = rx.try_recv() {
+                    match cmd {
+                        ShardCommand::Infer(r, p) => batcher.push(r, p),
+                        ShardCommand::Shutdown => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+                drain(&mut batcher, false)?;
+                if shutdown {
+                    drain(&mut batcher, true)?;
+                    return Ok(());
+                }
+            }
+            Ok(ShardCommand::Shutdown) => {
+                drain(&mut batcher, true)?;
+                // catch requests racing the shutdown signal
+                while let Ok(ShardCommand::Infer(req, prio)) = rx.try_recv() {
+                    batcher.push(req, prio);
+                }
+                drain(&mut batcher, true)?;
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                drain(&mut batcher, false)?;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                drain(&mut batcher, true)?;
+                return Ok(());
+            }
+        }
+    }
+}

@@ -91,7 +91,11 @@ pub struct PropFailure {
 /// Run `prop` over `cases` seeded inputs; returns the first failing seed.
 /// Deterministic: the base seed is derived from the property's case count so
 /// CI failures reproduce locally.
-pub fn prop_run<P: FnMut(&mut Gen) -> bool>(cases: usize, base_seed: u64, mut prop: P) -> PropResult {
+pub fn prop_run<P: FnMut(&mut Gen) -> bool>(
+    cases: usize,
+    base_seed: u64,
+    mut prop: P,
+) -> PropResult {
     for case in 0..cases {
         let seed = base_seed
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)

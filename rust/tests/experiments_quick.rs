@@ -47,6 +47,40 @@ fn sparse_plan_beats_dense_at_high_pruning_quick() {
 }
 
 #[test]
+fn calibrate_crossover_quick() {
+    quick();
+    if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+        eprintln!("skipping: ZDNN_SKIP_PERF=1");
+        return;
+    }
+    let c = bench::calibrate::run();
+    bench::calibrate::check_shape(&c).unwrap();
+    // the rendered table must tell the operator what to do with the result
+    let table = bench::calibrate::render(&c);
+    assert!(table.contains("--threshold") || table.contains("no crossover"));
+}
+
+#[test]
+fn slo_pool_scaling_quick() {
+    // acceptance gate for the sharded serving runtime: 4 workers beat 1
+    // worker at every batch size, and the two-level priority queue beats
+    // the single-FIFO baseline on interactive p99.  Wall-clock; contended
+    // or single-core runners opt out rather than report phantom failures.
+    quick();
+    if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+        eprintln!("skipping: ZDNN_SKIP_PERF=1");
+        return;
+    }
+    if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) < 2 {
+        eprintln!("skipping: single-core host cannot show worker scaling");
+        return;
+    }
+    let b = bench::slo::run();
+    bench::slo::check_shape(&b).unwrap();
+    assert_eq!(b.rows.len(), 2 * 3, "quick mode: batches {{1,25}} x workers {{1,2,4}}");
+}
+
+#[test]
 fn renders_are_nonempty_and_contain_paper_refs() {
     quick();
     let t2 = bench::table2::render(&bench::table2::run());

@@ -24,6 +24,7 @@ fn factory(backend: &str, batch: usize, net: zynq_dnn::nn::QNetwork) -> EngineFa
         net,
         artifacts_dir: default_artifacts_dir(),
         native_threads: 1,
+        sparse_threshold: None,
     }
 }
 
