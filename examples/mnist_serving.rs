@@ -53,6 +53,7 @@ fn main() -> Result<()> {
             artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
             native_threads: 1,
             sparse_threshold: None,
+            artifact: None,
         };
         let server = Server::start(&cfg, factory)?;
         let mut rxs = Vec::new();
@@ -65,7 +66,7 @@ fn main() -> Result<()> {
         }
         let mut sim_compute = 0.0;
         for rx in &rxs {
-            sim_compute += rx.recv()?.compute_seconds;
+            sim_compute += rx.recv()??.compute_seconds;
         }
         let snap = server.metrics.snapshot();
         println!(

@@ -83,6 +83,7 @@ fn main() -> Result<()> {
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
         native_threads: 1,
         sparse_threshold: None,
+        artifact: None,
     };
     let server = Server::start(&cfg, factory)?;
     let n_req = if quick { 32 } else { 256 };
@@ -94,7 +95,7 @@ fn main() -> Result<()> {
     }
     let mut correct = 0;
     for (i, rx) in rxs.into_iter().enumerate() {
-        if rx.recv()?.class == test.y[i % test.len()] {
+        if rx.recv()??.class == test.y[i % test.len()] {
             correct += 1;
         }
     }

@@ -23,6 +23,7 @@ fn main() {
         backend: "native".into(), batch: 16, net: net.clone(),
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(), native_threads: 1,
         sparse_threshold: None,
+        artifact: None,
     }.build().unwrap();
     let (mean_n, _) = zynq_dnn::util::bench_loop(3, 20, || eng.infer(&x).unwrap());
     println!("native                mnist4 b16: {} /batch ({} /sample)",

@@ -80,6 +80,7 @@ fn main() -> Result<()> {
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
         native_threads: 1,
         sparse_threshold: None,
+        artifact: None,
     };
     let server = Server::start(&cfg, factory)?;
     println!("serving on the PJRT CPU client (AOT HLO artifact), batch {batch}…");
@@ -92,7 +93,7 @@ fn main() -> Result<()> {
         pending.push((i, server.submit(input)?.1));
     }
     for (i, rx) in pending {
-        let resp = rx.recv()?;
+        let resp = rx.recv()??;
         if resp.class == test.y[i] {
             correct += 1;
         }

@@ -1,0 +1,22 @@
+//! `cargo bench --bench bench_compress` — the compression pipeline end to
+//! end: train a small net, sweep per-layer sensitivity, run the
+//! accuracy-budgeted search over three budgets, round-trip each `.rpz`
+//! artifact through disk, and time dense vs compressed serving plans.
+//! Exits 1 if any budget is violated or an artifact fails to round-trip
+//! bit-exact.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let b = match zynq_dnn::bench::compress::run() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("BENCH FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("{}", zynq_dnn::bench::compress::render(&b));
+    if let Err(e) = zynq_dnn::bench::compress::check_shape(&b) {
+        eprintln!("SHAPE CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+}

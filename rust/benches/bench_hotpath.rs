@@ -106,6 +106,7 @@ fn main() {
             artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
             native_threads: 1,
             sparse_threshold: None,
+            artifact: None,
         },
     )
     .unwrap();
@@ -116,7 +117,7 @@ fn main() {
         .map(|_| server.submit(input.clone()).unwrap().1)
         .collect();
     for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.metrics.snapshot();

@@ -76,6 +76,7 @@ pub fn run() -> AblationReport {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
             sparse_threshold: None,
+            artifact: None,
         };
         let server = Server::start(&cfg, factory).expect("server");
         let mut rng = Xoshiro256::seed_from_u64(deadline_us);
@@ -90,7 +91,10 @@ pub fn run() -> AblationReport {
         }
         let mut lat_sum = 0.0;
         for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(10)).expect("resp");
+            let resp = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("resp")
+                .expect("bench engine never fails infer");
             lat_sum += resp.total_seconds();
         }
         let snap = server.metrics.snapshot();

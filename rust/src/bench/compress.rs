@@ -1,0 +1,237 @@
+//! `bench compress` — the accuracy-vs-prune-vs-throughput curve of the
+//! compression pipeline (EXPERIMENTS.md §compress; paper Fig. 7 shows
+//! accuracy over prune factor, Table 4 the end accuracy of the four
+//! pruned evaluation networks).
+//!
+//! Trains a small network on the synthetic data (so the accuracy budget
+//! actually bites — a random net sits at chance and would prune to the
+//! top rung at any budget), then for each budget in [`BUDGET_SWEEP`]:
+//! runs the sensitivity sweep + budgeted search, packages the result as a
+//! `.rpz` artifact, round-trips it through disk, and times the dense
+//! baseline plan against the compressed artifact plan at batch 25.
+//!
+//! The [`check_shape`] gate (CI "compress smoke" job) asserts only the
+//! deterministic invariants: every row's measured accuracy delta is
+//! within its budget, and the reloaded artifact executes bit-identically
+//! to the in-memory pruned network.
+
+use anyhow::{ensure, Result};
+
+use super::report::{ms, ratio, Table};
+use super::quick_mode;
+use crate::compress::{
+    self, load_artifact, save_artifact, CompressedModel, EvalSet, SearchConfig,
+};
+use crate::data;
+use crate::exec::{ExecPlan, PlanOptions, DEFAULT_SPARSE_THRESHOLD};
+use crate::nn::quantize_matrix;
+use crate::nn::spec::{har_4, quickstart};
+use crate::tensor::MatF;
+use crate::train::{TrainConfig, Trainer};
+use crate::util::bench_loop;
+use crate::util::rng::Xoshiro256;
+
+/// Accuracy budgets swept, ascending (absolute accuracy points).
+pub const BUDGET_SWEEP: [f64; 3] = [0.005, 0.02, 0.05];
+/// Throughput-relevant batch size (paper Table 3's large batch).
+pub const BATCH: usize = 25;
+
+/// One budget's outcome.
+#[derive(Debug, Clone)]
+pub struct CompressRow {
+    pub budget: f64,
+    pub baseline_accuracy: f64,
+    pub compressed_accuracy: f64,
+    pub overall_prune: f64,
+    pub stored_bytes: usize,
+    pub dense_bytes: usize,
+    pub dense_seconds: f64,
+    pub compressed_seconds: f64,
+    /// Reloaded artifact's plan output == in-memory pruned plan output.
+    pub roundtrip_bit_exact: bool,
+}
+
+impl CompressRow {
+    pub fn accuracy_delta(&self) -> f64 {
+        self.baseline_accuracy - self.compressed_accuracy
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.dense_seconds / self.compressed_seconds.max(f64::MIN_POSITIVE)
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.stored_bytes as f64 / self.dense_bytes.max(1) as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CompressBench {
+    pub network: String,
+    pub rows: Vec<CompressRow>,
+}
+
+pub fn run() -> Result<CompressBench> {
+    let quick = quick_mode();
+    let spec = if quick { quickstart() } else { har_4() };
+    let (train_n, eval_n, epochs, iters) = if quick {
+        (300, 150, 3, 3)
+    } else {
+        (800, 400, 6, 10)
+    };
+    let ladder: Vec<f64> = if quick {
+        vec![0.5, 0.75, 0.9]
+    } else {
+        compress::DEFAULT_LADDER.to_vec()
+    };
+
+    let train_set = data::for_network(&spec.name, train_n, 0xC0_FFEE)?;
+    let eval_set = data::for_network(&spec.name, eval_n, 0xC0_FFEF)?;
+    let mut trainer = Trainer::new(spec.clone(), 0xACC);
+    trainer.fit(
+        &train_set,
+        &TrainConfig {
+            epochs,
+            ..Default::default()
+        },
+    )?;
+    let net = trainer.to_weights().quantized();
+    let eval = EvalSet::from_dataset(&eval_set);
+    let report = compress::sweep(&net, &eval, &ladder)?;
+
+    let mut rng = Xoshiro256::seed_from_u64(0xC0_B1);
+    let x = quantize_matrix(&MatF::from_vec(
+        BATCH,
+        spec.inputs(),
+        (0..BATCH * spec.inputs())
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect(),
+    ));
+    let mut dense_plan = ExecPlan::compile_q(&net, &PlanOptions::dense_only())?;
+    let (dense_seconds, _) = bench_loop(1, iters, || {
+        dense_plan.run(&x).expect("dense baseline run");
+    });
+
+    let tmp = std::env::temp_dir().join("zdnn_bench_compress");
+    std::fs::create_dir_all(&tmp)?;
+    let mut rows = Vec::with_capacity(BUDGET_SWEEP.len());
+    for (i, &budget) in BUDGET_SWEEP.iter().enumerate() {
+        let cfg = SearchConfig {
+            budget,
+            ladder: ladder.clone(),
+        };
+        let outcome = compress::search(&net, &eval, &report, &cfg)?;
+        let model = CompressedModel::from_outcome(&outcome, DEFAULT_SPARSE_THRESHOLD)?;
+        let path = tmp.join(format!("{}_{i}.rpz", spec.name));
+        save_artifact(&path, &model)?;
+        let back = load_artifact(&path)?;
+        let mut artifact_plan = ExecPlan::compile_artifact(&back, 1)?;
+        let mut memory_plan = ExecPlan::compile_q(
+            &outcome.network,
+            &PlanOptions {
+                sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+                threads: 1,
+            },
+        )?;
+        let roundtrip_bit_exact =
+            artifact_plan.run(&x)?.data == memory_plan.run(&x)?.data;
+        let (compressed_seconds, _) = bench_loop(1, iters, || {
+            artifact_plan.run(&x).expect("artifact plan run");
+        });
+        rows.push(CompressRow {
+            budget,
+            baseline_accuracy: outcome.baseline_accuracy,
+            compressed_accuracy: outcome.compressed_accuracy,
+            overall_prune: outcome.overall_prune(),
+            stored_bytes: model.stored_bytes(),
+            dense_bytes: model.dense_bytes(),
+            dense_seconds,
+            compressed_seconds,
+            roundtrip_bit_exact,
+        });
+    }
+    Ok(CompressBench {
+        network: spec.name,
+        rows,
+    })
+}
+
+/// Deterministic gate run by CI's "compress smoke" job: the budget holds
+/// on every row, the artifact round-trips bit-exact, and every factor is
+/// a sane fraction.  (Throughput columns are reported, not gated — they
+/// depend on how hard the search could prune under each budget.)
+pub fn check_shape(b: &CompressBench) -> Result<()> {
+    ensure!(!b.rows.is_empty(), "compress bench produced no rows");
+    for r in &b.rows {
+        ensure!(
+            r.accuracy_delta() <= r.budget + 1e-9,
+            "budget {} violated: accuracy delta {}",
+            r.budget,
+            r.accuracy_delta()
+        );
+        ensure!(
+            r.roundtrip_bit_exact,
+            "budget {}: artifact round-trip diverged from the in-memory plan",
+            r.budget
+        );
+        ensure!(
+            (0.0..=1.0).contains(&r.overall_prune),
+            "budget {}: implausible prune factor {}",
+            r.budget,
+            r.overall_prune
+        );
+        ensure!(
+            (0.0..=1.0).contains(&r.baseline_accuracy)
+                && (0.0..=1.0).contains(&r.compressed_accuracy),
+            "budget {}: accuracy outside [0, 1]",
+            r.budget
+        );
+    }
+    Ok(())
+}
+
+pub fn render(b: &CompressBench) -> String {
+    let mut t = Table::new(
+        &format!("accuracy-budgeted compression ({}, batch {BATCH})", b.network),
+        &[
+            "budget",
+            "acc dense",
+            "acc comp",
+            "Δacc",
+            "q_prune",
+            "payload",
+            "dense ms",
+            "comp ms",
+            "speedup",
+        ],
+    );
+    for r in &b.rows {
+        t.row(vec![
+            format!("{:.3}", r.budget),
+            format!("{:.3}", r.baseline_accuracy),
+            format!("{:.3}", r.compressed_accuracy),
+            format!("{:+.3}", -r.accuracy_delta()),
+            format!("{:.3}", r.overall_prune),
+            format!("{:.2}x", r.compression()),
+            ms(r.dense_seconds),
+            ms(r.compressed_seconds),
+            ratio(r.speedup()),
+        ]);
+    }
+    t.footnote(
+        "paper side-by-side: Fig. 7 tracks accuracy over q_prune; Table 4 prunes \
+         mnist4/mnist8/har4/har6 to 0.72/0.78/0.88/0.94 within ~1.5 points — see \
+         EXPERIMENTS.md §compress",
+    );
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_sweep_is_ascending() {
+        assert!(BUDGET_SWEEP.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -7,6 +7,7 @@
 pub mod ablation;
 pub mod calibrate;
 pub mod combined;
+pub mod compress;
 pub mod fig7;
 pub mod gops;
 pub mod nopt;

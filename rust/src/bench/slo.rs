@@ -81,6 +81,7 @@ fn factory(net: &QNetwork, batch: usize) -> EngineFactory {
         artifacts_dir: crate::runtime::default_artifacts_dir(),
         native_threads: 1,
         sparse_threshold: None,
+        artifact: None,
     }
 }
 
@@ -154,7 +155,8 @@ fn drive(serving: &Serving, requests: usize, offered_rps: f64, seed: u64) -> Dri
     for (priority, rx) in receivers {
         let resp = rx
             .recv_timeout(Duration::from_secs(60))
-            .expect("response within 60s");
+            .expect("response within 60s")
+            .expect("bench engine never fails infer");
         match priority {
             Priority::Interactive => interactive.push(resp.total_seconds()),
             Priority::Bulk => bulk.push(resp.total_seconds()),

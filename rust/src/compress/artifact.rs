@@ -1,0 +1,600 @@
+//! The `.rpz` servable compressed-model container.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic   b"ZRPZ"                      4 bytes
+//! u32     header_len
+//! header  JSON (utf-8, header_len bytes)
+//! blobs   per-layer payloads, header order
+//! crc32   of everything after the magic (integrity check)
+//! ```
+//!
+//! The header is JSON (parsed with the in-tree [`crate::config::json`]
+//! parser — serde is not in the offline crate set) so the artifact is
+//! self-describing without decoding the payload: network name,
+//! architecture, Q-format, the calibrated `sparse_threshold` (from
+//! `bench calibrate`), the accuracy budget/baselines the search measured,
+//! and one entry per layer naming its encoding.  Payloads:
+//!
+//! * `dense` — `rows × cols` Q7.8 weights as `i16` (the format's range;
+//!   [`crate::fixedpoint::quantize`] saturates to it, and the §5.6 stream
+//!   encoder enforces it too).
+//! * `csr`   — `row_ptr` as `u32[rows + 1]`, `col_idx` as `u32[nnz]`,
+//!   `vals` as `i16[nnz]` — exactly the
+//!   [`CsrMatI`](crate::tensor::CsrMatI) the `SparseQ` execution kernel
+//!   consumes, so serving never densifies a compressed layer.
+//!
+//! Which encoding a layer gets is decided *at save time* from the
+//! artifact's own threshold: measured prune factor ≥ `sparse_threshold`
+//! → CSR.  [`ExecPlan::compile_artifact`](crate::exec::ExecPlan::compile_artifact)
+//! then maps CSR blobs to `SparseQ` kernels and dense blobs to `DenseQ`
+//! directly, which is what "the artifact embeds its calibration" means
+//! operationally: no `--threshold` flag at serve time.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::json::{self, Json};
+use crate::fixedpoint::{FRAC_BITS, Q78_MAX, Q78_MIN};
+use crate::nn::forward::QNetwork;
+use crate::nn::spec::{Activation, NetworkSpec};
+use crate::nn::weights::{crc32, put_u32, Cursor};
+use crate::tensor::{CsrMatI, MatI};
+
+const MAGIC: &[u8; 4] = b"ZRPZ";
+const VERSION: u32 = 1;
+
+/// One layer's stored weights.
+#[derive(Debug, Clone)]
+pub enum LayerBlob {
+    /// Below the sparse threshold: plain dense Q7.8 storage.
+    Dense(MatI),
+    /// At/above the threshold: the CSR form the `SparseQ` kernel runs on.
+    Csr(CsrMatI),
+}
+
+impl LayerBlob {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            LayerBlob::Dense(m) => m.shape(),
+            LayerBlob::Csr(m) => m.shape(),
+        }
+    }
+
+    /// Measured prune factor (zero fraction) of this layer.
+    pub fn prune_factor(&self) -> f64 {
+        let (rows, cols) = self.shape();
+        let total = (rows * cols).max(1);
+        let nonzero = match self {
+            LayerBlob::Dense(m) => m.data.iter().filter(|&&v| v != 0).count(),
+            LayerBlob::Csr(m) => m.nnz(),
+        };
+        1.0 - nonzero as f64 / total as f64
+    }
+
+    /// Payload bytes this blob serializes to.
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            LayerBlob::Dense(m) => m.data.len() * 2,
+            LayerBlob::Csr(m) => (m.rows() + 1) * 4 + m.nnz() * 4 + m.nnz() * 2,
+        }
+    }
+
+    fn dense_weights(&self) -> MatI {
+        match self {
+            LayerBlob::Dense(m) => m.clone(),
+            LayerBlob::Csr(m) => m.to_dense(),
+        }
+    }
+}
+
+/// A compressed model: everything serving needs to reconstruct kernels
+/// with the calibration baked in.
+#[derive(Debug, Clone)]
+pub struct CompressedModel {
+    pub spec: NetworkSpec,
+    /// Calibrated dense/CSR crossover the plan compiler applies.
+    pub sparse_threshold: f64,
+    /// Accuracy budget the search ran with.
+    pub budget: f64,
+    /// Dense-baseline accuracy on the search slice.
+    pub baseline_accuracy: f64,
+    /// Measured accuracy of the compressed network on the same slice.
+    pub compressed_accuracy: f64,
+    /// One blob per layer transition, spec order.
+    pub layers: Vec<LayerBlob>,
+}
+
+impl CompressedModel {
+    /// Package a (pruned) quantized network: each layer stores CSR when
+    /// its measured prune factor reaches `sparse_threshold`, dense
+    /// otherwise.
+    pub fn from_network(
+        net: &QNetwork,
+        sparse_threshold: f64,
+        budget: f64,
+        baseline_accuracy: f64,
+        compressed_accuracy: f64,
+    ) -> Result<Self> {
+        ensure!(
+            sparse_threshold.is_finite() && sparse_threshold >= 0.0,
+            "sparse_threshold must be finite and >= 0, got {sparse_threshold}"
+        );
+        for (j, w) in net.weights.iter().enumerate() {
+            for &v in &w.data {
+                ensure!(
+                    (Q78_MIN..=Q78_MAX).contains(&v),
+                    "layer {j}: weight {v} outside the Q7.8 (i16) range"
+                );
+            }
+        }
+        let prune = net.prune_factors();
+        let layers = net
+            .weights
+            .iter()
+            .zip(prune.iter())
+            .map(|(w, &q)| {
+                if q >= sparse_threshold {
+                    LayerBlob::Csr(CsrMatI::from_dense(w))
+                } else {
+                    LayerBlob::Dense(w.clone())
+                }
+            })
+            .collect();
+        Ok(Self {
+            spec: net.spec.clone(),
+            sparse_threshold,
+            budget,
+            baseline_accuracy,
+            compressed_accuracy,
+            layers,
+        })
+    }
+
+    /// Package a budgeted-search outcome (the usual producer).
+    pub fn from_outcome(
+        outcome: &super::search::SearchOutcome,
+        sparse_threshold: f64,
+    ) -> Result<Self> {
+        Self::from_network(
+            &outcome.network,
+            sparse_threshold,
+            outcome.budget,
+            outcome.baseline_accuracy,
+            outcome.compressed_accuracy,
+        )
+    }
+
+    /// Reconstruct the full quantized network (densifies CSR layers —
+    /// tests and the f32-free eval path; serving compiles kernels from
+    /// the blobs directly).
+    pub fn to_qnetwork(&self) -> Result<QNetwork> {
+        let weights = self.layers.iter().map(LayerBlob::dense_weights).collect();
+        QNetwork::new(self.spec.clone(), weights)
+    }
+
+    /// Measured per-layer prune factors (recomputed from the blobs, never
+    /// trusted from the header).
+    pub fn prune_factors(&self) -> Vec<f64> {
+        self.layers.iter().map(LayerBlob::prune_factor).collect()
+    }
+
+    /// Payload bytes across all layers.
+    pub fn stored_bytes(&self) -> usize {
+        self.layers.iter().map(LayerBlob::stored_bytes).sum()
+    }
+
+    /// Dense 16-bit baseline the paper compares streams against.
+    pub fn dense_bytes(&self) -> usize {
+        self.spec.num_parameters() * 2
+    }
+
+    /// stored / dense payload ratio (< 1 once pruning wins over the CSR
+    /// index overhead).
+    pub fn compression_ratio(&self) -> f64 {
+        self.stored_bytes() as f64 / self.dense_bytes().max(1) as f64
+    }
+
+    fn validate(&self) -> Result<()> {
+        let shapes = self.spec.weight_shapes();
+        ensure!(
+            self.layers.len() == shapes.len(),
+            "{}: {} layer blobs for {} weight matrices",
+            self.spec.name,
+            self.layers.len(),
+            shapes.len()
+        );
+        for (j, (blob, &(o, i))) in self.layers.iter().zip(shapes.iter()).enumerate() {
+            ensure!(
+                blob.shape() == (o, i),
+                "layer {j}: blob shape {:?} != spec {:?}",
+                blob.shape(),
+                (o, i)
+            );
+        }
+        Ok(())
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fnum(v: f64) -> Result<String> {
+    ensure!(v.is_finite(), "non-finite number {v} cannot be stored");
+    Ok(format!("{v}"))
+}
+
+fn render_header(model: &CompressedModel) -> Result<String> {
+    let mut h = String::new();
+    let _ = write!(
+        h,
+        "{{\"version\":{VERSION},\"network\":\"{}\",\"sizes\":[{}],\"activations\":[{}],",
+        esc(&model.spec.name),
+        model
+            .spec
+            .sizes
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+        model
+            .spec
+            .activations
+            .iter()
+            .map(|a| format!("\"{}\"", a.name()))
+            .collect::<Vec<_>>()
+            .join(","),
+    );
+    let _ = write!(
+        h,
+        "\"qformat\":{{\"int_bits\":{},\"frac_bits\":{}}},",
+        15 - FRAC_BITS,
+        FRAC_BITS
+    );
+    let _ = write!(
+        h,
+        "\"sparse_threshold\":{},\"budget\":{},\"baseline_accuracy\":{},\
+         \"compressed_accuracy\":{},",
+        fnum(model.sparse_threshold)?,
+        fnum(model.budget)?,
+        fnum(model.baseline_accuracy)?,
+        fnum(model.compressed_accuracy)?,
+    );
+    h.push_str("\"layers\":[");
+    for (j, blob) in model.layers.iter().enumerate() {
+        if j > 0 {
+            h.push(',');
+        }
+        let (rows, cols) = blob.shape();
+        match blob {
+            LayerBlob::Dense(_) => {
+                let _ = write!(
+                    h,
+                    "{{\"encoding\":\"dense\",\"rows\":{rows},\"cols\":{cols},\"prune\":{}}}",
+                    fnum(blob.prune_factor())?
+                );
+            }
+            LayerBlob::Csr(m) => {
+                let _ = write!(
+                    h,
+                    "{{\"encoding\":\"csr\",\"rows\":{rows},\"cols\":{cols},\"nnz\":{},\
+                     \"prune\":{}}}",
+                    m.nnz(),
+                    fnum(blob.prune_factor())?
+                );
+            }
+        }
+    }
+    h.push_str("]}");
+    Ok(h)
+}
+
+/// Serialize to the `.rpz` container.
+pub fn save_artifact(path: &Path, model: &CompressedModel) -> Result<()> {
+    model.validate()?;
+    let header = render_header(model)?;
+    let mut body = Vec::with_capacity(header.len() + model.stored_bytes() + 8);
+    put_u32(&mut body, header.len() as u32);
+    body.extend_from_slice(header.as_bytes());
+    for (j, blob) in model.layers.iter().enumerate() {
+        match blob {
+            LayerBlob::Dense(m) => {
+                for &v in &m.data {
+                    ensure!(
+                        (Q78_MIN..=Q78_MAX).contains(&v),
+                        "layer {j}: weight {v} outside the Q7.8 (i16) range"
+                    );
+                    body.extend_from_slice(&(v as i16).to_le_bytes());
+                }
+            }
+            LayerBlob::Csr(m) => {
+                for &p in m.row_ptr() {
+                    ensure!(p <= u32::MAX as usize, "layer {j}: row_ptr overflows u32");
+                    put_u32(&mut body, p as u32);
+                }
+                for o in 0..m.rows() {
+                    let (idx, _) = m.row(o);
+                    for &c in idx {
+                        put_u32(&mut body, c);
+                    }
+                }
+                for o in 0..m.rows() {
+                    let (_, vals) = m.row(o);
+                    for &v in vals {
+                        ensure!(
+                            (Q78_MIN..=Q78_MAX).contains(&v),
+                            "layer {j}: weight {v} outside the Q7.8 (i16) range"
+                        );
+                        body.extend_from_slice(&(v as i16).to_le_bytes());
+                    }
+                }
+            }
+        }
+    }
+    let crc = crc32(&body);
+    let mut f = BufWriter::new(
+        File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&body)?;
+    f.write_all(&crc.to_le_bytes())?;
+    // explicit: a flush error swallowed by BufWriter's Drop would report
+    // a truncated artifact as a successful save
+    f.flush().with_context(|| format!("flush {}", path.display()))?;
+    Ok(())
+}
+
+fn spec_from_header(h: &Json) -> Result<NetworkSpec> {
+    let name = h.req("network")?.as_str()?.to_string();
+    let sizes = h.req("sizes")?.as_usize_vec()?;
+    ensure!(sizes.len() >= 2, "implausible architecture {sizes:?}");
+    let activations = h
+        .req("activations")?
+        .as_str_vec()?
+        .iter()
+        .map(|s| Activation::from_name(s))
+        .collect::<Result<Vec<_>>>()?;
+    ensure!(
+        activations.len() == sizes.len() - 1,
+        "{} activations for {} weight matrices",
+        activations.len(),
+        sizes.len() - 1
+    );
+    Ok(NetworkSpec {
+        name,
+        sizes,
+        activations,
+    })
+}
+
+/// Load and validate a `.rpz` container.
+pub fn load_artifact(path: &Path) -> Result<CompressedModel> {
+    let mut raw = Vec::new();
+    BufReader::new(File::open(path).with_context(|| format!("open {}", path.display()))?)
+        .read_to_end(&mut raw)?;
+    ensure!(raw.len() > 12, "file too small");
+    ensure!(&raw[..4] == MAGIC, "bad magic (not a .rpz artifact)");
+    let body = &raw[4..raw.len() - 4];
+    let stored_crc = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    ensure!(crc32(body) == stored_crc, "CRC mismatch: corrupted artifact");
+
+    let mut c = Cursor { data: body, pos: 0 };
+    let header_len = c.u32()? as usize;
+    let header_bytes = c.take(header_len)?;
+    let header = json::parse(std::str::from_utf8(header_bytes).context("header not utf-8")?)
+        .context("artifact header")?;
+    let version = header.req("version")?.as_usize()?;
+    ensure!(version == VERSION as usize, "unsupported version {version}");
+    let spec = spec_from_header(&header)?;
+    let qf = header.req("qformat")?;
+    let frac = qf.req("frac_bits")?.as_usize()?;
+    ensure!(
+        frac == FRAC_BITS as usize,
+        "artifact is Q.{frac}, this build runs Q.{FRAC_BITS}"
+    );
+    let sparse_threshold = header.req("sparse_threshold")?.as_f64()?;
+    let budget = header.req("budget")?.as_f64()?;
+    let baseline_accuracy = header.req("baseline_accuracy")?.as_f64()?;
+    let compressed_accuracy = header.req("compressed_accuracy")?.as_f64()?;
+
+    let entries = header.req("layers")?.as_arr()?;
+    let shapes = spec.weight_shapes();
+    ensure!(
+        entries.len() == shapes.len(),
+        "{} layer entries for {} weight matrices",
+        entries.len(),
+        shapes.len()
+    );
+    let mut layers = Vec::with_capacity(entries.len());
+    for (j, (entry, &(o, i))) in entries.iter().zip(shapes.iter()).enumerate() {
+        let rows = entry.req("rows")?.as_usize()?;
+        let cols = entry.req("cols")?.as_usize()?;
+        ensure!(
+            (rows, cols) == (o, i),
+            "layer {j}: stored shape ({rows},{cols}) != spec ({o},{i})"
+        );
+        // size every allocation from checked arithmetic bounded by the
+        // bytes actually left in the file, so a crafted header claiming
+        // absurd dimensions gets a clean error instead of an OOM/panic
+        let remaining = body.len() - c.pos;
+        match entry.req("encoding")?.as_str()? {
+            "dense" => {
+                let n_bytes = rows
+                    .checked_mul(cols)
+                    .and_then(|n| n.checked_mul(2))
+                    .filter(|&n| n <= remaining)
+                    .with_context(|| format!("layer {j}: dense payload exceeds file size"))?;
+                let bytes = c.take(n_bytes)?;
+                let data: Vec<i32> = bytes
+                    .chunks_exact(2)
+                    .map(|ch| i32::from(i16::from_le_bytes(ch.try_into().unwrap())))
+                    .collect();
+                layers.push(LayerBlob::Dense(MatI::from_vec(rows, cols, data)));
+            }
+            "csr" => {
+                let nnz = entry.req("nnz")?.as_usize()?;
+                ensure!(cols <= u32::MAX as usize, "layer {j}: cols overflow u32");
+                rows.checked_add(1)
+                    .and_then(|r| r.checked_mul(4))
+                    .and_then(|rp| nnz.checked_mul(6).and_then(|nz| rp.checked_add(nz)))
+                    .filter(|&n| n <= remaining)
+                    .with_context(|| format!("layer {j}: CSR payload exceeds file size"))?;
+                let mut row_ptr = Vec::with_capacity(rows + 1);
+                for _ in 0..rows + 1 {
+                    row_ptr.push(c.u32()? as usize);
+                }
+                ensure!(
+                    row_ptr.first() == Some(&0) && row_ptr.last() == Some(&nnz),
+                    "layer {j}: row_ptr endpoints disagree with nnz {nnz}"
+                );
+                ensure!(
+                    row_ptr.windows(2).all(|w| w[0] <= w[1]),
+                    "layer {j}: row_ptr not monotone"
+                );
+                let mut col_idx = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    let col = c.u32()?;
+                    ensure!((col as usize) < cols, "layer {j}: column {col} out of range");
+                    col_idx.push(col);
+                }
+                // CsrMatI's kernels rely on column-sorted, duplicate-free
+                // rows; its debug_asserts vanish in release, so enforce
+                // the invariant here where a bad file can be rejected
+                for o in 0..rows {
+                    let row = &col_idx[row_ptr[o]..row_ptr[o + 1]];
+                    ensure!(
+                        row.windows(2).all(|w| w[0] < w[1]),
+                        "layer {j}: row {o} columns not strictly increasing"
+                    );
+                }
+                let mut vals = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    vals.push(i32::from(c.u16()? as i16));
+                }
+                layers.push(LayerBlob::Csr(CsrMatI::new(rows, cols, row_ptr, col_idx, vals)));
+            }
+            other => bail!("layer {j}: unknown encoding {other:?}"),
+        }
+    }
+    ensure!(c.pos == body.len(), "trailing bytes in artifact");
+    let model = CompressedModel {
+        spec,
+        sparse_threshold,
+        budget,
+        baseline_accuracy,
+        compressed_accuracy,
+        layers,
+    };
+    model.validate()?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::compress::prune_qnetwork;
+    use crate::nn::spec::quickstart;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("zdnn_test_rpz");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample(threshold: f64) -> CompressedModel {
+        let net = prune_qnetwork(&random_qnet(&quickstart(), 11), 0.9);
+        CompressedModel::from_network(&net, threshold, 0.02, 0.91, 0.9).unwrap()
+    }
+
+    #[test]
+    fn threshold_decides_encoding() {
+        let sparse = sample(0.75);
+        assert!(sparse
+            .layers
+            .iter()
+            .all(|b| matches!(b, LayerBlob::Csr(_))));
+        let dense = sample(2.0);
+        assert!(dense
+            .layers
+            .iter()
+            .all(|b| matches!(b, LayerBlob::Dense(_))));
+        // compressed CSR payload beats dense storage at q = 0.9
+        assert!(sparse.stored_bytes() < dense.stored_bytes());
+        assert!(sparse.compression_ratio() < 1.0);
+    }
+
+    #[test]
+    fn roundtrip_bit_exact_both_encodings() {
+        for (name, threshold) in [("rt_sparse.rpz", 0.75), ("rt_dense.rpz", 2.0)] {
+            let model = sample(threshold);
+            let want = model.to_qnetwork().unwrap();
+            let path = tmp(name);
+            save_artifact(&path, &model).unwrap();
+            let back = load_artifact(&path).unwrap();
+            assert_eq!(back.spec, model.spec);
+            assert!((back.sparse_threshold - threshold).abs() < 1e-12);
+            assert!((back.budget - 0.02).abs() < 1e-12);
+            let got = back.to_qnetwork().unwrap();
+            for (a, b) in got.weights.iter().zip(want.weights.iter()) {
+                assert_eq!(a.data, b.data, "{name}");
+            }
+            assert_eq!(back.prune_factors(), model.prune_factors());
+        }
+    }
+
+    #[test]
+    fn corruption_and_bad_magic_rejected() {
+        let path = tmp("corrupt.rpz");
+        save_artifact(&path, &sample(0.75)).unwrap();
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(load_artifact(&path).is_err());
+        std::fs::write(&path, b"NOPEnope123456789012").unwrap();
+        assert!(load_artifact(&path).is_err());
+    }
+
+    #[test]
+    fn mixed_encoding_from_per_layer_factors() {
+        // layer 0 pruned hard, layer 1 untouched: one CSR, one dense blob
+        let net = random_qnet(&quickstart(), 12);
+        let mixed = crate::compress::prune_per_layer(&net, &[0.9, 0.0]);
+        let model = CompressedModel::from_network(&mixed, 0.75, 0.0, 1.0, 1.0).unwrap();
+        assert!(matches!(model.layers[0], LayerBlob::Csr(_)));
+        assert!(matches!(model.layers[1], LayerBlob::Dense(_)));
+        let path = tmp("mixed.rpz");
+        save_artifact(&path, &model).unwrap();
+        let back = load_artifact(&path).unwrap();
+        let got = back.to_qnetwork().unwrap();
+        for (a, b) in got.weights.iter().zip(mixed.weights.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn non_finite_metadata_rejected() {
+        let net = random_qnet(&quickstart(), 13);
+        assert!(CompressedModel::from_network(&net, f64::INFINITY, 0.0, 1.0, 1.0).is_err());
+        let mut model = CompressedModel::from_network(&net, 0.75, 0.0, 1.0, 1.0).unwrap();
+        model.budget = f64::NAN;
+        assert!(save_artifact(&tmp("nan.rpz"), &model).is_err());
+    }
+}

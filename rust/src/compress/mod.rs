@@ -1,0 +1,161 @@
+//! Offline model compression: accuracy-budgeted pruning that emits
+//! servable compressed artifacts (paper §5.6 made operational).
+//!
+//! The paper's pruning result — compressed weight matrices cut data
+//! transfers by an order of magnitude — only pays off in production if the
+//! compression step and the execution engine are co-designed (the EIE
+//! lesson).  This module is the offline half of that loop:
+//!
+//! 1. [`sensitivity`] — prune each layer alone at a ladder of factors and
+//!    measure the accuracy delta on a held-out eval slice, so the search
+//!    knows which layers tolerate aggressive pruning (the HAPM insight:
+//!    per-layer thresholds beat one global factor).
+//! 2. [`search`] — a greedy accuracy-budgeted search that assigns each
+//!    layer the most aggressive ladder factor such that the *measured*
+//!    end-to-end accuracy stays within `budget` of the dense baseline.
+//!    Every move is accepted only after evaluation, so the invariant
+//!    "never exceeds the budget on the search slice" holds by
+//!    construction (and is property-tested).
+//! 3. [`artifact`] — the `.rpz` container: Q-format metadata, per-layer
+//!    CSR or dense blobs, and the calibrated `sparse_threshold` (from
+//!    `bench calibrate`), so serving compiles kernels from the artifact's
+//!    own calibration instead of a CLI flag
+//!    ([`ExecPlan::compile_artifact`](crate::exec::ExecPlan::compile_artifact)).
+//! 4. [`prune`] — the one magnitude-pruning implementation, shared with
+//!    the simulator (`sim::pruning` re-exports it).
+//!
+//! The end-to-end path is `zynq-dnn compress` (CLI) →
+//! `serve --artifact model.rpz` / `serve-pool --artifact model.rpz`;
+//! `bench compress` reports the accuracy-vs-prune-vs-throughput curves
+//! (EXPERIMENTS.md §compress, paper Fig. 7 / Table 4 side-by-side).
+
+pub mod artifact;
+pub mod prune;
+pub mod search;
+pub mod sensitivity;
+
+pub use artifact::{load_artifact, save_artifact, CompressedModel, LayerBlob};
+pub use prune::{prune_layer, prune_matrix, prune_per_layer, prune_qnetwork};
+pub use search::{search, SearchConfig, SearchOutcome};
+pub use sensitivity::{sweep, SensitivityPoint, SensitivityReport, DEFAULT_LADDER};
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::nn::forward::{argmax_rows, QNetwork};
+use crate::nn::quantize_matrix;
+use crate::nn::spec::Activation;
+use crate::tensor::{gemm_i32, MatI};
+
+/// A labelled eval slice pre-quantized to the Q7.8 grid, so the sweep and
+/// the search never pay the f32→Q7.8 conversion per probe.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    /// (samples × s_0) quantized inputs.
+    pub x: MatI,
+    pub y: Vec<usize>,
+}
+
+impl EvalSet {
+    pub fn from_dataset(d: &Dataset) -> Self {
+        Self {
+            x: quantize_matrix(&d.x),
+            y: d.y.clone(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
+/// Classification accuracy of a quantized network on an eval slice.
+///
+/// Scored on identity-requantized output logits exactly like
+/// [`train::evaluate_q`](crate::train::evaluate_q): sigmoid is monotone,
+/// so argmax is unchanged in exact arithmetic, but the Q7.8 output grid
+/// saturates confident logits to exactly 1.0 and would turn the
+/// comparison into index-order tie-breaking — an encoding artifact, not a
+/// datapath property the budget should charge for.
+///
+/// Runs the golden dense path (`gemm_i32` + `apply_acc`) directly over
+/// the borrowed weights instead of compiling a plan: the sweep and the
+/// search call this O(layers × ladder) times, and cloning every weight
+/// matrix per probe just to flip one activation dominated their runtime.
+pub fn accuracy_q(net: &QNetwork, eval: &EvalSet) -> Result<f64> {
+    ensure!(
+        eval.x.cols == net.spec.inputs(),
+        "eval width {} != {}",
+        eval.x.cols,
+        net.spec.inputs()
+    );
+    ensure!(
+        eval.x.rows == eval.y.len(),
+        "eval has {} samples but {} labels",
+        eval.x.rows,
+        eval.y.len()
+    );
+    let last = net.weights.len() - 1;
+    let mut a = eval.x.clone();
+    for (j, (w, &act)) in net
+        .weights
+        .iter()
+        .zip(net.spec.activations.iter())
+        .enumerate()
+    {
+        let mut z = MatI::zeros(a.rows, w.rows);
+        gemm_i32(&a, w, &mut z);
+        let act = if j == last { Activation::Identity } else { act };
+        for v in z.data.iter_mut() {
+            *v = act.apply_acc(*v);
+        }
+        a = z;
+    }
+    let preds = argmax_rows(&a);
+    let correct = preds
+        .iter()
+        .zip(eval.y.iter())
+        .filter(|(p, y)| p == y)
+        .count();
+    Ok(correct as f64 / eval.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::data::har;
+    use crate::nn::spec::NetworkSpec;
+
+    #[test]
+    fn accuracy_is_a_fraction_and_deterministic() {
+        let spec = NetworkSpec::new("t", &[561, 24, 6]);
+        let net = random_qnet(&spec, 1);
+        let eval = EvalSet::from_dataset(&har::generate(60, 2));
+        let a = accuracy_q(&net, &eval).unwrap();
+        let b = accuracy_q(&net, &eval).unwrap();
+        assert!((0.0..=1.0).contains(&a));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn accuracy_matches_evaluate_q_scoring() {
+        // same identity-logit scoring rule as train::evaluate_q: a fully
+        // zeroed network classifies everything as the tie-broken last
+        // class, so both paths must agree on the degenerate case too
+        let spec = NetworkSpec::new("t", &[561, 8, 6]);
+        let mut net = random_qnet(&spec, 3);
+        for w in net.weights.iter_mut() {
+            w.data.fill(0);
+        }
+        let data = har::generate(40, 4);
+        let eval = EvalSet::from_dataset(&data);
+        let acc = accuracy_q(&net, &eval).unwrap();
+        let want = data.y.iter().filter(|&&y| y == 5).count() as f64 / 40.0;
+        assert!((acc - want).abs() < 1e-12, "{acc} vs {want}");
+    }
+}

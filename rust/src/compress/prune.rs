@@ -1,0 +1,118 @@
+//! Magnitude pruning on the Q7.8 grid — the one shared implementation
+//! behind the simulator utilities, the compression pipeline, and the
+//! benches (it used to live in `sim::pruning`, which still re-exports
+//! [`prune_qnetwork`] for its callers).
+//!
+//! Semantics (paper §4.3): for a target factor `q`, δ is the magnitude of
+//! the ⌊n·q⌋-th smallest weight and every weight with |w| ≤ δ is set to
+//! zero.  Ties at δ are all pruned, so the achieved factor can slightly
+//! exceed the target — that is the measured `q_prune` the plan compiler
+//! and the timing simulator both consume.  `q ≤ 0` is the identity (no
+//! δ, nothing pruned), which is what the per-layer search relies on for
+//! its "layer untouched" starting point.
+
+use crate::nn::forward::QNetwork;
+use crate::tensor::MatI;
+
+/// Zero the smallest-magnitude entries of one Q7.8 weight matrix in
+/// place, targeting a fraction `q_prune` of zeros.
+pub fn prune_matrix(w: &mut MatI, q_prune: f64) {
+    if q_prune <= 0.0 || w.data.is_empty() {
+        return;
+    }
+    let mut mags: Vec<i32> = w.data.iter().map(|v| v.abs()).collect();
+    mags.sort_unstable();
+    let idx = ((mags.len() as f64 * q_prune).floor() as usize).min(mags.len() - 1);
+    let delta = mags[idx];
+    for v in w.data.iter_mut() {
+        if v.abs() <= delta {
+            *v = 0;
+        }
+    }
+}
+
+/// Prune every layer of a quantized network to the same target factor
+/// *post-hoc* (utility for benches that need a given q_prune without a
+/// full retraining run; accuracy-carrying paths use `train::prune` or the
+/// budgeted search in [`crate::compress::search`]).
+pub fn prune_qnetwork(net: &QNetwork, q_prune: f64) -> QNetwork {
+    let mut pruned = net.clone();
+    for w in pruned.weights.iter_mut() {
+        prune_matrix(w, q_prune);
+    }
+    pruned
+}
+
+/// Prune a single layer transition, leaving every other layer untouched
+/// (the sensitivity sweep's probe, and the budgeted search's move).
+pub fn prune_layer(net: &QNetwork, layer: usize, q_prune: f64) -> QNetwork {
+    let mut pruned = net.clone();
+    prune_matrix(&mut pruned.weights[layer], q_prune);
+    pruned
+}
+
+/// Apply one target factor per layer transition (the budgeted search's
+/// final assignment re-applied from scratch).
+pub fn prune_per_layer(net: &QNetwork, factors: &[f64]) -> QNetwork {
+    assert_eq!(
+        factors.len(),
+        net.weights.len(),
+        "one prune factor per layer transition"
+    );
+    let mut pruned = net.clone();
+    for (w, &q) in pruned.weights.iter_mut().zip(factors.iter()) {
+        prune_matrix(w, q);
+    }
+    pruned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::nn::spec::quickstart;
+
+    #[test]
+    fn zero_target_is_identity() {
+        let net = random_qnet(&quickstart(), 1);
+        let p = prune_qnetwork(&net, 0.0);
+        for (a, b) in p.weights.iter().zip(net.weights.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn reaches_target_factor() {
+        let net = random_qnet(&quickstart(), 2);
+        for q in [0.5, 0.8, 0.94] {
+            let f = prune_qnetwork(&net, q).overall_prune_factor();
+            assert!(f >= q - 0.02, "target {q}, achieved {f}");
+        }
+    }
+
+    #[test]
+    fn prune_layer_touches_only_that_layer() {
+        let net = random_qnet(&quickstart(), 3);
+        let p = prune_layer(&net, 1, 0.9);
+        assert_eq!(p.weights[0].data, net.weights[0].data);
+        let f = p.prune_factors();
+        assert!(f[1] >= 0.88, "{f:?}");
+    }
+
+    #[test]
+    fn per_layer_factors_apply_independently() {
+        let net = random_qnet(&quickstart(), 4);
+        let p = prune_per_layer(&net, &[0.9, 0.0]);
+        let f = p.prune_factors();
+        assert!(f[0] >= 0.88, "{f:?}");
+        assert_eq!(p.weights[1].data, net.weights[1].data);
+    }
+
+    #[test]
+    fn monotone_in_target() {
+        let net = random_qnet(&quickstart(), 5);
+        let f50 = prune_qnetwork(&net, 0.5).overall_prune_factor();
+        let f90 = prune_qnetwork(&net, 0.9).overall_prune_factor();
+        assert!(f90 >= f50, "{f50} {f90}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Accuracy-budgeted per-layer prune search.
+//!
+//! Greedy over layers ordered least-sensitive first (from the
+//! [`SensitivityReport`]): for each layer, scan the ladder from the most
+//! aggressive rung down and keep the first one whose *measured*
+//! end-to-end accuracy — with every previously accepted layer still
+//! pruned — stays at or above `baseline − budget`.  A rung is only ever
+//! accepted after evaluation, so the outcome can never exceed the budget
+//! on the search slice, whatever the interactions between layers do
+//! (accuracy under pruning is not monotone, which is also why this scans
+//! the ladder instead of binary-searching it).
+
+use anyhow::{ensure, Result};
+
+use super::prune::prune_layer;
+use super::sensitivity::SensitivityReport;
+use super::{accuracy_q, EvalSet};
+use crate::nn::forward::QNetwork;
+
+/// Search knobs.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Maximum tolerated accuracy drop vs the dense baseline (absolute,
+    /// e.g. `0.02` = two points).
+    pub budget: f64,
+    /// Candidate per-layer prune factors, ascending.
+    pub ladder: Vec<f64>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            budget: 0.02,
+            ladder: super::sensitivity::DEFAULT_LADDER.to_vec(),
+        }
+    }
+}
+
+/// What the search found.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Dense-baseline accuracy on the search slice.
+    pub baseline_accuracy: f64,
+    /// Measured accuracy of the final pruned network on the same slice.
+    pub compressed_accuracy: f64,
+    /// The budget the search ran with.
+    pub budget: f64,
+    /// Chosen *target* factor per layer (0.0 = layer left dense).
+    pub factors: Vec<f64>,
+    /// Measured per-layer prune factors of the result (zeros fraction).
+    pub achieved: Vec<f64>,
+    /// The pruned network itself.
+    pub network: QNetwork,
+}
+
+impl SearchOutcome {
+    /// Overall measured prune factor of the compressed network.
+    pub fn overall_prune(&self) -> f64 {
+        self.network.overall_prune_factor()
+    }
+
+    /// Measured accuracy drop (positive = worse than baseline).
+    pub fn accuracy_delta(&self) -> f64 {
+        self.baseline_accuracy - self.compressed_accuracy
+    }
+}
+
+/// Run the budgeted search.  `report` must come from a sweep over the
+/// same network (it provides the layer ordering and the baseline).
+pub fn search(
+    net: &QNetwork,
+    eval: &EvalSet,
+    report: &SensitivityReport,
+    cfg: &SearchConfig,
+) -> Result<SearchOutcome> {
+    ensure!(cfg.budget >= 0.0, "budget must be >= 0, got {}", cfg.budget);
+    ensure!(!cfg.ladder.is_empty(), "search ladder must not be empty");
+    // an empty slice scores 0.0 for everything, which would "hold" any
+    // budget while pruning every layer to the top rung unmeasured
+    ensure!(!eval.is_empty(), "search eval slice must not be empty");
+    ensure!(
+        report.layers() == net.weights.len(),
+        "sensitivity report covers {} layers, network has {}",
+        report.layers(),
+        net.weights.len()
+    );
+    let mut ladder = cfg.ladder.clone();
+    ladder.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+
+    let baseline = accuracy_q(net, eval)?;
+    let floor = baseline - cfg.budget;
+    let mut factors = vec![0.0f64; net.weights.len()];
+    let mut current = net.clone();
+    let mut current_acc = baseline;
+    for layer in report.layers_by_sensitivity() {
+        for &q in ladder.iter().rev() {
+            let candidate = prune_layer(&current, layer, q);
+            let acc = accuracy_q(&candidate, eval)?;
+            if acc >= floor {
+                factors[layer] = q;
+                current = candidate;
+                current_acc = acc;
+                break;
+            }
+        }
+    }
+    let achieved = current.prune_factors();
+    Ok(SearchOutcome {
+        baseline_accuracy: baseline,
+        compressed_accuracy: current_acc,
+        budget: cfg.budget,
+        factors,
+        achieved,
+        network: current,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::compress::sensitivity::sweep;
+    use crate::compress::EvalSet;
+    use crate::data::har;
+    use crate::nn::spec::NetworkSpec;
+
+    fn fixture(seed: u64) -> (QNetwork, EvalSet) {
+        let spec = NetworkSpec::new("t", &[561, 16, 6]);
+        (
+            random_qnet(&spec, seed),
+            EvalSet::from_dataset(&har::generate(60, seed ^ 0xE)),
+        )
+    }
+
+    fn run(seed: u64, budget: f64) -> SearchOutcome {
+        let (net, eval) = fixture(seed);
+        let report = sweep(&net, &eval, &[0.5, 0.8, 0.95]).unwrap();
+        let cfg = SearchConfig {
+            budget,
+            ladder: vec![0.5, 0.8, 0.95],
+        };
+        search(&net, &eval, &report, &cfg).unwrap()
+    }
+
+    #[test]
+    fn never_exceeds_budget_and_reports_consistently() {
+        for seed in [1, 2, 3] {
+            for budget in [0.0, 0.02, 0.10] {
+                let o = run(seed, budget);
+                assert!(
+                    o.accuracy_delta() <= budget + 1e-12,
+                    "seed {seed} budget {budget}: delta {}",
+                    o.accuracy_delta()
+                );
+                // the reported accuracy is the measured accuracy of the
+                // returned network, not a stale intermediate
+                let eval = fixture(seed).1;
+                let measured = accuracy_q(&o.network, &eval).unwrap();
+                assert!((measured - o.compressed_accuracy).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_budget_prunes_everything_to_the_top_rung() {
+        let o = run(4, 1.0);
+        assert!(o.factors.iter().all(|&q| (q - 0.95).abs() < 1e-12), "{:?}", o.factors);
+        assert!(o.overall_prune() >= 0.9);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (net, eval) = fixture(5);
+        let report = sweep(&net, &eval, &[0.5]).unwrap();
+        let bad = SearchConfig {
+            budget: -0.1,
+            ladder: vec![0.5],
+        };
+        assert!(search(&net, &eval, &report, &bad).is_err());
+        let empty = SearchConfig {
+            budget: 0.1,
+            ladder: vec![],
+        };
+        assert!(search(&net, &eval, &report, &empty).is_err());
+        let no_eval = EvalSet {
+            x: crate::tensor::MatI::zeros(0, 561),
+            y: vec![],
+        };
+        assert!(search(&net, &no_eval, &report, &SearchConfig::default()).is_err());
+        // report from a different-depth network is rejected
+        let other = random_qnet(&NetworkSpec::new("o", &[561, 8, 8, 6]), 6);
+        assert!(search(&other, &eval, &report, &SearchConfig::default()).is_err());
+    }
+}

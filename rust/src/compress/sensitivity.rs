@@ -1,0 +1,167 @@
+//! Per-layer pruning sensitivity sweep: prune one layer at a time at a
+//! ladder of factors and measure the end-to-end accuracy delta on a
+//! held-out slice.  The sweep is what turns "prune everything to 0.9"
+//! into per-layer decisions: wide early layers usually shrug off 90 %
+//! pruning while narrow output layers collapse, and the budgeted search
+//! ([`crate::compress::search`]) spends the accuracy budget accordingly.
+
+use anyhow::{ensure, Result};
+
+use super::prune::prune_layer;
+use super::{accuracy_q, EvalSet};
+use crate::bench::report::Table;
+use crate::nn::forward::QNetwork;
+
+/// Default prune-factor ladder: brackets the paper's evaluated range
+/// (Table 4 prunes the four networks to 0.72–0.94) plus a gentle 0.5
+/// rung so insensitive layers are distinguishable from untouchable ones.
+pub const DEFAULT_LADDER: [f64; 6] = [0.5, 0.6, 0.7, 0.8, 0.9, 0.95];
+
+/// One (layer, factor) probe result.
+#[derive(Debug, Clone)]
+pub struct SensitivityPoint {
+    pub layer: usize,
+    pub factor: f64,
+    /// Accuracy with only `layer` pruned at `factor`.
+    pub accuracy: f64,
+    /// Baseline accuracy minus `accuracy` (positive = hurts).
+    pub delta: f64,
+}
+
+/// The full sweep: baseline + one point per (layer, ladder rung).
+#[derive(Debug, Clone)]
+pub struct SensitivityReport {
+    pub network: String,
+    pub baseline: f64,
+    pub ladder: Vec<f64>,
+    pub points: Vec<SensitivityPoint>,
+    layers: usize,
+}
+
+/// Run the sweep: `layers × ladder` pruned-forward evaluations.
+pub fn sweep(net: &QNetwork, eval: &EvalSet, ladder: &[f64]) -> Result<SensitivityReport> {
+    ensure!(!ladder.is_empty(), "sensitivity ladder must not be empty");
+    ensure!(!eval.is_empty(), "sensitivity eval slice must not be empty");
+    let baseline = accuracy_q(net, eval)?;
+    let mut points = Vec::with_capacity(net.weights.len() * ladder.len());
+    for layer in 0..net.weights.len() {
+        for &factor in ladder {
+            let accuracy = accuracy_q(&prune_layer(net, layer, factor), eval)?;
+            points.push(SensitivityPoint {
+                layer,
+                factor,
+                accuracy,
+                delta: baseline - accuracy,
+            });
+        }
+    }
+    Ok(SensitivityReport {
+        network: net.spec.name.clone(),
+        baseline,
+        ladder: ladder.to_vec(),
+        points,
+        layers: net.weights.len(),
+    })
+}
+
+impl SensitivityReport {
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Mean accuracy delta across the ladder for one layer — the search's
+    /// ordering key (smaller = the layer tolerates pruning better).
+    pub fn mean_delta(&self, layer: usize) -> f64 {
+        let deltas: Vec<f64> = self
+            .points
+            .iter()
+            .filter(|p| p.layer == layer)
+            .map(|p| p.delta)
+            .collect();
+        deltas.iter().sum::<f64>() / deltas.len().max(1) as f64
+    }
+
+    /// Layer indices ordered least-sensitive first (ties break to the
+    /// earlier layer, deterministically).
+    pub fn layers_by_sensitivity(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.layers).collect();
+        order.sort_by(|&a, &b| {
+            self.mean_delta(a)
+                .partial_cmp(&self.mean_delta(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// Render the sweep as a table (one row per layer, one column per
+    /// rung) for the `compress` CLI and `bench compress`.
+    pub fn render(&self) -> String {
+        let mut header: Vec<String> = vec!["layer".into()];
+        header.extend(self.ladder.iter().map(|q| format!("Δacc @ q={q:.2}")));
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(
+            &format!(
+                "per-layer pruning sensitivity ({}, baseline {:.3})",
+                self.network, self.baseline
+            ),
+            &header_refs,
+        );
+        for layer in 0..self.layers {
+            let mut cells = vec![layer.to_string()];
+            for &q in &self.ladder {
+                let p = self
+                    .points
+                    .iter()
+                    .find(|p| p.layer == layer && (p.factor - q).abs() < 1e-12)
+                    .expect("sweep covers every (layer, rung)");
+                cells.push(format!("{:+.3}", -p.delta));
+            }
+            t.row(cells);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::data::har;
+    use crate::nn::spec::NetworkSpec;
+    use crate::compress::EvalSet;
+
+    fn fixture() -> (QNetwork, EvalSet) {
+        let spec = NetworkSpec::new("t", &[561, 16, 6]);
+        (
+            random_qnet(&spec, 7),
+            EvalSet::from_dataset(&har::generate(50, 8)),
+        )
+    }
+
+    #[test]
+    fn sweep_covers_every_layer_and_rung() {
+        let (net, eval) = fixture();
+        let r = sweep(&net, &eval, &[0.5, 0.9]).unwrap();
+        assert_eq!(r.layers(), 2);
+        assert_eq!(r.points.len(), 4);
+        assert_eq!(r.layers_by_sensitivity().len(), 2);
+        for p in &r.points {
+            assert!((0.0..=1.0).contains(&p.accuracy));
+            assert!((r.baseline - p.accuracy - p.delta).abs() < 1e-12);
+        }
+        let table = r.render();
+        assert!(table.contains("q=0.90"));
+    }
+
+    #[test]
+    fn empty_ladder_and_empty_eval_rejected() {
+        let (net, eval) = fixture();
+        assert!(sweep(&net, &eval, &[]).is_err());
+        let empty = EvalSet {
+            x: crate::tensor::MatI::zeros(0, 561),
+            y: vec![],
+        };
+        assert!(sweep(&net, &empty, &[0.5]).is_err());
+    }
+}

@@ -33,6 +33,10 @@ pub struct ServerConfig {
     pub backend: String,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
+    /// Path to a compressed `.rpz` model artifact ("" = serve the plain
+    /// weights).  When set, the network and the calibrated sparse
+    /// threshold both come from the artifact (see `compress`).
+    pub artifact: String,
 }
 
 impl Default for ServerConfig {
@@ -47,6 +51,7 @@ impl Default for ServerConfig {
             queue_depth: 1024,
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
+            artifact: String::new(),
         }
     }
 }
@@ -97,6 +102,7 @@ impl ServerConfig {
                 "queue_depth" => cfg.queue_depth = v.parse().context("queue_depth")?,
                 "backend" => cfg.backend = v.clone(),
                 "artifacts_dir" => cfg.artifacts_dir = v.clone(),
+                "artifact" => cfg.artifact = v.clone(),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -121,6 +127,12 @@ impl ServerConfig {
                 "queue_depth ({}) must be >= batch ({})",
                 self.queue_depth,
                 self.batch
+            );
+        }
+        if !self.artifact.is_empty() && !self.artifact.ends_with(".rpz") {
+            bail!(
+                "artifact must be a .rpz compressed model, got {:?}",
+                self.artifact
             );
         }
         match self.backend.as_str() {
@@ -200,6 +212,13 @@ mod tests {
             .validate()
             .unwrap();
         }
+    }
+
+    #[test]
+    fn artifact_key_parses_and_is_validated() {
+        let cfg = ServerConfig::from_kv_text("artifact = \"models/har6.rpz\"\n").unwrap();
+        assert_eq!(cfg.artifact, "models/har6.rpz");
+        assert!(ServerConfig::from_kv_text("artifact = \"weights.zdnw\"").is_err());
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! The PJRT handles are not `Send`, so engines are constructed *inside*
 //! the engine thread from a Send-able [`EngineFactory`].
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::compress::{load_artifact, CompressedModel};
 use crate::exec::{ExecPlan, PlanOptions};
 use crate::nn::forward::QNetwork;
 use crate::runtime::Runtime;
@@ -36,18 +38,78 @@ pub struct EngineFactory {
     pub artifacts_dir: PathBuf,
     /// Threads for the native engines' parallel (dense and sparse) kernels.
     pub native_threads: usize,
-    /// Override for [`PlanOptions::sparse_threshold`] on the `native`
-    /// backend (`None` keeps the compiled-in default; `bench calibrate`
-    /// prints a measured suggestion for this knob).
+    /// Explicit override for [`PlanOptions::sparse_threshold`] on the
+    /// `native` backend (`None` keeps the compiled-in default, or the
+    /// artifact's embedded calibration when one is loaded; `bench
+    /// calibrate` prints a measured suggestion for this knob).
     pub sparse_threshold: Option<f64>,
+    /// Compressed `.rpz` model this factory serves, if any.  `net` must
+    /// be the artifact's reconstructed network (use
+    /// [`Self::for_artifact`]); the `native` backend then compiles
+    /// kernels straight from the stored blobs with the artifact's
+    /// embedded calibrated threshold — unless [`Self::sparse_threshold`]
+    /// explicitly overrides it.
+    pub artifact: Option<Arc<CompressedModel>>,
 }
 
 impl EngineFactory {
+    /// Factory for serving a compressed artifact: network *and*
+    /// calibration both come from the `.rpz` file.
+    pub fn for_artifact(
+        path: &Path,
+        backend: &str,
+        batch: usize,
+        artifacts_dir: PathBuf,
+        native_threads: usize,
+    ) -> Result<Self> {
+        let model = load_artifact(path)?;
+        let net = model.to_qnetwork()?;
+        Ok(Self {
+            backend: backend.into(),
+            batch,
+            net,
+            artifacts_dir,
+            native_threads,
+            // None = the artifact's embedded calibration decides; an
+            // explicit override stays available to the caller
+            sparse_threshold: None,
+            artifact: Some(Arc::new(model)),
+        })
+    }
+
+    /// Honour [`ServerConfig::artifact`]: when the config names a `.rpz`
+    /// and this factory was not already built from one, load it —
+    /// replacing the network and picking up the embedded calibration —
+    /// so config-file-driven servers serve compressed models too.
+    pub fn apply_config_artifact(&mut self, config: &crate::config::ServerConfig) -> Result<()> {
+        if !config.artifact.is_empty() && self.artifact.is_none() {
+            let loaded = Self::for_artifact(
+                Path::new(&config.artifact),
+                &self.backend,
+                self.batch,
+                self.artifacts_dir.clone(),
+                self.native_threads,
+            )?;
+            self.net = loaded.net;
+            self.artifact = loaded.artifact;
+        }
+        Ok(())
+    }
+
     /// The plan the native backends run on (`native` picks kernels from
     /// measured prune factors, honouring [`Self::sparse_threshold`];
     /// `native-sparse` forces the §5.6 CSR path).  Exposed so the sharded
     /// pool can compile once and [`ExecPlan::clone_shared`] per worker.
     pub fn compile_plan(&self) -> Result<ExecPlan> {
+        if self.backend == "native" && self.sparse_threshold.is_none() {
+            if let Some(model) = &self.artifact {
+                // the artifact IS the kernel decision: stored CSR blobs
+                // run sparse, dense blobs run dense, per the calibration
+                // embedded at compression time (an explicit threshold
+                // override falls through to recompile from the network)
+                return ExecPlan::compile_artifact(model, self.native_threads);
+            }
+        }
         let mut opts = match self.backend.as_str() {
             "native-sparse" => PlanOptions::sparse_always(),
             _ => PlanOptions::default(),
@@ -241,6 +303,7 @@ mod tests {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
             sparse_threshold: None,
+            artifact: None,
         }
     }
 
@@ -297,6 +360,74 @@ mod tests {
     #[test]
     fn unknown_backend_rejected() {
         assert!(factory("tpu", 1).build().is_err());
+    }
+
+    #[test]
+    fn artifact_factory_serves_embedded_calibration() {
+        use crate::compress::{save_artifact, CompressedModel};
+        use crate::exec::KernelKind;
+        // compress a pruned net, reload it via for_artifact: the threshold
+        // comes from the file, the kernels from the stored blobs, and the
+        // outputs stay bit-identical to serving the in-memory network
+        let mut f = factory("native", 4);
+        f.net = crate::sim::pruning::prune_qnetwork(&f.net, 0.9);
+        let model = CompressedModel::from_network(&f.net, 0.75, 0.02, 0.9, 0.89).unwrap();
+        let dir = std::env::temp_dir().join("zdnn_test_engine_rpz");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.rpz");
+        save_artifact(&path, &model).unwrap();
+        let mut af = EngineFactory::for_artifact(
+            &path,
+            "native",
+            4,
+            crate::runtime::default_artifacts_dir(),
+            1,
+        )
+        .unwrap();
+        assert!((af.artifact.as_ref().unwrap().sparse_threshold - 0.75).abs() < 1e-12);
+        assert!(af
+            .compile_plan()
+            .unwrap()
+            .kernels()
+            .iter()
+            .all(|&k| k == KernelKind::SparseQ));
+        let x = rand_x(4);
+        let mut from_artifact = af.build().unwrap();
+        let mut from_memory = f.build().unwrap();
+        assert_eq!(
+            from_artifact.infer(&x).unwrap().data,
+            from_memory.infer(&x).unwrap().data
+        );
+        // an explicit threshold override out-votes the embedded
+        // calibration: > 1.0 forces every layer back to the dense kernel
+        af.sparse_threshold = Some(2.0);
+        assert!(af
+            .compile_plan()
+            .unwrap()
+            .kernels()
+            .iter()
+            .all(|&k| k == KernelKind::DenseQ));
+
+        // ServerConfig::artifact is honoured too: a plain factory picks
+        // up the compressed model (and its calibration) from the config
+        let mut plain = factory("native", 4);
+        let cfg = crate::config::ServerConfig {
+            artifact: path.display().to_string(),
+            ..Default::default()
+        };
+        plain.apply_config_artifact(&cfg).unwrap();
+        assert!(plain.artifact.is_some());
+        assert!(plain
+            .compile_plan()
+            .unwrap()
+            .kernels()
+            .iter()
+            .all(|&k| k == KernelKind::SparseQ));
+        let mut from_config = plain.build().unwrap();
+        assert_eq!(
+            from_config.infer(&x).unwrap().data,
+            from_memory.infer(&x).unwrap().data
+        );
     }
 
     #[test]

@@ -29,5 +29,5 @@ pub use batcher::{Batch, Batcher};
 pub use engine::{Engine, EngineFactory};
 pub use metrics::ServerMetrics;
 pub use net::{NetClient, NetFrontend};
-pub use request::{Request, RequestId, Response};
+pub use request::{InferError, Reply, Request, RequestId, Response};
 pub use server::{Server, ServerHandle};

@@ -254,6 +254,7 @@ mod tests {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
             sparse_threshold: None,
+            artifact: None,
         };
         let server = Arc::new(Server::start(&cfg, factory).unwrap());
         let fe = NetFrontend::start("127.0.0.1:0", server.clone()).unwrap();

@@ -6,6 +6,26 @@ use std::time::Instant;
 /// Monotonic request identifier.
 pub type RequestId = u64;
 
+/// Engine failure surfaced to a waiting client.  One `infer` error fails
+/// every request in the batch, and `anyhow::Error` is not `Clone`, so the
+/// error crosses the reply channel as this string-backed type; `?` at the
+/// receiver converts it back into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct InferError(pub String);
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// What arrives on a reply channel: the response, or the engine error
+/// that failed the whole batch (the dispatcher decrements its in-flight
+/// accounting either way, so backpressure slots never leak).
+pub type Reply = std::result::Result<Response, InferError>;
+
 /// One inference request: a single input sample on the Q7.8 grid.
 #[derive(Debug)]
 pub struct Request {
@@ -15,7 +35,7 @@ pub struct Request {
     /// Enqueue timestamp (for end-to-end latency accounting).
     pub queued_at: Instant,
     /// Completion channel.
-    pub reply: mpsc::Sender<Response>,
+    pub reply: mpsc::Sender<Reply>,
 }
 
 /// One inference response.

@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 use super::batcher::Batcher;
 use super::engine::EngineFactory;
 use super::metrics::ServerMetrics;
-use super::request::{Request, RequestId, Response};
+use super::request::{InferError, Reply, Request, RequestId, Response};
 use crate::config::ServerConfig;
 use crate::nn::forward::argmax_rows;
 
@@ -43,8 +43,9 @@ pub struct ServerHandle {
 pub struct Server;
 
 impl Server {
-    pub fn start(config: &ServerConfig, factory: EngineFactory) -> Result<ServerHandle> {
+    pub fn start(config: &ServerConfig, mut factory: EngineFactory) -> Result<ServerHandle> {
         config.validate()?;
+        factory.apply_config_artifact(config)?;
         let (tx, rx) = mpsc::channel::<Command>();
         let metrics = Arc::new(ServerMetrics::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
@@ -74,7 +75,7 @@ impl Server {
 impl ServerHandle {
     /// Submit one sample; returns the response receiver or an immediate
     /// backpressure error when the queue is full.
-    pub fn submit(&self, input: Vec<i32>) -> Result<(RequestId, mpsc::Receiver<Response>)> {
+    pub fn submit(&self, input: Vec<i32>) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
         if self.shutting_down.load(Ordering::SeqCst) {
             bail!("server is shutting down");
         }
@@ -106,16 +107,21 @@ impl ServerHandle {
             queued_at: Instant::now(),
             reply: rtx,
         };
-        self.tx
-            .send(Command::Infer(req))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        if self.tx.send(Command::Infer(req)).is_err() {
+            // roll the reservation back (mirrors the pool): a dead engine
+            // must report "engine thread gone" forever, not fill the
+            // queue-depth accounting until it misreports "queue full"
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            bail!("engine thread gone");
+        }
         Ok((id, rrx))
     }
 
-    /// Convenience: submit and block for the response.
+    /// Convenience: submit and block for the response (engine failures
+    /// surface as errors here, not as hangs).
     pub fn infer_blocking(&self, input: Vec<i32>) -> Result<Response> {
         let (_, rx) = self.submit(input)?;
-        Ok(rx.recv()?)
+        Ok(rx.recv()??)
     }
 
     /// Graceful shutdown: drains pending requests, joins the engine.
@@ -141,7 +147,10 @@ impl Drop for ServerHandle {
 /// Execute every batch the batcher is ready to form.  `force` drains the
 /// backlog one batch at a time regardless of the deadline (shutdown path) —
 /// never take `flush_all` in one go here: executing only the head of that
-/// vector used to drop every later batch, losing its requests.
+/// vector used to drop every later batch, losing its requests.  An
+/// `infer` error fails the batch *and* the remaining backlog with error
+/// replies (releasing their in-flight slots) before propagating, so a
+/// broken engine can never strand clients.
 fn dispatch_ready(
     batcher: &mut Batcher,
     engine: &mut dyn super::engine::Engine,
@@ -166,7 +175,27 @@ fn dispatch_ready(
         metrics.record_batch(occupancy, batch.size);
         let x = batch.padded_input(s_in);
         let t0 = Instant::now();
-        let y = engine.infer(&x)?;
+        let y = match engine.infer(&x) {
+            Ok(y) => y,
+            Err(e) => {
+                // the engine is broken mid-loop: fail this batch's
+                // requests AND everything still queued behind it (the
+                // loop is about to die with `e`, so nothing else will
+                // ever serve them) — every client gets an error reply
+                // and every in-flight slot is released, instead of the
+                // old behavior of stranding both
+                let err = InferError(format!("infer failed: {e:#}"));
+                let mut stranded = batch.requests;
+                while let Some(b) = batcher.flush_next() {
+                    stranded.extend(b.requests);
+                }
+                for req in stranded {
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = req.reply.send(Err(err.clone()));
+                }
+                return Err(e);
+            }
+        };
         let compute_seconds = engine
             .simulated_seconds()
             .unwrap_or_else(|| t0.elapsed().as_secs_f64());
@@ -184,7 +213,7 @@ fn dispatch_ready(
             };
             metrics.record_request(resp.queue_seconds, resp.total_seconds());
             in_flight.fetch_sub(1, Ordering::SeqCst);
-            let _ = req.reply.send(resp);
+            let _ = req.reply.send(Ok(resp));
         }
     }
 }
@@ -197,14 +226,39 @@ fn engine_loop(
     metrics: Arc<ServerMetrics>,
     in_flight: Arc<AtomicUsize>,
 ) -> Result<()> {
-    let mut engine = factory.build()?;
-    let s_in = factory.net.spec.inputs();
-    let mut batcher = Batcher::new(batch_size, deadline);
+    // engine construction happens inside the fallible block so its
+    // failure also reaches the drain below: clients can submit the
+    // moment Server::start returns, before the engine finishes building
+    let result = (|| -> Result<()> {
+        let mut engine = factory.build()?;
+        let s_in = factory.net.spec.inputs();
+        let mut batcher = Batcher::new(batch_size, deadline);
+        serve_commands(&rx, engine.as_mut(), &mut batcher, s_in, &metrics, &in_flight)
+    })();
+    if let Err(e) = &result {
+        // the loop died: dispatch_ready already failed everything the
+        // batcher held, but requests still buffered in the command
+        // channel would otherwise leak their in-flight slots and leave
+        // clients with a bare disconnect — fail them the same way
+        let err = InferError(format!("engine stopped: {e:#}"));
+        while let Ok(cmd) = rx.try_recv() {
+            if let Command::Infer(req) = cmd {
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                let _ = req.reply.send(Err(err.clone()));
+            }
+        }
+    }
+    result
+}
 
-    let mut dispatch = |batcher: &mut Batcher, force: bool| -> Result<()> {
-        dispatch_ready(batcher, engine.as_mut(), s_in, force, &metrics, &in_flight)
-    };
-
+fn serve_commands(
+    rx: &mpsc::Receiver<Command>,
+    engine: &mut dyn super::engine::Engine,
+    batcher: &mut Batcher,
+    s_in: usize,
+    metrics: &ServerMetrics,
+    in_flight: &AtomicUsize,
+) -> Result<()> {
     loop {
         // wait bounded by the batcher's deadline so partial batches flush
         let timeout = batcher
@@ -226,26 +280,26 @@ fn engine_loop(
                         }
                     }
                 }
-                dispatch(&mut batcher, false)?;
+                dispatch_ready(batcher, engine, s_in, false, metrics, in_flight)?;
                 if shutdown {
-                    dispatch(&mut batcher, true)?;
+                    dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
                     return Ok(());
                 }
             }
             Ok(Command::Shutdown) => {
-                dispatch(&mut batcher, true)?;
+                dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
                 // drain anything racing the shutdown signal
                 while let Ok(Command::Infer(req)) = rx.try_recv() {
                     batcher.push(req);
                 }
-                dispatch(&mut batcher, true)?;
+                dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
                 return Ok(());
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                dispatch(&mut batcher, false)?;
+                dispatch_ready(batcher, engine, s_in, false, metrics, in_flight)?;
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                dispatch(&mut batcher, true)?;
+                dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
                 return Ok(());
             }
         }
@@ -281,6 +335,7 @@ mod tests {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
             sparse_threshold: None,
+            artifact: None,
         }
     }
 
@@ -312,7 +367,7 @@ mod tests {
             receivers.push(server.submit(input).unwrap());
         }
         for (i, (id, rx)) in receivers.into_iter().enumerate() {
-            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
             assert_eq!(resp.id, id);
             // verify against the golden forward
             let x = MatI::from_vec(1, 64, inputs[i].clone());
@@ -391,8 +446,50 @@ mod tests {
             .collect();
         server.shutdown().unwrap();
         for rx in rxs {
-            assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+            assert!(rx.recv_timeout(Duration::from_secs(1)).unwrap().is_ok());
         }
+    }
+
+    /// A broken engine must fail every queued request with an error reply
+    /// and release every in-flight slot (regression: both used to strand).
+    #[test]
+    fn infer_error_fails_batch_and_backlog_without_leaking_slots() {
+        struct FailingEngine;
+        impl super::super::engine::Engine for FailingEngine {
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+            fn batch(&self) -> usize {
+                4
+            }
+            fn infer(&mut self, _x: &MatI) -> Result<MatI> {
+                anyhow::bail!("injected engine failure")
+            }
+        }
+        let metrics = ServerMetrics::new();
+        let in_flight = AtomicUsize::new(9);
+        let mut batcher = Batcher::new(4, Duration::from_secs(60));
+        let mut rxs = Vec::new();
+        for i in 0..9u64 {
+            let (tx, rx) = mpsc::channel();
+            batcher.push(Request {
+                id: i,
+                input: rand_sample(i),
+                queued_at: Instant::now(),
+                reply: tx,
+            });
+            rxs.push(rx);
+        }
+        let mut engine = FailingEngine;
+        let err = dispatch_ready(&mut batcher, &mut engine, 64, true, &metrics, &in_flight)
+            .unwrap_err();
+        assert!(err.to_string().contains("injected"));
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
+            let e = reply.expect_err("must be an error reply");
+            assert!(e.to_string().contains("injected engine failure"));
+        }
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
     }
 
     #[test]

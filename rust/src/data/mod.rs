@@ -15,6 +15,8 @@
 pub mod har;
 pub mod mnist;
 
+use anyhow::{bail, Result};
+
 use crate::tensor::MatF;
 
 /// A labelled dataset split.
@@ -56,6 +58,44 @@ impl Dataset {
             counts[y] += 1;
         }
         counts
+    }
+}
+
+/// The eval/train data matching a built-in network's input layer: synthetic
+/// MNIST for `mnist*`, synthetic HAR for `har*`, and 8×8 average-pooled
+/// digits for `quickstart` (64 features).  Shared by the `train` and
+/// `compress` CLI paths and `bench compress`.
+pub fn for_network(name: &str, n: usize, seed: u64) -> Result<Dataset> {
+    if name == "quickstart" {
+        let full = mnist::generate(n, seed);
+        let mut x = MatF::zeros(n, 64);
+        for i in 0..n {
+            let row = full.x.row(i);
+            for j in 0..64 {
+                let (cy, cx) = (j / 8, j % 8);
+                let mut sum = 0.0f32;
+                let mut cnt = 0;
+                for py in (cy * 28 / 8)..(((cy + 1) * 28 + 7) / 8).min(28) {
+                    for px in (cx * 28 / 8)..(((cx + 1) * 28 + 7) / 8).min(28) {
+                        sum += row[py * 28 + px];
+                        cnt += 1;
+                    }
+                }
+                x.set(i, j, sum / cnt.max(1) as f32);
+            }
+        }
+        return Ok(Dataset {
+            x,
+            y: full.y,
+            num_classes: full.num_classes,
+        });
+    }
+    if name.starts_with("mnist") {
+        Ok(mnist::generate(n, seed))
+    } else if name.starts_with("har") {
+        Ok(har::generate(n, seed))
+    } else {
+        bail!("no synthetic dataset for network {name:?}")
     }
 }
 

@@ -29,6 +29,12 @@
 //!   baseline path); no sparse variant exists because pruning is a
 //!   quantized-deployment technique in the paper.
 //!
+//! Compressed `.rpz` artifacts ([`crate::compress`]) short-circuit the
+//! policy: [`ExecPlan::compile_artifact`] maps each stored blob to its
+//! kernel directly (CSR → `SparseQ`, dense → `DenseQ`), so the
+//! calibrated threshold embedded at compression time *is* the kernel
+//! decision — no `--threshold` flag at serve time.
+//!
 //! All Q kernels use wrapping i32 accumulation, which is associative and
 //! commutative mod 2^32 — so every plan, any thread count, any kernel mix,
 //! is **bit-identical** to the golden dense model (property-tested in

@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
+use crate::compress::{CompressedModel, LayerBlob};
 use crate::nn::forward::QNetwork;
 use crate::nn::spec::{Activation, NetworkSpec};
 use crate::sparse;
@@ -154,6 +155,48 @@ impl ExecPlan {
             });
         }
         Self::new(net.spec.clone(), layers, opts.threads)
+    }
+
+    /// Compile a compressed `.rpz` artifact
+    /// ([`crate::compress::CompressedModel`]): the kernel choice is the
+    /// artifact's own — CSR blobs become `SparseQ` kernels *directly*
+    /// (no densify/re-encode on the load path) and dense blobs become
+    /// `DenseQ`, so serving honours the calibrated `sparse_threshold`
+    /// embedded at compression time instead of a CLI flag.
+    pub fn compile_artifact(model: &CompressedModel, threads: usize) -> Result<Self> {
+        let shapes = model.spec.weight_shapes();
+        ensure!(
+            model.layers.len() == shapes.len(),
+            "{}: {} layer blobs for {} weight matrices",
+            model.spec.name,
+            model.layers.len(),
+            shapes.len()
+        );
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for ((blob, &act), &(o, i)) in model
+            .layers
+            .iter()
+            .zip(model.spec.activations.iter())
+            .zip(shapes.iter())
+        {
+            ensure!(
+                blob.shape() == (o, i),
+                "{}: blob shape {:?} != {:?}",
+                model.spec.name,
+                blob.shape(),
+                (o, i)
+            );
+            let kernel = match blob {
+                LayerBlob::Dense(w) => Kernel::DenseQ(Arc::new(w.clone())),
+                LayerBlob::Csr(m) => Kernel::SparseQ(Arc::new(m.clone())),
+            };
+            layers.push(LayerPlan {
+                kernel,
+                act,
+                out_dim: o,
+            });
+        }
+        Self::new(model.spec.clone(), layers, threads)
     }
 
     /// Compile the f32 software-baseline path.
@@ -408,6 +451,28 @@ mod tests {
                 assert_eq!(plan.run(&x).unwrap().data, want.data, "q={q} {opts:?}");
             }
         }
+    }
+
+    #[test]
+    fn artifact_plan_bit_identical_to_network_plan() {
+        // the .rpz load path (CSR blobs -> SparseQ kernels directly) must
+        // agree bit-for-bit with compiling the reconstructed network at
+        // the artifact's embedded threshold
+        let net = prune_qnetwork(&rand_qnet(quickstart(), 9), 0.85);
+        let model =
+            crate::compress::CompressedModel::from_network(&net, 0.75, 0.0, 1.0, 1.0).unwrap();
+        let mut from_art = ExecPlan::compile_artifact(&model, 1).unwrap();
+        assert_eq!(from_art.kernels(), vec![KernelKind::SparseQ; 2]);
+        let opts = PlanOptions {
+            sparse_threshold: 0.75,
+            threads: 1,
+        };
+        let mut from_net = ExecPlan::compile_q(&net, &opts).unwrap();
+        let x = rand_x(5, 64, 10);
+        assert_eq!(
+            from_art.run(&x).unwrap().data,
+            from_net.run(&x).unwrap().data
+        );
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! * **Layer 3 (this crate)** — the serving coordinator (dynamic batcher,
 //!   section scheduler, PJRT runtime), the sharded serving pool with
 //!   priority dispatch (`serve`), compiled execution plans that pick
-//!   dense or sparse kernels per layer (`exec`), the cycle-level Zynq
+//!   dense or sparse kernels per layer (`exec`), the offline compression
+//!   pipeline that turns trained networks into servable `.rpz` artifacts
+//!   under an accuracy budget (`compress`), the cycle-level Zynq
 //!   accelerator simulator for both paper designs (batch processing §5.5,
 //!   pruning §5.6), and every substrate they need: Q7.8 fixed point,
 //!   sparse weight streaming, trainer with magnitude pruning, synthetic
@@ -22,6 +24,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   info                         device/resource/calibration summary
 //!   train                        train + prune + save a network
+//!   compress                     accuracy-budgeted pruning -> .rpz artifact
+//!                                (sensitivity sweep + per-layer search)
 //!   infer                        run one inference through a backend
 //!   serve                        demo serving loop with the dynamic batcher
 //!                                (delegates to the sharded pool when --workers > 1)
@@ -12,18 +14,24 @@
 //!   bench <which>                regenerate a paper table/figure, or run the
 //!                                serving benches (table2|table3|table4|fig7|
 //!                                gops|nopt|combined|ablation|sparse|slo|
-//!                                calibrate|all)
+//!                                calibrate|compress|all)
+//!
+//! `infer`, `serve`, and `serve-pool` take `--artifact model.rpz` to serve
+//! a compressed model directly: the network weights AND the calibrated
+//! sparse threshold come from the artifact (no `--threshold` needed).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use zynq_dnn::bench;
 use zynq_dnn::cli::{parse, usage, Args, FlagSpec};
+use zynq_dnn::compress::{
+    accuracy_q, save_artifact, CompressedModel, EvalSet, SearchConfig, DEFAULT_LADDER,
+};
 use zynq_dnn::config::ServerConfig;
 use zynq_dnn::coordinator::{EngineFactory, Server};
 use zynq_dnn::serve::{start_serving, Priority, Serving};
-use zynq_dnn::data::{har, mnist};
 use zynq_dnn::nn::spec::by_name;
 use zynq_dnn::nn::{load_weights, save_weights};
 use zynq_dnn::sim::batch::BatchAccelerator;
@@ -125,6 +133,21 @@ const GLOBAL_FLAGS: &[FlagSpec] = &[
         takes_value: true,
         help: "native backend: sparse kernel threshold override (see bench calibrate)",
     },
+    FlagSpec {
+        name: "artifact",
+        takes_value: true,
+        help: "serve/infer a compressed .rpz model (embeds its own calibration)",
+    },
+    FlagSpec {
+        name: "budget",
+        takes_value: true,
+        help: "compress: max tolerated accuracy drop vs the dense baseline",
+    },
+    FlagSpec {
+        name: "calibrate",
+        takes_value: false,
+        help: "compress: measure the dense/CSR crossover and embed it as the threshold",
+    },
 ];
 
 fn main() {
@@ -144,6 +167,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd {
         "info" => info(),
         "train" => train(&args),
+        "compress" => compress(&args),
         "infer" => infer(&args),
         "serve" => serve(&args),
         "serve-pool" => serve_pool(&args),
@@ -151,7 +175,9 @@ fn run(argv: &[String]) -> Result<()> {
         "bench" => run_bench(&args),
         _ => {
             println!("zynq-dnn — FPGA DNN inference throughput reproduction\n");
-            println!("usage: zynq-dnn <info|train|infer|serve|serve-pool|sim|bench> [flags]\n");
+            println!(
+                "usage: zynq-dnn <info|train|compress|infer|serve|serve-pool|sim|bench> [flags]\n"
+            );
             println!("{}", usage(GLOBAL_FLAGS));
             Ok(())
         }
@@ -205,43 +231,10 @@ fn info() -> Result<()> {
     Ok(())
 }
 
-fn dataset_for(name: &str, n: usize, seed: u64) -> zynq_dnn::data::Dataset {
-    if name == "quickstart" {
-        // quickstart takes 64 features: 8×8 average-pooled synthetic digits
-        let full = mnist::generate(n, seed);
-        let mut x = zynq_dnn::tensor::MatF::zeros(n, 64);
-        for i in 0..n {
-            let row = full.x.row(i);
-            for j in 0..64 {
-                let (cy, cx) = (j / 8, j % 8);
-                let mut sum = 0.0f32;
-                let mut cnt = 0;
-                for py in (cy * 28 / 8)..(((cy + 1) * 28 + 7) / 8).min(28) {
-                    for px in (cx * 28 / 8)..(((cx + 1) * 28 + 7) / 8).min(28) {
-                        sum += row[py * 28 + px];
-                        cnt += 1;
-                    }
-                }
-                x.set(i, j, sum / cnt.max(1) as f32);
-            }
-        }
-        return zynq_dnn::data::Dataset {
-            x,
-            y: full.y,
-            num_classes: full.num_classes,
-        };
-    }
-    if name.starts_with("mnist") {
-        mnist::generate(n, seed)
-    } else {
-        har::generate(n, seed)
-    }
-}
-
 fn train(args: &Args) -> Result<()> {
     let name = args.get_or("network", "quickstart");
     let spec = by_name(name)?;
-    let quick = std::env::var("ZDNN_QUICK").is_ok();
+    let quick = bench::quick_mode();
     let samples = args.get_usize("samples", if quick { 400 } else { 1500 })?;
     let epochs = args.get_usize("epochs", if quick { 3 } else { 8 })?;
     let prune = args.get_f64("prune", 0.0)?;
@@ -250,8 +243,8 @@ fn train(args: &Args) -> Result<()> {
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from(format!("{name}.zdnw")));
 
-    let data = dataset_for(name, samples, 0x5EED);
-    let test = dataset_for(name, samples / 3, 0x7E57);
+    let data = zynq_dnn::data::for_network(name, samples, 0x5EED)?;
+    let test = zynq_dnn::data::for_network(name, samples / 3, 0x7E57)?;
     eprintln!(
         "training {name} ({}) on {} synthetic samples, {} epochs",
         spec.abbrev(),
@@ -293,6 +286,95 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `compress`: sensitivity sweep + accuracy-budgeted search + `.rpz` save.
+fn compress(args: &Args) -> Result<()> {
+    let name = args.get_or("network", "quickstart");
+    let net = load_or_random(args, name)?;
+    let name = net.spec.name.clone(); // --weights may carry its own name
+    let quick = bench::quick_mode();
+    let samples = args.get_usize("samples", if quick { 200 } else { 600 })?;
+    let budget = args.get_f64("budget", 0.02)?;
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{name}.rpz")));
+
+    // search slice + a disjoint verify slice (different seed) so the
+    // summary reports how the budget generalizes
+    let search_data = zynq_dnn::data::for_network(&name, samples, 0xC0_5EED)?;
+    let verify_data = zynq_dnn::data::for_network(&name, (samples / 2).max(1), 0xC0_7E57)?;
+    let eval = EvalSet::from_dataset(&search_data);
+    let verify = EvalSet::from_dataset(&verify_data);
+
+    eprintln!(
+        "compressing {name} ({}): budget {budget}, {} search + {} verify samples",
+        net.spec.abbrev(),
+        eval.len(),
+        verify.len()
+    );
+    let report = zynq_dnn::compress::sweep(&net, &eval, &DEFAULT_LADDER)?;
+    println!("{}", report.render());
+
+    let cfg = SearchConfig {
+        budget,
+        ladder: DEFAULT_LADDER.to_vec(),
+    };
+    let outcome = zynq_dnn::compress::search(&net, &eval, &report, &cfg)?;
+    for (j, (&target, &achieved)) in outcome
+        .factors
+        .iter()
+        .zip(outcome.achieved.iter())
+        .enumerate()
+    {
+        eprintln!("  layer {j}: target {target:.2}, achieved {achieved:.3}");
+    }
+
+    // threshold precedence: --threshold > --calibrate measurement > default
+    let threshold = match sparse_threshold(args)? {
+        Some(t) => t,
+        None if args.has("calibrate") => {
+            eprintln!("calibrating dense/CSR crossover…");
+            let c = bench::calibrate::run();
+            match c.crossover() {
+                Some(q) => q,
+                None => {
+                    eprintln!(
+                        "  no crossover measured; keeping default {}",
+                        zynq_dnn::exec::DEFAULT_SPARSE_THRESHOLD
+                    );
+                    zynq_dnn::exec::DEFAULT_SPARSE_THRESHOLD
+                }
+            }
+        }
+        None => zynq_dnn::exec::DEFAULT_SPARSE_THRESHOLD,
+    };
+    let model = CompressedModel::from_outcome(&outcome, threshold)?;
+    save_artifact(&out, &model)?;
+
+    let verify_base = accuracy_q(&net, &verify)?;
+    let verify_comp = accuracy_q(&outcome.network, &verify)?;
+    println!(
+        "compressed {name}: prune {:.3}, accuracy {:.3} -> {:.3} (Δ {:+.3}, budget {budget}); \
+         held-out {:.3} -> {:.3}",
+        outcome.overall_prune(),
+        outcome.baseline_accuracy,
+        outcome.compressed_accuracy,
+        -outcome.accuracy_delta(),
+        verify_base,
+        verify_comp,
+    );
+    println!(
+        "artifact {}: threshold {threshold:.2}, payload {} B vs {} B dense ({:.2}x); \
+         serve it with: zynq-dnn serve-pool --artifact {}",
+        out.display(),
+        model.stored_bytes(),
+        model.dense_bytes(),
+        model.compression_ratio(),
+        out.display(),
+    );
+    Ok(())
+}
+
 fn load_or_random(args: &Args, name: &str) -> Result<zynq_dnn::nn::QNetwork> {
     match args.get("weights") {
         Some(path) => Ok(load_weights(&PathBuf::from(path))?.quantized()),
@@ -303,22 +385,63 @@ fn load_or_random(args: &Args, name: &str) -> Result<zynq_dnn::nn::QNetwork> {
     }
 }
 
+/// Engine factory for `infer`/`serve`/`serve-pool`: from `--artifact` (a
+/// compressed `.rpz` model carrying its own calibrated threshold) or from
+/// `--weights` / a seeded random net.  Returns the factory and the
+/// network name to report.  An explicit `--threshold` always wins — with
+/// an artifact it recompiles the reconstructed network at that threshold
+/// instead of trusting the embedded calibration.
+fn build_factory(args: &Args, backend: &str, batch: usize) -> Result<(EngineFactory, String)> {
+    let threshold = sparse_threshold(args)?;
+    if let Some(path) = args.get("artifact") {
+        let mut factory = EngineFactory::for_artifact(
+            Path::new(path),
+            backend,
+            batch,
+            artifacts_dir(args),
+            1,
+        )?;
+        factory.sparse_threshold = threshold;
+        let model = factory.artifact.clone().expect("for_artifact sets it");
+        eprintln!(
+            "artifact {path}: {} ({}), prune {:.3}, threshold {:.2}, \
+             accuracy {:.3} (baseline {:.3}, budget {:.3}), payload {} B ({:.2}x dense)",
+            model.spec.name,
+            model.spec.abbrev(),
+            factory.net.overall_prune_factor(),
+            model.sparse_threshold,
+            model.compressed_accuracy,
+            model.baseline_accuracy,
+            model.budget,
+            model.stored_bytes(),
+            model.compression_ratio(),
+        );
+        let name = factory.net.spec.name.clone();
+        Ok((factory, name))
+    } else {
+        let name = args.get_or("network", "quickstart").to_string();
+        let net = load_or_random(args, &name)?;
+        let factory = EngineFactory {
+            backend: backend.into(),
+            batch,
+            net,
+            artifacts_dir: artifacts_dir(args),
+            native_threads: 1,
+            sparse_threshold: threshold,
+            artifact: None,
+        };
+        Ok((factory, name))
+    }
+}
+
 fn infer(args: &Args) -> Result<()> {
-    let name = args.get_or("network", "quickstart");
     let batch = args.get_usize("batch", 1)?;
     let backend = args.get_or("backend", "native");
-    let net = load_or_random(args, name)?;
-    let factory = EngineFactory {
-        backend: backend.into(),
-        batch,
-        net: net.clone(),
-        artifacts_dir: artifacts_dir(args),
-        native_threads: 1,
-        sparse_threshold: sparse_threshold(args)?,
-    };
+    let (factory, _name) = build_factory(args, backend, batch)?;
+    let s_in = factory.net.spec.inputs();
     let mut engine = factory.build()?;
     let mut rng = Xoshiro256::seed_from_u64(1);
-    let mut x = zynq_dnn::tensor::MatI::zeros(batch, net.spec.inputs());
+    let mut x = zynq_dnn::tensor::MatI::zeros(batch, s_in);
     for v in x.data.iter_mut() {
         *v = zynq_dnn::fixedpoint::quantize(rng.uniform(-1.0, 1.0));
     }
@@ -347,7 +470,6 @@ fn infer(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let name = args.get_or("network", "quickstart");
     let batch = args.get_usize("batch", 4)?;
     let backend = args.get_or("backend", "native");
     let requests = args.get_usize("requests", 64)?;
@@ -363,23 +485,16 @@ fn serve(args: &Args) -> Result<()> {
         // around ServerHandle; the sharded path has its own demo
         return serve_pool(args);
     }
-    let net = load_or_random(args, name)?;
-    let s_in = net.spec.inputs();
+    let (factory, name) = build_factory(args, backend, batch)?;
+    let s_in = factory.net.spec.inputs();
 
     let cfg = ServerConfig {
-        network: name.into(),
+        network: name.clone(),
         batch,
         batch_deadline_us: deadline,
         backend: backend.into(),
+        artifact: args.get("artifact").unwrap_or("").to_string(),
         ..Default::default()
-    };
-    let factory = EngineFactory {
-        backend: backend.into(),
-        batch,
-        net,
-        artifacts_dir: artifacts_dir(args),
-        native_threads: 1,
-        sparse_threshold: sparse_threshold(args)?,
     };
     let server = Server::start(&cfg, factory)?;
     eprintln!("serving {name} on {backend}, batch {batch}, deadline {deadline} µs");
@@ -407,7 +522,7 @@ fn serve(args: &Args) -> Result<()> {
     }
     let mut classes = vec![0usize; 10];
     for rx in rxs {
-        let resp = rx.recv()?;
+        let resp = rx.recv()??;
         if resp.class < classes.len() {
             classes[resp.class] += 1;
         }
@@ -429,7 +544,6 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 fn serve_pool(args: &Args) -> Result<()> {
-    let name = args.get_or("network", "quickstart");
     let batch = args.get_usize("batch", 4)?;
     let backend = args.get_or("backend", "native");
     let requests = args.get_usize("requests", 256)?;
@@ -438,11 +552,11 @@ fn serve_pool(args: &Args) -> Result<()> {
     let policy = args.get_or("policy", "round-robin");
     let promote = args.get_usize("promote-us", 20_000)? as u64;
     let every = args.get_usize("interactive-every", 5)?.max(1);
-    let net = load_or_random(args, name)?;
-    let s_in = net.spec.inputs();
+    let (factory, name) = build_factory(args, backend, batch)?;
+    let s_in = factory.net.spec.inputs();
 
     let cfg = ServerConfig {
-        network: name.into(),
+        network: name.clone(),
         batch,
         batch_deadline_us: deadline,
         workers,
@@ -450,15 +564,8 @@ fn serve_pool(args: &Args) -> Result<()> {
         bulk_promote_us: promote,
         queue_depth: requests.max(1024),
         backend: backend.into(),
+        artifact: args.get("artifact").unwrap_or("").to_string(),
         ..Default::default()
-    };
-    let factory = EngineFactory {
-        backend: backend.into(),
-        batch,
-        net,
-        artifacts_dir: artifacts_dir(args),
-        native_threads: 1,
-        sparse_threshold: sparse_threshold(args)?,
     };
     let serving = start_serving(&cfg, factory)?;
     eprintln!(
@@ -481,7 +588,7 @@ fn serve_pool(args: &Args) -> Result<()> {
         rxs.push(serving.submit(input, prio)?.1);
     }
     for rx in rxs {
-        rx.recv()?;
+        rx.recv()??;
     }
 
     match &serving {
@@ -619,6 +726,17 @@ fn run_bench(args: &Args) -> Result<()> {
         println!("{}", bench::calibrate::render(&bench::calibrate::run()));
         ran = true;
     }
+    if all || which == "compress" {
+        let c = bench::compress::run()?;
+        println!("{}", bench::compress::render(&c));
+        // deterministic gate (no wall-clock dependence): the budget must
+        // hold on every row and the artifact must round-trip bit-exact —
+        // run by the CI "compress smoke" job
+        if let Err(e) = bench::compress::check_shape(&c) {
+            bail!("compress shape check failed: {e}");
+        }
+        ran = true;
+    }
     if all || which == "slo" {
         let slo = bench::slo::run();
         println!("{}", bench::slo::render(&slo));
@@ -636,7 +754,7 @@ fn run_bench(args: &Args) -> Result<()> {
     if !ran {
         bail!(
             "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|\
-             ablation|sparse|calibrate|slo|all)"
+             ablation|sparse|calibrate|compress|slo|all)"
         );
     }
     Ok(())

@@ -53,7 +53,9 @@ impl NetworkWeights {
 }
 
 /// CRC-32 (IEEE), table-less bitwise variant — integrity only, not crypto.
-fn crc32(data: &[u8]) -> u32 {
+/// Shared with the `.rpz` compressed-artifact container
+/// ([`crate::compress::artifact`]).
+pub(crate) fn crc32(data: &[u8]) -> u32 {
     let mut crc = 0xFFFF_FFFFu32;
     for &b in data {
         crc ^= u32::from(b);
@@ -65,26 +67,31 @@ fn crc32(data: &[u8]) -> u32 {
     !crc
 }
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-struct Cursor<'a> {
-    data: &'a [u8],
-    pos: usize,
+/// Little bounds-checked byte reader, shared by the `.zdnw` and `.rpz`
+/// container loaders.
+pub(crate) struct Cursor<'a> {
+    pub(crate) data: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(self.pos + n <= self.data.len(), "truncated weight file");
         let s = &self.data[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 }
@@ -117,6 +124,9 @@ pub fn save_weights(path: &Path, nw: &NetworkWeights) -> Result<()> {
     f.write_all(MAGIC)?;
     f.write_all(&body)?;
     f.write_all(&crc.to_le_bytes())?;
+    // explicit: a flush error swallowed by BufWriter's Drop would report
+    // a truncated weight file as a successful save
+    f.flush().with_context(|| format!("flush {}", path.display()))?;
     Ok(())
 }
 

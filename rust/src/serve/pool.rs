@@ -22,7 +22,7 @@ use super::histogram::{ShardMetrics, ShardSnapshot};
 use super::shard::{shard_loop, ShardCommand, ShardConfig};
 use crate::config::ServerConfig;
 use crate::coordinator::engine::EngineFactory;
-use crate::coordinator::request::{Request, RequestId, Response};
+use crate::coordinator::request::{Reply, Request, RequestId, Response};
 use crate::coordinator::server::{Server, ServerHandle};
 
 /// The pool starter (mirrors [`Server`]).
@@ -58,8 +58,9 @@ pub struct PoolSnapshot {
 }
 
 impl ServePool {
-    pub fn start(config: &ServerConfig, factory: EngineFactory) -> Result<PoolHandle> {
+    pub fn start(config: &ServerConfig, mut factory: EngineFactory) -> Result<PoolHandle> {
         config.validate()?;
+        factory.apply_config_artifact(config)?;
         let policy = Policy::parse(&config.policy)?;
         let workers = config.workers;
         let input_width = factory.net.spec.inputs();
@@ -167,7 +168,7 @@ impl PoolHandle {
         &self,
         input: Vec<i32>,
         priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Response>)> {
+    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
         if self.shutting_down.load(Ordering::SeqCst) {
             bail!("pool is shutting down");
         }
@@ -212,10 +213,11 @@ impl PoolHandle {
         Ok((id, rrx))
     }
 
-    /// Convenience: submit and block for the response.
+    /// Convenience: submit and block for the response (shard engine
+    /// failures surface as errors here, not as hangs).
     pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
         let (_, rx) = self.submit(input, priority)?;
-        Ok(rx.recv()?)
+        Ok(rx.recv()??)
     }
 
     /// Aggregate + per-shard metrics.
@@ -303,7 +305,7 @@ impl Serving {
         &self,
         input: Vec<i32>,
         priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Response>)> {
+    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
         match self {
             Serving::Single(s) => s.submit(input),
             Serving::Pool(p) => p.submit(input, priority),
@@ -312,7 +314,7 @@ impl Serving {
 
     pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
         let (_, rx) = self.submit(input, priority)?;
-        Ok(rx.recv()?)
+        Ok(rx.recv()??)
     }
 
     pub fn shutdown(self) -> Result<()> {
@@ -340,6 +342,7 @@ mod tests {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             native_threads: 1,
             sparse_threshold: None,
+            artifact: None,
         }
     }
 
@@ -378,7 +381,7 @@ mod tests {
                 pairs.push((input.clone(), pool.submit(input, prio).unwrap()));
             }
             for (i, (input, (id, rx))) in pairs.into_iter().enumerate() {
-                let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
                 assert_eq!(resp.id, id);
                 let want = forward_q(&net, &MatI::from_vec(1, 64, input)).unwrap();
                 assert_eq!(resp.output, want.row(0), "request {i} ({policy})");
@@ -397,7 +400,7 @@ mod tests {
             .map(|i| pool.submit(rand_sample(i), Priority::Bulk).unwrap().1)
             .collect();
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
         }
         let snap = pool.snapshot();
         for (i, s) in snap.shards.iter().enumerate() {
@@ -434,7 +437,7 @@ mod tests {
         let rxs: Vec<_> = held.into_iter().map(|(_, rx)| rx).collect();
         pool.shutdown().unwrap();
         for rx in rxs {
-            assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+            assert!(rx.recv_timeout(Duration::from_secs(1)).unwrap().is_ok());
         }
     }
 

@@ -16,7 +16,7 @@ use anyhow::Result;
 use super::dispatch::{Priority, PriorityBatcher};
 use super::histogram::ShardMetrics;
 use crate::coordinator::engine::{Engine, EngineFactory};
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{InferError, Request, Response};
 use crate::exec::ExecPlan;
 use crate::nn::forward::argmax_rows;
 
@@ -40,9 +40,10 @@ pub(crate) struct ShardConfig {
 /// Deliberate mirror of `coordinator::server::dispatch_ready` over the
 /// priority batcher (that one stays priority-free so the single-engine
 /// server's semantics are untouched); a change to either execute/reply
-/// body — especially the infer-error path, which strands `in_flight` in
-/// both — must be made in the other too (ROADMAP: unify over a
-/// batch-view trait once a toolchain session can verify the refactor).
+/// body — including the infer-error path, which fails the batch and the
+/// backlog with error replies and releases their slots — must be made in
+/// the other too (ROADMAP: unify over a batch-view trait once a
+/// toolchain session can verify the refactor).
 fn run_ready(
     batcher: &mut PriorityBatcher,
     engine: &mut dyn Engine,
@@ -66,7 +67,26 @@ fn run_ready(
         metrics.record_batch(occupancy, batch.size, batch.promoted);
         let x = batch.padded_input(s_in);
         let t0 = Instant::now();
-        let y = engine.infer(&x)?;
+        let y = match engine.infer(&x) {
+            Ok(y) => y,
+            Err(e) => {
+                // shard engine broke: the loop dies with `e`, so fail
+                // this batch and the whole backlog with error replies,
+                // releasing their queue/in-flight slots instead of
+                // stranding clients (and pool backpressure) forever
+                let err = InferError(format!("infer failed: {e:#}"));
+                let mut stranded = batch.requests;
+                while let Some(b) = batcher.flush_next(Instant::now()) {
+                    stranded.extend(b.requests);
+                }
+                for (req, _) in stranded {
+                    depth.fetch_sub(1, Ordering::SeqCst);
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = req.reply.send(Err(err.clone()));
+                }
+                return Err(e);
+            }
+        };
         let compute_seconds = engine
             .simulated_seconds()
             .unwrap_or_else(|| t0.elapsed().as_secs_f64());
@@ -84,7 +104,7 @@ fn run_ready(
             metrics.record_request(priority, resp.queue_seconds, resp.total_seconds());
             depth.fetch_sub(1, Ordering::SeqCst);
             in_flight.fetch_sub(1, Ordering::SeqCst);
-            let _ = req.reply.send(resp);
+            let _ = req.reply.send(Ok(resp));
         }
     }
 }
@@ -101,25 +121,52 @@ pub(crate) fn shard_loop(
     depth: Arc<AtomicUsize>,
     in_flight: Arc<AtomicUsize>,
 ) -> Result<()> {
-    let mut engine = match shared_plan {
-        Some(plan) => factory.build_from_plan(plan),
-        None => factory.build()?,
-    };
-    let s_in = factory.net.spec.inputs();
-    let mut batcher = PriorityBatcher::new(cfg.batch, cfg.deadline, cfg.promote_after);
-
-    let mut drain = |batcher: &mut PriorityBatcher, force: bool| -> Result<()> {
-        run_ready(
-            batcher,
+    // engine construction happens inside the fallible block so its
+    // failure also reaches the drain below: the pool hands out its
+    // handle before the shard threads finish building their engines
+    let result = (|| -> Result<()> {
+        let mut engine = match shared_plan {
+            Some(plan) => factory.build_from_plan(plan),
+            None => factory.build()?,
+        };
+        let s_in = factory.net.spec.inputs();
+        let mut batcher = PriorityBatcher::new(cfg.batch, cfg.deadline, cfg.promote_after);
+        shard_commands(
+            &rx,
             engine.as_mut(),
+            &mut batcher,
             s_in,
-            force,
             &metrics,
             &depth,
             &in_flight,
         )
-    };
+    })();
+    if let Err(e) = &result {
+        // the shard died: run_ready already failed the batcher-resident
+        // requests, but commands still buffered in the channel would
+        // otherwise leak their depth/in-flight slots and leave clients
+        // with a bare disconnect — fail them the same way
+        let err = InferError(format!("shard stopped: {e:#}"));
+        while let Ok(cmd) = rx.try_recv() {
+            if let ShardCommand::Infer(req, _) = cmd {
+                depth.fetch_sub(1, Ordering::SeqCst);
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                let _ = req.reply.send(Err(err.clone()));
+            }
+        }
+    }
+    result
+}
 
+fn shard_commands(
+    rx: &mpsc::Receiver<ShardCommand>,
+    engine: &mut dyn Engine,
+    batcher: &mut PriorityBatcher,
+    s_in: usize,
+    metrics: &ShardMetrics,
+    depth: &AtomicUsize,
+    in_flight: &AtomicUsize,
+) -> Result<()> {
     loop {
         let timeout = batcher
             .time_to_deadline(Instant::now())
@@ -139,28 +186,96 @@ pub(crate) fn shard_loop(
                         }
                     }
                 }
-                drain(&mut batcher, false)?;
+                run_ready(batcher, engine, s_in, false, metrics, depth, in_flight)?;
                 if shutdown {
-                    drain(&mut batcher, true)?;
+                    run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
                     return Ok(());
                 }
             }
             Ok(ShardCommand::Shutdown) => {
-                drain(&mut batcher, true)?;
+                run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
                 // catch requests racing the shutdown signal
                 while let Ok(ShardCommand::Infer(req, prio)) = rx.try_recv() {
                     batcher.push(req, prio);
                 }
-                drain(&mut batcher, true)?;
+                run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
                 return Ok(());
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                drain(&mut batcher, false)?;
+                run_ready(batcher, engine, s_in, false, metrics, depth, in_flight)?;
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                drain(&mut batcher, true)?;
+                run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
                 return Ok(());
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::MatI;
+    use anyhow::bail;
+
+    struct FailingEngine;
+    impl Engine for FailingEngine {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+        fn batch(&self) -> usize {
+            4
+        }
+        fn infer(&mut self, _x: &MatI) -> Result<MatI> {
+            bail!("injected shard failure")
+        }
+    }
+
+    /// Mirror of the single-engine regression: a broken shard engine must
+    /// fail batch + backlog with error replies and release both counters.
+    #[test]
+    fn infer_error_fails_backlog_and_releases_counters() {
+        let metrics = ShardMetrics::new();
+        let depth = AtomicUsize::new(7);
+        let in_flight = AtomicUsize::new(7);
+        let mut batcher =
+            PriorityBatcher::new(4, Duration::from_secs(60), Duration::from_secs(60));
+        let mut rxs = Vec::new();
+        for i in 0..7u64 {
+            let (tx, rx) = mpsc::channel();
+            let prio = if i % 2 == 0 {
+                Priority::Interactive
+            } else {
+                Priority::Bulk
+            };
+            batcher.push(
+                crate::coordinator::request::Request {
+                    id: i,
+                    input: vec![i as i32; 4],
+                    queued_at: Instant::now(),
+                    reply: tx,
+                },
+                prio,
+            );
+            rxs.push(rx);
+        }
+        let mut engine = FailingEngine;
+        let err = run_ready(
+            &mut batcher,
+            &mut engine,
+            4,
+            true,
+            &metrics,
+            &depth,
+            &in_flight,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("injected"));
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
+            assert!(reply.is_err(), "request {i} must get an error reply");
+        }
+        assert_eq!(depth.load(Ordering::SeqCst), 0, "shard depth leaked");
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
     }
 }

@@ -250,24 +250,10 @@ fn decode_word(word: u64) -> [sparse::Tuple; TUPLES_PER_WORD] {
     out
 }
 
-/// Prune a quantized network's smallest weights to a target factor
-/// *post-hoc* (utility for benches that need a given q_prune without a
-/// full retraining run; accuracy-carrying paths use `train::prune`).
-pub fn prune_qnetwork(net: &QNetwork, q_prune: f64) -> QNetwork {
-    let mut pruned = net.clone();
-    for w in pruned.weights.iter_mut() {
-        let mut mags: Vec<i32> = w.data.iter().map(|v| v.abs()).collect();
-        mags.sort_unstable();
-        let idx = ((mags.len() as f64 * q_prune).floor() as usize).min(mags.len() - 1);
-        let delta = mags[idx];
-        for v in w.data.iter_mut() {
-            if v.abs() <= delta {
-                *v = 0;
-            }
-        }
-    }
-    pruned
-}
+/// Magnitude pruning moved to the compression subsystem so the simulator,
+/// the benches, and the budgeted search share one implementation
+/// (re-exported here for the many existing `sim::pruning` callers).
+pub use crate::compress::prune_qnetwork;
 
 #[cfg(test)]
 mod tests {

@@ -112,6 +112,12 @@ impl CsrMatI {
         }
     }
 
+    /// The raw CSR row-pointer array (`rows + 1` entries) — serializers
+    /// ([`crate::compress::artifact`]) write it verbatim.
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
     /// Row `o`'s (column indices, values).
     #[inline(always)]
     pub fn row(&self, o: usize) -> (&[u32], &[i32]) {

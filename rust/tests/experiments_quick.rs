@@ -33,6 +33,16 @@ fn ablation_quick() {
 }
 
 #[test]
+fn compress_budget_and_roundtrip_quick() {
+    quick();
+    // deterministic (seeded training + search, no wall-clock gates): every
+    // budget row must hold its accuracy budget and round-trip bit-exact
+    let b = bench::compress::run().unwrap();
+    bench::compress::check_shape(&b).unwrap();
+    assert_eq!(b.rows.len(), bench::compress::BUDGET_SWEEP.len());
+}
+
+#[test]
 fn sparse_plan_beats_dense_at_high_pruning_quick() {
     quick();
     // acceptance gate for the exec subsystem: sparse plan execution wins

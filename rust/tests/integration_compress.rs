@@ -1,0 +1,169 @@
+//! Integration: the compression pipeline end to end — artifact round-trips
+//! are bit-exact through the execution plans, the budgeted search honours
+//! its accuracy budget on random networks, and a compressed `.rpz` serves
+//! through the sharded pool with its embedded calibration (no `--threshold`).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::compress::{
+    self, accuracy_q, load_artifact, save_artifact, CompressedModel, EvalSet, SearchConfig,
+};
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::EngineFactory;
+use zynq_dnn::exec::{ExecPlan, KernelKind, PlanOptions};
+use zynq_dnn::nn::forward_q;
+use zynq_dnn::nn::quantize_matrix;
+use zynq_dnn::nn::spec::{quickstart, NetworkSpec};
+use zynq_dnn::serve::{Priority, ServePool};
+use zynq_dnn::tensor::{MatF, MatI};
+use zynq_dnn::util::prop::prop_check;
+use zynq_dnn::util::rng::Xoshiro256;
+
+fn tmp_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("zdnn_itest_rpz");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn rand_x(n: usize, cols: usize, seed: u64) -> MatI {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    quantize_matrix(&MatF::from_vec(
+        n,
+        cols,
+        (0..n * cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+    ))
+}
+
+fn rand_eval(n: usize, features: usize, classes: usize, seed: u64) -> EvalSet {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = rand_x(n, features, seed ^ 0x1234);
+    EvalSet {
+        x,
+        y: (0..n).map(|_| rng.index(classes)).collect(),
+    }
+}
+
+/// ISSUE property: save → load → `ExecPlan` output bit-equal to the
+/// in-memory pruned network, across random architectures, prune levels,
+/// and thresholds (i.e. across dense/CSR blob mixes).
+#[test]
+fn prop_artifact_roundtrip_bit_exact_through_plans() {
+    let dir = tmp_dir();
+    let mut case = 0u64;
+    prop_check(15, |g| {
+        case += 1;
+        let depth = g.usize(2..5);
+        let sizes: Vec<usize> = (0..depth).map(|_| g.usize(1..20)).collect();
+        let spec = NetworkSpec::new("prop", &sizes);
+        let seed = g.u64(0..=u64::MAX / 2);
+        let q = g.f64(0.0, 1.0);
+        let threshold = g.f64(0.0, 1.2);
+        let net = compress::prune_qnetwork(&random_qnet(&spec, seed), q);
+        let model = CompressedModel::from_network(&net, threshold, 0.0, 1.0, 1.0).unwrap();
+        let path = dir.join(format!("prop_{case}.rpz"));
+        save_artifact(&path, &model).unwrap();
+        let back = load_artifact(&path).unwrap();
+        let mut from_artifact = ExecPlan::compile_artifact(&back, 1).unwrap();
+        let mut from_memory = ExecPlan::compile_q(
+            &net,
+            &PlanOptions {
+                sparse_threshold: threshold,
+                threads: 1,
+            },
+        )
+        .unwrap();
+        let x = rand_x(g.usize(1..6), sizes[0], seed ^ 0xF);
+        from_artifact.run(&x).unwrap().data == from_memory.run(&x).unwrap().data
+    });
+}
+
+/// ISSUE property: the budgeted search never exceeds its accuracy budget
+/// on seeded random networks — re-measured independently, not read off
+/// the outcome struct.
+#[test]
+fn prop_budgeted_search_never_exceeds_budget() {
+    prop_check(10, |g| {
+        let depth = g.usize(2..4);
+        let sizes: Vec<usize> = (0..depth).map(|_| g.usize(2..16)).collect();
+        let spec = NetworkSpec::new("prop", &sizes);
+        let net = random_qnet(&spec, g.u64(0..=u64::MAX / 2));
+        let eval = rand_eval(
+            g.usize(10..40),
+            sizes[0],
+            *sizes.last().unwrap(),
+            g.u64(0..=u64::MAX / 2),
+        );
+        let ladder = vec![0.5, 0.8, 0.95];
+        let report = compress::sweep(&net, &eval, &ladder).unwrap();
+        let budget = g.f64(0.0, 0.2);
+        let outcome = compress::search(
+            &net,
+            &eval,
+            &report,
+            &SearchConfig {
+                budget,
+                ladder,
+            },
+        )
+        .unwrap();
+        let baseline = accuracy_q(&net, &eval).unwrap();
+        let measured = accuracy_q(&outcome.network, &eval).unwrap();
+        baseline - measured <= budget + 1e-9
+            && (outcome.compressed_accuracy - measured).abs() < 1e-12
+    });
+}
+
+/// Acceptance path: a compressed artifact serves end-to-end on the sharded
+/// pool with the calibration it embeds — kernels come from the stored CSR
+/// blobs, outputs match the golden forward of the reconstructed network.
+#[test]
+fn compressed_artifact_serves_end_to_end_on_the_pool() {
+    let net = compress::prune_qnetwork(&random_qnet(&quickstart(), 0xA1), 0.9);
+    let model = CompressedModel::from_network(&net, 0.75, 0.02, 0.9, 0.89).unwrap();
+    let path = tmp_dir().join("pool.rpz");
+    save_artifact(&path, &model).unwrap();
+
+    let factory = EngineFactory::for_artifact(
+        &path,
+        "native",
+        4,
+        zynq_dnn::runtime::default_artifacts_dir(),
+        1,
+    )
+    .unwrap();
+    // the embedded calibration picked the sparse kernels, no flag involved
+    assert!(factory
+        .compile_plan()
+        .unwrap()
+        .kernels()
+        .iter()
+        .all(|&k| k == KernelKind::SparseQ));
+    let golden = factory.net.clone();
+
+    let cfg = ServerConfig {
+        workers: 2,
+        batch: 4,
+        batch_deadline_us: 500,
+        artifact: path.display().to_string(),
+        ..Default::default()
+    };
+    let pool = ServePool::start(&cfg, factory).unwrap();
+    let mut pairs = Vec::new();
+    for i in 0..16u64 {
+        let input = rand_x(1, 64, 0xB0 + i).data;
+        let prio = if i % 4 == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Bulk
+        };
+        pairs.push((input.clone(), pool.submit(input, prio).unwrap().1));
+    }
+    for (i, (input, rx)) in pairs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let want = forward_q(&golden, &MatI::from_vec(1, 64, input)).unwrap();
+        assert_eq!(resp.output, want.row(0), "request {i}");
+    }
+    pool.shutdown().unwrap();
+}

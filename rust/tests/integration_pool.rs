@@ -22,6 +22,7 @@ fn factory(batch: usize) -> EngineFactory {
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
         native_threads: 1,
         sparse_threshold: None,
+        artifact: None,
     }
 }
 
@@ -71,8 +72,9 @@ fn prop_exactly_one_response_across_shard_counts() {
             }
             for (input, id, rx) in pairs {
                 let resp = match rx.recv_timeout(Duration::from_secs(10)) {
-                    Ok(r) => r,
-                    Err(_) => return false, // a lost request = starvation/drop
+                    Ok(Ok(r)) => r,
+                    // a lost or failed request = starvation/drop
+                    Ok(Err(_)) | Err(_) => return false,
                 };
                 if resp.id != id {
                     return false;
@@ -125,7 +127,7 @@ fn shutdown_drains_backlog_on_every_shard() {
     pool.shutdown().unwrap();
     for (i, rx) in rxs.into_iter().enumerate() {
         assert!(
-            rx.recv_timeout(Duration::from_secs(1)).is_ok(),
+            rx.recv_timeout(Duration::from_secs(1)).unwrap().is_ok(),
             "request {i} lost in shutdown drain"
         );
     }
@@ -148,6 +150,7 @@ fn interactive_tail_beats_bulk_under_backlog() {
         artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
         native_threads: 1,
         sparse_threshold: None,
+        artifact: None,
     };
     let s_in = f.net.spec.inputs();
     let pool = ServePool::start(
@@ -178,7 +181,7 @@ fn interactive_tail_beats_bulk_under_backlog() {
         })
         .collect();
     for (_, rx) in &rxs {
-        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
     }
     let agg = pool.snapshot().aggregate;
     assert_eq!(agg.interactive_requests, 100);

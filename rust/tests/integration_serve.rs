@@ -25,6 +25,7 @@ fn factory(backend: &str, batch: usize, net: zynq_dnn::nn::QNetwork) -> EngineFa
         artifacts_dir: default_artifacts_dir(),
         native_threads: 1,
         sparse_threshold: None,
+        artifact: None,
     }
 }
 
@@ -69,7 +70,7 @@ fn all_backends_serve_identical_outputs() {
             .collect();
         let outs: Vec<Vec<i32>> = rxs
             .into_iter()
-            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().output)
+            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap().output)
             .collect();
         match &reference {
             None => reference = Some(outs),
@@ -113,7 +114,7 @@ fn pjrt_served_accuracy_matches_direct_eval() {
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
         if resp.class == test.y[i] {
             correct += 1;
         }
@@ -139,7 +140,7 @@ fn metrics_reflect_served_traffic() {
         .map(|i| server.submit(i.clone()).unwrap().1)
         .collect();
     for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
     }
     let snap = server.metrics.snapshot();
     assert_eq!(snap.requests, 17);
@@ -160,7 +161,7 @@ fn sim_backend_reports_accelerator_time_not_wallclock() {
         .map(|i| server.submit(i.clone()).unwrap().1)
         .collect();
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         // quickstart on the simulated ZedBoard: hundreds of µs, far above
         // the host's wall-clock for the same tiny net — proves the sim
         // time is being reported
