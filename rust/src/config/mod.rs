@@ -37,6 +37,10 @@ pub struct ServerConfig {
     /// weights).  When set, the network and the calibrated sparse
     /// threshold both come from the artifact (see `compress`).
     pub artifact: String,
+    /// TCP listen address for the line-protocol frontend ("" = no
+    /// socket).  Works for any `workers` count: the frontend drives
+    /// whichever `SubmitTarget` the worker count selects.
+    pub listen: String,
 }
 
 impl Default for ServerConfig {
@@ -52,6 +56,7 @@ impl Default for ServerConfig {
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             artifact: String::new(),
+            listen: String::new(),
         }
     }
 }
@@ -103,6 +108,7 @@ impl ServerConfig {
                 "backend" => cfg.backend = v.clone(),
                 "artifacts_dir" => cfg.artifacts_dir = v.clone(),
                 "artifact" => cfg.artifact = v.clone(),
+                "listen" => cfg.listen = v.clone(),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -134,6 +140,9 @@ impl ServerConfig {
                 "artifact must be a .rpz compressed model, got {:?}",
                 self.artifact
             );
+        }
+        if !self.listen.is_empty() && !self.listen.contains(':') {
+            bail!("listen must be host:port (e.g. 127.0.0.1:7878), got {:?}", self.listen);
         }
         match self.backend.as_str() {
             "pjrt" | "native" | "native-sparse" | "sim-batch" | "sim-prune" => Ok(()),
@@ -219,6 +228,15 @@ mod tests {
         let cfg = ServerConfig::from_kv_text("artifact = \"models/har6.rpz\"\n").unwrap();
         assert_eq!(cfg.artifact, "models/har6.rpz");
         assert!(ServerConfig::from_kv_text("artifact = \"weights.zdnw\"").is_err());
+    }
+
+    #[test]
+    fn listen_key_parses_and_is_validated() {
+        let text = "listen = \"127.0.0.1:7878\"\nworkers = 4\n";
+        let cfg = ServerConfig::from_kv_text(text).unwrap();
+        assert_eq!(cfg.listen, "127.0.0.1:7878");
+        assert_eq!(cfg.workers, 4);
+        assert!(ServerConfig::from_kv_text("listen = \"notanaddress\"").is_err());
     }
 
     #[test]

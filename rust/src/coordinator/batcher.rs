@@ -16,6 +16,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::executor::{BatchSource, BatchView};
 use crate::coordinator::request::Request;
 
 /// A formed batch ready for the engine.
@@ -116,6 +117,52 @@ impl Batcher {
             requests,
             size: self.batch_size,
         }
+    }
+}
+
+/// The FIFO batch through the generic executor's eyes: no scheduling
+/// metadata, so the tag is unit.
+impl BatchView for Batch {
+    type Tag = ();
+
+    fn occupancy(&self) -> usize {
+        self.requests.len()
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn padded_input(&self, s_in: usize) -> crate::tensor::MatI {
+        Batch::padded_input(self, s_in)
+    }
+
+    fn into_requests(self) -> Vec<(Request, ())> {
+        self.requests.into_iter().map(|r| (r, ())).collect()
+    }
+}
+
+/// FIFO batch formation for the generic executor loop (the single-engine
+/// server's semantics: priorities don't exist, the deadline is the only
+/// flush trigger besides a full batch).
+impl BatchSource for Batcher {
+    type Tag = ();
+    type Batch = Batch;
+
+    fn push(&mut self, req: Request, _tag: ()) {
+        Batcher::push(self, req);
+    }
+
+    fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        Batcher::time_to_deadline(self, now)
+    }
+
+    fn poll(&mut self, now: Instant) -> Option<Batch> {
+        Batcher::poll(self, now)
+    }
+
+    fn flush_next(&mut self, _now: Instant) -> Option<Batch> {
+        Batcher::flush_next(self)
     }
 }
 

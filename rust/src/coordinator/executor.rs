@@ -1,0 +1,556 @@
+//! The one batch-execute/reply loop behind every serving path.
+//!
+//! The single-engine [`Server`](super::server::Server) and each pool
+//! [`Shard`](crate::serve::pool::ServePool) used to carry hand-mirrored
+//! copies of the same machinery: block on a command channel bounded by the
+//! batcher deadline, greedily drain the backlog so batch formation sees
+//! every queued request, execute ready batches, fan replies out per
+//! request, and — when `infer` fails — fail the batch, the batcher
+//! backlog, *and* the channel-resident requests with error replies while
+//! releasing every backpressure slot.  Those twin loops are now one
+//! generic loop over a trait pair:
+//!
+//! * [`BatchSource`] — batch formation.  The FIFO
+//!   [`Batcher`](super::batcher::Batcher) and the two-level
+//!   [`PriorityBatcher`](crate::serve::dispatch::PriorityBatcher) both
+//!   implement it; their batch types implement [`BatchView`].  The
+//!   source's `Tag` carries per-request scheduling metadata through the
+//!   loop (`()` for FIFO, [`Priority`](super::request::Priority) for the
+//!   two-level queue) so per-class metrics survive the unification.
+//! * [`ExecSink`] — where results land: metrics recording plus the
+//!   slot-accounting decrement (`in_flight` for the server; shard depth
+//!   *and* pool-wide `in_flight` for a shard).
+//!
+//! The invariant the error paths enforce, stated once instead of twice:
+//! **every request that enters the loop leaves it with exactly one reply,
+//! and releases exactly one slot, even when the engine is broken** — a
+//! dead engine must never strand clients or leak backpressure capacity.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::request::{InferError, Request, Response};
+use crate::nn::forward::argmax_rows;
+use crate::tensor::MatI;
+
+/// Commands flowing from a front door (server handle or pool) to an
+/// executor thread.  `T` is the scheduling tag riding with each request.
+pub enum ExecCommand<T> {
+    Infer(Request, T),
+    Shutdown,
+}
+
+/// A formed batch the executor can run.
+pub trait BatchView {
+    /// Per-request scheduling metadata (unit for FIFO, priority class for
+    /// the two-level queue).
+    type Tag;
+    /// Real requests in the batch (≤ `size`).
+    fn occupancy(&self) -> usize;
+    /// Hardware batch size (rows in the padded input).
+    fn size(&self) -> usize;
+    /// Bulk requests promoted by aging (0 where the concept doesn't exist).
+    fn promoted(&self) -> usize {
+        0
+    }
+    /// Padded input matrix (zeros beyond occupancy).
+    fn padded_input(&self, s_in: usize) -> MatI;
+    /// Surrender the requests, with their tags, in dispatch order.
+    fn into_requests(self) -> Vec<(Request, Self::Tag)>;
+}
+
+/// Batch formation: the executor pulls ready batches from this.
+pub trait BatchSource {
+    type Tag;
+    type Batch: BatchView<Tag = Self::Tag>;
+    fn push(&mut self, req: Request, tag: Self::Tag);
+    /// Time until the oldest pending request hits the flush deadline
+    /// (`None` when empty) — bounds the executor's channel wait.
+    fn time_to_deadline(&self, now: Instant) -> Option<Duration>;
+    /// Form the next batch if policy allows.
+    fn poll(&mut self, now: Instant) -> Option<Self::Batch>;
+    /// Form one batch regardless of the deadline (drain path); `None`
+    /// when nothing is pending.
+    fn flush_next(&mut self, now: Instant) -> Option<Self::Batch>;
+}
+
+/// Where execution results land: metrics plus slot accounting.
+pub trait ExecSink {
+    type Tag;
+    fn record_batch(&self, occupancy: usize, size: usize, promoted: usize);
+    fn record_request(&self, tag: &Self::Tag, queue_s: f64, total_s: f64);
+    /// Release one backpressure slot.  Called exactly once per request,
+    /// whether it got a response or an error reply.
+    fn release_slot(&self);
+}
+
+/// Execute every batch the source will currently form.  `force` drains the
+/// backlog one batch per iteration regardless of the deadline (shutdown
+/// path) — never flush the whole backlog in one go: executing only the
+/// head of that vector once dropped every later batch, losing its
+/// requests.  An `infer` error fails the batch *and* the remaining backlog
+/// with error replies (releasing their slots) before propagating, so a
+/// broken engine can never strand clients.
+pub fn execute_ready<S, K>(
+    source: &mut S,
+    sink: &K,
+    engine: &mut dyn Engine,
+    s_in: usize,
+    force: bool,
+) -> Result<()>
+where
+    S: BatchSource,
+    K: ExecSink<Tag = S::Tag>,
+{
+    loop {
+        let now = Instant::now();
+        let batch = if force {
+            source.flush_next(now)
+        } else {
+            source.poll(now)
+        };
+        let Some(batch) = batch else {
+            return Ok(());
+        };
+        let occupancy = batch.occupancy();
+        sink.record_batch(occupancy, batch.size(), batch.promoted());
+        let x = batch.padded_input(s_in);
+        let t0 = Instant::now();
+        let y = match engine.infer(&x) {
+            Ok(y) => y,
+            Err(e) => {
+                // the engine is broken mid-loop: fail this batch's
+                // requests AND everything still queued behind it (the
+                // loop is about to die with `e`, so nothing else will
+                // ever serve them) — every client gets an error reply
+                // and every slot is released, instead of stranding both
+                let err = InferError(format!("infer failed: {e:#}"));
+                let mut stranded = batch.into_requests();
+                while let Some(b) = source.flush_next(Instant::now()) {
+                    stranded.extend(b.into_requests());
+                }
+                for (req, _) in stranded {
+                    sink.release_slot();
+                    let _ = req.reply.send(Err(err.clone()));
+                }
+                return Err(e);
+            }
+        };
+        let compute_seconds = engine
+            .simulated_seconds()
+            .unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        let classes = argmax_rows(&y);
+        for (row, (req, tag)) in batch.into_requests().into_iter().enumerate() {
+            // wait time = from enqueue until the batch started executing
+            let queue_seconds = t0.duration_since(req.queued_at).as_secs_f64();
+            let resp = Response {
+                id: req.id,
+                output: y.row(row).to_vec(),
+                class: classes[row],
+                queue_seconds,
+                compute_seconds,
+                batch_occupancy: occupancy,
+            };
+            sink.record_request(&tag, resp.queue_seconds, resp.total_seconds());
+            sink.release_slot();
+            let _ = req.reply.send(Ok(resp));
+        }
+    }
+}
+
+/// The command loop: block on the channel bounded by the batcher deadline
+/// so partial batches flush, greedily drain the channel so batch formation
+/// sees the full backlog, and on shutdown force-drain everything.
+fn run_commands<S, K>(
+    rx: &mpsc::Receiver<ExecCommand<S::Tag>>,
+    engine: &mut dyn Engine,
+    source: &mut S,
+    sink: &K,
+    s_in: usize,
+) -> Result<()>
+where
+    S: BatchSource,
+    K: ExecSink<Tag = S::Tag>,
+{
+    loop {
+        let timeout = source
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(ExecCommand::Infer(req, tag)) => {
+                source.push(req, tag);
+                // greedily drain everything already queued so batch
+                // formation (and any priority rule) sees the full backlog
+                // — otherwise requests that aged while the engine was
+                // busy flush as singletons
+                let mut shutdown = false;
+                while let Ok(cmd) = rx.try_recv() {
+                    match cmd {
+                        ExecCommand::Infer(r, t) => source.push(r, t),
+                        ExecCommand::Shutdown => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+                execute_ready(source, sink, engine, s_in, false)?;
+                if shutdown {
+                    execute_ready(source, sink, engine, s_in, true)?;
+                    // requests can still be buffered *behind* the shutdown
+                    // command (submit raced it): serve them like the
+                    // direct-Shutdown branch does, or they'd be dropped
+                    // with a bare disconnect and leak their slots
+                    while let Ok(ExecCommand::Infer(req, tag)) = rx.try_recv() {
+                        source.push(req, tag);
+                    }
+                    execute_ready(source, sink, engine, s_in, true)?;
+                    return Ok(());
+                }
+            }
+            Ok(ExecCommand::Shutdown) => {
+                execute_ready(source, sink, engine, s_in, true)?;
+                // drain anything racing the shutdown signal
+                while let Ok(ExecCommand::Infer(req, tag)) = rx.try_recv() {
+                    source.push(req, tag);
+                }
+                execute_ready(source, sink, engine, s_in, true)?;
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                execute_ready(source, sink, engine, s_in, false)?;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                execute_ready(source, sink, engine, s_in, true)?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// The executor thread body shared by the single-engine server and every
+/// pool shard.  Engine construction happens inside the fallible block so
+/// its failure also reaches the drain below: front doors hand out their
+/// handles before the executor thread finishes building its engine, so
+/// clients can be mid-submit the moment `build` fails.
+pub fn executor_loop<S, K, F>(
+    rx: &mpsc::Receiver<ExecCommand<S::Tag>>,
+    build: F,
+    mut source: S,
+    sink: K,
+    s_in: usize,
+    label: &str,
+) -> Result<()>
+where
+    S: BatchSource,
+    K: ExecSink<Tag = S::Tag>,
+    F: FnOnce() -> Result<Box<dyn Engine>>,
+{
+    let result = (|| -> Result<()> {
+        let mut engine = build()?;
+        run_commands(rx, engine.as_mut(), &mut source, &sink, s_in)
+    })();
+    if let Err(e) = &result {
+        // the loop died: execute_ready already failed everything the
+        // source held, but requests still buffered in the command channel
+        // would otherwise leak their slots and leave clients with a bare
+        // disconnect — fail them the same way
+        let err = InferError(format!("{label} stopped: {e:#}"));
+        while let Ok(cmd) = rx.try_recv() {
+            if let ExecCommand::Infer(req, _) = cmd {
+                sink.release_slot();
+                let _ = req.reply.send(Err(err.clone()));
+            }
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::coordinator::batcher::Batcher;
+    use crate::coordinator::engine::EngineFactory;
+    use crate::coordinator::metrics::ServerMetrics;
+    use crate::coordinator::request::Priority;
+    use crate::coordinator::server::ServerSink;
+    use crate::nn::forward_q;
+    use crate::nn::spec::quickstart;
+    use crate::serve::dispatch::PriorityBatcher;
+    use crate::serve::histogram::ShardMetrics;
+    use crate::serve::shard::ShardSink;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Xoshiro256;
+
+    struct FailingEngine;
+    impl Engine for FailingEngine {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+        fn batch(&self) -> usize {
+            4
+        }
+        fn infer(&mut self, _x: &MatI) -> Result<MatI> {
+            anyhow::bail!("injected engine failure")
+        }
+    }
+
+    fn test_factory(batch: usize) -> EngineFactory {
+        EngineFactory {
+            backend: "native".into(),
+            batch,
+            net: random_qnet(&quickstart(), 50),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            native_threads: 1,
+            sparse_threshold: None,
+            artifact: None,
+        }
+    }
+
+    fn rand_sample(seed: u64) -> Vec<i32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..64)
+            .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    fn mk_request(id: u64) -> (Request, mpsc::Receiver<crate::coordinator::request::Reply>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                input: rand_sample(id),
+                queued_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    /// The ported single-engine regression: a broken engine must fail
+    /// every queued request with an error reply and release every
+    /// in-flight slot (used to strand both) — now tested once, on the
+    /// shared loop, through the server's sink.
+    #[test]
+    fn infer_error_fails_batch_and_backlog_on_fifo_source() {
+        let metrics = ServerMetrics::new();
+        let in_flight = AtomicUsize::new(9);
+        let mut batcher = Batcher::new(4, Duration::from_secs(60));
+        let mut rxs = Vec::new();
+        for i in 0..9u64 {
+            let (req, rx) = mk_request(i);
+            batcher.push(req);
+            rxs.push(rx);
+        }
+        let sink = ServerSink {
+            metrics: &metrics,
+            in_flight: &in_flight,
+        };
+        let err = execute_ready(&mut batcher, &sink, &mut FailingEngine, 64, true).unwrap_err();
+        assert!(err.to_string().contains("injected"));
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
+            let e = reply.expect_err("must be an error reply");
+            assert!(e.to_string().contains("injected engine failure"));
+        }
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
+    }
+
+    /// The ported shard regression: same error-drain contract through the
+    /// priority source and the shard sink, which must release *both*
+    /// counters (shard depth and pool-wide in-flight).
+    #[test]
+    fn infer_error_fails_batch_and_backlog_on_priority_source() {
+        let metrics = ShardMetrics::new();
+        let depth = AtomicUsize::new(7);
+        let in_flight = AtomicUsize::new(7);
+        let mut batcher =
+            PriorityBatcher::new(4, Duration::from_secs(60), Duration::from_secs(60));
+        let mut rxs = Vec::new();
+        for i in 0..7u64 {
+            let prio = if i % 2 == 0 {
+                Priority::Interactive
+            } else {
+                Priority::Bulk
+            };
+            let (req, rx) = mk_request(i);
+            batcher.push(req, prio);
+            rxs.push(rx);
+        }
+        let sink = ShardSink {
+            metrics: &metrics,
+            depth: &depth,
+            in_flight: &in_flight,
+        };
+        let err = execute_ready(&mut batcher, &sink, &mut FailingEngine, 64, true).unwrap_err();
+        assert!(err.to_string().contains("injected"));
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
+            assert!(reply.is_err(), "request {i} must get an error reply");
+        }
+        assert_eq!(depth.load(Ordering::SeqCst), 0, "shard depth leaked");
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
+    }
+
+    /// Regression (ported): the force path used to flush the whole backlog
+    /// in one go and execute only the first batch, silently dropping
+    /// requests 4.. here.
+    #[test]
+    fn forced_drain_serves_every_pending_batch() {
+        let factory = test_factory(4);
+        let mut engine = factory.build().unwrap();
+        let metrics = ServerMetrics::new();
+        let in_flight = AtomicUsize::new(11);
+        let mut batcher = Batcher::new(4, Duration::from_secs(60));
+        let mut rxs = Vec::new();
+        for i in 0..11u64 {
+            let (req, rx) = mk_request(i);
+            batcher.push(req);
+            rxs.push(rx);
+        }
+        let sink = ServerSink {
+            metrics: &metrics,
+            in_flight: &in_flight,
+        };
+        execute_ready(&mut batcher, &sink, engine.as_mut(), 64, true).unwrap();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert!(rx.try_recv().is_ok(), "request {i} lost on forced drain");
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.requests, 11);
+        assert_eq!(snap.batches, 3);
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0);
+    }
+
+    /// An engine that fails to *build* must still fail channel-resident
+    /// requests with error replies and release their slots (clients can
+    /// submit before the executor thread finishes constructing).
+    #[test]
+    fn build_failure_fails_channel_resident_requests() {
+        let (tx, rx) = mpsc::channel::<ExecCommand<()>>();
+        let metrics = ServerMetrics::new();
+        let in_flight = AtomicUsize::new(3);
+        let mut reply_rxs = Vec::new();
+        for i in 0..3u64 {
+            let (req, rrx) = mk_request(i);
+            tx.send(ExecCommand::Infer(req, ())).unwrap();
+            reply_rxs.push(rrx);
+        }
+        let err = executor_loop(
+            &rx,
+            || -> Result<Box<dyn Engine>> { anyhow::bail!("no engine") },
+            Batcher::new(4, Duration::from_millis(1)),
+            ServerSink {
+                metrics: &metrics,
+                in_flight: &in_flight,
+            },
+            64,
+            "engine",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no engine"));
+        for (i, rrx) in reply_rxs.into_iter().enumerate() {
+            let reply = rrx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
+            let e = reply.expect_err("must be an error reply");
+            assert!(e.to_string().contains("engine stopped"), "{e}");
+        }
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0);
+    }
+
+    /// Requests buffered *behind* a shutdown command (their submit raced
+    /// it) must still be served — not dropped with a bare disconnect and
+    /// a leaked slot (pre-existing bug in both deleted twin loops, fixed
+    /// once in the shared one).
+    #[test]
+    fn infer_racing_shutdown_in_channel_is_still_served() {
+        let (tx, rx) = mpsc::channel::<ExecCommand<()>>();
+        let metrics = ServerMetrics::new();
+        let in_flight = AtomicUsize::new(2);
+        let (req1, rx1) = mk_request(0);
+        let (req2, rx2) = mk_request(1);
+        tx.send(ExecCommand::Infer(req1, ())).unwrap();
+        tx.send(ExecCommand::Shutdown).unwrap();
+        tx.send(ExecCommand::Infer(req2, ())).unwrap();
+        let factory = test_factory(4);
+        executor_loop(
+            &rx,
+            move || factory.build(),
+            Batcher::new(4, Duration::from_secs(60)),
+            ServerSink {
+                metrics: &metrics,
+                in_flight: &in_flight,
+            },
+            64,
+            "engine",
+        )
+        .unwrap();
+        assert!(rx1.try_recv().unwrap().is_ok(), "request before shutdown lost");
+        assert!(rx2.try_recv().unwrap().is_ok(), "request racing shutdown lost");
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0);
+        assert_eq!(metrics.snapshot().requests, 2);
+    }
+
+    /// The generic loop must preserve the old hand-written single-engine
+    /// contract on random request streams: exactly one reply per request,
+    /// in submission order, with the golden output, every slot released,
+    /// and every request counted exactly once by the metrics.
+    #[test]
+    fn prop_generic_loop_matches_single_engine_contract() {
+        prop_check(25, |g| {
+            let batch = g.usize(1..6);
+            let n = g.usize(0..30);
+            let factory = test_factory(batch);
+            let net = factory.net.clone();
+            let mut engine = factory.build().unwrap();
+            let metrics = ServerMetrics::new();
+            let in_flight = AtomicUsize::new(n);
+            let mut batcher = Batcher::new(batch, Duration::from_secs(60));
+            let mut rxs = Vec::new();
+            let mut inputs = Vec::new();
+            for i in 0..n as u64 {
+                let (req, rx) = mk_request(i);
+                inputs.push(req.input.clone());
+                batcher.push(req);
+                rxs.push(rx);
+                // interleave non-forced dispatches mid-stream, as the
+                // live loop does between channel reads
+                if g.bool(0.3) {
+                    let sink = ServerSink {
+                        metrics: &metrics,
+                        in_flight: &in_flight,
+                    };
+                    execute_ready(&mut batcher, &sink, engine.as_mut(), 64, false).unwrap();
+                }
+            }
+            let sink = ServerSink {
+                metrics: &metrics,
+                in_flight: &in_flight,
+            };
+            execute_ready(&mut batcher, &sink, engine.as_mut(), 64, true).unwrap();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = match rx.try_recv() {
+                    Ok(Ok(r)) => r,
+                    _ => return false, // lost or failed
+                };
+                if resp.id != i as u64 {
+                    return false;
+                }
+                let x = MatI::from_vec(1, 64, inputs[i].clone());
+                let want = forward_q(&net, &x).unwrap();
+                if resp.output != want.row(0) {
+                    return false;
+                }
+                if rx.try_recv().is_ok() {
+                    return false; // a duplicate reply
+                }
+            }
+            in_flight.load(Ordering::SeqCst) == 0
+                && metrics.snapshot().requests == n as u64
+        });
+    }
+}

@@ -38,7 +38,9 @@ pub struct Snapshot {
     pub padded_batches: u64,
     pub rejected: u64,
     pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
     pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
     pub mean_queue_s: f64,
     /// Batch slots that carried real samples.
     pub occupied_slots: u64,
@@ -109,7 +111,9 @@ impl ServerMetrics {
             padded_batches: g.padded_batches,
             rejected: g.rejected,
             mean_latency_s: g.latency.mean_ns() / 1e9,
+            p50_latency_s: g.latency.percentile_ns(0.50) as f64 / 1e9,
             p95_latency_s: g.latency.percentile_ns(0.95) as f64 / 1e9,
+            p99_latency_s: g.latency.percentile_ns(0.99) as f64 / 1e9,
             mean_queue_s: g.queue.mean_ns() / 1e9,
             occupied_slots: g.occupied_slots,
             padded_slots: g.padded_slots,
@@ -146,6 +150,8 @@ mod tests {
         assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);
         assert!(s.mean_latency_s > 1.9e-3 && s.mean_latency_s < 2.1e-3);
         assert!(s.p95_latency_s >= s.mean_latency_s * 0.5);
+        assert!(s.p50_latency_s <= s.p95_latency_s);
+        assert!(s.p95_latency_s <= s.p99_latency_s);
     }
 
     #[test]

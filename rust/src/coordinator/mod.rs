@@ -2,8 +2,9 @@
 //! processing idea.  Inference requests arrive one sample at a time; the
 //! dynamic batcher groups them to the hardware batch size n (or flushes a
 //! padded partial batch at a deadline — the §6.3 throughput/latency
-//! trade-off, now at the serving level); an engine thread executes batches
-//! on one of the interchangeable backends:
+//! trade-off, now at the serving level); an engine thread runs the shared
+//! [`executor`] loop (the same loop every pool shard runs) over one of
+//! the interchangeable backends:
 //!
 //! * `pjrt`          — the AOT HLO artifacts on the PJRT CPU client (L1+L2),
 //! * `native`        — the rust Q7.8 engine on a compiled
@@ -20,6 +21,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod executor;
 pub mod metrics;
 pub mod net;
 pub mod request;
@@ -27,7 +29,8 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher};
 pub use engine::{Engine, EngineFactory};
+pub use executor::{BatchSource, BatchView, ExecCommand, ExecSink};
 pub use metrics::ServerMetrics;
-pub use net::{NetClient, NetFrontend};
-pub use request::{InferError, Reply, Request, RequestId, Response};
+pub use net::{NetClient, NetFrontend, StatsReport, SubmitTarget};
+pub use request::{InferError, Priority, Reply, Request, RequestId, Response};
 pub use server::{Server, ServerHandle};

@@ -1,27 +1,111 @@
-//! TCP serving frontend: a line-oriented protocol over `std::net` so the
-//! coordinator can be driven by external clients (tokio is not in the
-//! offline crate set; blocking accept + thread-per-connection is plenty at
-//! embedded-accelerator request rates).
+//! TCP serving frontend: a line-oriented protocol over `std::net` so any
+//! serving stack — the single-engine server *or* the sharded pool — can be
+//! driven by external clients (tokio is not in the offline crate set;
+//! blocking accept + thread-per-connection is plenty at
+//! embedded-accelerator request rates).  The frontend is generic over a
+//! [`SubmitTarget`], implemented by `ServerHandle`, `PoolHandle`, and the
+//! `Serving` delegator, so `serve --listen --workers N` exposes the pool's
+//! priority classes on the wire.
 //!
 //! Protocol (text, one request per line):
 //! ```text
-//! -> INFER <f32> <f32> ... <f32>\n        (s_0 values, real units)
+//! -> INFER <f32> <f32> ... <f32>\n        (s_0 values, real units;
+//!                                          Interactive priority)
+//! -> INFER BULK <f32> <f32> ... <f32>\n   (same, Bulk priority: fills
+//!                                          remaining batch slots, aging
+//!                                          promotes it — see serve::dispatch)
 //! <- OK <class> <queue_us> <compute_us> <occupancy> <q78 outputs...>\n
 //! <- ERR <message>\n
 //! -> STATS\n
-//! <- STATS requests=<n> batches=<n> rejected=<n> mean_latency_us=<x> ...\n
+//! <- STATS requests=<n> batches=<n> rejected=<n> mean_latency_us=<x>
+//!      p50_latency_us=<x> p95_latency_us=<x> p99_latency_us=<x>
+//!      occupancy=<x> promoted=<n> throughput=<x> workers=<n>\n
+//!      (one line; keys are identical for both stacks — a pool reports
+//!       its *merged* per-shard snapshot, a single engine reports
+//!       workers=1 and promoted=0)
 //! -> QUIT\n
 //! ```
+//!
+//! The priority class is deliberately a wire concept: `INFER` defaults to
+//! Interactive (a remote caller waiting on the reply is latency traffic),
+//! and batch jobs opt *down* to `INFER BULK`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::server::ServerHandle;
+use super::request::{Priority, Reply, RequestId, Response};
+
+/// Anything the TCP frontend can serve: submit a prioritized request,
+/// report the uniform STATS payload.  Implemented by the single-engine
+/// `ServerHandle` (which ignores the class), the sharded `PoolHandle`
+/// (which schedules on it and merges per-shard metrics), and `Serving`.
+pub trait SubmitTarget: Send + Sync {
+    /// Submit one quantized sample; returns the reply receiver or an
+    /// immediate backpressure error when the stack is saturated.
+    fn submit_prioritized(
+        &self,
+        input: Vec<i32>,
+        priority: Priority,
+    ) -> Result<(RequestId, mpsc::Receiver<Reply>)>;
+
+    /// The uniform STATS payload (a pool merges its shards here).
+    fn stats(&self) -> StatsReport;
+
+    /// Blocking convenience over [`Self::submit_prioritized`] (engine
+    /// failures surface as errors here, not as hangs).
+    fn infer_prioritized(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
+        let (_, rx) = self.submit_prioritized(input, priority)?;
+        Ok(rx.recv()??)
+    }
+}
+
+/// The uniform STATS payload every [`SubmitTarget`] renders: one
+/// `key=value` wire line whose keys are identical for the single engine
+/// and the pool, so clients parse one shape regardless of `--workers`.
+#[derive(Debug, Clone)]
+pub struct StatsReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Fraction of hardware batch slots carrying real samples.
+    pub occupancy: f64,
+    /// Bulk requests promoted by aging (0 on the single-engine server).
+    pub promoted: u64,
+    pub throughput: f64,
+    pub workers: usize,
+}
+
+impl StatsReport {
+    /// Render the wire line (without trailing newline).
+    pub fn render(&self) -> String {
+        format!(
+            "STATS requests={} batches={} rejected={} mean_latency_us={:.1} \
+             p50_latency_us={:.1} p95_latency_us={:.1} p99_latency_us={:.1} \
+             occupancy={:.3} promoted={} throughput={:.1} workers={}",
+            self.requests,
+            self.batches,
+            self.rejected,
+            self.mean_latency_s * 1e6,
+            self.p50_latency_s * 1e6,
+            self.p95_latency_s * 1e6,
+            self.p99_latency_s * 1e6,
+            self.occupancy,
+            self.promoted,
+            self.throughput,
+            self.workers
+        )
+    }
+}
 
 /// A running TCP frontend.
 pub struct NetFrontend {
@@ -30,10 +114,25 @@ pub struct NetFrontend {
     accept_thread: Option<thread::JoinHandle<()>>,
 }
 
+/// Join every finished connection handle in place (no allocation; order
+/// doesn't matter).  Without this the accept loop accumulated one handle
+/// per connection ever accepted — an unbounded leak on a long-lived
+/// frontend.
+fn reap_finished(conns: &mut Vec<thread::JoinHandle<()>>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
 impl NetFrontend {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve until
     /// [`NetFrontend::stop`].
-    pub fn start(addr: &str, server: Arc<ServerHandle>) -> Result<Self> {
+    pub fn start(addr: &str, target: Arc<dyn SubmitTarget>) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -44,24 +143,34 @@ impl NetFrontend {
             .spawn(move || {
                 let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
                 while !stop2.load(Ordering::SeqCst) {
+                    reap_finished(&mut conns);
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            let srv = server.clone();
+                            let t = target.clone();
+                            let flag = stop2.clone();
                             conns.push(
                                 thread::Builder::new()
                                     .name("zdnn-net-conn".into())
                                     .spawn(move || {
-                                        let _ = handle_connection(stream, &srv);
+                                        let _ = handle_connection(stream, t.as_ref(), &flag);
                                     })
                                     .expect("spawn conn"),
                             );
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            thread::sleep(std::time::Duration::from_millis(2));
+                            thread::sleep(Duration::from_millis(2));
                         }
-                        Err(_) => break,
+                        Err(_) => {
+                            // transient accept failures (EMFILE under a
+                            // connection flood, ECONNABORTED races) must
+                            // not kill the frontend: back off and retry
+                            // until stop() says otherwise
+                            thread::sleep(Duration::from_millis(50));
+                        }
                     }
                 }
+                // connection threads poll the stop flag between reads, so
+                // this join is bounded even with idle clients attached
                 for c in conns {
                     let _ = c.join();
                 }
@@ -94,34 +203,50 @@ impl Drop for NetFrontend {
     }
 }
 
-fn handle_connection(stream: TcpStream, server: &ServerHandle) -> Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    target: &dyn SubmitTarget,
+    stop: &AtomicBool,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // bounded reads: the connection polls the stop flag between timeouts,
+    // so NetFrontend::stop doesn't hang on idle clients
+    stream.set_read_timeout(Some(Duration::from_millis(50)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // peer closed
+        // a timeout can land mid-line; read_line keeps the partial bytes
+        // in `line`, so looping resumes the same line rather than
+        // corrupting the stream framing
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => {
+                    if line.is_empty() {
+                        return Ok(()); // peer closed
+                    }
+                    break; // final line without a trailing newline
+                }
+                Ok(_) => break,
+                Err(e) => {
+                    let kind = e.kind();
+                    let timed_out = kind == std::io::ErrorKind::WouldBlock
+                        || kind == std::io::ErrorKind::TimedOut;
+                    if !timed_out {
+                        return Err(e.into());
+                    }
+                    if stop.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+            }
         }
         let trimmed = line.trim_end();
         let reply = match parse_command(trimmed) {
             Ok(Command::Quit) => return Ok(()),
-            Ok(Command::Stats) => {
-                let s = server.metrics.snapshot();
-                format!(
-                    "STATS requests={} batches={} rejected={} mean_latency_us={:.1} \
-                     p95_latency_us={:.1} occupancy={:.3} throughput={:.1}",
-                    s.requests,
-                    s.batches,
-                    s.rejected,
-                    s.mean_latency_s * 1e6,
-                    s.p95_latency_s * 1e6,
-                    s.occupancy,
-                    s.throughput
-                )
-            }
-            Ok(Command::Infer(values)) => match infer(server, values) {
+            Ok(Command::Stats) => target.stats().render(),
+            Ok(Command::Infer(values, priority)) => match infer(target, values, priority) {
                 Ok(reply) => reply,
                 Err(e) => format!("ERR {e}"),
             },
@@ -133,18 +258,24 @@ fn handle_connection(stream: TcpStream, server: &ServerHandle) -> Result<()> {
 }
 
 enum Command {
-    Infer(Vec<f32>),
+    Infer(Vec<f32>, Priority),
     Stats,
     Quit,
 }
 
 fn parse_command(line: &str) -> Result<Command, String> {
-    let mut parts = line.split_ascii_whitespace();
+    let mut parts = line.split_ascii_whitespace().peekable();
     match parts.next() {
         Some("INFER") => {
+            let priority = if parts.peek().copied() == Some("BULK") {
+                parts.next();
+                Priority::Bulk
+            } else {
+                Priority::Interactive
+            };
             let values: Result<Vec<f32>, _> = parts.map(str::parse::<f32>).collect();
             match values {
-                Ok(v) if !v.is_empty() => Ok(Command::Infer(v)),
+                Ok(v) if !v.is_empty() => Ok(Command::Infer(v, priority)),
                 Ok(_) => Err("INFER needs at least one value".into()),
                 Err(e) => Err(format!("bad number: {e}")),
             }
@@ -156,10 +287,14 @@ fn parse_command(line: &str) -> Result<Command, String> {
     }
 }
 
-fn infer(server: &ServerHandle, values: Vec<f32>) -> Result<String, String> {
+fn infer(
+    target: &dyn SubmitTarget,
+    values: Vec<f32>,
+    priority: Priority,
+) -> Result<String, String> {
     let input = crate::fixedpoint::quantize_slice(&values);
-    let resp = server
-        .infer_blocking(input)
+    let resp = target
+        .infer_prioritized(input, priority)
         .map_err(|e| format!("{e:#}"))?;
     let mut out = format!(
         "OK {} {:.0} {:.0} {}",
@@ -179,6 +314,11 @@ fn infer(server: &ServerHandle, values: Vec<f32>) -> Result<String, String> {
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// A read error (e.g. a [`Self::set_timeout`] deadline) can leave a
+    /// partial reply buffered, desyncing request/reply framing — once
+    /// that happens every further round trip fails instead of silently
+    /// returning another request's answer.
+    poisoned: bool,
 }
 
 impl NetClient {
@@ -188,20 +328,43 @@ impl NetClient {
         Ok(Self {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            poisoned: false,
         })
     }
 
+    /// Bound every reply wait (hangs become errors — handy in tests that
+    /// must fail loudly instead of deadlocking on a starved request).  A
+    /// timed-out reply poisons the connection: reconnect to keep going.
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
     fn round_trip(&mut self, line: &str) -> Result<String> {
+        if self.poisoned {
+            anyhow::bail!("connection poisoned by an earlier read error; reconnect");
+        }
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut reply = String::new();
-        self.reader.read_line(&mut reply)?;
+        if let Err(e) = self.reader.read_line(&mut reply) {
+            self.poisoned = true;
+            return Err(e.into());
+        }
         Ok(reply.trim_end().to_string())
     }
 
-    /// Returns (class, q7.8 outputs).
+    /// Returns (class, q7.8 outputs) at Interactive priority.
     pub fn infer(&mut self, values: &[f32]) -> Result<(usize, Vec<i32>)> {
+        self.infer_with(values, Priority::Interactive)
+    }
+
+    /// Returns (class, q7.8 outputs) at an explicit priority class.
+    pub fn infer_with(&mut self, values: &[f32], priority: Priority) -> Result<(usize, Vec<i32>)> {
         let mut line = String::from("INFER");
+        if priority == Priority::Bulk {
+            line.push_str(" BULK");
+        }
         for v in values {
             line.push(' ');
             line.push_str(&v.to_string());
@@ -237,7 +400,8 @@ mod tests {
     use super::*;
     use crate::bench::random_qnet;
     use crate::config::ServerConfig;
-    use crate::coordinator::{EngineFactory, Server};
+    use crate::coordinator::engine::EngineFactory;
+    use crate::coordinator::server::{Server, ServerHandle};
     use crate::nn::spec::quickstart;
 
     fn start_stack() -> (NetFrontend, Arc<ServerHandle>, crate::nn::QNetwork) {
@@ -277,6 +441,22 @@ mod tests {
     }
 
     #[test]
+    fn bulk_priority_accepted_on_single_engine() {
+        // the single-engine server ignores the class, but the wire form
+        // must parse and serve identically
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        let values: Vec<f32> = (0..64).map(|i| (i as f32) / 100.0).collect();
+        let (_, bulk_out) = client.infer_with(&values, Priority::Bulk).unwrap();
+        let xq = crate::fixedpoint::quantize_slice(&values);
+        let x = crate::tensor::MatI::from_vec(1, 64, xq);
+        let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
+        assert_eq!(bulk_out, golden.row(0));
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
     fn stats_and_errors() {
         let (fe, _server, _) = start_stack();
         let mut client = NetClient::connect(&fe.addr()).unwrap();
@@ -285,6 +465,8 @@ mod tests {
         assert!(err.starts_with("ERR"));
         let err = client.round_trip("INFER notanumber").unwrap();
         assert!(err.starts_with("ERR"));
+        let err = client.round_trip("INFER BULK").unwrap();
+        assert!(err.starts_with("ERR"), "{err}");
         // wrong width is a server-side error
         let err = client.round_trip("INFER 1 2 3").unwrap();
         assert!(err.starts_with("ERR"), "{err}");
@@ -293,6 +475,9 @@ mod tests {
             .expect("valid infer after errors");
         let stats = client.stats().unwrap();
         assert!(stats.starts_with("STATS requests="), "{stats}");
+        assert!(stats.contains("workers=1"), "{stats}");
+        assert!(stats.contains("promoted=0"), "{stats}");
+        assert!(stats.contains("p99_latency_us="), "{stats}");
         client.quit().unwrap();
         fe.stop();
     }
@@ -317,5 +502,15 @@ mod tests {
         }
         assert!(server.metrics.snapshot().requests >= 15);
         fe.stop();
+    }
+
+    #[test]
+    fn stop_with_idle_connection_attached_returns() {
+        // regression for the accept-loop leak fix: stop() must not hang
+        // joining a connection whose client never sent QUIT
+        let (fe, _server, _) = start_stack();
+        let client = NetClient::connect(&fe.addr()).unwrap();
+        fe.stop(); // returns because connections poll the stop flag
+        drop(client);
     }
 }

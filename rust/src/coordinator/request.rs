@@ -3,8 +3,32 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
 /// Monotonic request identifier.
 pub type RequestId = u64;
+
+/// Request priority class.  An attribute of the *request*, not of any one
+/// scheduler: the pool's two-level queue schedules on it, the single-engine
+/// FIFO batcher ignores it, and the TCP frontend carries it on the wire
+/// (`INFER` = interactive, `INFER BULK` = bulk).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive: preempts Bulk at batch-formation time.
+    Interactive,
+    /// Throughput traffic: fills remaining batch slots; aging promotes it.
+    Bulk,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "interactive" | "i" => Ok(Priority::Interactive),
+            "bulk" | "b" => Ok(Priority::Bulk),
+            other => bail!("unknown priority {other:?} (interactive|bulk)"),
+        }
+    }
+}
 
 /// Engine failure surfaced to a waiting client.  One `infer` error fails
 /// every request in the batch, and `anyhow::Error` is not `Clone`, so the

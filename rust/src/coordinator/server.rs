@@ -16,15 +16,15 @@ use anyhow::{bail, Result};
 
 use super::batcher::Batcher;
 use super::engine::EngineFactory;
+use super::executor::{executor_loop, ExecCommand, ExecSink};
 use super::metrics::ServerMetrics;
-use super::request::{InferError, Reply, Request, RequestId, Response};
+use super::net::{StatsReport, SubmitTarget};
+use super::request::{Priority, Reply, Request, RequestId, Response};
 use crate::config::ServerConfig;
-use crate::nn::forward::argmax_rows;
 
-enum Command {
-    Infer(Request),
-    Shutdown,
-}
+/// Single-engine commands: no scheduling tag (the FIFO batcher ignores
+/// priorities by construction).
+type Command = ExecCommand<()>;
 
 /// Client handle: submit requests, read metrics, shut down.
 pub struct ServerHandle {
@@ -107,7 +107,7 @@ impl ServerHandle {
             queued_at: Instant::now(),
             reply: rtx,
         };
-        if self.tx.send(Command::Infer(req)).is_err() {
+        if self.tx.send(Command::Infer(req, ())).is_err() {
             // roll the reservation back (mirrors the pool): a dead engine
             // must report "engine thread gone" forever, not fill the
             // queue-depth accounting until it misreports "queue full"
@@ -120,8 +120,7 @@ impl ServerHandle {
     /// Convenience: submit and block for the response (engine failures
     /// surface as errors here, not as hangs).
     pub fn infer_blocking(&self, input: Vec<i32>) -> Result<Response> {
-        let (_, rx) = self.submit(input)?;
-        Ok(rx.recv()??)
+        self.infer_prioritized(input, Priority::Interactive)
     }
 
     /// Graceful shutdown: drains pending requests, joins the engine.
@@ -144,80 +143,60 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Execute every batch the batcher is ready to form.  `force` drains the
-/// backlog one batch at a time regardless of the deadline (shutdown path) —
-/// never take `flush_all` in one go here: executing only the head of that
-/// vector used to drop every later batch, losing its requests.  An
-/// `infer` error fails the batch *and* the remaining backlog with error
-/// replies (releasing their in-flight slots) before propagating, so a
-/// broken engine can never strand clients.
-fn dispatch_ready(
-    batcher: &mut Batcher,
-    engine: &mut dyn super::engine::Engine,
-    s_in: usize,
-    force: bool,
-    metrics: &ServerMetrics,
-    in_flight: &AtomicUsize,
-) -> Result<()> {
-    loop {
-        let batch = if force {
-            match batcher.flush_next() {
-                Some(b) => b,
-                None => return Ok(()),
-            }
-        } else {
-            match batcher.poll(Instant::now()) {
-                Some(b) => b,
-                None => return Ok(()),
-            }
-        };
-        let occupancy = batch.occupancy();
-        metrics.record_batch(occupancy, batch.size);
-        let x = batch.padded_input(s_in);
-        let t0 = Instant::now();
-        let y = match engine.infer(&x) {
-            Ok(y) => y,
-            Err(e) => {
-                // the engine is broken mid-loop: fail this batch's
-                // requests AND everything still queued behind it (the
-                // loop is about to die with `e`, so nothing else will
-                // ever serve them) — every client gets an error reply
-                // and every in-flight slot is released, instead of the
-                // old behavior of stranding both
-                let err = InferError(format!("infer failed: {e:#}"));
-                let mut stranded = batch.requests;
-                while let Some(b) = batcher.flush_next() {
-                    stranded.extend(b.requests);
-                }
-                for req in stranded {
-                    in_flight.fetch_sub(1, Ordering::SeqCst);
-                    let _ = req.reply.send(Err(err.clone()));
-                }
-                return Err(e);
-            }
-        };
-        let compute_seconds = engine
-            .simulated_seconds()
-            .unwrap_or_else(|| t0.elapsed().as_secs_f64());
-        let classes = argmax_rows(&y);
-        for (row, req) in batch.requests.into_iter().enumerate() {
-            // wait time = from enqueue until the batch started executing
-            let queue_seconds = t0.duration_since(req.queued_at).as_secs_f64();
-            let resp = Response {
-                id: req.id,
-                output: y.row(row).to_vec(),
-                class: classes[row],
-                queue_seconds,
-                compute_seconds,
-                batch_occupancy: occupancy,
-            };
-            metrics.record_request(resp.queue_seconds, resp.total_seconds());
-            in_flight.fetch_sub(1, Ordering::SeqCst);
-            let _ = req.reply.send(Ok(resp));
+/// The TCP frontend drives a single-engine server exactly like a pool;
+/// the FIFO batcher simply ignores the priority class.
+impl SubmitTarget for ServerHandle {
+    fn submit_prioritized(
+        &self,
+        input: Vec<i32>,
+        _priority: Priority,
+    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
+        self.submit(input)
+    }
+
+    fn stats(&self) -> StatsReport {
+        let s = self.metrics.snapshot();
+        StatsReport {
+            requests: s.requests,
+            batches: s.batches,
+            rejected: s.rejected,
+            mean_latency_s: s.mean_latency_s,
+            p50_latency_s: s.p50_latency_s,
+            p95_latency_s: s.p95_latency_s,
+            p99_latency_s: s.p99_latency_s,
+            occupancy: s.occupancy,
+            promoted: 0,
+            throughput: s.throughput,
+            workers: 1,
         }
     }
 }
 
+/// The single-engine server's face of the generic executor: one FIFO
+/// in-flight counter and the classic [`ServerMetrics`] (no priority
+/// classes, so the batch's `promoted` count is structurally zero).
+pub(crate) struct ServerSink<'a> {
+    pub(crate) metrics: &'a ServerMetrics,
+    pub(crate) in_flight: &'a AtomicUsize,
+}
+
+impl ExecSink for ServerSink<'_> {
+    type Tag = ();
+
+    fn record_batch(&self, occupancy: usize, size: usize, _promoted: usize) {
+        self.metrics.record_batch(occupancy, size);
+    }
+
+    fn record_request(&self, _tag: &(), queue_s: f64, total_s: f64) {
+        self.metrics.record_request(queue_s, total_s);
+    }
+
+    fn release_slot(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The engine thread body: the shared executor loop over a FIFO batcher.
 fn engine_loop(
     rx: mpsc::Receiver<Command>,
     factory: EngineFactory,
@@ -226,84 +205,18 @@ fn engine_loop(
     metrics: Arc<ServerMetrics>,
     in_flight: Arc<AtomicUsize>,
 ) -> Result<()> {
-    // engine construction happens inside the fallible block so its
-    // failure also reaches the drain below: clients can submit the
-    // moment Server::start returns, before the engine finishes building
-    let result = (|| -> Result<()> {
-        let mut engine = factory.build()?;
-        let s_in = factory.net.spec.inputs();
-        let mut batcher = Batcher::new(batch_size, deadline);
-        serve_commands(&rx, engine.as_mut(), &mut batcher, s_in, &metrics, &in_flight)
-    })();
-    if let Err(e) = &result {
-        // the loop died: dispatch_ready already failed everything the
-        // batcher held, but requests still buffered in the command
-        // channel would otherwise leak their in-flight slots and leave
-        // clients with a bare disconnect — fail them the same way
-        let err = InferError(format!("engine stopped: {e:#}"));
-        while let Ok(cmd) = rx.try_recv() {
-            if let Command::Infer(req) = cmd {
-                in_flight.fetch_sub(1, Ordering::SeqCst);
-                let _ = req.reply.send(Err(err.clone()));
-            }
-        }
-    }
-    result
-}
-
-fn serve_commands(
-    rx: &mpsc::Receiver<Command>,
-    engine: &mut dyn super::engine::Engine,
-    batcher: &mut Batcher,
-    s_in: usize,
-    metrics: &ServerMetrics,
-    in_flight: &AtomicUsize,
-) -> Result<()> {
-    loop {
-        // wait bounded by the batcher's deadline so partial batches flush
-        let timeout = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Command::Infer(req)) => {
-                batcher.push(req);
-                // greedily drain everything already queued so batch
-                // formation sees the full backlog (otherwise requests that
-                // aged while the engine was busy flush as singletons)
-                let mut shutdown = false;
-                while let Ok(cmd) = rx.try_recv() {
-                    match cmd {
-                        Command::Infer(r) => batcher.push(r),
-                        Command::Shutdown => {
-                            shutdown = true;
-                            break;
-                        }
-                    }
-                }
-                dispatch_ready(batcher, engine, s_in, false, metrics, in_flight)?;
-                if shutdown {
-                    dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
-                    return Ok(());
-                }
-            }
-            Ok(Command::Shutdown) => {
-                dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
-                // drain anything racing the shutdown signal
-                while let Ok(Command::Infer(req)) = rx.try_recv() {
-                    batcher.push(req);
-                }
-                dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
-                return Ok(());
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                dispatch_ready(batcher, engine, s_in, false, metrics, in_flight)?;
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                dispatch_ready(batcher, engine, s_in, true, metrics, in_flight)?;
-                return Ok(());
-            }
-        }
-    }
+    let s_in = factory.net.spec.inputs();
+    executor_loop(
+        &rx,
+        move || factory.build(),
+        Batcher::new(batch_size, deadline),
+        ServerSink {
+            metrics: &*metrics,
+            in_flight: &*in_flight,
+        },
+        s_in,
+        "engine",
+    )
 }
 
 #[cfg(test)]
@@ -450,75 +363,7 @@ mod tests {
         }
     }
 
-    /// A broken engine must fail every queued request with an error reply
-    /// and release every in-flight slot (regression: both used to strand).
-    #[test]
-    fn infer_error_fails_batch_and_backlog_without_leaking_slots() {
-        struct FailingEngine;
-        impl super::super::engine::Engine for FailingEngine {
-            fn name(&self) -> &'static str {
-                "failing"
-            }
-            fn batch(&self) -> usize {
-                4
-            }
-            fn infer(&mut self, _x: &MatI) -> Result<MatI> {
-                anyhow::bail!("injected engine failure")
-            }
-        }
-        let metrics = ServerMetrics::new();
-        let in_flight = AtomicUsize::new(9);
-        let mut batcher = Batcher::new(4, Duration::from_secs(60));
-        let mut rxs = Vec::new();
-        for i in 0..9u64 {
-            let (tx, rx) = mpsc::channel();
-            batcher.push(Request {
-                id: i,
-                input: rand_sample(i),
-                queued_at: Instant::now(),
-                reply: tx,
-            });
-            rxs.push(rx);
-        }
-        let mut engine = FailingEngine;
-        let err = dispatch_ready(&mut batcher, &mut engine, 64, true, &metrics, &in_flight)
-            .unwrap_err();
-        assert!(err.to_string().contains("injected"));
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
-            let e = reply.expect_err("must be an error reply");
-            assert!(e.to_string().contains("injected engine failure"));
-        }
-        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
-    }
-
-    #[test]
-    fn forced_dispatch_serves_every_pending_batch() {
-        // regression: the force path used to flush_all() and execute only
-        // the first batch, silently dropping requests 4.. here
-        let factory = test_factory(4);
-        let mut engine = factory.build().unwrap();
-        let metrics = ServerMetrics::new();
-        let in_flight = AtomicUsize::new(11);
-        let mut batcher = Batcher::new(4, Duration::from_secs(60));
-        let mut rxs = Vec::new();
-        for i in 0..11u64 {
-            let (tx, rx) = mpsc::channel();
-            batcher.push(Request {
-                id: i,
-                input: rand_sample(i),
-                queued_at: Instant::now(),
-                reply: tx,
-            });
-            rxs.push(rx);
-        }
-        dispatch_ready(&mut batcher, engine.as_mut(), 64, true, &metrics, &in_flight).unwrap();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            assert!(rx.try_recv().is_ok(), "request {i} lost on forced drain");
-        }
-        let snap = metrics.snapshot();
-        assert_eq!(snap.requests, 11);
-        assert_eq!(snap.batches, 3);
-        assert_eq!(in_flight.load(Ordering::SeqCst), 0);
-    }
+    // the failing-engine and forced-drain regressions moved to
+    // `coordinator::executor::tests`: the error-drain path is one shared
+    // body now, tested once against both batcher flavors
 }

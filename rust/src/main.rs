@@ -7,7 +7,9 @@
 //!                                (sensitivity sweep + per-layer search)
 //!   infer                        run one inference through a backend
 //!   serve                        demo serving loop with the dynamic batcher
-//!                                (delegates to the sharded pool when --workers > 1)
+//!                                (delegates to the sharded pool when --workers > 1;
+//!                                --listen exposes either stack over TCP with
+//!                                INFER / INFER BULK priorities on the wire)
 //!   serve-pool                   sharded pool demo: mixed-priority traffic,
 //!                                per-shard + aggregate metrics
 //!   sim                          simulate one network on both accelerators
@@ -106,7 +108,8 @@ const GLOBAL_FLAGS: &[FlagSpec] = &[
     FlagSpec {
         name: "listen",
         takes_value: true,
-        help: "serve: expose the TCP line protocol on this address (e.g. 127.0.0.1:7878)",
+        help: "serve: expose the TCP line protocol on this address (e.g. 127.0.0.1:7878); \
+               with --workers N the socket fronts the sharded pool",
     },
     FlagSpec {
         name: "workers",
@@ -475,14 +478,42 @@ fn serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 64)?;
     let deadline = args.get_usize("deadline-us", 2000)? as u64;
     let workers = args.get_usize("workers", 1)?;
-    if workers > 1 {
-        if args.get("listen").is_some() {
-            // NetFrontend drives ServerHandle only — refuse loudly rather
-            // than silently serving a local demo without the socket
-            bail!("--listen requires --workers 1 (the TCP frontend is not pool-aware yet)");
+
+    if let Some(listen) = args.get("listen") {
+        // TCP mode: the frontend drives whichever SubmitTarget the worker
+        // count selects — single engine or sharded pool — with the
+        // Interactive/Bulk classes on the wire; block until Ctrl-C
+        let policy = args.get_or("policy", "round-robin");
+        let promote = args.get_usize("promote-us", 20_000)? as u64;
+        let (factory, name) = build_factory(args, backend, batch)?;
+        let cfg = ServerConfig {
+            network: name.clone(),
+            batch,
+            batch_deadline_us: deadline,
+            workers,
+            policy: policy.into(),
+            bulk_promote_us: promote,
+            backend: backend.into(),
+            artifact: args.get("artifact").unwrap_or("").to_string(),
+            listen: listen.to_string(),
+            ..Default::default()
+        };
+        let serving = std::sync::Arc::new(start_serving(&cfg, factory)?);
+        eprintln!(
+            "serving {name} on {backend}, {} worker(s), batch {batch}, deadline {deadline} µs",
+            serving.workers()
+        );
+        let fe = zynq_dnn::coordinator::NetFrontend::start(&cfg.listen, serving)?;
+        eprintln!(
+            "listening on {} — protocol: INFER [BULK] <f32>... | STATS | QUIT",
+            fe.addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
         }
-        // the single-engine demo below (and the TCP frontend) are built
-        // around ServerHandle; the sharded path has its own demo
+    }
+    if workers > 1 {
+        // no socket requested: the sharded path has its own local demo
         return serve_pool(args);
     }
     let (factory, name) = build_factory(args, backend, batch)?;
@@ -498,19 +529,6 @@ fn serve(args: &Args) -> Result<()> {
     };
     let server = Server::start(&cfg, factory)?;
     eprintln!("serving {name} on {backend}, batch {batch}, deadline {deadline} µs");
-
-    if let Some(listen) = args.get("listen") {
-        // TCP mode: block on the line-protocol frontend until Ctrl-C
-        let server = std::sync::Arc::new(server);
-        let fe = zynq_dnn::coordinator::NetFrontend::start(listen, server.clone())?;
-        eprintln!(
-            "listening on {} — protocol: INFER <f32>... | STATS | QUIT",
-            fe.addr()
-        );
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
-        }
-    }
 
     let mut rng = Xoshiro256::seed_from_u64(2);
     let mut rxs = Vec::new();

@@ -31,27 +31,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::executor::{BatchSource, BatchView};
 use crate::coordinator::request::Request;
 use crate::tensor::MatI;
 
-/// Request priority class.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Priority {
-    /// Latency-sensitive: preempts Bulk at batch-formation time.
-    Interactive,
-    /// Throughput traffic: fills remaining batch slots; aging promotes it.
-    Bulk,
-}
-
-impl Priority {
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "interactive" | "i" => Ok(Priority::Interactive),
-            "bulk" | "b" => Ok(Priority::Bulk),
-            other => bail!("unknown priority {other:?} (interactive|bulk)"),
-        }
-    }
-}
+// `Priority` is an attribute of the request itself (the TCP frontend
+// carries it on the wire), so it lives with the request types; re-exported
+// here because the two-level queue is its main consumer.
+pub use crate::coordinator::request::Priority;
 
 /// Shard-selection policy for the pool front door.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -205,6 +192,57 @@ impl PriorityBatcher {
             size: self.batch_size,
             promoted,
         }
+    }
+}
+
+/// The priority batch through the generic executor's eyes: the tag is the
+/// request's [`Priority`] class, so the shard's per-class metrics survive
+/// the unified loop.
+impl BatchView for PrioBatch {
+    type Tag = Priority;
+
+    fn occupancy(&self) -> usize {
+        self.requests.len()
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn promoted(&self) -> usize {
+        self.promoted
+    }
+
+    fn padded_input(&self, s_in: usize) -> MatI {
+        PrioBatch::padded_input(self, s_in)
+    }
+
+    fn into_requests(self) -> Vec<(Request, Priority)> {
+        self.requests
+    }
+}
+
+/// Two-level batch formation for the generic executor loop (interactive
+/// preempts bulk; aging promotes — the batch-formation rules above are
+/// untouched, only the execute/reply machinery is shared).
+impl BatchSource for PriorityBatcher {
+    type Tag = Priority;
+    type Batch = PrioBatch;
+
+    fn push(&mut self, req: Request, tag: Priority) {
+        PriorityBatcher::push(self, req, tag);
+    }
+
+    fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        PriorityBatcher::time_to_deadline(self, now)
+    }
+
+    fn poll(&mut self, now: Instant) -> Option<PrioBatch> {
+        PriorityBatcher::poll(self, now)
+    }
+
+    fn flush_next(&mut self, now: Instant) -> Option<PrioBatch> {
+        PriorityBatcher::flush_next(self, now)
     }
 }
 

@@ -19,11 +19,17 @@
 //!   batch formation; aging promotes bulk so nothing starves), and the
 //!   shard-selection [`Policy`] (round-robin, least-loaded,
 //!   power-of-two-choices).
-//! * [`shard`] — the worker loop: one engine + one priority batcher.
+//! * [`shard`] — one worker: the generic
+//!   [`executor_loop`](crate::coordinator::executor::executor_loop)
+//!   (shared with the single-engine server) instantiated over a priority
+//!   batcher and the shard's metrics/slot sink.
 //! * [`pool`] — [`ServePool`]/[`PoolHandle`]: the front door with
 //!   pool-wide backpressure, plus [`start_serving`], which delegates
 //!   between the classic single-engine server and the pool on
-//!   `ServerConfig::workers`.
+//!   `ServerConfig::workers`.  Both are
+//!   [`SubmitTarget`](crate::coordinator::net::SubmitTarget)s, so the TCP
+//!   frontend (`serve --listen`) serves either stack with the
+//!   Interactive/Bulk classes on the wire.
 //! * [`histogram`] — per-shard latency recorders (p50/p95/p99), batch
 //!   occupancy, padded-slot waste, and per-priority breakdowns, mergeable
 //!   into a pool aggregate.

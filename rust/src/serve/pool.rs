@@ -22,6 +22,7 @@ use super::histogram::{ShardMetrics, ShardSnapshot};
 use super::shard::{shard_loop, ShardCommand, ShardConfig};
 use crate::config::ServerConfig;
 use crate::coordinator::engine::EngineFactory;
+use crate::coordinator::net::{StatsReport, SubmitTarget};
 use crate::coordinator::request::{Reply, Request, RequestId, Response};
 use crate::coordinator::server::{Server, ServerHandle};
 
@@ -45,6 +46,9 @@ pub struct PoolHandle {
     in_flight: Arc<AtomicUsize>,
     queue_depth: usize,
     next_id: AtomicU64,
+    /// Submissions bounced by pool-wide backpressure (the pool-level twin
+    /// of `ServerMetrics::rejected`, surfaced over the STATS wire line).
+    rejected: AtomicU64,
     shutting_down: AtomicBool,
     /// Input width every shard's engine expects (validated at submit).
     pub input_width: usize,
@@ -55,6 +59,8 @@ pub struct PoolHandle {
 pub struct PoolSnapshot {
     pub aggregate: ShardSnapshot,
     pub shards: Vec<ShardSnapshot>,
+    /// Submissions bounced by pool-wide backpressure.
+    pub rejected: u64,
 }
 
 impl ServePool {
@@ -106,6 +112,7 @@ impl ServePool {
             in_flight,
             queue_depth: config.queue_depth,
             next_id: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             input_width,
         })
@@ -179,6 +186,7 @@ impl PoolHandle {
         let mut cur = self.in_flight.load(Ordering::SeqCst);
         loop {
             if cur >= self.queue_depth {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
                 bail!("pool queue full ({cur} in flight)");
             }
             match self.in_flight.compare_exchange(
@@ -216,8 +224,7 @@ impl PoolHandle {
     /// Convenience: submit and block for the response (shard engine
     /// failures surface as errors here, not as hangs).
     pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
-        let (_, rx) = self.submit(input, priority)?;
-        Ok(rx.recv()??)
+        self.infer_prioritized(input, priority)
     }
 
     /// Aggregate + per-shard metrics.
@@ -225,6 +232,7 @@ impl PoolHandle {
         PoolSnapshot {
             aggregate: ShardMetrics::merged(self.shards.iter().map(|s| s.metrics.as_ref())),
             shards: self.shards.iter().map(|s| s.metrics.snapshot()).collect(),
+            rejected: self.rejected.load(Ordering::Relaxed),
         }
     }
 
@@ -249,6 +257,36 @@ impl PoolHandle {
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+}
+
+/// The TCP frontend drives the pool directly: priority classes arrive
+/// from the wire, and STATS reports the *merged* per-shard snapshot.
+impl SubmitTarget for PoolHandle {
+    fn submit_prioritized(
+        &self,
+        input: Vec<i32>,
+        priority: Priority,
+    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
+        self.submit(input, priority)
+    }
+
+    fn stats(&self) -> StatsReport {
+        let snap = self.snapshot();
+        let a = &snap.aggregate;
+        StatsReport {
+            requests: a.requests,
+            batches: a.batches,
+            rejected: snap.rejected,
+            mean_latency_s: a.mean_latency_s,
+            p50_latency_s: a.p50_latency_s,
+            p95_latency_s: a.p95_latency_s,
+            p99_latency_s: a.p99_latency_s,
+            occupancy: a.occupancy,
+            promoted: a.promoted,
+            throughput: a.throughput,
+            workers: self.workers(),
         }
     }
 }
@@ -313,14 +351,32 @@ impl Serving {
     }
 
     pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
-        let (_, rx) = self.submit(input, priority)?;
-        Ok(rx.recv()??)
+        self.infer_prioritized(input, priority)
     }
 
     pub fn shutdown(self) -> Result<()> {
         match self {
             Serving::Single(s) => s.shutdown(),
             Serving::Pool(p) => p.shutdown(),
+        }
+    }
+}
+
+/// `serve --listen` hands the whole `Serving` to the TCP frontend, so one
+/// socket serves whichever stack `--workers` picked.
+impl SubmitTarget for Serving {
+    fn submit_prioritized(
+        &self,
+        input: Vec<i32>,
+        priority: Priority,
+    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
+        self.submit(input, priority)
+    }
+
+    fn stats(&self) -> StatsReport {
+        match self {
+            Serving::Single(s) => s.stats(),
+            Serving::Pool(p) => p.stats(),
         }
     }
 }

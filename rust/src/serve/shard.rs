@@ -2,29 +2,27 @@
 //! backends, an [`ExecPlan`] replica sharing the pool's read-only weight
 //! storage) and a two-level [`PriorityBatcher`].
 //!
-//! The loop mirrors the single-engine coordinator loop: block on the
-//! command channel bounded by the batcher deadline, greedily drain the
-//! backlog so batch formation sees every queued request, execute ready
-//! batches, and on shutdown force-drain one batch at a time.
+//! The shard runs the same generic
+//! [`executor_loop`](crate::coordinator::executor::executor_loop) as the
+//! single-engine coordinator — what makes it a *shard* is only its batch
+//! source (the two-level priority queue) and its sink (per-class
+//! [`ShardMetrics`] plus the twin depth/in-flight slot counters).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::dispatch::{Priority, PriorityBatcher};
 use super::histogram::ShardMetrics;
-use crate::coordinator::engine::{Engine, EngineFactory};
-use crate::coordinator::request::{InferError, Request, Response};
+use crate::coordinator::engine::EngineFactory;
+use crate::coordinator::executor::{executor_loop, ExecCommand, ExecSink};
 use crate::exec::ExecPlan;
-use crate::nn::forward::argmax_rows;
 
-/// Commands flowing from the pool front door to a shard thread.
-pub(crate) enum ShardCommand {
-    Infer(Request, Priority),
-    Shutdown,
-}
+/// Commands flowing from the pool front door to a shard thread: the
+/// generic executor command tagged with the request's priority class.
+pub(crate) type ShardCommand = ExecCommand<Priority>;
 
 /// Batching knobs a shard runs with (derived from `ServerConfig`).
 #[derive(Debug, Clone, Copy)]
@@ -34,84 +32,36 @@ pub(crate) struct ShardConfig {
     pub promote_after: Duration,
 }
 
-/// Execute every batch the batcher will currently form; `force` drains the
-/// backlog one batch per iteration regardless of the deadline.
-///
-/// Deliberate mirror of `coordinator::server::dispatch_ready` over the
-/// priority batcher (that one stays priority-free so the single-engine
-/// server's semantics are untouched); a change to either execute/reply
-/// body — including the infer-error path, which fails the batch and the
-/// backlog with error replies and releases their slots — must be made in
-/// the other too (ROADMAP: unify over a batch-view trait once a
-/// toolchain session can verify the refactor).
-fn run_ready(
-    batcher: &mut PriorityBatcher,
-    engine: &mut dyn Engine,
-    s_in: usize,
-    force: bool,
-    metrics: &ShardMetrics,
-    depth: &AtomicUsize,
-    in_flight: &AtomicUsize,
-) -> Result<()> {
-    loop {
-        let now = Instant::now();
-        let batch = if force {
-            batcher.flush_next(now)
-        } else {
-            batcher.poll(now)
-        };
-        let Some(batch) = batch else {
-            return Ok(());
-        };
-        let occupancy = batch.occupancy();
-        metrics.record_batch(occupancy, batch.size, batch.promoted);
-        let x = batch.padded_input(s_in);
-        let t0 = Instant::now();
-        let y = match engine.infer(&x) {
-            Ok(y) => y,
-            Err(e) => {
-                // shard engine broke: the loop dies with `e`, so fail
-                // this batch and the whole backlog with error replies,
-                // releasing their queue/in-flight slots instead of
-                // stranding clients (and pool backpressure) forever
-                let err = InferError(format!("infer failed: {e:#}"));
-                let mut stranded = batch.requests;
-                while let Some(b) = batcher.flush_next(Instant::now()) {
-                    stranded.extend(b.requests);
-                }
-                for (req, _) in stranded {
-                    depth.fetch_sub(1, Ordering::SeqCst);
-                    in_flight.fetch_sub(1, Ordering::SeqCst);
-                    let _ = req.reply.send(Err(err.clone()));
-                }
-                return Err(e);
-            }
-        };
-        let compute_seconds = engine
-            .simulated_seconds()
-            .unwrap_or_else(|| t0.elapsed().as_secs_f64());
-        let classes = argmax_rows(&y);
-        for (row, (req, priority)) in batch.requests.into_iter().enumerate() {
-            let queue_seconds = t0.duration_since(req.queued_at).as_secs_f64();
-            let resp = Response {
-                id: req.id,
-                output: y.row(row).to_vec(),
-                class: classes[row],
-                queue_seconds,
-                compute_seconds,
-                batch_occupancy: occupancy,
-            };
-            metrics.record_request(priority, resp.queue_seconds, resp.total_seconds());
-            depth.fetch_sub(1, Ordering::SeqCst);
-            in_flight.fetch_sub(1, Ordering::SeqCst);
-            let _ = req.reply.send(Ok(resp));
-        }
+/// A shard's face of the generic executor: per-class metrics, and two
+/// slot counters released together — the shard's own queue depth (feeds
+/// the least-loaded/p2c selection) and the pool-wide in-flight bound.
+pub(crate) struct ShardSink<'a> {
+    pub(crate) metrics: &'a ShardMetrics,
+    pub(crate) depth: &'a AtomicUsize,
+    pub(crate) in_flight: &'a AtomicUsize,
+}
+
+impl ExecSink for ShardSink<'_> {
+    type Tag = Priority;
+
+    fn record_batch(&self, occupancy: usize, size: usize, promoted: usize) {
+        self.metrics.record_batch(occupancy, size, promoted);
+    }
+
+    fn record_request(&self, tag: &Priority, queue_s: f64, total_s: f64) {
+        self.metrics.record_request(*tag, queue_s, total_s);
+    }
+
+    fn release_slot(&self) {
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-/// The shard thread body.  Engine construction happens here (PJRT handles
-/// are not `Send`); native backends receive a pre-compiled plan replica
-/// instead so N shards share one set of weights.
+/// The shard thread body: the shared executor loop over a priority
+/// batcher.  Engine construction happens inside the loop's fallible block
+/// (PJRT handles are not `Send`); native backends receive a pre-compiled
+/// plan replica instead so N shards share one set of weights.
 pub(crate) fn shard_loop(
     rx: mpsc::Receiver<ShardCommand>,
     factory: EngineFactory,
@@ -121,161 +71,25 @@ pub(crate) fn shard_loop(
     depth: Arc<AtomicUsize>,
     in_flight: Arc<AtomicUsize>,
 ) -> Result<()> {
-    // engine construction happens inside the fallible block so its
-    // failure also reaches the drain below: the pool hands out its
-    // handle before the shard threads finish building their engines
-    let result = (|| -> Result<()> {
-        let mut engine = match shared_plan {
-            Some(plan) => factory.build_from_plan(plan),
-            None => factory.build()?,
-        };
-        let s_in = factory.net.spec.inputs();
-        let mut batcher = PriorityBatcher::new(cfg.batch, cfg.deadline, cfg.promote_after);
-        shard_commands(
-            &rx,
-            engine.as_mut(),
-            &mut batcher,
-            s_in,
-            &metrics,
-            &depth,
-            &in_flight,
-        )
-    })();
-    if let Err(e) = &result {
-        // the shard died: run_ready already failed the batcher-resident
-        // requests, but commands still buffered in the channel would
-        // otherwise leak their depth/in-flight slots and leave clients
-        // with a bare disconnect — fail them the same way
-        let err = InferError(format!("shard stopped: {e:#}"));
-        while let Ok(cmd) = rx.try_recv() {
-            if let ShardCommand::Infer(req, _) = cmd {
-                depth.fetch_sub(1, Ordering::SeqCst);
-                in_flight.fetch_sub(1, Ordering::SeqCst);
-                let _ = req.reply.send(Err(err.clone()));
-            }
-        }
-    }
-    result
+    let s_in = factory.net.spec.inputs();
+    executor_loop(
+        &rx,
+        move || match shared_plan {
+            Some(plan) => Ok(factory.build_from_plan(plan)),
+            None => factory.build(),
+        },
+        PriorityBatcher::new(cfg.batch, cfg.deadline, cfg.promote_after),
+        ShardSink {
+            metrics: &*metrics,
+            depth: &*depth,
+            in_flight: &*in_flight,
+        },
+        s_in,
+        "shard",
+    )
 }
 
-fn shard_commands(
-    rx: &mpsc::Receiver<ShardCommand>,
-    engine: &mut dyn Engine,
-    batcher: &mut PriorityBatcher,
-    s_in: usize,
-    metrics: &ShardMetrics,
-    depth: &AtomicUsize,
-    in_flight: &AtomicUsize,
-) -> Result<()> {
-    loop {
-        let timeout = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(ShardCommand::Infer(req, prio)) => {
-                batcher.push(req, prio);
-                // greedily drain the channel so batch formation (and the
-                // interactive-first rule) sees the full backlog
-                let mut shutdown = false;
-                while let Ok(cmd) = rx.try_recv() {
-                    match cmd {
-                        ShardCommand::Infer(r, p) => batcher.push(r, p),
-                        ShardCommand::Shutdown => {
-                            shutdown = true;
-                            break;
-                        }
-                    }
-                }
-                run_ready(batcher, engine, s_in, false, metrics, depth, in_flight)?;
-                if shutdown {
-                    run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
-                    return Ok(());
-                }
-            }
-            Ok(ShardCommand::Shutdown) => {
-                run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
-                // catch requests racing the shutdown signal
-                while let Ok(ShardCommand::Infer(req, prio)) = rx.try_recv() {
-                    batcher.push(req, prio);
-                }
-                run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
-                return Ok(());
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                run_ready(batcher, engine, s_in, false, metrics, depth, in_flight)?;
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                run_ready(batcher, engine, s_in, true, metrics, depth, in_flight)?;
-                return Ok(());
-            }
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::tensor::MatI;
-    use anyhow::bail;
-
-    struct FailingEngine;
-    impl Engine for FailingEngine {
-        fn name(&self) -> &'static str {
-            "failing"
-        }
-        fn batch(&self) -> usize {
-            4
-        }
-        fn infer(&mut self, _x: &MatI) -> Result<MatI> {
-            bail!("injected shard failure")
-        }
-    }
-
-    /// Mirror of the single-engine regression: a broken shard engine must
-    /// fail batch + backlog with error replies and release both counters.
-    #[test]
-    fn infer_error_fails_backlog_and_releases_counters() {
-        let metrics = ShardMetrics::new();
-        let depth = AtomicUsize::new(7);
-        let in_flight = AtomicUsize::new(7);
-        let mut batcher =
-            PriorityBatcher::new(4, Duration::from_secs(60), Duration::from_secs(60));
-        let mut rxs = Vec::new();
-        for i in 0..7u64 {
-            let (tx, rx) = mpsc::channel();
-            let prio = if i % 2 == 0 {
-                Priority::Interactive
-            } else {
-                Priority::Bulk
-            };
-            batcher.push(
-                crate::coordinator::request::Request {
-                    id: i,
-                    input: vec![i as i32; 4],
-                    queued_at: Instant::now(),
-                    reply: tx,
-                },
-                prio,
-            );
-            rxs.push(rx);
-        }
-        let mut engine = FailingEngine;
-        let err = run_ready(
-            &mut batcher,
-            &mut engine,
-            4,
-            true,
-            &metrics,
-            &depth,
-            &in_flight,
-        )
-        .unwrap_err();
-        assert!(err.to_string().contains("injected"));
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
-            assert!(reply.is_err(), "request {i} must get an error reply");
-        }
-        assert_eq!(depth.load(Ordering::SeqCst), 0, "shard depth leaked");
-        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
-    }
-}
+// The failing-engine regression that lived here moved to
+// `coordinator::executor::tests::infer_error_fails_batch_and_backlog_on_priority_source`:
+// the error-drain path is one shared body now, tested once per batcher
+// flavor against the same loop.

@@ -1,0 +1,268 @@
+//! Integration: the TCP line-protocol frontend over the sharded serving
+//! pool — `serve --listen --workers 4` equivalent, driven loopback.
+//!
+//! What this locks in (the PR 4 acceptance surface):
+//!
+//! * remote traffic reaches the pool at all (the frontend used to bail on
+//!   `--workers > 1`),
+//! * mixed `INFER` / `INFER BULK` lines get exactly one reply each, with
+//!   outputs bit-identical to the golden forward,
+//! * malformed lines get `ERR` and the connection stays usable,
+//! * bulk traffic completes under an interactive flood (the aging
+//!   property, observed end-to-end through the socket),
+//! * `STATS` reports the *merged* pool snapshot (workers=N, promotions,
+//!   p50/p95/p99), not a single engine's view.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::{EngineFactory, NetClient, NetFrontend, Priority};
+use zynq_dnn::nn::forward_q;
+use zynq_dnn::nn::spec::quickstart;
+use zynq_dnn::serve::{start_serving, Serving};
+use zynq_dnn::tensor::MatI;
+
+fn start_stack(
+    workers: usize,
+    batch: usize,
+    promote_us: u64,
+) -> (NetFrontend, Arc<Serving>, zynq_dnn::nn::QNetwork) {
+    let net = random_qnet(&quickstart(), 0xB0);
+    let factory = EngineFactory {
+        backend: "native".into(),
+        batch,
+        net: net.clone(),
+        artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    };
+    let cfg = ServerConfig {
+        workers,
+        batch,
+        batch_deadline_us: 300,
+        bulk_promote_us: promote_us,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let serving = Arc::new(start_serving(&cfg, factory).unwrap());
+    let fe = NetFrontend::start("127.0.0.1:0", serving.clone()).unwrap();
+    (fe, serving, net)
+}
+
+fn values_for(seed: usize) -> Vec<f32> {
+    (0..64)
+        .map(|k| ((k * 7 + seed * 13) % 101) as f32 / 101.0 - 0.5)
+        .collect()
+}
+
+fn golden_for(net: &zynq_dnn::nn::QNetwork, values: &[f32]) -> (usize, Vec<i32>) {
+    let xq = zynq_dnn::fixedpoint::quantize_slice(values);
+    let y = forward_q(net, &MatI::from_vec(1, 64, xq)).unwrap();
+    let class = zynq_dnn::nn::forward::argmax_rows(&y)[0];
+    (class, y.row(0).to_vec())
+}
+
+fn pool_snapshot(serving: &Serving) -> zynq_dnn::serve::PoolSnapshot {
+    match serving {
+        Serving::Pool(p) => p.snapshot(),
+        Serving::Single(_) => panic!("expected a pool"),
+    }
+}
+
+/// Mixed-priority traffic from concurrent TCP clients over a 4-worker
+/// pool: every line gets exactly one `OK` reply with the golden output,
+/// and the merged metrics count every request exactly once.
+#[test]
+fn mixed_priorities_exactly_once_over_tcp() {
+    let (fe, serving, net) = start_stack(4, 4, 20_000);
+    let addr = fe.addr();
+    let net = Arc::new(net);
+    let mut handles = Vec::new();
+    for t in 0..3usize {
+        let net = net.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = NetClient::connect(&addr).unwrap();
+            c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+            for i in 0..20usize {
+                let vals = values_for(t * 100 + i);
+                let prio = if i % 2 == 0 {
+                    Priority::Interactive
+                } else {
+                    Priority::Bulk
+                };
+                let (class, outputs) = c.infer_with(&vals, prio).unwrap();
+                let (want_class, want_out) = golden_for(&net, &vals);
+                assert_eq!(outputs, want_out, "client {t} request {i}");
+                assert_eq!(class, want_class, "client {t} request {i}");
+            }
+            c.quit().unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = pool_snapshot(&serving);
+    assert_eq!(snap.aggregate.requests, 60, "exactly-once accounting");
+    assert_eq!(snap.aggregate.occupied_slots, 60);
+    assert_eq!(snap.aggregate.interactive_requests, 30);
+    assert_eq!(snap.aggregate.bulk_requests, 30);
+    assert_eq!(snap.shards.len(), 4);
+    fe.stop();
+}
+
+/// Malformed input gets `ERR` (not a dropped connection, not a crash) on
+/// the pool-backed frontend, and valid traffic keeps flowing after.
+#[test]
+fn malformed_lines_get_err_and_connection_survives() {
+    let (fe, serving, net) = start_stack(4, 4, 20_000);
+    // a bare socket, so malformed lines NetClient would never emit can go
+    // down the wire verbatim
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(fe.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut round_trip = move |line: &str| -> String {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    };
+    assert!(round_trip("FROBNICATE").starts_with("ERR"));
+    assert!(round_trip("INFER").starts_with("ERR"));
+    assert!(round_trip("INFER BULK").starts_with("ERR"));
+    assert!(round_trip("INFER BULK notanumber").starts_with("ERR"));
+    assert!(round_trip("INFER 1 2 3").starts_with("ERR"), "wrong width");
+    // the same connection still serves valid lines afterwards
+    let vals = values_for(7);
+    let (class, outputs) = {
+        let mut line = String::from("INFER BULK");
+        for v in &vals {
+            line.push(' ');
+            line.push_str(&v.to_string());
+        }
+        let reply = round_trip(&line);
+        assert!(reply.starts_with("OK "), "{reply}");
+        let parts: Vec<&str> = reply.split_ascii_whitespace().collect();
+        let class: usize = parts[1].parse().unwrap();
+        let outputs: Vec<i32> = parts[5..].iter().map(|s| s.parse().unwrap()).collect();
+        (class, outputs)
+    };
+    let (want_class, want_out) = golden_for(&net, &vals);
+    assert_eq!(outputs, want_out);
+    assert_eq!(class, want_class);
+    // parse errors never reach the pool; the one valid request did
+    let snap = pool_snapshot(&serving);
+    assert_eq!(snap.aggregate.requests, 1);
+    assert!(round_trip("QUIT").is_empty(), "QUIT closes without a reply");
+    fe.stop();
+}
+
+/// Bulk traffic must complete (exactly once, correct outputs) while
+/// interactive floods arrive on other connections — the two-level queue's
+/// no-starvation property, observed through the socket.  The promotion
+/// threshold is set low so aging is live during the flood.
+#[test]
+fn bulk_completes_under_interactive_flood() {
+    let (fe, serving, net) = start_stack(4, 4, 500);
+    let addr = fe.addr();
+    let net = Arc::new(net);
+    let mut flood = Vec::new();
+    for t in 0..4usize {
+        flood.push(std::thread::spawn(move || {
+            let mut c = NetClient::connect(&addr).unwrap();
+            c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+            for i in 0..60usize {
+                let vals = values_for(t * 1000 + i);
+                c.infer_with(&vals, Priority::Interactive).unwrap();
+            }
+            c.quit().unwrap();
+        }));
+    }
+    // the bulk client runs concurrently with the flood; a starved request
+    // would trip the 10 s reply timeout instead of hanging the test
+    let bulk_net = net.clone();
+    let bulk = std::thread::spawn(move || {
+        let mut c = NetClient::connect(&addr).unwrap();
+        c.set_timeout(Some(Duration::from_secs(10))).unwrap();
+        for i in 0..30usize {
+            let vals = values_for(5000 + i);
+            let (class, outputs) = c
+                .infer_with(&vals, Priority::Bulk)
+                .unwrap_or_else(|e| panic!("bulk request {i} starved: {e}"));
+            let (want_class, want_out) = golden_for(&bulk_net, &vals);
+            assert_eq!(outputs, want_out, "bulk request {i}");
+            assert_eq!(class, want_class, "bulk request {i}");
+        }
+        c.quit().unwrap();
+    });
+    for h in flood {
+        h.join().unwrap();
+    }
+    bulk.join().unwrap();
+    let snap = pool_snapshot(&serving);
+    assert_eq!(snap.aggregate.bulk_requests, 30, "every bulk request served");
+    assert_eq!(snap.aggregate.interactive_requests, 240);
+    fe.stop();
+}
+
+/// `STATS` over a pool-backed frontend reports the merged per-shard
+/// snapshot with the uniform key set.
+#[test]
+fn stats_reports_merged_pool_snapshot() {
+    let (fe, serving, _net) = start_stack(4, 2, 20_000);
+    let mut c = NetClient::connect(&fe.addr()).unwrap();
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    for i in 0..12usize {
+        let prio = if i % 3 == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Bulk
+        };
+        c.infer_with(&values_for(i), prio).unwrap();
+    }
+    let stats = c.stats().unwrap();
+    assert!(stats.starts_with("STATS requests=12 "), "{stats}");
+    assert!(stats.contains("workers=4"), "{stats}");
+    for key in [
+        "batches=",
+        "rejected=",
+        "mean_latency_us=",
+        "p50_latency_us=",
+        "p95_latency_us=",
+        "p99_latency_us=",
+        "occupancy=",
+        "promoted=",
+        "throughput=",
+    ] {
+        assert!(stats.contains(key), "missing {key} in {stats}");
+    }
+    // the wire line matches the in-process merged snapshot
+    let snap = pool_snapshot(&serving);
+    assert_eq!(snap.aggregate.requests, 12);
+    c.quit().unwrap();
+    fe.stop();
+}
+
+/// The same frontend still fronts a single-engine stack (`--workers 1`)
+/// through the `Serving` delegator, bulk lines included.
+#[test]
+fn single_worker_stack_behind_same_frontend() {
+    let (fe, serving, net) = start_stack(1, 4, 20_000);
+    assert!(matches!(&*serving, Serving::Single(_)));
+    let mut c = NetClient::connect(&fe.addr()).unwrap();
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let vals = values_for(42);
+    let (class, outputs) = c.infer_with(&vals, Priority::Bulk).unwrap();
+    let (want_class, want_out) = golden_for(&net, &vals);
+    assert_eq!(outputs, want_out);
+    assert_eq!(class, want_class);
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("workers=1"), "{stats}");
+    c.quit().unwrap();
+    fe.stop();
+}
