@@ -8,7 +8,7 @@
 use anyhow::Result;
 use zynq_dnn::bench::random_qnet;
 use zynq_dnn::config::ServerConfig;
-use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
 use zynq_dnn::data::mnist;
 use zynq_dnn::nn::spec::mnist_4;
 use zynq_dnn::sim::batch::BatchAccelerator;
@@ -56,17 +56,14 @@ fn main() -> Result<()> {
             artifact: None,
         };
         let server = Server::start(&cfg, factory)?;
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for i in 0..test.len() {
-            rxs.push(
-                server
-                    .submit(zynq_dnn::fixedpoint::quantize_slice(test.x.row(i)))?
-                    .1,
-            );
+            let input = zynq_dnn::fixedpoint::quantize_slice(test.x.row(i));
+            tickets.push(server.submit(input, SubmitOptions::bulk())?);
         }
         let mut sim_compute = 0.0;
-        for rx in &rxs {
-            sim_compute += rx.recv()??.compute_seconds;
+        for ticket in tickets.iter_mut() {
+            sim_compute += ticket.wait()?.compute_seconds;
         }
         let snap = server.metrics.snapshot();
         println!(
@@ -74,7 +71,7 @@ fn main() -> Result<()> {
              mean e2e latency {}",
             snap.requests,
             snap.occupancy,
-            fmt_time(sim_compute / rxs.len() as f64),
+            fmt_time(sim_compute / tickets.len() as f64),
             fmt_time(snap.mean_latency_s),
         );
         server.shutdown()?;

@@ -20,7 +20,7 @@ use std::time::Instant;
 use anyhow::Result;
 use zynq_dnn::bench;
 use zynq_dnn::config::ServerConfig;
-use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
 use zynq_dnn::data::har;
 use zynq_dnn::nn::spec::har_4;
 use zynq_dnn::train::prune::apply_pruning;
@@ -88,14 +88,15 @@ fn main() -> Result<()> {
     let server = Server::start(&cfg, factory)?;
     let n_req = if quick { 32 } else { 256 };
     let serve_t0 = Instant::now();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..n_req {
         let row = test.x.row(i % test.len());
-        rxs.push(server.submit(zynq_dnn::fixedpoint::quantize_slice(row))?.1);
+        let input = zynq_dnn::fixedpoint::quantize_slice(row);
+        tickets.push(server.submit(input, SubmitOptions::default())?);
     }
     let mut correct = 0;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        if rx.recv()??.class == test.y[i % test.len()] {
+    for (i, mut ticket) in tickets.into_iter().enumerate() {
+        if ticket.wait()?.class == test.y[i % test.len()] {
             correct += 1;
         }
     }

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 use zynq_dnn::config::ServerConfig;
-use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
 use zynq_dnn::data::mnist;
 use zynq_dnn::nn::forward::forward_q;
 use zynq_dnn::nn::spec::quickstart;
@@ -90,10 +90,10 @@ fn main() -> Result<()> {
     let mut pending = Vec::new();
     for i in 0..n_req {
         let input = zynq_dnn::fixedpoint::quantize_slice(test.x.row(i));
-        pending.push((i, server.submit(input)?.1));
+        pending.push((i, server.submit(input, SubmitOptions::default())?));
     }
-    for (i, rx) in pending {
-        let resp = rx.recv()??;
+    for (i, mut ticket) in pending {
+        let resp = ticket.wait()?;
         if resp.class == test.y[i] {
             correct += 1;
         }

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use zynq_dnn::bench::random_qnet;
 use zynq_dnn::config::ServerConfig;
-use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
 use zynq_dnn::nn::spec::{har_6, mnist_4, quickstart};
 use zynq_dnn::sim::batch::BatchAccelerator;
 use zynq_dnn::sim::pruning::{prune_qnetwork, SparseNetwork};
@@ -113,11 +113,11 @@ fn main() {
     let reqs = if quick { 64 } else { 512 };
     let input: Vec<i32> = vec![32; 64];
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..reqs)
-        .map(|_| server.submit(input.clone()).unwrap().1)
+    let tickets: Vec<_> = (0..reqs)
+        .map(|_| server.submit(input.clone(), SubmitOptions::default()).unwrap())
         .collect();
-    for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    for mut ticket in tickets {
+        ticket.wait_timeout(Duration::from_secs(30)).unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.metrics.snapshot();

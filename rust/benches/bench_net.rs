@@ -1,0 +1,15 @@
+//! `cargo bench --bench bench_net` — wire-pipelining sweep over TCP
+//! loopback: pipeline depth {1, 4, 16, 64} × client connections {1, 4}
+//! against the 4-worker sharded pool.  Exits 1 if a single pipelined
+//! connection at depth 16 fails to beat the same connection at depth 1
+//! (the v1 lockstep bound protocol v2 removes).
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = zynq_dnn::bench::netbench::run();
+    println!("{}", zynq_dnn::bench::netbench::render(&r));
+    if let Err(e) = zynq_dnn::bench::netbench::check_shape(&r) {
+        eprintln!("SHAPE CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+}

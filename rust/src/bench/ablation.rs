@@ -11,7 +11,7 @@ use std::time::Duration;
 use super::report::Table;
 use super::random_qnet;
 use crate::config::ServerConfig;
-use crate::coordinator::{EngineFactory, Server};
+use crate::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
 use crate::nn::spec::{har_6, quickstart};
 use crate::perfmodel::hw::{per_sample_time, HwConfig};
 use crate::sim::memory::MemoryModel;
@@ -80,21 +80,20 @@ pub fn run() -> AblationReport {
         };
         let server = Server::start(&cfg, factory).expect("server");
         let mut rng = Xoshiro256::seed_from_u64(deadline_us);
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for _ in 0..reqs {
             let input: Vec<i32> = (0..64)
                 .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
                 .collect();
-            rxs.push(server.submit(input).expect("submit").1);
+            tickets.push(server.submit(input, SubmitOptions::default()).expect("submit"));
             // sparse arrivals: deadline matters
             std::thread::sleep(Duration::from_micros(200));
         }
         let mut lat_sum = 0.0;
-        for rx in rxs {
-            let resp = rx
-                .recv_timeout(Duration::from_secs(10))
-                .expect("resp")
-                .expect("bench engine never fails infer");
+        for mut ticket in tickets {
+            let resp = ticket
+                .wait_timeout(Duration::from_secs(10))
+                .expect("resp; bench engine never fails infer");
             lat_sum += resp.total_seconds();
         }
         let snap = server.metrics.snapshot();

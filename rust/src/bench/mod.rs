@@ -10,6 +10,7 @@ pub mod combined;
 pub mod compress;
 pub mod fig7;
 pub mod gops;
+pub mod netbench;
 pub mod nopt;
 pub mod report;
 pub mod slo;

@@ -1,0 +1,188 @@
+//! Wire-pipelining benchmark: protocol v2's tagged, out-of-order replies
+//! vs v1's one-request-per-round-trip lockstep, measured over loopback
+//! against the 4-worker sharded pool.
+//!
+//! The paper's throughput comes from keeping the accelerator's batch
+//! slots full; a lockstep connection can contribute at most one sample
+//! per round trip, so batch formation sees only as many samples as there
+//! are connections.  Pipelining restores the per-connection window: each
+//! client keeps `depth` tagged requests in flight and waits tickets out
+//! as replies demux back.  The sweep crosses pipeline depth {1, 4, 16,
+//! 64} with client counts {1, 4}; `check_shape` asserts the acceptance
+//! criterion — a *single* client at depth 16 must beat the same client at
+//! depth 1 (≙ lockstep) against the same pool.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::report::Table;
+use super::{quick_mode, random_qnet};
+use crate::config::ServerConfig;
+use crate::coordinator::{EngineFactory, NetClient, NetFrontend, NetTicket, Priority};
+use crate::nn::spec::quickstart;
+use crate::serve::start_serving;
+
+/// In-flight requests per connection (1 ≙ v1 lockstep behavior).
+pub const DEPTH_SWEEP: [usize; 4] = [1, 4, 16, 64];
+/// Concurrent client connections.
+pub const CLIENT_SWEEP: [usize; 2] = [1, 4];
+/// Pool shards behind the frontend (the acceptance criterion names 4).
+pub const WORKERS: usize = 4;
+
+/// One (clients, depth) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct NetRow {
+    pub clients: usize,
+    pub depth: usize,
+    /// Total requests across all clients in the cell.
+    pub requests: usize,
+    pub achieved_rps: f64,
+}
+
+/// The benchmark result.
+#[derive(Debug, Clone)]
+pub struct NetBench {
+    pub network: String,
+    pub workers: usize,
+    pub batch: usize,
+    pub rows: Vec<NetRow>,
+}
+
+fn values_for(seed: usize) -> Vec<f32> {
+    (0..64)
+        .map(|k| ((k * 7 + seed * 13) % 101) as f32 / 101.0 - 0.5)
+        .collect()
+}
+
+/// One client: keep `depth` tagged requests in flight, waiting the oldest
+/// ticket out whenever the window is full.
+fn drive_client(addr: std::net::SocketAddr, requests: usize, depth: usize) {
+    let mut client = NetClient::connect(&addr).expect("bench client connects");
+    let mut window: VecDeque<NetTicket> = VecDeque::with_capacity(depth);
+    for i in 0..requests {
+        if window.len() == depth {
+            let mut t = window.pop_front().expect("window non-empty");
+            t.wait_timeout(Duration::from_secs(60)).expect("pipelined reply");
+        }
+        let vals = values_for(i);
+        window.push_back(client.submit(&vals, Priority::Interactive).expect("submit"));
+    }
+    for mut t in window {
+        t.wait_timeout(Duration::from_secs(60)).expect("drain reply");
+    }
+    client.quit().ok();
+}
+
+pub fn run() -> NetBench {
+    let quick = quick_mode();
+    let spec = quickstart();
+    let net = random_qnet(&spec, 0x9E7);
+    let batch = 4;
+    let per_client = if quick { 150 } else { 400 };
+    let cfg = ServerConfig {
+        network: spec.name.clone(),
+        batch,
+        workers: WORKERS,
+        batch_deadline_us: 300,
+        // the sweep's story is pipelining vs lockstep, not loss: queue
+        // far beyond clients × depth so nothing bounces
+        queue_depth: 4096,
+        backend: "native".into(),
+        ..Default::default()
+    };
+    let factory = EngineFactory {
+        backend: "native".into(),
+        batch,
+        net,
+        artifacts_dir: crate::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    };
+    let serving = Arc::new(start_serving(&cfg, factory).expect("pool starts"));
+    let fe = NetFrontend::start("127.0.0.1:0", serving.clone()).expect("frontend binds");
+    let addr = fe.addr();
+
+    let mut rows = Vec::new();
+    for &clients in &CLIENT_SWEEP {
+        for &depth in &DEPTH_SWEEP {
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|_| std::thread::spawn(move || drive_client(addr, per_client, depth)))
+                .collect();
+            for h in handles {
+                h.join().expect("bench client thread");
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let requests = clients * per_client;
+            rows.push(NetRow {
+                clients,
+                depth,
+                requests,
+                achieved_rps: requests as f64 / wall.max(1e-9),
+            });
+        }
+    }
+    fe.stop();
+    // the frontend's Arc clones are gone after stop(); shut the pool down
+    // cleanly rather than leaking its shard threads into the next bench
+    if let Ok(s) = Arc::try_unwrap(serving) {
+        let _ = s.shutdown();
+    }
+    NetBench {
+        network: spec.name,
+        workers: WORKERS,
+        batch,
+        rows,
+    }
+}
+
+pub fn render(b: &NetBench) -> String {
+    let mut t = Table::new(
+        &format!(
+            "wire pipelining sweep ({}, {} workers, batch {}, TCP loopback)",
+            b.network, b.workers, b.batch
+        ),
+        &["clients", "depth", "requests", "achieved/s"],
+    );
+    for r in &b.rows {
+        t.row(vec![
+            r.clients.to_string(),
+            r.depth.to_string(),
+            r.requests.to_string(),
+            format!("{:.0}", r.achieved_rps),
+        ]);
+    }
+    t.footnote(
+        "protocol v2: tagged `INFER #<id>` with out-of-order tagged replies; \
+         depth = in-flight requests per connection (1 ≙ v1 lockstep)",
+    );
+    t.footnote("all-Interactive traffic; queue sized to the sweep, so no rejections");
+    t.render()
+}
+
+/// Acceptance shape (wall-clock — gate behind `ZDNN_SKIP_PERF` on
+/// contended runners): a single pipelined connection at depth 16 must
+/// sustain strictly more throughput than the same connection at depth 1
+/// against the 4-worker pool — the per-client throughput bound v1's
+/// lockstep protocol imposed is the thing v2 exists to remove.
+pub fn check_shape(b: &NetBench) -> Result<(), String> {
+    let at = |clients: usize, depth: usize| {
+        b.rows
+            .iter()
+            .find(|r| r.clients == clients && r.depth == depth)
+            .map(|r| r.achieved_rps)
+    };
+    let (Some(d1), Some(d16)) = (at(1, 1), at(1, 16)) else {
+        return Err("missing clients=1 rows at depths 1/16".into());
+    };
+    if d16 <= d1 {
+        return Err(format!(
+            "single-client depth 16 ({d16:.0}/s) not faster than depth 1 \
+             ({d1:.0}/s) against {} workers",
+            b.workers
+        ));
+    }
+    Ok(())
+}

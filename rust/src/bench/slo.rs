@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 use super::report::{ms, Table};
 use super::{quick_mode, random_qnet};
 use crate::config::ServerConfig;
-use crate::coordinator::EngineFactory;
+use crate::coordinator::{EngineFactory, SubmitOptions, SubmitTarget};
 use crate::exec::{ExecPlan, PlanOptions};
 use crate::nn::spec::{har_4, har_6};
 use crate::nn::QNetwork;
@@ -144,20 +144,18 @@ fn drive(serving: &Serving, requests: usize, offered_rps: f64, seed: u64) -> Dri
         } else {
             Priority::Bulk
         };
-        let rx = serving
-            .submit(input, priority)
-            .expect("slo bench sizes queue_depth to the request count")
-            .1;
-        receivers.push((priority, rx));
+        let ticket = serving
+            .submit(input, SubmitOptions::with_priority(priority))
+            .expect("slo bench sizes queue_depth to the request count");
+        receivers.push(ticket);
     }
     let mut interactive = Vec::new();
     let mut bulk = Vec::new();
-    for (priority, rx) in receivers {
-        let resp = rx
-            .recv_timeout(Duration::from_secs(60))
-            .expect("response within 60s")
-            .expect("bench engine never fails infer");
-        match priority {
+    for mut ticket in receivers {
+        let resp = ticket
+            .wait_timeout(Duration::from_secs(60))
+            .expect("response within 60s; bench engine never fails infer");
+        match ticket.priority() {
             Priority::Interactive => interactive.push(resp.total_seconds()),
             Priority::Bulk => bulk.push(resp.total_seconds()),
         }

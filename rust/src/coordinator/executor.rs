@@ -32,7 +32,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::engine::Engine;
-use super::request::{InferError, Request, Response};
+use super::request::{InferError, Reply, Request, Response};
 use crate::nn::forward::argmax_rows;
 use crate::tensor::MatI;
 
@@ -134,7 +134,10 @@ where
                 }
                 for (req, _) in stranded {
                     sink.release_slot();
-                    let _ = req.reply.send(Err(err.clone()));
+                    let _ = req.reply.send(Reply {
+                        id: req.id,
+                        result: Err(err.clone()),
+                    });
                 }
                 return Err(e);
             }
@@ -156,7 +159,10 @@ where
             };
             sink.record_request(&tag, resp.queue_seconds, resp.total_seconds());
             sink.release_slot();
-            let _ = req.reply.send(Ok(resp));
+            let _ = req.reply.send(Reply {
+                id: req.id,
+                result: Ok(resp),
+            });
         }
     }
 }
@@ -261,7 +267,10 @@ where
         while let Ok(cmd) = rx.try_recv() {
             if let ExecCommand::Infer(req, _) = cmd {
                 sink.release_slot();
-                let _ = req.reply.send(Err(err.clone()));
+                let _ = req.reply.send(Reply {
+                    id: req.id,
+                    result: Err(err.clone()),
+                });
             }
         }
     }
@@ -355,7 +364,8 @@ mod tests {
         assert!(err.to_string().contains("injected"));
         for (i, rx) in rxs.into_iter().enumerate() {
             let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
-            let e = reply.expect_err("must be an error reply");
+            assert_eq!(reply.id, i as u64, "error reply must stay attributable");
+            let e = reply.result.expect_err("must be an error reply");
             assert!(e.to_string().contains("injected engine failure"));
         }
         assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
@@ -391,7 +401,7 @@ mod tests {
         assert!(err.to_string().contains("injected"));
         for (i, rx) in rxs.into_iter().enumerate() {
             let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
-            assert!(reply.is_err(), "request {i} must get an error reply");
+            assert!(reply.result.is_err(), "request {i} must get an error reply");
         }
         assert_eq!(depth.load(Ordering::SeqCst), 0, "shard depth leaked");
         assert_eq!(in_flight.load(Ordering::SeqCst), 0, "in-flight slots leaked");
@@ -419,7 +429,8 @@ mod tests {
         };
         execute_ready(&mut batcher, &sink, engine.as_mut(), 64, true).unwrap();
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert!(rx.try_recv().is_ok(), "request {i} lost on forced drain");
+            let reply = rx.try_recv().unwrap_or_else(|_| panic!("request {i} lost on drain"));
+            assert!(reply.result.is_ok(), "request {i} failed on forced drain");
         }
         let snap = metrics.snapshot();
         assert_eq!(snap.requests, 11);
@@ -456,7 +467,7 @@ mod tests {
         assert!(err.to_string().contains("no engine"));
         for (i, rrx) in reply_rxs.into_iter().enumerate() {
             let reply = rrx.try_recv().unwrap_or_else(|_| panic!("request {i} stranded"));
-            let e = reply.expect_err("must be an error reply");
+            let e = reply.result.expect_err("must be an error reply");
             assert!(e.to_string().contains("engine stopped"), "{e}");
         }
         assert_eq!(in_flight.load(Ordering::SeqCst), 0);
@@ -489,8 +500,8 @@ mod tests {
             "engine",
         )
         .unwrap();
-        assert!(rx1.try_recv().unwrap().is_ok(), "request before shutdown lost");
-        assert!(rx2.try_recv().unwrap().is_ok(), "request racing shutdown lost");
+        assert!(rx1.try_recv().unwrap().result.is_ok(), "request before shutdown lost");
+        assert!(rx2.try_recv().unwrap().result.is_ok(), "request racing shutdown lost");
         assert_eq!(in_flight.load(Ordering::SeqCst), 0);
         assert_eq!(metrics.snapshot().requests, 2);
     }
@@ -533,7 +544,7 @@ mod tests {
             };
             execute_ready(&mut batcher, &sink, engine.as_mut(), 64, true).unwrap();
             for (i, rx) in rxs.into_iter().enumerate() {
-                let resp = match rx.try_recv() {
+                let resp = match rx.try_recv().map(|reply| reply.result) {
                     Ok(Ok(r)) => r,
                     _ => return false, // lost or failed
                 };

@@ -31,6 +31,8 @@ pub use batcher::{Batch, Batcher};
 pub use engine::{Engine, EngineFactory};
 pub use executor::{BatchSource, BatchView, ExecCommand, ExecSink};
 pub use metrics::ServerMetrics;
-pub use net::{NetClient, NetFrontend, StatsReport, SubmitTarget};
-pub use request::{InferError, Priority, Reply, Request, RequestId, Response};
+pub use net::{NetClient, NetFrontend, NetResponse, NetTicket, StatsReport, SubmitTarget};
+pub use request::{
+    InferError, Priority, Reply, Request, RequestId, Response, SubmitOptions, Ticket, TicketError,
+};
 pub use server::{Server, ServerHandle};

@@ -7,13 +7,35 @@
 //! `Serving` delegator, so `serve --listen --workers N` exposes the pool's
 //! priority classes on the wire.
 //!
-//! Protocol (text, one request per line):
+//! # Protocol v2 — tagged, pipelined
+//!
+//! A request line may carry a client-chosen tag (`#<u64>`); tagged
+//! requests are *pipelined*: one connection can hold many in flight, and
+//! replies come back **out of order**, each carrying the request's tag:
+//!
 //! ```text
-//! -> INFER <f32> <f32> ... <f32>\n        (s_0 values, real units;
-//!                                          Interactive priority)
-//! -> INFER BULK <f32> <f32> ... <f32>\n   (same, Bulk priority: fills
-//!                                          remaining batch slots, aging
-//!                                          promotes it — see serve::dispatch)
+//! -> INFER [BULK] #<id> <f32> ... <f32>\n   (s_0 values, real units;
+//!                                            BULK opts down from the
+//!                                            Interactive default)
+//! <- OK #<id> <class> <queue_us> <compute_us> <occupancy> <q78 outputs...>\n
+//! <- ERR #<id> <message>\n                  (parse/backpressure/engine
+//!                                            errors route to their tag)
+//! ```
+//!
+//! Tags are the client's namespace: the server never interprets them
+//! beyond echoing, and reusing a tag with two in-flight requests is the
+//! client's own ambiguity to avoid.  Pipelining is what keeps the
+//! accelerator's batch slots full from few connections — lockstep clients
+//! cap themselves at one sample per round trip, so batch formation only
+//! sees as many samples as there are connections.
+//!
+//! # Protocol v1 — untagged, lockstep (backward compatible)
+//!
+//! Untagged lines keep the original semantics: the connection serves one
+//! request at a time, in order, with untagged replies:
+//!
+//! ```text
+//! -> INFER [BULK] <f32> ... <f32>\n
 //! <- OK <class> <queue_us> <compute_us> <occupancy> <q78 outputs...>\n
 //! <- ERR <message>\n
 //! -> STATS\n
@@ -26,42 +48,84 @@
 //! -> QUIT\n
 //! ```
 //!
+//! v1 and v2 may be mixed on one connection: an untagged `INFER` blocks
+//! the connection's reader until its untagged reply is written (lockstep
+//! invariant: at most one untagged request in flight), while tagged
+//! replies keep draining around it.  `STATS`/`QUIT` are always untagged.
+//!
 //! The priority class is deliberately a wire concept: `INFER` defaults to
 //! Interactive (a remote caller waiting on the reply is latency traffic),
 //! and batch jobs opt *down* to `INFER BULK`.
 
+use std::cell::Cell;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::request::{Priority, Reply, RequestId, Response};
+use super::request::{Priority, Reply, RequestId, Response, SubmitOptions, Ticket};
 
-/// Anything the TCP frontend can serve: submit a prioritized request,
-/// report the uniform STATS payload.  Implemented by the single-engine
-/// `ServerHandle` (which ignores the class), the sharded `PoolHandle`
-/// (which schedules on it and merges per-shard metrics), and `Serving`.
+/// Anything the serving frontends can drive.  One submission primitive —
+/// completion-queue style, into a caller-supplied sender — plus the
+/// uniform STATS payload; everything else ([`Ticket`]-returning `submit`,
+/// `submit_many`, the blocking `infer_*` conveniences) is derived from it
+/// once, here.  Implemented by the single-engine `ServerHandle` (which
+/// ignores the priority class), the sharded `PoolHandle` (which schedules
+/// on it and merges per-shard metrics), and the `Serving` delegator.
 pub trait SubmitTarget: Send + Sync {
-    /// Submit one quantized sample; returns the reply receiver or an
-    /// immediate backpressure error when the stack is saturated.
-    fn submit_prioritized(
+    /// Submit one quantized sample, completing into `reply` (which may be
+    /// shared across requests — [`Reply::id`] disambiguates; the TCP
+    /// frontend demuxes a whole connection through one such channel).
+    /// Returns the assigned id, or an immediate backpressure error when
+    /// the stack is saturated.
+    fn submit_with(
         &self,
         input: Vec<i32>,
         priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Reply>)>;
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId>;
 
     /// The uniform STATS payload (a pool merges its shards here).
     fn stats(&self) -> StatsReport;
 
-    /// Blocking convenience over [`Self::submit_prioritized`] (engine
-    /// failures surface as errors here, not as hangs).
+    /// Submit one sample and get a completion [`Ticket`] back.
+    fn submit(&self, input: Vec<i32>, opts: SubmitOptions) -> Result<Ticket> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.submit_with(input, opts.priority, tx)?;
+        Ok(Ticket::new(id, &opts, rx))
+    }
+
+    /// Batch hand-off: submit every sample under the same options.  Stops
+    /// at the first submission error (requests already accepted keep
+    /// executing; their dropped tickets discard the replies while the
+    /// serving stack still releases every slot).
+    fn submit_many(&self, inputs: Vec<Vec<i32>>, opts: SubmitOptions) -> Result<Vec<Ticket>> {
+        let mut tickets = Vec::with_capacity(inputs.len());
+        for (i, input) in inputs.into_iter().enumerate() {
+            tickets.push(
+                self.submit(input, opts)
+                    .with_context(|| format!("submit_many: input {i}"))?,
+            );
+        }
+        Ok(tickets)
+    }
+
+    /// Blocking convenience: submit at a priority and wait the ticket out
+    /// (engine failures and dead serving threads surface as distinct
+    /// [`TicketError`](super::request::TicketError)s here, never hangs).
     fn infer_prioritized(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
-        let (_, rx) = self.submit_prioritized(input, priority)?;
-        Ok(rx.recv()??)
+        let mut ticket = self.submit(input, SubmitOptions::with_priority(priority))?;
+        Ok(ticket.wait()?)
+    }
+
+    /// Blocking convenience at the Interactive default.
+    fn infer(&self, input: Vec<i32>) -> Result<Response> {
+        self.infer_prioritized(input, Priority::Interactive)
     }
 }
 
@@ -203,6 +267,68 @@ impl Drop for NetFrontend {
     }
 }
 
+/// Render an `OK` reply line, tagged or (v1) untagged.
+fn render_ok(tag: Option<u64>, resp: &Response) -> String {
+    let mut out = String::from("OK");
+    if let Some(t) = tag {
+        out.push_str(&format!(" #{t}"));
+    }
+    out.push_str(&format!(
+        " {} {:.0} {:.0} {}",
+        resp.class,
+        resp.queue_seconds * 1e6,
+        resp.compute_seconds * 1e6,
+        resp.batch_occupancy
+    ));
+    for v in &resp.output {
+        out.push(' ');
+        out.push_str(&v.to_string());
+    }
+    out
+}
+
+/// Write one whole reply line under the connection's writer lock.  Lines
+/// are the protocol's framing unit, so holding the lock per line is what
+/// keeps lockstep replies and demuxed tagged replies from interleaving
+/// mid-line.
+fn write_line(writer: &Mutex<TcpStream>, line: &str) -> std::io::Result<()> {
+    let mut w = writer.lock().unwrap();
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")
+}
+
+/// The connection's writer-side demux: completions for every tagged
+/// request on this connection funnel through one channel ([`Reply::id`]
+/// keys back to the wire tag), so replies go out the moment they are
+/// ready — out of order, which is the whole point of pipelining.  Exits
+/// when the last sender drops (reader gone *and* every in-flight request
+/// replied — the executor's exactly-one-reply invariant bounds that).
+fn demux_loop(
+    completions: mpsc::Receiver<Reply>,
+    pending: &Mutex<HashMap<RequestId, u64>>,
+    writer: &Mutex<TcpStream>,
+) {
+    // after a write error the peer is gone: keep draining so in-flight
+    // completions are consumed (nothing leaks, the loop still terminates),
+    // but stop touching the dead socket
+    let mut broken = false;
+    for reply in completions {
+        let Some(tag) = pending.lock().unwrap().remove(&reply.id) else {
+            continue;
+        };
+        if broken {
+            continue;
+        }
+        let line = match &reply.result {
+            Ok(resp) => render_ok(Some(tag), resp),
+            Err(e) => format!("ERR #{tag} {e}"),
+        };
+        if write_line(writer, &line).is_err() {
+            broken = true;
+        }
+    }
+}
+
 fn handle_connection(
     stream: TcpStream,
     target: &dyn SubmitTarget,
@@ -212,8 +338,35 @@ fn handle_connection(
     // bounded reads: the connection polls the stop flag between timeouts,
     // so NetFrontend::stop doesn't hang on idle clients
     stream.set_read_timeout(Some(Duration::from_millis(50)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
+    let reader = BufReader::new(stream.try_clone()?);
+    let writer = Arc::new(Mutex::new(stream));
+    let pending: Arc<Mutex<HashMap<RequestId, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let (completions, completion_rx) = mpsc::channel::<Reply>();
+    let demux = {
+        let pending = pending.clone();
+        let writer = writer.clone();
+        thread::Builder::new()
+            .name("zdnn-net-demux".into())
+            .spawn(move || demux_loop(completion_rx, &pending, &writer))?
+    };
+    let result = serve_lines(reader, &writer, target, stop, &pending, &completions);
+    // drop our sender so the demux exits once every in-flight request has
+    // completed (bounded by the executor's exactly-one-reply invariant);
+    // replies racing the close are drained, written if the peer is still
+    // there, discarded if not — never leaked
+    drop(completions);
+    let _ = demux.join();
+    result
+}
+
+fn serve_lines(
+    mut reader: BufReader<TcpStream>,
+    writer: &Mutex<TcpStream>,
+    target: &dyn SubmitTarget,
+    stop: &AtomicBool,
+    pending: &Mutex<HashMap<RequestId, u64>>,
+    completions: &mpsc::Sender<Reply>,
+) -> Result<()> {
     let mut line = String::new();
     loop {
         line.clear();
@@ -242,28 +395,61 @@ fn handle_connection(
                 }
             }
         }
-        let trimmed = line.trim_end();
-        let reply = match parse_command(trimmed) {
+        match parse_command(line.trim_end()) {
             Ok(Command::Quit) => return Ok(()),
-            Ok(Command::Stats) => target.stats().render(),
-            Ok(Command::Infer(values, priority)) => match infer(target, values, priority) {
-                Ok(reply) => reply,
-                Err(e) => format!("ERR {e}"),
-            },
-            Err(e) => format!("ERR {e}"),
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
+            Ok(Command::Stats) => write_line(writer, &target.stats().render())?,
+            Ok(Command::Infer {
+                values,
+                priority,
+                tag: None,
+            }) => {
+                // v1 lockstep: block right here until the reply is out
+                let reply = match infer_lockstep(target, values, priority) {
+                    Ok(reply) => reply,
+                    Err(e) => format!("ERR {e}"),
+                };
+                write_line(writer, &reply)?;
+            }
+            Ok(Command::Infer {
+                values,
+                priority,
+                tag: Some(tag),
+            }) => {
+                let input = crate::fixedpoint::quantize_slice(&values);
+                // holding `pending` across submit_with makes the tag
+                // insertion atomic with the submission, so the demux can
+                // never receive a completion whose mapping is missing
+                let submitted = {
+                    let mut p = pending.lock().unwrap();
+                    target
+                        .submit_with(input, priority, completions.clone())
+                        .map(|id| {
+                            p.insert(id, tag);
+                        })
+                };
+                if let Err(e) = submitted {
+                    write_line(writer, &format!("ERR #{tag} {e:#}"))?;
+                }
+            }
+            Err((Some(tag), e)) => write_line(writer, &format!("ERR #{tag} {e}"))?,
+            Err((None, e)) => write_line(writer, &format!("ERR {e}"))?,
+        }
     }
 }
 
 enum Command {
-    Infer(Vec<f32>, Priority),
+    Infer {
+        values: Vec<f32>,
+        priority: Priority,
+        tag: Option<u64>,
+    },
     Stats,
     Quit,
 }
 
-fn parse_command(line: &str) -> Result<Command, String> {
+/// Parse failures carry the request's tag when one was readable, so a
+/// pipelined client gets the error routed to the right ticket.
+fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
     let mut parts = line.split_ascii_whitespace().peekable();
     match parts.next() {
         Some("INFER") => {
@@ -273,21 +459,37 @@ fn parse_command(line: &str) -> Result<Command, String> {
             } else {
                 Priority::Interactive
             };
+            let tag = match parts.peek() {
+                Some(t) if t.starts_with('#') => {
+                    let raw = &parts.next().expect("peeked")[1..];
+                    match raw.parse::<u64>() {
+                        Ok(t) => Some(t),
+                        Err(_) => {
+                            return Err((None, format!("bad tag {raw:?} (want #<u64>)")));
+                        }
+                    }
+                }
+                _ => None,
+            };
             let values: Result<Vec<f32>, _> = parts.map(str::parse::<f32>).collect();
             match values {
-                Ok(v) if !v.is_empty() => Ok(Command::Infer(v, priority)),
-                Ok(_) => Err("INFER needs at least one value".into()),
-                Err(e) => Err(format!("bad number: {e}")),
+                Ok(v) if !v.is_empty() => Ok(Command::Infer {
+                    values: v,
+                    priority,
+                    tag,
+                }),
+                Ok(_) => Err((tag, "INFER needs at least one value".into())),
+                Err(e) => Err((tag, format!("bad number: {e}"))),
             }
         }
         Some("STATS") => Ok(Command::Stats),
         Some("QUIT") => Ok(Command::Quit),
-        Some(other) => Err(format!("unknown command {other:?}")),
-        None => Err("empty command".into()),
+        Some(other) => Err((None, format!("unknown command {other:?}"))),
+        None => Err((None, "empty command".into())),
     }
 }
 
-fn infer(
+fn infer_lockstep(
     target: &dyn SubmitTarget,
     values: Vec<f32>,
     priority: Priority,
@@ -296,62 +498,320 @@ fn infer(
     let resp = target
         .infer_prioritized(input, priority)
         .map_err(|e| format!("{e:#}"))?;
-    let mut out = format!(
-        "OK {} {:.0} {:.0} {}",
-        resp.class,
-        resp.queue_seconds * 1e6,
-        resp.compute_seconds * 1e6,
-        resp.batch_occupancy
-    );
-    for v in &resp.output {
-        out.push(' ');
-        out.push_str(&v.to_string());
-    }
-    Ok(out)
+    Ok(render_ok(None, &resp))
 }
 
-/// Minimal blocking client for the protocol (used by examples and tests).
+/// One parsed `OK` reply off the wire.
+#[derive(Debug, Clone)]
+pub struct NetResponse {
+    pub class: usize,
+    pub queue_us: f64,
+    pub compute_us: f64,
+    pub batch_occupancy: usize,
+    /// (s_{L-1}) q7.8 output activations.
+    pub outputs: Vec<i32>,
+}
+
+impl NetResponse {
+    fn parse(body: &str) -> Result<Self, String> {
+        let mut parts = body.split_ascii_whitespace();
+        let mut field = |name: &str| parts.next().ok_or_else(|| format!("missing {name}"));
+        let class = field("class")?.parse::<usize>().map_err(|e| format!("class: {e}"))?;
+        let queue_us = field("queue_us")?.parse::<f64>().map_err(|e| format!("queue: {e}"))?;
+        let compute_us = field("compute_us")?
+            .parse::<f64>()
+            .map_err(|e| format!("compute: {e}"))?;
+        let batch_occupancy = field("occupancy")?
+            .parse::<usize>()
+            .map_err(|e| format!("occupancy: {e}"))?;
+        let outputs = parts
+            .map(str::parse::<i32>)
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| format!("outputs: {e}"))?;
+        Ok(Self {
+            class,
+            queue_us,
+            compute_us,
+            batch_occupancy,
+            outputs,
+        })
+    }
+}
+
+type WireResult = std::result::Result<NetResponse, String>;
+
+/// Completion handle for one pipelined wire request: the tagged twin of
+/// the in-process [`Ticket`].
+#[derive(Debug)]
+pub struct NetTicket {
+    tag: u64,
+    priority: Priority,
+    rx: mpsc::Receiver<WireResult>,
+    done: bool,
+}
+
+impl NetTicket {
+    /// The wire tag this request was submitted under.
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    pub fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    fn accept(&mut self, result: WireResult) -> Result<NetResponse> {
+        self.done = true;
+        result.map_err(|e| anyhow::anyhow!("request #{}: server error: {e}", self.tag))
+    }
+
+    /// Block until this request's tagged reply arrives (replies route by
+    /// tag, so any number of sibling tickets may complete first).
+    pub fn wait(&mut self) -> Result<NetResponse> {
+        if self.done {
+            bail!("request #{}: ticket already yielded its reply", self.tag);
+        }
+        match self.rx.recv() {
+            Ok(result) => self.accept(result),
+            Err(_) => {
+                self.done = true;
+                bail!("request #{}: connection closed before its reply", self.tag);
+            }
+        }
+    }
+
+    /// Like [`NetTicket::wait`] with a bound; on timeout the request is
+    /// still in flight and the ticket remains waitable.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<NetResponse> {
+        if self.done {
+            bail!("request #{}: ticket already yielded its reply", self.tag);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => self.accept(result),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                bail!("request #{}: no reply within {timeout:?}", self.tag)
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.done = true;
+                bail!("request #{}: connection closed before its reply", self.tag);
+            }
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` while the request is in flight.
+    pub fn try_wait(&mut self) -> Result<Option<NetResponse>> {
+        if self.done {
+            bail!("request #{}: ticket already yielded its reply", self.tag);
+        }
+        match self.rx.try_recv() {
+            Ok(result) => self.accept(result).map(Some),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.done = true;
+                bail!("request #{}: connection closed before its reply", self.tag);
+            }
+        }
+    }
+}
+
+/// Client-side routing state shared with the reader thread.
+struct ClientShared {
+    pending: HashMap<u64, mpsc::Sender<WireResult>>,
+    poisoned: Option<String>,
+}
+
+/// Mark the connection unusable and fail every pending ticket with the
+/// reason (first poisoning wins; later ones keep the original cause).
+fn poison_client(shared: &Mutex<ClientShared>, reason: &str) {
+    let mut s = shared.lock().unwrap();
+    if s.poisoned.is_none() {
+        s.poisoned = Some(reason.to_string());
+    }
+    let reason = s.poisoned.clone().expect("just set");
+    for (_, tx) in s.pending.drain() {
+        let _ = tx.send(Err(format!("connection poisoned: {reason}")));
+    }
+}
+
+/// Split a tagged reply line into its tag and parsed body; `None` for
+/// untagged (v1 / STATS) lines, which belong to the lockstep path.
+fn parse_tagged_reply(line: &str) -> Option<(u64, WireResult)> {
+    if let Some(rest) = line.strip_prefix("OK #") {
+        let (tag_str, body) = rest.split_once(' ').unwrap_or((rest, ""));
+        let tag = tag_str.parse::<u64>().ok()?;
+        Some((tag, NetResponse::parse(body)))
+    } else if let Some(rest) = line.strip_prefix("ERR #") {
+        let (tag_str, body) = rest.split_once(' ').unwrap_or((rest, ""));
+        let tag = tag_str.parse::<u64>().ok()?;
+        Some((tag, Err(body.to_string())))
+    } else {
+        None
+    }
+}
+
+/// The client's reader thread: routes tagged replies to their tickets and
+/// untagged (lockstep) replies to the blocking helpers, in arrival order.
+fn client_reader(
+    mut reader: BufReader<TcpStream>,
+    shared: Arc<Mutex<ClientShared>>,
+    lockstep: mpsc::Sender<String>,
+) {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return poison_client(&shared, "connection closed by server"),
+            Ok(_) => {
+                let trimmed = line.trim_end();
+                match parse_tagged_reply(trimmed) {
+                    Some((tag, result)) => {
+                        let entry = shared.lock().unwrap().pending.remove(&tag);
+                        // a missing entry is a reply for a dropped ticket:
+                        // discard (the send below also discards if the
+                        // ticket was dropped after registration)
+                        if let Some(tx) = entry {
+                            let _ = tx.send(result);
+                        }
+                    }
+                    None => {
+                        let _ = lockstep.send(trimmed.to_string());
+                    }
+                }
+            }
+            Err(e) => return poison_client(&shared, &format!("read error: {e}")),
+        }
+    }
+}
+
+/// Pipelined client for the protocol (used by benches, examples, tests).
+///
+/// Two faces over one connection:
+///
+/// * [`NetClient::submit`] — protocol-v2 pipelining: tag the request,
+///   return a [`NetTicket`]; a background reader routes each tagged reply
+///   to its ticket, so any number of requests ride the connection at
+///   once, completing out of order.
+/// * [`NetClient::infer`]/[`NetClient::infer_with`]/[`NetClient::stats`]
+///   — the v1 untagged lockstep forms, kept byte-identical on the wire
+///   (they double as the backward-compat coverage for v1 servers).
+///
+/// The poison rule carries over from the lockstep client: a read error or
+/// a lockstep reply timeout desyncs untagged request/reply pairing, so
+/// the connection fails every pending ticket and refuses further use —
+/// reconnect to keep going.  Tagged waits are bounded per ticket
+/// ([`NetTicket::wait_timeout`]) and do *not* poison: a late tagged reply
+/// still routes by tag.
 pub struct NetClient {
-    reader: BufReader<TcpStream>,
     writer: TcpStream,
-    /// A read error (e.g. a [`Self::set_timeout`] deadline) can leave a
-    /// partial reply buffered, desyncing request/reply framing — once
-    /// that happens every further round trip fails instead of silently
-    /// returning another request's answer.
-    poisoned: bool,
+    next_tag: u64,
+    /// Bound for the blocking (lockstep) helpers; ticket waits take their
+    /// own bound.
+    timeout: Cell<Option<Duration>>,
+    shared: Arc<Mutex<ClientShared>>,
+    lockstep: mpsc::Receiver<String>,
+    reader: Option<thread::JoinHandle<()>>,
 }
 
 impl NetClient {
     pub fn connect(addr: &std::net::SocketAddr) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
+        let shared = Arc::new(Mutex::new(ClientShared {
+            pending: HashMap::new(),
+            poisoned: None,
+        }));
+        let (lockstep_tx, lockstep_rx) = mpsc::channel();
+        let buf = BufReader::new(stream.try_clone()?);
+        let shared2 = shared.clone();
+        let reader = thread::Builder::new()
+            .name("zdnn-net-client".into())
+            .spawn(move || client_reader(buf, shared2, lockstep_tx))?;
         Ok(Self {
-            reader: BufReader::new(stream.try_clone()?),
             writer: stream,
-            poisoned: false,
+            next_tag: 0,
+            timeout: Cell::new(None),
+            shared,
+            lockstep: lockstep_rx,
+            reader: Some(reader),
         })
     }
 
-    /// Bound every reply wait (hangs become errors — handy in tests that
-    /// must fail loudly instead of deadlocking on a starved request).  A
-    /// timed-out reply poisons the connection: reconnect to keep going.
+    /// Bound every *blocking* helper's reply wait (hangs become errors —
+    /// handy in tests that must fail loudly instead of deadlocking on a
+    /// starved request).  A timed-out lockstep reply poisons the
+    /// connection: reconnect to keep going.  [`NetTicket`] waits are
+    /// bounded per ticket instead and never poison.
     pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
-        self.writer.set_read_timeout(timeout)?;
+        self.timeout.set(timeout);
         Ok(())
     }
 
-    fn round_trip(&mut self, line: &str) -> Result<String> {
-        if self.poisoned {
-            anyhow::bail!("connection poisoned by an earlier read error; reconnect");
+    fn check_poisoned(&self) -> Result<()> {
+        if let Some(reason) = &self.shared.lock().unwrap().poisoned {
+            bail!("connection poisoned ({reason}); reconnect");
         }
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut reply = String::new();
-        if let Err(e) = self.reader.read_line(&mut reply) {
-            self.poisoned = true;
+        Ok(())
+    }
+
+    /// Pipeline one request: write the tagged line and return immediately
+    /// with the completion [`NetTicket`].  Submit as many as the serving
+    /// stack's queue depth allows before waiting any of them out — that
+    /// window is what keeps the accelerator's batch slots full from one
+    /// connection.
+    pub fn submit(&mut self, values: &[f32], priority: Priority) -> Result<NetTicket> {
+        self.check_poisoned()?;
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let (tx, rx) = mpsc::channel();
+        self.shared.lock().unwrap().pending.insert(tag, tx);
+        let mut line = String::from("INFER");
+        if priority == Priority::Bulk {
+            line.push_str(" BULK");
+        }
+        line.push_str(&format!(" #{tag}"));
+        for v in values {
+            line.push(' ');
+            line.push_str(&v.to_string());
+        }
+        line.push('\n');
+        if let Err(e) = self.writer.write_all(line.as_bytes()) {
+            self.shared.lock().unwrap().pending.remove(&tag);
+            poison_client(&self.shared, &format!("write error: {e}"));
             return Err(e.into());
         }
-        Ok(reply.trim_end().to_string())
+        Ok(NetTicket {
+            tag,
+            priority,
+            rx,
+            done: false,
+        })
+    }
+
+    fn round_trip(&mut self, line: &str) -> Result<String> {
+        self.check_poisoned()?;
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let reply = match self.timeout.get() {
+            None => self.lockstep.recv().ok(),
+            Some(t) => self.lockstep.recv_timeout(t).ok(),
+        };
+        match reply {
+            Some(r) => Ok(r),
+            None => {
+                // reader died (its poison reason says why) or the lockstep
+                // wait timed out — a late untagged reply would desync every
+                // later round trip, so the connection is done either way
+                poison_client(&self.shared, "lockstep reply timed out");
+                let reason = self
+                    .shared
+                    .lock()
+                    .unwrap()
+                    .poisoned
+                    .clone()
+                    .expect("poisoned above");
+                bail!("no lockstep reply ({reason}); reconnect")
+            }
+        }
     }
 
     /// Returns (class, q7.8 outputs) at Interactive priority.
@@ -359,7 +819,8 @@ impl NetClient {
         self.infer_with(values, Priority::Interactive)
     }
 
-    /// Returns (class, q7.8 outputs) at an explicit priority class.
+    /// Returns (class, q7.8 outputs) at an explicit priority class, on the
+    /// v1 untagged lockstep wire form.
     pub fn infer_with(&mut self, values: &[f32], priority: Priority) -> Result<(usize, Vec<i32>)> {
         let mut line = String::from("INFER");
         if priority == Priority::Bulk {
@@ -370,18 +831,13 @@ impl NetClient {
             line.push_str(&v.to_string());
         }
         let reply = self.round_trip(&line)?;
-        let mut parts = reply.split_ascii_whitespace();
-        match parts.next() {
-            Some("OK") => {
-                let class: usize = parts.next().context("missing class")?.parse()?;
-                let rest: Vec<&str> = parts.collect();
-                let outputs = rest[3..]
-                    .iter()
-                    .map(|s| s.parse::<i32>())
-                    .collect::<Result<Vec<_>, _>>()?;
-                Ok((class, outputs))
+        match reply.strip_prefix("OK ") {
+            Some(body) => {
+                let resp = NetResponse::parse(body)
+                    .map_err(|e| anyhow::anyhow!("malformed reply: {e} in {reply:?}"))?;
+                Ok((resp.class, resp.outputs))
             }
-            _ => anyhow::bail!("server error: {reply}"),
+            None => bail!("server error: {reply}"),
         }
     }
 
@@ -392,6 +848,16 @@ impl NetClient {
     pub fn quit(mut self) -> Result<()> {
         self.writer.write_all(b"QUIT\n")?;
         Ok(())
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        // unblock the reader thread (it holds a clone of this socket)
+        let _ = self.writer.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -457,6 +923,37 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_tickets_complete_out_of_band() {
+        // many tagged requests in flight on ONE connection — the exact
+        // thing protocol v1 could not express — all golden
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        let mut tickets = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..10usize {
+            let vals: Vec<f32> = (0..64).map(|k| ((k + i) as f32) / 70.0 - 0.4).collect();
+            let prio = if i % 2 == 0 {
+                Priority::Interactive
+            } else {
+                Priority::Bulk
+            };
+            tickets.push(client.submit(&vals, prio).unwrap());
+            values.push(vals);
+        }
+        for (i, mut t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.tag(), i as u64);
+            let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
+            let xq = crate::fixedpoint::quantize_slice(&values[i]);
+            let x = crate::tensor::MatI::from_vec(1, 64, xq);
+            let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
+            assert_eq!(resp.outputs, golden.row(0), "ticket {i}");
+            assert!(resp.batch_occupancy >= 1, "occupancy rides the wire");
+        }
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
     fn stats_and_errors() {
         let (fe, _server, _) = start_stack();
         let mut client = NetClient::connect(&fe.addr()).unwrap();
@@ -478,6 +975,25 @@ mod tests {
         assert!(stats.contains("workers=1"), "{stats}");
         assert!(stats.contains("promoted=0"), "{stats}");
         assert!(stats.contains("p99_latency_us="), "{stats}");
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn tagged_submit_errors_route_to_their_ticket() {
+        // a tagged request the server cannot serve must come back as
+        // ERR #<tag>, reaching exactly the ticket that sent it: here the
+        // line parses but the submission fails on input width
+        let (fe, _server, _) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        let mut short = client.submit(&[1.0, 2.0], Priority::Interactive).unwrap();
+        let e = short.wait_timeout(Duration::from_secs(10)).unwrap_err();
+        assert!(e.to_string().contains("server error"), "{e}");
+        assert!(e.to_string().contains("input width"), "{e}");
+        // the connection is still healthy for both wire forms
+        let _ = client.infer(&vec![0.25f32; 64]).expect("lockstep after tagged ERR");
+        let mut ok = client.submit(&vec![0.25f32; 64], Priority::Bulk).unwrap();
+        ok.wait_timeout(Duration::from_secs(10)).expect("tagged after tagged ERR");
         client.quit().unwrap();
         fe.stop();
     }
@@ -512,5 +1028,68 @@ mod tests {
         let client = NetClient::connect(&fe.addr()).unwrap();
         fe.stop(); // returns because connections poll the stop flag
         drop(client);
+    }
+
+    #[test]
+    fn parse_command_reads_tags_and_priorities() {
+        match parse_command("INFER #7 0.5 1.5") {
+            Ok(Command::Infer {
+                values,
+                priority,
+                tag,
+            }) => {
+                assert_eq!(values, vec![0.5, 1.5]);
+                assert_eq!(priority, Priority::Interactive);
+                assert_eq!(tag, Some(7));
+            }
+            _ => panic!("tagged INFER must parse"),
+        }
+        match parse_command("INFER BULK #12 0.25") {
+            Ok(Command::Infer { priority, tag, .. }) => {
+                assert_eq!(priority, Priority::Bulk);
+                assert_eq!(tag, Some(12));
+            }
+            _ => panic!("tagged bulk INFER must parse"),
+        }
+        // a readable tag rides the parse error so the ERR can be routed
+        match parse_command("INFER #3 zork") {
+            Err((Some(3), e)) => assert!(e.contains("bad number"), "{e}"),
+            other => panic!("expected tagged parse error, got {other:?}"),
+        }
+        match parse_command("INFER #3") {
+            Err((Some(3), e)) => assert!(e.contains("at least one value"), "{e}"),
+            other => panic!("expected tagged parse error, got {other:?}"),
+        }
+        assert!(matches!(parse_command("INFER #nope 1.0"), Err((None, _))));
+        // v1 untagged unchanged
+        match parse_command("INFER 1.0") {
+            Ok(Command::Infer { tag, .. }) => assert_eq!(tag, None),
+            _ => panic!("untagged INFER must parse"),
+        }
+    }
+
+    #[test]
+    fn tagged_reply_lines_parse_back() {
+        let resp = Response {
+            id: 9,
+            output: vec![5, -3],
+            class: 1,
+            queue_seconds: 10e-6,
+            compute_seconds: 20e-6,
+            batch_occupancy: 4,
+        };
+        let line = render_ok(Some(42), &resp);
+        let (tag, parsed) = parse_tagged_reply(&line).expect("tagged OK parses");
+        assert_eq!(tag, 42);
+        let parsed = parsed.unwrap();
+        assert_eq!(parsed.class, 1);
+        assert_eq!(parsed.outputs, vec![5, -3]);
+        assert_eq!(parsed.batch_occupancy, 4);
+        let (tag, parsed) = parse_tagged_reply("ERR #7 queue full (64 in flight)").unwrap();
+        assert_eq!(tag, 7);
+        assert!(parsed.unwrap_err().contains("queue full"));
+        // untagged lines belong to the lockstep path
+        assert!(parse_tagged_reply(&render_ok(None, &resp)).is_none());
+        assert!(parse_tagged_reply("STATS requests=1").is_none());
     }
 }

@@ -1,7 +1,12 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the coordinator, and the
+//! client-facing completion surface: every submission path in the crate
+//! hands back a [`Ticket`] (completion handle) rather than a raw channel,
+//! and every reply crosses the wire between threads as a [`Reply`] that
+//! carries its [`RequestId`] — so one completion channel can collect many
+//! requests' replies and demux them (the TCP frontend does exactly that).
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -20,6 +25,12 @@ pub enum Priority {
     Bulk,
 }
 
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Interactive
+    }
+}
+
 impl Priority {
     pub fn parse(s: &str) -> Result<Self> {
         match s {
@@ -32,8 +43,7 @@ impl Priority {
 
 /// Engine failure surfaced to a waiting client.  One `infer` error fails
 /// every request in the batch, and `anyhow::Error` is not `Clone`, so the
-/// error crosses the reply channel as this string-backed type; `?` at the
-/// receiver converts it back into `anyhow::Error`.
+/// error crosses the reply channel as this string-backed type.
 #[derive(Debug, Clone)]
 pub struct InferError(pub String);
 
@@ -45,10 +55,17 @@ impl std::fmt::Display for InferError {
 
 impl std::error::Error for InferError {}
 
-/// What arrives on a reply channel: the response, or the engine error
+/// What arrives on a completion channel: the response, or the engine error
 /// that failed the whole batch (the dispatcher decrements its in-flight
-/// accounting either way, so backpressure slots never leak).
-pub type Reply = std::result::Result<Response, InferError>;
+/// accounting either way, so backpressure slots never leak).  The id rides
+/// alongside the result so error replies stay attributable and so many
+/// requests can share one completion channel (the TCP frontend's
+/// writer-side demux keys on it).
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub id: RequestId,
+    pub result: std::result::Result<Response, InferError>,
+}
 
 /// One inference request: a single input sample on the Q7.8 grid.
 #[derive(Debug)]
@@ -58,7 +75,8 @@ pub struct Request {
     pub input: Vec<i32>,
     /// Enqueue timestamp (for end-to-end latency accounting).
     pub queued_at: Instant,
-    /// Completion channel.
+    /// Completion channel (may be shared across requests; [`Reply::id`]
+    /// disambiguates).
     pub reply: mpsc::Sender<Reply>,
 }
 
@@ -84,6 +102,243 @@ impl Response {
     }
 }
 
+/// Per-submission knobs: the priority class plus optional client-side
+/// metadata carried on the returned [`Ticket`] (an opaque correlation tag
+/// and a wait deadline — both are client concerns; schedulers only see the
+/// priority).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// Opaque client correlation tag, echoed by [`Ticket::tag`].
+    pub tag: Option<u64>,
+    /// Absolute deadline bounding [`Ticket::wait`].
+    pub deadline: Option<Instant>,
+}
+
+impl SubmitOptions {
+    pub fn interactive() -> Self {
+        Self::default()
+    }
+
+    pub fn bulk() -> Self {
+        Self::with_priority(Priority::Bulk)
+    }
+
+    pub fn with_priority(priority: Priority) -> Self {
+        Self {
+            priority,
+            ..Self::default()
+        }
+    }
+
+    pub fn tag(mut self, tag: u64) -> Self {
+        self.tag = Some(tag);
+        self
+    }
+
+    pub fn deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    pub fn deadline_in(self, after: Duration) -> Self {
+        self.deadline(Instant::now() + after)
+    }
+}
+
+/// Why a [`Ticket`] wait did not produce a [`Response`].  Each failure
+/// mode is distinct and carries the request id — a disconnected serving
+/// thread no longer renders like an engine `InferError` (the old raw
+/// `rx.recv()??` path flattened both into one anonymous string).
+#[derive(Debug)]
+pub enum TicketError {
+    /// The engine executed the batch and failed; the serving stack is
+    /// still up and already released the request's backpressure slot.
+    Engine { id: RequestId, source: InferError },
+    /// The reply channel died without a reply: the serving thread is gone
+    /// (engine-build failure, panic, or shutdown race).
+    Disconnected { id: RequestId },
+    /// [`Ticket::wait_timeout`] elapsed; the request is still in flight
+    /// and the ticket can be waited on again.
+    Timeout { id: RequestId, waited: Duration },
+    /// The [`SubmitOptions::deadline`] passed before a reply arrived; the
+    /// request is still in flight.
+    DeadlineExceeded { id: RequestId },
+    /// The ticket already yielded its reply (exactly-once delivery).
+    AlreadyCompleted { id: RequestId },
+}
+
+impl TicketError {
+    pub fn id(&self) -> RequestId {
+        match self {
+            TicketError::Engine { id, .. }
+            | TicketError::Disconnected { id }
+            | TicketError::Timeout { id, .. }
+            | TicketError::DeadlineExceeded { id }
+            | TicketError::AlreadyCompleted { id } => *id,
+        }
+    }
+}
+
+impl std::fmt::Display for TicketError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TicketError::Engine { id, source } => {
+                write!(f, "request {id}: engine failed: {source}")
+            }
+            TicketError::Disconnected { id } => write!(
+                f,
+                "request {id}: reply channel disconnected before any reply \
+                 (serving thread gone)"
+            ),
+            TicketError::Timeout { id, waited } => {
+                write!(f, "request {id}: no reply within {waited:?}")
+            }
+            TicketError::DeadlineExceeded { id } => {
+                write!(f, "request {id}: client deadline passed before a reply")
+            }
+            TicketError::AlreadyCompleted { id } => {
+                write!(f, "request {id}: ticket already yielded its reply")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TicketError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TicketError::Engine { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// First-class completion handle for one submitted request: the id, the
+/// priority it was scheduled at, the client's optional tag/deadline, and
+/// the wait surface (`wait` / `wait_timeout` / `try_wait`).  Produced by
+/// [`SubmitTarget::submit`](super::net::SubmitTarget::submit); replaces
+/// the raw `(RequestId, mpsc::Receiver<Reply>)` pairs the submission APIs
+/// used to expose.
+#[derive(Debug)]
+pub struct Ticket {
+    id: RequestId,
+    priority: Priority,
+    tag: Option<u64>,
+    deadline: Option<Instant>,
+    rx: mpsc::Receiver<Reply>,
+    done: bool,
+}
+
+impl Ticket {
+    pub fn new(id: RequestId, opts: &SubmitOptions, rx: mpsc::Receiver<Reply>) -> Self {
+        Self {
+            id,
+            priority: opts.priority,
+            tag: opts.tag,
+            deadline: opts.deadline,
+            rx,
+            done: false,
+        }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    pub fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    pub fn tag(&self) -> Option<u64> {
+        self.tag
+    }
+
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    fn accept(&mut self, reply: Reply) -> Result<Response, TicketError> {
+        self.done = true;
+        match reply.result {
+            Ok(resp) => Ok(resp),
+            Err(source) => Err(TicketError::Engine {
+                id: self.id,
+                source,
+            }),
+        }
+    }
+
+    /// Block until the reply arrives (bounded by the submit-time deadline
+    /// when one was set).  Engine failures surface as
+    /// [`TicketError::Engine`], a dead serving thread as
+    /// [`TicketError::Disconnected`] — never as a hang.
+    pub fn wait(&mut self) -> Result<Response, TicketError> {
+        if self.done {
+            return Err(TicketError::AlreadyCompleted { id: self.id });
+        }
+        match self.deadline {
+            None => match self.rx.recv() {
+                Ok(reply) => self.accept(reply),
+                Err(_) => {
+                    self.done = true;
+                    Err(TicketError::Disconnected { id: self.id })
+                }
+            },
+            Some(at) => {
+                let left = at.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Err(TicketError::DeadlineExceeded { id: self.id });
+                }
+                match self.rx.recv_timeout(left) {
+                    Ok(reply) => self.accept(reply),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        Err(TicketError::DeadlineExceeded { id: self.id })
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        self.done = true;
+                        Err(TicketError::Disconnected { id: self.id })
+                    }
+                }
+            }
+        }
+    }
+
+    /// Like [`Ticket::wait`] with an explicit bound.  On
+    /// [`TicketError::Timeout`] the request is still in flight and the
+    /// ticket remains waitable.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Response, TicketError> {
+        if self.done {
+            return Err(TicketError::AlreadyCompleted { id: self.id });
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => self.accept(reply),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(TicketError::Timeout {
+                id: self.id,
+                waited: timeout,
+            }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.done = true;
+                Err(TicketError::Disconnected { id: self.id })
+            }
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` while the request is in flight.
+    pub fn try_wait(&mut self) -> Result<Option<Response>, TicketError> {
+        if self.done {
+            return Err(TicketError::AlreadyCompleted { id: self.id });
+        }
+        match self.rx.try_recv() {
+            Ok(reply) => self.accept(reply).map(Some),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.done = true;
+                Err(TicketError::Disconnected { id: self.id })
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +354,93 @@ mod tests {
             batch_occupancy: 8,
         };
         assert!((r.total_seconds() - 2.0e-3).abs() < 1e-12);
+    }
+
+    fn mk_ticket(opts: SubmitOptions) -> (mpsc::Sender<Reply>, Ticket) {
+        let (tx, rx) = mpsc::channel();
+        (tx, Ticket::new(7, &opts, rx))
+    }
+
+    fn ok_reply(id: RequestId) -> Reply {
+        Reply {
+            id,
+            result: Ok(Response {
+                id,
+                output: vec![1, 2, 3],
+                class: 2,
+                queue_seconds: 0.0,
+                compute_seconds: 0.0,
+                batch_occupancy: 1,
+            }),
+        }
+    }
+
+    #[test]
+    fn ticket_carries_submit_metadata() {
+        let (_tx, t) = mk_ticket(SubmitOptions::bulk().tag(42));
+        assert_eq!(t.id(), 7);
+        assert_eq!(t.priority(), Priority::Bulk);
+        assert_eq!(t.tag(), Some(42));
+        assert!(t.deadline().is_none());
+    }
+
+    #[test]
+    fn wait_yields_response_exactly_once() {
+        let (tx, mut t) = mk_ticket(SubmitOptions::interactive());
+        tx.send(ok_reply(7)).unwrap();
+        assert_eq!(t.wait().unwrap().class, 2);
+        // exactly-once: a second wait is a distinct, contextful error
+        match t.wait() {
+            Err(TicketError::AlreadyCompleted { id: 7 }) => {}
+            other => panic!("expected AlreadyCompleted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_error_and_disconnect_are_distinct() {
+        // engine failure: the reply arrived and says so, with the id
+        let (tx, mut t) = mk_ticket(SubmitOptions::interactive());
+        tx.send(Reply {
+            id: 7,
+            result: Err(InferError("injected".into())),
+        })
+        .unwrap();
+        let e = t.wait().unwrap_err();
+        assert!(matches!(e, TicketError::Engine { id: 7, .. }), "{e:?}");
+        assert!(e.to_string().contains("engine failed: injected"), "{e}");
+
+        // dead serving thread: no reply will ever come — different variant,
+        // different message (the old rx.recv()?? path rendered both the same)
+        let (tx, mut t) = mk_ticket(SubmitOptions::interactive());
+        drop(tx);
+        let e = t.wait().unwrap_err();
+        assert!(matches!(e, TicketError::Disconnected { id: 7 }), "{e:?}");
+        assert!(e.to_string().contains("serving thread gone"), "{e}");
+    }
+
+    #[test]
+    fn wait_timeout_leaves_ticket_waitable() {
+        let (tx, mut t) = mk_ticket(SubmitOptions::interactive());
+        let e = t.wait_timeout(Duration::from_millis(5)).unwrap_err();
+        assert!(matches!(e, TicketError::Timeout { id: 7, .. }), "{e:?}");
+        tx.send(ok_reply(7)).unwrap();
+        assert!(t.wait().is_ok(), "timeout must not consume the ticket");
+    }
+
+    #[test]
+    fn deadline_bounds_wait() {
+        let (_tx, mut t) = mk_ticket(
+            SubmitOptions::interactive().deadline_in(Duration::from_millis(5)),
+        );
+        let e = t.wait().unwrap_err();
+        assert!(matches!(e, TicketError::DeadlineExceeded { id: 7 }), "{e:?}");
+    }
+
+    #[test]
+    fn try_wait_polls_without_blocking() {
+        let (tx, mut t) = mk_ticket(SubmitOptions::interactive());
+        assert!(t.try_wait().unwrap().is_none());
+        tx.send(ok_reply(7)).unwrap();
+        assert_eq!(t.try_wait().unwrap().unwrap().class, 2);
     }
 }

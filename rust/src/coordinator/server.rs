@@ -73,9 +73,11 @@ impl Server {
 }
 
 impl ServerHandle {
-    /// Submit one sample; returns the response receiver or an immediate
-    /// backpressure error when the queue is full.
-    pub fn submit(&self, input: Vec<i32>) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
+    /// The submission primitive: validate, reserve a backpressure slot,
+    /// and enqueue with the caller's completion sender.  Everything
+    /// client-facing ([`SubmitTarget::submit`]'s tickets, the blocking
+    /// `infer_*` helpers) derives from this through the trait.
+    pub(crate) fn enqueue(&self, input: Vec<i32>, reply: mpsc::Sender<Reply>) -> Result<RequestId> {
         if self.shutting_down.load(Ordering::SeqCst) {
             bail!("server is shutting down");
         }
@@ -100,12 +102,11 @@ impl ServerHandle {
             }
         }
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (rtx, rrx) = mpsc::channel();
         let req = Request {
             id,
             input,
             queued_at: Instant::now(),
-            reply: rtx,
+            reply,
         };
         if self.tx.send(Command::Infer(req, ())).is_err() {
             // roll the reservation back (mirrors the pool): a dead engine
@@ -114,13 +115,13 @@ impl ServerHandle {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
             bail!("engine thread gone");
         }
-        Ok((id, rrx))
+        Ok(id)
     }
 
-    /// Convenience: submit and block for the response (engine failures
-    /// surface as errors here, not as hangs).
+    /// Convenience: submit and block for the response — a thin wrapper
+    /// over the one [`SubmitTarget`] blocking path.
     pub fn infer_blocking(&self, input: Vec<i32>) -> Result<Response> {
-        self.infer_prioritized(input, Priority::Interactive)
+        SubmitTarget::infer(self, input)
     }
 
     /// Graceful shutdown: drains pending requests, joins the engine.
@@ -143,15 +144,16 @@ impl Drop for ServerHandle {
     }
 }
 
-/// The TCP frontend drives a single-engine server exactly like a pool;
-/// the FIFO batcher simply ignores the priority class.
+/// The frontends drive a single-engine server exactly like a pool; the
+/// FIFO batcher simply ignores the priority class.
 impl SubmitTarget for ServerHandle {
-    fn submit_prioritized(
+    fn submit_with(
         &self,
         input: Vec<i32>,
         _priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
-        self.submit(input)
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
+        self.enqueue(input, reply)
     }
 
     fn stats(&self) -> StatsReport {
@@ -222,6 +224,7 @@ fn engine_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::SubmitOptions;
     use crate::nn::spec::quickstart;
     use crate::nn::{forward_q, quantize_matrix, QNetwork};
     use crate::tensor::{MatF, MatI};
@@ -272,16 +275,18 @@ mod tests {
         let factory = test_factory(4);
         let net = factory.net.clone();
         let server = Server::start(&test_config(4), factory).unwrap();
-        let mut receivers = Vec::new();
+        let mut tickets = Vec::new();
         let mut inputs = Vec::new();
-        for i in 0..10 {
+        for i in 0..10u64 {
             let input = rand_sample(i);
             inputs.push(input.clone());
-            receivers.push(server.submit(input).unwrap());
+            // a client-side tag rides the ticket untouched
+            tickets.push(server.submit(input, SubmitOptions::default().tag(1000 + i)).unwrap());
         }
-        for (i, (id, rx)) in receivers.into_iter().enumerate() {
-            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
-            assert_eq!(resp.id, id);
+        for (i, mut t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.tag(), Some(1000 + i as u64));
+            let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, t.id());
             // verify against the golden forward
             let x = MatI::from_vec(1, 64, inputs[i].clone());
             let want = forward_q(&net, &x).unwrap();
@@ -319,8 +324,8 @@ mod tests {
         let mut held = Vec::new();
         let mut rejected = false;
         for i in 0..64 {
-            match server.submit(rand_sample(i)) {
-                Ok(pair) => held.push(pair),
+            match server.submit(rand_sample(i), SubmitOptions::default()) {
+                Ok(ticket) => held.push(ticket),
                 Err(_) => {
                     rejected = true;
                     break;
@@ -342,7 +347,7 @@ mod tests {
     #[test]
     fn wrong_input_width_rejected() {
         let server = Server::start(&test_config(2), test_factory(2)).unwrap();
-        assert!(server.submit(vec![0i32; 3]).is_err());
+        assert!(server.submit(vec![0i32; 3], SubmitOptions::default()).is_err());
         server.shutdown().unwrap();
     }
 
@@ -354,12 +359,11 @@ mod tests {
             ..Default::default()
         };
         let server = Server::start(&cfg, test_factory(16)).unwrap();
-        let rxs: Vec<_> = (0..5)
-            .map(|i| server.submit(rand_sample(i)).unwrap().1)
-            .collect();
+        let inputs: Vec<_> = (0..5).map(rand_sample).collect();
+        let mut tickets = server.submit_many(inputs, SubmitOptions::bulk()).unwrap();
         server.shutdown().unwrap();
-        for rx in rxs {
-            assert!(rx.recv_timeout(Duration::from_secs(1)).unwrap().is_ok());
+        for t in tickets.iter_mut() {
+            assert!(t.wait_timeout(Duration::from_secs(1)).is_ok());
         }
     }
 

@@ -16,7 +16,7 @@
 //!   bench <which>                regenerate a paper table/figure, or run the
 //!                                serving benches (table2|table3|table4|fig7|
 //!                                gops|nopt|combined|ablation|sparse|slo|
-//!                                calibrate|compress|all)
+//!                                calibrate|compress|net|all)
 //!
 //! `infer`, `serve`, and `serve-pool` take `--artifact model.rpz` to serve
 //! a compressed model directly: the network weights AND the calibrated
@@ -32,7 +32,7 @@ use zynq_dnn::compress::{
     accuracy_q, save_artifact, CompressedModel, EvalSet, SearchConfig, DEFAULT_LADDER,
 };
 use zynq_dnn::config::ServerConfig;
-use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
 use zynq_dnn::serve::{start_serving, Priority, Serving};
 use zynq_dnn::nn::spec::by_name;
 use zynq_dnn::nn::{load_weights, save_weights};
@@ -505,7 +505,9 @@ fn serve(args: &Args) -> Result<()> {
         );
         let fe = zynq_dnn::coordinator::NetFrontend::start(&cfg.listen, serving)?;
         eprintln!(
-            "listening on {} — protocol: INFER [BULK] <f32>... | STATS | QUIT",
+            "listening on {} — protocol v2: INFER [BULK] [#<id>] <f32>... | STATS | QUIT \
+             (tagged requests pipeline with out-of-order tagged replies; \
+             untagged requests keep v1 lockstep)",
             fe.addr()
         );
         loop {
@@ -531,16 +533,16 @@ fn serve(args: &Args) -> Result<()> {
     eprintln!("serving {name} on {backend}, batch {batch}, deadline {deadline} µs");
 
     let mut rng = Xoshiro256::seed_from_u64(2);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for _ in 0..requests {
         let input: Vec<i32> = (0..s_in)
             .map(|_| zynq_dnn::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
             .collect();
-        rxs.push(server.submit(input)?.1);
+        tickets.push(server.submit(input, SubmitOptions::default())?);
     }
     let mut classes = vec![0usize; 10];
-    for rx in rxs {
-        let resp = rx.recv()??;
+    for mut ticket in tickets {
+        let resp = ticket.wait()?;
         if resp.class < classes.len() {
             classes[resp.class] += 1;
         }
@@ -593,7 +595,7 @@ fn serve_pool(args: &Args) -> Result<()> {
     );
 
     let mut rng = Xoshiro256::seed_from_u64(2);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..requests {
         let input: Vec<i32> = (0..s_in)
             .map(|_| zynq_dnn::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
@@ -603,10 +605,10 @@ fn serve_pool(args: &Args) -> Result<()> {
         } else {
             Priority::Bulk
         };
-        rxs.push(serving.submit(input, prio)?.1);
+        tickets.push(serving.submit(input, SubmitOptions::with_priority(prio))?);
     }
-    for rx in rxs {
-        rx.recv()??;
+    for mut ticket in tickets {
+        ticket.wait()?;
     }
 
     match &serving {
@@ -769,10 +771,24 @@ fn run_bench(args: &Args) -> Result<()> {
         }
         ran = true;
     }
+    if all || which == "net" {
+        let n = bench::netbench::run();
+        println!("{}", bench::netbench::render(&n));
+        // wall-clock gate: a single pipelined connection (depth 16) must
+        // beat the lockstep-equivalent depth 1 against the 4-worker pool
+        if let Err(e) = bench::netbench::check_shape(&n) {
+            if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+                eprintln!("net shape check FAILED (ignored, ZDNN_SKIP_PERF=1): {e}");
+            } else {
+                bail!("net shape check failed: {e}");
+            }
+        }
+        ran = true;
+    }
     if !ran {
         bail!(
             "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|\
-             ablation|sparse|calibrate|compress|slo|all)"
+             ablation|sparse|calibrate|compress|slo|net|all)"
         );
     }
     Ok(())

@@ -27,9 +27,12 @@
 //!   pool-wide backpressure, plus [`start_serving`], which delegates
 //!   between the classic single-engine server and the pool on
 //!   `ServerConfig::workers`.  Both are
-//!   [`SubmitTarget`](crate::coordinator::net::SubmitTarget)s, so the TCP
+//!   [`SubmitTarget`](crate::coordinator::net::SubmitTarget)s — clients
+//!   submit through that one surface and get completion
+//!   [`Ticket`](crate::coordinator::request::Ticket)s back — so the TCP
 //!   frontend (`serve --listen`) serves either stack with the
-//!   Interactive/Bulk classes on the wire.
+//!   Interactive/Bulk classes on the wire, pipelined under protocol v2's
+//!   tagged request/reply forms.
 //! * [`histogram`] — per-shard latency recorders (p50/p95/p99), batch
 //!   occupancy, padded-slot waste, and per-priority breakdowns, mergeable
 //!   into a pool aggregate.

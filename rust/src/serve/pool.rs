@@ -169,13 +169,16 @@ impl PoolHandle {
         }
     }
 
-    /// Submit one sample at a priority; returns the response receiver or
-    /// an immediate backpressure error when the pool is saturated.
-    pub fn submit(
+    /// The submission primitive: validate, reserve a pool-wide slot, pick
+    /// a shard, and enqueue with the caller's completion sender.  The
+    /// client-facing surface ([`SubmitTarget::submit`]'s tickets, the
+    /// blocking helpers) derives from this through the trait.
+    pub(crate) fn enqueue(
         &self,
         input: Vec<i32>,
         priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
         if self.shutting_down.load(Ordering::SeqCst) {
             bail!("pool is shutting down");
         }
@@ -202,12 +205,11 @@ impl PoolHandle {
         let shard = self.pick_shard();
         self.shards[shard].depth.fetch_add(1, Ordering::SeqCst);
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (rtx, rrx) = mpsc::channel();
         let req = Request {
             id,
             input,
             queued_at: std::time::Instant::now(),
-            reply: rtx,
+            reply,
         };
         if self.shards[shard]
             .tx
@@ -218,13 +220,13 @@ impl PoolHandle {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
             bail!("shard {shard} thread gone");
         }
-        Ok((id, rrx))
+        Ok(id)
     }
 
-    /// Convenience: submit and block for the response (shard engine
-    /// failures surface as errors here, not as hangs).
+    /// Convenience: submit and block for the response — a thin wrapper
+    /// over the one [`SubmitTarget`] blocking path.
     pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
-        self.infer_prioritized(input, priority)
+        SubmitTarget::infer_prioritized(self, input, priority)
     }
 
     /// Aggregate + per-shard metrics.
@@ -264,12 +266,13 @@ impl PoolHandle {
 /// The TCP frontend drives the pool directly: priority classes arrive
 /// from the wire, and STATS reports the *merged* per-shard snapshot.
 impl SubmitTarget for PoolHandle {
-    fn submit_prioritized(
+    fn submit_with(
         &self,
         input: Vec<i32>,
         priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
-        self.submit(input, priority)
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
+        self.enqueue(input, priority, reply)
     }
 
     fn stats(&self) -> StatsReport {
@@ -337,21 +340,12 @@ impl Serving {
         }
     }
 
-    /// Submit one sample (the single-engine server has one FIFO class, so
-    /// `priority` only shapes scheduling on the pool).
-    pub fn submit(
-        &self,
-        input: Vec<i32>,
-        priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
-        match self {
-            Serving::Single(s) => s.submit(input),
-            Serving::Pool(p) => p.submit(input, priority),
-        }
-    }
-
+    /// Convenience: submit and block for the response — a thin wrapper
+    /// over the one [`SubmitTarget`] blocking path (the single-engine
+    /// server has one FIFO class, so `priority` only shapes scheduling on
+    /// the pool).
     pub fn infer_blocking(&self, input: Vec<i32>, priority: Priority) -> Result<Response> {
-        self.infer_prioritized(input, priority)
+        SubmitTarget::infer_prioritized(self, input, priority)
     }
 
     pub fn shutdown(self) -> Result<()> {
@@ -365,12 +359,16 @@ impl Serving {
 /// `serve --listen` hands the whole `Serving` to the TCP frontend, so one
 /// socket serves whichever stack `--workers` picked.
 impl SubmitTarget for Serving {
-    fn submit_prioritized(
+    fn submit_with(
         &self,
         input: Vec<i32>,
         priority: Priority,
-    ) -> Result<(RequestId, mpsc::Receiver<Reply>)> {
-        self.submit(input, priority)
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
+        match self {
+            Serving::Single(s) => s.enqueue(input, reply),
+            Serving::Pool(p) => p.enqueue(input, priority, reply),
+        }
     }
 
     fn stats(&self) -> StatsReport {
@@ -385,6 +383,7 @@ impl SubmitTarget for Serving {
 mod tests {
     use super::*;
     use crate::bench::random_qnet;
+    use crate::coordinator::request::SubmitOptions;
     use crate::nn::forward_q;
     use crate::nn::spec::quickstart;
     use crate::tensor::MatI;
@@ -434,11 +433,12 @@ mod tests {
                 } else {
                     Priority::Bulk
                 };
-                pairs.push((input.clone(), pool.submit(input, prio).unwrap()));
+                let ticket = pool.submit(input.clone(), SubmitOptions::with_priority(prio));
+                pairs.push((input, ticket.unwrap()));
             }
-            for (i, (input, (id, rx))) in pairs.into_iter().enumerate() {
-                let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
-                assert_eq!(resp.id, id);
+            for (i, (input, mut t)) in pairs.into_iter().enumerate() {
+                let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
+                assert_eq!(resp.id, t.id());
                 let want = forward_q(&net, &MatI::from_vec(1, 64, input)).unwrap();
                 assert_eq!(resp.output, want.row(0), "request {i} ({policy})");
             }
@@ -452,11 +452,10 @@ mod tests {
     #[test]
     fn round_robin_spreads_load_evenly() {
         let pool = ServePool::start(&test_config(4, 1, "round-robin"), test_factory(1)).unwrap();
-        let rxs: Vec<_> = (0..20u64)
-            .map(|i| pool.submit(rand_sample(i), Priority::Bulk).unwrap().1)
-            .collect();
-        for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let inputs: Vec<_> = (0..20u64).map(rand_sample).collect();
+        let tickets = pool.submit_many(inputs, SubmitOptions::bulk()).unwrap();
+        for mut t in tickets {
+            t.wait_timeout(Duration::from_secs(5)).unwrap();
         }
         let snap = pool.snapshot();
         for (i, s) in snap.shards.iter().enumerate() {
@@ -481,8 +480,8 @@ mod tests {
         let mut held = Vec::new();
         let mut rejected = 0;
         for i in 0..64u64 {
-            match pool.submit(rand_sample(i), Priority::Bulk) {
-                Ok(pair) => held.push(pair),
+            match pool.submit(rand_sample(i), SubmitOptions::bulk()) {
+                Ok(ticket) => held.push(ticket),
                 Err(_) => rejected += 1,
             }
         }
@@ -490,17 +489,16 @@ mod tests {
         assert_eq!(rejected, 56);
         // shutdown force-drains the padded partial batches; every accepted
         // request still gets its response
-        let rxs: Vec<_> = held.into_iter().map(|(_, rx)| rx).collect();
         pool.shutdown().unwrap();
-        for rx in rxs {
-            assert!(rx.recv_timeout(Duration::from_secs(1)).unwrap().is_ok());
+        for mut t in held {
+            assert!(t.wait_timeout(Duration::from_secs(1)).is_ok());
         }
     }
 
     #[test]
     fn pool_rejects_wrong_width_and_validates_policy() {
         let pool = ServePool::start(&test_config(2, 2, "p2c"), test_factory(2)).unwrap();
-        assert!(pool.submit(vec![0; 3], Priority::Bulk).is_err());
+        assert!(pool.submit(vec![0; 3], SubmitOptions::bulk()).is_err());
         pool.shutdown().unwrap();
         assert!(ServePool::start(&test_config(2, 2, "bogus"), test_factory(2)).is_err());
     }

@@ -91,6 +91,27 @@ fn slo_pool_scaling_quick() {
 }
 
 #[test]
+fn net_pipelining_beats_lockstep_quick() {
+    // acceptance gate for wire protocol v2: a single pipelined connection
+    // at depth 16 must beat the same connection at depth 1 (≙ v1
+    // lockstep) against the 4-worker pool.  Wall-clock; contended or
+    // single-core runners opt out rather than report phantom failures.
+    quick();
+    if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+        eprintln!("skipping: ZDNN_SKIP_PERF=1");
+        return;
+    }
+    if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) < 2 {
+        eprintln!("skipping: single-core host cannot overlap client and shards");
+        return;
+    }
+    let b = bench::netbench::run();
+    bench::netbench::check_shape(&b).unwrap();
+    let cells = bench::netbench::DEPTH_SWEEP.len() * bench::netbench::CLIENT_SWEEP.len();
+    assert_eq!(b.rows.len(), cells, "depths {{1,4,16,64}} x clients {{1,4}}");
+}
+
+#[test]
 fn renders_are_nonempty_and_contain_paper_refs() {
     quick();
     let t2 = bench::table2::render(&bench::table2::run());

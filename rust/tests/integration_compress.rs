@@ -11,7 +11,7 @@ use zynq_dnn::compress::{
     self, accuracy_q, load_artifact, save_artifact, CompressedModel, EvalSet, SearchConfig,
 };
 use zynq_dnn::config::ServerConfig;
-use zynq_dnn::coordinator::EngineFactory;
+use zynq_dnn::coordinator::{EngineFactory, SubmitOptions, SubmitTarget};
 use zynq_dnn::exec::{ExecPlan, KernelKind, PlanOptions};
 use zynq_dnn::nn::forward_q;
 use zynq_dnn::nn::quantize_matrix;
@@ -158,10 +158,11 @@ fn compressed_artifact_serves_end_to_end_on_the_pool() {
         } else {
             Priority::Bulk
         };
-        pairs.push((input.clone(), pool.submit(input, prio).unwrap().1));
+        let ticket = pool.submit(input.clone(), SubmitOptions::with_priority(prio));
+        pairs.push((input, ticket.unwrap()));
     }
-    for (i, (input, rx)) in pairs.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    for (i, (input, mut ticket)) in pairs.into_iter().enumerate() {
+        let resp = ticket.wait_timeout(Duration::from_secs(10)).unwrap();
         let want = forward_q(&golden, &MatI::from_vec(1, 64, input)).unwrap();
         assert_eq!(resp.output, want.row(0), "request {i}");
     }

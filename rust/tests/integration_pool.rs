@@ -9,6 +9,7 @@ use zynq_dnn::config::ServerConfig;
 use zynq_dnn::coordinator::EngineFactory;
 use zynq_dnn::nn::forward_q;
 use zynq_dnn::nn::spec::{har_4, quickstart};
+use zynq_dnn::coordinator::{SubmitOptions, SubmitTarget};
 use zynq_dnn::serve::{Priority, ServePool};
 use zynq_dnn::tensor::MatI;
 use zynq_dnn::util::prop::prop_check;
@@ -67,24 +68,26 @@ fn prop_exactly_one_response_across_shard_counts() {
                 } else {
                     Priority::Bulk
                 };
-                let (id, rx) = pool.submit(input.clone(), prio).unwrap();
-                pairs.push((input, id, rx));
+                let opts = SubmitOptions::with_priority(prio);
+                let ticket = pool.submit(input.clone(), opts).unwrap();
+                pairs.push((input, ticket));
             }
-            for (input, id, rx) in pairs {
-                let resp = match rx.recv_timeout(Duration::from_secs(10)) {
-                    Ok(Ok(r)) => r,
+            for (input, mut ticket) in pairs {
+                let resp = match ticket.wait_timeout(Duration::from_secs(10)) {
+                    Ok(r) => r,
                     // a lost or failed request = starvation/drop
-                    Ok(Err(_)) | Err(_) => return false,
+                    Err(_) => return false,
                 };
-                if resp.id != id {
+                if resp.id != ticket.id() {
                     return false;
                 }
                 let want = forward_q(&net, &MatI::from_vec(1, 64, input)).unwrap();
                 if resp.output != want.row(0) {
                     return false;
                 }
-                // exactly once: the reply channel must now be closed empty
-                if rx.try_recv().is_ok() {
+                // exactly once: a second wait must be AlreadyCompleted,
+                // never another reply
+                if ticket.try_wait().is_ok() {
                     return false;
                 }
             }
@@ -114,20 +117,21 @@ fn shutdown_drains_backlog_on_every_shard() {
     )
     .unwrap();
     let mut rng = Xoshiro256::seed_from_u64(7);
-    let rxs: Vec<_> = (0..66)
+    let tickets: Vec<_> = (0..66)
         .map(|i| {
             let prio = if i % 2 == 0 {
                 Priority::Interactive
             } else {
                 Priority::Bulk
             };
-            pool.submit(rand_input(&mut rng), prio).unwrap().1
+            let opts = SubmitOptions::with_priority(prio);
+            pool.submit(rand_input(&mut rng), opts).unwrap()
         })
         .collect();
     pool.shutdown().unwrap();
-    for (i, rx) in rxs.into_iter().enumerate() {
+    for (i, mut t) in tickets.into_iter().enumerate() {
         assert!(
-            rx.recv_timeout(Duration::from_secs(1)).unwrap().is_ok(),
+            t.wait_timeout(Duration::from_secs(1)).is_ok(),
             "request {i} lost in shutdown drain"
         );
     }
@@ -167,7 +171,7 @@ fn interactive_tail_beats_bulk_under_backlog() {
     .unwrap();
     let mut rng = Xoshiro256::seed_from_u64(8);
     // burst far beyond one batch so a backlog forms; 1 in 4 interactive
-    let rxs: Vec<_> = (0..400)
+    let mut tickets: Vec<_> = (0..400)
         .map(|i| {
             let prio = if i % 4 == 0 {
                 Priority::Interactive
@@ -177,11 +181,11 @@ fn interactive_tail_beats_bulk_under_backlog() {
             let input: Vec<i32> = (0..s_in)
                 .map(|_| zynq_dnn::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
                 .collect();
-            (prio, pool.submit(input, prio).unwrap().1)
+            pool.submit(input, SubmitOptions::with_priority(prio)).unwrap()
         })
         .collect();
-    for (_, rx) in &rxs {
-        rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    for t in tickets.iter_mut() {
+        t.wait_timeout(Duration::from_secs(10)).unwrap();
     }
     let agg = pool.snapshot().aggregate;
     assert_eq!(agg.interactive_requests, 100);

@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use zynq_dnn::bench::random_qnet;
 use zynq_dnn::config::ServerConfig;
-use zynq_dnn::coordinator::{EngineFactory, Server};
+use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
 use zynq_dnn::data::har;
 use zynq_dnn::nn::spec::{har_4, quickstart};
 use zynq_dnn::runtime::default_artifacts_dir;
@@ -64,13 +64,10 @@ fn all_backends_serve_identical_outputs() {
     let mut reference: Option<Vec<Vec<i32>>> = None;
     for backend in backends {
         let server = Server::start(&config(4, backend), factory(backend, 4, net.clone())).unwrap();
-        let rxs: Vec<_> = inputs
-            .iter()
-            .map(|i| server.submit(i.clone()).unwrap().1)
-            .collect();
-        let outs: Vec<Vec<i32>> = rxs
+        let tickets = server.submit_many(inputs.clone(), SubmitOptions::default()).unwrap();
+        let outs: Vec<Vec<i32>> = tickets
             .into_iter()
-            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap().output)
+            .map(|mut t| t.wait_timeout(Duration::from_secs(30)).unwrap().output)
             .collect();
         match &reference {
             None => reference = Some(outs),
@@ -105,16 +102,14 @@ fn pjrt_served_accuracy_matches_direct_eval() {
     let server =
         Server::start(&config(4, "pjrt"), factory("pjrt", 4, nw.quantized())).unwrap();
     let mut correct = 0;
-    let rxs: Vec<_> = (0..test.len())
+    let tickets: Vec<_> = (0..test.len())
         .map(|i| {
-            server
-                .submit(zynq_dnn::fixedpoint::quantize_slice(test.x.row(i)))
-                .unwrap()
-                .1
+            let input = zynq_dnn::fixedpoint::quantize_slice(test.x.row(i));
+            server.submit(input, SubmitOptions::default()).unwrap()
         })
         .collect();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    for (i, mut t) in tickets.into_iter().enumerate() {
+        let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
         if resp.class == test.y[i] {
             correct += 1;
         }
@@ -135,12 +130,9 @@ fn metrics_reflect_served_traffic() {
     let net = random_qnet(&quickstart(), 0x92);
     let server = Server::start(&config(4, "native"), factory("native", 4, net)).unwrap();
     let inputs = rand_inputs(17, 64, 0x93);
-    let rxs: Vec<_> = inputs
-        .iter()
-        .map(|i| server.submit(i.clone()).unwrap().1)
-        .collect();
-    for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    let tickets = server.submit_many(inputs, SubmitOptions::default()).unwrap();
+    for mut t in tickets {
+        t.wait_timeout(Duration::from_secs(10)).unwrap();
     }
     let snap = server.metrics.snapshot();
     assert_eq!(snap.requests, 17);
@@ -156,12 +148,9 @@ fn sim_backend_reports_accelerator_time_not_wallclock() {
     let server =
         Server::start(&config(2, "sim-batch"), factory("sim-batch", 2, net)).unwrap();
     let inputs = rand_inputs(4, 64, 0x95);
-    let rxs: Vec<_> = inputs
-        .iter()
-        .map(|i| server.submit(i.clone()).unwrap().1)
-        .collect();
-    for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    let tickets = server.submit_many(inputs, SubmitOptions::default()).unwrap();
+    for mut t in tickets {
+        let resp = t.wait_timeout(Duration::from_secs(10)).unwrap();
         // quickstart on the simulated ZedBoard: hundreds of µs, far above
         // the host's wall-clock for the same tiny net — proves the sim
         // time is being reported
