@@ -10,7 +10,9 @@ use super::{quick_mode, random_qnet};
 use crate::exec::{ExecPlan, PlanOptions};
 use crate::nn::spec::{har_4, har_6};
 use crate::sim::pruning::prune_qnetwork;
-use crate::tensor::{MatF, MatI};
+use crate::tensor::{
+    column_nonzero_mask, spmm_i32, spmm_i32_opt, CsrMatI, MatF, MatI,
+};
 use crate::util::bench_loop;
 use crate::util::rng::Xoshiro256;
 
@@ -32,17 +34,52 @@ impl SparseBenchRow {
     }
 }
 
+/// One activation-sparsity configuration: the CSR kernel with the EIE
+/// column mask (built *inside* the timed region) vs the plain CSR kernel
+/// on the same batch.
+#[derive(Debug, Clone)]
+pub struct ActSkipRow {
+    /// Fraction of activation columns zeroed in the input batch.
+    pub zero_frac: f64,
+    pub batch: usize,
+    pub plain_seconds: f64,
+    pub skip_seconds: f64,
+}
+
+impl ActSkipRow {
+    pub fn speedup(&self) -> f64 {
+        self.plain_seconds / self.skip_seconds.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Row-reordering (sort by nnz, un-permute outputs) vs the natural row
+/// order, same CSR weights and batch.
+#[derive(Debug, Clone)]
+pub struct ReorderRow {
+    pub batch: usize,
+    pub plain_seconds: f64,
+    pub reorder_seconds: f64,
+}
+
 /// The benchmark result: rows in (prune, batch) sweep order.
 #[derive(Debug, Clone)]
 pub struct SparseBench {
     pub network: String,
     pub rows: Vec<SparseBenchRow>,
+    /// EIE activation-skip kernel rows, one per [`ZERO_FRAC_SWEEP`] entry.
+    pub act_skip: Vec<ActSkipRow>,
+    /// nnz row-reordering row (bit-exactness asserted inside `run`).
+    pub reorder: ReorderRow,
 }
 
 /// The sweep: paper-bracketing prune factors × the serving batch sizes the
 /// paper's Table 3 latency analysis uses (1, 25, 57).
 pub const PRUNE_SWEEP: [f64; 4] = [0.5, 0.75, 0.9, 0.95];
 pub const BATCH_SWEEP: [usize; 3] = [1, 25, 57];
+/// Activation zero-column fractions for the act-skip rows.
+pub const ZERO_FRAC_SWEEP: [f64; 3] = [0.0, 0.5, 0.9];
+/// Batch size of the act-skip and reorder rows (paper Table 3's large batch).
+pub const KERNEL_BATCH: usize = 25;
 
 pub fn run() -> SparseBench {
     let quick = quick_mode();
@@ -85,9 +122,84 @@ pub fn run() -> SparseBench {
             });
         }
     }
+    // --- EIE activation-skip kernel rows -------------------------------
+    // Kernel-level (not through a plan) so the zero-column fraction is
+    // exactly controlled.  Weights: the first layer of the q=0.9 net.
+    let pruned = prune_qnetwork(&base, 0.9);
+    let w = CsrMatI::from_dense(&pruned.weights[0]);
+    let kernel_iters = if quick { 20 } else { 60 };
+    let mut act_skip = Vec::with_capacity(ZERO_FRAC_SWEEP.len());
+    for &zero_frac in &ZERO_FRAC_SWEEP {
+        let mut x = crate::nn::quantize_matrix(&MatF::from_vec(
+            KERNEL_BATCH,
+            spec.inputs(),
+            (0..KERNEL_BATCH * spec.inputs())
+                .map(|_| rng.uniform(0.1, 1.0) as f32)
+                .collect(),
+        ));
+        // zero a deterministic prefix-strided set of columns (what a
+        // upstream ReLU would have produced for those neurons)
+        let dead = (zero_frac * spec.inputs() as f64) as usize;
+        for r in 0..x.rows {
+            for c in 0..dead {
+                x.data[r * x.cols + c] = 0;
+            }
+        }
+        let mut plain_out = MatI::zeros(KERNEL_BATCH, w.rows());
+        let mut skip_out = MatI::zeros(KERNEL_BATCH, w.rows());
+        let mut mask = Vec::new();
+        let (plain_seconds, _) = bench_loop(1, kernel_iters, || {
+            spmm_i32(&x, &w, &mut plain_out);
+        });
+        // the mask build is inside the timed region: it is part of the
+        // cost the skip must amortize
+        let (skip_seconds, _) = bench_loop(1, kernel_iters, || {
+            column_nonzero_mask(&x, &mut mask);
+            spmm_i32_opt(&x, &w, &mut skip_out, None, Some(&mask));
+        });
+        assert_eq!(
+            skip_out.data, plain_out.data,
+            "act-skip diverges at zero_frac={zero_frac}"
+        );
+        act_skip.push(ActSkipRow {
+            zero_frac,
+            batch: KERNEL_BATCH,
+            plain_seconds,
+            skip_seconds,
+        });
+    }
+
+    // --- nnz row-reordering row ----------------------------------------
+    let (wr, out_col) = w.reorder_by_nnz();
+    let x = crate::nn::quantize_matrix(&MatF::from_vec(
+        KERNEL_BATCH,
+        spec.inputs(),
+        (0..KERNEL_BATCH * spec.inputs())
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect(),
+    ));
+    let mut plain_out = MatI::zeros(KERNEL_BATCH, w.rows());
+    let mut reorder_out = MatI::zeros(KERNEL_BATCH, w.rows());
+    let (plain_seconds, _) = bench_loop(1, kernel_iters, || {
+        spmm_i32(&x, &w, &mut plain_out);
+    });
+    let (reorder_seconds, _) = bench_loop(1, kernel_iters, || {
+        spmm_i32_opt(&x, &wr, &mut reorder_out, Some(&out_col), None);
+    });
+    assert_eq!(
+        reorder_out.data, plain_out.data,
+        "row reordering must be bit-exact after un-permutation"
+    );
+
     SparseBench {
         network: spec.name,
         rows,
+        act_skip,
+        reorder: ReorderRow {
+            batch: KERNEL_BATCH,
+            plain_seconds,
+            reorder_seconds,
+        },
     }
 }
 
@@ -107,7 +219,31 @@ pub fn render(b: &SparseBench) -> String {
     }
     t.footnote("outputs bit-identical on every configuration (asserted)");
     t.footnote("sparse kernel executes the §5.6 tuple stream via a CSR view");
-    t.render()
+    let mut a = Table::new(
+        &format!(
+            "EIE activation-column skipping ({}, CSR q=0.9, batch {KERNEL_BATCH})",
+            b.network
+        ),
+        &["zero cols", "plain ms", "skip ms", "speedup"],
+    );
+    for r in &b.act_skip {
+        a.row(vec![
+            format!("{:.2}", r.zero_frac),
+            ms(r.plain_seconds),
+            ms(r.skip_seconds),
+            ratio(r.speedup()),
+        ]);
+    }
+    a.footnote("mask build timed inside the skip column; outputs bit-identical (asserted)");
+    let r = &b.reorder;
+    let mut o = Table::new(
+        &format!("nnz row reordering ({}, CSR q=0.9, batch {KERNEL_BATCH})", b.network),
+        &["order", "ms"],
+    );
+    o.row(vec!["natural".into(), ms(r.plain_seconds)]);
+    o.row(vec!["by-nnz + unpermute".into(), ms(r.reorder_seconds)]);
+    o.footnote("outputs bit-identical after un-permutation (asserted)");
+    format!("{}\n{}\n{}", t.render(), a.render(), o.render())
 }
 
 /// Qualitative shape: sparse execution must beat dense at every pruning
@@ -153,6 +289,19 @@ pub fn check_shape(b: &SparseBench) -> Result<(), String> {
             PRUNE_SWEEP[0],
             PRUNE_SWEEP.last().unwrap()
         ));
+    }
+    // activation skipping must at least break even once half the columns
+    // are dead (the acceptance criterion; at 0.9 it should win outright)
+    for r in b.act_skip.iter().filter(|r| r.zero_frac >= 0.5) {
+        if r.skip_seconds > r.plain_seconds {
+            return Err(format!(
+                "act-skip ({:.6}s) slower than plain CSR ({:.6}s) at zero_frac={}",
+                r.skip_seconds, r.plain_seconds, r.zero_frac
+            ));
+        }
+    }
+    if b.act_skip.iter().all(|r| r.zero_frac < 0.5) {
+        return Err("no act-skip rows with zero_frac >= 0.5".to_string());
     }
     Ok(())
 }

@@ -23,13 +23,28 @@
 //!   `vals` as `i16[nnz]` — exactly the
 //!   [`CsrMatI`](crate::tensor::CsrMatI) the `SparseQ` execution kernel
 //!   consumes, so serving never densifies a compressed layer.
+//! * `csr_delta` (v2) — `row_ptr` as `u32[rows + 1]`, then the tagged
+//!   delta/Huffman column payload from
+//!   [`encoding::encode_columns`](super::encoding::encode_columns)
+//!   (`payload` bytes, named in the header), then `vals` as `i16[nnz]`.
+//!   Decode-on-load into the same `CsrMatI` — the EIE relative-index
+//!   rung, never densified.
+//! * `codebook` (v2) — like `csr_delta` but values are EIE weight-shared:
+//!   a 16-entry `i16` lookup table followed by 4-bit codes packed two per
+//!   byte, decoded into a
+//!   [`CsrCodebookMatI`](crate::tensor::CsrCodebookMatI) for the
+//!   `CodebookQ` kernel.
 //!
 //! Which encoding a layer gets is decided *at save time* from the
 //! artifact's own threshold: measured prune factor ≥ `sparse_threshold`
-//! → CSR.  [`ExecPlan::compile_artifact`](crate::exec::ExecPlan::compile_artifact)
-//! then maps CSR blobs to `SparseQ` kernels and dense blobs to `DenseQ`
-//! directly, which is what "the artifact embeds its calibration" means
-//! operationally: no `--threshold` flag at serve time.
+//! → sparse, stored in the [`ArtifactEncoding`] the producer picked
+//! (`codebook` additionally requires the layer's values to already be
+//! ≤ 16 levels — the search's codebook rung guarantees that for layers it
+//! accepted; others fall back to `csr_delta`).
+//! [`ExecPlan::compile_artifact`](crate::exec::ExecPlan::compile_artifact)
+//! then maps sparse blobs to `SparseQ`/`CodebookQ` kernels and dense
+//! blobs to `DenseQ` directly, which is what "the artifact embeds its
+//! calibration" means operationally: no `--threshold` flag at serve time.
 
 use std::fmt::Write as _;
 use std::fs::File;
@@ -38,30 +53,78 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::encoding::{self, ArtifactEncoding};
 use crate::config::json::{self, Json};
 use crate::fixedpoint::{FRAC_BITS, Q78_MAX, Q78_MIN};
 use crate::nn::forward::QNetwork;
 use crate::nn::spec::{Activation, NetworkSpec};
 use crate::nn::weights::{crc32, put_u32, Cursor};
-use crate::tensor::{CsrMatI, MatI};
+use crate::tensor::{CsrCodebookMatI, CsrMatI, MatI};
 
 const MAGIC: &[u8; 4] = b"ZRPZ";
-const VERSION: u32 = 1;
+/// v2 added the `csr_delta` and `codebook` layer encodings; v1 files
+/// (dense/csr only) still load.
+const VERSION: u32 = 2;
+
+/// Typed save-time failure: an index field does not fit the `u32` the
+/// on-disk format stores.  Converted into the [`anyhow`] chain via the
+/// blanket `From` (it implements [`std::error::Error`]), so callers match
+/// on the message while the save path keeps one early-return shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexOverflowError {
+    pub layer: usize,
+    pub field: &'static str,
+    pub value: usize,
+}
+
+impl std::fmt::Display for IndexOverflowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "layer {}: {} value {} overflows the u32 artifact field",
+            self.layer, self.field, self.value
+        )
+    }
+}
+
+impl std::error::Error for IndexOverflowError {}
+
+/// Bounds-checked `usize → u32` for artifact fields — the silent-truncate
+/// hazard the format invites (`as u32` would wrap).
+fn u32_field(layer: usize, field: &'static str, value: usize) -> Result<u32> {
+    if value > u32::MAX as usize {
+        return Err(IndexOverflowError {
+            layer,
+            field,
+            value,
+        }
+        .into());
+    }
+    Ok(value as u32)
+}
 
 /// One layer's stored weights.
 #[derive(Debug, Clone)]
 pub enum LayerBlob {
     /// Below the sparse threshold: plain dense Q7.8 storage.
     Dense(MatI),
-    /// At/above the threshold: the CSR form the `SparseQ` kernel runs on.
+    /// At/above the threshold: the CSR form the `SparseQ` kernel runs on,
+    /// columns stored as absolute `u32`s (the v1 format).
     Csr(CsrMatI),
+    /// CSR with delta/Huffman-coded columns on disk; decodes to the same
+    /// `CsrMatI` (lossless — the EIE relative-index rung).
+    CsrDelta(CsrMatI),
+    /// Delta-coded columns + 4-bit weight-shared values for the
+    /// `CodebookQ` kernel.
+    Codebook(CsrCodebookMatI),
 }
 
 impl LayerBlob {
     pub fn shape(&self) -> (usize, usize) {
         match self {
             LayerBlob::Dense(m) => m.shape(),
-            LayerBlob::Csr(m) => m.shape(),
+            LayerBlob::Csr(m) | LayerBlob::CsrDelta(m) => m.shape(),
+            LayerBlob::Codebook(m) => m.shape(),
         }
     }
 
@@ -71,23 +134,48 @@ impl LayerBlob {
         let total = (rows * cols).max(1);
         let nonzero = match self {
             LayerBlob::Dense(m) => m.data.iter().filter(|&&v| v != 0).count(),
-            LayerBlob::Csr(m) => m.nnz(),
+            LayerBlob::Csr(m) | LayerBlob::CsrDelta(m) => m.nnz(),
+            LayerBlob::Codebook(m) => m.nnz(),
         };
         1.0 - nonzero as f64 / total as f64
     }
 
-    /// Payload bytes this blob serializes to.
+    /// Payload bytes this blob serializes to (encoded forms pay the
+    /// encode to measure it — reporting/save-path only, never serving).
     pub fn stored_bytes(&self) -> usize {
         match self {
             LayerBlob::Dense(m) => m.data.len() * 2,
             LayerBlob::Csr(m) => (m.rows() + 1) * 4 + m.nnz() * 4 + m.nnz() * 2,
+            LayerBlob::CsrDelta(m) => {
+                (m.rows() + 1) * 4 + encoding::encode_columns(m).len() + m.nnz() * 2
+            }
+            LayerBlob::Codebook(m) => {
+                (m.rows() + 1) * 4
+                    + encoding::encode_columns(&m.to_csr()).len()
+                    + 32
+                    + m.nnz().div_ceil(2)
+            }
+        }
+    }
+
+    /// What the same layer would cost in the raw v1 format (dense stays
+    /// dense) — the baseline the `bench compress` encoded-payload column
+    /// compares against.
+    pub fn raw_stored_bytes(&self) -> usize {
+        match self {
+            LayerBlob::Dense(m) => m.data.len() * 2,
+            LayerBlob::Csr(m) | LayerBlob::CsrDelta(m) => {
+                (m.rows() + 1) * 4 + m.nnz() * 4 + m.nnz() * 2
+            }
+            LayerBlob::Codebook(m) => (m.rows() + 1) * 4 + m.nnz() * 4 + m.nnz() * 2,
         }
     }
 
     fn dense_weights(&self) -> MatI {
         match self {
             LayerBlob::Dense(m) => m.clone(),
-            LayerBlob::Csr(m) => m.to_dense(),
+            LayerBlob::Csr(m) | LayerBlob::CsrDelta(m) => m.to_dense(),
+            LayerBlob::Codebook(m) => m.to_csr().to_dense(),
         }
     }
 }
@@ -110,12 +198,36 @@ pub struct CompressedModel {
 }
 
 impl CompressedModel {
-    /// Package a (pruned) quantized network: each layer stores CSR when
-    /// its measured prune factor reaches `sparse_threshold`, dense
-    /// otherwise.
+    /// Package a (pruned) quantized network: each layer stores sparse
+    /// when its measured prune factor reaches `sparse_threshold`, dense
+    /// otherwise.  Sparse layers use the delta encoding (lossless, always
+    /// no larger than raw on pruned layers).
     pub fn from_network(
         net: &QNetwork,
         sparse_threshold: f64,
+        budget: f64,
+        baseline_accuracy: f64,
+        compressed_accuracy: f64,
+    ) -> Result<Self> {
+        Self::from_network_encoded(
+            net,
+            sparse_threshold,
+            ArtifactEncoding::Delta,
+            budget,
+            baseline_accuracy,
+            compressed_accuracy,
+        )
+    }
+
+    /// [`Self::from_network`] with an explicit sparse-layer encoding (the
+    /// CLI `--encoding` flag).  `Codebook` stores a layer weight-shared
+    /// only when its values already fit 16 levels (what the search's
+    /// codebook rung produces — storage itself must stay lossless), and
+    /// falls back to `csr_delta` otherwise.
+    pub fn from_network_encoded(
+        net: &QNetwork,
+        sparse_threshold: f64,
+        encoding: ArtifactEncoding,
         budget: f64,
         baseline_accuracy: f64,
         compressed_accuracy: f64,
@@ -138,10 +250,17 @@ impl CompressedModel {
             .iter()
             .zip(prune.iter())
             .map(|(w, &q)| {
-                if q >= sparse_threshold {
-                    LayerBlob::Csr(CsrMatI::from_dense(w))
-                } else {
-                    LayerBlob::Dense(w.clone())
+                if q < sparse_threshold {
+                    return LayerBlob::Dense(w.clone());
+                }
+                let csr = CsrMatI::from_dense(w);
+                match encoding {
+                    ArtifactEncoding::Raw => LayerBlob::Csr(csr),
+                    ArtifactEncoding::Delta => LayerBlob::CsrDelta(csr),
+                    ArtifactEncoding::Codebook => match CsrCodebookMatI::from_csr(&csr) {
+                        Ok(cb) => LayerBlob::Codebook(cb),
+                        Err(_) => LayerBlob::CsrDelta(csr),
+                    },
                 }
             })
             .collect();
@@ -155,14 +274,16 @@ impl CompressedModel {
         })
     }
 
-    /// Package a budgeted-search outcome (the usual producer).
+    /// Package a budgeted-search outcome (the usual producer) — sparse
+    /// layers stored in the encoding the search ran with.
     pub fn from_outcome(
         outcome: &super::search::SearchOutcome,
         sparse_threshold: f64,
     ) -> Result<Self> {
-        Self::from_network(
+        Self::from_network_encoded(
             &outcome.network,
             sparse_threshold,
+            outcome.encoding,
             outcome.budget,
             outcome.baseline_accuracy,
             outcome.compressed_accuracy,
@@ -186,6 +307,13 @@ impl CompressedModel {
     /// Payload bytes across all layers.
     pub fn stored_bytes(&self) -> usize {
         self.layers.iter().map(LayerBlob::stored_bytes).sum()
+    }
+
+    /// What the same layers would cost in the raw v1 CSR format — the
+    /// baseline for the encoded-payload column and the delta-beats-raw
+    /// gate.
+    pub fn raw_stored_bytes(&self) -> usize {
+        self.layers.iter().map(LayerBlob::raw_stored_bytes).sum()
     }
 
     /// Dense 16-bit baseline the paper compares streams against.
@@ -299,6 +427,26 @@ fn render_header(model: &CompressedModel) -> Result<String> {
                     fnum(blob.prune_factor())?
                 );
             }
+            LayerBlob::CsrDelta(m) => {
+                let _ = write!(
+                    h,
+                    "{{\"encoding\":\"csr_delta\",\"rows\":{rows},\"cols\":{cols},\"nnz\":{},\
+                     \"payload\":{},\"prune\":{}}}",
+                    m.nnz(),
+                    encoding::encode_columns(m).len(),
+                    fnum(blob.prune_factor())?
+                );
+            }
+            LayerBlob::Codebook(m) => {
+                let _ = write!(
+                    h,
+                    "{{\"encoding\":\"codebook\",\"rows\":{rows},\"cols\":{cols},\"nnz\":{},\
+                     \"payload\":{},\"prune\":{}}}",
+                    m.nnz(),
+                    encoding::encode_columns(&m.to_csr()).len(),
+                    fnum(blob.prune_factor())?
+                );
+            }
         }
     }
     h.push_str("]}");
@@ -324,9 +472,9 @@ pub fn save_artifact(path: &Path, model: &CompressedModel) -> Result<()> {
                 }
             }
             LayerBlob::Csr(m) => {
+                u32_field(j, "nnz", m.nnz())?;
                 for &p in m.row_ptr() {
-                    ensure!(p <= u32::MAX as usize, "layer {j}: row_ptr overflows u32");
-                    put_u32(&mut body, p as u32);
+                    put_u32(&mut body, u32_field(j, "row_ptr", p)?);
                 }
                 for o in 0..m.rows() {
                     let (idx, _) = m.row(o);
@@ -344,6 +492,35 @@ pub fn save_artifact(path: &Path, model: &CompressedModel) -> Result<()> {
                         body.extend_from_slice(&(v as i16).to_le_bytes());
                     }
                 }
+            }
+            LayerBlob::CsrDelta(m) => {
+                u32_field(j, "nnz", m.nnz())?;
+                for &p in m.row_ptr() {
+                    put_u32(&mut body, u32_field(j, "row_ptr", p)?);
+                }
+                body.extend_from_slice(&encoding::encode_columns(m));
+                for &v in m.vals() {
+                    ensure!(
+                        (Q78_MIN..=Q78_MAX).contains(&v),
+                        "layer {j}: weight {v} outside the Q7.8 (i16) range"
+                    );
+                    body.extend_from_slice(&(v as i16).to_le_bytes());
+                }
+            }
+            LayerBlob::Codebook(m) => {
+                u32_field(j, "nnz", m.nnz())?;
+                for &p in m.row_ptr() {
+                    put_u32(&mut body, u32_field(j, "row_ptr", p)?);
+                }
+                body.extend_from_slice(&encoding::encode_columns(&m.to_csr()));
+                for &v in m.lut() {
+                    ensure!(
+                        (Q78_MIN..=Q78_MAX).contains(&v),
+                        "layer {j}: codebook level {v} outside the Q7.8 (i16) range"
+                    );
+                    body.extend_from_slice(&(v as i16).to_le_bytes());
+                }
+                body.extend_from_slice(&encoding::pack_nibbles(m.codes()));
             }
         }
     }
@@ -383,6 +560,24 @@ fn spec_from_header(h: &Json) -> Result<NetworkSpec> {
     })
 }
 
+/// Read and validate a stored row-pointer array (shared by every sparse
+/// layer arm): endpoints must agree with `nnz`, and it must be monotone.
+fn read_row_ptr(c: &mut Cursor<'_>, j: usize, rows: usize, nnz: usize) -> Result<Vec<usize>> {
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    for _ in 0..rows + 1 {
+        row_ptr.push(c.u32()? as usize);
+    }
+    ensure!(
+        row_ptr.first() == Some(&0) && row_ptr.last() == Some(&nnz),
+        "layer {j}: row_ptr endpoints disagree with nnz {nnz}"
+    );
+    ensure!(
+        row_ptr.windows(2).all(|w| w[0] <= w[1]),
+        "layer {j}: row_ptr not monotone"
+    );
+    Ok(row_ptr)
+}
+
 /// Load and validate a `.rpz` container.
 pub fn load_artifact(path: &Path) -> Result<CompressedModel> {
     let mut raw = Vec::new();
@@ -400,7 +595,10 @@ pub fn load_artifact(path: &Path) -> Result<CompressedModel> {
     let header = json::parse(std::str::from_utf8(header_bytes).context("header not utf-8")?)
         .context("artifact header")?;
     let version = header.req("version")?.as_usize()?;
-    ensure!(version == VERSION as usize, "unsupported version {version}");
+    ensure!(
+        version >= 1 && version <= VERSION as usize,
+        "unsupported version {version}"
+    );
     let spec = spec_from_header(&header)?;
     let qf = header.req("qformat")?;
     let frac = qf.req("frac_bits")?.as_usize()?;
@@ -455,18 +653,7 @@ pub fn load_artifact(path: &Path) -> Result<CompressedModel> {
                     .and_then(|rp| nnz.checked_mul(6).and_then(|nz| rp.checked_add(nz)))
                     .filter(|&n| n <= remaining)
                     .with_context(|| format!("layer {j}: CSR payload exceeds file size"))?;
-                let mut row_ptr = Vec::with_capacity(rows + 1);
-                for _ in 0..rows + 1 {
-                    row_ptr.push(c.u32()? as usize);
-                }
-                ensure!(
-                    row_ptr.first() == Some(&0) && row_ptr.last() == Some(&nnz),
-                    "layer {j}: row_ptr endpoints disagree with nnz {nnz}"
-                );
-                ensure!(
-                    row_ptr.windows(2).all(|w| w[0] <= w[1]),
-                    "layer {j}: row_ptr not monotone"
-                );
+                let row_ptr = read_row_ptr(&mut c, j, rows, nnz)?;
                 let mut col_idx = Vec::with_capacity(nnz);
                 for _ in 0..nnz {
                     let col = c.u32()?;
@@ -488,6 +675,53 @@ pub fn load_artifact(path: &Path) -> Result<CompressedModel> {
                     vals.push(i32::from(c.u16()? as i16));
                 }
                 layers.push(LayerBlob::Csr(CsrMatI::new(rows, cols, row_ptr, col_idx, vals)));
+            }
+            "csr_delta" => {
+                let nnz = entry.req("nnz")?.as_usize()?;
+                let payload = entry.req("payload")?.as_usize()?;
+                ensure!(cols <= u32::MAX as usize, "layer {j}: cols overflow u32");
+                rows.checked_add(1)
+                    .and_then(|r| r.checked_mul(4))
+                    .and_then(|rp| rp.checked_add(payload))
+                    .and_then(|p| nnz.checked_mul(2).and_then(|v| p.checked_add(v)))
+                    .filter(|&n| n <= remaining)
+                    .with_context(|| format!("layer {j}: csr_delta payload exceeds file size"))?;
+                let row_ptr = read_row_ptr(&mut c, j, rows, nnz)?;
+                // decode_columns re-derives absolute indices; gaps ≥ 1 by
+                // construction, so rows come back strictly increasing and
+                // range-checked without a second validation pass
+                let col_idx = encoding::decode_columns(c.take(payload)?, &row_ptr, cols)
+                    .with_context(|| format!("layer {j}: column stream"))?;
+                let mut vals = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    vals.push(i32::from(c.u16()? as i16));
+                }
+                layers.push(LayerBlob::CsrDelta(CsrMatI::new(
+                    rows, cols, row_ptr, col_idx, vals,
+                )));
+            }
+            "codebook" => {
+                let nnz = entry.req("nnz")?.as_usize()?;
+                let payload = entry.req("payload")?.as_usize()?;
+                ensure!(cols <= u32::MAX as usize, "layer {j}: cols overflow u32");
+                rows.checked_add(1)
+                    .and_then(|r| r.checked_mul(4))
+                    .and_then(|rp| rp.checked_add(payload))
+                    .and_then(|p| p.checked_add(32))
+                    .and_then(|p| p.checked_add(nnz.div_ceil(2)))
+                    .filter(|&n| n <= remaining)
+                    .with_context(|| format!("layer {j}: codebook payload exceeds file size"))?;
+                let row_ptr = read_row_ptr(&mut c, j, rows, nnz)?;
+                let col_idx = encoding::decode_columns(c.take(payload)?, &row_ptr, cols)
+                    .with_context(|| format!("layer {j}: column stream"))?;
+                let mut lut = [0i32; 16];
+                for l in lut.iter_mut() {
+                    *l = i32::from(c.u16()? as i16);
+                }
+                let codes = encoding::unpack_nibbles(c.take(nnz.div_ceil(2))?, nnz)?;
+                layers.push(LayerBlob::Codebook(CsrCodebookMatI::new(
+                    rows, cols, row_ptr, col_idx, codes, lut,
+                )));
             }
             other => bail!("layer {j}: unknown encoding {other:?}"),
         }
@@ -529,7 +763,7 @@ mod tests {
         assert!(sparse
             .layers
             .iter()
-            .all(|b| matches!(b, LayerBlob::Csr(_))));
+            .all(|b| matches!(b, LayerBlob::CsrDelta(_))));
         let dense = sample(2.0);
         assert!(dense
             .layers
@@ -538,12 +772,25 @@ mod tests {
         // compressed CSR payload beats dense storage at q = 0.9
         assert!(sparse.stored_bytes() < dense.stored_bytes());
         assert!(sparse.compression_ratio() < 1.0);
+        // and the delta encoding beats the raw v1 CSR bytes
+        assert!(sparse.stored_bytes() < sparse.raw_stored_bytes());
     }
 
     #[test]
-    fn roundtrip_bit_exact_both_encodings() {
-        for (name, threshold) in [("rt_sparse.rpz", 0.75), ("rt_dense.rpz", 2.0)] {
-            let model = sample(threshold);
+    fn roundtrip_bit_exact_all_encodings() {
+        let net = prune_qnetwork(&random_qnet(&quickstart(), 11), 0.9);
+        for (name, threshold, enc) in [
+            ("rt_raw.rpz", 0.75, ArtifactEncoding::Raw),
+            ("rt_delta.rpz", 0.75, ArtifactEncoding::Delta),
+            ("rt_cb.rpz", 0.75, ArtifactEncoding::Codebook),
+            ("rt_dense.rpz", 2.0, ArtifactEncoding::Delta),
+        ] {
+            let model =
+                CompressedModel::from_network_encoded(&net, threshold, enc, 0.02, 0.91, 0.9)
+                    .unwrap();
+            // storage is always lossless w.r.t. the model it was given —
+            // codebook layers carry pre-quantized values, so the blob is
+            // what round-trips, not the original net
             let want = model.to_qnetwork().unwrap();
             let path = tmp(name);
             save_artifact(&path, &model).unwrap();
@@ -557,6 +804,60 @@ mod tests {
             }
             assert_eq!(back.prune_factors(), model.prune_factors());
         }
+    }
+
+    #[test]
+    fn codebook_encoding_stores_weight_shared_layers() {
+        // quantize first (the search's codebook rung), then package
+        let net = prune_qnetwork(&random_qnet(&quickstart(), 11), 0.9);
+        let q = crate::nn::forward::QNetwork::new(
+            net.spec.clone(),
+            net.weights.iter().map(crate::compress::encoding::codebook_quantize_matrix).collect(),
+        )
+        .unwrap();
+        let model = CompressedModel::from_network_encoded(
+            &q,
+            0.75,
+            ArtifactEncoding::Codebook,
+            0.0,
+            1.0,
+            1.0,
+        )
+        .unwrap();
+        assert!(model.layers.iter().all(|b| matches!(b, LayerBlob::Codebook(_))));
+        // codebook payload beats both raw CSR and delta CSR
+        let delta =
+            CompressedModel::from_network_encoded(&q, 0.75, ArtifactEncoding::Delta, 0.0, 1.0, 1.0)
+                .unwrap();
+        assert!(model.stored_bytes() < delta.stored_bytes());
+        let path = tmp("cb_shared.rpz");
+        save_artifact(&path, &model).unwrap();
+        let back = load_artifact(&path).unwrap();
+        for (a, b) in
+            back.to_qnetwork().unwrap().weights.iter().zip(q.weights.iter())
+        {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn overflow_error_is_typed_not_truncated() {
+        let e = u32_field(3, "row_ptr", u32::MAX as usize + 1).unwrap_err();
+        assert!(
+            e.to_string().contains("layer 3")
+                && e.to_string().contains("row_ptr")
+                && e.to_string().contains("overflows the u32"),
+            "{e}"
+        );
+        assert_eq!(u32_field(0, "nnz", u32::MAX as usize).unwrap(), u32::MAX);
+        let typed = IndexOverflowError {
+            layer: 1,
+            field: "nnz",
+            value: usize::MAX,
+        };
+        // goes through the blanket std::error::Error conversion
+        let chained: anyhow::Error = typed.clone().into();
+        assert_eq!(chained.to_string(), typed.to_string());
     }
 
     #[test]
@@ -578,7 +879,7 @@ mod tests {
         let net = random_qnet(&quickstart(), 12);
         let mixed = crate::compress::prune_per_layer(&net, &[0.9, 0.0]);
         let model = CompressedModel::from_network(&mixed, 0.75, 0.0, 1.0, 1.0).unwrap();
-        assert!(matches!(model.layers[0], LayerBlob::Csr(_)));
+        assert!(matches!(model.layers[0], LayerBlob::CsrDelta(_)));
         assert!(matches!(model.layers[1], LayerBlob::Dense(_)));
         let path = tmp("mixed.rpz");
         save_artifact(&path, &model).unwrap();

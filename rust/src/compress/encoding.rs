@@ -1,0 +1,420 @@
+//! EIE-style stream encodings for the `.rpz` artifact.
+//!
+//! Three rungs, each attacking a different term of the CSR byte budget
+//! (`u32` column index + `i16` value per non-zero, `u32` per row pointer):
+//!
+//! * **Delta-coded columns** — columns are strictly increasing within a
+//!   row, so the stream stores *gaps* instead of absolute indices: one
+//!   byte per entry for gaps ≤ 255, a `0x00` escape + `u32` for larger
+//!   jumps (a valid gap is never 0, so the escape byte is free).  This is
+//!   EIE's 4-bit relative index idea at byte granularity — 4× smaller
+//!   column metadata with a trivial decoder.
+//! * **Optional Huffman pass** — the gap bytes of a pruned layer are
+//!   highly skewed (small gaps dominate), so the canonical byte-alphabet
+//!   coder from [`crate::sparse::huffman`] often beats the plain bytes;
+//!   a leading tag byte records which form was stored, chosen at encode
+//!   time by whichever is smaller (deterministic, self-describing).
+//! * **Codebook values** — deterministic k-means clusters the non-zero
+//!   Q7.8 values into ≤ 16 levels (EIE's weight sharing); values become
+//!   4-bit indices into a shared lookup table, packed two per byte on
+//!   disk.  Lossy — the compression search only accepts it for a layer
+//!   when the *measured* accuracy stays inside the budget.
+//!
+//! Everything here is pure byte/array transformation; the container
+//! framing lives in [`super::artifact`], the kernels that execute the
+//! decoded forms in [`crate::tensor`].
+
+use anyhow::{bail, ensure, Result};
+
+use crate::sparse::huffman::{self, Codebook, EncodedStream};
+use crate::tensor::{CsrMatI, MatI};
+
+/// How a `.rpz` layer's sparse payload is stored (CLI `--encoding`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactEncoding {
+    /// Absolute `u32` column indices (the v1 format).
+    Raw,
+    /// Delta-coded columns with the auto-selected Huffman pass.
+    Delta,
+    /// Delta-coded columns + 4-bit codebook-quantized values.
+    Codebook,
+}
+
+impl ArtifactEncoding {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactEncoding::Raw => "raw",
+            ArtifactEncoding::Delta => "delta",
+            ArtifactEncoding::Codebook => "codebook",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "raw" => Ok(ArtifactEncoding::Raw),
+            "delta" => Ok(ArtifactEncoding::Delta),
+            "codebook" => Ok(ArtifactEncoding::Codebook),
+            other => bail!("unknown encoding {other:?} (expected raw|delta|codebook)"),
+        }
+    }
+}
+
+/// Escape byte for gaps ≥ 256 (a real gap is always ≥ 1).
+const GAP_ESCAPE: u8 = 0x00;
+/// Payload tag: plain delta bytes follow.
+const TAG_PLAIN: u8 = 0;
+/// Payload tag: Huffman container follows.
+const TAG_HUFFMAN: u8 = 1;
+
+/// Delta-encode the per-row column gaps of a CSR matrix (no Huffman).
+pub fn delta_encode_cols(csr: &CsrMatI) -> Vec<u8> {
+    let mut out = Vec::with_capacity(csr.nnz());
+    for o in 0..csr.rows() {
+        let (idx, _) = csr.row(o);
+        let mut prev = -1i64;
+        for &c in idx {
+            let gap = i64::from(c) - prev;
+            debug_assert!(gap >= 1, "columns not strictly increasing");
+            if gap <= 255 {
+                out.push(gap as u8);
+            } else {
+                out.push(GAP_ESCAPE);
+                out.extend_from_slice(&(gap as u32).to_le_bytes());
+            }
+            prev = i64::from(c);
+        }
+    }
+    out
+}
+
+/// Inverse of [`delta_encode_cols`]: rebuild absolute column indices from
+/// the gap stream, row structure taken from `row_ptr`.
+pub fn delta_decode_cols(bytes: &[u8], row_ptr: &[usize], cols: usize) -> Result<Vec<u32>> {
+    let nnz = *row_ptr.last().unwrap_or(&0);
+    let mut col_idx = Vec::with_capacity(nnz);
+    let mut pos = 0usize;
+    for o in 0..row_ptr.len().saturating_sub(1) {
+        let row_nnz = row_ptr[o + 1] - row_ptr[o];
+        let mut prev = -1i64;
+        for _ in 0..row_nnz {
+            ensure!(pos < bytes.len(), "row {o}: gap stream truncated");
+            let b = bytes[pos];
+            pos += 1;
+            let gap = if b == GAP_ESCAPE {
+                ensure!(pos + 4 <= bytes.len(), "row {o}: escaped gap truncated");
+                let g = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+                pos += 4;
+                ensure!(g >= 1, "row {o}: zero gap");
+                i64::from(g)
+            } else {
+                i64::from(b)
+            };
+            let col = prev + gap;
+            ensure!(col < cols as i64, "row {o}: column {col} out of range");
+            col_idx.push(col as u32);
+            prev = col;
+        }
+    }
+    ensure!(pos == bytes.len(), "trailing bytes in gap stream");
+    Ok(col_idx)
+}
+
+/// Encode a CSR matrix's column stream for storage: delta bytes, then the
+/// Huffman pass iff its container comes out smaller.  Self-describing via
+/// the leading tag byte; decode with [`decode_columns`].
+pub fn encode_columns(csr: &CsrMatI) -> Vec<u8> {
+    let delta = delta_encode_cols(csr);
+    let es = huffman::encode_bytes(&delta);
+    // tag + raw_len + bit_len + 256-byte length table + bits
+    let huff_size = 1 + 4 + 8 + 256 + es.bits.len();
+    if huff_size < 1 + delta.len() {
+        let mut out = Vec::with_capacity(huff_size);
+        out.push(TAG_HUFFMAN);
+        out.extend_from_slice(&(es.raw_len as u32).to_le_bytes());
+        out.extend_from_slice(&(es.bit_len as u64).to_le_bytes());
+        out.extend_from_slice(&es.codebook.lengths);
+        out.extend_from_slice(&es.bits);
+        out
+    } else {
+        let mut out = Vec::with_capacity(1 + delta.len());
+        out.push(TAG_PLAIN);
+        out.extend_from_slice(&delta);
+        out
+    }
+}
+
+/// Decode a [`encode_columns`] payload back to absolute column indices.
+pub fn decode_columns(payload: &[u8], row_ptr: &[usize], cols: usize) -> Result<Vec<u32>> {
+    ensure!(!payload.is_empty(), "empty column payload");
+    match payload[0] {
+        TAG_PLAIN => delta_decode_cols(&payload[1..], row_ptr, cols),
+        TAG_HUFFMAN => {
+            let body = &payload[1..];
+            ensure!(body.len() >= 4 + 8 + 256, "huffman container truncated");
+            let raw_len = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+            let bit_len = u64::from_le_bytes(body[4..12].try_into().unwrap());
+            ensure!(bit_len <= usize::MAX as u64, "bit length overflows");
+            let mut lengths = [0u8; 256];
+            lengths.copy_from_slice(&body[12..268]);
+            let es = EncodedStream {
+                codebook: Codebook::from_lengths(lengths),
+                bits: body[268..].to_vec(),
+                bit_len: bit_len as usize,
+                raw_len,
+            };
+            let delta = huffman::decode(&es)?;
+            delta_decode_cols(&delta, row_ptr, cols)
+        }
+        other => bail!("unknown column payload tag {other}"),
+    }
+}
+
+/// Pack 4-bit codes two per byte (low nibble first).
+pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+    debug_assert!(codes.iter().all(|&c| c < 16));
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let hi = pair.get(1).copied().unwrap_or(0);
+        out.push(pair[0] | (hi << 4));
+    }
+    out
+}
+
+/// Unpack `n` 4-bit codes from a [`pack_nibbles`] stream.
+pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Result<Vec<u8>> {
+    ensure!(bytes.len() == n.div_ceil(2), "{} bytes for {n} nibbles", bytes.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = bytes[i / 2];
+        out.push(if i % 2 == 0 { b & 0x0F } else { b >> 4 });
+    }
+    Ok(out)
+}
+
+/// Codebook capacity — 4-bit codes, EIE's fully-connected-layer setting.
+pub const CODEBOOK_SIZE: usize = 16;
+/// Lloyd refinement passes (fixed count keeps the quantizer deterministic
+/// and fast; convergence beyond a handful of passes is noise at 16 bins).
+const KMEANS_ITERS: usize = 10;
+
+/// Deterministic k-means over the non-zero values: ≤ 16 sorted distinct
+/// levels.  Percentile initialisation over the sorted multiset, fixed
+/// Lloyd iteration count, ties broken toward the lower centroid — same
+/// inputs, same codebook, every time.
+pub fn codebook_levels(vals: &[i32]) -> Vec<i32> {
+    let mut sorted: Vec<i32> = vals.iter().copied().filter(|&v| v != 0).collect();
+    sorted.sort_unstable();
+    let mut distinct = sorted.clone();
+    distinct.dedup();
+    if distinct.len() <= CODEBOOK_SIZE {
+        return distinct;
+    }
+    // init at the (i + 0.5)/16 percentiles of the value distribution
+    let n = sorted.len();
+    let mut centroids: Vec<f64> = (0..CODEBOOK_SIZE)
+        .map(|i| f64::from(sorted[(2 * i + 1) * n / (2 * CODEBOOK_SIZE)]))
+        .collect();
+    for _ in 0..KMEANS_ITERS {
+        let mut sums = [0i64; CODEBOOK_SIZE];
+        let mut counts = [0u64; CODEBOOK_SIZE];
+        for &v in &sorted {
+            let c = nearest_centroid(&centroids, f64::from(v));
+            sums[c] += i64::from(v);
+            counts[c] += 1;
+        }
+        for c in 0..CODEBOOK_SIZE {
+            if counts[c] > 0 {
+                centroids[c] = sums[c] as f64 / counts[c] as f64;
+            }
+            // empty cluster keeps its centroid — deterministic, and the
+            // final dedup collapses any that never attract a value
+        }
+    }
+    let mut levels: Vec<i32> = centroids
+        .iter()
+        .map(|&c| (c.round() as i64).clamp(i64::from(i16::MIN), i64::from(i16::MAX)) as i32)
+        .filter(|&v| v != 0) // zero means "pruned", never a codebook entry
+        .collect();
+    levels.sort_unstable();
+    levels.dedup();
+    levels
+}
+
+fn nearest_centroid(centroids: &[f64], v: f64) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (i, &c) in centroids.iter().enumerate() {
+        let d = (v - c).abs();
+        // strict < keeps the lowest index on ties
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Snap every non-zero of `m` to its nearest codebook level (zeros stay
+/// zero — pruning is encoded by absence, not by a level).  The result has
+/// ≤ 16 distinct non-zero values, i.e. it is exactly representable as a
+/// [`crate::tensor::CsrCodebookMatI`].
+pub fn codebook_quantize_matrix(m: &MatI) -> MatI {
+    let levels = codebook_levels(&m.data);
+    let mut out = m.clone();
+    if levels.is_empty() {
+        return out;
+    }
+    for v in out.data.iter_mut() {
+        if *v != 0 {
+            *v = nearest_level(&levels, *v);
+        }
+    }
+    out
+}
+
+fn nearest_level(levels: &[i32], v: i32) -> i32 {
+    // levels are sorted: binary-search the insertion point, compare the
+    // two neighbours, ties toward the lower level
+    match levels.binary_search(&v) {
+        Ok(i) => levels[i],
+        Err(i) => {
+            let lo = i.checked_sub(1).map(|j| levels[j]);
+            let hi = levels.get(i).copied();
+            match (lo, hi) {
+                (Some(a), Some(b)) => {
+                    if i64::from(v) - i64::from(a) <= i64::from(b) - i64::from(v) {
+                        a
+                    } else {
+                        b
+                    }
+                }
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => unreachable!("levels non-empty"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_sparse(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> MatI {
+        let mut m = MatI::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            if rng.bernoulli(density) {
+                *v = (rng.normal_scaled(0.0, 120.0) as i32).clamp(-32768, 32767);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn delta_roundtrip_with_large_gaps() {
+        // a 1000-column row with nnz at 0, 990 forces the u32 escape path
+        let mut m = MatI::zeros(2, 1000);
+        m.row_mut(0)[0] = 5;
+        m.row_mut(0)[990] = -7;
+        m.row_mut(1)[999] = 3; // first gap 1000 also escapes
+        let csr = CsrMatI::from_dense(&m);
+        let delta = delta_encode_cols(&csr);
+        assert!(delta.contains(&GAP_ESCAPE));
+        let back = delta_decode_cols(&delta, csr.row_ptr(), csr.cols()).unwrap();
+        assert_eq!(back, csr.col_idx());
+    }
+
+    #[test]
+    fn prop_encode_columns_roundtrips_and_beats_raw_when_pruned() {
+        prop_check(40, |g| {
+            let rows = g.usize(1..40);
+            let cols = g.usize(1..400);
+            let density = g.f64(0.0, 0.5);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let csr = CsrMatI::from_dense(&rand_sparse(rows, cols, density, &mut rng));
+            let payload = encode_columns(&csr);
+            let back = decode_columns(&payload, csr.row_ptr(), csr.cols()).unwrap();
+            back == csr.col_idx()
+        });
+    }
+
+    #[test]
+    fn encoded_columns_smaller_than_raw_at_high_prune() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let csr = CsrMatI::from_dense(&rand_sparse(300, 561, 0.1, &mut rng));
+        let payload = encode_columns(&csr);
+        assert!(
+            payload.len() < csr.nnz() * 4,
+            "{} encoded vs {} raw",
+            payload.len(),
+            csr.nnz() * 4
+        );
+    }
+
+    #[test]
+    fn corrupt_column_payloads_rejected() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let csr = CsrMatI::from_dense(&rand_sparse(10, 50, 0.3, &mut rng));
+        let payload = encode_columns(&csr);
+        assert!(decode_columns(&[], csr.row_ptr(), csr.cols()).is_err());
+        assert!(decode_columns(&[9], csr.row_ptr(), csr.cols()).is_err());
+        // truncation must error, not mis-decode
+        let cut = &payload[..payload.len() - 1];
+        assert!(decode_columns(cut, csr.row_ptr(), csr.cols()).is_err());
+    }
+
+    #[test]
+    fn nibble_roundtrip_odd_and_even() {
+        for n in [0usize, 1, 2, 7, 8] {
+            let codes: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+            let packed = pack_nibbles(&codes);
+            assert_eq!(packed.len(), n.div_ceil(2));
+            assert_eq!(unpack_nibbles(&packed, n).unwrap(), codes);
+        }
+        assert!(unpack_nibbles(&[0, 0], 1).is_err());
+    }
+
+    #[test]
+    fn codebook_levels_cap_and_pass_through() {
+        // ≤ 16 distinct values: identity
+        let small: Vec<i32> = vec![-3, 5, 5, 9, 0, 0, -3];
+        assert_eq!(codebook_levels(&small), vec![-3, 5, 9]);
+        // wide distribution: clustered to ≤ 16 non-zero levels
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let wide: Vec<i32> = (0..5000)
+            .map(|_| (rng.normal_scaled(0.0, 300.0) as i32).clamp(-32768, 32767))
+            .collect();
+        let levels = codebook_levels(&wide);
+        assert!(!levels.is_empty() && levels.len() <= CODEBOOK_SIZE, "{}", levels.len());
+        assert!(levels.windows(2).all(|w| w[0] < w[1]));
+        assert!(!levels.contains(&0));
+    }
+
+    #[test]
+    fn prop_quantized_matrix_is_codebook_representable() {
+        prop_check(30, |g| {
+            let rows = g.usize(1..25);
+            let cols = g.usize(1..40);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let m = rand_sparse(rows, cols, g.f64(0.0, 0.8), &mut rng);
+            let q = codebook_quantize_matrix(&m);
+            // zeros stay zero (prune structure preserved)
+            if m.data.iter().zip(q.data.iter()).any(|(&a, &b)| (a == 0) != (b == 0)) {
+                return false;
+            }
+            let mut distinct: Vec<i32> = q.data.iter().copied().filter(|&v| v != 0).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            distinct.len() <= CODEBOOK_SIZE
+        });
+    }
+
+    #[test]
+    fn quantizer_is_deterministic() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let m = rand_sparse(30, 40, 0.5, &mut rng);
+        assert_eq!(codebook_quantize_matrix(&m).data, codebook_quantize_matrix(&m).data);
+    }
+}

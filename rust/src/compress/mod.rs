@@ -16,12 +16,15 @@
 //!    Every move is accepted only after evaluation, so the invariant
 //!    "never exceeds the budget on the search slice" holds by
 //!    construction (and is property-tested).
-//! 3. [`artifact`] — the `.rpz` container: Q-format metadata, per-layer
-//!    CSR or dense blobs, and the calibrated `sparse_threshold` (from
-//!    `bench calibrate`), so serving compiles kernels from the artifact's
-//!    own calibration instead of a CLI flag
+//! 3. [`encoding`] — the EIE stream rungs: delta/Huffman-coded CSR
+//!    columns (lossless) and the deterministic 16-level codebook
+//!    quantizer (lossy; the search only accepts it inside the budget).
+//! 4. [`artifact`] — the `.rpz` container: Q-format metadata, per-layer
+//!    dense/CSR/delta/codebook blobs, and the calibrated
+//!    `sparse_threshold` (from `bench calibrate`), so serving compiles
+//!    kernels from the artifact's own calibration instead of a CLI flag
 //!    ([`ExecPlan::compile_artifact`](crate::exec::ExecPlan::compile_artifact)).
-//! 4. [`prune`] — the one magnitude-pruning implementation, shared with
+//! 5. [`prune`] — the one magnitude-pruning implementation, shared with
 //!    the simulator (`sim::pruning` re-exports it).
 //!
 //! The end-to-end path is `zynq-dnn compress` (CLI) →
@@ -30,14 +33,20 @@
 //! (EXPERIMENTS.md §compress, paper Fig. 7 / Table 4 side-by-side).
 
 pub mod artifact;
+pub mod encoding;
 pub mod prune;
 pub mod search;
 pub mod sensitivity;
 
-pub use artifact::{load_artifact, save_artifact, CompressedModel, LayerBlob};
+pub use artifact::{
+    load_artifact, save_artifact, CompressedModel, IndexOverflowError, LayerBlob,
+};
+pub use encoding::{codebook_quantize_matrix, ArtifactEncoding, CODEBOOK_SIZE};
 pub use prune::{prune_layer, prune_matrix, prune_per_layer, prune_qnetwork};
 pub use search::{search, SearchConfig, SearchOutcome};
-pub use sensitivity::{sweep, SensitivityPoint, SensitivityReport, DEFAULT_LADDER};
+pub use sensitivity::{
+    codebook_deltas, sweep, SensitivityPoint, SensitivityReport, DEFAULT_LADDER,
+};
 
 use anyhow::{ensure, Result};
 

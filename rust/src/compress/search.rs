@@ -9,11 +9,19 @@
 //! on the search slice, whatever the interactions between layers do
 //! (accuracy under pruning is not monotone, which is also why this scans
 //! the ladder instead of binary-searching it).
+//!
+//! With `encoding = Codebook` a second greedy pass follows the prune
+//! pass: layers are codebook-quantized (16-level deterministic k-means,
+//! EIE's weight sharing) one at a time, least codebook-sensitive first,
+//! each move again accepted only if the *measured* accuracy stays at or
+//! above the same floor — so the one budget covers both pruning and
+//! quantization error, by construction.
 
 use anyhow::{ensure, Result};
 
+use super::encoding::{codebook_quantize_matrix, ArtifactEncoding};
 use super::prune::prune_layer;
-use super::sensitivity::SensitivityReport;
+use super::sensitivity::{codebook_deltas, SensitivityReport};
 use super::{accuracy_q, EvalSet};
 use crate::nn::forward::QNetwork;
 
@@ -25,6 +33,10 @@ pub struct SearchConfig {
     pub budget: f64,
     /// Candidate per-layer prune factors, ascending.
     pub ladder: Vec<f64>,
+    /// Target artifact encoding.  `Codebook` enables the weight-sharing
+    /// pass; `Raw`/`Delta` only affect how the artifact stores the result
+    /// (both lossless).
+    pub encoding: ArtifactEncoding,
 }
 
 impl Default for SearchConfig {
@@ -32,6 +44,7 @@ impl Default for SearchConfig {
         Self {
             budget: 0.02,
             ladder: super::sensitivity::DEFAULT_LADDER.to_vec(),
+            encoding: ArtifactEncoding::Delta,
         }
     }
 }
@@ -49,7 +62,12 @@ pub struct SearchOutcome {
     pub factors: Vec<f64>,
     /// Measured per-layer prune factors of the result (zeros fraction).
     pub achieved: Vec<f64>,
-    /// The pruned network itself.
+    /// The encoding the search ran with (what the artifact will store).
+    pub encoding: ArtifactEncoding,
+    /// Which layers the codebook pass accepted (all `false` unless
+    /// `encoding == Codebook`).
+    pub codebook: Vec<bool>,
+    /// The pruned (and possibly weight-shared) network itself.
     pub network: QNetwork,
 }
 
@@ -104,6 +122,29 @@ pub fn search(
             }
         }
     }
+    // codebook pass: same floor, same accept-only-after-measuring greedy,
+    // ordered by the quantization sensitivity of the *pruned* network
+    let mut codebook = vec![false; net.weights.len()];
+    if cfg.encoding == ArtifactEncoding::Codebook {
+        let deltas = codebook_deltas(&current, eval)?;
+        let mut order: Vec<usize> = (0..deltas.len()).collect();
+        order.sort_by(|&a, &b| {
+            deltas[a]
+                .partial_cmp(&deltas[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for layer in order {
+            let mut candidate = current.clone();
+            candidate.weights[layer] = codebook_quantize_matrix(&candidate.weights[layer]);
+            let acc = accuracy_q(&candidate, eval)?;
+            if acc >= floor {
+                codebook[layer] = true;
+                current = candidate;
+                current_acc = acc;
+            }
+        }
+    }
     let achieved = current.prune_factors();
     Ok(SearchOutcome {
         baseline_accuracy: baseline,
@@ -111,6 +152,8 @@ pub fn search(
         budget: cfg.budget,
         factors,
         achieved,
+        encoding: cfg.encoding,
+        codebook,
         network: current,
     })
 }
@@ -132,14 +175,19 @@ mod tests {
         )
     }
 
-    fn run(seed: u64, budget: f64) -> SearchOutcome {
+    fn run_enc(seed: u64, budget: f64, encoding: ArtifactEncoding) -> SearchOutcome {
         let (net, eval) = fixture(seed);
         let report = sweep(&net, &eval, &[0.5, 0.8, 0.95]).unwrap();
         let cfg = SearchConfig {
             budget,
             ladder: vec![0.5, 0.8, 0.95],
+            encoding,
         };
         search(&net, &eval, &report, &cfg).unwrap()
+    }
+
+    fn run(seed: u64, budget: f64) -> SearchOutcome {
+        run_enc(seed, budget, ArtifactEncoding::Delta)
     }
 
     #[test]
@@ -169,17 +217,53 @@ mod tests {
     }
 
     #[test]
+    fn codebook_rung_holds_budget_and_marks_layers() {
+        for (seed, budget) in [(1u64, 0.02), (2, 0.10), (3, 1.0)] {
+            let o = run_enc(seed, budget, ArtifactEncoding::Codebook);
+            assert!(
+                o.accuracy_delta() <= budget + 1e-12,
+                "seed {seed} budget {budget}: delta {}",
+                o.accuracy_delta()
+            );
+            assert_eq!(o.encoding, ArtifactEncoding::Codebook);
+            assert_eq!(o.codebook.len(), o.network.weights.len());
+            // every accepted layer really is 16-level representable
+            for (layer, &accepted) in o.codebook.iter().enumerate() {
+                if accepted {
+                    let mut d: Vec<i32> = o.network.weights[layer]
+                        .data
+                        .iter()
+                        .copied()
+                        .filter(|&v| v != 0)
+                        .collect();
+                    d.sort_unstable();
+                    d.dedup();
+                    assert!(d.len() <= 16, "layer {layer}: {} levels", d.len());
+                }
+            }
+            // an infinite budget accepts the codebook everywhere
+            if budget >= 1.0 {
+                assert!(o.codebook.iter().all(|&c| c), "{:?}", o.codebook);
+            }
+        }
+        // lossless encodings never mark codebook layers
+        assert!(run(4, 0.1).codebook.iter().all(|&c| !c));
+    }
+
+    #[test]
     fn rejects_bad_inputs() {
         let (net, eval) = fixture(5);
         let report = sweep(&net, &eval, &[0.5]).unwrap();
         let bad = SearchConfig {
             budget: -0.1,
             ladder: vec![0.5],
+            encoding: ArtifactEncoding::Delta,
         };
         assert!(search(&net, &eval, &report, &bad).is_err());
         let empty = SearchConfig {
             budget: 0.1,
             ladder: vec![],
+            encoding: ArtifactEncoding::Delta,
         };
         assert!(search(&net, &eval, &report, &empty).is_err());
         let no_eval = EvalSet {

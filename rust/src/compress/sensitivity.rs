@@ -7,6 +7,7 @@
 
 use anyhow::{ensure, Result};
 
+use super::encoding::codebook_quantize_matrix;
 use super::prune::prune_layer;
 use super::{accuracy_q, EvalSet};
 use crate::bench::report::Table;
@@ -62,6 +63,23 @@ pub fn sweep(net: &QNetwork, eval: &EvalSet, ladder: &[f64]) -> Result<Sensitivi
         points,
         layers: net.weights.len(),
     })
+}
+
+/// Codebook-quantization sensitivity: accuracy delta of weight-sharing
+/// each layer *alone* (16-level deterministic k-means), baseline minus
+/// quantized (positive = hurts).  The search's codebook rung visits
+/// layers in ascending order of this — the same least-sensitive-first
+/// greedy the prune pass uses.
+pub fn codebook_deltas(net: &QNetwork, eval: &EvalSet) -> Result<Vec<f64>> {
+    ensure!(!eval.is_empty(), "sensitivity eval slice must not be empty");
+    let baseline = accuracy_q(net, eval)?;
+    (0..net.weights.len())
+        .map(|layer| {
+            let mut probe = net.clone();
+            probe.weights[layer] = codebook_quantize_matrix(&probe.weights[layer]);
+            Ok(baseline - accuracy_q(&probe, eval)?)
+        })
+        .collect()
 }
 
 impl SensitivityReport {
@@ -152,6 +170,22 @@ mod tests {
         }
         let table = r.render();
         assert!(table.contains("q=0.90"));
+    }
+
+    #[test]
+    fn codebook_deltas_cover_layers_and_are_zero_when_lossless() {
+        let (net, eval) = fixture();
+        let deltas = codebook_deltas(&net, &eval).unwrap();
+        assert_eq!(deltas.len(), 2);
+        // a network already on ≤ 16 levels quantizes to itself: Δ = 0
+        let mut tiny = net.clone();
+        for w in tiny.weights.iter_mut() {
+            for v in w.data.iter_mut() {
+                *v = (*v).signum() * 100;
+            }
+        }
+        let d = codebook_deltas(&tiny, &eval).unwrap();
+        assert!(d.iter().all(|&x| x.abs() < 1e-12), "{d:?}");
     }
 
     #[test]

@@ -25,20 +25,36 @@
 //! * **`DenseQ`** otherwise — the register-blocked wrapping-i32 GEMM
 //!   ([`crate::tensor::gemm_i32`]).  Below the threshold the sparse
 //!   format's per-non-zero indexing overhead outweighs the skipped MACs.
+//! * **`CodebookQ`** for `.rpz` layers stored with EIE weight sharing —
+//!   CSR positions plus 4-bit codes into a 16-entry value LUT
+//!   ([`crate::tensor::spmm_codebook_i32`]); same work scaling as
+//!   `SparseQ`, ~¼ the value bytes.
 //! * **`DenseF32`** for plans compiled from float weights (the software
 //!   baseline path); no sparse variant exists because pruning is a
 //!   quantized-deployment technique in the paper.
 //!
 //! Compressed `.rpz` artifacts ([`crate::compress`]) short-circuit the
 //! policy: [`ExecPlan::compile_artifact`] maps each stored blob to its
-//! kernel directly (CSR → `SparseQ`, dense → `DenseQ`), so the
-//! calibrated threshold embedded at compression time *is* the kernel
-//! decision — no `--threshold` flag at serve time.
+//! kernel directly (CSR/delta-CSR → `SparseQ`, codebook → `CodebookQ`,
+//! dense → `DenseQ`), so the calibrated threshold embedded at compression
+//! time *is* the kernel decision — no `--threshold` flag at serve time.
+//!
+//! Two further EIE-style refinements apply to the sparse-family kernels:
+//!
+//! * **Row reordering** ([`PlanOptions::reorder_rows`]) sorts CSR rows by
+//!   descending non-zero count at compile time and un-permutes outputs
+//!   through a stored index — better locality and parallel balance, same
+//!   bits.
+//! * **Activation skipping** ([`PlanOptions::activation_skip`], default
+//!   on): after a ReLU layer the runtime builds a non-zero-column mask of
+//!   the activation batch and the sparse kernels skip dead columns
+//!   entirely; engaged per batch only when the zero-column fraction
+//!   reaches [`ACT_SKIP_MIN_ZERO_FRAC`].
 //!
 //! All Q kernels use wrapping i32 accumulation, which is associative and
 //! commutative mod 2^32 — so every plan, any thread count, any kernel mix,
-//! is **bit-identical** to the golden dense model (property-tested in
-//! [`plan`]).
+//! any reorder/skip setting, is **bit-identical** to the golden dense
+//! model (property-tested in [`plan`]).
 //!
 //! # Execution
 //!
@@ -55,4 +71,6 @@
 
 pub mod plan;
 
-pub use plan::{ExecPlan, KernelKind, PlanOptions, DEFAULT_SPARSE_THRESHOLD};
+pub use plan::{
+    ExecPlan, KernelKind, PlanOptions, ACT_SKIP_MIN_ZERO_FRAC, DEFAULT_SPARSE_THRESHOLD,
+};

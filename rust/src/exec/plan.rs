@@ -11,7 +11,9 @@ use crate::nn::forward::QNetwork;
 use crate::nn::spec::{Activation, NetworkSpec};
 use crate::sparse;
 use crate::tensor::{
-    gemm_f32, gemm_i32, gemm_i32_parallel, spmm_i32, spmm_i32_parallel, CsrMatI, MatF, MatI,
+    column_nonzero_mask, gemm_f32, gemm_i32, gemm_i32_parallel, spmm_codebook_i32_opt,
+    spmm_codebook_i32_opt_parallel, spmm_i32_opt, spmm_i32_opt_parallel, CsrCodebookMatI,
+    CsrMatI, MatF, MatI,
 };
 use crate::util::threadpool::ThreadPool;
 
@@ -21,6 +23,12 @@ use crate::util::threadpool::ThreadPool;
 /// of the weights are gone (the paper's evaluation networks prune to
 /// 0.72–0.94, all on the winning side for their large layers).
 pub const DEFAULT_SPARSE_THRESHOLD: f64 = 0.75;
+
+/// Minimum zero-column fraction of a post-ReLU activation batch at which
+/// the sparse kernels engage the column mask.  Below this the per-entry
+/// mask test costs more than the skipped MACs; the mask build itself is
+/// O(batch × width), noise next to the SpMM it guards.
+pub const ACT_SKIP_MIN_ZERO_FRAC: f64 = 0.25;
 
 /// Plan-compilation knobs.
 #[derive(Debug, Clone)]
@@ -32,6 +40,15 @@ pub struct PlanOptions {
     /// Worker threads for the row-partitioned parallel kernels; ≤ 1 keeps
     /// every kernel serial.
     pub threads: usize,
+    /// Sort sparse rows by descending non-zero count at compile time
+    /// (spada-sim's `sort_by_row_length`); outputs are un-permuted through
+    /// a stored index, so results are bit-identical either way.
+    pub reorder_rows: bool,
+    /// Skip whole-zero activation columns after ReLU layers (EIE's
+    /// dynamic activation sparsity).  Engaged per batch only when the
+    /// zero-column fraction reaches [`ACT_SKIP_MIN_ZERO_FRAC`];
+    /// bit-identical either way (a skipped column contributes exactly 0).
+    pub activation_skip: bool,
 }
 
 impl Default for PlanOptions {
@@ -39,6 +56,8 @@ impl Default for PlanOptions {
         Self {
             sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
             threads: 1,
+            reorder_rows: false,
+            activation_skip: true,
         }
     }
 }
@@ -65,6 +84,16 @@ impl PlanOptions {
         self.threads = threads;
         self
     }
+
+    pub fn with_reorder_rows(mut self, on: bool) -> Self {
+        self.reorder_rows = on;
+        self
+    }
+
+    pub fn with_activation_skip(mut self, on: bool) -> Self {
+        self.activation_skip = on;
+        self
+    }
 }
 
 /// Which kernel a layer compiled to (introspection for tests, benches, and
@@ -73,7 +102,56 @@ impl PlanOptions {
 pub enum KernelKind {
     DenseQ,
     SparseQ,
+    /// CSR with EIE weight sharing: 4-bit codes + 16-entry LUT.
+    CodebookQ,
     DenseF32,
+}
+
+/// A compiled sparse layer: the CSR stream plus the output-column
+/// un-permutation when the rows were reordered by nnz.
+struct SparseData {
+    csr: CsrMatI,
+    out_col: Option<Vec<u32>>,
+}
+
+impl SparseData {
+    fn new(csr: CsrMatI, reorder: bool) -> Self {
+        if reorder {
+            let (csr, out_col) = csr.reorder_by_nnz();
+            Self {
+                csr,
+                out_col: Some(out_col),
+            }
+        } else {
+            Self {
+                csr,
+                out_col: None,
+            }
+        }
+    }
+}
+
+/// A compiled codebook layer (see [`SparseData`]).
+struct CodebookData {
+    mat: CsrCodebookMatI,
+    out_col: Option<Vec<u32>>,
+}
+
+impl CodebookData {
+    fn new(mat: CsrCodebookMatI, reorder: bool) -> Self {
+        if reorder {
+            let (mat, out_col) = mat.reorder_by_nnz();
+            Self {
+                mat,
+                out_col: Some(out_col),
+            }
+        } else {
+            Self {
+                mat,
+                out_col: None,
+            }
+        }
+    }
 }
 
 /// Kernels hold their weight storage behind `Arc` so sharded serving can
@@ -84,7 +162,9 @@ enum Kernel {
     /// Register-blocked wrapping-i32 GEMM on the dense Q7.8 weights.
     DenseQ(Arc<MatI>),
     /// CSR sparse × dense wrapping GEMM derived from the §5.6 tuple stream.
-    SparseQ(Arc<CsrMatI>),
+    SparseQ(Arc<SparseData>),
+    /// CSR with codebook-shared 4-bit values (EIE weight sharing).
+    CodebookQ(Arc<CodebookData>),
     /// f32 GEMM (software-baseline path).
     DenseF32(Arc<MatF>),
 }
@@ -95,6 +175,7 @@ impl Clone for Kernel {
         match self {
             Kernel::DenseQ(w) => Kernel::DenseQ(Arc::clone(w)),
             Kernel::SparseQ(w) => Kernel::SparseQ(Arc::clone(w)),
+            Kernel::CodebookQ(w) => Kernel::CodebookQ(Arc::clone(w)),
             Kernel::DenseF32(w) => Kernel::DenseF32(Arc::clone(w)),
         }
     }
@@ -105,8 +186,14 @@ impl Kernel {
         match self {
             Kernel::DenseQ(_) => KernelKind::DenseQ,
             Kernel::SparseQ(_) => KernelKind::SparseQ,
+            Kernel::CodebookQ(_) => KernelKind::CodebookQ,
             Kernel::DenseF32(_) => KernelKind::DenseF32,
         }
+    }
+
+    /// Sparse-family kernels can consume an activation-column mask.
+    fn maskable(&self) -> bool {
+        matches!(self, Kernel::SparseQ(_) | Kernel::CodebookQ(_))
     }
 }
 
@@ -127,6 +214,11 @@ pub struct ExecPlan {
     qbufs: [MatI; 2],
     /// Ping-pong f32 buffers (only used by `DenseF32` plans).
     fbufs: [MatF; 2],
+    /// EIE activation-sparsity skipping enabled (see
+    /// [`PlanOptions::activation_skip`]).
+    act_skip: bool,
+    /// Reusable column non-zero mask scratch for the skip path.
+    colmask: Vec<bool>,
 }
 
 impl ExecPlan {
@@ -144,7 +236,10 @@ impl ExecPlan {
             let kernel = if q >= opts.sparse_threshold {
                 // encode through the paper's tuple stream so the serving
                 // path exercises the same format the hardware consumes
-                Kernel::SparseQ(Arc::new(sparse::encode_matrix(w)?.to_csr()))
+                Kernel::SparseQ(Arc::new(SparseData::new(
+                    sparse::encode_matrix(w)?.to_csr(),
+                    opts.reorder_rows,
+                )))
             } else {
                 Kernel::DenseQ(Arc::new(w.clone()))
             };
@@ -154,16 +249,24 @@ impl ExecPlan {
                 out_dim: w.rows,
             });
         }
-        Self::new(net.spec.clone(), layers, opts.threads)
+        Self::new(net.spec.clone(), layers, opts)
     }
 
     /// Compile a compressed `.rpz` artifact
-    /// ([`crate::compress::CompressedModel`]): the kernel choice is the
-    /// artifact's own — CSR blobs become `SparseQ` kernels *directly*
-    /// (no densify/re-encode on the load path) and dense blobs become
-    /// `DenseQ`, so serving honours the calibrated `sparse_threshold`
-    /// embedded at compression time instead of a CLI flag.
+    /// ([`crate::compress::CompressedModel`]) with the default options at
+    /// `threads` workers (activation skipping on, rows unreordered).
     pub fn compile_artifact(model: &CompressedModel, threads: usize) -> Result<Self> {
+        Self::compile_artifact_with(model, &PlanOptions::default().with_threads(threads))
+    }
+
+    /// [`Self::compile_artifact`] with explicit [`PlanOptions`].  The
+    /// kernel choice is the artifact's own — sparse blobs become
+    /// `SparseQ`/`CodebookQ` kernels *directly* (no densify/re-encode on
+    /// the load path) and dense blobs become `DenseQ`, so serving honours
+    /// the calibrated `sparse_threshold` embedded at compression time;
+    /// `opts.sparse_threshold` is ignored here.  `reorder_rows` and
+    /// `activation_skip` apply to the compiled sparse kernels.
+    pub fn compile_artifact_with(model: &CompressedModel, opts: &PlanOptions) -> Result<Self> {
         let shapes = model.spec.weight_shapes();
         ensure!(
             model.layers.len() == shapes.len(),
@@ -188,7 +291,12 @@ impl ExecPlan {
             );
             let kernel = match blob {
                 LayerBlob::Dense(w) => Kernel::DenseQ(Arc::new(w.clone())),
-                LayerBlob::Csr(m) => Kernel::SparseQ(Arc::new(m.clone())),
+                LayerBlob::Csr(m) | LayerBlob::CsrDelta(m) => {
+                    Kernel::SparseQ(Arc::new(SparseData::new(m.clone(), opts.reorder_rows)))
+                }
+                LayerBlob::Codebook(m) => {
+                    Kernel::CodebookQ(Arc::new(CodebookData::new(m.clone(), opts.reorder_rows)))
+                }
             };
             layers.push(LayerPlan {
                 kernel,
@@ -196,7 +304,7 @@ impl ExecPlan {
                 out_dim: o,
             });
         }
-        Self::new(model.spec.clone(), layers, threads)
+        Self::new(model.spec.clone(), layers, opts)
     }
 
     /// Compile the f32 software-baseline path.
@@ -225,17 +333,19 @@ impl ExecPlan {
                 out_dim: o,
             });
         }
-        Self::new(spec.clone(), layers, 1)
+        Self::new(spec.clone(), layers, &PlanOptions::default())
     }
 
-    fn new(spec: NetworkSpec, layers: Vec<LayerPlan>, threads: usize) -> Result<Self> {
+    fn new(spec: NetworkSpec, layers: Vec<LayerPlan>, opts: &PlanOptions) -> Result<Self> {
         ensure!(!layers.is_empty(), "{}: network has no layers", spec.name);
         Ok(Self {
             spec,
             layers,
-            pool: (threads > 1).then(|| Arc::new(ThreadPool::new(threads))),
+            pool: (opts.threads > 1).then(|| Arc::new(ThreadPool::new(opts.threads))),
             qbufs: [MatI::zeros(0, 0), MatI::zeros(0, 0)],
             fbufs: [MatF::zeros(0, 0), MatF::zeros(0, 0)],
+            act_skip: opts.activation_skip,
+            colmask: Vec::new(),
         })
     }
 
@@ -265,6 +375,8 @@ impl ExecPlan {
             pool: self.pool.clone(),
             qbufs: [MatI::zeros(0, 0), MatI::zeros(0, 0)],
             fbufs: [MatF::zeros(0, 0), MatF::zeros(0, 0)],
+            act_skip: self.act_skip,
+            colmask: Vec::new(),
         }
     }
 
@@ -295,7 +407,14 @@ impl ExecPlan {
         for b in self.qbufs.iter_mut() {
             b.data.reserve((n * widest).saturating_sub(b.data.len()));
         }
-        let Self { layers, qbufs, .. } = self;
+        let Self {
+            layers,
+            qbufs,
+            colmask,
+            act_skip,
+            ..
+        } = self;
+        let act_skip = *act_skip;
         for (j, layer) in layers.iter().enumerate() {
             let (lo, hi) = qbufs.split_at_mut(1);
             let (dst, prev) = if j % 2 == 0 {
@@ -307,18 +426,46 @@ impl ExecPlan {
             dst.rows = n;
             dst.cols = layer.out_dim;
             dst.data.resize(n * layer.out_dim, 0); // within capacity: no alloc
+            // EIE activation sparsity: ReLU zeroes whole activation
+            // columns; the sparse kernels can skip them entirely.  Only
+            // worth the per-entry mask test when enough columns died.
+            let mask: Option<&[bool]> = if act_skip
+                && j > 0
+                && layer.kernel.maskable()
+                && layers[j - 1].act == Activation::Relu
+            {
+                let nz = column_nonzero_mask(src, colmask);
+                let zero_frac = (src.cols - nz) as f64 / src.cols.max(1) as f64;
+                (zero_frac >= ACT_SKIP_MIN_ZERO_FRAC).then_some(colmask.as_slice())
+            } else {
+                None
+            };
             match &layer.kernel {
                 Kernel::DenseQ(w) => match pool {
                     // row partitioning needs a few sample rows to win
                     Some(p) if n >= 4 => gemm_i32_parallel(p, src, w, dst),
                     _ => gemm_i32(src, w, dst),
                 },
-                Kernel::SparseQ(w) => match pool {
-                    // neuron partitioning parallelizes even batch 1, but
-                    // needs enough rows to amortize the fork
-                    Some(p) if w.rows() >= 64 => spmm_i32_parallel(p, src, w, dst),
-                    _ => spmm_i32(src, w, dst),
-                },
+                Kernel::SparseQ(d) => {
+                    let out_col = d.out_col.as_deref();
+                    match pool {
+                        // neuron partitioning parallelizes even batch 1,
+                        // but needs enough rows to amortize the fork
+                        Some(p) if d.csr.rows() >= 64 => {
+                            spmm_i32_opt_parallel(p, src, &d.csr, dst, out_col, mask)
+                        }
+                        _ => spmm_i32_opt(src, &d.csr, dst, out_col, mask),
+                    }
+                }
+                Kernel::CodebookQ(d) => {
+                    let out_col = d.out_col.as_deref();
+                    match pool {
+                        Some(p) if d.mat.rows() >= 64 => {
+                            spmm_codebook_i32_opt_parallel(p, src, &d.mat, dst, out_col, mask)
+                        }
+                        _ => spmm_codebook_i32_opt(src, &d.mat, dst, out_col, mask),
+                    }
+                }
                 Kernel::DenseF32(_) => {
                     anyhow::bail!("{}: plan was compiled for f32; use run_f32", self.spec.name)
                 }
@@ -465,7 +612,7 @@ mod tests {
         assert_eq!(from_art.kernels(), vec![KernelKind::SparseQ; 2]);
         let opts = PlanOptions {
             sparse_threshold: 0.75,
-            threads: 1,
+            ..PlanOptions::default()
         };
         let mut from_net = ExecPlan::compile_q(&net, &opts).unwrap();
         let x = rand_x(5, 64, 10);
@@ -473,6 +620,63 @@ mod tests {
             from_art.run(&x).unwrap().data,
             from_net.run(&x).unwrap().data
         );
+    }
+
+    #[test]
+    fn codebook_artifact_compiles_codebook_kernels_bit_identical() {
+        // weight-share the net first so the Codebook encoding stores every
+        // sparse layer as a CodebookQ kernel, then check the plan against
+        // the dense oracle over the same (quantized) weights
+        let mut net = prune_qnetwork(&rand_qnet(quickstart(), 11), 0.9);
+        for w in net.weights.iter_mut() {
+            *w = crate::compress::codebook_quantize_matrix(w);
+        }
+        let model = crate::compress::CompressedModel::from_network_encoded(
+            &net,
+            0.75,
+            crate::compress::ArtifactEncoding::Codebook,
+            0.0,
+            1.0,
+            1.0,
+        )
+        .unwrap();
+        let want = reference_forward_q(&net, &rand_x(5, 64, 12));
+        for opts in [
+            PlanOptions::default(),
+            PlanOptions::default().with_reorder_rows(true),
+            PlanOptions::default().with_activation_skip(false),
+            PlanOptions::default().with_threads(3).with_reorder_rows(true),
+        ] {
+            let mut plan = ExecPlan::compile_artifact_with(&model, &opts).unwrap();
+            assert_eq!(plan.kernels(), vec![KernelKind::CodebookQ; 2], "{opts:?}");
+            assert_eq!(plan.run(&rand_x(5, 64, 12)).unwrap().data, want.data, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn reorder_and_activation_skip_are_bit_identical() {
+        // heavily pruned net + ReLU hidden layers + inputs with dead
+        // columns: both the row permutation and the column mask engage,
+        // and neither may change a single bit
+        let net = prune_qnetwork(&rand_qnet(quickstart(), 13), 0.9);
+        let mut x = rand_x(6, 64, 14);
+        for r in 0..x.rows {
+            for c in 0..x.cols {
+                if c % 3 != 0 {
+                    x.data[r * x.cols + c] = 0;
+                }
+            }
+        }
+        let want = reference_forward_q(&net, &x);
+        for opts in [
+            PlanOptions::sparse_always(),
+            PlanOptions::sparse_always().with_reorder_rows(true),
+            PlanOptions::sparse_always().with_activation_skip(false),
+            PlanOptions::sparse_always().with_reorder_rows(true).with_threads(3),
+        ] {
+            let mut plan = ExecPlan::compile_q(&net, &opts).unwrap();
+            assert_eq!(plan.run(&x).unwrap().data, want.data, "{opts:?}");
+        }
     }
 
     #[test]
@@ -514,6 +718,7 @@ mod tests {
             match (&a.kernel, &b.kernel) {
                 (Kernel::DenseQ(x), Kernel::DenseQ(y)) => assert!(Arc::ptr_eq(x, y)),
                 (Kernel::SparseQ(x), Kernel::SparseQ(y)) => assert!(Arc::ptr_eq(x, y)),
+                (Kernel::CodebookQ(x), Kernel::CodebookQ(y)) => assert!(Arc::ptr_eq(x, y)),
                 (Kernel::DenseF32(x), Kernel::DenseF32(y)) => assert!(Arc::ptr_eq(x, y)),
                 _ => panic!("clone changed kernel kinds"),
             }
@@ -543,6 +748,8 @@ mod tests {
             let opts = PlanOptions {
                 sparse_threshold: g.f64(0.0, 1.2),
                 threads: g.usize(1..4),
+                reorder_rows: g.bool(0.5),
+                activation_skip: g.bool(0.5),
             };
             let mut plan = match ExecPlan::compile_q(&net, &opts) {
                 Ok(p) => p,

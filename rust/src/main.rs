@@ -29,7 +29,8 @@ use anyhow::{bail, Context, Result};
 use zynq_dnn::bench;
 use zynq_dnn::cli::{parse, usage, Args, FlagSpec};
 use zynq_dnn::compress::{
-    accuracy_q, save_artifact, CompressedModel, EvalSet, SearchConfig, DEFAULT_LADDER,
+    accuracy_q, save_artifact, ArtifactEncoding, CompressedModel, EvalSet, SearchConfig,
+    DEFAULT_LADDER,
 };
 use zynq_dnn::config::ServerConfig;
 use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
@@ -150,6 +151,12 @@ const GLOBAL_FLAGS: &[FlagSpec] = &[
         name: "calibrate",
         takes_value: false,
         help: "compress: measure the dense/CSR crossover and embed it as the threshold",
+    },
+    FlagSpec {
+        name: "encoding",
+        takes_value: true,
+        help: "compress: sparse-layer artifact encoding: raw|delta|codebook (default delta; \
+               codebook adds the accuracy-budgeted weight-sharing rung)",
     },
 ];
 
@@ -318,9 +325,11 @@ fn compress(args: &Args) -> Result<()> {
     let report = zynq_dnn::compress::sweep(&net, &eval, &DEFAULT_LADDER)?;
     println!("{}", report.render());
 
+    let encoding = ArtifactEncoding::from_name(args.get_or("encoding", "delta"))?;
     let cfg = SearchConfig {
         budget,
         ladder: DEFAULT_LADDER.to_vec(),
+        encoding,
     };
     let outcome = zynq_dnn::compress::search(&net, &eval, &report, &cfg)?;
     for (j, (&target, &achieved)) in outcome
@@ -367,10 +376,13 @@ fn compress(args: &Args) -> Result<()> {
         verify_comp,
     );
     println!(
-        "artifact {}: threshold {threshold:.2}, payload {} B vs {} B dense ({:.2}x); \
+        "artifact {}: threshold {threshold:.2}, encoding {}, payload {} B \
+         (raw CSR {} B) vs {} B dense ({:.2}x); \
          serve it with: zynq-dnn serve-pool --artifact {}",
         out.display(),
+        encoding.name(),
         model.stored_bytes(),
+        model.raw_stored_bytes(),
         model.dense_bytes(),
         model.compression_ratio(),
         out.display(),

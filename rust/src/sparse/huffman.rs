@@ -25,6 +25,15 @@ pub struct Codebook {
     codes: [u32; 256],
 }
 
+impl Codebook {
+    /// Rebuild the canonical codes from a stored length table — the only
+    /// thing a serialized stream has to carry (the `.rpz` artifact stores
+    /// exactly these 256 bytes next to its delta-coded column stream).
+    pub fn from_lengths(lengths: [u8; 256]) -> Self {
+        canonicalize(lengths)
+    }
+}
+
 /// Huffman-encoded stream + codebook.
 #[derive(Debug, Clone)]
 pub struct EncodedStream {
@@ -151,12 +160,18 @@ fn stream_bytes_of(sm: &SparseMatrix) -> Vec<u8> {
 
 /// Huffman-encode a sparse matrix's packed word stream.
 pub fn encode(sm: &SparseMatrix) -> EncodedStream {
-    let raw = stream_bytes_of(sm);
-    let codebook = build_codebook(&raw);
+    encode_bytes(&stream_bytes_of(sm))
+}
+
+/// Huffman-encode an arbitrary byte stream (the `.rpz` artifact feeds its
+/// delta-coded CSR column streams through this — same tables, same
+/// canonical decoder as the packed-word study above).
+pub fn encode_bytes(raw: &[u8]) -> EncodedStream {
+    let codebook = build_codebook(raw);
     let mut bits = Vec::with_capacity(raw.len() / 2 + 8);
     let mut acc = 0u64;
     let mut nbits = 0u32;
-    for &b in &raw {
+    for &b in raw {
         let len = u32::from(codebook.lengths[b as usize]);
         let code = u64::from(codebook.codes[b as usize]);
         acc = (acc << len) | code;
@@ -322,6 +337,21 @@ mod tests {
                 Err(_) => false,
             }
         });
+    }
+
+    #[test]
+    fn byte_api_roundtrip_with_rebuilt_codebook() {
+        // the .rpz path stores only the 256-byte length table; a decoder
+        // that rebuilds canonical codes from it must agree bit-for-bit
+        let raw: Vec<u8> = (0..2000u32).map(|i| ((i * i) % 37) as u8).collect();
+        let es = encode_bytes(&raw);
+        let rebuilt = EncodedStream {
+            codebook: Codebook::from_lengths(es.codebook.lengths),
+            bits: es.bits.clone(),
+            bit_len: es.bit_len,
+            raw_len: es.raw_len,
+        };
+        assert_eq!(decode(&rebuilt).unwrap(), raw);
     }
 
     #[test]

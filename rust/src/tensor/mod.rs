@@ -7,7 +7,11 @@
 
 pub mod sparse;
 
-pub use sparse::{spmm_i32, spmm_i32_parallel, CsrMatI};
+pub use sparse::{
+    column_nonzero_mask, spmm_codebook_i32, spmm_codebook_i32_opt,
+    spmm_codebook_i32_opt_parallel, spmm_i32, spmm_i32_opt, spmm_i32_opt_parallel,
+    spmm_i32_parallel, CsrCodebookMatI, CsrMatI,
+};
 
 use crate::util::threadpool::ThreadPool;
 

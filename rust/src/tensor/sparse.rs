@@ -1,7 +1,8 @@
 //! CSR sparse × dense GEMM on the Q7.8 wrapping datapath — the host-side
-//! kernel behind the `SparseQ` execution-plan kernel (`exec`), executing
-//! directly on the compressed representation instead of densifying (the
-//! EIE insight applied to the §5.6 pruned weight streams).
+//! kernels behind the `SparseQ` and `CodebookQ` execution-plan kernels
+//! (`exec`), executing directly on the compressed representation instead
+//! of densifying (the EIE insight applied to the §5.6 pruned weight
+//! streams).
 //!
 //! Layout matches the dense kernels: weight row `o` holds the fan-in of
 //! output neuron `o`, so `out[n][o] = Σ_k x[n][k] · w[o][k]` with only the
@@ -10,8 +11,30 @@
 //! exactly 0 to a wrapping sum, and wrapping adds are associative and
 //! commutative mod 2^32, so skipping zeros and re-ordering MACs cannot
 //! change a single bit.
+//!
+//! Three EIE-style refinements compose on top of the plain CSR kernel,
+//! all bit-exact by the same argument:
+//!
+//! * **Row reordering** ([`CsrMatI::reorder_by_nnz`], spada-sim's
+//!   `sort_by_row_length` preprocess): rows sorted by descending non-zero
+//!   count so parallel chunks get balanced work and the batch-4 inner
+//!   loop sees monotone trip counts; a stored `out_col` permutation
+//!   un-permutes each write, so outputs land exactly where the original
+//!   row order would have put them.
+//! * **Activation-sparsity skipping** (`mask` in [`spmm_i32_opt`]): a
+//!   per-column non-zero mask of the activation batch lets the kernel
+//!   skip weight entries whose activation column is entirely zero —
+//!   post-ReLU batches are mostly zeros, and the skipped work compounds
+//!   multiplicatively with weight pruning exactly as EIE's broadcast
+//!   does (a skipped entry contributed exactly 0 to the wrapping sum).
+//! * **Codebook weights** ([`CsrCodebookMatI`]): values stored as 4-bit
+//!   indices into a 16-entry shared lookup table (EIE's weight sharing);
+//!   the kernel reads `lut[code]` instead of an i16 — same arithmetic,
+//!   quarter the value-stream bytes.
 
 use std::ops::Range;
+
+use anyhow::{ensure, Result};
 
 use super::MatI;
 use crate::util::threadpool::ThreadPool;
@@ -118,11 +141,46 @@ impl CsrMatI {
         &self.row_ptr
     }
 
+    /// The concatenated column-index array (`nnz` entries, row-major) —
+    /// the stream the `.rpz` delta encoder walks.
+    pub fn col_idx(&self) -> &[u32] {
+        &self.col_idx
+    }
+
+    /// The concatenated value array (`nnz` entries, row-major).
+    pub fn vals(&self) -> &[i32] {
+        &self.vals
+    }
+
     /// Row `o`'s (column indices, values).
     #[inline(always)]
     pub fn row(&self, o: usize) -> (&[u32], &[i32]) {
         let span = self.row_ptr[o]..self.row_ptr[o + 1];
         (&self.col_idx[span.clone()], &self.vals[span])
+    }
+
+    /// Rows reordered by descending non-zero count (ties keep original
+    /// order) — spada-sim's `sort_by_row_length` preprocess.  Returns the
+    /// permuted matrix and `out_col`, where `out_col[r]` is the original
+    /// row index of permuted row `r`; kernels write output column
+    /// `out_col[r]` so results are bit-identical to the unpermuted run.
+    pub fn reorder_by_nnz(&self) -> (Self, Vec<u32>) {
+        let mut order: Vec<usize> = (0..self.rows).collect();
+        order.sort_by_key(|&o| (usize::MAX - (self.row_ptr[o + 1] - self.row_ptr[o]), o));
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        row_ptr.push(0);
+        for &o in &order {
+            let (idx, v) = self.row(o);
+            col_idx.extend_from_slice(idx);
+            vals.extend_from_slice(v);
+            row_ptr.push(vals.len());
+        }
+        (
+            Self::new(self.rows, self.cols, row_ptr, col_idx, vals),
+            order.iter().map(|&o| o as u32).collect(),
+        )
     }
 }
 
@@ -130,17 +188,84 @@ impl CsrMatI {
 /// stored non-zeros only.  Bit-identical to the dense `gemm_i32` on the
 /// densified weights.
 pub fn spmm_i32(x: &MatI, w: &CsrMatI, out: &mut MatI) {
-    assert_eq!(x.cols, w.cols());
-    assert_eq!((out.rows, out.cols), (x.rows, w.rows()));
+    spmm_i32_opt(x, w, out, None, None);
+}
+
+/// [`spmm_i32`] with the EIE refinements:
+///
+/// * `out_col` — output-column permutation for a row-reordered `w`
+///   ([`CsrMatI::reorder_by_nnz`]): row `o` of `w` writes output column
+///   `out_col[o]`.  Must be a permutation of `0..w.rows()`.
+/// * `mask` — activation-column non-zero mask (`mask.len() == w.cols()`);
+///   entries whose column is masked out are skipped.  Bit-exact as long
+///   as `mask[k]` is true for every column `k` where any sample is
+///   non-zero (a false-masked non-zero column would drop real work — the
+///   caller builds the mask from the batch itself, so this holds by
+///   construction).
+pub fn spmm_i32_opt(
+    x: &MatI,
+    w: &CsrMatI,
+    out: &mut MatI,
+    out_col: Option<&[u32]>,
+    mask: Option<&[bool]>,
+) {
+    check_spmm_args(x.cols, x.rows, w.rows(), w.cols(), out, out_col, mask);
     let stride = out.cols;
     // SAFETY: single caller, exclusive &mut out — the raw-pointer worker is
     // shared with the parallel entry point, which is why it exists at all
-    unsafe { spmm_i32_cols(x, w, out.data.as_mut_ptr(), 0..w.rows(), stride) }
+    unsafe {
+        match mask {
+            Some(m) => {
+                spmm_i32_cols::<true>(x, w, out.data.as_mut_ptr(), 0..w.rows(), stride, out_col, m)
+            }
+            None => spmm_i32_cols::<false>(
+                x,
+                w,
+                out.data.as_mut_ptr(),
+                0..w.rows(),
+                stride,
+                out_col,
+                &[],
+            ),
+        }
+    }
+}
+
+fn check_spmm_args(
+    x_cols: usize,
+    x_rows: usize,
+    w_rows: usize,
+    w_cols: usize,
+    out: &MatI,
+    out_col: Option<&[u32]>,
+    mask: Option<&[bool]>,
+) {
+    assert_eq!(x_cols, w_cols);
+    assert_eq!((out.rows, out.cols), (x_rows, w_rows));
+    if let Some(p) = out_col {
+        // a permutation of 0..rows keeps the disjoint-write safety argument:
+        // disjoint row ranges still map to disjoint output columns
+        assert_eq!(p.len(), w_rows, "out_col must cover every row");
+        debug_assert!(
+            {
+                let mut seen = vec![false; w_rows];
+                p.iter().all(|&o| {
+                    (o as usize) < w_rows && !std::mem::replace(&mut seen[o as usize], true)
+                })
+            },
+            "out_col must be a permutation"
+        );
+    }
+    if let Some(m) = mask {
+        assert_eq!(m.len(), w_cols, "mask must cover every activation column");
+    }
 }
 
 /// Column-range worker shared by the serial and parallel entry points:
-/// writes `out[n][o]` for every sample `n` and each `o` in `orange`
-/// (`out` is row-major with row stride `stride`).
+/// writes `out[n][oc]` for every sample `n` and each `o` in `orange`,
+/// where `oc = out_col[o]` (or `o` itself without a permutation); `out`
+/// is row-major with row stride `stride`.  `MASKED` compiles the
+/// activation-skip test in or out of the inner loop.
 ///
 /// Weight-stationary order (see `gemm_i32_rows`): one sparse row's
 /// (index, value) stream stays hot in L1 while a 4-sample register block
@@ -148,11 +273,20 @@ pub fn spmm_i32(x: &MatI, w: &CsrMatI, out: &mut MatI) {
 ///
 /// # Safety
 /// `out` must be valid for `x.rows × stride` elements, and no other thread
-/// may concurrently write any element `out[n·stride + o]` with `o` in
-/// `orange` (disjoint column ranges ⇒ disjoint writes).
-unsafe fn spmm_i32_cols(x: &MatI, w: &CsrMatI, out: *mut i32, orange: Range<usize>, stride: usize) {
+/// may concurrently write any element this call writes (disjoint `orange`
+/// ranges ⇒ disjoint writes, also under an `out_col` permutation).
+unsafe fn spmm_i32_cols<const MASKED: bool>(
+    x: &MatI,
+    w: &CsrMatI,
+    out: *mut i32,
+    orange: Range<usize>,
+    stride: usize,
+    out_col: Option<&[u32]>,
+    mask: &[bool],
+) {
     for o in orange {
         let (idx, vals) = w.row(o);
+        let oc = out_col.map_or(o, |p| p[o] as usize);
         let mut n = 0;
         while n + 4 <= x.rows {
             let x0 = x.row(n);
@@ -162,24 +296,31 @@ unsafe fn spmm_i32_cols(x: &MatI, w: &CsrMatI, out: *mut i32, orange: Range<usiz
             let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
             for (&k, &v) in idx.iter().zip(vals.iter()) {
                 let k = k as usize;
+                if MASKED && !mask[k] {
+                    continue;
+                }
                 a0 = a0.wrapping_add(v.wrapping_mul(x0[k]));
                 a1 = a1.wrapping_add(v.wrapping_mul(x1[k]));
                 a2 = a2.wrapping_add(v.wrapping_mul(x2[k]));
                 a3 = a3.wrapping_add(v.wrapping_mul(x3[k]));
             }
-            out.add(n * stride + o).write(a0);
-            out.add((n + 1) * stride + o).write(a1);
-            out.add((n + 2) * stride + o).write(a2);
-            out.add((n + 3) * stride + o).write(a3);
+            out.add(n * stride + oc).write(a0);
+            out.add((n + 1) * stride + oc).write(a1);
+            out.add((n + 2) * stride + oc).write(a2);
+            out.add((n + 3) * stride + oc).write(a3);
             n += 4;
         }
         while n < x.rows {
             let xr = x.row(n);
             let mut acc = 0i32;
             for (&k, &v) in idx.iter().zip(vals.iter()) {
-                acc = acc.wrapping_add(v.wrapping_mul(xr[k as usize]));
+                let k = k as usize;
+                if MASKED && !mask[k] {
+                    continue;
+                }
+                acc = acc.wrapping_add(v.wrapping_mul(xr[k]));
             }
-            out.add(n * stride + o).write(acc);
+            out.add(n * stride + oc).write(acc);
             n += 1;
         }
     }
@@ -189,15 +330,326 @@ unsafe fn spmm_i32_cols(x: &MatI, w: &CsrMatI, out: *mut i32, orange: Range<usiz
 /// inference parallelizes too (each worker owns a disjoint column set of
 /// `out`; samples are shared read-only).
 pub fn spmm_i32_parallel(pool: &ThreadPool, x: &MatI, w: &CsrMatI, out: &mut MatI) {
-    assert_eq!(x.cols, w.cols());
-    assert_eq!((out.rows, out.cols), (x.rows, w.rows()));
+    spmm_i32_opt_parallel(pool, x, w, out, None, None);
+}
+
+/// Parallel [`spmm_i32_opt`]; same `out_col`/`mask` contract.
+pub fn spmm_i32_opt_parallel(
+    pool: &ThreadPool,
+    x: &MatI,
+    w: &CsrMatI,
+    out: &mut MatI,
+    out_col: Option<&[u32]>,
+    mask: Option<&[bool]>,
+) {
+    check_spmm_args(x.cols, x.rows, w.rows(), w.cols(), out, out_col, mask);
     let stride = out.cols;
     let out_ptr = out.data.as_mut_ptr() as usize;
     pool.parallel_chunks(w.rows(), 8, |orange| {
-        // SAFETY: chunks receive disjoint `orange` ranges, so every element
-        // out[n·stride + o] is written by exactly one worker
-        unsafe { spmm_i32_cols(x, w, out_ptr as *mut i32, orange, stride) }
+        // SAFETY: chunks receive disjoint `orange` ranges, and `out_col`
+        // is a permutation, so every output element is written by exactly
+        // one worker
+        unsafe {
+            match mask {
+                Some(m) => {
+                    spmm_i32_cols::<true>(x, w, out_ptr as *mut i32, orange, stride, out_col, m)
+                }
+                None => {
+                    spmm_i32_cols::<false>(x, w, out_ptr as *mut i32, orange, stride, out_col, &[])
+                }
+            }
+        }
     });
+}
+
+/// CSR matrix with EIE weight sharing: values are 4-bit indices into a
+/// 16-entry shared Q7.8 lookup table instead of i16s.  Produced by the
+/// codebook quantizer ([`crate::compress`]); the kernels read `lut[code]`
+/// per stored entry, so arithmetic (and results) are bit-identical to a
+/// [`CsrMatI`] holding the looked-up values.
+///
+/// Codes are stored unpacked (one byte each) for kernel speed; the `.rpz`
+/// artifact packs them two-per-byte on disk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrCodebookMatI {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    codes: Vec<u8>,
+    lut: [i32; 16],
+}
+
+impl CsrCodebookMatI {
+    /// Assemble from raw arrays (shape, monotonicity, and code range are
+    /// checked).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        codes: Vec<u8>,
+        lut: [i32; 16],
+    ) -> Self {
+        assert!(cols <= u32::MAX as usize, "column index must fit u32");
+        assert_eq!(row_ptr.len(), rows + 1, "row_ptr length mismatch");
+        assert_eq!(col_idx.len(), codes.len(), "col_idx/codes length mismatch");
+        assert_eq!(row_ptr[0], 0, "row_ptr must start at 0");
+        assert_eq!(*row_ptr.last().unwrap(), codes.len(), "row_ptr end mismatch");
+        assert!(codes.iter().all(|&c| c < 16), "codes must be 4-bit");
+        debug_assert!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "row_ptr not monotone");
+        debug_assert!(col_idx.iter().all(|&c| (c as usize) < cols), "column out of range");
+        Self {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            codes,
+            lut,
+        }
+    }
+
+    /// Build from a CSR matrix whose values take at most 16 distinct
+    /// non-zero levels (what the codebook quantizer guarantees); errors
+    /// otherwise instead of quantizing implicitly.
+    pub fn from_csr(csr: &CsrMatI) -> Result<Self> {
+        let mut levels: Vec<i32> = csr.vals().to_vec();
+        levels.sort_unstable();
+        levels.dedup();
+        ensure!(
+            levels.len() <= 16,
+            "{} distinct values exceed the 16-entry codebook (quantize first)",
+            levels.len()
+        );
+        let mut lut = [0i32; 16];
+        lut[..levels.len()].copy_from_slice(&levels);
+        let codes = csr
+            .vals()
+            .iter()
+            .map(|v| levels.binary_search(v).expect("value in its own level set") as u8)
+            .collect();
+        Ok(Self::new(
+            csr.rows(),
+            csr.cols(),
+            csr.row_ptr().to_vec(),
+            csr.col_idx().to_vec(),
+            codes,
+            lut,
+        ))
+    }
+
+    /// Expand back to a plain CSR matrix (tests / reporting).
+    pub fn to_csr(&self) -> CsrMatI {
+        CsrMatI::new(
+            self.rows,
+            self.cols,
+            self.row_ptr.clone(),
+            self.col_idx.clone(),
+            self.codes.iter().map(|&c| self.lut[c as usize]).collect(),
+        )
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    pub fn col_idx(&self) -> &[u32] {
+        &self.col_idx
+    }
+
+    /// The 4-bit code stream (one unpacked byte per stored entry).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// The 16-entry shared value table.
+    pub fn lut(&self) -> &[i32; 16] {
+        &self.lut
+    }
+
+    /// Row `o`'s (column indices, codes).
+    #[inline(always)]
+    pub fn row(&self, o: usize) -> (&[u32], &[u8]) {
+        let span = self.row_ptr[o]..self.row_ptr[o + 1];
+        (&self.col_idx[span.clone()], &self.codes[span])
+    }
+
+    /// [`CsrMatI::reorder_by_nnz`] for codebook matrices.
+    pub fn reorder_by_nnz(&self) -> (Self, Vec<u32>) {
+        let mut order: Vec<usize> = (0..self.rows).collect();
+        order.sort_by_key(|&o| (usize::MAX - (self.row_ptr[o + 1] - self.row_ptr[o]), o));
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut codes = Vec::with_capacity(self.nnz());
+        row_ptr.push(0);
+        for &o in &order {
+            let (idx, c) = self.row(o);
+            col_idx.extend_from_slice(idx);
+            codes.extend_from_slice(c);
+            row_ptr.push(codes.len());
+        }
+        (
+            Self::new(self.rows, self.cols, row_ptr, col_idx, codes, self.lut),
+            order.iter().map(|&o| o as u32).collect(),
+        )
+    }
+}
+
+/// Codebook sparse × dense wrapping GEMM — [`spmm_i32`] with the value
+/// stream replaced by `lut[code]` lookups.
+pub fn spmm_codebook_i32(x: &MatI, w: &CsrCodebookMatI, out: &mut MatI) {
+    spmm_codebook_i32_opt(x, w, out, None, None);
+}
+
+/// [`spmm_i32_opt`] for codebook matrices; same `out_col`/`mask` contract.
+pub fn spmm_codebook_i32_opt(
+    x: &MatI,
+    w: &CsrCodebookMatI,
+    out: &mut MatI,
+    out_col: Option<&[u32]>,
+    mask: Option<&[bool]>,
+) {
+    check_spmm_args(x.cols, x.rows, w.rows(), w.cols(), out, out_col, mask);
+    let stride = out.cols;
+    // SAFETY: exclusive &mut out, single worker covering every row
+    unsafe {
+        match mask {
+            Some(m) => spmm_cb_cols::<true>(
+                x,
+                w,
+                out.data.as_mut_ptr(),
+                0..w.rows(),
+                stride,
+                out_col,
+                m,
+            ),
+            None => spmm_cb_cols::<false>(
+                x,
+                w,
+                out.data.as_mut_ptr(),
+                0..w.rows(),
+                stride,
+                out_col,
+                &[],
+            ),
+        }
+    }
+}
+
+/// Parallel [`spmm_codebook_i32_opt`].
+pub fn spmm_codebook_i32_opt_parallel(
+    pool: &ThreadPool,
+    x: &MatI,
+    w: &CsrCodebookMatI,
+    out: &mut MatI,
+    out_col: Option<&[u32]>,
+    mask: Option<&[bool]>,
+) {
+    check_spmm_args(x.cols, x.rows, w.rows(), w.cols(), out, out_col, mask);
+    let stride = out.cols;
+    let out_ptr = out.data.as_mut_ptr() as usize;
+    pool.parallel_chunks(w.rows(), 8, |orange| {
+        // SAFETY: disjoint `orange` ranges (and `out_col` a permutation)
+        // ⇒ every output element written by exactly one worker
+        unsafe {
+            match mask {
+                Some(m) => {
+                    spmm_cb_cols::<true>(x, w, out_ptr as *mut i32, orange, stride, out_col, m)
+                }
+                None => {
+                    spmm_cb_cols::<false>(x, w, out_ptr as *mut i32, orange, stride, out_col, &[])
+                }
+            }
+        }
+    });
+}
+
+/// Codebook twin of [`spmm_i32_cols`]; same contract and safety argument,
+/// with `lut[code]` replacing the direct value load.
+unsafe fn spmm_cb_cols<const MASKED: bool>(
+    x: &MatI,
+    w: &CsrCodebookMatI,
+    out: *mut i32,
+    orange: Range<usize>,
+    stride: usize,
+    out_col: Option<&[u32]>,
+    mask: &[bool],
+) {
+    let lut = w.lut();
+    for o in orange {
+        let (idx, codes) = w.row(o);
+        let oc = out_col.map_or(o, |p| p[o] as usize);
+        let mut n = 0;
+        while n + 4 <= x.rows {
+            let x0 = x.row(n);
+            let x1 = x.row(n + 1);
+            let x2 = x.row(n + 2);
+            let x3 = x.row(n + 3);
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for (&k, &c) in idx.iter().zip(codes.iter()) {
+                let k = k as usize;
+                if MASKED && !mask[k] {
+                    continue;
+                }
+                let v = lut[c as usize];
+                a0 = a0.wrapping_add(v.wrapping_mul(x0[k]));
+                a1 = a1.wrapping_add(v.wrapping_mul(x1[k]));
+                a2 = a2.wrapping_add(v.wrapping_mul(x2[k]));
+                a3 = a3.wrapping_add(v.wrapping_mul(x3[k]));
+            }
+            out.add(n * stride + oc).write(a0);
+            out.add((n + 1) * stride + oc).write(a1);
+            out.add((n + 2) * stride + oc).write(a2);
+            out.add((n + 3) * stride + oc).write(a3);
+            n += 4;
+        }
+        while n < x.rows {
+            let xr = x.row(n);
+            let mut acc = 0i32;
+            for (&k, &c) in idx.iter().zip(codes.iter()) {
+                let k = k as usize;
+                if MASKED && !mask[k] {
+                    continue;
+                }
+                acc = acc.wrapping_add(lut[c as usize].wrapping_mul(xr[k]));
+            }
+            out.add(n * stride + oc).write(acc);
+            n += 1;
+        }
+    }
+}
+
+/// Column non-zero mask of an activation batch: `mask[k]` is true iff any
+/// sample has a non-zero in column `k`.  Returns the mask and the number
+/// of non-zero columns (callers engage the masked kernels only when the
+/// zero fraction is worth the per-entry test).
+pub fn column_nonzero_mask(x: &MatI, mask: &mut Vec<bool>) -> usize {
+    mask.clear();
+    mask.resize(x.cols, false);
+    for n in 0..x.rows {
+        for (k, &v) in x.row(n).iter().enumerate() {
+            if v != 0 {
+                mask[k] = true;
+            }
+        }
+    }
+    mask.iter().filter(|&&m| m).count()
 }
 
 #[cfg(test)]
@@ -305,5 +757,138 @@ mod tests {
             spmm_i32(&x, &CsrMatI::from_dense(&w), &mut sparse);
             dense.data == sparse.data
         });
+    }
+
+    /// An activation batch with whole columns zeroed (post-ReLU shape).
+    fn rand_x_zero_cols(n: usize, cols: usize, zero_frac: f64, rng: &mut Xoshiro256) -> MatI {
+        let mut x = rand_x(n, cols, rng);
+        for k in 0..cols {
+            if rng.bernoulli(zero_frac) {
+                for r in 0..n {
+                    x.row_mut(r)[k] = 0;
+                }
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn reorder_by_nnz_sorts_and_roundtrips() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let w = CsrMatI::from_dense(&rand_sparse(23, 31, 0.3, &mut rng));
+        let (perm, out_col) = w.reorder_by_nnz();
+        // descending nnz, stable on ties
+        let lens: Vec<usize> =
+            (0..perm.rows()).map(|r| perm.row_ptr()[r + 1] - perm.row_ptr()[r]).collect();
+        assert!(lens.windows(2).all(|p| p[0] >= p[1]), "rows not sorted by nnz");
+        // permuted row r is original row out_col[r], entry for entry
+        for r in 0..perm.rows() {
+            assert_eq!(perm.row(r), w.row(out_col[r] as usize), "row {r}");
+        }
+    }
+
+    #[test]
+    fn prop_opt_kernels_bit_equal_plain() {
+        let pool = ThreadPool::new(3);
+        prop_check(40, |g| {
+            let n = g.usize(1..7);
+            let k = g.usize(1..50);
+            let o = g.usize(1..24);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let w = CsrMatI::from_dense(&rand_sparse(o, k, g.f64(0.05, 0.9), &mut rng));
+            let x = rand_x_zero_cols(n, k, g.f64(0.0, 0.9), &mut rng);
+            let mut mask = Vec::new();
+            column_nonzero_mask(&x, &mut mask);
+            let (wp, out_col) = w.reorder_by_nnz();
+
+            let mut want = MatI::zeros(n, o);
+            spmm_i32(&x, &w, &mut want);
+            let mut got = MatI::zeros(n, o);
+            // every combination of {mask, permutation} × {serial, parallel}
+            spmm_i32_opt(&x, &w, &mut got, None, Some(&mask));
+            if got.data != want.data {
+                return false;
+            }
+            got.data.fill(0);
+            spmm_i32_opt(&x, &wp, &mut got, Some(&out_col), Some(&mask));
+            if got.data != want.data {
+                return false;
+            }
+            got.data.fill(0);
+            spmm_i32_opt_parallel(&pool, &x, &wp, &mut got, Some(&out_col), None);
+            if got.data != want.data {
+                return false;
+            }
+            got.data.fill(0);
+            spmm_i32_opt_parallel(&pool, &x, &wp, &mut got, Some(&out_col), Some(&mask));
+            got.data == want.data
+        });
+    }
+
+    /// A sparse matrix drawing values from at most 16 distinct levels.
+    fn rand_codebook_dense(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> MatI {
+        let levels: Vec<i32> = (0..16).map(|_| rng.below(65536) as i32 - 32768).collect();
+        let mut m = MatI::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            if rng.bernoulli(density) {
+                *v = levels[rng.index(16)];
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn codebook_from_csr_roundtrips_and_caps_levels() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let m = rand_codebook_dense(19, 27, 0.4, &mut rng);
+        let csr = CsrMatI::from_dense(&m);
+        let cb = CsrCodebookMatI::from_csr(&csr).unwrap();
+        assert_eq!(cb.to_csr(), csr);
+        assert!(cb.codes().iter().all(|&c| c < 16));
+
+        // > 16 distinct values must be rejected, not quantized silently
+        let wide = MatI::from_vec(1, 20, (1..=20).collect());
+        assert!(CsrCodebookMatI::from_csr(&CsrMatI::from_dense(&wide)).is_err());
+    }
+
+    #[test]
+    fn prop_codebook_kernels_bit_equal_csr() {
+        let pool = ThreadPool::new(3);
+        prop_check(40, |g| {
+            let n = g.usize(1..7);
+            let k = g.usize(1..50);
+            let o = g.usize(1..24);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64(0..=u64::MAX / 2));
+            let w = CsrMatI::from_dense(&rand_codebook_dense(o, k, g.f64(0.05, 0.9), &mut rng));
+            let cb = CsrCodebookMatI::from_csr(&w).unwrap();
+            let x = rand_x_zero_cols(n, k, g.f64(0.0, 0.9), &mut rng);
+            let mut mask = Vec::new();
+            column_nonzero_mask(&x, &mut mask);
+            let (cbp, out_col) = cb.reorder_by_nnz();
+
+            let mut want = MatI::zeros(n, o);
+            spmm_i32(&x, &w, &mut want);
+            let mut got = MatI::zeros(n, o);
+            spmm_codebook_i32(&x, &cb, &mut got);
+            if got.data != want.data {
+                return false;
+            }
+            got.data.fill(0);
+            spmm_codebook_i32_opt(&x, &cbp, &mut got, Some(&out_col), Some(&mask));
+            if got.data != want.data {
+                return false;
+            }
+            got.data.fill(0);
+            spmm_codebook_i32_opt_parallel(&pool, &x, &cbp, &mut got, Some(&out_col), Some(&mask));
+            got.data == want.data
+        });
+    }
+
+    #[test]
+    fn column_mask_counts_nonzero_columns() {
+        let x = MatI::from_vec(2, 4, vec![0, 1, 0, 0, 0, 2, 0, 3]);
+        let mut mask = Vec::new();
+        assert_eq!(column_nonzero_mask(&x, &mut mask), 2);
+        assert_eq!(mask, vec![false, true, false, true]);
     }
 }

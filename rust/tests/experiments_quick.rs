@@ -40,6 +40,8 @@ fn compress_budget_and_roundtrip_quick() {
     let b = bench::compress::run().unwrap();
     bench::compress::check_shape(&b).unwrap();
     assert_eq!(b.rows.len(), bench::compress::BUDGET_SWEEP.len());
+    // raw / delta / codebook rung study rides the same run
+    assert_eq!(b.encodings.len(), 3);
 }
 
 #[test]

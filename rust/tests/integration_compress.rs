@@ -8,7 +8,8 @@ use std::time::Duration;
 
 use zynq_dnn::bench::random_qnet;
 use zynq_dnn::compress::{
-    self, accuracy_q, load_artifact, save_artifact, CompressedModel, EvalSet, SearchConfig,
+    self, accuracy_q, codebook_quantize_matrix, load_artifact, save_artifact, ArtifactEncoding,
+    CompressedModel, EvalSet, SearchConfig,
 };
 use zynq_dnn::config::ServerConfig;
 use zynq_dnn::coordinator::{EngineFactory, SubmitOptions, SubmitTarget};
@@ -17,7 +18,9 @@ use zynq_dnn::nn::forward_q;
 use zynq_dnn::nn::quantize_matrix;
 use zynq_dnn::nn::spec::{quickstart, NetworkSpec};
 use zynq_dnn::serve::{Priority, ServePool};
-use zynq_dnn::tensor::{MatF, MatI};
+use zynq_dnn::tensor::{
+    column_nonzero_mask, spmm_i32, spmm_i32_opt, CsrCodebookMatI, CsrMatI, MatF, MatI,
+};
 use zynq_dnn::util::prop::prop_check;
 use zynq_dnn::util::rng::Xoshiro256;
 
@@ -60,8 +63,22 @@ fn prop_artifact_roundtrip_bit_exact_through_plans() {
         let seed = g.u64(0..=u64::MAX / 2);
         let q = g.f64(0.0, 1.0);
         let threshold = g.f64(0.0, 1.2);
-        let net = compress::prune_qnetwork(&random_qnet(&spec, seed), q);
-        let model = CompressedModel::from_network(&net, threshold, 0.0, 1.0, 1.0).unwrap();
+        let mut net = compress::prune_qnetwork(&random_qnet(&spec, seed), q);
+        let encoding = match g.usize(0..3) {
+            0 => ArtifactEncoding::Raw,
+            1 => ArtifactEncoding::Delta,
+            _ => ArtifactEncoding::Codebook,
+        };
+        if encoding == ArtifactEncoding::Codebook {
+            // weight-share first so the codebook storage path is exercised
+            // losslessly (what the search's codebook rung produces)
+            for w in net.weights.iter_mut() {
+                *w = codebook_quantize_matrix(w);
+            }
+        }
+        let model =
+            CompressedModel::from_network_encoded(&net, threshold, encoding, 0.0, 1.0, 1.0)
+                .unwrap();
         let path = dir.join(format!("prop_{case}.rpz"));
         save_artifact(&path, &model).unwrap();
         let back = load_artifact(&path).unwrap();
@@ -70,7 +87,7 @@ fn prop_artifact_roundtrip_bit_exact_through_plans() {
             &net,
             &PlanOptions {
                 sparse_threshold: threshold,
-                threads: 1,
+                ..PlanOptions::default()
             },
         )
         .unwrap();
@@ -105,6 +122,11 @@ fn prop_budgeted_search_never_exceeds_budget() {
             &SearchConfig {
                 budget,
                 ladder,
+                encoding: if g.bool(0.5) {
+                    ArtifactEncoding::Codebook
+                } else {
+                    ArtifactEncoding::Delta
+                },
             },
         )
         .unwrap();
@@ -167,4 +189,85 @@ fn compressed_artifact_serves_end_to_end_on_the_pool() {
         assert_eq!(resp.output, want.row(0), "request {i}");
     }
     pool.shutdown().unwrap();
+}
+
+fn rand_sparse(rows: usize, cols: usize, density: f64, seed: u64) -> MatI {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut m = MatI::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        if rng.bernoulli(density) {
+            *v = rng.below(65535) as i32 - 32767;
+        }
+    }
+    m
+}
+
+/// ISSUE property: the delta/Huffman column payload decodes back to the
+/// exact column indices across random shapes and densities (including the
+/// all-zero and fully-dense corners and gaps ≥ 256).
+#[test]
+fn prop_encoded_columns_roundtrip_bit_exact() {
+    prop_check(40, |g| {
+        let rows = g.usize(1..25);
+        let cols = g.usize(1..500);
+        let density = g.f64(0.0, 1.0);
+        let m = rand_sparse(rows, cols, density, g.u64(0..=u64::MAX / 2));
+        let csr = CsrMatI::from_dense(&m);
+        let payload = compress::encoding::encode_columns(&csr);
+        let back =
+            compress::encoding::decode_columns(&payload, csr.row_ptr(), csr.cols()).unwrap();
+        back.as_slice() == csr.col_idx()
+    });
+}
+
+/// ISSUE property: codebook quantization always yields ≤ 16 non-zero
+/// levels, the packed 4-bit form round-trips losslessly, and the sparsity
+/// pattern is untouched — across random architectures and prune factors.
+#[test]
+fn prop_codebook_roundtrip_preserves_quantized_matrix() {
+    prop_check(40, |g| {
+        let rows = g.usize(1..25);
+        let cols = g.usize(1..60);
+        let density = 1.0 - g.f64(0.0, 1.0); // prune factor sweep
+        let m = rand_sparse(rows, cols, density, g.u64(0..=u64::MAX / 2));
+        let q = codebook_quantize_matrix(&m);
+        // same sparsity pattern
+        if m.data.iter().zip(q.data.iter()).any(|(&a, &b)| (a == 0) != (b == 0)) {
+            return false;
+        }
+        let csr = CsrMatI::from_dense(&q);
+        let cb = CsrCodebookMatI::from_csr(&csr).unwrap();
+        cb.to_csr().to_dense().data == q.data
+    });
+}
+
+/// ISSUE property: the activation-skip kernel is bit-equal to plain CSR
+/// SpMM on random batches with mixed zero/non-zero columns.
+#[test]
+fn prop_activation_skip_kernel_bit_equal_plain_csr() {
+    prop_check(40, |g| {
+        let rows = g.usize(1..30);
+        let cols = g.usize(1..40);
+        let seed = g.u64(0..=u64::MAX / 2);
+        let w = CsrMatI::from_dense(&rand_sparse(rows, cols, g.f64(0.05, 0.8), seed));
+        let n = g.usize(1..8);
+        let mut x = rand_x(n, cols, seed ^ 0x5C1B);
+        // kill a random subset of columns wholesale (what ReLU does)
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xDEAD);
+        let zero_frac = g.f64(0.0, 1.0);
+        for c in 0..cols {
+            if rng.bernoulli(zero_frac) {
+                for r in 0..n {
+                    x.data[r * cols + c] = 0;
+                }
+            }
+        }
+        let mut mask = Vec::new();
+        column_nonzero_mask(&x, &mut mask);
+        let mut plain = MatI::zeros(n, rows);
+        let mut skip = MatI::zeros(n, rows);
+        spmm_i32(&x, &w, &mut plain);
+        spmm_i32_opt(&x, &w, &mut skip, None, Some(&mask));
+        plain.data == skip.data
+    });
 }
