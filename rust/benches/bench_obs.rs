@@ -1,0 +1,20 @@
+//! `cargo bench --bench bench_obs` — observability overhead gate: the same
+//! sparse plan with per-layer profiling off vs on (bit-equality asserted)
+//! and the 2-worker pool with request tracing off vs on.  Exits 1 if the
+//! disabled paths show measurable overhead or enabled profiling exceeds
+//! its budget; set `ZDNN_SKIP_PERF=1` to downgrade to a warning.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let r = zynq_dnn::bench::obsbench::run();
+    println!("{}", zynq_dnn::bench::obsbench::render(&r));
+    if let Err(e) = zynq_dnn::bench::obsbench::check_shape(&r) {
+        if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+            eprintln!("SHAPE CHECK FAILED (ignored, ZDNN_SKIP_PERF=1): {e}");
+        } else {
+            eprintln!("SHAPE CHECK FAILED: {e}");
+            std::process::exit(1);
+        }
+    } else {
+        println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
+    }
+}

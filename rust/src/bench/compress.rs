@@ -227,6 +227,56 @@ pub fn run() -> Result<CompressBench> {
 /// (Throughput columns are reported, not gated — they depend on how hard
 /// the search could prune under each budget.  The payload gates honour
 /// `ZDNN_SKIP_PERF=1`, consistent with `bench net`.)
+/// Machine-readable twin of [`render`], written to `BENCH_compress.json`
+/// by `zynq-dnn bench compress`.
+pub fn to_json(b: &CompressBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    let rows: Vec<String> = b
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"budget\":{},\"baseline_accuracy\":{},\"compressed_accuracy\":{},\
+                 \"overall_prune\":{},\"stored_bytes\":{},\"raw_payload_bytes\":{},\
+                 \"dense_bytes\":{},\"dense_seconds\":{},\"compressed_seconds\":{},\
+                 \"roundtrip_bit_exact\":{}}}",
+                json_f64(r.budget),
+                json_f64(r.baseline_accuracy),
+                json_f64(r.compressed_accuracy),
+                json_f64(r.overall_prune),
+                r.stored_bytes,
+                r.raw_payload_bytes,
+                r.dense_bytes,
+                json_f64(r.dense_seconds),
+                json_f64(r.compressed_seconds),
+                r.roundtrip_bit_exact,
+            )
+        })
+        .collect();
+    let encs: Vec<String> = b
+        .encodings
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"encoding\":\"{}\",\"overall_prune\":{},\"stored_bytes\":{},\
+                 \"raw_payload_bytes\":{},\"dense_bytes\":{},\"roundtrip_bit_exact\":{}}}",
+                json_escape(r.encoding.name()),
+                json_f64(r.overall_prune),
+                r.stored_bytes,
+                r.raw_payload_bytes,
+                r.dense_bytes,
+                r.roundtrip_bit_exact,
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"compress\",\"network\":\"{}\",\"rows\":[{}],\"encodings\":[{}]}}",
+        json_escape(&b.network),
+        rows.join(","),
+        encs.join(","),
+    )
+}
+
 pub fn check_shape(b: &CompressBench) -> Result<()> {
     ensure!(!b.rows.is_empty(), "compress bench produced no rows");
     let skip_perf = std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false);

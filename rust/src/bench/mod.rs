@@ -12,6 +12,7 @@ pub mod fig7;
 pub mod gops;
 pub mod netbench;
 pub mod nopt;
+pub mod obsbench;
 pub mod report;
 pub mod slo;
 pub mod sparse;
@@ -60,6 +61,23 @@ pub fn random_qnet(spec: &NetworkSpec, seed: u64) -> QNetwork {
 /// smoke runs stay fast; EXPERIMENTS.md records full runs.
 pub fn quick_mode() -> bool {
     std::env::var("ZDNN_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Write a bench's machine-readable twin as `BENCH_<name>.json` next to
+/// the repo root.  CI invokes the binary from `rust/` while the docs run
+/// it from the repo root, so probe for `ROADMAP.md` one level up before
+/// falling back to the current directory.
+pub fn write_json(name: &str, json: &str) -> std::io::Result<std::path::PathBuf> {
+    let root = if std::path::Path::new("ROADMAP.md").exists() {
+        std::path::PathBuf::from(".")
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        std::path::PathBuf::from("..")
+    } else {
+        std::path::PathBuf::from(".")
+    };
+    let path = root.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, json)?;
+    Ok(path)
 }
 
 #[cfg(test)]

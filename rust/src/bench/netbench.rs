@@ -162,6 +162,32 @@ pub fn render(b: &NetBench) -> String {
     t.render()
 }
 
+/// Machine-readable twin of [`render`], written to `BENCH_net.json` by
+/// `zynq-dnn bench net`.
+pub fn to_json(b: &NetBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    let rows: Vec<String> = b
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"clients\":{},\"depth\":{},\"requests\":{},\"achieved_rps\":{}}}",
+                r.clients,
+                r.depth,
+                r.requests,
+                json_f64(r.achieved_rps),
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"net\",\"network\":\"{}\",\"workers\":{},\"batch\":{},\"rows\":[{}]}}",
+        json_escape(&b.network),
+        b.workers,
+        b.batch,
+        rows.join(","),
+    )
+}
+
 /// Acceptance shape (wall-clock — gate behind `ZDNN_SKIP_PERF` on
 /// contended runners): a single pipelined connection at depth 16 must
 /// sustain strictly more throughput than the same connection at depth 1

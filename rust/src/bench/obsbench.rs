@@ -1,0 +1,253 @@
+//! Observability overhead benchmark: the runtime cost of PR 7's tracing
+//! and per-layer profiling, measured on both instrumented surfaces.
+//!
+//! Two comparisons, each "feature off vs feature on" on an otherwise
+//! identical workload:
+//!
+//! * **plan profiling** — the same sparse [`ExecPlan`](crate::exec::ExecPlan)
+//!   run with `PlanOptions::profile` off and on (bit-equality asserted);
+//! * **request tracing** — the sharded pool driven closed-loop with
+//!   `trace_sample = 0` (ring disabled) and `= 1` (every request traced).
+//!
+//! `check_shape` is the CI overhead gate: the *disabled* configurations
+//! must show no measurable slowdown (within scheduler noise), and the
+//! *enabled* ones must stay within a generous bound so the instrumentation
+//! never silently becomes the bottleneck.  `ZDNN_SKIP_PERF=1` downgrades a
+//! failure to a warning for loaded runners (same opt-out as `bench slo`).
+
+use std::time::{Duration, Instant};
+
+use super::report::{ms, ratio, Table};
+use super::{quick_mode, random_qnet};
+use crate::config::ServerConfig;
+use crate::coordinator::{EngineFactory, SubmitOptions, SubmitTarget};
+use crate::exec::{ExecPlan, PlanOptions};
+use crate::nn::spec::{har_4, har_6};
+use crate::nn::QNetwork;
+use crate::serve::{Priority, ServePool, Serving};
+use crate::sim::pruning::prune_qnetwork;
+use crate::tensor::MatF;
+use crate::util::bench_loop;
+use crate::util::rng::Xoshiro256;
+
+/// Batch size for the plan-profiling comparison (paper Table 3's large
+/// serving batch, same as `bench sparse`).
+pub const PLAN_BATCH: usize = 25;
+
+/// The benchmark result.
+#[derive(Debug, Clone)]
+pub struct ObsBench {
+    pub network: String,
+    pub batch: usize,
+    /// Timed iterations per plan configuration.
+    pub runs: usize,
+    /// Mean seconds per batch, `PlanOptions::profile` off.
+    pub plain_seconds: f64,
+    /// Mean seconds per batch, `PlanOptions::profile` on.
+    pub profile_seconds: f64,
+    /// Pool throughput with the trace ring disabled (`trace_sample = 0`).
+    pub trace_off_rps: f64,
+    /// Pool throughput tracing every request (`trace_sample = 1`).
+    pub trace_on_rps: f64,
+}
+
+impl ObsBench {
+    /// Per-batch profiling overhead (1.0 = free).
+    pub fn profile_overhead(&self) -> f64 {
+        self.profile_seconds / self.plain_seconds.max(f64::MIN_POSITIVE)
+    }
+
+    /// Throughput ratio tracing-on / tracing-off (1.0 = free).
+    pub fn trace_overhead(&self) -> f64 {
+        self.trace_off_rps / self.trace_on_rps.max(f64::MIN_POSITIVE)
+    }
+}
+
+fn factory(net: &QNetwork, batch: usize) -> EngineFactory {
+    EngineFactory {
+        backend: "native".into(),
+        batch,
+        net: net.clone(),
+        artifacts_dir: crate::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    }
+}
+
+/// Closed-loop pool drive: submit everything, drain everything, return
+/// requests per wall-clock second.  Identical seed and mix for both trace
+/// settings so only the ring differs.
+fn drive_pool(net: &QNetwork, requests: usize, trace_sample: u64) -> f64 {
+    let cfg = ServerConfig {
+        network: net.spec.name.clone(),
+        batch: 4,
+        workers: 2,
+        queue_depth: requests.max(4),
+        batch_deadline_us: 1000,
+        backend: "native".into(),
+        trace_sample,
+        ..Default::default()
+    };
+    let pool = ServePool::start(&cfg, factory(net, 4)).expect("pool starts");
+    let serving = Serving::Pool(pool);
+    let s_in = serving.input_width();
+    let mut rng = Xoshiro256::seed_from_u64(0x0B5);
+    let inputs: Vec<Vec<i32>> = (0..requests)
+        .map(|_| {
+            (0..s_in)
+                .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+                .collect()
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
+    for (i, input) in inputs.into_iter().enumerate() {
+        let prio = if i % 5 == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Bulk
+        };
+        tickets.push(
+            serving
+                .submit(input, SubmitOptions::with_priority(prio))
+                .expect("queue sized to the request count"),
+        );
+    }
+    for mut t in tickets {
+        t.wait_timeout(Duration::from_secs(60))
+            .expect("reply within 60s; bench engine never fails infer");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    serving.shutdown().expect("pool shuts down");
+    requests as f64 / elapsed.max(1e-9)
+}
+
+pub fn run() -> ObsBench {
+    let quick = quick_mode();
+    let spec = if quick { har_4() } else { har_6() };
+    let runs = if quick { 5 } else { 10 };
+    let requests = if quick { 150 } else { 400 };
+    let net = prune_qnetwork(&random_qnet(&spec, 0x0B51), 0.9);
+
+    // --- plan profiling off vs on -------------------------------------
+    let mut plain = ExecPlan::compile_q(&net, &PlanOptions::sparse_always())
+        .expect("plain plan compiles");
+    let mut profiled = ExecPlan::compile_q(
+        &net,
+        &PlanOptions::sparse_always().with_profile(true),
+    )
+    .expect("profiled plan compiles");
+    let mut rng = Xoshiro256::seed_from_u64(0x0B52);
+    let s_in = spec.inputs();
+    let x = crate::nn::quantize_matrix(&MatF::from_vec(
+        PLAN_BATCH,
+        s_in,
+        (0..PLAN_BATCH * s_in)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect(),
+    ));
+    let want = plain.run(&x).expect("plain run").clone();
+    let got = profiled.run(&x).expect("profiled run");
+    assert_eq!(got.data, want.data, "profiling must not change the math");
+    let (plain_seconds, _) = bench_loop(1, runs, || {
+        plain.run(&x).expect("plain run");
+    });
+    let (profile_seconds, _) = bench_loop(1, runs, || {
+        profiled.run(&x).expect("profiled run");
+    });
+
+    // --- request tracing off vs on ------------------------------------
+    let trace_off_rps = drive_pool(&net, requests, 0);
+    let trace_on_rps = drive_pool(&net, requests, 1);
+
+    ObsBench {
+        network: spec.name,
+        batch: PLAN_BATCH,
+        runs,
+        plain_seconds,
+        profile_seconds,
+        trace_off_rps,
+        trace_on_rps,
+    }
+}
+
+pub fn render(b: &ObsBench) -> String {
+    let mut t = Table::new(
+        &format!(
+            "observability overhead ({}, sparse plan batch {}, {} runs)",
+            b.network, b.batch, b.runs
+        ),
+        &["surface", "off", "on", "on/off"],
+    );
+    t.row(vec![
+        "plan profiling (ms/batch)".into(),
+        ms(b.plain_seconds),
+        ms(b.profile_seconds),
+        ratio(b.profile_overhead()),
+    ]);
+    t.row(vec![
+        "request tracing (req/s)".into(),
+        format!("{:.0}", b.trace_off_rps),
+        format!("{:.0}", b.trace_on_rps),
+        ratio(b.trace_overhead()),
+    ]);
+    t.footnote("profiled plan output bit-identical to plain (asserted)");
+    t.footnote("tracing rows drive the 2-worker pool closed-loop; trace_sample 0 vs 1");
+    t.render()
+}
+
+/// Machine-readable twin of [`render`], written to `BENCH_obs.json`.
+pub fn to_json(b: &ObsBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    format!(
+        "{{\"bench\":\"obs\",\"network\":\"{}\",\"batch\":{},\"runs\":{},\
+         \"plain_seconds\":{},\"profile_seconds\":{},\"profile_overhead\":{},\
+         \"trace_off_rps\":{},\"trace_on_rps\":{},\"trace_overhead\":{}}}",
+        json_escape(&b.network),
+        b.batch,
+        b.runs,
+        json_f64(b.plain_seconds),
+        json_f64(b.profile_seconds),
+        json_f64(b.profile_overhead()),
+        json_f64(b.trace_off_rps),
+        json_f64(b.trace_on_rps),
+        json_f64(b.trace_overhead()),
+    )
+}
+
+/// The overhead gate.  Bounds are deliberately loose — they catch "the
+/// instrumentation landed on the hot path", not single-digit-percent
+/// regressions a loaded runner could fake:
+///
+/// * disabled profiling must not lose to enabled by more than 15 %
+///   (a disabled feature being *slower* means the gate itself is broken);
+/// * enabled profiling costs at most 1.5× per batch;
+/// * the untraced pool must achieve ≥ 0.8× the traced pool's throughput
+///   (i.e. turning tracing *off* never costs; noise floor 20 %).
+pub fn check_shape(b: &ObsBench) -> Result<(), String> {
+    if b.plain_seconds > b.profile_seconds * 1.15 {
+        return Err(format!(
+            "profile-off plan ({:.6}s) slower than profile-on ({:.6}s): \
+             the disabled path is not free",
+            b.plain_seconds, b.profile_seconds
+        ));
+    }
+    if b.profile_seconds > b.plain_seconds * 1.5 {
+        return Err(format!(
+            "profiling overhead {:.2}x exceeds the 1.5x budget \
+             ({:.6}s vs {:.6}s per batch)",
+            b.profile_overhead(),
+            b.profile_seconds,
+            b.plain_seconds
+        ));
+    }
+    if b.trace_off_rps < b.trace_on_rps * 0.8 {
+        return Err(format!(
+            "untraced pool ({:.0} req/s) below 0.8x of traced ({:.0} req/s): \
+             the disabled ring is not free",
+            b.trace_off_rps, b.trace_on_rps
+        ));
+    }
+    Ok(())
+}

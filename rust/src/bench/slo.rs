@@ -279,6 +279,42 @@ pub fn render(b: &SloBench) -> String {
 ///
 /// * at every batch size, 4 workers must sustain strictly more throughput
 ///   than 1 worker under the same overload arrival rate;
+/// Machine-readable twin of [`render`], written to `BENCH_slo.json` by
+/// `zynq-dnn bench slo`.
+pub fn to_json(b: &SloBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    let rows: Vec<String> = b
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"workers\":{},\"batch\":{},\"requests\":{},\
+                 \"offered_rps\":{},\"achieved_rps\":{},\"occupancy\":{},\
+                 \"interactive_p99_s\":{},\"bulk_p99_s\":{}}}",
+                r.workers,
+                r.batch,
+                r.requests,
+                json_f64(r.offered_rps),
+                json_f64(r.achieved_rps),
+                json_f64(r.occupancy),
+                json_f64(r.interactive_p99_s),
+                json_f64(r.bulk_p99_s),
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"slo\",\"network\":\"{}\",\"policy\":\"{}\",\
+         \"head_to_head_batch\":{},\"priority_interactive_p99_s\":{},\
+         \"fifo_interactive_p99_s\":{},\"rows\":[{}]}}",
+        json_escape(&b.network),
+        json_escape(&b.policy),
+        b.head_to_head_batch,
+        json_f64(b.priority_interactive_p99_s),
+        json_f64(b.fifo_interactive_p99_s),
+        rows.join(","),
+    )
+}
+
 /// * the two-level priority queue must give Interactive a strictly better
 ///   p99 than the single-FIFO baseline under the identical mixed load.
 pub fn check_shape(b: &SloBench) -> Result<(), String> {

@@ -246,6 +246,54 @@ pub fn render(b: &SparseBench) -> String {
     format!("{}\n{}\n{}", t.render(), a.render(), o.render())
 }
 
+/// Machine-readable twin of [`render`], written to `BENCH_sparse.json`
+/// by `zynq-dnn bench sparse`.
+pub fn to_json(b: &SparseBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    let rows: Vec<String> = b
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"prune_target\":{},\"prune_achieved\":{},\"batch\":{},\
+                 \"dense_seconds\":{},\"sparse_seconds\":{},\"speedup\":{}}}",
+                json_f64(r.prune_target),
+                json_f64(r.prune_achieved),
+                r.batch,
+                json_f64(r.dense_seconds),
+                json_f64(r.sparse_seconds),
+                json_f64(r.speedup()),
+            )
+        })
+        .collect();
+    let act: Vec<String> = b
+        .act_skip
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"zero_frac\":{},\"batch\":{},\"plain_seconds\":{},\
+                 \"skip_seconds\":{},\"speedup\":{}}}",
+                json_f64(r.zero_frac),
+                r.batch,
+                json_f64(r.plain_seconds),
+                json_f64(r.skip_seconds),
+                json_f64(r.speedup()),
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"sparse\",\"network\":\"{}\",\"rows\":[{}],\
+         \"act_skip\":[{}],\"reorder\":{{\"batch\":{},\"plain_seconds\":{},\
+         \"reorder_seconds\":{}}}}}",
+        json_escape(&b.network),
+        rows.join(","),
+        act.join(","),
+        b.reorder.batch,
+        json_f64(b.reorder.plain_seconds),
+        json_f64(b.reorder.reorder_seconds),
+    )
+}
+
 /// Qualitative shape: sparse execution must beat dense at every pruning
 /// factor ≥ 0.9 (the kernel-selection policy's premise), and the speedup
 /// at the heaviest pruning must exceed the one at the lightest.

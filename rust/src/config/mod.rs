@@ -41,6 +41,11 @@ pub struct ServerConfig {
     /// socket).  Works for any `workers` count: the frontend drives
     /// whichever `SubmitTarget` the worker count selects.
     pub listen: String,
+    /// Request-trace sampling: record every n-th request id into the
+    /// trace ring (`TRACE #<id>` / `TRACE LAST <n>` on the wire).
+    /// 1 = trace everything (default), 0 = tracing off (stamps are a
+    /// single branch).
+    pub trace_sample: u64,
 }
 
 impl Default for ServerConfig {
@@ -57,6 +62,7 @@ impl Default for ServerConfig {
             artifacts_dir: "artifacts".into(),
             artifact: String::new(),
             listen: String::new(),
+            trace_sample: 1,
         }
     }
 }
@@ -109,6 +115,7 @@ impl ServerConfig {
                 "artifacts_dir" => cfg.artifacts_dir = v.clone(),
                 "artifact" => cfg.artifact = v.clone(),
                 "listen" => cfg.listen = v.clone(),
+                "trace_sample" => cfg.trace_sample = v.parse().context("trace_sample")?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -237,6 +244,15 @@ mod tests {
         assert_eq!(cfg.listen, "127.0.0.1:7878");
         assert_eq!(cfg.workers, 4);
         assert!(ServerConfig::from_kv_text("listen = \"notanaddress\"").is_err());
+    }
+
+    #[test]
+    fn trace_sample_key_parses() {
+        let cfg = ServerConfig::from_kv_text("trace_sample = 0\n").unwrap();
+        assert_eq!(cfg.trace_sample, 0);
+        assert_eq!(ServerConfig::default().trace_sample, 1);
+        let cfg = ServerConfig::from_kv_text("trace_sample = 8\n").unwrap();
+        assert_eq!(cfg.trace_sample, 8);
     }
 
     #[test]

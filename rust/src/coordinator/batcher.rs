@@ -137,6 +137,12 @@ impl BatchView for Batch {
         Batch::padded_input(self, s_in)
     }
 
+    fn each_id(&self, f: &mut dyn FnMut(crate::coordinator::request::RequestId)) {
+        for r in &self.requests {
+            f(r.id);
+        }
+    }
+
     fn into_requests(self) -> Vec<(Request, ())> {
         self.requests.into_iter().map(|r| (r, ())).collect()
     }

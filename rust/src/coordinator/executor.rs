@@ -32,8 +32,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::engine::Engine;
-use super::request::{InferError, Reply, Request, Response};
+use super::request::{InferError, Reply, Request, RequestId, Response};
 use crate::nn::forward::argmax_rows;
+use crate::obs::trace::{SpanKind, TraceRing};
 use crate::tensor::MatI;
 
 /// Commands flowing from a front door (server handle or pool) to an
@@ -58,6 +59,9 @@ pub trait BatchView {
     }
     /// Padded input matrix (zeros beyond occupancy).
     fn padded_input(&self, s_in: usize) -> MatI;
+    /// Visit every request id in the batch (trace stamping — called only
+    /// when the sink exposes an enabled [`TraceRing`]).
+    fn each_id(&self, f: &mut dyn FnMut(RequestId));
     /// Surrender the requests, with their tags, in dispatch order.
     fn into_requests(self) -> Vec<(Request, Self::Tag)>;
 }
@@ -85,6 +89,28 @@ pub trait ExecSink {
     /// Release one backpressure slot.  Called exactly once per request,
     /// whether it got a response or an error reply.
     fn release_slot(&self);
+    /// Trace ring the loop stamps batch-formed / execute-start /
+    /// execute-end / reply-sent spans into.  Default: no tracing.
+    fn trace(&self) -> Option<&TraceRing> {
+        None
+    }
+}
+
+/// Stamp one span kind for every request in a batch (no-op when tracing
+/// is disabled: the per-batch cost is one branch).
+fn stamp_batch<B: BatchView>(ring: Option<&TraceRing>, batch: &B, kind: SpanKind) {
+    if let Some(r) = ring {
+        if r.enabled() {
+            batch.each_id(&mut |id| r.stamp(id, kind));
+        }
+    }
+}
+
+/// Stamp `ReplySent` for one request (no-op when tracing is disabled).
+fn stamp_reply(ring: Option<&TraceRing>, id: RequestId) {
+    if let Some(r) = ring {
+        r.stamp(id, SpanKind::ReplySent);
+    }
 }
 
 /// Execute every batch the source will currently form.  `force` drains the
@@ -117,8 +143,10 @@ where
         };
         let occupancy = batch.occupancy();
         sink.record_batch(occupancy, batch.size(), batch.promoted());
+        stamp_batch(sink.trace(), &batch, SpanKind::BatchFormed);
         let x = batch.padded_input(s_in);
         let t0 = Instant::now();
+        stamp_batch(sink.trace(), &batch, SpanKind::ExecuteStart);
         let y = match engine.infer(&x) {
             Ok(y) => y,
             Err(e) => {
@@ -128,6 +156,7 @@ where
                 // ever serve them) — every client gets an error reply
                 // and every slot is released, instead of stranding both
                 let err = InferError(format!("infer failed: {e:#}"));
+                stamp_batch(sink.trace(), &batch, SpanKind::ExecuteEnd);
                 let mut stranded = batch.into_requests();
                 while let Some(b) = source.flush_next(Instant::now()) {
                     stranded.extend(b.into_requests());
@@ -138,6 +167,7 @@ where
                         id: req.id,
                         result: Err(err.clone()),
                     });
+                    stamp_reply(sink.trace(), req.id);
                 }
                 return Err(e);
             }
@@ -145,6 +175,7 @@ where
         let compute_seconds = engine
             .simulated_seconds()
             .unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        stamp_batch(sink.trace(), &batch, SpanKind::ExecuteEnd);
         let classes = argmax_rows(&y);
         for (row, (req, tag)) in batch.into_requests().into_iter().enumerate() {
             // wait time = from enqueue until the batch started executing
@@ -159,10 +190,12 @@ where
             };
             sink.record_request(&tag, resp.queue_seconds, resp.total_seconds());
             sink.release_slot();
+            let id = req.id;
             let _ = req.reply.send(Reply {
-                id: req.id,
+                id,
                 result: Ok(resp),
             });
+            stamp_reply(sink.trace(), id);
         }
     }
 }
@@ -271,6 +304,7 @@ where
                     id: req.id,
                     result: Err(err.clone()),
                 });
+                stamp_reply(sink.trace(), req.id);
             }
         }
     }
@@ -356,9 +390,11 @@ mod tests {
             batcher.push(req);
             rxs.push(rx);
         }
+        let ring = TraceRing::disabled();
         let sink = ServerSink {
             metrics: &metrics,
             in_flight: &in_flight,
+            trace: &ring,
         };
         let err = execute_ready(&mut batcher, &sink, &mut FailingEngine, 64, true).unwrap_err();
         assert!(err.to_string().contains("injected"));
@@ -392,10 +428,12 @@ mod tests {
             batcher.push(req, prio);
             rxs.push(rx);
         }
+        let ring = TraceRing::disabled();
         let sink = ShardSink {
             metrics: &metrics,
             depth: &depth,
             in_flight: &in_flight,
+            trace: &ring,
         };
         let err = execute_ready(&mut batcher, &sink, &mut FailingEngine, 64, true).unwrap_err();
         assert!(err.to_string().contains("injected"));
@@ -423,9 +461,11 @@ mod tests {
             batcher.push(req);
             rxs.push(rx);
         }
+        let ring = TraceRing::disabled();
         let sink = ServerSink {
             metrics: &metrics,
             in_flight: &in_flight,
+            trace: &ring,
         };
         execute_ready(&mut batcher, &sink, engine.as_mut(), 64, true).unwrap();
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -452,6 +492,7 @@ mod tests {
             tx.send(ExecCommand::Infer(req, ())).unwrap();
             reply_rxs.push(rrx);
         }
+        let ring = TraceRing::disabled();
         let err = executor_loop(
             &rx,
             || -> Result<Box<dyn Engine>> { anyhow::bail!("no engine") },
@@ -459,6 +500,7 @@ mod tests {
             ServerSink {
                 metrics: &metrics,
                 in_flight: &in_flight,
+                trace: &ring,
             },
             64,
             "engine",
@@ -488,6 +530,7 @@ mod tests {
         tx.send(ExecCommand::Shutdown).unwrap();
         tx.send(ExecCommand::Infer(req2, ())).unwrap();
         let factory = test_factory(4);
+        let ring = TraceRing::disabled();
         executor_loop(
             &rx,
             move || factory.build(),
@@ -495,6 +538,7 @@ mod tests {
             ServerSink {
                 metrics: &metrics,
                 in_flight: &in_flight,
+                trace: &ring,
             },
             64,
             "engine",
@@ -520,6 +564,7 @@ mod tests {
             let mut engine = factory.build().unwrap();
             let metrics = ServerMetrics::new();
             let in_flight = AtomicUsize::new(n);
+            let ring = TraceRing::disabled();
             let mut batcher = Batcher::new(batch, Duration::from_secs(60));
             let mut rxs = Vec::new();
             let mut inputs = Vec::new();
@@ -534,6 +579,7 @@ mod tests {
                     let sink = ServerSink {
                         metrics: &metrics,
                         in_flight: &in_flight,
+                        trace: &ring,
                     };
                     execute_ready(&mut batcher, &sink, engine.as_mut(), 64, false).unwrap();
                 }
@@ -541,6 +587,7 @@ mod tests {
             let sink = ServerSink {
                 metrics: &metrics,
                 in_flight: &in_flight,
+                trace: &ring,
             };
             execute_ready(&mut batcher, &sink, engine.as_mut(), 64, true).unwrap();
             for (i, rx) in rxs.into_iter().enumerate() {
@@ -562,6 +609,80 @@ mod tests {
             }
             in_flight.load(Ordering::SeqCst) == 0
                 && metrics.snapshot().requests == n as u64
+        });
+    }
+
+    /// The observability contract: every submitted request — across
+    /// priority mixes, engine failures, and clients that dropped their
+    /// receiver mid-flight — yields exactly one trace whose six spans are
+    /// all present and monotonically ordered, and the ring accounts for
+    /// every slot (nothing leaked, nothing stamped late).
+    #[test]
+    fn prop_every_request_traced_exactly_once_with_ordered_spans() {
+        prop_check(20, |g| {
+            let batch = g.usize(1..5);
+            let n = g.usize(1..40);
+            let fail = g.bool(0.3);
+            let factory = test_factory(batch);
+            let mut real_engine = if fail {
+                None
+            } else {
+                Some(factory.build().unwrap())
+            };
+            let mut failing = FailingEngine;
+            let metrics = ShardMetrics::new();
+            let depth = AtomicUsize::new(n);
+            let in_flight = AtomicUsize::new(n);
+            // capacity > n so nothing is evicted: every id keeps its slot
+            let ring = TraceRing::new(64, 1);
+            let mut batcher =
+                PriorityBatcher::new(batch, Duration::from_secs(60), Duration::from_secs(60));
+            let mut rxs = Vec::new();
+            for i in 0..n as u64 {
+                let (req, rx) = mk_request(i);
+                // the submission-side stamps the front doors apply
+                ring.stamp(i, SpanKind::Submitted);
+                ring.stamp(i, SpanKind::Enqueued);
+                let prio = if g.bool(0.5) {
+                    Priority::Interactive
+                } else {
+                    Priority::Bulk
+                };
+                batcher.push(req, prio);
+                if g.bool(0.3) {
+                    drop(rx); // client gave up: trace must still complete
+                } else {
+                    rxs.push(rx);
+                }
+            }
+            let sink = ShardSink {
+                metrics: &metrics,
+                depth: &depth,
+                in_flight: &in_flight,
+                trace: &ring,
+            };
+            let result = match real_engine.as_mut() {
+                Some(e) => execute_ready(&mut batcher, &sink, e.as_mut(), 64, true),
+                None => execute_ready(&mut batcher, &sink, &mut failing, 64, true),
+            };
+            if fail != result.is_err() {
+                return false;
+            }
+            if ring.recorded() != n as u64 || ring.live_slots() != n {
+                return false; // leaked or double-counted ring slots
+            }
+            if ring.dropped_late() != 0 {
+                return false;
+            }
+            for i in 0..n as u64 {
+                let Some(t) = ring.get(i) else {
+                    return false; // a submitted request left no trace
+                };
+                if !t.is_complete() || !t.monotonic() {
+                    return false;
+                }
+            }
+            in_flight.load(Ordering::SeqCst) == 0 && depth.load(Ordering::SeqCst) == 0
         });
     }
 }

@@ -3,6 +3,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::registry::WindowedRate;
 use crate::util::stats::Histogram;
 
 /// Aggregated server metrics (mutex-guarded; updates happen once per batch,
@@ -10,6 +11,8 @@ use crate::util::stats::Histogram;
 #[derive(Debug)]
 pub struct ServerMetrics {
     inner: Mutex<Inner>,
+    /// Per-second completion buckets behind `Snapshot::throughput_10s`.
+    window: WindowedRate,
     started: Instant,
 }
 
@@ -49,8 +52,11 @@ pub struct Snapshot {
     pub padded_slots: u64,
     /// Fraction of hardware batch slots carrying real samples.
     pub occupancy: f64,
-    /// Completed requests per wall second since start.
+    /// Completed requests per wall second since start (lifetime average
+    /// — goes stale on long-running servers).
     pub throughput: f64,
+    /// Completed requests per second over the last ~10 s window.
+    pub throughput_10s: f64,
 }
 
 impl Default for ServerMetrics {
@@ -72,6 +78,7 @@ impl ServerMetrics {
                 padded_slots: 0,
                 rejected: 0,
             }),
+            window: WindowedRate::new(),
             started: Instant::now(),
         }
     }
@@ -92,6 +99,7 @@ impl ServerMetrics {
     }
 
     pub fn record_request(&self, queue_s: f64, total_s: f64) {
+        self.window.record();
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
         g.queue.record((queue_s * 1e9) as u64);
@@ -123,6 +131,7 @@ impl ServerMetrics {
                 g.occupied_slots as f64 / slots as f64
             },
             throughput: g.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            throughput_10s: self.window.per_second(),
         }
     }
 }
@@ -152,6 +161,8 @@ mod tests {
         assert!(s.p95_latency_s >= s.mean_latency_s * 0.5);
         assert!(s.p50_latency_s <= s.p95_latency_s);
         assert!(s.p95_latency_s <= s.p99_latency_s);
+        assert!(s.throughput > 0.0);
+        assert!(s.throughput_10s > 0.0, "fresh completions land in the window");
     }
 
     #[test]

@@ -53,6 +53,33 @@
 //! invariant: at most one untagged request in flight), while tagged
 //! replies keep draining around it.  `STATS`/`QUIT` are always untagged.
 //!
+//! # Observability commands
+//!
+//! ```text
+//! -> STATS JSON\n
+//! <- {"requests":...,"throughput":...,"throughput_10s":...,...}\n
+//!      (one line: the STATS payload as a JSON object, same keys plus
+//!       the ~10 s windowed throughput)
+//! -> STATS PROM\n
+//! <- <Prometheus-style text exposition, multiple lines>
+//! <- # EOF\n
+//!      (the OpenMetrics-style terminator frames the multi-line reply;
+//!       read until "# EOF")
+//! -> TRACE #<id>\n
+//! <- TRACE #<id> t0_ns=<..> submitted_us=0.0 enqueued_us=<..> ...\n
+//!      (the request's span timeline, offsets in µs from submission;
+//!       ERR when the id was sampled out, evicted, or never seen)
+//! -> TRACE LAST <n>\n
+//! <- TRACES <k>\n           (k <= n, newest first)
+//! <- TRACE #<id> ...\n      (k trace lines)
+//! ```
+//!
+//! Traces are recorded server-side in a fixed ring (see
+//! [`TraceRing`](crate::obs::trace::TraceRing)); `trace_sample` in the
+//! server config picks every n-th request id, 0 disables.  The frontend
+//! re-stamps `reply_sent` for pipelined requests when the reply line
+//! actually hits the socket, so wire traces include demux/write time.
+//!
 //! The priority class is deliberately a wire concept: `INFER` defaults to
 //! Interactive (a remote caller waiting on the reply is latency traffic),
 //! and batch jobs opt *down* to `INFER BULK`.
@@ -69,6 +96,8 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::request::{Priority, Reply, RequestId, Response, SubmitOptions, Ticket};
+use crate::obs::registry::json_f64;
+use crate::obs::trace::{SpanKind, TraceRing};
 
 /// Anything the serving frontends can drive.  One submission primitive —
 /// completion-queue style, into a caller-supplied sender — plus the
@@ -92,6 +121,27 @@ pub trait SubmitTarget: Send + Sync {
 
     /// The uniform STATS payload (a pool merges its shards here).
     fn stats(&self) -> StatsReport;
+
+    /// The serving stack's request-trace ring, when it keeps one (the
+    /// frontend serves `TRACE` from it and re-stamps `reply_sent` at
+    /// wire-write time).  `None` = tracing unsupported: `TRACE` answers
+    /// ERR and the frontend skips the re-stamp branch entirely.
+    fn traces(&self) -> Option<Arc<TraceRing>> {
+        None
+    }
+
+    /// Prometheus-style text exposition, `# EOF`-terminated.  The default
+    /// derives a minimal payload from [`SubmitTarget::stats`]; real
+    /// serving stacks override with their full registry.
+    fn prometheus(&self) -> String {
+        let s = self.stats();
+        format!(
+            "# TYPE zdnn_requests_total counter\nzdnn_requests_total {}\n\
+             # TYPE zdnn_throughput gauge\nzdnn_throughput {}\n\
+             # TYPE zdnn_workers gauge\nzdnn_workers {}\n# EOF\n",
+            s.requests, s.throughput, s.workers
+        )
+    }
 
     /// Submit one sample and get a completion [`Ticket`] back.
     fn submit(&self, input: Vec<i32>, opts: SubmitOptions) -> Result<Ticket> {
@@ -146,16 +196,21 @@ pub struct StatsReport {
     /// Bulk requests promoted by aging (0 on the single-engine server).
     pub promoted: u64,
     pub throughput: f64,
+    /// Completed requests per second over the last ~10 s window (tracks
+    /// current load where `throughput` is the lifetime average).
+    pub throughput_10s: f64,
     pub workers: usize,
 }
 
 impl StatsReport {
-    /// Render the wire line (without trailing newline).
+    /// Render the wire line (without trailing newline).  New keys are
+    /// appended so `key=` substring parsers keep working.
     pub fn render(&self) -> String {
         format!(
             "STATS requests={} batches={} rejected={} mean_latency_us={:.1} \
              p50_latency_us={:.1} p95_latency_us={:.1} p99_latency_us={:.1} \
-             occupancy={:.3} promoted={} throughput={:.1} workers={}",
+             occupancy={:.3} promoted={} throughput={:.1} workers={} \
+             win_throughput={:.1}",
             self.requests,
             self.batches,
             self.rejected,
@@ -166,6 +221,30 @@ impl StatsReport {
             self.occupancy,
             self.promoted,
             self.throughput,
+            self.workers,
+            self.throughput_10s
+        )
+    }
+
+    /// The same payload as one JSON object (the `STATS JSON` wire reply).
+    pub fn render_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"batches\":{},\"rejected\":{},\
+             \"mean_latency_us\":{},\"p50_latency_us\":{},\
+             \"p95_latency_us\":{},\"p99_latency_us\":{},\
+             \"occupancy\":{},\"promoted\":{},\"throughput\":{},\
+             \"throughput_10s\":{},\"workers\":{}}}",
+            self.requests,
+            self.batches,
+            self.rejected,
+            json_f64(self.mean_latency_s * 1e6),
+            json_f64(self.p50_latency_s * 1e6),
+            json_f64(self.p95_latency_s * 1e6),
+            json_f64(self.p99_latency_s * 1e6),
+            json_f64(self.occupancy),
+            self.promoted,
+            json_f64(self.throughput),
+            json_f64(self.throughput_10s),
             self.workers
         )
     }
@@ -307,6 +386,7 @@ fn demux_loop(
     completions: mpsc::Receiver<Reply>,
     pending: &Mutex<HashMap<RequestId, u64>>,
     writer: &Mutex<TcpStream>,
+    trace: Option<&TraceRing>,
 ) {
     // after a write error the peer is gone: keep draining so in-flight
     // completions are consumed (nothing leaks, the loop still terminates),
@@ -325,6 +405,12 @@ fn demux_loop(
         };
         if write_line(writer, &line).is_err() {
             broken = true;
+        }
+        // overwrite the executor's channel-send stamp with the moment the
+        // reply actually hit the socket (always later, so monotonicity of
+        // the span sequence is preserved)
+        if let Some(r) = trace {
+            r.stamp(reply.id, SpanKind::ReplySent);
         }
     }
 }
@@ -345,9 +431,10 @@ fn handle_connection(
     let demux = {
         let pending = pending.clone();
         let writer = writer.clone();
+        let trace = target.traces();
         thread::Builder::new()
             .name("zdnn-net-demux".into())
-            .spawn(move || demux_loop(completion_rx, &pending, &writer))?
+            .spawn(move || demux_loop(completion_rx, &pending, &writer, trace.as_deref()))?
     };
     let result = serve_lines(reader, &writer, target, stop, &pending, &completions);
     // drop our sender so the demux exits once every in-flight request has
@@ -398,6 +485,29 @@ fn serve_lines(
         match parse_command(line.trim_end()) {
             Ok(Command::Quit) => return Ok(()),
             Ok(Command::Stats) => write_line(writer, &target.stats().render())?,
+            Ok(Command::StatsJson) => write_line(writer, &target.stats().render_json())?,
+            Ok(Command::StatsProm) => {
+                // multi-line reply; the "# EOF" line frames it for clients
+                let text = target.prometheus();
+                let mut w = writer.lock().unwrap();
+                w.write_all(text.as_bytes())?;
+            }
+            Ok(Command::TraceOne(id)) => {
+                let reply = match target.traces().and_then(|r| r.get(id)) {
+                    Some(t) => t.render(),
+                    None => {
+                        format!("ERR trace #{id} not found (tracing off, sampled out, or evicted)")
+                    }
+                };
+                write_line(writer, &reply)?;
+            }
+            Ok(Command::TraceLast(n)) => {
+                let traces = target.traces().map(|r| r.last(n)).unwrap_or_default();
+                write_line(writer, &format!("TRACES {}", traces.len()))?;
+                for t in &traces {
+                    write_line(writer, &t.render())?;
+                }
+            }
             Ok(Command::Infer {
                 values,
                 priority,
@@ -444,6 +554,10 @@ enum Command {
         tag: Option<u64>,
     },
     Stats,
+    StatsJson,
+    StatsProm,
+    TraceOne(RequestId),
+    TraceLast(usize),
     Quit,
 }
 
@@ -482,7 +596,23 @@ fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
                 Err(e) => Err((tag, format!("bad number: {e}"))),
             }
         }
-        Some("STATS") => Ok(Command::Stats),
+        Some("STATS") => match parts.next() {
+            None => Ok(Command::Stats),
+            Some("JSON") => Ok(Command::StatsJson),
+            Some("PROM") => Ok(Command::StatsProm),
+            Some(other) => Err((None, format!("unknown STATS form {other:?} (want JSON or PROM)"))),
+        },
+        Some("TRACE") => match parts.next() {
+            Some(t) if t.starts_with('#') => match t[1..].parse::<u64>() {
+                Ok(id) => Ok(Command::TraceOne(id)),
+                Err(_) => Err((None, format!("bad trace id {:?} (want #<u64>)", &t[1..]))),
+            },
+            Some("LAST") => match parts.next().map(str::parse::<usize>) {
+                Some(Ok(n)) => Ok(Command::TraceLast(n)),
+                _ => Err((None, "TRACE LAST wants a count".into())),
+            },
+            _ => Err((None, "TRACE wants #<id> or LAST <n>".into())),
+        },
         Some("QUIT") => Ok(Command::Quit),
         Some(other) => Err((None, format!("unknown command {other:?}"))),
         None => Err((None, "empty command".into())),
@@ -1066,6 +1196,47 @@ mod tests {
             Ok(Command::Infer { tag, .. }) => assert_eq!(tag, None),
             _ => panic!("untagged INFER must parse"),
         }
+    }
+
+    #[test]
+    fn observability_commands_parse() {
+        assert!(matches!(parse_command("STATS"), Ok(Command::Stats)));
+        assert!(matches!(parse_command("STATS JSON"), Ok(Command::StatsJson)));
+        assert!(matches!(parse_command("STATS PROM"), Ok(Command::StatsProm)));
+        assert!(matches!(parse_command("TRACE #42"), Ok(Command::TraceOne(42))));
+        assert!(matches!(parse_command("TRACE LAST 5"), Ok(Command::TraceLast(5))));
+        assert!(parse_command("TRACE").is_err());
+        assert!(parse_command("TRACE LAST notanumber").is_err());
+        assert!(parse_command("TRACE #nope").is_err());
+        assert!(parse_command("STATS YAML").is_err());
+    }
+
+    #[test]
+    fn stats_report_renders_json_and_windowed_key() {
+        let s = StatsReport {
+            requests: 12,
+            batches: 3,
+            rejected: 1,
+            mean_latency_s: 1e-3,
+            p50_latency_s: 0.5e-3,
+            p95_latency_s: 2e-3,
+            p99_latency_s: 3e-3,
+            occupancy: 0.875,
+            promoted: 2,
+            throughput: 100.0,
+            throughput_10s: 42.5,
+            workers: 4,
+        };
+        let line = s.render();
+        assert!(line.contains("win_throughput=42.5"), "{line}");
+        assert!(line.contains("throughput=100.0"), "{line}");
+        let v = crate::config::json::parse(&s.render_json()).expect("valid JSON");
+        assert_eq!(v.get("requests").and_then(|x| x.as_f64().ok()), Some(12.0));
+        assert_eq!(
+            v.get("throughput_10s").and_then(|x| x.as_f64().ok()),
+            Some(42.5)
+        );
+        assert_eq!(v.get("workers").and_then(|x| x.as_f64().ok()), Some(4.0));
     }
 
     #[test]

@@ -21,6 +21,8 @@ use super::metrics::ServerMetrics;
 use super::net::{StatsReport, SubmitTarget};
 use super::request::{Priority, Reply, Request, RequestId, Response};
 use crate::config::ServerConfig;
+use crate::obs::registry::Registry;
+use crate::obs::trace::{SpanKind, TraceRing, TRACE_RING_CAPACITY};
 
 /// Single-engine commands: no scheduling tag (the FIFO batcher ignores
 /// priorities by construction).
@@ -35,6 +37,11 @@ pub struct ServerHandle {
     next_id: AtomicU64,
     engine: Option<thread::JoinHandle<Result<()>>>,
     shutting_down: AtomicBool,
+    /// Request-trace ring (sampling per `ServerConfig::trace_sample`).
+    trace: Arc<TraceRing>,
+    /// Export-time metrics registry (refreshed pull-style from the
+    /// snapshot by [`SubmitTarget::prometheus`]).
+    registry: Arc<Registry>,
     /// Input width the engine expects (validated at submit time).
     pub input_width: usize,
 }
@@ -49,15 +56,17 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Command>();
         let metrics = Arc::new(ServerMetrics::new());
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let trace = Arc::new(TraceRing::new(TRACE_RING_CAPACITY, config.trace_sample));
         let input_width = factory.net.spec.inputs();
 
         let m = metrics.clone();
         let fl = in_flight.clone();
+        let tr = trace.clone();
         let batch_size = config.batch;
         let deadline = Duration::from_micros(config.batch_deadline_us);
         let engine = thread::Builder::new()
             .name("zdnn-engine".into())
-            .spawn(move || engine_loop(rx, factory, batch_size, deadline, m, fl))?;
+            .spawn(move || engine_loop(rx, factory, batch_size, deadline, m, fl, tr))?;
 
         Ok(ServerHandle {
             tx,
@@ -67,6 +76,8 @@ impl Server {
             next_id: AtomicU64::new(0),
             engine: Some(engine),
             shutting_down: AtomicBool::new(false),
+            trace,
+            registry: Arc::new(Registry::new()),
             input_width,
         })
     }
@@ -102,6 +113,7 @@ impl ServerHandle {
             }
         }
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.trace.stamp(id, SpanKind::Submitted);
         let req = Request {
             id,
             input,
@@ -113,8 +125,10 @@ impl ServerHandle {
             // must report "engine thread gone" forever, not fill the
             // queue-depth accounting until it misreports "queue full"
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.trace.discard(id);
             bail!("engine thread gone");
         }
+        self.trace.stamp(id, SpanKind::Enqueued);
         Ok(id)
     }
 
@@ -169,8 +183,34 @@ impl SubmitTarget for ServerHandle {
             occupancy: s.occupancy,
             promoted: 0,
             throughput: s.throughput,
+            throughput_10s: s.throughput_10s,
             workers: 1,
         }
+    }
+
+    fn traces(&self) -> Option<Arc<TraceRing>> {
+        Some(self.trace.clone())
+    }
+
+    fn prometheus(&self) -> String {
+        let s = self.metrics.snapshot();
+        let r = &self.registry;
+        r.set_counter("zdnn_requests_total", s.requests);
+        r.set_counter("zdnn_batches_total", s.batches);
+        r.set_counter("zdnn_padded_batches_total", s.padded_batches);
+        r.set_counter("zdnn_rejected_total", s.rejected);
+        r.set_counter("zdnn_occupied_slots_total", s.occupied_slots);
+        r.set_counter("zdnn_padded_slots_total", s.padded_slots);
+        r.set_gauge("zdnn_occupancy", s.occupancy);
+        r.set_gauge("zdnn_throughput", s.throughput);
+        r.set_gauge("zdnn_throughput_10s", s.throughput_10s);
+        r.set_gauge("zdnn_mean_latency_s", s.mean_latency_s);
+        r.set_gauge("zdnn_p99_latency_s", s.p99_latency_s);
+        r.set_gauge("zdnn_in_flight", self.in_flight.load(Ordering::SeqCst) as f64);
+        r.set_gauge("zdnn_workers", 1.0);
+        r.set_counter("zdnn_traces_recorded_total", self.trace.recorded());
+        r.set_counter("zdnn_traces_evicted_total", self.trace.evicted());
+        r.render_prometheus()
     }
 }
 
@@ -180,6 +220,7 @@ impl SubmitTarget for ServerHandle {
 pub(crate) struct ServerSink<'a> {
     pub(crate) metrics: &'a ServerMetrics,
     pub(crate) in_flight: &'a AtomicUsize,
+    pub(crate) trace: &'a TraceRing,
 }
 
 impl ExecSink for ServerSink<'_> {
@@ -196,6 +237,10 @@ impl ExecSink for ServerSink<'_> {
     fn release_slot(&self) {
         self.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
+
+    fn trace(&self) -> Option<&TraceRing> {
+        Some(self.trace)
+    }
 }
 
 /// The engine thread body: the shared executor loop over a FIFO batcher.
@@ -206,6 +251,7 @@ fn engine_loop(
     deadline: Duration,
     metrics: Arc<ServerMetrics>,
     in_flight: Arc<AtomicUsize>,
+    trace: Arc<TraceRing>,
 ) -> Result<()> {
     let s_in = factory.net.spec.inputs();
     executor_loop(
@@ -215,6 +261,7 @@ fn engine_loop(
         ServerSink {
             metrics: &*metrics,
             in_flight: &*in_flight,
+            trace: &*trace,
         },
         s_in,
         "engine",

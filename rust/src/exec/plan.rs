@@ -3,11 +3,13 @@
 //! kernel-selection policy.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use crate::compress::{CompressedModel, LayerBlob};
 use crate::nn::forward::QNetwork;
+use crate::obs::profile::PlanProfile;
 use crate::nn::spec::{Activation, NetworkSpec};
 use crate::sparse;
 use crate::tensor::{
@@ -49,6 +51,10 @@ pub struct PlanOptions {
     /// zero-column fraction reaches [`ACT_SKIP_MIN_ZERO_FRAC`];
     /// bit-identical either way (a skipped column contributes exactly 0).
     pub activation_skip: bool,
+    /// Record per-layer kernel timing into the plan's
+    /// [`PlanProfile`](crate::obs::profile::PlanProfile) (off by default:
+    /// disabled profiling costs the per-layer loop one branch).
+    pub profile: bool,
 }
 
 impl Default for PlanOptions {
@@ -58,6 +64,7 @@ impl Default for PlanOptions {
             threads: 1,
             reorder_rows: false,
             activation_skip: true,
+            profile: false,
         }
     }
 }
@@ -92,6 +99,11 @@ impl PlanOptions {
 
     pub fn with_activation_skip(mut self, on: bool) -> Self {
         self.activation_skip = on;
+        self
+    }
+
+    pub fn with_profile(mut self, on: bool) -> Self {
+        self.profile = on;
         self
     }
 }
@@ -195,6 +207,24 @@ impl Kernel {
     fn maskable(&self) -> bool {
         matches!(self, Kernel::SparseQ(_) | Kernel::CodebookQ(_))
     }
+
+    /// Weights this kernel will actually visit for one batch — exact: the
+    /// post-mask count for sparse kernels (an O(nnz) scan, profiling-only),
+    /// full nnz unmasked, rows × cols for the dense families.
+    fn effective_nnz(&self, mask: Option<&[bool]>) -> usize {
+        match self {
+            Kernel::DenseQ(w) => w.rows * w.cols,
+            Kernel::DenseF32(w) => w.rows * w.cols,
+            Kernel::SparseQ(d) => match mask {
+                Some(m) => d.csr.col_idx().iter().filter(|&&c| m[c as usize]).count(),
+                None => d.csr.nnz(),
+            },
+            Kernel::CodebookQ(d) => match mask {
+                Some(m) => d.mat.col_idx().iter().filter(|&&c| m[c as usize]).count(),
+                None => d.mat.nnz(),
+            },
+        }
+    }
 }
 
 #[derive(Clone)]
@@ -219,6 +249,9 @@ pub struct ExecPlan {
     act_skip: bool,
     /// Reusable column non-zero mask scratch for the skip path.
     colmask: Vec<bool>,
+    /// Per-layer kernel profile, recording when compiled with
+    /// [`PlanOptions::profile`] (the f32 baseline path is unprofiled).
+    profile: Option<PlanProfile>,
 }
 
 impl ExecPlan {
@@ -338,6 +371,9 @@ impl ExecPlan {
 
     fn new(spec: NetworkSpec, layers: Vec<LayerPlan>, opts: &PlanOptions) -> Result<Self> {
         ensure!(!layers.is_empty(), "{}: network has no layers", spec.name);
+        let profile = opts
+            .profile
+            .then(|| PlanProfile::new(layers.iter().map(|l| (l.kernel.kind(), l.out_dim))));
         Ok(Self {
             spec,
             layers,
@@ -346,6 +382,7 @@ impl ExecPlan {
             fbufs: [MatF::zeros(0, 0), MatF::zeros(0, 0)],
             act_skip: opts.activation_skip,
             colmask: Vec::new(),
+            profile,
         })
     }
 
@@ -377,7 +414,19 @@ impl ExecPlan {
             fbufs: [MatF::zeros(0, 0), MatF::zeros(0, 0)],
             act_skip: self.act_skip,
             colmask: Vec::new(),
+            // each clone records into its own profile (no cross-shard
+            // synchronization); merge() folds them for a pool-wide view
+            profile: self
+                .profile
+                .as_ref()
+                .map(|_| PlanProfile::new(self.layers.iter().map(|l| (l.kernel.kind(), l.out_dim)))),
         }
+    }
+
+    /// The per-layer kernel profile accumulated so far (`None` unless the
+    /// plan was compiled with [`PlanOptions::profile`]).
+    pub fn profile(&self) -> Option<&PlanProfile> {
+        self.profile.as_ref()
     }
 
     /// Execute one Q7.8 batch: `x` is (n × s_0), the result borrows the
@@ -412,6 +461,7 @@ impl ExecPlan {
             qbufs,
             colmask,
             act_skip,
+            profile,
             ..
         } = self;
         let act_skip = *act_skip;
@@ -429,6 +479,7 @@ impl ExecPlan {
             // EIE activation sparsity: ReLU zeroes whole activation
             // columns; the sparse kernels can skip them entirely.  Only
             // worth the per-entry mask test when enough columns died.
+            let mut cols_skipped = 0usize;
             let mask: Option<&[bool]> = if act_skip
                 && j > 0
                 && layer.kernel.maskable()
@@ -436,10 +487,14 @@ impl ExecPlan {
             {
                 let nz = column_nonzero_mask(src, colmask);
                 let zero_frac = (src.cols - nz) as f64 / src.cols.max(1) as f64;
+                if zero_frac >= ACT_SKIP_MIN_ZERO_FRAC {
+                    cols_skipped = src.cols - nz;
+                }
                 (zero_frac >= ACT_SKIP_MIN_ZERO_FRAC).then_some(colmask.as_slice())
             } else {
                 None
             };
+            let layer_t0 = profile.is_some().then(Instant::now);
             match &layer.kernel {
                 Kernel::DenseQ(w) => match pool {
                     // row partitioning needs a few sample rows to win
@@ -473,6 +528,11 @@ impl ExecPlan {
             for v in dst.data.iter_mut() {
                 *v = layer.act.apply_acc(*v);
             }
+            if let Some(p) = profile.as_mut() {
+                let wall_ns = layer_t0.expect("set when profiling").elapsed().as_nanos() as u64;
+                let eff_nnz = layer.kernel.effective_nnz(mask);
+                p.record(j, wall_ns, n, mask.is_some(), cols_skipped, src.cols, eff_nnz);
+            }
         }
         Ok(&self.qbufs[(self.layers.len() - 1) % 2])
     }
@@ -483,6 +543,8 @@ impl ExecPlan {
     /// any change to the buffer-sizing or parity logic there must be made
     /// here too (kept as two concrete copies rather than one generic
     /// helper — the borrow gymnastics are the subtlest code in the file).
+    /// The per-layer profiler is deliberately `run_q`-only: this path is
+    /// the software baseline, not a serving path.
     pub fn run_f32(&mut self, x: &MatF) -> Result<&MatF> {
         ensure!(
             x.cols == self.spec.inputs(),
@@ -680,6 +742,50 @@ mod tests {
     }
 
     #[test]
+    fn profile_records_per_layer_kernels_and_mask() {
+        // sparse plan + dead input columns so the activation mask engages
+        // on layer 1; the profile must see both layers, the mask, and a
+        // post-mask nnz strictly below the full count
+        let net = prune_qnetwork(&rand_qnet(quickstart(), 21), 0.9);
+        let mut x = rand_x(6, 64, 22);
+        for r in 0..x.rows {
+            for c in 0..x.cols {
+                if c % 3 != 0 {
+                    x.data[r * x.cols + c] = 0;
+                }
+            }
+        }
+        let opts = PlanOptions::sparse_always().with_profile(true);
+        let mut plan = ExecPlan::compile_q(&net, &opts).unwrap();
+        assert_eq!(plan.profile().unwrap().batches(), 0);
+        let want = reference_forward_q(&net, &x);
+        for _ in 0..3 {
+            assert_eq!(plan.run(&x).unwrap().data, want.data);
+        }
+        let p = plan.profile().unwrap();
+        assert_eq!(p.batches(), 3);
+        assert_eq!(p.layers.len(), 2);
+        for l in &p.layers {
+            assert_eq!(l.kernel, KernelKind::SparseQ);
+            assert_eq!(l.runs, 3);
+            assert_eq!(l.items, 18);
+        }
+        let full_nnz: usize = net.weights[1].data.iter().filter(|&&v| v != 0).count();
+        let l1 = &p.layers[1];
+        if l1.masked_runs > 0 {
+            assert!(l1.cols_skipped > 0);
+            assert!((l1.mean_nnz() as usize) < full_nnz, "mask must cut nnz");
+        }
+        // a profile-off plan stays unprofiled and bit-identical
+        let mut off = ExecPlan::compile_q(&net, &PlanOptions::sparse_always()).unwrap();
+        assert!(off.profile().is_none());
+        assert_eq!(off.run(&x).unwrap().data, want.data);
+        // clone_shared gives the twin a fresh recorder
+        let twin = plan.clone_shared();
+        assert_eq!(twin.profile().unwrap().batches(), 0);
+    }
+
+    #[test]
     fn run_reuses_buffers_across_calls() {
         let net = rand_qnet(quickstart(), 4);
         let mut plan = ExecPlan::compile_q(&net, &PlanOptions::default()).unwrap();
@@ -750,6 +856,7 @@ mod tests {
                 threads: g.usize(1..4),
                 reorder_rows: g.bool(0.5),
                 activation_skip: g.bool(0.5),
+                profile: g.bool(0.5),
             };
             let mut plan = match ExecPlan::compile_q(&net, &opts) {
                 Ok(p) => p,

@@ -32,6 +32,7 @@ pub mod exec;
 pub mod sim;
 pub mod fixedpoint;
 pub mod nn;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serve;

@@ -13,14 +13,19 @@
 //!   serve-pool                   sharded pool demo: mixed-priority traffic,
 //!                                per-shard + aggregate metrics
 //!   sim                          simulate one network on both accelerators
+//!   profile                      per-layer kernel profile of a compiled plan
+//!                                (the runtime twin of the paper's Fig. 7
+//!                                layer breakdown; takes --artifact/--network)
 //!   bench <which>                regenerate a paper table/figure, or run the
 //!                                serving benches (table2|table3|table4|fig7|
 //!                                gops|nopt|combined|ablation|sparse|slo|
-//!                                calibrate|compress|net|all)
+//!                                calibrate|compress|net|obs|all); sparse/slo/
+//!                                compress/net/obs also write BENCH_<which>.json
 //!
-//! `infer`, `serve`, and `serve-pool` take `--artifact model.rpz` to serve
-//! a compressed model directly: the network weights AND the calibrated
-//! sparse threshold come from the artifact (no `--threshold` needed).
+//! `infer`, `serve`, `serve-pool`, and `profile` take `--artifact model.rpz`
+//! to serve a compressed model directly: the network weights AND the
+//! calibrated sparse threshold come from the artifact (no `--threshold`
+//! needed).
 
 use std::path::{Path, PathBuf};
 
@@ -34,6 +39,7 @@ use zynq_dnn::compress::{
 };
 use zynq_dnn::config::ServerConfig;
 use zynq_dnn::coordinator::{EngineFactory, Server, SubmitOptions, SubmitTarget};
+use zynq_dnn::exec::{ExecPlan, PlanOptions};
 use zynq_dnn::serve::{start_serving, Priority, Serving};
 use zynq_dnn::nn::spec::by_name;
 use zynq_dnn::nn::{load_weights, save_weights};
@@ -158,6 +164,22 @@ const GLOBAL_FLAGS: &[FlagSpec] = &[
         help: "compress: sparse-layer artifact encoding: raw|delta|codebook (default delta; \
                codebook adds the accuracy-budgeted weight-sharing rung)",
     },
+    FlagSpec {
+        name: "runs",
+        takes_value: true,
+        help: "profile: batches to execute through the plan",
+    },
+    FlagSpec {
+        name: "threads",
+        takes_value: true,
+        help: "profile: worker threads for the parallel kernels",
+    },
+    FlagSpec {
+        name: "trace-sample",
+        takes_value: true,
+        help: "serve: trace every n-th request id (1 = all, 0 = off); \
+               query with TRACE #<id> / TRACE LAST <n> on the wire",
+    },
 ];
 
 fn main() {
@@ -182,11 +204,13 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => serve(&args),
         "serve-pool" => serve_pool(&args),
         "sim" => sim(&args),
+        "profile" => profile(&args),
         "bench" => run_bench(&args),
         _ => {
             println!("zynq-dnn — FPGA DNN inference throughput reproduction\n");
             println!(
-                "usage: zynq-dnn <info|train|compress|infer|serve|serve-pool|sim|bench> [flags]\n"
+                "usage: zynq-dnn <info|train|compress|infer|serve|serve-pool|sim|profile|bench> \
+                 [flags]\n"
             );
             println!("{}", usage(GLOBAL_FLAGS));
             Ok(())
@@ -508,6 +532,7 @@ fn serve(args: &Args) -> Result<()> {
             backend: backend.into(),
             artifact: args.get("artifact").unwrap_or("").to_string(),
             listen: listen.to_string(),
+            trace_sample: args.get_usize("trace-sample", 1)? as u64,
             ..Default::default()
         };
         let serving = std::sync::Arc::new(start_serving(&cfg, factory)?);
@@ -517,7 +542,8 @@ fn serve(args: &Args) -> Result<()> {
         );
         let fe = zynq_dnn::coordinator::NetFrontend::start(&cfg.listen, serving)?;
         eprintln!(
-            "listening on {} — protocol v2: INFER [BULK] [#<id>] <f32>... | STATS | QUIT \
+            "listening on {} — protocol v2: INFER [BULK] [#<id>] <f32>... | STATS [JSON|PROM] | \
+             TRACE #<id> | TRACE LAST <n> | QUIT \
              (tagged requests pipeline with out-of-order tagged replies; \
              untagged requests keep v1 lockstep)",
             fe.addr()
@@ -597,6 +623,7 @@ fn serve_pool(args: &Args) -> Result<()> {
         queue_depth: requests.max(1024),
         backend: backend.into(),
         artifact: args.get("artifact").unwrap_or("").to_string(),
+        trace_sample: args.get_usize("trace-sample", 1)? as u64,
         ..Default::default()
     };
     let serving = start_serving(&cfg, factory)?;
@@ -714,10 +741,67 @@ fn sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `profile`: compile one plan with per-layer profiling on, push `--runs`
+/// seeded random batches through it, and print the per-layer table — the
+/// runtime twin of the paper's Fig. 7 layer breakdown.  `--artifact`
+/// profiles the compressed model's own kernels (calibrated threshold,
+/// codebook layers intact); otherwise `--network`/`--weights` pick the
+/// net and `--threshold` the kernel-selection policy.
+fn profile(args: &Args) -> Result<()> {
+    let batch = args.get_usize("batch", 25)?;
+    let quick = bench::quick_mode();
+    let runs = args.get_usize("runs", if quick { 8 } else { 64 })?;
+    let threads = args.get_usize("threads", 1)?;
+    let (factory, name) = build_factory(args, "native", batch)?;
+    let s_in = factory.net.spec.inputs();
+
+    let mut opts = PlanOptions::default().with_threads(threads).with_profile(true);
+    if let Some(t) = factory.sparse_threshold {
+        opts.sparse_threshold = t;
+    }
+    // an artifact's kernel choice is its own (calibrated at compression
+    // time) unless an explicit --threshold asks for a recompile from the
+    // reconstructed network
+    let mut plan = match (&factory.artifact, factory.sparse_threshold) {
+        (Some(model), None) => ExecPlan::compile_artifact_with(model, &opts)?,
+        _ => ExecPlan::compile_q(&factory.net, &opts)?,
+    };
+
+    let mut rng = Xoshiro256::seed_from_u64(0xF16_7);
+    for _ in 0..runs {
+        let x = zynq_dnn::nn::quantize_matrix(&zynq_dnn::tensor::MatF::from_vec(
+            batch,
+            s_in,
+            (0..batch * s_in)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect(),
+        ));
+        plan.run(&x)?;
+    }
+    let p = plan
+        .profile()
+        .expect("compiled with PlanOptions::profile on");
+    println!(
+        "{}",
+        p.render(&format!(
+            "{name} per-layer profile (batch {batch}, {runs} runs, {threads} thread(s))"
+        ))
+    );
+    Ok(())
+}
+
 fn run_bench(args: &Args) -> Result<()> {
     let which = args.positionals.get(1).map(String::as_str).unwrap_or("all");
     let all = which == "all";
     let mut ran = false;
+    // the serving benches also write their machine-readable twin next to
+    // the repo root so dashboards can diff runs without scraping tables
+    let emit = |name: &str, json: &str| -> Result<()> {
+        let path = bench::write_json(name, json)
+            .with_context(|| format!("writing BENCH_{name}.json"))?;
+        eprintln!("wrote {}", path.display());
+        Ok(())
+    };
     if all || which == "table2" {
         println!("{}", bench::table2::render(&bench::table2::run()));
         ran = true;
@@ -751,7 +835,9 @@ fn run_bench(args: &Args) -> Result<()> {
         ran = true;
     }
     if all || which == "sparse" {
-        println!("{}", bench::sparse::render(&bench::sparse::run()));
+        let s = bench::sparse::run();
+        println!("{}", bench::sparse::render(&s));
+        emit("sparse", &bench::sparse::to_json(&s))?;
         ran = true;
     }
     if all || which == "calibrate" {
@@ -761,6 +847,7 @@ fn run_bench(args: &Args) -> Result<()> {
     if all || which == "compress" {
         let c = bench::compress::run()?;
         println!("{}", bench::compress::render(&c));
+        emit("compress", &bench::compress::to_json(&c))?;
         // deterministic gate (no wall-clock dependence): the budget must
         // hold on every row and the artifact must round-trip bit-exact —
         // run by the CI "compress smoke" job
@@ -772,6 +859,7 @@ fn run_bench(args: &Args) -> Result<()> {
     if all || which == "slo" {
         let slo = bench::slo::run();
         println!("{}", bench::slo::render(&slo));
+        emit("slo", &bench::slo::to_json(&slo))?;
         // the CI smoke job runs `bench slo --quick`: scheduler regressions
         // must fail the build, not just print a slower table
         if let Err(e) = bench::slo::check_shape(&slo) {
@@ -786,6 +874,7 @@ fn run_bench(args: &Args) -> Result<()> {
     if all || which == "net" {
         let n = bench::netbench::run();
         println!("{}", bench::netbench::render(&n));
+        emit("net", &bench::netbench::to_json(&n))?;
         // wall-clock gate: a single pipelined connection (depth 16) must
         // beat the lockstep-equivalent depth 1 against the 4-worker pool
         if let Err(e) = bench::netbench::check_shape(&n) {
@@ -797,10 +886,25 @@ fn run_bench(args: &Args) -> Result<()> {
         }
         ran = true;
     }
+    if all || which == "obs" {
+        let o = bench::obsbench::run();
+        println!("{}", bench::obsbench::render(&o));
+        emit("obs", &bench::obsbench::to_json(&o))?;
+        // the PR 7 overhead gate: disabled tracing/profiling must stay
+        // free; run by the CI "obs smoke" job
+        if let Err(e) = bench::obsbench::check_shape(&o) {
+            if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+                eprintln!("obs shape check FAILED (ignored, ZDNN_SKIP_PERF=1): {e}");
+            } else {
+                bail!("obs shape check failed: {e}");
+            }
+        }
+        ran = true;
+    }
     if !ran {
         bail!(
             "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|\
-             ablation|sparse|calibrate|compress|slo|net|all)"
+             ablation|sparse|calibrate|compress|slo|net|obs|all)"
         );
     }
     Ok(())

@@ -1,0 +1,39 @@
+//! Observability: request tracing, per-layer kernel profiling, and the
+//! exportable metrics registry.
+//!
+//! The paper's evaluation is a set of cost breakdowns — where time goes
+//! per layer, per batch, per transfer (Fig. 7, Tables 2-4).  This module
+//! gives the serving runtime the same visibility at runtime:
+//!
+//! * [`trace`] — every sampled [`RequestId`](crate::coordinator::RequestId)
+//!   gets a span timeline (submitted → enqueued → batch-formed →
+//!   execute-start → execute-end → reply-sent) recorded into a fixed-size
+//!   lock-light [`TraceRing`], stamped at the existing single-source-of-
+//!   truth points (`enqueue`, the shared executor loop, the TCP reply
+//!   demux) and queryable over the wire (`TRACE #<id>` / `TRACE LAST <n>`).
+//! * [`profile`] — [`PlanOptions::profile`](crate::exec::PlanOptions)
+//!   turns on per-layer recording inside `ExecPlan::run_q`: wall time
+//!   histograms, kernel family (DenseQ/SparseQ/CodebookQ, masked or not),
+//!   activation-skip column counts, and effective nnz — the runtime twin
+//!   of the paper's Fig. 7 layer breakdown, printed by the `profile` CLI
+//!   subcommand.
+//! * [`registry`] — atomic [`Counter`]s/[`Gauge`]s plus the existing
+//!   [`Histogram`](crate::util::stats::Histogram), named in one flat
+//!   namespace and exported as Prometheus-style text (`STATS PROM`) and
+//!   JSON (`STATS JSON`).  The serving targets refresh it pull-style from
+//!   their snapshots at export time, so the hot path keeps its existing
+//!   one-lock-per-batch cost.  [`WindowedRate`] is the ~10 s windowed
+//!   throughput gauge that supplements the lifetime-average
+//!   `Snapshot::throughput`.
+//!
+//! Hard requirement honoured throughout: with tracing sampled out and
+//! profiling off, the hot path pays only a branch (no `Instant::now`, no
+//! locks, no allocation).
+
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use profile::{LayerStats, PlanProfile};
+pub use registry::{Counter, Gauge, Registry, WindowedRate};
+pub use trace::{SpanKind, Trace, TraceRing};

@@ -1,0 +1,265 @@
+//! Per-layer kernel profiling for compiled execution plans: the runtime
+//! twin of the paper's Fig. 7 layer breakdown.
+//!
+//! When [`PlanOptions::profile`](crate::exec::PlanOptions) is set,
+//! `ExecPlan::run_q` records one sample per layer per batch into the
+//! plan's [`PlanProfile`]: wall time (into the shared log2-bucket
+//! [`Histogram`]), which kernel family executed (and whether the
+//! activation-skip mask was live), how many dead activation columns the
+//! mask removed, and the effective nnz the kernel actually visited
+//! (exact — counted against the mask for sparse kernels).  Profiling off
+//! costs the hot path one branch per layer; profiling on adds an
+//! `Instant` pair plus an O(nnz) column scan per sparse layer, which is
+//! a small constant fraction of the kernel's own O(nnz · batch) work.
+//!
+//! Plans cloned for the pool (`clone_shared`) each carry their own
+//! recorder; [`PlanProfile::merge`] folds per-shard profiles into one
+//! report.
+
+use crate::exec::KernelKind;
+use crate::util::stats::Histogram;
+
+/// Accumulated per-layer statistics.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// Kernel family the layer compiled to.
+    pub kernel: KernelKind,
+    /// Output neurons of the layer.
+    pub out_dim: usize,
+    /// Batches executed through this layer.
+    pub runs: u64,
+    /// Total samples (sum of batch sizes) executed.
+    pub items: u64,
+    /// Runs where the activation-skip mask was applied.
+    pub masked_runs: u64,
+    /// Dead activation columns skipped by the mask, summed over runs.
+    pub cols_skipped: u64,
+    /// Input columns seen, summed over runs (denominator for skip rate).
+    pub cols_total: u64,
+    /// Weights the kernel actually visited, summed over runs (for sparse
+    /// kernels under a mask this is the exact post-mask count).
+    pub eff_nnz: u64,
+    /// Per-run wall time (ns).
+    pub hist: Histogram,
+}
+
+impl LayerStats {
+    fn new(kernel: KernelKind, out_dim: usize) -> Self {
+        LayerStats {
+            kernel,
+            out_dim,
+            runs: 0,
+            items: 0,
+            masked_runs: 0,
+            cols_skipped: 0,
+            cols_total: 0,
+            eff_nnz: 0,
+            hist: Histogram::new(),
+        }
+    }
+
+    /// Mean effective nnz per run (0 when never run).
+    pub fn mean_nnz(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.eff_nnz as f64 / self.runs as f64
+        }
+    }
+
+    /// Fraction of input columns skipped by the activation mask.
+    pub fn skip_frac(&self) -> f64 {
+        if self.cols_total == 0 {
+            0.0
+        } else {
+            self.cols_skipped as f64 / self.cols_total as f64
+        }
+    }
+
+    /// Kernel family label, `+mask` when any run used the skip mask.
+    pub fn kernel_label(&self) -> String {
+        let base = match self.kernel {
+            KernelKind::DenseQ => "denseq",
+            KernelKind::SparseQ => "sparseq",
+            KernelKind::CodebookQ => "codebookq",
+            KernelKind::DenseF32 => "densef32",
+        };
+        if self.masked_runs > 0 {
+            format!("{base}+mask")
+        } else {
+            base.to_string()
+        }
+    }
+}
+
+/// Per-layer profile carried by a compiled plan (one recorder per plan
+/// clone; merge across shards for a pool-wide view).
+#[derive(Debug, Clone)]
+pub struct PlanProfile {
+    pub layers: Vec<LayerStats>,
+}
+
+impl PlanProfile {
+    /// One slot per layer, keyed by the plan's compiled kernel choices.
+    pub fn new(layers: impl IntoIterator<Item = (KernelKind, usize)>) -> Self {
+        PlanProfile {
+            layers: layers
+                .into_iter()
+                .map(|(k, d)| LayerStats::new(k, d))
+                .collect(),
+        }
+    }
+
+    /// Record one batch execution of layer `j`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        j: usize,
+        wall_ns: u64,
+        items: usize,
+        masked: bool,
+        cols_skipped: usize,
+        cols_total: usize,
+        eff_nnz: usize,
+    ) {
+        let l = &mut self.layers[j];
+        l.runs += 1;
+        l.items += items as u64;
+        if masked {
+            l.masked_runs += 1;
+        }
+        l.cols_skipped += cols_skipped as u64;
+        l.cols_total += cols_total as u64;
+        l.eff_nnz += eff_nnz as u64;
+        l.hist.record(wall_ns);
+    }
+
+    /// Fold another plan clone's profile into this one (same compiled
+    /// plan, so the layer lists must line up).
+    pub fn merge(&mut self, other: &PlanProfile) {
+        assert_eq!(
+            self.layers.len(),
+            other.layers.len(),
+            "merging profiles of different plans"
+        );
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.runs += b.runs;
+            a.items += b.items;
+            a.masked_runs += b.masked_runs;
+            a.cols_skipped += b.cols_skipped;
+            a.cols_total += b.cols_total;
+            a.eff_nnz += b.eff_nnz;
+            a.hist.merge(&b.hist);
+        }
+    }
+
+    /// Total batches recorded (any layer counts; layers run in lockstep
+    /// so layer 0's count is the batch count).
+    pub fn batches(&self) -> u64 {
+        self.layers.first().map(|l| l.runs).unwrap_or(0)
+    }
+
+    /// Sum of per-layer mean wall times (ns): the mean per-batch forward
+    /// cost attributed layer by layer.
+    pub fn total_mean_ns(&self) -> f64 {
+        self.layers.iter().map(|l| l.hist.mean_ns()).sum()
+    }
+
+    /// Paper-style per-layer breakdown table (Fig. 7 shape): time share,
+    /// kernel family, effective nnz, activation-skip rate.
+    pub fn render(&self, title: &str) -> String {
+        let total = self.total_mean_ns().max(1e-9);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{title} — {} batches\n{:<6} {:<14} {:>8} {:>12} {:>12} {:>7} {:>12} {:>7}\n",
+            self.batches(),
+            "layer",
+            "kernel",
+            "out",
+            "mean_ms",
+            "p95_ms",
+            "share",
+            "nnz/run",
+            "skip"
+        ));
+        for (j, l) in self.layers.iter().enumerate() {
+            let mean_ms = l.hist.mean_ns() / 1e6;
+            let p95_ms = l.hist.percentile_ns(0.95) as f64 / 1e6;
+            out.push_str(&format!(
+                "{:<6} {:<14} {:>8} {:>12.4} {:>12.4} {:>6.1}% {:>12.0} {:>6.1}%\n",
+                j,
+                l.kernel_label(),
+                l.out_dim,
+                mean_ms,
+                p95_ms,
+                100.0 * l.hist.mean_ns() / total,
+                l.mean_nnz(),
+                100.0 * l.skip_frac(),
+            ));
+        }
+        out.push_str(&format!(
+            "total mean per-batch: {:.4} ms\n",
+            self.total_mean_ns() / 1e6
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_layer() -> PlanProfile {
+        PlanProfile::new([(KernelKind::DenseQ, 64), (KernelKind::SparseQ, 10)])
+    }
+
+    #[test]
+    fn record_accumulates_per_layer() {
+        let mut p = two_layer();
+        p.record(0, 1_000, 25, false, 0, 128, 8192);
+        p.record(0, 3_000, 25, false, 0, 128, 8192);
+        p.record(1, 500, 25, true, 32, 64, 120);
+        assert_eq!(p.batches(), 2);
+        assert_eq!(p.layers[0].runs, 2);
+        assert_eq!(p.layers[0].items, 50);
+        assert_eq!(p.layers[0].masked_runs, 0);
+        assert_eq!(p.layers[1].masked_runs, 1);
+        assert!((p.layers[1].skip_frac() - 0.5).abs() < 1e-12);
+        assert!((p.layers[0].mean_nnz() - 8192.0).abs() < 1e-9);
+        assert!(p.total_mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn merge_folds_clone_profiles() {
+        let mut a = two_layer();
+        let mut b = two_layer();
+        a.record(0, 1_000, 1, false, 0, 8, 64);
+        a.record(1, 1_000, 1, false, 0, 8, 64);
+        b.record(0, 2_000, 2, true, 4, 8, 32);
+        b.record(1, 2_000, 2, false, 0, 8, 64);
+        a.merge(&b);
+        assert_eq!(a.batches(), 2);
+        assert_eq!(a.layers[0].items, 3);
+        assert_eq!(a.layers[0].masked_runs, 1);
+        assert_eq!(a.layers[0].eff_nnz, 96);
+    }
+
+    #[test]
+    fn render_lists_every_layer_and_kernel() {
+        let mut p = two_layer();
+        p.record(0, 1_000, 25, false, 0, 128, 8192);
+        p.record(1, 500, 25, true, 32, 64, 120);
+        let s = p.render("profile");
+        assert!(s.contains("denseq"), "{s}");
+        assert!(s.contains("sparseq+mask"), "{s}");
+        assert!(s.contains("total mean per-batch"), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "different plans")]
+    fn merge_rejects_mismatched_layers() {
+        let mut a = two_layer();
+        let b = PlanProfile::new([(KernelKind::DenseQ, 64)]);
+        a.merge(&b);
+    }
+}

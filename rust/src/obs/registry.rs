@@ -1,0 +1,353 @@
+//! Central metrics registry: named atomic counters and gauges plus the
+//! shared log2-bucket [`Histogram`], exported as Prometheus-style text
+//! and as JSON.
+//!
+//! The serving targets keep their existing one-lock-per-batch metric
+//! structs on the hot path and *publish* into a registry pull-style at
+//! export time (`STATS PROM` / `STATS JSON` on the wire) — the same
+//! collector model Prometheus exporters use, which keeps the absorb-the-
+//! metrics goal without adding a second hot-path synchronization point.
+//! Counters/gauges created here are also usable push-style (atomic
+//! increments) for code that has no snapshot struct, e.g. trace-ring
+//! accounting.
+//!
+//! [`WindowedRate`] is the ~10 s windowed throughput gauge: a ring of
+//! per-second buckets, so the reported rate tracks current load instead
+//! of the lifetime average that goes stale on long-running servers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+/// Monotonic atomic counter (also settable absolutely for pull-style
+/// publication from an existing snapshot).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Atomic f64 gauge (bit-cast storage).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 as a JSON-safe number (JSON has no NaN/Inf).
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Named metrics in one flat namespace, get-or-create on first use.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Mutex<Histogram>>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.counters.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.gauges.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Mutex<Histogram>> {
+        let mut g = self.hists.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Pull-style publication: overwrite the named counter.
+    pub fn set_counter(&self, name: &str, v: u64) {
+        self.counter(name).set(v);
+    }
+
+    /// Pull-style publication: overwrite the named gauge.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauge(name).set(v);
+    }
+
+    /// Replace the named histogram with a snapshot copy.
+    pub fn set_histogram(&self, name: &str, h: &Histogram) {
+        *self.histogram(name).lock().unwrap() = h.clone();
+    }
+
+    /// Prometheus/OpenMetrics-style text exposition, `# EOF` terminated
+    /// (the terminator doubles as the end-of-reply marker on the line
+    /// protocol).  Histograms export count/mean/percentiles as gauges.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let v = g.get();
+            let v = if v.is_finite() { v } else { 0.0 };
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let h = h.lock().unwrap();
+            out.push_str(&format!("# TYPE {name}_count counter\n{name}_count {}\n", h.count()));
+            out.push_str(&format!(
+                "# TYPE {name}_mean_ns gauge\n{name}_mean_ns {}\n",
+                h.mean_ns()
+            ));
+            for (q, label) in [(0.5, "p50"), (0.95, "p95"), (0.99, "p99")] {
+                out.push_str(&format!(
+                    "# TYPE {name}_{label}_ns gauge\n{name}_{label}_ns {}\n",
+                    h.percentile_ns(q)
+                ));
+            }
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+
+    /// Single-line JSON object mirroring the Prometheus exposition.
+    pub fn render_json(&self) -> String {
+        let counters: Vec<String> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, c)| format!("\"{}\":{}", json_escape(n), c.get()))
+            .collect();
+        let gauges: Vec<String> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, g)| format!("\"{}\":{}", json_escape(n), json_f64(g.get())))
+            .collect();
+        let hists: Vec<String> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, h)| {
+                let h = h.lock().unwrap();
+                format!(
+                    "\"{}\":{{\"count\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{}}}",
+                    json_escape(n),
+                    h.count(),
+                    json_f64(h.mean_ns()),
+                    h.percentile_ns(0.5),
+                    h.percentile_ns(0.95),
+                    h.percentile_ns(0.99),
+                )
+            })
+            .collect();
+        format!(
+            "{{\"counters\":{{{}}},\"gauges\":{{{}}},\"histograms\":{{{}}}}}",
+            counters.join(","),
+            gauges.join(","),
+            hists.join(",")
+        )
+    }
+}
+
+/// Seconds covered by the windowed throughput gauge.
+pub const RATE_WINDOW_SECS: usize = 10;
+
+#[derive(Debug)]
+struct RateInner {
+    /// Which absolute second (since `started`) each bucket last counted.
+    stamps: [u64; RATE_WINDOW_SECS + 1],
+    counts: [u64; RATE_WINDOW_SECS + 1],
+}
+
+/// Windowed event rate: a ring of per-second buckets covering the last
+/// ~[`RATE_WINDOW_SECS`] seconds.  One tiny mutex'd array update per
+/// event; reads sum the still-fresh buckets.
+#[derive(Debug)]
+pub struct WindowedRate {
+    started: Instant,
+    inner: Mutex<RateInner>,
+}
+
+impl Default for WindowedRate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WindowedRate {
+    pub fn new() -> Self {
+        WindowedRate {
+            started: Instant::now(),
+            inner: Mutex::new(RateInner {
+                stamps: [u64::MAX; RATE_WINDOW_SECS + 1],
+                counts: [0; RATE_WINDOW_SECS + 1],
+            }),
+        }
+    }
+
+    pub fn record(&self) {
+        self.record_n(1);
+    }
+
+    pub fn record_n(&self, n: u64) {
+        let s = self.started.elapsed().as_secs();
+        let i = (s as usize) % (RATE_WINDOW_SECS + 1);
+        let mut g = self.inner.lock().unwrap();
+        if g.stamps[i] != s {
+            g.stamps[i] = s;
+            g.counts[i] = 0;
+        }
+        g.counts[i] += n;
+    }
+
+    /// Events per second over the last window.  Early in a process's
+    /// life the denominator is the (shorter) elapsed time, so the gauge
+    /// agrees with the lifetime average until a full window has passed.
+    pub fn per_second(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let s = self.started.elapsed().as_secs();
+        let g = self.inner.lock().unwrap();
+        let mut total = 0u64;
+        for i in 0..RATE_WINDOW_SECS + 1 {
+            let stamp = g.stamps[i];
+            if stamp <= s && s - stamp < RATE_WINDOW_SECS as u64 {
+                total += g.counts[i];
+            }
+        }
+        total as f64 / elapsed.min(RATE_WINDOW_SECS as f64).max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let r = Registry::new();
+        r.counter("zdnn_requests_total").add(3);
+        r.counter("zdnn_requests_total").inc();
+        assert_eq!(r.counter("zdnn_requests_total").get(), 4);
+        r.set_gauge("zdnn_occupancy", 0.75);
+        assert!((r.gauge("zdnn_occupancy").get() - 0.75).abs() < 1e-12);
+        r.set_counter("zdnn_requests_total", 10);
+        assert_eq!(r.counter("zdnn_requests_total").get(), 10);
+    }
+
+    #[test]
+    fn prometheus_render_has_types_and_eof() {
+        let r = Registry::new();
+        r.counter("zdnn_requests_total").add(2);
+        r.set_gauge("zdnn_throughput", 123.5);
+        let mut h = Histogram::new();
+        h.record(1_000);
+        h.record(2_000);
+        r.set_histogram("zdnn_latency", &h);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE zdnn_requests_total counter"), "{text}");
+        assert!(text.contains("zdnn_requests_total 2"), "{text}");
+        assert!(text.contains("zdnn_throughput 123.5"), "{text}");
+        assert!(text.contains("zdnn_latency_count 2"), "{text}");
+        assert!(text.contains("zdnn_latency_p99_ns"), "{text}");
+        assert!(text.ends_with("# EOF\n"), "{text}");
+    }
+
+    #[test]
+    fn json_render_parses_back() {
+        let r = Registry::new();
+        r.counter("a_total").add(7);
+        r.set_gauge("b", 1.25);
+        let mut h = Histogram::new();
+        h.record(4_096);
+        r.set_histogram("lat", &h);
+        let text = r.render_json();
+        let v = crate::config::json::parse(&text).expect("valid JSON");
+        let counters = v.get("counters").expect("counters");
+        assert_eq!(
+            counters.get("a_total").and_then(|x| x.as_f64().ok()),
+            Some(7.0)
+        );
+        let gauges = v.get("gauges").expect("gauges");
+        assert_eq!(gauges.get("b").and_then(|x| x.as_f64().ok()), Some(1.25));
+        let lat = v.get("histograms").and_then(|h| h.get("lat")).expect("lat");
+        assert_eq!(lat.get("count").and_then(|x| x.as_f64().ok()), Some(1.0));
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(2.5), "2.5");
+    }
+
+    #[test]
+    fn windowed_rate_counts_recent_events() {
+        let w = WindowedRate::new();
+        for _ in 0..50 {
+            w.record();
+        }
+        w.record_n(50);
+        // sub-second process lifetime: rate ~ lifetime average, > 0
+        let r = w.per_second();
+        assert!(r > 0.0, "rate {r}");
+    }
+
+    #[test]
+    fn windowed_rate_empty_is_zero() {
+        let w = WindowedRate::new();
+        assert_eq!(w.per_second(), 0.0);
+    }
+}

@@ -1,0 +1,400 @@
+//! Request tracing: a fixed-size, lock-light ring of span timelines.
+//!
+//! Every sampled request id owns one slot for its lifetime in the ring;
+//! the slot is claimed at the `Submitted` stamp and carries nanosecond
+//! offsets (from the ring's epoch) for each subsequent span.  Slot
+//! assignment is arithmetic — sampled id `k` lives in slot
+//! `(k / sample) % capacity` — so stamping never takes a global lock or
+//! allocates: the only synchronization is the per-slot mutex, and a
+//! request that is not sampled pays a single integer test.
+//!
+//! Ring semantics: when more than `capacity` sampled requests are in
+//! flight the oldest trace is overwritten (its slot is reclaimed by the
+//! newer id); late stamps for an evicted trace are counted in
+//! `dropped_late` and otherwise ignored, so slots never leak and a slot
+//! always holds a self-consistent single-request timeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::request::RequestId;
+
+/// Span timeline points, in causal order.  `Submitted` claims the ring
+/// slot; every later stamp requires the slot to still belong to the id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Request accepted by `enqueue` (id assigned, slot reserved).
+    Submitted = 0,
+    /// Request handed to the engine/shard channel.
+    Enqueued = 1,
+    /// The batcher formed a batch containing the request.
+    BatchFormed = 2,
+    /// Backend execution of the batch began.
+    ExecuteStart = 3,
+    /// Backend execution of the batch finished (ok or error).
+    ExecuteEnd = 4,
+    /// Reply handed to the completion channel (overwritten with the TCP
+    /// write time by the frontend demux when the request came in over
+    /// the wire — later, so monotonicity is preserved).
+    ReplySent = 5,
+}
+
+/// Number of distinct span kinds (array sizing).
+pub const SPAN_COUNT: usize = 6;
+
+impl SpanKind {
+    pub const ALL: [SpanKind; SPAN_COUNT] = [
+        SpanKind::Submitted,
+        SpanKind::Enqueued,
+        SpanKind::BatchFormed,
+        SpanKind::ExecuteStart,
+        SpanKind::ExecuteEnd,
+        SpanKind::ReplySent,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Submitted => "submitted",
+            SpanKind::Enqueued => "enqueued",
+            SpanKind::BatchFormed => "batch_formed",
+            SpanKind::ExecuteStart => "execute_start",
+            SpanKind::ExecuteEnd => "execute_end",
+            SpanKind::ReplySent => "reply_sent",
+        }
+    }
+}
+
+/// One request's recorded timeline: ns offsets from the ring epoch,
+/// `None` for spans not (yet) reached.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub id: RequestId,
+    pub spans: [Option<u64>; SPAN_COUNT],
+}
+
+impl Trace {
+    pub fn span(&self, kind: SpanKind) -> Option<u64> {
+        self.spans[kind as usize]
+    }
+
+    /// A trace is complete once its reply left the executor.
+    pub fn is_complete(&self) -> bool {
+        self.span(SpanKind::ReplySent).is_some()
+    }
+
+    /// Present spans are non-decreasing in causal order (the invariant
+    /// the trace-completeness property test asserts).
+    pub fn monotonic(&self) -> bool {
+        let mut last = 0u64;
+        for s in self.spans.iter().flatten() {
+            if *s < last {
+                return false;
+            }
+            last = *s;
+        }
+        true
+    }
+
+    /// Single-line wire form: offsets in µs relative to `submitted`
+    /// (absolute epoch offset carried as `t0_ns` so `TRACE LAST` lines
+    /// stay comparable across requests); missing spans render as `-`.
+    pub fn render(&self) -> String {
+        let t0 = self.span(SpanKind::Submitted).unwrap_or(0);
+        let mut out = format!("TRACE #{} t0_ns={t0}", self.id);
+        for kind in SpanKind::ALL {
+            match self.span(kind) {
+                Some(ns) => {
+                    let us = ns.saturating_sub(t0) as f64 / 1e3;
+                    out.push_str(&format!(" {}_us={us:.1}", kind.as_str()));
+                }
+                None => out.push_str(&format!(" {}_us=-", kind.as_str())),
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    id: RequestId,
+    live: bool,
+    spans: [Option<u64>; SPAN_COUNT],
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot {
+            id: 0,
+            live: false,
+            spans: [None; SPAN_COUNT],
+        }
+    }
+}
+
+/// Fixed-size lock-light trace ring with a sampling gate.
+///
+/// `sample == 0` disables tracing entirely; `sample == n` records every
+/// n-th request id (ids are monotonic per serving target, so this is a
+/// deterministic 1-in-n sample).  Stamping an unsampled id is a single
+/// branch — no time stamp is even taken.
+#[derive(Debug)]
+pub struct TraceRing {
+    epoch: Instant,
+    sample: u64,
+    slots: Vec<Mutex<Slot>>,
+    recorded: AtomicU64,
+    evicted: AtomicU64,
+    dropped_late: AtomicU64,
+}
+
+/// Default ring capacity (traces retained) for serving stacks.
+pub const TRACE_RING_CAPACITY: usize = 1024;
+
+impl TraceRing {
+    pub fn new(capacity: usize, sample: u64) -> Self {
+        let cap = if sample == 0 { 0 } else { capacity.max(1) };
+        TraceRing {
+            epoch: Instant::now(),
+            sample,
+            slots: (0..cap).map(|_| Mutex::new(Slot::empty())).collect(),
+            recorded: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            dropped_late: AtomicU64::new(0),
+        }
+    }
+
+    /// Tracing off: every stamp is a no-op branch.
+    pub fn disabled() -> Self {
+        Self::new(0, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sample != 0
+    }
+
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Traces ever claimed (sampled submissions).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Live traces overwritten by a newer id before completing a query.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Stamps that arrived after their trace's slot was reclaimed.
+    pub fn dropped_late(&self) -> u64 {
+        self.dropped_late.load(Ordering::Relaxed)
+    }
+
+    /// Slots currently holding a trace.
+    pub fn live_slots(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.lock().map(|g| g.live).unwrap_or(false))
+            .count()
+    }
+
+    #[inline]
+    fn sampled(&self, id: RequestId) -> bool {
+        self.sample != 0 && id % self.sample == 0
+    }
+
+    #[inline]
+    fn slot_of(&self, id: RequestId) -> usize {
+        ((id / self.sample) % self.slots.len() as u64) as usize
+    }
+
+    /// Record `kind` for `id` now.  `Submitted` claims (or reclaims) the
+    /// id's slot; other kinds only land while the slot still belongs to
+    /// the id, so an evicted trace cannot corrupt its successor.
+    pub fn stamp(&self, id: RequestId, kind: SpanKind) {
+        if !self.sampled(id) {
+            return;
+        }
+        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        let Ok(mut slot) = self.slots[self.slot_of(id)].lock() else {
+            return;
+        };
+        if slot.live && slot.id == id {
+            slot.spans[kind as usize] = Some(now_ns);
+        } else if kind == SpanKind::Submitted {
+            if slot.live {
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            *slot = Slot::empty();
+            slot.id = id;
+            slot.live = true;
+            slot.spans[SpanKind::Submitted as usize] = Some(now_ns);
+            self.recorded.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.dropped_late.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Free `id`'s slot if it still holds `id` (used when `enqueue` rolls
+    /// back a submission after stamping, so failed submissions do not
+    /// linger as eternally-incomplete traces).
+    pub fn discard(&self, id: RequestId) {
+        if !self.sampled(id) {
+            return;
+        }
+        if let Ok(mut slot) = self.slots[self.slot_of(id)].lock() {
+            if slot.live && slot.id == id {
+                *slot = Slot::empty();
+                self.recorded.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Snapshot the trace for `id`, if sampled and not yet evicted.
+    pub fn get(&self, id: RequestId) -> Option<Trace> {
+        if !self.sampled(id) {
+            return None;
+        }
+        let slot = self.slots[self.slot_of(id)].lock().ok()?;
+        if slot.live && slot.id == id {
+            Some(Trace {
+                id,
+                spans: slot.spans,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// The `n` most recently submitted live traces, newest first.
+    pub fn last(&self, n: usize) -> Vec<Trace> {
+        let mut all: Vec<Trace> = self
+            .slots
+            .iter()
+            .filter_map(|s| {
+                let g = s.lock().ok()?;
+                if g.live {
+                    Some(Trace {
+                        id: g.id,
+                        spans: g.spans,
+                    })
+                } else {
+                    None
+                }
+            })
+            .collect();
+        all.sort_by(|a, b| b.span(SpanKind::Submitted).cmp(&a.span(SpanKind::Submitted)));
+        all.truncate(n);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let r = TraceRing::disabled();
+        assert!(!r.enabled());
+        r.stamp(0, SpanKind::Submitted);
+        r.stamp(0, SpanKind::ReplySent);
+        assert_eq!(r.recorded(), 0);
+        assert!(r.get(0).is_none());
+        assert!(r.last(10).is_empty());
+    }
+
+    #[test]
+    fn full_timeline_round_trips() {
+        let r = TraceRing::new(8, 1);
+        for kind in SpanKind::ALL {
+            r.stamp(3, kind);
+        }
+        let t = r.get(3).expect("trace recorded");
+        assert!(t.is_complete());
+        assert!(t.monotonic());
+        assert_eq!(r.recorded(), 1);
+        assert_eq!(r.live_slots(), 1);
+        let line = t.render();
+        assert!(line.starts_with("TRACE #3 t0_ns="), "{line}");
+        for kind in SpanKind::ALL {
+            assert!(line.contains(&format!(" {}_us=", kind.as_str())), "{line}");
+        }
+        assert!(!line.contains("_us=-"), "complete trace has no holes: {line}");
+    }
+
+    #[test]
+    fn partial_trace_renders_holes() {
+        let r = TraceRing::new(8, 1);
+        r.stamp(1, SpanKind::Submitted);
+        r.stamp(1, SpanKind::Enqueued);
+        let t = r.get(1).unwrap();
+        assert!(!t.is_complete());
+        assert!(t.render().contains("reply_sent_us=-"));
+    }
+
+    #[test]
+    fn sampling_gate_skips_unsampled_ids() {
+        let r = TraceRing::new(8, 4);
+        for id in 0..8u64 {
+            r.stamp(id, SpanKind::Submitted);
+        }
+        assert_eq!(r.recorded(), 2); // ids 0 and 4
+        assert!(r.get(0).is_some());
+        assert!(r.get(1).is_none());
+        assert!(r.get(4).is_some());
+    }
+
+    #[test]
+    fn eviction_reclaims_slot_and_drops_late_stamps() {
+        let r = TraceRing::new(2, 1); // ids 0 and 2 share slot 0
+        r.stamp(0, SpanKind::Submitted);
+        r.stamp(2, SpanKind::Submitted); // evicts #0
+        assert_eq!(r.evicted(), 1);
+        assert!(r.get(0).is_none());
+        r.stamp(0, SpanKind::ReplySent); // late stamp for evicted #0
+        assert_eq!(r.dropped_late(), 1);
+        let t2 = r.get(2).expect("#2 owns the slot");
+        assert!(t2.span(SpanKind::ReplySent).is_none(), "late stamp must not corrupt #2");
+        assert_eq!(r.live_slots(), 1, "no leaked slots");
+    }
+
+    #[test]
+    fn discard_frees_slot_on_rollback() {
+        let r = TraceRing::new(4, 1);
+        r.stamp(5, SpanKind::Submitted);
+        assert_eq!(r.recorded(), 1);
+        r.discard(5);
+        assert!(r.get(5).is_none());
+        assert_eq!(r.recorded(), 0);
+        assert_eq!(r.live_slots(), 0);
+    }
+
+    #[test]
+    fn last_returns_newest_first() {
+        let r = TraceRing::new(16, 1);
+        for id in 0..5u64 {
+            r.stamp(id, SpanKind::Submitted);
+        }
+        let last = r.last(3);
+        assert_eq!(last.len(), 3);
+        assert_eq!(last[0].id, 4);
+        assert_eq!(last[1].id, 3);
+        assert_eq!(last[2].id, 2);
+    }
+
+    #[test]
+    fn monotonic_detects_out_of_order() {
+        let t = Trace {
+            id: 1,
+            spans: [Some(10), Some(5), None, None, None, None],
+        };
+        assert!(!t.monotonic());
+    }
+}

@@ -217,6 +217,12 @@ impl BatchView for PrioBatch {
         PrioBatch::padded_input(self, s_in)
     }
 
+    fn each_id(&self, f: &mut dyn FnMut(crate::coordinator::request::RequestId)) {
+        for (r, _) in &self.requests {
+            f(r.id);
+        }
+    }
+
     fn into_requests(self) -> Vec<(Request, Priority)> {
         self.requests
     }

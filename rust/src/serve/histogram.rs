@@ -10,6 +10,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::registry::WindowedRate;
 use crate::util::stats::Histogram;
 
 use super::dispatch::Priority;
@@ -86,6 +87,8 @@ struct Inner {
 #[derive(Debug)]
 pub struct ShardMetrics {
     inner: Mutex<Inner>,
+    /// Per-second completion buckets behind `ShardSnapshot::throughput_10s`.
+    window: WindowedRate,
     started: Instant,
 }
 
@@ -108,8 +111,11 @@ pub struct ShardSnapshot {
     pub promoted: u64,
     /// Fraction of batch slots carrying real samples.
     pub occupancy: f64,
-    /// Completed requests per wall second since start.
+    /// Completed requests per wall second since start (lifetime average).
     pub throughput: f64,
+    /// Completed requests per second over the last ~10 s window (summed
+    /// across shards in the merged view).
+    pub throughput_10s: f64,
     pub mean_latency_s: f64,
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
@@ -125,6 +131,7 @@ impl ShardMetrics {
     pub fn new() -> Self {
         Self {
             inner: Mutex::new(Inner::default()),
+            window: WindowedRate::new(),
             started: Instant::now(),
         }
     }
@@ -144,6 +151,7 @@ impl ShardMetrics {
     }
 
     pub fn record_request(&self, priority: Priority, queue_s: f64, total_s: f64) {
+        self.window.record();
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
         g.queue.record_s(queue_s);
@@ -156,7 +164,7 @@ impl ShardMetrics {
 
     pub fn snapshot(&self) -> ShardSnapshot {
         let g = self.inner.lock().unwrap();
-        Self::render(&g, self.started.elapsed().as_secs_f64())
+        Self::render(&g, self.started.elapsed().as_secs_f64(), self.window.per_second())
     }
 
     /// Merge many shards into one aggregate snapshot (histograms are
@@ -164,6 +172,7 @@ impl ShardMetrics {
     pub fn merged<'a, I: IntoIterator<Item = &'a ShardMetrics>>(all: I) -> ShardSnapshot {
         let mut acc = Inner::default();
         let mut elapsed: f64 = 0.0;
+        let mut windowed: f64 = 0.0;
         for m in all {
             let g = m.inner.lock().unwrap();
             acc.latency.merge(&g.latency);
@@ -177,11 +186,12 @@ impl ShardMetrics {
             acc.padded_slots += g.padded_slots;
             acc.promoted += g.promoted;
             elapsed = elapsed.max(m.started.elapsed().as_secs_f64());
+            windowed += m.window.per_second();
         }
-        Self::render(&acc, elapsed)
+        Self::render(&acc, elapsed, windowed)
     }
 
-    fn render(g: &Inner, elapsed_s: f64) -> ShardSnapshot {
+    fn render(g: &Inner, elapsed_s: f64, throughput_10s: f64) -> ShardSnapshot {
         let slots = g.occupied_slots + g.padded_slots;
         ShardSnapshot {
             requests: g.requests,
@@ -196,6 +206,7 @@ impl ShardMetrics {
                 g.occupied_slots as f64 / slots as f64
             },
             throughput: g.requests as f64 / elapsed_s.max(1e-9),
+            throughput_10s,
             mean_latency_s: g.latency.mean_s(),
             p50_latency_s: g.latency.p50_s(),
             p95_latency_s: g.latency.p95_s(),
@@ -248,6 +259,7 @@ mod tests {
         assert_eq!(s.bulk_requests, 2);
         assert!(s.bulk_p99_s > s.interactive_p99_s);
         assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);
+        assert!(s.throughput_10s > 0.0, "fresh completions land in the window");
     }
 
     #[test]
@@ -268,5 +280,6 @@ mod tests {
         assert_eq!(s.bulk_requests, 2);
         // merged p99 must be at least the larger shard's sample bucket
         assert!(s.p99_latency_s >= 4e-3);
+        assert!(s.throughput_10s > 0.0);
     }
 }

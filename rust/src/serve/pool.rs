@@ -25,6 +25,8 @@ use crate::coordinator::engine::EngineFactory;
 use crate::coordinator::net::{StatsReport, SubmitTarget};
 use crate::coordinator::request::{Reply, Request, RequestId, Response};
 use crate::coordinator::server::{Server, ServerHandle};
+use crate::obs::registry::Registry;
+use crate::obs::trace::{SpanKind, TraceRing, TRACE_RING_CAPACITY};
 
 /// The pool starter (mirrors [`Server`]).
 pub struct ServePool;
@@ -52,6 +54,11 @@ pub struct PoolHandle {
     shutting_down: AtomicBool,
     /// Input width every shard's engine expects (validated at submit).
     pub input_width: usize,
+    /// Request-trace ring shared with every shard (Submitted/Enqueued are
+    /// stamped here at submission; the shards stamp the execution spans).
+    trace: Arc<TraceRing>,
+    /// Export-time metrics registry backing `STATS PROM` / `STATS JSON`.
+    registry: Arc<Registry>,
 }
 
 /// Pool-wide view: the merged aggregate plus each shard's snapshot.
@@ -84,6 +91,7 @@ impl ServePool {
             promote_after: Duration::from_micros(config.bulk_promote_us),
         };
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let trace = Arc::new(TraceRing::new(TRACE_RING_CAPACITY, config.trace_sample));
         let mut shards = Vec::with_capacity(workers);
         for i in 0..workers {
             let (tx, rx) = mpsc::channel::<ShardCommand>();
@@ -94,9 +102,10 @@ impl ServePool {
             let m = metrics.clone();
             let d = depth.clone();
             let fl = in_flight.clone();
+            let tr = trace.clone();
             let thread = thread::Builder::new()
                 .name(format!("zdnn-shard-{i}"))
-                .spawn(move || shard_loop(rx, f, plan, shard_cfg, m, d, fl))?;
+                .spawn(move || shard_loop(rx, f, plan, shard_cfg, m, d, fl, tr))?;
             shards.push(Shard {
                 tx,
                 depth,
@@ -115,6 +124,8 @@ impl ServePool {
             rejected: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             input_width,
+            trace,
+            registry: Arc::new(Registry::new()),
         })
     }
 }
@@ -205,6 +216,7 @@ impl PoolHandle {
         let shard = self.pick_shard();
         self.shards[shard].depth.fetch_add(1, Ordering::SeqCst);
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.trace.stamp(id, SpanKind::Submitted);
         let req = Request {
             id,
             input,
@@ -218,8 +230,10 @@ impl PoolHandle {
         {
             self.shards[shard].depth.fetch_sub(1, Ordering::SeqCst);
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.trace.discard(id);
             bail!("shard {shard} thread gone");
         }
+        self.trace.stamp(id, SpanKind::Enqueued);
         Ok(id)
     }
 
@@ -289,8 +303,44 @@ impl SubmitTarget for PoolHandle {
             occupancy: a.occupancy,
             promoted: a.promoted,
             throughput: a.throughput,
+            throughput_10s: a.throughput_10s,
             workers: self.workers(),
         }
+    }
+
+    fn traces(&self) -> Option<Arc<TraceRing>> {
+        Some(self.trace.clone())
+    }
+
+    /// Pull-style export: refresh the registry from the merged snapshot
+    /// (plus per-shard depth/promotion gauges) and render it.
+    fn prometheus(&self) -> String {
+        let snap = self.snapshot();
+        let a = &snap.aggregate;
+        let r = &self.registry;
+        r.set_counter("zdnn_requests_total", a.requests);
+        r.set_counter("zdnn_batches_total", a.batches);
+        r.set_counter("zdnn_promoted_total", a.promoted);
+        r.set_counter("zdnn_rejected_total", snap.rejected);
+        r.set_gauge("zdnn_occupancy", a.occupancy);
+        r.set_gauge("zdnn_throughput", a.throughput);
+        r.set_gauge("zdnn_throughput_10s", a.throughput_10s);
+        r.set_gauge("zdnn_mean_latency_s", a.mean_latency_s);
+        r.set_gauge("zdnn_p99_latency_s", a.p99_latency_s);
+        r.set_gauge("zdnn_in_flight", self.in_flight.load(Ordering::SeqCst) as f64);
+        r.set_gauge("zdnn_workers", self.workers() as f64);
+        for (i, (shard, s)) in self.shards.iter().zip(snap.shards.iter()).enumerate() {
+            r.set_gauge(
+                &format!("zdnn_shard{i}_depth"),
+                shard.depth.load(Ordering::SeqCst) as f64,
+            );
+            r.set_counter(&format!("zdnn_shard{i}_requests_total"), s.requests);
+            r.set_counter(&format!("zdnn_shard{i}_promoted_total"), s.promoted);
+            r.set_gauge(&format!("zdnn_shard{i}_occupancy"), s.occupancy);
+        }
+        r.set_counter("zdnn_traces_recorded_total", self.trace.recorded());
+        r.set_counter("zdnn_traces_evicted_total", self.trace.evicted());
+        r.render_prometheus()
     }
 }
 
@@ -375,6 +425,20 @@ impl SubmitTarget for Serving {
         match self {
             Serving::Single(s) => s.stats(),
             Serving::Pool(p) => p.stats(),
+        }
+    }
+
+    fn traces(&self) -> Option<Arc<TraceRing>> {
+        match self {
+            Serving::Single(s) => s.traces(),
+            Serving::Pool(p) => p.traces(),
+        }
+    }
+
+    fn prometheus(&self) -> String {
+        match self {
+            Serving::Single(s) => s.prometheus(),
+            Serving::Pool(p) => p.prometheus(),
         }
     }
 }

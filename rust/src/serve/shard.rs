@@ -19,6 +19,7 @@ use super::histogram::ShardMetrics;
 use crate::coordinator::engine::EngineFactory;
 use crate::coordinator::executor::{executor_loop, ExecCommand, ExecSink};
 use crate::exec::ExecPlan;
+use crate::obs::trace::TraceRing;
 
 /// Commands flowing from the pool front door to a shard thread: the
 /// generic executor command tagged with the request's priority class.
@@ -39,6 +40,7 @@ pub(crate) struct ShardSink<'a> {
     pub(crate) metrics: &'a ShardMetrics,
     pub(crate) depth: &'a AtomicUsize,
     pub(crate) in_flight: &'a AtomicUsize,
+    pub(crate) trace: &'a TraceRing,
 }
 
 impl ExecSink for ShardSink<'_> {
@@ -56,6 +58,10 @@ impl ExecSink for ShardSink<'_> {
         self.depth.fetch_sub(1, Ordering::SeqCst);
         self.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
+
+    fn trace(&self) -> Option<&TraceRing> {
+        Some(self.trace)
+    }
 }
 
 /// The shard thread body: the shared executor loop over a priority
@@ -70,6 +76,7 @@ pub(crate) fn shard_loop(
     metrics: Arc<ShardMetrics>,
     depth: Arc<AtomicUsize>,
     in_flight: Arc<AtomicUsize>,
+    trace: Arc<TraceRing>,
 ) -> Result<()> {
     let s_in = factory.net.spec.inputs();
     executor_loop(
@@ -83,6 +90,7 @@ pub(crate) fn shard_loop(
             metrics: &*metrics,
             depth: &*depth,
             in_flight: &*in_flight,
+            trace: &*trace,
         },
         s_in,
         "shard",

@@ -215,6 +215,7 @@ impl SubmitTarget for ShuffleTarget {
             occupancy: 0.0,
             promoted: 0,
             throughput: 0.0,
+            throughput_10s: 0.0,
             workers: 1,
         }
     }

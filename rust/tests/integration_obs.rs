@@ -1,0 +1,210 @@
+//! Integration: the PR 7 observability surface over a real TCP socket —
+//! `STATS JSON` / `STATS PROM` exports and `TRACE` queries against the
+//! sharded pool behind the frontend.
+//!
+//! What this locks in:
+//!
+//! * served requests produce complete, monotonically ordered span
+//!   timelines queryable via `TRACE LAST <n>` and `TRACE #<id>`,
+//! * `STATS JSON` round-trips through the crate's own JSON parser with
+//!   the windowed throughput gauge alongside the lifetime one,
+//! * `STATS PROM` frames a Prometheus-style exposition with `# EOF`,
+//! * `trace_sample = 0` disables the ring: queries answer honestly
+//!   (`TRACES 0`, `ERR trace ...`) instead of guessing.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::{EngineFactory, NetFrontend};
+use zynq_dnn::nn::spec::quickstart;
+use zynq_dnn::serve::{start_serving, Serving};
+
+fn start_stack(trace_sample: u64) -> (NetFrontend, Arc<Serving>) {
+    let net = random_qnet(&quickstart(), 0x0B5);
+    let factory = EngineFactory {
+        backend: "native".into(),
+        batch: 2,
+        net,
+        artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    };
+    let cfg = ServerConfig {
+        workers: 2,
+        batch: 2,
+        batch_deadline_us: 300,
+        queue_depth: 1024,
+        trace_sample,
+        ..Default::default()
+    };
+    let serving = Arc::new(start_serving(&cfg, factory).unwrap());
+    let fe = NetFrontend::start("127.0.0.1:0", serving.clone()).unwrap();
+    (fe, serving)
+}
+
+struct Wire {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Wire {
+    fn connect(addr: &std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Wire { reader, writer: stream }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn infer_line(seed: usize) -> String {
+    let vals: Vec<String> = (0..64)
+        .map(|k| format!("{}", ((k * 7 + seed * 13) % 101) as f32 / 101.0 - 0.5))
+        .collect();
+    format!("INFER {}", vals.join(" "))
+}
+
+/// Parse every `<name>_us=<v>` field of a trace line; `-` is an error
+/// here because the requests below all completed before the query.
+fn span_offsets_us(trace_line: &str) -> Vec<(String, f64)> {
+    trace_line
+        .split_whitespace()
+        .filter_map(|tok| tok.split_once("_us="))
+        .map(|(name, v)| {
+            let us: f64 = v.parse().unwrap_or_else(|_| {
+                panic!("span {name} not stamped in {trace_line:?}")
+            });
+            (name.to_string(), us)
+        })
+        .collect()
+}
+
+#[test]
+fn trace_and_stats_round_trip_over_tcp() {
+    let (fe, _serving) = start_stack(1);
+    let mut wire = Wire::connect(&fe.addr());
+
+    let total = 6usize;
+    for i in 0..total {
+        let reply = wire.roundtrip(&infer_line(i));
+        assert!(reply.starts_with("OK "), "lockstep reply: {reply}");
+    }
+
+    // classic STATS grew the windowed gauge, append-only
+    let stats = wire.roundtrip("STATS");
+    assert!(stats.contains("win_throughput="), "{stats}");
+
+    // STATS JSON round-trips through the crate's own parser
+    let json_line = wire.roundtrip("STATS JSON");
+    let json = zynq_dnn::config::json::parse(&json_line).unwrap();
+    let requests = json.get("requests").unwrap().as_f64().unwrap();
+    assert_eq!(requests, total as f64, "{json_line}");
+    assert!(json.get("throughput_10s").is_some(), "{json_line}");
+    assert_eq!(json.get("workers").unwrap().as_f64().unwrap(), 2.0);
+
+    // STATS PROM: read until the `# EOF` frame
+    wire.send("STATS PROM");
+    let mut prom = Vec::new();
+    loop {
+        let line = wire.recv();
+        if line == "# EOF" {
+            break;
+        }
+        prom.push(line);
+    }
+    assert!(
+        prom.iter().any(|l| l.starts_with("zdnn_requests_total ")),
+        "{prom:?}"
+    );
+    assert!(
+        prom.iter().any(|l| l.starts_with("# TYPE zdnn_throughput_10s gauge")),
+        "{prom:?}"
+    );
+    assert!(
+        prom.iter().any(|l| l.starts_with("zdnn_traces_recorded_total ")),
+        "{prom:?}"
+    );
+
+    // TRACE LAST: every line is a complete, ordered timeline
+    wire.send(&format!("TRACE LAST {total}"));
+    let header = wire.recv();
+    let k: usize = header
+        .strip_prefix("TRACES ")
+        .unwrap_or_else(|| panic!("bad header {header:?}"))
+        .parse()
+        .unwrap();
+    assert_eq!(k, total, "ring holds every request (capacity 1024 > {total})");
+    let mut some_id = None;
+    for _ in 0..k {
+        let line = wire.recv();
+        assert!(line.starts_with("TRACE #"), "{line}");
+        let id: u64 = line[7..].split_whitespace().next().unwrap().parse().unwrap();
+        some_id = Some(id);
+        let spans = span_offsets_us(&line);
+        let names: Vec<&str> = spans.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            ["submitted", "enqueued", "batch_formed", "execute_start", "execute_end", "reply_sent"],
+            "{line}"
+        );
+        for w in spans.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1,
+                "spans out of order: {} ({}) before {} ({}) in {line}",
+                w[0].0, w[0].1, w[1].0, w[1].1
+            );
+        }
+    }
+
+    // single-id round trip with an id the server just reported
+    let id = some_id.unwrap();
+    let one = wire.roundtrip(&format!("TRACE #{id}"));
+    assert!(one.starts_with(&format!("TRACE #{id} ")), "{one}");
+
+    // unknown id answers honestly
+    let missing = wire.roundtrip("TRACE #999999");
+    assert!(missing.starts_with("ERR trace #999999"), "{missing}");
+
+    wire.send("QUIT");
+    fe.stop();
+}
+
+#[test]
+fn trace_sample_zero_disables_the_ring() {
+    let (fe, _serving) = start_stack(0);
+    let mut wire = Wire::connect(&fe.addr());
+    let reply = wire.roundtrip(&infer_line(0));
+    assert!(reply.starts_with("OK "), "{reply}");
+
+    wire.send("TRACE LAST 5");
+    assert_eq!(wire.recv(), "TRACES 0");
+    let missing = wire.roundtrip("TRACE #0");
+    assert!(missing.starts_with("ERR trace #0"), "{missing}");
+
+    // exports still work with tracing off
+    let json_line = wire.roundtrip("STATS JSON");
+    assert!(zynq_dnn::config::json::parse(&json_line).is_ok(), "{json_line}");
+
+    wire.send("QUIT");
+    fe.stop();
+}
