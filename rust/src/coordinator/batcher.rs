@@ -16,7 +16,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::executor::{BatchSource, BatchView};
+use crate::coordinator::executor::{shed_queue, BatchSource, BatchView};
 use crate::coordinator::request::Request;
 
 /// A formed batch ready for the engine.
@@ -118,6 +118,12 @@ impl Batcher {
             size: self.batch_size,
         }
     }
+
+    /// Remove and return every pending request whose client deadline has
+    /// passed (server-side shedding); FIFO order of survivors is kept.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        shed_queue(&mut self.pending, now)
+    }
 }
 
 /// The FIFO batch through the generic executor's eyes: no scheduling
@@ -170,6 +176,10 @@ impl BatchSource for Batcher {
     fn flush_next(&mut self, _now: Instant) -> Option<Batch> {
         Batcher::flush_next(self)
     }
+
+    fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        Batcher::shed_expired(self, now)
+    }
 }
 
 #[cfg(test)]
@@ -184,8 +194,35 @@ mod tests {
             id,
             input: vec![id as i32; 4],
             queued_at: at,
+            deadline: None,
             reply: tx,
         }
+    }
+
+    #[test]
+    fn shed_expired_takes_only_passed_deadlines_in_order() {
+        let mut b = Batcher::new(4, Duration::from_secs(60));
+        let now = Instant::now();
+        let later = now + Duration::from_secs(60);
+        let mut expired_a = mk_request(0, now);
+        expired_a.deadline = Some(now);
+        let mut live = mk_request(1, now);
+        live.deadline = Some(later + Duration::from_secs(60));
+        let mut expired_b = mk_request(2, now);
+        expired_b.deadline = Some(now);
+        b.push(expired_a);
+        b.push(live);
+        b.push(expired_b);
+        b.push(mk_request(3, now)); // no deadline: never shed
+        let shed: Vec<u64> = b.shed_expired(later).iter().map(|r| r.id).collect();
+        assert_eq!(shed, vec![0, 2]);
+        assert_eq!(b.pending(), 2);
+        // survivors keep FIFO order
+        let batch = b.flush_next().unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        // nothing expired: the fast path sheds nothing
+        assert!(b.shed_expired(now).is_empty());
     }
 
     #[test]

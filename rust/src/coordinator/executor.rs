@@ -26,13 +26,14 @@
 //! and releases exactly one slot, even when the engine is broken** — a
 //! dead engine must never strand clients or leak backpressure capacity.
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::engine::Engine;
-use super::request::{InferError, Reply, Request, RequestId, Response};
+use super::request::{InferError, Reply, Request, RequestId, Response, SHED_MESSAGE};
 use crate::nn::forward::argmax_rows;
 use crate::obs::trace::{SpanKind, TraceRing};
 use crate::tensor::MatI;
@@ -79,6 +80,33 @@ pub trait BatchSource {
     /// Form one batch regardless of the deadline (drain path); `None`
     /// when nothing is pending.
     fn flush_next(&mut self, now: Instant) -> Option<Self::Batch>;
+    /// Remove and return every queued request whose client deadline
+    /// passed (server-side shedding — executing it would only waste a
+    /// batch slot on a reply the client already gave up on).  Default:
+    /// sources without deadline awareness shed nothing.
+    fn shed_expired(&mut self, _now: Instant) -> Vec<Request> {
+        Vec::new()
+    }
+}
+
+/// Drain every request in `queue` whose deadline has passed (shared by
+/// the FIFO and priority batchers' [`BatchSource::shed_expired`] impls);
+/// survivor order is preserved, and the common nothing-expired case
+/// allocates nothing.
+pub(crate) fn shed_queue(queue: &mut VecDeque<Request>, now: Instant) -> Vec<Request> {
+    if queue.iter().all(|r| r.deadline.map_or(true, |d| d > now)) {
+        return Vec::new();
+    }
+    let mut shed = Vec::new();
+    let mut kept = VecDeque::with_capacity(queue.len());
+    for req in queue.drain(..) {
+        match req.deadline {
+            Some(d) if d <= now => shed.push(req),
+            _ => kept.push_back(req),
+        }
+    }
+    *queue = kept;
+    shed
 }
 
 /// Where execution results land: metrics plus slot accounting.
@@ -87,8 +115,12 @@ pub trait ExecSink {
     fn record_batch(&self, occupancy: usize, size: usize, promoted: usize);
     fn record_request(&self, tag: &Self::Tag, queue_s: f64, total_s: f64);
     /// Release one backpressure slot.  Called exactly once per request,
-    /// whether it got a response or an error reply.
+    /// whether it got a response, an error reply, or was shed.
     fn release_slot(&self);
+    /// One queued request shed because its deadline passed before batch
+    /// formation (`release_slot` is still called separately, exactly
+    /// once).  Default: not counted.
+    fn record_shed(&self) {}
     /// Trace ring the loop stamps batch-formed / execute-start /
     /// execute-end / reply-sent spans into.  Default: no tracing.
     fn trace(&self) -> Option<&TraceRing> {
@@ -133,6 +165,20 @@ where
 {
     loop {
         let now = Instant::now();
+        // server-side deadline shedding happens *before* batch formation:
+        // a request whose client deadline already passed would burn a
+        // batch slot computing a reply nobody is waiting for — fail it
+        // now with the shed sentinel, releasing its slot exactly once
+        for req in source.shed_expired(now) {
+            sink.record_shed();
+            sink.release_slot();
+            let id = req.id;
+            let _ = req.reply.send(Reply {
+                id,
+                result: Err(InferError(SHED_MESSAGE.into())),
+            });
+            stamp_reply(sink.trace(), id);
+        }
         let batch = if force {
             source.flush_next(now)
         } else {
@@ -369,10 +415,64 @@ mod tests {
                 id,
                 input: rand_sample(id),
                 queued_at: Instant::now(),
+                deadline: None,
                 reply: tx,
             },
             rx,
         )
+    }
+
+    fn mk_request_deadline(
+        id: u64,
+        deadline: Instant,
+    ) -> (Request, mpsc::Receiver<crate::coordinator::request::Reply>) {
+        let (mut req, rx) = mk_request(id);
+        req.deadline = Some(deadline);
+        (req, rx)
+    }
+
+    /// The shedding regression: a queued request whose deadline passed
+    /// before batch formation gets exactly one error reply (the shed
+    /// sentinel) and releases its slot exactly once; requests without a
+    /// deadline in the same backlog still serve normally, and the shed
+    /// request is counted as shed — not as served.
+    #[test]
+    fn shed_request_releases_slot_exactly_once() {
+        let factory = test_factory(4);
+        let mut engine = factory.build().unwrap();
+        let metrics = ServerMetrics::new();
+        let in_flight = AtomicUsize::new(3);
+        let mut batcher = Batcher::new(4, Duration::from_secs(60));
+        // `now` as the deadline: already expired by the time the executor
+        // runs, without Instant arithmetic that could underflow
+        let (expired, expired_rx) = mk_request_deadline(0, Instant::now());
+        batcher.push(expired);
+        let mut live_rxs = Vec::new();
+        for i in 1..3u64 {
+            let (req, rx) = mk_request(i);
+            batcher.push(req);
+            live_rxs.push(rx);
+        }
+        let ring = TraceRing::disabled();
+        let sink = ServerSink {
+            metrics: &metrics,
+            in_flight: &in_flight,
+            trace: &ring,
+        };
+        execute_ready(&mut batcher, &sink, engine.as_mut(), 64, true).unwrap();
+        let reply = expired_rx.try_recv().expect("shed request must get its error reply");
+        assert_eq!(reply.id, 0);
+        let e = reply.result.expect_err("shed reply is an error reply");
+        assert_eq!(e.0, SHED_MESSAGE);
+        assert!(expired_rx.try_recv().is_err(), "exactly one reply for the shed request");
+        for (i, rx) in live_rxs.into_iter().enumerate() {
+            let reply = rx.try_recv().unwrap_or_else(|_| panic!("live request {i} lost"));
+            assert!(reply.result.is_ok(), "live request {i} must still serve");
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.requests, 2, "shed requests are not counted as served");
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "slot released exactly once");
     }
 
     /// The ported single-engine regression: a broken engine must fail

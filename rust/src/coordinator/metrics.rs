@@ -30,6 +30,9 @@ struct Inner {
     occupied_slots: u64,
     padded_slots: u64,
     rejected: u64,
+    /// Queued requests shed because their client deadline passed before
+    /// batch formation (server-side deadline shedding).
+    shed: u64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -40,6 +43,8 @@ pub struct Snapshot {
     /// Batches executed below full occupancy (padded partial batches).
     pub padded_batches: u64,
     pub rejected: u64,
+    /// Queued requests shed at batch-formation time (expired deadlines).
+    pub shed: u64,
     pub mean_latency_s: f64,
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
@@ -77,6 +82,7 @@ impl ServerMetrics {
                 occupied_slots: 0,
                 padded_slots: 0,
                 rejected: 0,
+                shed: 0,
             }),
             window: WindowedRate::new(),
             started: Instant::now(),
@@ -110,6 +116,10 @@ impl ServerMetrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let slots = g.occupied_slots + g.padded_slots;
@@ -118,6 +128,7 @@ impl ServerMetrics {
             batches: g.batches,
             padded_batches: g.padded_batches,
             rejected: g.rejected,
+            shed: g.shed,
             mean_latency_s: g.latency.mean_ns() / 1e9,
             p50_latency_s: g.latency.percentile_ns(0.50) as f64 / 1e9,
             p95_latency_s: g.latency.percentile_ns(0.95) as f64 / 1e9,
@@ -149,11 +160,14 @@ mod tests {
             m.record_request(1e-3, 2e-3);
         }
         m.record_rejected();
+        m.record_shed();
+        m.record_shed();
         let s = m.snapshot();
         assert_eq!(s.requests, 7);
         assert_eq!(s.batches, 2);
         assert_eq!(s.padded_batches, 1, "the 3-of-4 batch ran padded");
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.shed, 2);
         assert_eq!(s.occupied_slots, 7);
         assert_eq!(s.padded_slots, 1);
         assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);

@@ -91,7 +91,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -110,12 +110,16 @@ pub trait SubmitTarget: Send + Sync {
     /// Submit one quantized sample, completing into `reply` (which may be
     /// shared across requests — [`Reply::id`] disambiguates; the TCP
     /// frontend demuxes a whole connection through one such channel).
-    /// Returns the assigned id, or an immediate backpressure error when
-    /// the stack is saturated.
+    /// `deadline` is the client's [`SubmitOptions::deadline`]: when it
+    /// passes before batch formation, the executor sheds the request with
+    /// a `DeadlineExceeded` error reply instead of executing it (`None` =
+    /// never shed).  Returns the assigned id, or an immediate
+    /// backpressure error when the stack is saturated.
     fn submit_with(
         &self,
         input: Vec<i32>,
         priority: Priority,
+        deadline: Option<Instant>,
         reply: mpsc::Sender<Reply>,
     ) -> Result<RequestId>;
 
@@ -143,10 +147,12 @@ pub trait SubmitTarget: Send + Sync {
         )
     }
 
-    /// Submit one sample and get a completion [`Ticket`] back.
+    /// Submit one sample and get a completion [`Ticket`] back.  The
+    /// options' deadline rides to the server, so an expired request is
+    /// shed there instead of wasting a batch slot.
     fn submit(&self, input: Vec<i32>, opts: SubmitOptions) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
-        let id = self.submit_with(input, opts.priority, tx)?;
+        let id = self.submit_with(input, opts.priority, opts.deadline, tx)?;
         Ok(Ticket::new(id, &opts, rx))
     }
 
@@ -200,6 +206,9 @@ pub struct StatsReport {
     /// current load where `throughput` is the lifetime average).
     pub throughput_10s: f64,
     pub workers: usize,
+    /// Queued requests shed server-side because their deadline passed
+    /// before batch formation.
+    pub shed: u64,
 }
 
 impl StatsReport {
@@ -210,7 +219,7 @@ impl StatsReport {
             "STATS requests={} batches={} rejected={} mean_latency_us={:.1} \
              p50_latency_us={:.1} p95_latency_us={:.1} p99_latency_us={:.1} \
              occupancy={:.3} promoted={} throughput={:.1} workers={} \
-             win_throughput={:.1}",
+             win_throughput={:.1} shed={}",
             self.requests,
             self.batches,
             self.rejected,
@@ -222,7 +231,8 @@ impl StatsReport {
             self.promoted,
             self.throughput,
             self.workers,
-            self.throughput_10s
+            self.throughput_10s,
+            self.shed
         )
     }
 
@@ -233,7 +243,7 @@ impl StatsReport {
              \"mean_latency_us\":{},\"p50_latency_us\":{},\
              \"p95_latency_us\":{},\"p99_latency_us\":{},\
              \"occupancy\":{},\"promoted\":{},\"throughput\":{},\
-             \"throughput_10s\":{},\"workers\":{}}}",
+             \"throughput_10s\":{},\"workers\":{},\"shed\":{}}}",
             self.requests,
             self.batches,
             self.rejected,
@@ -245,7 +255,8 @@ impl StatsReport {
             self.promoted,
             json_f64(self.throughput),
             json_f64(self.throughput_10s),
-            self.workers
+            self.workers,
+            self.shed
         )
     }
 }
@@ -532,7 +543,7 @@ fn serve_lines(
                 let submitted = {
                     let mut p = pending.lock().unwrap();
                     target
-                        .submit_with(input, priority, completions.clone())
+                        .submit_with(input, priority, None, completions.clone())
                         .map(|id| {
                             p.insert(id, tag);
                         })
@@ -1226,10 +1237,12 @@ mod tests {
             throughput: 100.0,
             throughput_10s: 42.5,
             workers: 4,
+            shed: 3,
         };
         let line = s.render();
         assert!(line.contains("win_throughput=42.5"), "{line}");
         assert!(line.contains("throughput=100.0"), "{line}");
+        assert!(line.contains("shed=3"), "{line}");
         let v = crate::config::json::parse(&s.render_json()).expect("valid JSON");
         assert_eq!(v.get("requests").and_then(|x| x.as_f64().ok()), Some(12.0));
         assert_eq!(
@@ -1237,6 +1250,7 @@ mod tests {
             Some(42.5)
         );
         assert_eq!(v.get("workers").and_then(|x| x.as_f64().ok()), Some(4.0));
+        assert_eq!(v.get("shed").and_then(|x| x.as_f64().ok()), Some(3.0));
     }
 
     #[test]

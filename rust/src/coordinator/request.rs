@@ -47,6 +47,14 @@ impl Priority {
 #[derive(Debug, Clone)]
 pub struct InferError(pub String);
 
+/// The error-reply message the executor sends when it *sheds* a queued
+/// request whose [`SubmitOptions::deadline`] passed before batch
+/// formation.  [`Ticket`] waits map a reply carrying exactly this string
+/// to [`TicketError::DeadlineExceeded`] instead of
+/// [`TicketError::Engine`]; the TCP frontend forwards it verbatim as a
+/// tagged `ERR` line.
+pub const SHED_MESSAGE: &str = "deadline exceeded before batch formation (shed)";
+
 impl std::fmt::Display for InferError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{}", self.0)
@@ -75,6 +83,10 @@ pub struct Request {
     pub input: Vec<i32>,
     /// Enqueue timestamp (for end-to-end latency accounting).
     pub queued_at: Instant,
+    /// Client deadline ([`SubmitOptions::deadline`]): the executor sheds
+    /// the request — error reply, slot released — when this passes before
+    /// batch formation.  `None` = never shed server-side.
+    pub deadline: Option<Instant>,
     /// Completion channel (may be shared across requests; [`Reply::id`]
     /// disambiguates).
     pub reply: mpsc::Sender<Reply>,
@@ -161,8 +173,11 @@ pub enum TicketError {
     /// [`Ticket::wait_timeout`] elapsed; the request is still in flight
     /// and the ticket can be waited on again.
     Timeout { id: RequestId, waited: Duration },
-    /// The [`SubmitOptions::deadline`] passed before a reply arrived; the
-    /// request is still in flight.
+    /// The [`SubmitOptions::deadline`] passed before a reply arrived:
+    /// either the client-side wait expired (the request may still be in
+    /// flight), or the server *shed* the queued request at
+    /// batch-formation time (it will never execute; its backpressure slot
+    /// is already released).
     DeadlineExceeded { id: RequestId },
     /// The ticket already yielded its reply (exactly-once delivery).
     AlreadyCompleted { id: RequestId },
@@ -261,6 +276,12 @@ impl Ticket {
         self.done = true;
         match reply.result {
             Ok(resp) => Ok(resp),
+            // a server-side shed is a deadline outcome, not an engine
+            // failure: the sentinel message keeps the distinction across
+            // the string-typed reply channel
+            Err(source) if source.0 == SHED_MESSAGE => {
+                Err(TicketError::DeadlineExceeded { id: self.id })
+            }
             Err(source) => Err(TicketError::Engine {
                 id: self.id,
                 source,
@@ -425,6 +446,21 @@ mod tests {
         assert!(matches!(e, TicketError::Timeout { id: 7, .. }), "{e:?}");
         tx.send(ok_reply(7)).unwrap();
         assert!(t.wait().is_ok(), "timeout must not consume the ticket");
+    }
+
+    #[test]
+    fn shed_reply_maps_to_deadline_exceeded() {
+        // a server-side shed arrives as an error reply carrying the
+        // sentinel message — the ticket must surface it as the deadline
+        // variant, not as an engine failure
+        let (tx, mut t) = mk_ticket(SubmitOptions::interactive());
+        tx.send(Reply {
+            id: 7,
+            result: Err(InferError(SHED_MESSAGE.into())),
+        })
+        .unwrap();
+        let e = t.wait().unwrap_err();
+        assert!(matches!(e, TicketError::DeadlineExceeded { id: 7 }), "{e:?}");
     }
 
     #[test]

@@ -88,7 +88,12 @@ impl ServerHandle {
     /// and enqueue with the caller's completion sender.  Everything
     /// client-facing ([`SubmitTarget::submit`]'s tickets, the blocking
     /// `infer_*` helpers) derives from this through the trait.
-    pub(crate) fn enqueue(&self, input: Vec<i32>, reply: mpsc::Sender<Reply>) -> Result<RequestId> {
+    pub(crate) fn enqueue(
+        &self,
+        input: Vec<i32>,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
         if self.shutting_down.load(Ordering::SeqCst) {
             bail!("server is shutting down");
         }
@@ -118,6 +123,7 @@ impl ServerHandle {
             id,
             input,
             queued_at: Instant::now(),
+            deadline,
             reply,
         };
         if self.tx.send(Command::Infer(req, ())).is_err() {
@@ -165,9 +171,10 @@ impl SubmitTarget for ServerHandle {
         &self,
         input: Vec<i32>,
         _priority: Priority,
+        deadline: Option<Instant>,
         reply: mpsc::Sender<Reply>,
     ) -> Result<RequestId> {
-        self.enqueue(input, reply)
+        self.enqueue(input, deadline, reply)
     }
 
     fn stats(&self) -> StatsReport {
@@ -185,6 +192,7 @@ impl SubmitTarget for ServerHandle {
             throughput: s.throughput,
             throughput_10s: s.throughput_10s,
             workers: 1,
+            shed: s.shed,
         }
     }
 
@@ -199,6 +207,7 @@ impl SubmitTarget for ServerHandle {
         r.set_counter("zdnn_batches_total", s.batches);
         r.set_counter("zdnn_padded_batches_total", s.padded_batches);
         r.set_counter("zdnn_rejected_total", s.rejected);
+        r.set_counter("zdnn_shed_total", s.shed);
         r.set_counter("zdnn_occupied_slots_total", s.occupied_slots);
         r.set_counter("zdnn_padded_slots_total", s.padded_slots);
         r.set_gauge("zdnn_occupancy", s.occupancy);
@@ -238,6 +247,10 @@ impl ExecSink for ServerSink<'_> {
         self.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
 
+    fn record_shed(&self) {
+        self.metrics.record_shed();
+    }
+
     fn trace(&self) -> Option<&TraceRing> {
         Some(self.trace)
     }
@@ -271,7 +284,7 @@ fn engine_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::SubmitOptions;
+    use crate::coordinator::request::{SubmitOptions, TicketError};
     use crate::nn::spec::quickstart;
     use crate::nn::{forward_q, quantize_matrix, QNetwork};
     use crate::tensor::{MatF, MatI};
@@ -388,6 +401,27 @@ mod tests {
             assert!(server.metrics.snapshot().rejected >= 1);
         }
         drop(held);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_server_side() {
+        let server = Server::start(&test_config(4), test_factory(4)).unwrap();
+        // the deadline passes before the engine can form a batch: the
+        // executor sheds the request and the reply maps to the deadline
+        // variant (wait_timeout reads the actual reply, so this proves
+        // the shed happened server-side rather than in the client wait)
+        let mut t = server
+            .submit(rand_sample(1), SubmitOptions::default().deadline(Instant::now()))
+            .unwrap();
+        let e = t.wait_timeout(Duration::from_secs(5)).unwrap_err();
+        assert!(matches!(e, TicketError::DeadlineExceeded { .. }), "{e:?}");
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.requests, 0, "a shed request is never served");
+        // the stack is healthy afterwards; a fresh request serves normally
+        let resp = server.infer_blocking(rand_sample(2)).unwrap();
+        assert_eq!(resp.output.len(), 10);
         server.shutdown().unwrap();
     }
 

@@ -31,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::executor::{BatchSource, BatchView};
+use crate::coordinator::executor::{shed_queue, BatchSource, BatchView};
 use crate::coordinator::request::Request;
 use crate::tensor::MatI;
 
@@ -193,6 +193,15 @@ impl PriorityBatcher {
             promoted,
         }
     }
+
+    /// Remove and return every queued request (either class) whose client
+    /// deadline has passed (server-side shedding); per-class FIFO order
+    /// of survivors is kept.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut shed = shed_queue(&mut self.interactive, now);
+        shed.extend(shed_queue(&mut self.bulk, now));
+        shed
+    }
 }
 
 /// The priority batch through the generic executor's eyes: the tag is the
@@ -250,6 +259,10 @@ impl BatchSource for PriorityBatcher {
     fn flush_next(&mut self, now: Instant) -> Option<PrioBatch> {
         PriorityBatcher::flush_next(self, now)
     }
+
+    fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        PriorityBatcher::shed_expired(self, now)
+    }
 }
 
 #[cfg(test)]
@@ -264,8 +277,31 @@ mod tests {
             id,
             input: vec![id as i32; 4],
             queued_at: at,
+            deadline: None,
             reply: tx,
         }
+    }
+
+    #[test]
+    fn shed_expired_spans_both_classes() {
+        let t0 = Instant::now();
+        let later = t0 + Duration::from_secs(30);
+        let mut q = PriorityBatcher::new(4, Duration::from_millis(10), Duration::from_secs(60));
+        let mut exp_i = mk_request(0, t0);
+        exp_i.deadline = Some(t0);
+        let mut exp_b = mk_request(1, t0);
+        exp_b.deadline = Some(t0);
+        q.push(exp_i, Priority::Interactive);
+        q.push(mk_request(2, t0), Priority::Interactive); // no deadline
+        q.push(exp_b, Priority::Bulk);
+        q.push(mk_request(3, t0), Priority::Bulk);
+        let mut shed: Vec<u64> = q.shed_expired(later).iter().map(|r| r.id).collect();
+        shed.sort_unstable();
+        assert_eq!(shed, vec![0, 1], "expired requests of both classes shed");
+        assert_eq!(q.pending(), 2);
+        let batch = q.flush_next(later).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![2, 3], "survivors still dispatch");
     }
 
     #[test]

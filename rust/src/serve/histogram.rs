@@ -80,6 +80,9 @@ struct Inner {
     padded_slots: u64,
     /// Bulk requests that aged past the promotion threshold before dispatch.
     promoted: u64,
+    /// Queued requests shed because their client deadline passed before
+    /// batch formation (server-side deadline shedding).
+    shed: u64,
 }
 
 /// One shard's metrics (the pool holds one per worker plus merges them on
@@ -109,6 +112,8 @@ pub struct ShardSnapshot {
     pub padded_slots: u64,
     /// Bulk requests promoted by aging before dispatch.
     pub promoted: u64,
+    /// Queued requests shed at batch-formation time (expired deadlines).
+    pub shed: u64,
     /// Fraction of batch slots carrying real samples.
     pub occupancy: f64,
     /// Completed requests per wall second since start (lifetime average).
@@ -150,6 +155,10 @@ impl ShardMetrics {
         g.promoted += promoted as u64;
     }
 
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
     pub fn record_request(&self, priority: Priority, queue_s: f64, total_s: f64) {
         self.window.record();
         let mut g = self.inner.lock().unwrap();
@@ -185,6 +194,7 @@ impl ShardMetrics {
             acc.occupied_slots += g.occupied_slots;
             acc.padded_slots += g.padded_slots;
             acc.promoted += g.promoted;
+            acc.shed += g.shed;
             elapsed = elapsed.max(m.started.elapsed().as_secs_f64());
             windowed += m.window.per_second();
         }
@@ -200,6 +210,7 @@ impl ShardMetrics {
             occupied_slots: g.occupied_slots,
             padded_slots: g.padded_slots,
             promoted: g.promoted,
+            shed: g.shed,
             occupancy: if slots == 0 {
                 0.0
             } else {
@@ -248,6 +259,7 @@ mod tests {
         for _ in 0..2 {
             m.record_request(Priority::Bulk, 5e-3, 8e-3);
         }
+        m.record_shed();
         let s = m.snapshot();
         assert_eq!(s.requests, 7);
         assert_eq!(s.batches, 2);
@@ -255,6 +267,7 @@ mod tests {
         assert_eq!(s.occupied_slots, 7);
         assert_eq!(s.padded_slots, 1);
         assert_eq!(s.promoted, 1);
+        assert_eq!(s.shed, 1);
         assert_eq!(s.interactive_requests, 5);
         assert_eq!(s.bulk_requests, 2);
         assert!(s.bulk_p99_s > s.interactive_p99_s);

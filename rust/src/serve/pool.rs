@@ -188,6 +188,7 @@ impl PoolHandle {
         &self,
         input: Vec<i32>,
         priority: Priority,
+        deadline: Option<std::time::Instant>,
         reply: mpsc::Sender<Reply>,
     ) -> Result<RequestId> {
         if self.shutting_down.load(Ordering::SeqCst) {
@@ -221,6 +222,7 @@ impl PoolHandle {
             id,
             input,
             queued_at: std::time::Instant::now(),
+            deadline,
             reply,
         };
         if self.shards[shard]
@@ -284,9 +286,10 @@ impl SubmitTarget for PoolHandle {
         &self,
         input: Vec<i32>,
         priority: Priority,
+        deadline: Option<std::time::Instant>,
         reply: mpsc::Sender<Reply>,
     ) -> Result<RequestId> {
-        self.enqueue(input, priority, reply)
+        self.enqueue(input, priority, deadline, reply)
     }
 
     fn stats(&self) -> StatsReport {
@@ -305,6 +308,7 @@ impl SubmitTarget for PoolHandle {
             throughput: a.throughput,
             throughput_10s: a.throughput_10s,
             workers: self.workers(),
+            shed: a.shed,
         }
     }
 
@@ -322,6 +326,7 @@ impl SubmitTarget for PoolHandle {
         r.set_counter("zdnn_batches_total", a.batches);
         r.set_counter("zdnn_promoted_total", a.promoted);
         r.set_counter("zdnn_rejected_total", snap.rejected);
+        r.set_counter("zdnn_shed_total", a.shed);
         r.set_gauge("zdnn_occupancy", a.occupancy);
         r.set_gauge("zdnn_throughput", a.throughput);
         r.set_gauge("zdnn_throughput_10s", a.throughput_10s);
@@ -413,11 +418,12 @@ impl SubmitTarget for Serving {
         &self,
         input: Vec<i32>,
         priority: Priority,
+        deadline: Option<std::time::Instant>,
         reply: mpsc::Sender<Reply>,
     ) -> Result<RequestId> {
         match self {
-            Serving::Single(s) => s.enqueue(input, reply),
-            Serving::Pool(p) => p.enqueue(input, priority, reply),
+            Serving::Single(s) => s.enqueue(input, deadline, reply),
+            Serving::Pool(p) => p.enqueue(input, priority, deadline, reply),
         }
     }
 

@@ -59,6 +59,10 @@ impl ExecSink for ShardSink<'_> {
         self.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
 
+    fn record_shed(&self) {
+        self.metrics.record_shed();
+    }
+
     fn trace(&self) -> Option<&TraceRing> {
         Some(self.trace)
     }

@@ -196,6 +196,7 @@ impl SubmitTarget for ShuffleTarget {
         &self,
         input: Vec<i32>,
         priority: Priority,
+        _deadline: Option<Instant>,
         reply: mpsc::Sender<Reply>,
     ) -> Result<RequestId> {
         let id = self.next.fetch_add(1, Ordering::SeqCst);
@@ -217,6 +218,7 @@ impl SubmitTarget for ShuffleTarget {
             throughput: 0.0,
             throughput_10s: 0.0,
             workers: 1,
+            shed: 0,
         }
     }
 }
