@@ -19,6 +19,7 @@ use anyhow::{ensure, Result};
 
 use super::report::{ms, ratio, Table};
 use super::quick_mode;
+use crate::compress::encoding::{delta_encode_cols, nibble_encode_cols};
 use crate::compress::{
     self, codebook_quantize_matrix, load_artifact, prune_qnetwork, save_artifact,
     ArtifactEncoding, CompressedModel, EvalSet, SearchConfig,
@@ -27,7 +28,7 @@ use crate::data;
 use crate::exec::{ExecPlan, PlanOptions, DEFAULT_SPARSE_THRESHOLD};
 use crate::nn::quantize_matrix;
 use crate::nn::spec::{har_4, quickstart};
-use crate::tensor::MatF;
+use crate::tensor::{CsrMatI, MatF};
 use crate::train::{TrainConfig, Trainer};
 use crate::util::bench_loop;
 use crate::util::rng::Xoshiro256;
@@ -88,6 +89,12 @@ pub struct CompressBench {
     pub rows: Vec<CompressRow>,
     /// Encoding rung study rows, in `raw`/`delta`/`codebook` order.
     pub encodings: Vec<EncodingRow>,
+    /// Gap-stream ladder at [`STUDY_PRUNE`]: byte-delta column gaps summed
+    /// over the pruned network's layers...
+    pub delta_gap_bytes: usize,
+    /// ...vs the same gaps at nibble (4-bit) granularity.  At prune 0.9
+    /// most gaps fit one nibble, so nibble ≤ delta is a gated invariant.
+    pub nibble_gap_bytes: usize,
 }
 
 /// Prune factor of the encoding rung study (inside the paper's evaluated
@@ -182,6 +189,14 @@ pub fn run() -> Result<CompressBench> {
     // unconditionally so the study isolates the *storage* cost; the
     // accuracy cost is governed by the budgeted rows above)
     let pruned = prune_qnetwork(&net, STUDY_PRUNE);
+    // gap-stream ladder: the same pruned layers' column gaps at byte vs
+    // nibble granularity (the two resolutions encode_columns races)
+    let (mut delta_gap_bytes, mut nibble_gap_bytes) = (0usize, 0usize);
+    for w in &pruned.weights {
+        let csr = CsrMatI::from_dense(w);
+        delta_gap_bytes += delta_encode_cols(&csr).len();
+        nibble_gap_bytes += nibble_encode_cols(&csr).len();
+    }
     let mut shared = pruned.clone();
     for w in shared.weights.iter_mut() {
         *w = codebook_quantize_matrix(w);
@@ -218,6 +233,8 @@ pub fn run() -> Result<CompressBench> {
         network: spec.name,
         rows,
         encodings,
+        delta_gap_bytes,
+        nibble_gap_bytes,
     })
 }
 
@@ -270,10 +287,13 @@ pub fn to_json(b: &CompressBench) -> String {
         })
         .collect();
     format!(
-        "{{\"bench\":\"compress\",\"network\":\"{}\",\"rows\":[{}],\"encodings\":[{}]}}",
+        "{{\"bench\":\"compress\",\"network\":\"{}\",\"rows\":[{}],\"encodings\":[{}],\
+         \"delta_gap_bytes\":{},\"nibble_gap_bytes\":{}}}",
         json_escape(&b.network),
         rows.join(","),
         encs.join(","),
+        b.delta_gap_bytes,
+        b.nibble_gap_bytes,
     )
 }
 
@@ -348,6 +368,12 @@ pub fn check_shape(b: &CompressBench) -> Result<()> {
             cb < delta,
             "codebook payload {cb} B not smaller than delta {delta} B at prune {STUDY_PRUNE}"
         );
+        ensure!(
+            b.nibble_gap_bytes > 0 && b.nibble_gap_bytes <= b.delta_gap_bytes,
+            "nibble gap stream {} B not <= byte-delta {} B at prune {STUDY_PRUNE}",
+            b.nibble_gap_bytes,
+            b.delta_gap_bytes
+        );
     }
     Ok(())
 }
@@ -413,6 +439,11 @@ pub fn render(b: &CompressBench) -> String {
         "EIE (Han et al.) reports ~1 B/nnz after 4-bit indices + 4-bit codebook; raw CSR \
          spends ~6 B/nnz — see EXPERIMENTS.md §4",
     );
+    e.footnote(&format!(
+        "gap-stream ladder at prune {STUDY_PRUNE}: nibble {} B <= byte-delta {} B \
+         (4-bit relative indices, auto-selected per layer only when smaller)",
+        b.nibble_gap_bytes, b.delta_gap_bytes
+    ));
     format!("{}\n{}", t.render(), e.render())
 }
 

@@ -9,6 +9,12 @@
 //!   jumps (a valid gap is never 0, so the escape byte is free).  This is
 //!   EIE's 4-bit relative index idea at byte granularity — 4× smaller
 //!   column metadata with a trivial decoder.
+//! * **Nibble-coded columns** — EIE's relative index at its native 4-bit
+//!   granularity: two gaps per byte, with a two-level escape (nibble `0x0`
+//!   → one byte, byte `0x00` → `u32`) for the rare large jump.  At prune
+//!   0.9 most gaps fit a nibble, so this halves the dominant cost of the
+//!   delta stream; [`encode_columns`] picks it only when it actually comes
+//!   out smaller than both the byte-delta and Huffman forms.
 //! * **Optional Huffman pass** — the gap bytes of a pruned layer are
 //!   highly skewed (small gaps dominate), so the canonical byte-alphabet
 //!   coder from [`crate::sparse::huffman`] often beats the plain bytes;
@@ -65,6 +71,8 @@ const GAP_ESCAPE: u8 = 0x00;
 const TAG_PLAIN: u8 = 0;
 /// Payload tag: Huffman container follows.
 const TAG_HUFFMAN: u8 = 1;
+/// Payload tag: nibble-granularity gap stream follows.
+const TAG_NIBBLE: u8 = 2;
 
 /// Delta-encode the per-row column gaps of a CSR matrix (no Huffman).
 pub fn delta_encode_cols(csr: &CsrMatI) -> Vec<u8> {
@@ -119,15 +127,112 @@ pub fn delta_decode_cols(bytes: &[u8], row_ptr: &[usize], cols: usize) -> Result
     Ok(col_idx)
 }
 
-/// Encode a CSR matrix's column stream for storage: delta bytes, then the
-/// Huffman pass iff its container comes out smaller.  Self-describing via
-/// the leading tag byte; decode with [`decode_columns`].
+/// Nibble-encode the per-row column gaps of a CSR matrix: gaps 1–15 cost
+/// one nibble; a `0x0` escape nibble is followed by one byte (two
+/// nibbles, low first) covering gaps up to 255; a zero escape *byte*
+/// widens once more to a `u32` (eight nibbles, LE).  Packed two nibbles
+/// per byte, low nibble first; an odd count pads with a zero nibble the
+/// decoder never reads (it stops at the row-pointer gap count).
+pub fn nibble_encode_cols(csr: &CsrMatI) -> Vec<u8> {
+    let mut nibs = Vec::with_capacity(csr.nnz());
+    for o in 0..csr.rows() {
+        let (idx, _) = csr.row(o);
+        let mut prev = -1i64;
+        for &c in idx {
+            let gap = i64::from(c) - prev;
+            debug_assert!(gap >= 1, "columns not strictly increasing");
+            if gap <= 15 {
+                nibs.push(gap as u8);
+            } else if gap <= 255 {
+                nibs.push(0);
+                let b = gap as u8;
+                nibs.push(b & 0x0F);
+                nibs.push(b >> 4);
+            } else {
+                nibs.push(0);
+                nibs.push(0);
+                nibs.push(0);
+                for byte in (gap as u32).to_le_bytes() {
+                    nibs.push(byte & 0x0F);
+                    nibs.push(byte >> 4);
+                }
+            }
+            prev = i64::from(c);
+        }
+    }
+    pack_nibbles(&nibs)
+}
+
+/// Pull the next nibble (low half first) off a packed stream.
+fn read_nibble(bytes: &[u8], pos: &mut usize) -> Result<u8> {
+    ensure!(*pos < bytes.len() * 2, "gap nibble stream truncated");
+    let b = bytes[*pos / 2];
+    let n = if *pos % 2 == 0 { b & 0x0F } else { b >> 4 };
+    *pos += 1;
+    Ok(n)
+}
+
+/// Inverse of [`nibble_encode_cols`]: rebuild absolute column indices
+/// from the packed nibble stream, row structure taken from `row_ptr`.
+pub fn nibble_decode_cols(bytes: &[u8], row_ptr: &[usize], cols: usize) -> Result<Vec<u32>> {
+    let nnz = *row_ptr.last().unwrap_or(&0);
+    let mut col_idx = Vec::with_capacity(nnz);
+    let mut pos = 0usize;
+    for o in 0..row_ptr.len().saturating_sub(1) {
+        let row_nnz = row_ptr[o + 1] - row_ptr[o];
+        let mut prev = -1i64;
+        for _ in 0..row_nnz {
+            let n = read_nibble(bytes, &mut pos)?;
+            let gap = if n != 0 {
+                i64::from(n)
+            } else {
+                let lo = read_nibble(bytes, &mut pos)?;
+                let hi = read_nibble(bytes, &mut pos)?;
+                let b = lo | (hi << 4);
+                if b != 0 {
+                    i64::from(b)
+                } else {
+                    let mut raw = [0u8; 4];
+                    for byte in raw.iter_mut() {
+                        let lo = read_nibble(bytes, &mut pos)?;
+                        let hi = read_nibble(bytes, &mut pos)?;
+                        *byte = lo | (hi << 4);
+                    }
+                    let g = u32::from_le_bytes(raw);
+                    ensure!(g >= 1, "row {o}: zero gap");
+                    i64::from(g)
+                }
+            };
+            let col = prev + gap;
+            ensure!(col < cols as i64, "row {o}: column {col} out of range");
+            col_idx.push(col as u32);
+            prev = col;
+        }
+    }
+    // all nibbles consumed, modulo the single pad nibble of an odd count
+    ensure!(bytes.len() == pos.div_ceil(2), "trailing bytes in gap nibble stream");
+    Ok(col_idx)
+}
+
+/// Encode a CSR matrix's column stream for storage: delta bytes, the
+/// nibble form, and the Huffman pass race on size; the smallest wins,
+/// ties broken toward the older formats so existing payloads are stable.
+/// Self-describing via the leading tag byte; decode with
+/// [`decode_columns`].
 pub fn encode_columns(csr: &CsrMatI) -> Vec<u8> {
     let delta = delta_encode_cols(csr);
+    let nibble = nibble_encode_cols(csr);
     let es = huffman::encode_bytes(&delta);
     // tag + raw_len + bit_len + 256-byte length table + bits
     let huff_size = 1 + 4 + 8 + 256 + es.bits.len();
-    if huff_size < 1 + delta.len() {
+    let plain_size = 1 + delta.len();
+    let nibble_size = 1 + nibble.len();
+    if nibble_size < plain_size && nibble_size < huff_size {
+        let mut out = Vec::with_capacity(nibble_size);
+        out.push(TAG_NIBBLE);
+        out.extend_from_slice(&nibble);
+        out
+    } else if huff_size < plain_size {
         let mut out = Vec::with_capacity(huff_size);
         out.push(TAG_HUFFMAN);
         out.extend_from_slice(&(es.raw_len as u32).to_le_bytes());
@@ -136,7 +241,7 @@ pub fn encode_columns(csr: &CsrMatI) -> Vec<u8> {
         out.extend_from_slice(&es.bits);
         out
     } else {
-        let mut out = Vec::with_capacity(1 + delta.len());
+        let mut out = Vec::with_capacity(plain_size);
         out.push(TAG_PLAIN);
         out.extend_from_slice(&delta);
         out
@@ -165,6 +270,7 @@ pub fn decode_columns(payload: &[u8], row_ptr: &[usize], cols: usize) -> Result<
             let delta = huffman::decode(&es)?;
             delta_decode_cols(&delta, row_ptr, cols)
         }
+        TAG_NIBBLE => nibble_decode_cols(&payload[1..], row_ptr, cols),
         other => bail!("unknown column payload tag {other}"),
     }
 }
@@ -336,8 +442,52 @@ mod tests {
             let csr = CsrMatI::from_dense(&rand_sparse(rows, cols, density, &mut rng));
             let payload = encode_columns(&csr);
             let back = decode_columns(&payload, csr.row_ptr(), csr.cols()).unwrap();
-            back == csr.col_idx()
+            if back != csr.col_idx() {
+                return false;
+            }
+            // the nibble form must round-trip whether or not the size race
+            // selected it for this matrix
+            let nib = nibble_encode_cols(&csr);
+            nibble_decode_cols(&nib, csr.row_ptr(), csr.cols()).unwrap() == csr.col_idx()
         });
+    }
+
+    #[test]
+    fn nibble_gap_roundtrip_hits_every_escape_level() {
+        // gaps 1 (nibble), 16 and 255 (byte escape), 990 and 10_000 (u32)
+        let mut m = MatI::zeros(2, 12000);
+        m.row_mut(0)[0] = 5; // gap 1
+        m.row_mut(0)[15] = 2; // gap 15 (largest single nibble)
+        m.row_mut(0)[31] = -4; // gap 16 (smallest byte escape)
+        m.row_mut(0)[286] = 9; // gap 255 (largest byte escape)
+        m.row_mut(0)[1276] = -1; // gap 990 (u32 escape)
+        m.row_mut(1)[9999] = 3; // first gap 10_000 (u32 escape)
+        let csr = CsrMatI::from_dense(&m);
+        let packed = nibble_encode_cols(&csr);
+        let back = nibble_decode_cols(&packed, csr.row_ptr(), csr.cols()).unwrap();
+        assert_eq!(back, csr.col_idx());
+        // truncation must error, not mis-decode
+        assert!(nibble_decode_cols(&packed[..packed.len() - 1], csr.row_ptr(), csr.cols())
+            .is_err());
+        // trailing garbage beyond the pad nibble must be rejected too
+        let mut long = packed.clone();
+        long.push(0);
+        assert!(nibble_decode_cols(&long, csr.row_ptr(), csr.cols()).is_err());
+    }
+
+    #[test]
+    fn nibble_beats_delta_at_high_prune() {
+        // prune 0.9 → mean gap ~10: most gaps fit one nibble, so the
+        // nibble stream must undercut one-byte-per-gap delta coding
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let csr = CsrMatI::from_dense(&rand_sparse(300, 561, 0.1, &mut rng));
+        let delta = delta_encode_cols(&csr);
+        let nib = nibble_encode_cols(&csr);
+        assert!(nib.len() < delta.len(), "{} nibble vs {} delta", nib.len(), delta.len());
+        let payload = encode_columns(&csr);
+        assert!(payload.len() <= 1 + nib.len(), "size race must not pick a larger form");
+        let back = decode_columns(&payload, csr.row_ptr(), csr.cols()).unwrap();
+        assert_eq!(back, csr.col_idx());
     }
 
     #[test]
