@@ -13,6 +13,7 @@ pub mod gops;
 pub mod netbench;
 pub mod nopt;
 pub mod obsbench;
+pub mod registry;
 pub mod report;
 pub mod slo;
 pub mod sparse;

@@ -1,0 +1,373 @@
+//! Multi-model serving benchmark: the PR 8 registry driven two ways.
+//!
+//! * **Weighted routing** — three quickstart-shaped models behind one
+//!   registry with 7/2/1 traffic shares; a seeded weighted-random client
+//!   pipelines requests at the shares and the table reports how replicas
+//!   and observed traffic track the configuration.
+//! * **Hot swap under load** — submitter threads hammer the default
+//!   model (mixed Interactive/Bulk) while [`Registry::swap`] flips it to
+//!   a new version mid-stream.  Every request's latency is recorded and
+//!   classified against the swap window, so the table shows the steady
+//!   p99 next to the during-swap p99 (the "blip").
+//!
+//! `check_shape` is the CI "registry smoke" gate and is deliberately
+//! functional, not wall-clock: the swap must complete with the version
+//! bumped, traffic must reach every model, the biggest share must carry
+//! the most traffic, and — the exactly-once core — **no request may be
+//! lost** across the swap.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::{quick_mode, random_qnet};
+use crate::compress::{save_artifact, CompressedModel};
+use crate::config::ServerConfig;
+use crate::coordinator::request::{Priority, SubmitOptions, Ticket};
+use crate::coordinator::SubmitTarget;
+use crate::nn::spec::quickstart;
+use crate::registry::Registry;
+use crate::util::rng::Xoshiro256;
+
+/// The three registered models: `(name, share)` — 70/20/10 traffic split.
+pub const MODELS: [(&str, f64); 3] = [("major", 7.0), ("minor", 2.0), ("micro", 1.0)];
+
+/// Worker budget the shares carve up.
+pub const WORKERS: usize = 4;
+
+/// One registered model's row in the routing table.
+#[derive(Debug, Clone)]
+pub struct ModelRow {
+    pub name: String,
+    pub share: f64,
+    pub replicas: usize,
+    /// Requests the weighted client routed to this model.
+    pub requests: usize,
+    /// Observed fraction of the phase-1 traffic.
+    pub fraction: f64,
+}
+
+/// The benchmark result.
+#[derive(Debug, Clone)]
+pub struct RegistryBench {
+    pub workers: usize,
+    /// Phase-1 weighted-routing requests.
+    pub requests: usize,
+    /// Phase-1 pipelined throughput (req/s across all models).
+    pub throughput: f64,
+    pub models: Vec<ModelRow>,
+    /// Wall-clock seconds the hot swap took (warm + flip + drain).
+    pub swap_seconds: f64,
+    pub old_version: u64,
+    pub new_version: u64,
+    /// Phase-2 requests completed around the swap.
+    pub swap_requests: usize,
+    /// Phase-2 requests that got no reply — must be zero.
+    pub lost: usize,
+    /// p99 latency of requests submitted before the swap started.
+    pub steady_p99_s: f64,
+    /// p99 latency of requests submitted inside the swap window
+    /// (falls back to the steady value when the window caught none).
+    pub swap_p99_s: f64,
+}
+
+impl RegistryBench {
+    /// During-swap p99 over steady p99 (1.0 = no blip).
+    pub fn blip(&self) -> f64 {
+        self.swap_p99_s / self.steady_p99_s.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Write one quickstart-shaped `.rpz` artifact (same recipe as the
+/// registry unit tests: pruned random net under a generous budget).
+fn write_rpz(dir: &std::path::Path, file: &str, seed: u64) -> Result<PathBuf> {
+    let net = crate::sim::pruning::prune_qnetwork(&random_qnet(&quickstart(), seed), 0.9);
+    let model = CompressedModel::from_network(&net, 0.75, 0.02, 0.9, 0.89)?;
+    let path = dir.join(file);
+    save_artifact(&path, &model)?;
+    Ok(path)
+}
+
+fn rand_input(rng: &mut Xoshiro256) -> Vec<i32> {
+    (0..64)
+        .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+        .collect()
+}
+
+fn p99(samples: &mut [f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)]
+}
+
+/// `key=value` field out of a `MODEL name=... replicas=...` wire line.
+fn field(line: &str, key: &str) -> Option<String> {
+    let prefix = format!("{key}=");
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(prefix.as_str()).map(str::to_string))
+}
+
+pub fn run() -> Result<RegistryBench> {
+    let quick = quick_mode();
+    let requests = if quick { 300 } else { 3000 };
+
+    let dir = std::env::temp_dir().join(format!("zdnn-bench-registry-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let mut spec_parts = Vec::new();
+    for (i, (name, share)) in MODELS.iter().enumerate() {
+        let path = write_rpz(&dir, &format!("{name}.rpz"), 0xBE9 + i as u64)?;
+        spec_parts.push(format!("{name}={}@{share}", path.display()));
+    }
+    let v2_path = write_rpz(&dir, "major-v2.rpz", 0xBE9F)?;
+
+    let cfg = ServerConfig {
+        models: spec_parts.join(","),
+        workers: WORKERS,
+        batch: 4,
+        batch_deadline_us: 300,
+        queue_depth: (requests * 2).max(1024),
+        ..Default::default()
+    };
+    let registry = Arc::new(Registry::start(&cfg).context("registry bench: start")?);
+
+    // --- phase 1: weighted routing, pipelined --------------------------
+    let total_share: f64 = MODELS.iter().map(|&(_, s)| s).sum();
+    let mut rng = Xoshiro256::seed_from_u64(0xBE91);
+    let mut routed = vec![0usize; MODELS.len()];
+    let mut tickets = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let mut pick = rng.uniform(0.0, total_share);
+        let mut which = 0usize;
+        for (j, &(_, share)) in MODELS.iter().enumerate() {
+            if pick < share {
+                which = j;
+                break;
+            }
+            pick -= share;
+        }
+        routed[which] += 1;
+        let prio = if i % 5 == 0 { Priority::Interactive } else { Priority::Bulk };
+        let opts = SubmitOptions::with_priority(prio);
+        let (tx, rx) = mpsc::channel();
+        let id = registry.submit_to(Some(MODELS[which].0), rand_input(&mut rng), prio, None, tx)?;
+        tickets.push(Ticket::new(id, &opts, rx));
+    }
+    for ticket in &mut tickets {
+        ticket
+            .wait_timeout(Duration::from_secs(60))
+            .context("registry bench: phase-1 reply")?;
+    }
+    let throughput = requests as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    drop(tickets);
+
+    let lines = registry.model_lines();
+    let models = MODELS
+        .iter()
+        .enumerate()
+        .map(|(j, &(name, share))| {
+            let replicas = lines
+                .iter()
+                .find(|l| field(l, "name").as_deref() == Some(name))
+                .and_then(|l| field(l, "replicas"))
+                .and_then(|r| r.parse().ok())
+                .unwrap_or(0);
+            ModelRow {
+                name: name.to_string(),
+                share,
+                replicas,
+                requests: routed[j],
+                fraction: routed[j] as f64 / requests as f64,
+            }
+        })
+        .collect();
+
+    // --- phase 2: hot swap under load ----------------------------------
+    let stop = Arc::new(AtomicBool::new(false));
+    let submitters: Vec<_> = (0..2u64)
+        .map(|t| {
+            let reg = registry.clone();
+            let stop = stop.clone();
+            thread::spawn(move || {
+                let mut rng = Xoshiro256::seed_from_u64(0xBE92 + t);
+                let mut samples: Vec<(Instant, f64)> = Vec::new();
+                let mut lost = 0usize;
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let prio = if i % 3 == 0 { Priority::Interactive } else { Priority::Bulk };
+                    i += 1;
+                    let sent = Instant::now();
+                    match reg.submit(rand_input(&mut rng), SubmitOptions::with_priority(prio)) {
+                        Ok(mut ticket) => match ticket.wait_timeout(Duration::from_secs(30)) {
+                            Ok(_) => samples.push((sent, sent.elapsed().as_secs_f64())),
+                            Err(_) => lost += 1,
+                        },
+                        Err(_) => lost += 1,
+                    }
+                }
+                (samples, lost)
+            })
+        })
+        .collect();
+    thread::sleep(Duration::from_millis(40));
+    let swap_start = Instant::now();
+    let report = registry
+        .swap("major", &v2_path.display().to_string())
+        .context("registry bench: hot swap")?;
+    let swap_end = Instant::now();
+    let swap_seconds = (swap_end - swap_start).as_secs_f64();
+    thread::sleep(Duration::from_millis(40));
+    stop.store(true, Ordering::Relaxed);
+
+    let mut steady = Vec::new();
+    let mut during = Vec::new();
+    let mut swap_requests = 0usize;
+    let mut lost = 0usize;
+    for handle in submitters {
+        let (samples, thread_lost) = handle.join().expect("submitter thread");
+        lost += thread_lost;
+        swap_requests += samples.len();
+        for (sent, latency) in samples {
+            if sent < swap_start {
+                steady.push(latency);
+            } else if sent <= swap_end {
+                during.push(latency);
+            }
+        }
+    }
+    let steady_p99_s = p99(&mut steady);
+    let swap_p99_s = if during.is_empty() { steady_p99_s } else { p99(&mut during) };
+
+    Arc::try_unwrap(registry)
+        .unwrap_or_else(|_| panic!("registry still referenced after bench"))
+        .shutdown()?;
+    Ok(RegistryBench {
+        workers: WORKERS,
+        requests,
+        throughput,
+        models,
+        swap_seconds,
+        old_version: report.old_version,
+        new_version: report.new_version,
+        swap_requests,
+        lost,
+        steady_p99_s,
+        swap_p99_s,
+    })
+}
+
+pub fn render(b: &RegistryBench) -> String {
+    use super::report::Table;
+    let mut t = Table::new(
+        &format!(
+            "multi-model registry ({} workers, {} weighted requests)",
+            b.workers, b.requests
+        ),
+        &["model", "share", "replicas", "requests", "observed"],
+    );
+    for m in &b.models {
+        t.row(vec![
+            m.name.clone(),
+            format!("{:.0}", m.share),
+            m.replicas.to_string(),
+            m.requests.to_string(),
+            format!("{:.1}%", m.fraction * 100.0),
+        ]);
+    }
+    t.footnote(&format!("routed throughput: {:.0} req/s (pipelined)", b.throughput));
+    t.footnote(&format!(
+        "hot swap major v{} -> v{} in {:.3}s under load: {} requests, {} lost",
+        b.old_version, b.new_version, b.swap_seconds, b.swap_requests, b.lost
+    ));
+    t.footnote(&format!(
+        "p99 steady {:.1}ms vs during-swap {:.1}ms ({:.2}x blip)",
+        b.steady_p99_s * 1e3,
+        b.swap_p99_s * 1e3,
+        b.blip()
+    ));
+    t.render()
+}
+
+/// Machine-readable twin of [`render`], written to `BENCH_registry.json`.
+pub fn to_json(b: &RegistryBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    let models: Vec<String> = b
+        .models
+        .iter()
+        .map(|m| {
+            format!(
+                "{{\"name\":\"{}\",\"share\":{},\"replicas\":{},\"requests\":{},\
+                 \"fraction\":{}}}",
+                json_escape(&m.name),
+                json_f64(m.share),
+                m.replicas,
+                m.requests,
+                json_f64(m.fraction),
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"registry\",\"workers\":{},\"requests\":{},\"throughput\":{},\
+         \"models\":[{}],\"swap_seconds\":{},\"old_version\":{},\"new_version\":{},\
+         \"swap_requests\":{},\"lost\":{},\"steady_p99_s\":{},\"swap_p99_s\":{},\
+         \"blip\":{}}}",
+        b.workers,
+        b.requests,
+        json_f64(b.throughput),
+        models.join(","),
+        json_f64(b.swap_seconds),
+        b.old_version,
+        b.new_version,
+        b.swap_requests,
+        b.lost,
+        json_f64(b.steady_p99_s),
+        json_f64(b.swap_p99_s),
+        json_f64(b.blip()),
+    )
+}
+
+/// The functional gate for the CI "registry smoke" job — no wall-clock
+/// thresholds, only the semantics the PR promises.
+pub fn check_shape(b: &RegistryBench) -> Result<(), String> {
+    if b.lost != 0 {
+        return Err(format!(
+            "{} request(s) lost across the hot swap (exactly-once broken)",
+            b.lost
+        ));
+    }
+    if b.new_version != b.old_version + 1 {
+        return Err(format!(
+            "swap did not bump the version: v{} -> v{}",
+            b.old_version, b.new_version
+        ));
+    }
+    if b.swap_requests == 0 {
+        return Err("no load completed around the swap; the bench measured nothing".into());
+    }
+    for m in &b.models {
+        if m.requests == 0 {
+            return Err(format!("model {:?} received no weighted traffic", m.name));
+        }
+        if m.replicas == 0 {
+            return Err(format!("model {:?} reports zero replicas", m.name));
+        }
+    }
+    let max_row = b
+        .models
+        .iter()
+        .max_by_key(|m| m.requests)
+        .expect("models non-empty");
+    if max_row.name != "major" {
+        return Err(format!(
+            "weighted routing off: {:?} outdrew the 70% model",
+            max_row.name
+        ));
+    }
+    Ok(())
+}

@@ -46,6 +46,14 @@ pub struct ServerConfig {
     /// 1 = trace everything (default), 0 = tracing off (stamps are a
     /// single branch).
     pub trace_sample: u64,
+    /// Multi-model registry: comma-separated `name=path.rpz[@share]`
+    /// entries ("" = single-model serving).  Each entry becomes a warm
+    /// replica set; `share` is a relative traffic weight that sizes the
+    /// model's replica count and admission quota (default 1).
+    pub models: String,
+    /// Registry only: the model `INFER` routes to when the wire line
+    /// carries no `@<model>` ("" = the first entry in `models`).
+    pub default_model: String,
 }
 
 impl Default for ServerConfig {
@@ -63,8 +71,68 @@ impl Default for ServerConfig {
             artifact: String::new(),
             listen: String::new(),
             trace_sample: 1,
+            models: String::new(),
+            default_model: String::new(),
         }
     }
+}
+
+/// One registry entry parsed out of the `models` config key:
+/// `name=path.rpz[@share]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub path: String,
+    /// Relative traffic weight.  Replica counts and per-model admission
+    /// quotas are sized from shares normalized across all entries.
+    pub share: f64,
+}
+
+/// Parse the `models` config value: a comma-separated list of
+/// `name=path.rpz[@share]` entries (share defaults to 1).
+pub fn parse_model_specs(text: &str) -> Result<Vec<ModelSpec>> {
+    let mut specs: Vec<ModelSpec> = Vec::new();
+    for raw in text.split(',') {
+        let entry = raw.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let Some((name, rest)) = entry.split_once('=') else {
+            bail!("model entry {entry:?}: expected name=path.rpz[@share]");
+        };
+        let name = name.trim();
+        let (path, share) = match rest.rsplit_once('@') {
+            Some((p, s)) => {
+                let share: f64 = s
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("model {name:?}: share {s:?}"))?;
+                (p.trim(), share)
+            }
+            None => (rest.trim(), 1.0),
+        };
+        if name.is_empty() {
+            bail!("model entry {entry:?}: empty model name");
+        }
+        if !path.ends_with(".rpz") {
+            bail!("model {name:?}: artifact must be a .rpz file, got {path:?}");
+        }
+        if !(share.is_finite() && share > 0.0) {
+            bail!("model {name:?}: share must be finite and > 0, got {share}");
+        }
+        if specs.iter().any(|s| s.name == name) {
+            bail!("duplicate model name {name:?}");
+        }
+        specs.push(ModelSpec {
+            name: name.to_string(),
+            path: path.to_string(),
+            share,
+        });
+    }
+    if specs.is_empty() {
+        bail!("models list is empty");
+    }
+    Ok(specs)
 }
 
 /// Parse a `key = value` (TOML-subset) document into a map.  Supports
@@ -116,6 +184,8 @@ impl ServerConfig {
                 "artifact" => cfg.artifact = v.clone(),
                 "listen" => cfg.listen = v.clone(),
                 "trace_sample" => cfg.trace_sample = v.parse().context("trace_sample")?,
+                "models" => cfg.models = v.clone(),
+                "default_model" => cfg.default_model = v.clone(),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -152,9 +222,32 @@ impl ServerConfig {
             bail!("listen must be host:port (e.g. 127.0.0.1:7878), got {:?}", self.listen);
         }
         match self.backend.as_str() {
-            "pjrt" | "native" | "native-sparse" | "sim-batch" | "sim-prune" => Ok(()),
+            "pjrt" | "native" | "native-sparse" | "sim-batch" | "sim-prune" => {}
             other => bail!("unknown backend {other:?}"),
         }
+        if !self.models.is_empty() {
+            let specs = parse_model_specs(&self.models)?;
+            if !self.default_model.is_empty()
+                && !specs.iter().any(|s| s.name == self.default_model)
+            {
+                bail!(
+                    "default_model {:?} is not in the models list",
+                    self.default_model
+                );
+            }
+        } else if !self.default_model.is_empty() {
+            bail!("default_model set but models list is empty");
+        }
+        Ok(())
+    }
+
+    /// The parsed registry entries (`Err` when `models` is malformed,
+    /// empty `Vec` when single-model serving).
+    pub fn model_specs(&self) -> Result<Vec<ModelSpec>> {
+        if self.models.is_empty() {
+            return Ok(Vec::new());
+        }
+        parse_model_specs(&self.models)
     }
 }
 
@@ -253,6 +346,50 @@ mod tests {
         assert_eq!(ServerConfig::default().trace_sample, 1);
         let cfg = ServerConfig::from_kv_text("trace_sample = 8\n").unwrap();
         assert_eq!(cfg.trace_sample, 8);
+    }
+
+    #[test]
+    fn model_specs_parse_names_paths_and_shares() {
+        let specs = parse_model_specs("mnist=a/mnist.rpz@7, har=b/har.rpz@3,aux=c.rpz").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0], ModelSpec {
+            name: "mnist".into(),
+            path: "a/mnist.rpz".into(),
+            share: 7.0,
+        });
+        assert_eq!(specs[1].name, "har");
+        assert_eq!(specs[1].share, 3.0);
+        assert_eq!(specs[2].share, 1.0, "share defaults to 1");
+
+        assert!(parse_model_specs("").is_err());
+        assert!(parse_model_specs("noequals.rpz").is_err());
+        assert!(parse_model_specs("m=weights.zdnw").is_err(), "non-.rpz path");
+        assert!(parse_model_specs("m=a.rpz@0").is_err(), "zero share");
+        assert!(parse_model_specs("m=a.rpz@-1").is_err(), "negative share");
+        assert!(parse_model_specs("m=a.rpz,m=b.rpz").is_err(), "duplicate name");
+        assert!(parse_model_specs("=a.rpz").is_err(), "empty name");
+    }
+
+    #[test]
+    fn models_keys_parse_and_validate() {
+        let cfg = ServerConfig::from_kv_text(
+            "models = \"a=x.rpz@2,b=y.rpz\"\ndefault_model = \"b\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model_specs().unwrap().len(), 2);
+        assert_eq!(cfg.default_model, "b");
+
+        // default_model must name a listed model
+        assert!(ServerConfig::from_kv_text(
+            "models = \"a=x.rpz\"\ndefault_model = \"zzz\"\n"
+        )
+        .is_err());
+        // ... and needs a models list at all
+        assert!(ServerConfig::from_kv_text("default_model = \"a\"\n").is_err());
+        // malformed entries fail at validate time
+        assert!(ServerConfig::from_kv_text("models = \"a=x.txt\"\n").is_err());
+        // single-model configs are unaffected
+        assert!(ServerConfig::default().model_specs().unwrap().is_empty());
     }
 
     #[test]

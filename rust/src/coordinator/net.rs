@@ -14,9 +14,12 @@
 //! replies come back **out of order**, each carrying the request's tag:
 //!
 //! ```text
-//! -> INFER [BULK] #<id> <f32> ... <f32>\n   (s_0 values, real units;
+//! -> INFER [@<model>] [BULK] [#<id>] <f32> ... <f32>\n
+//!                                           (s_0 values, real units;
 //!                                            BULK opts down from the
-//!                                            Interactive default)
+//!                                            Interactive default;
+//!                                            @<model> routes on a
+//!                                            multi-model registry)
 //! <- OK #<id> <class> <queue_us> <compute_us> <occupancy> <q78 outputs...>\n
 //! <- ERR #<id> <message>\n                  (parse/backpressure/engine
 //!                                            errors route to their tag)
@@ -79,6 +82,36 @@
 //! server config picks every n-th request id, 0 disables.  The frontend
 //! re-stamps `reply_sent` for pipelined requests when the reply line
 //! actually hits the socket, so wire traces include demux/write time.
+//! On a registry, trace lines carry a trailing `model=<name>` tag.
+//!
+//! # Multi-model serving (registry)
+//!
+//! When the serving target is a model registry (`serve --models`), any
+//! `INFER` form may name its model with `@<model>` right after the verb:
+//!
+//! ```text
+//! -> INFER @<model> [BULK] [#<id>] <f32> ... <f32>\n
+//!      (no @<model> = the registry's configured default model; an
+//!       unloaded name answers ERR [#<id>] with "unknown model ...",
+//!       routed to the tag when one was given)
+//! -> MODELS\n
+//! <- MODELS <k>\n            (k registered models, sorted by name)
+//! <- MODEL name=<n> version=<v> replicas=<r> share=<s> requests=<q>
+//!      default=<0|1>\n       (k lines, mirroring the TRACES framing)
+//! -> SWAP <model> <path.rpz>\n
+//! <- OK SWAP <model> v<old> -> v<new> replicas=<r> drained=<n>\n
+//! <- ERR SWAP <model>: <message>\n
+//! ```
+//!
+//! `SWAP` is an untagged admin command with zero-downtime semantics: the
+//! new version is loaded and warmed off the serving path, the registry
+//! entry flips atomically, and the old replica set drains — in-flight
+//! and queued requests complete on the old version, later submissions
+//! land on the new one, nothing is dropped or double-replied.  The reply
+//! is written only after the drain finishes, so it lockstep-blocks *its
+//! own connection* (tagged replies keep draining around it; other
+//! connections are unaffected).  On single-model targets `@<model>`,
+//! `MODELS`, and `SWAP` answer ERR.
 //!
 //! The priority class is deliberately a wire concept: `INFER` defaults to
 //! Interactive (a remote caller waiting on the reply is latency traffic),
@@ -125,6 +158,39 @@ pub trait SubmitTarget: Send + Sync {
 
     /// The uniform STATS payload (a pool merges its shards here).
     fn stats(&self) -> StatsReport;
+
+    /// Route one submission to a named model.  `None` routes to the
+    /// target's default model — identical to
+    /// [`SubmitTarget::submit_with`] for single-model targets, which
+    /// reject any explicit name (the registry overrides this with real
+    /// per-model routing).
+    fn submit_model(
+        &self,
+        model: Option<&str>,
+        input: Vec<i32>,
+        priority: Priority,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
+        match model {
+            None => self.submit_with(input, priority, deadline, reply),
+            Some(name) => bail!("unknown model {name:?} (single-model serving target)"),
+        }
+    }
+
+    /// The `MODELS` wire lines (`MODEL name=... version=...`), when this
+    /// target fronts a registry.  `None` = single-model target: the
+    /// frontend answers ERR.
+    fn models(&self) -> Option<Vec<String>> {
+        None
+    }
+
+    /// Hot-swap `name` to the artifact at `path` (the `SWAP` admin
+    /// command); returns the summary line once the old replica set has
+    /// fully drained.  Default: no registry, no swap.
+    fn swap_model(&self, name: &str, _path: &str) -> Result<String> {
+        bail!("model swap unsupported: {name:?} is not served by a registry")
+    }
 
     /// The serving stack's request-trace ring, when it keeps one (the
     /// frontend serves `TRACE` from it and re-stamps `reply_sent` at
@@ -519,13 +585,34 @@ fn serve_lines(
                     write_line(writer, &t.render())?;
                 }
             }
+            Ok(Command::Models) => match target.models() {
+                // count-framed like TRACES: "MODELS <k>" then k lines
+                Some(lines) => {
+                    write_line(writer, &format!("MODELS {}", lines.len()))?;
+                    for l in &lines {
+                        write_line(writer, l)?;
+                    }
+                }
+                None => write_line(writer, "ERR MODELS: single-model serving target")?,
+            },
+            Ok(Command::Swap { model, path }) => {
+                // untagged lockstep admin: the reply is written only after
+                // the old replica set drains, blocking this connection's
+                // untagged stream (tagged replies keep demuxing around it)
+                let reply = match target.swap_model(&model, &path) {
+                    Ok(summary) => format!("OK {summary}"),
+                    Err(e) => format!("ERR SWAP {model}: {e:#}"),
+                };
+                write_line(writer, &reply)?;
+            }
             Ok(Command::Infer {
                 values,
                 priority,
                 tag: None,
+                model,
             }) => {
                 // v1 lockstep: block right here until the reply is out
-                let reply = match infer_lockstep(target, values, priority) {
+                let reply = match infer_lockstep(target, model.as_deref(), values, priority) {
                     Ok(reply) => reply,
                     Err(e) => format!("ERR {e}"),
                 };
@@ -535,15 +622,16 @@ fn serve_lines(
                 values,
                 priority,
                 tag: Some(tag),
+                model,
             }) => {
                 let input = crate::fixedpoint::quantize_slice(&values);
-                // holding `pending` across submit_with makes the tag
-                // insertion atomic with the submission, so the demux can
-                // never receive a completion whose mapping is missing
+                // holding `pending` across submit makes the tag insertion
+                // atomic with the submission, so the demux can never
+                // receive a completion whose mapping is missing
                 let submitted = {
                     let mut p = pending.lock().unwrap();
                     target
-                        .submit_with(input, priority, None, completions.clone())
+                        .submit_model(model.as_deref(), input, priority, None, completions.clone())
                         .map(|id| {
                             p.insert(id, tag);
                         })
@@ -563,12 +651,16 @@ enum Command {
         values: Vec<f32>,
         priority: Priority,
         tag: Option<u64>,
+        /// `@<model>` routing target (`None` = the default model).
+        model: Option<String>,
     },
     Stats,
     StatsJson,
     StatsProm,
     TraceOne(RequestId),
     TraceLast(usize),
+    Models,
+    Swap { model: String, path: String },
     Quit,
 }
 
@@ -578,6 +670,17 @@ fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
     let mut parts = line.split_ascii_whitespace().peekable();
     match parts.next() {
         Some("INFER") => {
+            // fixed operand order: @<model>, then BULK, then #<tag>
+            let model = match parts.peek() {
+                Some(m) if m.starts_with('@') => {
+                    let name = &parts.next().expect("peeked")[1..];
+                    if name.is_empty() {
+                        return Err((None, "empty model name (want @<model>)".into()));
+                    }
+                    Some(name.to_string())
+                }
+                _ => None,
+            };
             let priority = if parts.peek().copied() == Some("BULK") {
                 parts.next();
                 Priority::Bulk
@@ -602,6 +705,7 @@ fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
                     values: v,
                     priority,
                     tag,
+                    model,
                 }),
                 Ok(_) => Err((tag, "INFER needs at least one value".into())),
                 Err(e) => Err((tag, format!("bad number: {e}"))),
@@ -624,6 +728,14 @@ fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
             },
             _ => Err((None, "TRACE wants #<id> or LAST <n>".into())),
         },
+        Some("MODELS") => Ok(Command::Models),
+        Some("SWAP") => match (parts.next(), parts.next()) {
+            (Some(model), Some(path)) => Ok(Command::Swap {
+                model: model.to_string(),
+                path: path.to_string(),
+            }),
+            _ => Err((None, "SWAP wants <model> <path.rpz>".into())),
+        },
         Some("QUIT") => Ok(Command::Quit),
         Some(other) => Err((None, format!("unknown command {other:?}"))),
         None => Err((None, "empty command".into())),
@@ -632,13 +744,18 @@ fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
 
 fn infer_lockstep(
     target: &dyn SubmitTarget,
+    model: Option<&str>,
     values: Vec<f32>,
     priority: Priority,
 ) -> Result<String, String> {
     let input = crate::fixedpoint::quantize_slice(&values);
-    let resp = target
-        .infer_prioritized(input, priority)
+    let opts = SubmitOptions::with_priority(priority);
+    let (tx, rx) = mpsc::channel();
+    let id = target
+        .submit_model(model, input, priority, None, tx)
         .map_err(|e| format!("{e:#}"))?;
+    let mut ticket = Ticket::new(id, &opts, rx);
+    let resp = ticket.wait().map_err(|e| format!("{e}"))?;
     Ok(render_ok(None, &resp))
 }
 
@@ -900,12 +1017,28 @@ impl NetClient {
     /// window is what keeps the accelerator's batch slots full from one
     /// connection.
     pub fn submit(&mut self, values: &[f32], priority: Priority) -> Result<NetTicket> {
+        self.submit_to(None, values, priority)
+    }
+
+    /// [`NetClient::submit`] with explicit model routing: the wire line
+    /// carries `@<model>` so a registry target serves the named model
+    /// (`None` = its default).  An unloaded name fails the ticket with
+    /// the server's tagged "unknown model" error.
+    pub fn submit_to(
+        &mut self,
+        model: Option<&str>,
+        values: &[f32],
+        priority: Priority,
+    ) -> Result<NetTicket> {
         self.check_poisoned()?;
         let tag = self.next_tag;
         self.next_tag += 1;
         let (tx, rx) = mpsc::channel();
         self.shared.lock().unwrap().pending.insert(tag, tx);
         let mut line = String::from("INFER");
+        if let Some(m) = model {
+            line.push_str(&format!(" @{m}"));
+        }
         if priority == Priority::Bulk {
             line.push_str(" BULK");
         }
@@ -932,6 +1065,12 @@ impl NetClient {
         self.check_poisoned()?;
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
+        self.recv_lockstep()
+    }
+
+    /// Receive the next untagged (lockstep) reply line — multi-line
+    /// framed replies (`MODELS <k>`) call this once per expected line.
+    fn recv_lockstep(&mut self) -> Result<String> {
         let reply = match self.timeout.get() {
             None => self.lockstep.recv().ok(),
             Some(t) => self.lockstep.recv_timeout(t).ok(),
@@ -984,6 +1123,36 @@ impl NetClient {
 
     pub fn stats(&mut self) -> Result<String> {
         self.round_trip("STATS")
+    }
+
+    /// The registry's model listing: one `MODEL name=... version=...`
+    /// line per registered model (ERR on single-model targets).
+    pub fn models(&mut self) -> Result<Vec<String>> {
+        let head = self.round_trip("MODELS")?;
+        let Some(count) = head.strip_prefix("MODELS ") else {
+            bail!("server error: {head}");
+        };
+        let count: usize = count
+            .trim()
+            .parse()
+            .with_context(|| format!("bad MODELS count in {head:?}"))?;
+        let mut lines = Vec::with_capacity(count);
+        for _ in 0..count {
+            lines.push(self.recv_lockstep()?);
+        }
+        Ok(lines)
+    }
+
+    /// Hot-swap `model` to the artifact at `path` on the server; blocks
+    /// until the old version has drained and returns the summary
+    /// (`SWAP <model> v<old> -> v<new> ...`).  Set a generous
+    /// [`NetClient::set_timeout`] — the reply waits out the drain.
+    pub fn swap(&mut self, model: &str, path: &str) -> Result<String> {
+        let reply = self.round_trip(&format!("SWAP {model} {path}"))?;
+        match reply.strip_prefix("OK ") {
+            Some(summary) => Ok(summary.to_string()),
+            None => bail!("server error: {reply}"),
+        }
     }
 
     pub fn quit(mut self) -> Result<()> {
@@ -1178,10 +1347,12 @@ mod tests {
                 values,
                 priority,
                 tag,
+                model,
             }) => {
                 assert_eq!(values, vec![0.5, 1.5]);
                 assert_eq!(priority, Priority::Interactive);
                 assert_eq!(tag, Some(7));
+                assert_eq!(model, None);
             }
             _ => panic!("tagged INFER must parse"),
         }
@@ -1207,6 +1378,73 @@ mod tests {
             Ok(Command::Infer { tag, .. }) => assert_eq!(tag, None),
             _ => panic!("untagged INFER must parse"),
         }
+    }
+
+    #[test]
+    fn parse_command_reads_model_routing() {
+        // full operand order: @<model> BULK #<tag>
+        match parse_command("INFER @mnist BULK #9 0.5") {
+            Ok(Command::Infer {
+                model,
+                priority,
+                tag,
+                values,
+            }) => {
+                assert_eq!(model.as_deref(), Some("mnist"));
+                assert_eq!(priority, Priority::Bulk);
+                assert_eq!(tag, Some(9));
+                assert_eq!(values, vec![0.5]);
+            }
+            _ => panic!("model-routed INFER must parse"),
+        }
+        // model alone, lockstep form
+        match parse_command("INFER @har 1.0 2.0") {
+            Ok(Command::Infer { model, tag, .. }) => {
+                assert_eq!(model.as_deref(), Some("har"));
+                assert_eq!(tag, None);
+            }
+            _ => panic!("lockstep model INFER must parse"),
+        }
+        assert!(parse_command("INFER @ 1.0").is_err(), "empty model name");
+        assert!(matches!(parse_command("MODELS"), Ok(Command::Models)));
+        match parse_command("SWAP mnist /tmp/v2.rpz") {
+            Ok(Command::Swap { model, path }) => {
+                assert_eq!(model, "mnist");
+                assert_eq!(path, "/tmp/v2.rpz");
+            }
+            _ => panic!("SWAP must parse"),
+        }
+        assert!(parse_command("SWAP mnist").is_err(), "SWAP wants a path");
+        assert!(parse_command("SWAP").is_err());
+    }
+
+    #[test]
+    fn single_model_target_rejects_registry_commands() {
+        // the defaulted trait hooks keep single-model stacks honest:
+        // @<model> routing, MODELS, and SWAP all answer ERR
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+        let err = client.round_trip("INFER @ghost 0.5").unwrap();
+        assert!(err.starts_with("ERR"), "{err}");
+        assert!(err.contains("unknown model"), "{err}");
+        let mut t = client
+            .submit_to(Some("ghost"), &vec![0.25f32; 64], Priority::Bulk)
+            .unwrap();
+        let e = t.wait_timeout(Duration::from_secs(10)).unwrap_err();
+        assert!(e.to_string().contains("unknown model"), "{e}");
+        assert!(client.models().unwrap_err().to_string().contains("MODELS"));
+        let e = client.swap("ghost", "/tmp/x.rpz").unwrap_err();
+        assert!(e.to_string().contains("server error"), "{e}");
+        // and the connection still serves plain inference afterwards
+        let values: Vec<f32> = (0..64).map(|i| (i as f32) / 80.0 - 0.3).collect();
+        let (_, outputs) = client.infer(&values).unwrap();
+        let xq = crate::fixedpoint::quantize_slice(&values);
+        let x = crate::tensor::MatI::from_vec(1, 64, xq);
+        let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
+        assert_eq!(outputs, golden.row(0));
+        client.quit().unwrap();
+        fe.stop();
     }
 
     #[test]

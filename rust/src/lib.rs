@@ -34,6 +34,7 @@ pub mod fixedpoint;
 pub mod nn;
 pub mod obs;
 pub mod perfmodel;
+pub mod registry;
 pub mod runtime;
 pub mod serve;
 pub mod sparse;

@@ -9,7 +9,12 @@
 //!   serve                        demo serving loop with the dynamic batcher
 //!                                (delegates to the sharded pool when --workers > 1;
 //!                                --listen exposes either stack over TCP with
-//!                                INFER / INFER BULK priorities on the wire)
+//!                                INFER / INFER BULK priorities on the wire;
+//!                                --models name=path.rpz[@share],... serves a
+//!                                multi-model registry with INFER @<model>
+//!                                routing, MODELS, and zero-downtime SWAP)
+//!   swap                         hot-swap a model on a running registry server:
+//!                                zynq-dnn swap <model> <path.rpz> [--connect a:p]
 //!   serve-pool                   sharded pool demo: mixed-priority traffic,
 //!                                per-shard + aggregate metrics
 //!   sim                          simulate one network on both accelerators
@@ -19,8 +24,9 @@
 //!   bench <which>                regenerate a paper table/figure, or run the
 //!                                serving benches (table2|table3|table4|fig7|
 //!                                gops|nopt|combined|ablation|sparse|slo|
-//!                                calibrate|compress|net|obs|all); sparse/slo/
-//!                                compress/net/obs also write BENCH_<which>.json
+//!                                calibrate|compress|net|obs|registry|all);
+//!                                sparse/slo/compress/net/obs/registry also
+//!                                write BENCH_<which>.json
 //!
 //! `infer`, `serve`, `serve-pool`, and `profile` take `--artifact model.rpz`
 //! to serve a compressed model directly: the network weights AND the
@@ -180,6 +186,24 @@ const GLOBAL_FLAGS: &[FlagSpec] = &[
         help: "serve: trace every n-th request id (1 = all, 0 = off); \
                query with TRACE #<id> / TRACE LAST <n> on the wire",
     },
+    FlagSpec {
+        name: "models",
+        takes_value: true,
+        help: "serve: multi-model registry, comma list of name=path.rpz[@share] \
+               (requires --listen; route with INFER @<model> on the wire)",
+    },
+    FlagSpec {
+        name: "default-model",
+        takes_value: true,
+        help: "serve: model that plain INFER (no @<model>) routes to \
+               (default: first entry of --models)",
+    },
+    FlagSpec {
+        name: "connect",
+        takes_value: true,
+        help: "swap: address of the running registry server \
+               (default 127.0.0.1:7878)",
+    },
 ];
 
 fn main() {
@@ -203,14 +227,15 @@ fn run(argv: &[String]) -> Result<()> {
         "infer" => infer(&args),
         "serve" => serve(&args),
         "serve-pool" => serve_pool(&args),
+        "swap" => swap_cmd(&args),
         "sim" => sim(&args),
         "profile" => profile(&args),
         "bench" => run_bench(&args),
         _ => {
             println!("zynq-dnn — FPGA DNN inference throughput reproduction\n");
             println!(
-                "usage: zynq-dnn <info|train|compress|infer|serve|serve-pool|sim|profile|bench> \
-                 [flags]\n"
+                "usage: zynq-dnn <info|train|compress|infer|serve|serve-pool|swap|sim|profile|\
+                 bench> [flags]\n"
             );
             println!("{}", usage(GLOBAL_FLAGS));
             Ok(())
@@ -515,6 +540,51 @@ fn serve(args: &Args) -> Result<()> {
     let deadline = args.get_usize("deadline-us", 2000)? as u64;
     let workers = args.get_usize("workers", 1)?;
 
+    if let Some(models) = args.get("models") {
+        // registry mode: many named .rpz replica sets behind one socket,
+        // with INFER @<model> routing, MODELS, and zero-downtime SWAP
+        let Some(listen) = args.get("listen") else {
+            bail!("--models serves over TCP only; add --listen <addr:port>");
+        };
+        let policy = args.get_or("policy", "round-robin");
+        let promote = args.get_usize("promote-us", 20_000)? as u64;
+        let cfg = ServerConfig {
+            batch,
+            batch_deadline_us: deadline,
+            workers: workers.max(1),
+            policy: policy.into(),
+            bulk_promote_us: promote,
+            backend: backend.into(),
+            artifacts_dir: artifacts_dir(args).display().to_string(),
+            listen: listen.to_string(),
+            trace_sample: args.get_usize("trace-sample", 1)? as u64,
+            models: models.to_string(),
+            default_model: args.get("default-model").unwrap_or("").to_string(),
+            ..Default::default()
+        };
+        let registry = std::sync::Arc::new(zynq_dnn::registry::Registry::start(&cfg)?);
+        eprintln!(
+            "registry: {} model(s), {} replica(s) over a {}-worker budget on {backend}, \
+             default model {:?}",
+            registry.len(),
+            registry.replicas_total(),
+            cfg.workers,
+            registry.default_model()
+        );
+        for line in registry.model_lines() {
+            eprintln!("  {line}");
+        }
+        let fe = zynq_dnn::coordinator::NetFrontend::start(&cfg.listen, registry)?;
+        eprintln!(
+            "listening on {} — protocol v2 + registry: INFER [@<model>] [BULK] [#<id>] <f32>... \
+             | MODELS | SWAP <model> <path.rpz> | STATS [JSON|PROM] | TRACE #<id> | \
+             TRACE LAST <n> | QUIT",
+            fe.addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     if let Some(listen) = args.get("listen") {
         // TCP mode: the frontend drives whichever SubmitTarget the worker
         // count selects — single engine or sharded pool — with the
@@ -699,6 +769,34 @@ fn serve_pool(args: &Args) -> Result<()> {
         }
     }
     serving.shutdown()?;
+    Ok(())
+}
+
+/// `swap <model> <path.rpz>`: drive a zero-downtime hot swap on a running
+/// `serve --models` frontend over the wire, then print the fresh model
+/// listing.  Blocks until the server finishes draining the old version.
+fn swap_cmd(args: &Args) -> Result<()> {
+    let model = args
+        .positionals
+        .get(1)
+        .context("usage: zynq-dnn swap <model> <path.rpz> [--connect addr:port]")?;
+    let path = args
+        .positionals
+        .get(2)
+        .context("usage: zynq-dnn swap <model> <path.rpz> [--connect addr:port]")?;
+    let addr: std::net::SocketAddr = args
+        .get_or("connect", "127.0.0.1:7878")
+        .parse()
+        .context("--connect: bad address")?;
+    let mut client = zynq_dnn::coordinator::NetClient::connect(&addr)?;
+    // the reply waits out the old version's drain — be generous
+    client.set_timeout(Some(std::time::Duration::from_secs(120)))?;
+    let summary = client.swap(model, path)?;
+    println!("{summary}");
+    for line in client.models()? {
+        println!("{line}");
+    }
+    client.quit()?;
     Ok(())
 }
 
@@ -901,10 +999,21 @@ fn run_bench(args: &Args) -> Result<()> {
         }
         ran = true;
     }
+    if all || which == "registry" {
+        let r = bench::registry::run()?;
+        println!("{}", bench::registry::render(&r));
+        emit("registry", &bench::registry::to_json(&r))?;
+        // functional gate (no wall-clock dependence): the hot swap under
+        // load must lose nothing — run by the CI "registry smoke" job
+        if let Err(e) = bench::registry::check_shape(&r) {
+            bail!("registry shape check failed: {e}");
+        }
+        ran = true;
+    }
     if !ran {
         bail!(
             "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|\
-             ablation|sparse|calibrate|compress|slo|net|obs|all)"
+             ablation|sparse|calibrate|compress|slo|net|obs|registry|all)"
         );
     }
     Ok(())

@@ -71,6 +71,9 @@ impl SpanKind {
 pub struct Trace {
     pub id: RequestId,
     pub spans: [Option<u64>; SPAN_COUNT],
+    /// Model the request routed to, when a multi-model registry tagged
+    /// it ([`TraceRing::set_model`]); `None` on single-model stacks.
+    pub model: Option<String>,
 }
 
 impl Trace {
@@ -111,6 +114,9 @@ impl Trace {
                 None => out.push_str(&format!(" {}_us=-", kind.as_str())),
             }
         }
+        if let Some(model) = &self.model {
+            out.push_str(&format!(" model={model}"));
+        }
         out
     }
 }
@@ -120,6 +126,9 @@ struct Slot {
     id: RequestId,
     live: bool,
     spans: [Option<u64>; SPAN_COUNT],
+    /// Index into the ring's interned model-name table (multi-model
+    /// registries tag each sampled request with the model it routed to).
+    model: Option<u16>,
 }
 
 impl Slot {
@@ -128,6 +137,7 @@ impl Slot {
             id: 0,
             live: false,
             spans: [None; SPAN_COUNT],
+            model: None,
         }
     }
 }
@@ -143,6 +153,9 @@ pub struct TraceRing {
     epoch: Instant,
     sample: u64,
     slots: Vec<Mutex<Slot>>,
+    /// Interned model names ([`TraceRing::set_model`]): slots store a
+    /// `u16` index so tagging never allocates on the stamp path.
+    names: Mutex<Vec<String>>,
     recorded: AtomicU64,
     evicted: AtomicU64,
     dropped_late: AtomicU64,
@@ -158,6 +171,7 @@ impl TraceRing {
             epoch: Instant::now(),
             sample,
             slots: (0..cap).map(|_| Mutex::new(Slot::empty())).collect(),
+            names: Mutex::new(Vec::new()),
             recorded: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
             dropped_late: AtomicU64::new(0),
@@ -241,6 +255,39 @@ impl TraceRing {
         }
     }
 
+    /// Tag `id`'s trace with the model it routed to (multi-model
+    /// registries call this right after a successful submit).  The name
+    /// is interned once; the slot stores a small index.  Late tags for
+    /// an evicted trace are ignored like late stamps.
+    pub fn set_model(&self, id: RequestId, name: &str) {
+        if !self.sampled(id) {
+            return;
+        }
+        let idx = {
+            let Ok(mut names) = self.names.lock() else {
+                return;
+            };
+            match names.iter().position(|n| n == name) {
+                Some(i) => i,
+                None if names.len() < u16::MAX as usize => {
+                    names.push(name.to_string());
+                    names.len() - 1
+                }
+                None => return,
+            }
+        };
+        if let Ok(mut slot) = self.slots[self.slot_of(id)].lock() {
+            if slot.live && slot.id == id {
+                slot.model = Some(idx as u16);
+            }
+        }
+    }
+
+    fn model_name(&self, idx: Option<u16>) -> Option<String> {
+        let idx = idx? as usize;
+        self.names.lock().ok()?.get(idx).cloned()
+    }
+
     /// Free `id`'s slot if it still holds `id` (used when `enqueue` rolls
     /// back a submission after stamping, so failed submissions do not
     /// linger as eternally-incomplete traces).
@@ -261,32 +308,40 @@ impl TraceRing {
         if !self.sampled(id) {
             return None;
         }
-        let slot = self.slots[self.slot_of(id)].lock().ok()?;
-        if slot.live && slot.id == id {
-            Some(Trace {
-                id,
-                spans: slot.spans,
-            })
-        } else {
-            None
-        }
+        let (spans, model) = {
+            let slot = self.slots[self.slot_of(id)].lock().ok()?;
+            if !(slot.live && slot.id == id) {
+                return None;
+            }
+            (slot.spans, slot.model)
+        };
+        Some(Trace {
+            id,
+            spans,
+            model: self.model_name(model),
+        })
     }
 
     /// The `n` most recently submitted live traces, newest first.
     pub fn last(&self, n: usize) -> Vec<Trace> {
-        let mut all: Vec<Trace> = self
+        let live: Vec<(RequestId, [Option<u64>; SPAN_COUNT], Option<u16>)> = self
             .slots
             .iter()
             .filter_map(|s| {
                 let g = s.lock().ok()?;
                 if g.live {
-                    Some(Trace {
-                        id: g.id,
-                        spans: g.spans,
-                    })
+                    Some((g.id, g.spans, g.model))
                 } else {
                     None
                 }
+            })
+            .collect();
+        let mut all: Vec<Trace> = live
+            .into_iter()
+            .map(|(id, spans, model)| Trace {
+                id,
+                spans,
+                model: self.model_name(model),
             })
             .collect();
         all.sort_by(|a, b| b.span(SpanKind::Submitted).cmp(&a.span(SpanKind::Submitted)));
@@ -394,7 +449,29 @@ mod tests {
         let t = Trace {
             id: 1,
             spans: [Some(10), Some(5), None, None, None, None],
+            model: None,
         };
         assert!(!t.monotonic());
+    }
+
+    #[test]
+    fn model_tag_interns_and_renders() {
+        let r = TraceRing::new(8, 1);
+        r.stamp(0, SpanKind::Submitted);
+        r.stamp(1, SpanKind::Submitted);
+        r.set_model(0, "mnist");
+        r.set_model(1, "mnist");
+        let t = r.get(0).unwrap();
+        assert_eq!(t.model.as_deref(), Some("mnist"));
+        assert!(t.render().ends_with(" model=mnist"), "{}", t.render());
+        // untagged traces render without a model suffix
+        r.stamp(2, SpanKind::Submitted);
+        assert!(!r.get(2).unwrap().render().contains("model="));
+        // late tags for evicted traces are ignored, like late stamps
+        let small = TraceRing::new(2, 1);
+        small.stamp(0, SpanKind::Submitted);
+        small.stamp(2, SpanKind::Submitted); // evicts #0
+        small.set_model(0, "gone");
+        assert!(small.get(2).unwrap().model.is_none());
     }
 }

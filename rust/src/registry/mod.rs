@@ -1,0 +1,854 @@
+//! Multi-model registry: many named, versioned `.rpz` artifacts fronting
+//! the sharded serving pool, with per-model routing and zero-downtime hot
+//! swap.
+//!
+//! Each registered model owns a warm replica set — a
+//! [`ServePool`](crate::serve::ServePool) whose worker count is sized
+//! from the model's configured traffic share — compiled once via the
+//! plan-replication path ([`ExecPlan::compile_artifact`] +
+//! [`clone_shared`](crate::exec::ExecPlan::clone_shared)) like any
+//! single-model pool.  All pools share one request-id counter and one
+//! trace ring, so the PR 4–5 ticket/wire machinery (tagged pipelining,
+//! one demux per connection, `TRACE #<id>`) works unchanged: the
+//! registry is just another [`SubmitTarget`] that routes by model name
+//! before handing the request to a pool.
+//!
+//! Hot swap ([`Registry::swap`]) is the headline semantics:
+//!
+//! 1. **Warm off-path** — the new version's artifact is loaded and its
+//!    replica set compiled on the caller thread; the serving map is
+//!    untouched, so live traffic never sees a cold replica.
+//! 2. **Atomic flip** — the registry entry is replaced under a write
+//!    lock; every submission after the flip lands on the new version.
+//! 3. **Drain** — the old replica set is shut down gracefully: shard
+//!    shutdown force-drains queued batches (see
+//!    [`executor_loop`](crate::coordinator::executor::executor_loop)),
+//!    so in-flight and already-queued requests complete on the old
+//!    version.  Nothing is dropped and nothing is double-replied; the
+//!    swap call returns only after the drain finishes.
+//!
+//! A submission racing the flip can catch the old pool mid-shutdown;
+//! [`Registry::submit_to`] retries against the re-read map (which
+//! already holds the new entry), so the race resolves to "served by the
+//! new version" instead of a spurious rejection.
+//!
+//! Admission quotas ride the same shares: each model's pool gets
+//! `max(batch, share × queue_depth)` queue slots, so one model's burst
+//! saturates its own quota and bounces — it cannot crowd the other
+//! models out of the shared frontend.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelSpec, ServerConfig};
+use crate::coordinator::engine::EngineFactory;
+use crate::coordinator::net::{StatsReport, SubmitTarget};
+use crate::coordinator::request::{Priority, Reply, RequestId};
+use crate::obs::registry::Registry as MetricsRegistry;
+use crate::obs::trace::{TraceRing, TRACE_RING_CAPACITY};
+use crate::serve::{PoolHandle, ServePool, ShardMetrics};
+
+/// One registered model version: a named warm replica set.
+///
+/// Entries are immutable once published — a swap builds a *new* entry
+/// and flips the map pointer, so readers never observe a half-updated
+/// model.  No `Drop` impl: the swap path moves the pool out for a
+/// graceful drain.
+pub struct ModelEntry {
+    pub name: String,
+    /// Monotonic per-model version, bumped by every successful swap.
+    pub version: u64,
+    /// Artifact path this version was loaded from.
+    pub path: String,
+    /// Relative traffic weight (from the config `models` key).
+    pub share: f64,
+    replicas: usize,
+    pool: PoolHandle,
+    requests: AtomicU64,
+}
+
+impl ModelEntry {
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Requests this version has accepted.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+}
+
+/// Summary a completed hot swap returns (after the old version's drain).
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    pub model: String,
+    pub old_version: u64,
+    pub new_version: u64,
+    pub replicas: usize,
+    /// Requests the old version served over its lifetime (all of them —
+    /// the drain completes before the swap returns).
+    pub drained_requests: u64,
+}
+
+impl SwapReport {
+    /// Wire form for the `SWAP` admin reply.
+    pub fn render(&self) -> String {
+        format!(
+            "SWAP {} v{} -> v{} replicas={} drained={}",
+            self.model, self.old_version, self.new_version, self.replicas, self.drained_requests
+        )
+    }
+}
+
+/// How long a swap waits for transient `Arc` clones of the old entry
+/// (held briefly by racing submissions) to drop before giving up.
+const SWAP_DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A submission that catches a pool mid-swap retries against the re-read
+/// map this many times before surfacing the error.
+const SUBMIT_RETRIES: usize = 4;
+
+/// The model registry: named, versioned replica sets behind one
+/// [`SubmitTarget`] face.
+pub struct Registry {
+    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+    default_model: String,
+    /// Template config for per-model pools (batching knobs, backend,
+    /// policy); `workers`/`queue_depth` act as pool-wide budgets that
+    /// shares carve up.
+    base: ServerConfig,
+    total_workers: usize,
+    /// Shared across every model's pool — ids stay globally unique.
+    next_id: Arc<AtomicU64>,
+    /// One ring for all models; traces carry a `model=` tag.
+    trace: Arc<TraceRing>,
+    metrics: MetricsRegistry,
+    /// Serializes swaps (loads/swaps are rare admin operations).
+    swap_lock: Mutex<()>,
+    unknown_model: AtomicU64,
+    swaps: AtomicU64,
+}
+
+impl Registry {
+    /// Start a registry from `config.models` (`name=path.rpz[@share]`
+    /// entries): every model is loaded and warmed before this returns.
+    pub fn start(config: &ServerConfig) -> Result<Registry> {
+        config.validate()?;
+        let specs = config.model_specs()?;
+        if specs.is_empty() {
+            bail!("registry needs at least one model (config key `models`)");
+        }
+        let default_model = if config.default_model.is_empty() {
+            specs[0].name.clone()
+        } else {
+            config.default_model.clone()
+        };
+        let registry = Registry {
+            models: RwLock::new(HashMap::new()),
+            default_model,
+            base: config.clone(),
+            // every model gets at least one replica even when the worker
+            // budget is smaller than the model count
+            total_workers: config.workers,
+            next_id: Arc::new(AtomicU64::new(0)),
+            trace: Arc::new(TraceRing::new(TRACE_RING_CAPACITY, config.trace_sample)),
+            metrics: MetricsRegistry::new(),
+            swap_lock: Mutex::new(()),
+            unknown_model: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+        };
+        let total_share: f64 = specs.iter().map(|s| s.share).sum();
+        for spec in &specs {
+            let entry = registry.build_entry(spec, spec.share / total_share, 1)?;
+            registry.models.write().unwrap().insert(spec.name.clone(), entry);
+        }
+        Ok(registry)
+    }
+
+    /// Replica count for a normalized share: the model's slice of the
+    /// worker budget, never below one warm replica.
+    fn replicas_for(&self, share_frac: f64) -> usize {
+        let slice = (share_frac * self.total_workers as f64).round() as usize;
+        slice.clamp(1, self.total_workers.max(1))
+    }
+
+    /// Admission quota for a normalized share: the model's slice of the
+    /// pool-wide queue depth, never below one batch.
+    fn quota_for(&self, share_frac: f64) -> usize {
+        let slice = (share_frac * self.base.queue_depth as f64).round() as usize;
+        slice.max(self.base.batch)
+    }
+
+    /// Load + warm one model version into a publishable entry.  Runs
+    /// entirely off the serving path: plan compilation happens here, on
+    /// the caller thread, before anything touches the model map.
+    fn build_entry(
+        &self,
+        spec: &ModelSpec,
+        share_frac: f64,
+        version: u64,
+    ) -> Result<Arc<ModelEntry>> {
+        let replicas = self.replicas_for(share_frac);
+        let factory = EngineFactory::for_artifact(
+            Path::new(&spec.path),
+            &self.base.backend,
+            self.base.batch,
+            PathBuf::from(&self.base.artifacts_dir),
+            1,
+        )
+        .with_context(|| format!("model {:?}: load {}", spec.name, spec.path))?;
+        let cfg = ServerConfig {
+            workers: replicas,
+            queue_depth: self.quota_for(share_frac),
+            artifact: String::new(),
+            listen: String::new(),
+            models: String::new(),
+            default_model: String::new(),
+            ..self.base.clone()
+        };
+        let pool = ServePool::start_shared(&cfg, factory, self.next_id.clone(), self.trace.clone())
+            .with_context(|| format!("model {:?}: start replica set", spec.name))?;
+        Ok(Arc::new(ModelEntry {
+            name: spec.name.clone(),
+            version,
+            path: spec.path.clone(),
+            share: spec.share,
+            replicas,
+            pool,
+            requests: AtomicU64::new(0),
+        }))
+    }
+
+    /// Register a new model at runtime (unit traffic share).  Fails if
+    /// the name is taken — replacing a live model is [`Registry::swap`].
+    pub fn load(&self, name: &str, path: &str) -> Result<()> {
+        self.load_with_share(name, path, 1.0)
+    }
+
+    pub fn load_with_share(&self, name: &str, path: &str, share: f64) -> Result<()> {
+        if !(share.is_finite() && share > 0.0) {
+            bail!("model {name:?}: share must be finite and > 0, got {share}");
+        }
+        let _admin = self.swap_lock.lock().unwrap();
+        let share_frac = {
+            let models = self.models.read().unwrap();
+            if models.contains_key(name) {
+                bail!("model {name:?} already loaded (use swap to replace it)");
+            }
+            let total: f64 = models.values().map(|e| e.share).sum::<f64>() + share;
+            share / total
+        };
+        let spec = ModelSpec {
+            name: name.to_string(),
+            path: path.to_string(),
+            share,
+        };
+        let entry = self.build_entry(&spec, share_frac, 1)?;
+        // the admin lock guarantees nobody inserted the name concurrently
+        self.models.write().unwrap().insert(name.to_string(), entry);
+        Ok(())
+    }
+
+    /// Zero-downtime hot swap: warm `path` as the next version of
+    /// `name`, atomically flip the registry entry, then drain the old
+    /// replica set.  In-flight and queued requests complete on the old
+    /// version; submissions after the flip land on the new one; the call
+    /// returns only after the old pool has fully drained and joined.
+    pub fn swap(&self, name: &str, path: &str) -> Result<SwapReport> {
+        let _admin = self.swap_lock.lock().unwrap();
+        let (share, share_frac, old_version) = {
+            let models = self.models.read().unwrap();
+            let entry = models
+                .get(name)
+                .with_context(|| format!("unknown model {name:?}"))?;
+            let total: f64 = models.values().map(|e| e.share).sum();
+            (entry.share, entry.share / total, entry.version)
+        };
+        // 1. warm the new version off the serving path
+        let spec = ModelSpec {
+            name: name.to_string(),
+            path: path.to_string(),
+            share,
+        };
+        let fresh = self.build_entry(&spec, share_frac, old_version + 1)?;
+        let replicas = fresh.replicas;
+        // 2. atomic flip: everything submitted from here on serves v+1
+        let old = self
+            .models
+            .write()
+            .unwrap()
+            .insert(name.to_string(), fresh)
+            .expect("entry existed under the admin lock");
+        // 3. drain: wait out transient Arc clones held by racing
+        //    submissions (they drop within one enqueue call), then shut
+        //    the old pool down — shard shutdown executes the backlog, so
+        //    every accepted request still gets its reply
+        let deadline = Instant::now() + SWAP_DRAIN_TIMEOUT;
+        let mut old = old;
+        let entry = loop {
+            match Arc::try_unwrap(old) {
+                Ok(entry) => break entry,
+                Err(arc) => {
+                    if Instant::now() >= deadline {
+                        bail!("swap {name:?}: old replica set still referenced after drain wait");
+                    }
+                    old = arc;
+                    thread::sleep(Duration::from_micros(200));
+                }
+            }
+        };
+        let drained_requests = entry.requests.load(Ordering::Relaxed);
+        entry
+            .pool
+            .shutdown()
+            .with_context(|| format!("swap {name:?}: drain old replica set"))?;
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(SwapReport {
+            model: name.to_string(),
+            old_version,
+            new_version: old_version + 1,
+            replicas,
+            drained_requests,
+        })
+    }
+
+    fn entry(&self, model: Option<&str>) -> Result<Arc<ModelEntry>> {
+        let name = model.unwrap_or(&self.default_model);
+        let models = self.models.read().unwrap();
+        match models.get(name) {
+            Some(entry) => Ok(entry.clone()),
+            None => {
+                self.unknown_model.fetch_add(1, Ordering::Relaxed);
+                let mut known: Vec<&str> = models.keys().map(String::as_str).collect();
+                known.sort_unstable();
+                bail!("unknown model {name:?} (loaded: {})", known.join(", "))
+            }
+        }
+    }
+
+    /// The routed submission primitive: resolve `model` (`None` = the
+    /// default model), enqueue on its pool, and tag the trace.  Retries
+    /// when the resolved pool is mid-swap — the re-read map already
+    /// holds the new version, so the race costs a retry, not an error.
+    pub fn submit_to(
+        &self,
+        model: Option<&str>,
+        input: Vec<i32>,
+        priority: Priority,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
+        let mut attempt = 0;
+        loop {
+            let entry = self.entry(model)?;
+            match entry
+                .pool
+                .enqueue(input.clone(), priority, deadline, reply.clone())
+            {
+                Ok(id) => {
+                    entry.requests.fetch_add(1, Ordering::Relaxed);
+                    self.trace.set_model(id, &entry.name);
+                    return Ok(id);
+                }
+                Err(err) => {
+                    attempt += 1;
+                    let racing_swap = err.to_string().contains("shutting down");
+                    if !(racing_swap && attempt < SUBMIT_RETRIES) {
+                        return Err(err.context(format!("model {:?}", entry.name)));
+                    }
+                }
+            }
+        }
+    }
+
+    /// The `MODELS` wire lines, sorted by name: one
+    /// `MODEL name=... version=... replicas=... share=... requests=...
+    /// default=0|1` per registered model.
+    pub fn model_lines(&self) -> Vec<String> {
+        let models = self.models.read().unwrap();
+        let mut entries: Vec<&Arc<ModelEntry>> = models.values().collect();
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        entries
+            .iter()
+            .map(|e| {
+                format!(
+                    "MODEL name={} version={} replicas={} share={:.2} requests={} default={}",
+                    e.name,
+                    e.version,
+                    e.replicas,
+                    e.share,
+                    e.requests(),
+                    u8::from(e.name == self.default_model),
+                )
+            })
+            .collect()
+    }
+
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total replicas across all models (worker threads running).
+    pub fn replicas_total(&self) -> usize {
+        self.models.read().unwrap().values().map(|e| e.replicas).sum()
+    }
+
+    /// Completed hot swaps.
+    pub fn swaps_total(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Submissions bounced for naming a model that is not loaded.
+    pub fn unknown_model_total(&self) -> u64 {
+        self.unknown_model.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: drain every model's replica set.
+    pub fn shutdown(self) -> Result<()> {
+        let mut models = self.models.into_inner().unwrap();
+        let mut first_err = None;
+        for (name, entry) in models.drain() {
+            match Arc::try_unwrap(entry) {
+                Ok(entry) => {
+                    if let Err(e) = entry.pool.shutdown() {
+                        first_err = first_err.or(Some(e.context(format!("model {name:?}"))));
+                    }
+                }
+                // a clone outlived the registry (leaked handle): the
+                // pool drains via Drop instead
+                Err(_) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Prometheus identifiers allow `[a-zA-Z0-9_:]`; model names are free
+/// text on the wire, so map anything else to `_`.
+fn metric_ident(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// The TCP frontend drives the registry exactly like a single pool:
+/// `submit_with` routes to the default model, the `@<model>` wire forms
+/// come in through [`SubmitTarget::submit_model`], and `STATS` merges
+/// every model's shards into one report.
+impl SubmitTarget for Registry {
+    fn submit_with(
+        &self,
+        input: Vec<i32>,
+        priority: Priority,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
+        self.submit_to(None, input, priority, deadline, reply)
+    }
+
+    fn submit_model(
+        &self,
+        model: Option<&str>,
+        input: Vec<i32>,
+        priority: Priority,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<RequestId> {
+        self.submit_to(model, input, priority, deadline, reply)
+    }
+
+    fn stats(&self) -> StatsReport {
+        let models = self.models.read().unwrap();
+        let aggregate =
+            ShardMetrics::merged(models.values().flat_map(|e| e.pool.shard_metrics()));
+        StatsReport {
+            requests: aggregate.requests,
+            batches: aggregate.batches,
+            rejected: models.values().map(|e| e.pool.rejected_total()).sum(),
+            mean_latency_s: aggregate.mean_latency_s,
+            p50_latency_s: aggregate.p50_latency_s,
+            p95_latency_s: aggregate.p95_latency_s,
+            p99_latency_s: aggregate.p99_latency_s,
+            occupancy: aggregate.occupancy,
+            promoted: aggregate.promoted,
+            throughput: aggregate.throughput,
+            throughput_10s: aggregate.throughput_10s,
+            workers: models.values().map(|e| e.pool.workers()).sum(),
+            shed: aggregate.shed,
+        }
+    }
+
+    fn traces(&self) -> Option<Arc<TraceRing>> {
+        Some(self.trace.clone())
+    }
+
+    fn prometheus(&self) -> String {
+        let report = self.stats();
+        let r = &self.metrics;
+        r.set_counter("zdnn_requests_total", report.requests);
+        r.set_counter("zdnn_batches_total", report.batches);
+        r.set_counter("zdnn_promoted_total", report.promoted);
+        r.set_counter("zdnn_rejected_total", report.rejected);
+        r.set_counter("zdnn_shed_total", report.shed);
+        r.set_gauge("zdnn_occupancy", report.occupancy);
+        r.set_gauge("zdnn_throughput", report.throughput);
+        r.set_gauge("zdnn_throughput_10s", report.throughput_10s);
+        r.set_gauge("zdnn_mean_latency_s", report.mean_latency_s);
+        r.set_gauge("zdnn_p99_latency_s", report.p99_latency_s);
+        r.set_gauge("zdnn_workers", report.workers as f64);
+        r.set_gauge("zdnn_models", self.len() as f64);
+        r.set_counter("zdnn_swaps_total", self.swaps_total());
+        r.set_counter("zdnn_unknown_model_total", self.unknown_model_total());
+        {
+            let models = self.models.read().unwrap();
+            for entry in models.values() {
+                let ident = metric_ident(&entry.name);
+                r.set_counter(
+                    &format!("zdnn_model_{ident}_requests_total"),
+                    entry.requests(),
+                );
+                r.set_gauge(&format!("zdnn_model_{ident}_version"), entry.version as f64);
+                r.set_gauge(
+                    &format!("zdnn_model_{ident}_replicas"),
+                    entry.replicas as f64,
+                );
+                r.set_gauge(
+                    &format!("zdnn_model_{ident}_in_flight"),
+                    entry.pool.in_flight() as f64,
+                );
+            }
+        }
+        r.set_counter("zdnn_traces_recorded_total", self.trace.recorded());
+        r.set_counter("zdnn_traces_evicted_total", self.trace.evicted());
+        r.render_prometheus()
+    }
+
+    fn models(&self) -> Option<Vec<String>> {
+        Some(self.model_lines())
+    }
+
+    fn swap_model(&self, name: &str, path: &str) -> Result<String> {
+        self.swap(name, path).map(|report| report.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_qnet;
+    use crate::compress::{save_artifact, CompressedModel};
+    use crate::coordinator::request::SubmitOptions;
+    use crate::nn::forward_q;
+    use crate::nn::spec::quickstart;
+    use crate::nn::QNetwork;
+    use crate::sim::pruning::prune_qnetwork;
+    use crate::tensor::MatI;
+    use crate::util::rng::Xoshiro256;
+
+    /// Write a quickstart-shaped `.rpz` artifact and return the exact
+    /// network it decodes to (the served weights, golden for assertions).
+    fn write_rpz(dir: &Path, file: &str, seed: u64) -> (PathBuf, QNetwork) {
+        let net = prune_qnetwork(&random_qnet(&quickstart(), seed), 0.9);
+        let model = CompressedModel::from_network(&net, 0.75, 0.02, 0.9, 0.89).unwrap();
+        let served = model.to_qnetwork().unwrap();
+        let path = dir.join(file);
+        save_artifact(&path, &model).unwrap();
+        (path, served)
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "zdnn-registry-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rand_sample(seed: u64) -> Vec<i32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..64)
+            .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    fn golden(net: &QNetwork, input: &[i32]) -> Vec<i32> {
+        forward_q(net, &MatI::from_vec(1, 64, input.to_vec()))
+            .unwrap()
+            .row(0)
+            .to_vec()
+    }
+
+    fn registry_config(models: String, workers: usize) -> ServerConfig {
+        ServerConfig {
+            models,
+            workers,
+            batch: 4,
+            batch_deadline_us: 300,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn routes_by_model_name_with_default_fallback() {
+        let dir = temp_dir("route");
+        let (pa, net_a) = write_rpz(&dir, "a.rpz", 0xA);
+        let (pb, net_b) = write_rpz(&dir, "b.rpz", 0xB);
+        let models = format!("alpha={}@3,beta={}@1", pa.display(), pb.display());
+        let registry = Registry::start(&registry_config(models, 4)).unwrap();
+        assert_eq!(registry.default_model(), "alpha");
+        assert_eq!(registry.len(), 2);
+
+        for seed in 0..6u64 {
+            let input = rand_sample(seed);
+            // explicit routing to each model
+            let (tx, rx) = mpsc::channel();
+            let opts = SubmitOptions::interactive();
+            let id = registry
+                .submit_to(Some("beta"), input.clone(), Priority::Interactive, None, tx)
+                .unwrap();
+            let resp = crate::coordinator::request::Ticket::new(id, &opts, rx)
+                .wait_timeout(Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(resp.output, golden(&net_b, &input), "beta seed {seed}");
+            // default routing through the plain SubmitTarget surface
+            let resp = registry
+                .infer_prioritized(input.clone(), Priority::Bulk)
+                .unwrap();
+            assert_eq!(resp.output, golden(&net_a, &input), "alpha seed {seed}");
+        }
+
+        let err = registry
+            .submit_to(
+                Some("nope"),
+                rand_sample(0),
+                Priority::Bulk,
+                None,
+                mpsc::channel().0,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        assert_eq!(registry.unknown_model_total(), 1);
+
+        let lines = registry.model_lines();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("MODEL name=alpha version=1 replicas=3"), "{}", lines[0]);
+        assert!(lines[0].ends_with("default=1"), "{}", lines[0]);
+        assert!(lines[1].contains("name=beta"), "{}", lines[1]);
+        assert!(lines[1].contains("replicas=1"), "{}", lines[1]);
+        assert!(lines[1].ends_with("default=0"), "{}", lines[1]);
+        registry.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shares_size_replicas_and_admission_quotas() {
+        let dir = temp_dir("shares");
+        let (pa, _) = write_rpz(&dir, "big.rpz", 1);
+        let (pb, _) = write_rpz(&dir, "small.rpz", 2);
+        let models = format!("big={}@3,small={}@1", pa.display(), pb.display());
+        let cfg = ServerConfig {
+            queue_depth: 40,
+            ..registry_config(models, 4)
+        };
+        let registry = Registry::start(&cfg).unwrap();
+        // 3/4 of 4 workers = 3 replicas; 1/4 = 1 replica
+        let lines = registry.model_lines();
+        assert!(lines[0].contains("name=big") && lines[0].contains("replicas=3"), "{}", lines[0]);
+        assert!(lines[1].contains("name=small") && lines[1].contains("replicas=1"), "{}", lines[1]);
+        assert_eq!(registry.replicas_total(), 4);
+        // quotas: big = 30 slots, small = 10 — the arithmetic is private,
+        // so assert the observable part: sizing helpers round and floor
+        assert_eq!(registry.replicas_for(0.75), 3);
+        assert_eq!(registry.replicas_for(0.01), 1, "never below one replica");
+        assert_eq!(registry.quota_for(0.75), 30);
+        assert_eq!(registry.quota_for(0.25), 10);
+        assert_eq!(registry.quota_for(0.0), cfg.batch, "never below one batch");
+        registry.shutdown().unwrap();
+    }
+
+    #[test]
+    fn swap_bumps_version_and_reroutes_new_submissions() {
+        let dir = temp_dir("swapv");
+        let (p1, net_v1) = write_rpz(&dir, "v1.rpz", 0x11);
+        let (p2, net_v2) = write_rpz(&dir, "v2.rpz", 0x22);
+        let models = format!("m={}", p1.display());
+        let registry = Registry::start(&registry_config(models, 2)).unwrap();
+
+        let input = rand_sample(7);
+        let resp = registry.infer_prioritized(input.clone(), Priority::Interactive).unwrap();
+        assert_eq!(resp.output, golden(&net_v1, &input));
+
+        let report = registry.swap("m", &p2.display().to_string()).unwrap();
+        assert_eq!(report.old_version, 1);
+        assert_eq!(report.new_version, 2);
+        assert_eq!(report.drained_requests, 1);
+        assert!(report.render().starts_with("SWAP m v1 -> v2"), "{}", report.render());
+        assert_eq!(registry.swaps_total(), 1);
+
+        let resp = registry.infer_prioritized(input.clone(), Priority::Interactive).unwrap();
+        assert_eq!(resp.output, golden(&net_v2, &input), "post-swap serves v2");
+        assert!(registry.model_lines()[0].contains("version=2"));
+
+        assert!(registry.swap("ghost", &p2.display().to_string()).is_err());
+        let err = registry.swap("m", "/nonexistent/model.rpz").unwrap_err();
+        assert!(format!("{err:#}").contains("m"), "{err:#}");
+        // a failed swap leaves the live version serving
+        let resp = registry.infer_prioritized(input.clone(), Priority::Bulk).unwrap();
+        assert_eq!(resp.output, golden(&net_v2, &input));
+        registry.shutdown().unwrap();
+    }
+
+    /// The exactly-once property under concurrency: submitters hammer the
+    /// model while a swap flips it.  Every accepted request gets exactly
+    /// one reply (tickets enforce one-shot consumption), every reply
+    /// matches one of the two versions' goldens, and everything submitted
+    /// after the swap returns matches v2 only.
+    #[test]
+    fn concurrent_submits_survive_hot_swap_exactly_once() {
+        let dir = temp_dir("swaprace");
+        let (p1, net_v1) = write_rpz(&dir, "r1.rpz", 0x31);
+        let (p2, net_v2) = write_rpz(&dir, "r2.rpz", 0x32);
+        let models = format!("m={}", p1.display());
+        let registry = Arc::new(Registry::start(&registry_config(models, 3)).unwrap());
+
+        let submitters: Vec<_> = (0..3u64)
+            .map(|t| {
+                let reg = registry.clone();
+                thread::spawn(move || {
+                    let mut pairs = Vec::new();
+                    for i in 0..40u64 {
+                        let input = rand_sample(t * 1000 + i);
+                        let priority = if i % 3 == 0 {
+                            Priority::Interactive
+                        } else {
+                            Priority::Bulk
+                        };
+                        let ticket = reg
+                            .submit(input.clone(), SubmitOptions::with_priority(priority))
+                            .expect("submit never bounces during swap");
+                        pairs.push((input, ticket));
+                        if i % 8 == 0 {
+                            thread::sleep(Duration::from_micros(300));
+                        }
+                    }
+                    pairs
+                })
+            })
+            .collect();
+        // let the submitters get going, then flip mid-stream
+        thread::sleep(Duration::from_millis(2));
+        let report = registry.swap("m", &p2.display().to_string()).unwrap();
+        assert_eq!(report.new_version, 2);
+
+        let mut v1_replies = 0usize;
+        let mut v2_replies = 0usize;
+        for handle in submitters {
+            for (input, mut ticket) in handle.join().unwrap() {
+                let resp = ticket
+                    .wait_timeout(Duration::from_secs(10))
+                    .expect("every accepted request gets exactly one reply");
+                let out = resp.output;
+                if out == golden(&net_v1, &input) {
+                    v1_replies += 1;
+                } else if out == golden(&net_v2, &input) {
+                    v2_replies += 1;
+                } else {
+                    panic!("reply matches neither version's golden");
+                }
+            }
+        }
+        assert_eq!(v1_replies + v2_replies, 120, "nothing lost, nothing duplicated");
+        // post-drain submissions serve v2 exclusively
+        for seed in 500..510u64 {
+            let input = rand_sample(seed);
+            let resp = registry.infer_prioritized(input.clone(), Priority::Interactive).unwrap();
+            assert_eq!(resp.output, golden(&net_v2, &input));
+        }
+        Arc::try_unwrap(registry)
+            .unwrap_or_else(|_| panic!("registry still referenced"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn load_registers_new_models_and_rejects_duplicates() {
+        let dir = temp_dir("load");
+        let (pa, _) = write_rpz(&dir, "first.rpz", 5);
+        let (pb, net_b) = write_rpz(&dir, "second.rpz", 6);
+        let models = format!("first={}", pa.display());
+        let registry = Registry::start(&registry_config(models, 2)).unwrap();
+        registry.load("second", &pb.display().to_string()).unwrap();
+        assert_eq!(registry.len(), 2);
+        let input = rand_sample(9);
+        let (tx, rx) = mpsc::channel();
+        let opts = SubmitOptions::interactive();
+        let id = registry
+            .submit_to(Some("second"), input.clone(), Priority::Interactive, None, tx)
+            .unwrap();
+        let resp = crate::coordinator::request::Ticket::new(id, &opts, rx)
+            .wait_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(resp.output, golden(&net_b, &input));
+        assert!(registry.load("second", &pb.display().to_string()).is_err());
+        registry.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stats_merge_across_models_and_prometheus_tags_per_model() {
+        let dir = temp_dir("stats");
+        let (pa, _) = write_rpz(&dir, "sa.rpz", 21);
+        let (pb, _) = write_rpz(&dir, "sb.rpz", 22);
+        let models = format!("sa={},sb={}", pa.display(), pb.display());
+        let registry = Registry::start(&registry_config(models, 2)).unwrap();
+        for seed in 0..4u64 {
+            registry.infer_prioritized(rand_sample(seed), Priority::Bulk).unwrap();
+            let (tx, rx) = mpsc::channel();
+            let opts = SubmitOptions::bulk();
+            let id = registry
+                .submit_to(Some("sb"), rand_sample(seed), Priority::Bulk, None, tx)
+                .unwrap();
+            crate::coordinator::request::Ticket::new(id, &opts, rx)
+                .wait_timeout(Duration::from_secs(5))
+                .unwrap();
+        }
+        let report = registry.stats();
+        assert_eq!(report.requests, 8, "merged across both models");
+        assert_eq!(report.workers, 2);
+        let prom = registry.prometheus();
+        assert!(prom.contains("zdnn_model_sa_requests_total 4"), "{prom}");
+        assert!(prom.contains("zdnn_model_sb_requests_total 4"), "{prom}");
+        assert!(prom.contains("zdnn_models 2"), "{prom}");
+        assert!(prom.contains("zdnn_swaps_total 0"), "{prom}");
+        assert!(prom.ends_with("# EOF\n"), "{prom}");
+        // traces carry the model tag through the shared ring
+        let traces = registry.traces().unwrap().last(8);
+        assert!(!traces.is_empty());
+        assert!(traces.iter().all(|t| {
+            matches!(t.model.as_deref(), Some("sa") | Some("sb"))
+        }));
+        registry.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metric_ident_sanitizes_free_text_names() {
+        assert_eq!(metric_ident("mnist-4.v2"), "mnist_4_v2");
+        assert_eq!(metric_ident("plain"), "plain");
+    }
+}

@@ -47,7 +47,10 @@ pub struct PoolHandle {
     seed: AtomicU64,
     in_flight: Arc<AtomicUsize>,
     queue_depth: usize,
-    next_id: AtomicU64,
+    /// Id source — shared across pools when a multi-model registry fronts
+    /// several of them ([`ServePool::start_shared`]), so request ids stay
+    /// unique per serving target and the TCP demux can route by id alone.
+    next_id: Arc<AtomicU64>,
     /// Submissions bounced by pool-wide backpressure (the pool-level twin
     /// of `ServerMetrics::rejected`, surfaced over the STATS wire line).
     rejected: AtomicU64,
@@ -71,7 +74,21 @@ pub struct PoolSnapshot {
 }
 
 impl ServePool {
-    pub fn start(config: &ServerConfig, mut factory: EngineFactory) -> Result<PoolHandle> {
+    pub fn start(config: &ServerConfig, factory: EngineFactory) -> Result<PoolHandle> {
+        let trace = Arc::new(TraceRing::new(TRACE_RING_CAPACITY, config.trace_sample));
+        Self::start_shared(config, factory, Arc::new(AtomicU64::new(0)), trace)
+    }
+
+    /// Start a pool on an externally owned id counter and trace ring.  A
+    /// multi-model registry fronts one pool per model: sharing both keeps
+    /// request ids unique across models (so one TCP demux serves them
+    /// all) and lands every model's spans in one `TRACE`-queryable ring.
+    pub fn start_shared(
+        config: &ServerConfig,
+        mut factory: EngineFactory,
+        next_id: Arc<AtomicU64>,
+        trace: Arc<TraceRing>,
+    ) -> Result<PoolHandle> {
         config.validate()?;
         factory.apply_config_artifact(config)?;
         let policy = Policy::parse(&config.policy)?;
@@ -91,7 +108,6 @@ impl ServePool {
             promote_after: Duration::from_micros(config.bulk_promote_us),
         };
         let in_flight = Arc::new(AtomicUsize::new(0));
-        let trace = Arc::new(TraceRing::new(TRACE_RING_CAPACITY, config.trace_sample));
         let mut shards = Vec::with_capacity(workers);
         for i in 0..workers {
             let (tx, rx) = mpsc::channel::<ShardCommand>();
@@ -120,7 +136,7 @@ impl ServePool {
             seed: AtomicU64::new(0x5EED_CAFE),
             in_flight,
             queue_depth: config.queue_depth,
-            next_id: AtomicU64::new(0),
+            next_id,
             rejected: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             input_width,
@@ -142,6 +158,22 @@ fn splitmix64(mut z: u64) -> u64 {
 impl PoolHandle {
     pub fn workers(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Requests currently occupying pool-wide queue slots.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Submissions bounced by pool-wide backpressure.
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Per-shard metrics handles, for cross-pool aggregation (the
+    /// registry merges every model's shards into one `STATS` report).
+    pub(crate) fn shard_metrics(&self) -> impl Iterator<Item = &ShardMetrics> {
+        self.shards.iter().map(|s| s.metrics.as_ref())
     }
 
     /// Pick a shard for the next request under the configured policy.

@@ -1,0 +1,195 @@
+//! Integration: the PR 8 multi-model registry over TCP — `@<model>`
+//! routing, `MODELS`, and the zero-downtime `SWAP` under live load.
+//!
+//! What this locks in (the PR 8 acceptance surface):
+//!
+//! * mixed-priority tagged load keeps flowing on one connection while a
+//!   second connection hot-swaps the default model: every ticket gets
+//!   exactly one reply, and every reply bit-matches one of the two
+//!   versions' golden forward passes (nothing lost, nothing corrupted),
+//! * requests submitted after the swap returns serve the new version
+//!   exclusively, and `MODELS` reports the bumped version,
+//! * `INFER @<model>` routes explicitly (each model's own golden),
+//!   an unloaded name fails only its own ticket with a tagged
+//!   "unknown model" error, and the connection stays healthy after.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::compress::{save_artifact, CompressedModel};
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::{NetClient, NetFrontend, Priority};
+use zynq_dnn::nn::spec::quickstart;
+use zynq_dnn::nn::{forward_q, QNetwork};
+use zynq_dnn::registry::Registry;
+use zynq_dnn::sim::pruning::prune_qnetwork;
+use zynq_dnn::tensor::MatI;
+
+/// Write a quickstart-shaped `.rpz` and return the exact network it
+/// decodes to — the golden weights the server will serve.
+fn write_rpz(dir: &Path, file: &str, seed: u64) -> (PathBuf, QNetwork) {
+    let net = prune_qnetwork(&random_qnet(&quickstart(), seed), 0.9);
+    let model = CompressedModel::from_network(&net, 0.75, 0.02, 0.9, 0.89).unwrap();
+    let served = model.to_qnetwork().unwrap();
+    let path = dir.join(file);
+    save_artifact(&path, &model).unwrap();
+    (path, served)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("zdnn-it-registry-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn values_for(seed: usize) -> Vec<f32> {
+    (0..64)
+        .map(|k| ((k * 7 + seed * 13) % 101) as f32 / 101.0 - 0.5)
+        .collect()
+}
+
+fn golden_for(net: &QNetwork, values: &[f32]) -> Vec<i32> {
+    let xq = zynq_dnn::fixedpoint::quantize_slice(values);
+    forward_q(net, &MatI::from_vec(1, 64, xq)).unwrap().row(0).to_vec()
+}
+
+fn start_registry(models: String, workers: usize) -> (NetFrontend, Arc<Registry>) {
+    let cfg = ServerConfig {
+        models,
+        workers,
+        batch: 4,
+        batch_deadline_us: 300,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let registry = Arc::new(Registry::start(&cfg).unwrap());
+    let fe = NetFrontend::start("127.0.0.1:0", registry.clone()).unwrap();
+    (fe, registry)
+}
+
+/// The headline acceptance test: pipelined mixed-priority load rides one
+/// connection while a second connection swaps the default model.  Every
+/// ticket resolves exactly once to one of the two versions' goldens;
+/// post-swap traffic serves v2 only; `MODELS` reflects the bump.
+#[test]
+fn hot_swap_under_live_tcp_load_loses_nothing() {
+    let dir = temp_dir("swap");
+    let (p1, net_v1) = write_rpz(&dir, "m-v1.rpz", 0x51);
+    let (p2, net_v2) = write_rpz(&dir, "m-v2.rpz", 0x52);
+    let (pa, net_aux) = write_rpz(&dir, "aux.rpz", 0x53);
+    let models = format!("m={}@3,aux={}@1", p1.display(), pa.display());
+    let (fe, registry) = start_registry(models, 4);
+
+    let mut client = NetClient::connect(&fe.addr()).unwrap();
+    let mut tickets = Vec::new();
+    // phase A: pre-swap load (plain INFER routes to the default model m)
+    for i in 0..24usize {
+        let prio = if i % 3 == 0 { Priority::Interactive } else { Priority::Bulk };
+        tickets.push((i, client.submit(&values_for(i), prio).unwrap()));
+    }
+    // the swap runs on its own connection so the load connection's
+    // pipeline never blocks behind the drain
+    let swap_addr = fe.addr();
+    let p2_str = p2.display().to_string();
+    let swapper = std::thread::spawn(move || {
+        let mut admin = NetClient::connect(&swap_addr).unwrap();
+        admin.set_timeout(Some(Duration::from_secs(120))).unwrap();
+        let summary = admin.swap("m", &p2_str).unwrap();
+        admin.quit().unwrap();
+        summary
+    });
+    // phase B: keep the pipeline full while the swap is in flight
+    let mut i = 24usize;
+    while !swapper.is_finished() && i < 600 {
+        let prio = if i % 3 == 0 { Priority::Interactive } else { Priority::Bulk };
+        tickets.push((i, client.submit(&values_for(i), prio).unwrap()));
+        i += 1;
+        if i % 8 == 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let summary = swapper.join().unwrap();
+    assert!(summary.starts_with("SWAP m v1 -> v2"), "{summary}");
+
+    // every phase A/B ticket gets exactly one reply matching one version
+    let (mut v1_replies, mut v2_replies) = (0usize, 0usize);
+    let total = tickets.len();
+    for (j, mut ticket) in tickets {
+        let resp = ticket
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("request {j} lost across the swap: {e}"));
+        if resp.outputs == golden_for(&net_v1, &values_for(j)) {
+            v1_replies += 1;
+        } else if resp.outputs == golden_for(&net_v2, &values_for(j)) {
+            v2_replies += 1;
+        } else {
+            panic!("request {j}: reply matches neither version's golden");
+        }
+    }
+    assert_eq!(v1_replies + v2_replies, total, "nothing lost, nothing duplicated");
+    assert!(v1_replies > 0, "pre-swap requests completed on the old version");
+
+    // phase C: post-swap traffic serves v2 exclusively
+    for j in 700..710usize {
+        let mut t = client.submit(&values_for(j), Priority::Interactive).unwrap();
+        let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.outputs, golden_for(&net_v2, &values_for(j)), "post-swap {j}");
+    }
+    // MODELS reflects the bump; aux is untouched
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let lines = client.models().unwrap();
+    assert_eq!(lines.len(), 2);
+    let m_line = lines.iter().find(|l| l.contains("name=m ")).unwrap();
+    assert!(m_line.contains("version=2"), "{m_line}");
+    let aux_line = lines.iter().find(|l| l.contains("name=aux")).unwrap();
+    assert!(aux_line.contains("version=1"), "{aux_line}");
+    assert_eq!(registry.swaps_total(), 1);
+
+    // aux still serves its own golden through explicit routing
+    let mut t = client.submit_to(Some("aux"), &values_for(42), Priority::Bulk).unwrap();
+    let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.outputs, golden_for(&net_aux, &values_for(42)));
+
+    client.quit().unwrap();
+    fe.stop();
+}
+
+/// The wire surface around routing: `@<model>` picks the named model's
+/// weights, an unloaded name fails only its own ticket (tagged ERR), and
+/// the connection keeps serving afterwards.
+#[test]
+fn model_routing_and_unknown_model_errors_over_tcp() {
+    let dir = temp_dir("route");
+    let (pa, net_a) = write_rpz(&dir, "alpha.rpz", 0x61);
+    let (pb, net_b) = write_rpz(&dir, "beta.rpz", 0x62);
+    let models = format!("alpha={}@1,beta={}@1", pa.display(), pb.display());
+    let (fe, _registry) = start_registry(models, 2);
+    let mut client = NetClient::connect(&fe.addr()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // explicit routing to each model, pipelined and interleaved
+    let mut pairs = Vec::new();
+    for j in 0..6usize {
+        let name = if j % 2 == 0 { "alpha" } else { "beta" };
+        let ticket = client.submit_to(Some(name), &values_for(j), Priority::Bulk).unwrap();
+        pairs.push((j, name, ticket));
+    }
+    // an unloaded model fails exactly its own ticket…
+    let mut bogus = client.submit_to(Some("ghost"), &values_for(9), Priority::Interactive).unwrap();
+    let e = bogus.wait_timeout(Duration::from_secs(10)).unwrap_err();
+    assert!(e.to_string().contains("unknown model"), "{e}");
+    // …while the in-flight routed requests resolve to their own goldens
+    for (j, name, mut ticket) in pairs {
+        let resp = ticket.wait_timeout(Duration::from_secs(30)).unwrap();
+        let net = if name == "alpha" { &net_a } else { &net_b };
+        assert_eq!(resp.outputs, golden_for(net, &values_for(j)), "request {j} @{name}");
+    }
+    // plain INFER still routes to the default (first spec = alpha)
+    let (_, outputs) = client.infer(&values_for(77)).unwrap();
+    assert_eq!(outputs, golden_for(&net_a, &values_for(77)));
+    client.quit().unwrap();
+    fe.stop();
+}
