@@ -1,15 +1,23 @@
-//! `cargo bench --bench bench_net` — wire-pipelining sweep over TCP
-//! loopback: pipeline depth {1, 4, 16, 64} × client connections {1, 4}
-//! against the 4-worker sharded pool.  Exits 1 if a single pipelined
-//! connection at depth 16 fails to beat the same connection at depth 1
-//! (the v1 lockstep bound protocol v2 removes).
+//! `cargo bench --bench bench_net` — wire benchmark over TCP loopback:
+//! protocol generations {v2 text, v3 binary-i16} × pipeline depth
+//! {1, 4, 16, 64} × client connections {1, 4} against the 4-worker
+//! sharded pool, plus a 256-connection fan-in and a connection-churn
+//! soak.  Exits 1 if a shape gate fails: depth 16 must beat depth 1 on
+//! one connection, v3 must spend < 0.3× the wire bytes of v2 at rps no
+//! worse, the fan-in must lose zero replies, and the soak must leak
+//! neither fds nor threads.  `ZDNN_SKIP_PERF=1` downgrades gate
+//! failures to warnings (contended runners).
 fn main() {
     let t0 = std::time::Instant::now();
     let r = zynq_dnn::bench::netbench::run();
     println!("{}", zynq_dnn::bench::netbench::render(&r));
     if let Err(e) = zynq_dnn::bench::netbench::check_shape(&r) {
-        eprintln!("SHAPE CHECK FAILED: {e}");
-        std::process::exit(1);
+        if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+            eprintln!("SHAPE CHECK FAILED (ignored, ZDNN_SKIP_PERF=1): {e}");
+        } else {
+            eprintln!("SHAPE CHECK FAILED: {e}");
+            std::process::exit(1);
+        }
     }
     println!("shape check OK ({:.2}s)", t0.elapsed().as_secs_f64());
 }

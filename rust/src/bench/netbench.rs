@@ -1,19 +1,24 @@
-//! Wire-pipelining benchmark: protocol v2's tagged, out-of-order replies
-//! vs v1's one-request-per-round-trip lockstep, measured over loopback
-//! against the 4-worker sharded pool.
+//! Wire benchmark: protocol generations head-to-head over loopback
+//! against the 4-worker sharded pool — v2 tagged text vs v3 binary
+//! frames — plus the frontend's scaling shapes (256-connection fan-in,
+//! connection-churn soak).
 //!
 //! The paper's throughput comes from keeping the accelerator's batch
-//! slots full; a lockstep connection can contribute at most one sample
-//! per round trip, so batch formation sees only as many samples as there
-//! are connections.  Pipelining restores the per-connection window: each
-//! client keeps `depth` tagged requests in flight and waits tickets out
-//! as replies demux back.  The sweep crosses pipeline depth {1, 4, 16,
-//! 64} with client counts {1, 4}; `check_shape` asserts the acceptance
-//! criterion — a *single* client at depth 16 must beat the same client at
-//! depth 1 (≙ lockstep) against the same pool.
+//! slots full *and* not spending the win on data movement; wire v2
+//! prints every activation as ASCII f32s, 4–6x the bytes of the payload
+//! it carries.  The sweep crosses protocol {v2 text, v3 binary-i16} with
+//! pipeline depth {1, 4, 16, 64} and client counts {1, 4}, reporting
+//! both achieved rps and measured wire bytes per inference (client-side
+//! counters, both directions).  `check_shape` asserts the acceptance
+//! criteria: depth 16 beats depth 1 on one connection (pipelining), v3
+//! spends < 0.3× the bytes of v2, v3 rps at least matches v2 at depth
+//! 16, the 256-connection fan-in completes with zero lost replies on the
+//! frontend's fixed two threads, and the churn soak leaks neither fds
+//! nor threads.
 
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use super::report::Table;
@@ -25,19 +30,68 @@ use crate::serve::start_serving;
 
 /// In-flight requests per connection (1 ≙ v1 lockstep behavior).
 pub const DEPTH_SWEEP: [usize; 4] = [1, 4, 16, 64];
-/// Concurrent client connections.
+/// Concurrent client connections in the pipelining sweep.
 pub const CLIENT_SWEEP: [usize; 2] = [1, 4];
 /// Pool shards behind the frontend (the acceptance criterion names 4).
 pub const WORKERS: usize = 4;
+/// Simultaneous connections in the fan-in row.
+pub const FAN_IN_CONNS: usize = 256;
 
-/// One (clients, depth) cell of the sweep.
+/// Wire generation driven by a sweep cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    /// Tagged text lines (`INFER #<id> <f32>...`).
+    V2Text,
+    /// Binary frames with a pre-quantized i16 payload.
+    V3Binary,
+}
+
+impl Proto {
+    pub fn label(self) -> &'static str {
+        match self {
+            Proto::V2Text => "v2-text",
+            Proto::V3Binary => "v3-binary",
+        }
+    }
+}
+
+/// One (proto, clients, depth) cell of the sweep.
 #[derive(Debug, Clone)]
 pub struct NetRow {
+    pub proto: Proto,
     pub clients: usize,
     pub depth: usize,
     /// Total requests across all clients in the cell.
     pub requests: usize,
     pub achieved_rps: f64,
+    /// Wire bytes per inference, both directions, measured client-side.
+    pub bytes_per_req: f64,
+}
+
+/// The 256-connection fan-in: every connection opens before any submits
+/// (barrier), so the frontend holds them all simultaneously.
+#[derive(Debug, Clone)]
+pub struct FanInRow {
+    pub conns: usize,
+    pub per_conn: usize,
+    pub requests: usize,
+    /// Replies actually received — the zero-lost-replies criterion is
+    /// `completed == requests`.
+    pub completed: usize,
+    pub achieved_rps: f64,
+}
+
+/// The connection-churn soak: open/infer/close in a loop, then compare
+/// `/proc/self/{fd,task}` populations against the pre-soak baseline.
+#[derive(Debug, Clone)]
+pub struct ChurnRow {
+    pub cycles: usize,
+    pub achieved_rps: f64,
+    /// Descriptors still open above the baseline after settling
+    /// (-1 = unmeasurable platform, gate skipped).
+    pub leaked_fds: i64,
+    /// Threads still alive above the baseline after settling (-1 as above).
+    pub leaked_threads: i64,
 }
 
 /// The benchmark result.
@@ -47,6 +101,8 @@ pub struct NetBench {
     pub workers: usize,
     pub batch: usize,
     pub rows: Vec<NetRow>,
+    pub fan_in: FanInRow,
+    pub churn: ChurnRow,
 }
 
 fn values_for(seed: usize) -> Vec<f32> {
@@ -55,9 +111,17 @@ fn values_for(seed: usize) -> Vec<f32> {
         .collect()
 }
 
-/// One client: keep `depth` tagged requests in flight, waiting the oldest
-/// ticket out whenever the window is full.
-fn drive_client(addr: std::net::SocketAddr, requests: usize, depth: usize) {
+fn quantized_for(seed: usize) -> Vec<i16> {
+    values_for(seed)
+        .iter()
+        .map(|&v| crate::fixedpoint::quantize(v as f64) as i16)
+        .collect()
+}
+
+/// One client: keep `depth` requests in flight on the chosen wire
+/// generation, waiting the oldest ticket out whenever the window is
+/// full.  Returns the connection's total wire bytes (in + out).
+fn drive_client(addr: std::net::SocketAddr, requests: usize, depth: usize, proto: Proto) -> u64 {
     let mut client = NetClient::connect(&addr).expect("bench client connects");
     let mut window: VecDeque<NetTicket> = VecDeque::with_capacity(depth);
     for i in 0..requests {
@@ -65,13 +129,131 @@ fn drive_client(addr: std::net::SocketAddr, requests: usize, depth: usize) {
             let mut t = window.pop_front().expect("window non-empty");
             t.wait_timeout(Duration::from_secs(60)).expect("pipelined reply");
         }
-        let vals = values_for(i);
-        window.push_back(client.submit(&vals, Priority::Interactive).expect("submit"));
+        let ticket = match proto {
+            Proto::V2Text => client
+                .submit(&values_for(i), Priority::Interactive)
+                .expect("submit"),
+            Proto::V3Binary => client
+                .submit_binary_i16(None, &[&quantized_for(i)], Priority::Interactive, None)
+                .expect("submit_binary")
+                .pop()
+                .expect("one ticket per sample"),
+        };
+        window.push_back(ticket);
     }
     for mut t in window {
         t.wait_timeout(Duration::from_secs(60)).expect("drain reply");
     }
+    let (bin, bout) = client.wire_bytes();
     client.quit().ok();
+    bin + bout
+}
+
+#[cfg(target_os = "linux")]
+fn count_dir(path: &str) -> i64 {
+    match std::fs::read_dir(path) {
+        Ok(d) => d.count() as i64,
+        Err(_) => -1,
+    }
+}
+
+/// `(open fds, live threads)` for this process, or -1 per unmeasurable
+/// entry (non-Linux).
+fn process_populations() -> (i64, i64) {
+    #[cfg(target_os = "linux")]
+    {
+        (count_dir("/proc/self/fd"), count_dir("/proc/self/task"))
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        (-1, -1)
+    }
+}
+
+fn run_fan_in(addr: std::net::SocketAddr, per_conn: usize) -> FanInRow {
+    let completed = Arc::new(AtomicUsize::new(0));
+    let barrier = Arc::new(Barrier::new(FAN_IN_CONNS + 1));
+    let handles: Vec<_> = (0..FAN_IN_CONNS)
+        .map(|c| {
+            let completed = completed.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut client = NetClient::connect(&addr).expect("fan-in connect");
+                // every connection is open before any request flies
+                barrier.wait();
+                for i in 0..per_conn {
+                    let mut t = client
+                        .submit_binary_i16(
+                            None,
+                            &[&quantized_for(c + i)],
+                            Priority::Interactive,
+                            None,
+                        )
+                        .expect("fan-in submit")
+                        .pop()
+                        .expect("one ticket");
+                    if t.wait_timeout(Duration::from_secs(120)).is_ok() {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                client.quit().ok();
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    for h in handles {
+        h.join().expect("fan-in client thread");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let requests = FAN_IN_CONNS * per_conn;
+    FanInRow {
+        conns: FAN_IN_CONNS,
+        per_conn,
+        requests,
+        completed: completed.load(Ordering::Relaxed),
+        achieved_rps: requests as f64 / wall.max(1e-9),
+    }
+}
+
+fn run_churn(addr: std::net::SocketAddr, cycles: usize) -> ChurnRow {
+    let (fd_base, thread_base) = process_populations();
+    let t0 = Instant::now();
+    for i in 0..cycles {
+        let mut client = NetClient::connect(&addr).expect("churn connect");
+        client
+            .set_timeout(Some(Duration::from_secs(60)))
+            .expect("churn timeout");
+        client.infer_binary(&values_for(i)).expect("churn infer");
+        client.quit().ok();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // teardown is asynchronous on the server side (the event loop
+    // deregisters on its next wake): give the populations up to ~2 s to
+    // settle back to the baseline before calling anything a leak
+    let (mut fd_now, mut thread_now) = process_populations();
+    for _ in 0..40 {
+        if (fd_base < 0 || fd_now <= fd_base) && (thread_base < 0 || thread_now <= thread_base) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let pop = process_populations();
+        fd_now = pop.0;
+        thread_now = pop.1;
+    }
+    let leak = |base: i64, now: i64| {
+        if base < 0 || now < 0 {
+            -1
+        } else {
+            (now - base).max(0)
+        }
+    };
+    ChurnRow {
+        cycles,
+        achieved_rps: cycles as f64 / wall.max(1e-9),
+        leaked_fds: leak(fd_base, fd_now),
+        leaked_threads: leak(thread_base, thread_now),
+    }
 }
 
 pub fn run() -> NetBench {
@@ -105,25 +287,36 @@ pub fn run() -> NetBench {
     let addr = fe.addr();
 
     let mut rows = Vec::new();
-    for &clients in &CLIENT_SWEEP {
-        for &depth in &DEPTH_SWEEP {
-            let t0 = Instant::now();
-            let handles: Vec<_> = (0..clients)
-                .map(|_| std::thread::spawn(move || drive_client(addr, per_client, depth)))
-                .collect();
-            for h in handles {
-                h.join().expect("bench client thread");
+    for &proto in &[Proto::V2Text, Proto::V3Binary] {
+        for &clients in &CLIENT_SWEEP {
+            for &depth in &DEPTH_SWEEP {
+                let t0 = Instant::now();
+                let handles: Vec<_> = (0..clients)
+                    .map(|_| {
+                        std::thread::spawn(move || drive_client(addr, per_client, depth, proto))
+                    })
+                    .collect();
+                let mut wire_bytes = 0u64;
+                for h in handles {
+                    wire_bytes += h.join().expect("bench client thread");
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                let requests = clients * per_client;
+                rows.push(NetRow {
+                    proto,
+                    clients,
+                    depth,
+                    requests,
+                    achieved_rps: requests as f64 / wall.max(1e-9),
+                    bytes_per_req: wire_bytes as f64 / requests as f64,
+                });
             }
-            let wall = t0.elapsed().as_secs_f64();
-            let requests = clients * per_client;
-            rows.push(NetRow {
-                clients,
-                depth,
-                requests,
-                achieved_rps: requests as f64 / wall.max(1e-9),
-            });
         }
     }
+
+    let fan_in = run_fan_in(addr, if quick { 2 } else { 4 });
+    let churn = run_churn(addr, if quick { 40 } else { 150 });
+
     fe.stop();
     // the frontend's Arc clones are gone after stop(); shut the pool down
     // cleanly rather than leaking its shard threads into the next bench
@@ -135,30 +328,48 @@ pub fn run() -> NetBench {
         workers: WORKERS,
         batch,
         rows,
+        fan_in,
+        churn,
     }
 }
 
 pub fn render(b: &NetBench) -> String {
     let mut t = Table::new(
         &format!(
-            "wire pipelining sweep ({}, {} workers, batch {}, TCP loopback)",
+            "wire generation sweep ({}, {} workers, batch {}, TCP loopback)",
             b.network, b.workers, b.batch
         ),
-        &["clients", "depth", "requests", "achieved/s"],
+        &["proto", "clients", "depth", "requests", "achieved/s", "bytes/req"],
     );
     for r in &b.rows {
         t.row(vec![
+            r.proto.label().to_string(),
             r.clients.to_string(),
             r.depth.to_string(),
             r.requests.to_string(),
             format!("{:.0}", r.achieved_rps),
+            format!("{:.0}", r.bytes_per_req),
         ]);
     }
     t.footnote(
-        "protocol v2: tagged `INFER #<id>` with out-of-order tagged replies; \
-         depth = in-flight requests per connection (1 ≙ v1 lockstep)",
+        "v2-text: tagged `INFER #<id>` ASCII lines; v3-binary: length-prefixed \
+         frames with i16 Q7.8 payload; depth = in-flight requests per \
+         connection (1 ≙ v1 lockstep); bytes/req counts both directions",
     );
-    t.footnote("all-Interactive traffic; queue sized to the sweep, so no rejections");
+    t.footnote(&format!(
+        "fan-in: {} simultaneous conns x {} reqs -> {}/{} replies, {:.0}/s \
+         on the frontend's fixed 2 threads",
+        b.fan_in.conns,
+        b.fan_in.per_conn,
+        b.fan_in.completed,
+        b.fan_in.requests,
+        b.fan_in.achieved_rps
+    ));
+    t.footnote(&format!(
+        "churn: {} open/infer/close cycles at {:.0}/s, leaked fds {} threads {} \
+         (-1 = unmeasurable platform)",
+        b.churn.cycles, b.churn.achieved_rps, b.churn.leaked_fds, b.churn.leaked_threads
+    ));
     t.render()
 }
 
@@ -171,43 +382,93 @@ pub fn to_json(b: &NetBench) -> String {
         .iter()
         .map(|r| {
             format!(
-                "{{\"clients\":{},\"depth\":{},\"requests\":{},\"achieved_rps\":{}}}",
+                "{{\"proto\":\"{}\",\"clients\":{},\"depth\":{},\"requests\":{},\
+                 \"achieved_rps\":{},\"bytes_per_req\":{}}}",
+                r.proto.label(),
                 r.clients,
                 r.depth,
                 r.requests,
                 json_f64(r.achieved_rps),
+                json_f64(r.bytes_per_req),
             )
         })
         .collect();
     format!(
-        "{{\"bench\":\"net\",\"network\":\"{}\",\"workers\":{},\"batch\":{},\"rows\":[{}]}}",
+        "{{\"bench\":\"net\",\"network\":\"{}\",\"workers\":{},\"batch\":{},\"rows\":[{}],\
+         \"fan_in\":{{\"conns\":{},\"per_conn\":{},\"requests\":{},\"completed\":{},\
+         \"achieved_rps\":{}}},\
+         \"churn\":{{\"cycles\":{},\"achieved_rps\":{},\"leaked_fds\":{},\
+         \"leaked_threads\":{}}}}}",
         json_escape(&b.network),
         b.workers,
         b.batch,
         rows.join(","),
+        b.fan_in.conns,
+        b.fan_in.per_conn,
+        b.fan_in.requests,
+        b.fan_in.completed,
+        json_f64(b.fan_in.achieved_rps),
+        b.churn.cycles,
+        json_f64(b.churn.achieved_rps),
+        b.churn.leaked_fds,
+        b.churn.leaked_threads,
     )
 }
 
 /// Acceptance shape (wall-clock — gate behind `ZDNN_SKIP_PERF` on
-/// contended runners): a single pipelined connection at depth 16 must
-/// sustain strictly more throughput than the same connection at depth 1
-/// against the 4-worker pool — the per-client throughput bound v1's
-/// lockstep protocol imposed is the thing v2 exists to remove.
+/// contended runners):
+///
+/// 1. pipelining: one v2 connection at depth 16 beats itself at depth 1;
+/// 2. wire economy: v3 binary spends < 0.3× the bytes of v2 text per
+///    inference (clients=1, depth=16 cell, both directions);
+/// 3. throughput: v3 rps at least matches v2 in the same cell (a 5%
+///    band absorbs loopback scheduling noise — both generations are
+///    server-bound here, the claim is that binary framing costs nothing);
+/// 4. fan-in: all 256-connection replies arrive (zero lost) on the
+///    frontend's fixed thread count;
+/// 5. churn: zero leaked fds and threads after the soak settles (skipped
+///    where `/proc` is unavailable).
 pub fn check_shape(b: &NetBench) -> Result<(), String> {
-    let at = |clients: usize, depth: usize| {
+    let at = |proto: Proto, clients: usize, depth: usize| {
         b.rows
             .iter()
-            .find(|r| r.clients == clients && r.depth == depth)
-            .map(|r| r.achieved_rps)
+            .find(|r| r.proto == proto && r.clients == clients && r.depth == depth)
     };
-    let (Some(d1), Some(d16)) = (at(1, 1), at(1, 16)) else {
-        return Err("missing clients=1 rows at depths 1/16".into());
+    let (Some(d1), Some(d16)) = (at(Proto::V2Text, 1, 1), at(Proto::V2Text, 1, 16)) else {
+        return Err("missing v2 clients=1 rows at depths 1/16".into());
     };
-    if d16 <= d1 {
+    if d16.achieved_rps <= d1.achieved_rps {
         return Err(format!(
-            "single-client depth 16 ({d16:.0}/s) not faster than depth 1 \
-             ({d1:.0}/s) against {} workers",
-            b.workers
+            "single-client depth 16 ({:.0}/s) not faster than depth 1 \
+             ({:.0}/s) against {} workers",
+            d16.achieved_rps, d1.achieved_rps, b.workers
+        ));
+    }
+    let Some(v3) = at(Proto::V3Binary, 1, 16) else {
+        return Err("missing v3 clients=1 depth=16 row".into());
+    };
+    if v3.bytes_per_req >= 0.3 * d16.bytes_per_req {
+        return Err(format!(
+            "v3 wire bytes/inference ({:.0}) not under 0.3x v2 text ({:.0})",
+            v3.bytes_per_req, d16.bytes_per_req
+        ));
+    }
+    if v3.achieved_rps < 0.95 * d16.achieved_rps {
+        return Err(format!(
+            "v3 rps ({:.0}) fell below v2 text ({:.0}) at depth 16",
+            v3.achieved_rps, d16.achieved_rps
+        ));
+    }
+    if b.fan_in.completed != b.fan_in.requests {
+        return Err(format!(
+            "fan-in lost replies: {}/{} completed over {} connections",
+            b.fan_in.completed, b.fan_in.requests, b.fan_in.conns
+        ));
+    }
+    if b.churn.leaked_fds > 0 || b.churn.leaked_threads > 0 {
+        return Err(format!(
+            "churn soak leaked fds={} threads={} after {} cycles",
+            b.churn.leaked_fds, b.churn.leaked_threads, b.churn.cycles
         ));
     }
     Ok(())

@@ -54,6 +54,13 @@ pub struct ServerConfig {
     /// Registry only: the model `INFER` routes to when the wire line
     /// carries no `@<model>` ("" = the first entry in `models`).
     pub default_model: String,
+    /// Newest wire generation the TCP frontend accepts: "v3" (default)
+    /// serves binary frames alongside v1/v2 text; "v2" refuses binary
+    /// frames with a text ERR (operational downgrade for mixed fleets).
+    pub wire: String,
+    /// Open-connection cap for the TCP frontend: accepts past it get one
+    /// `ERR busy` line and a close (`conn_rejected=` in STATS).
+    pub max_conns: usize,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +80,8 @@ impl Default for ServerConfig {
             trace_sample: 1,
             models: String::new(),
             default_model: String::new(),
+            wire: "v3".into(),
+            max_conns: 4096,
         }
     }
 }
@@ -186,6 +195,8 @@ impl ServerConfig {
                 "trace_sample" => cfg.trace_sample = v.parse().context("trace_sample")?,
                 "models" => cfg.models = v.clone(),
                 "default_model" => cfg.default_model = v.clone(),
+                "wire" => cfg.wire = v.clone(),
+                "max_conns" => cfg.max_conns = v.parse().context("max_conns")?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -224,6 +235,13 @@ impl ServerConfig {
         match self.backend.as_str() {
             "pjrt" | "native" | "native-sparse" | "sim-batch" | "sim-prune" => {}
             other => bail!("unknown backend {other:?}"),
+        }
+        match self.wire.as_str() {
+            "v2" | "v3" => {}
+            other => bail!("wire must be \"v2\" or \"v3\", got {other:?}"),
+        }
+        if self.max_conns == 0 {
+            bail!("max_conns must be >= 1");
         }
         if !self.models.is_empty() {
             let specs = parse_model_specs(&self.models)?;
@@ -390,6 +408,19 @@ mod tests {
         assert!(ServerConfig::from_kv_text("models = \"a=x.txt\"\n").is_err());
         // single-model configs are unaffected
         assert!(ServerConfig::default().model_specs().unwrap().is_empty());
+    }
+
+    #[test]
+    fn wire_and_max_conns_keys_parse_and_validate() {
+        assert_eq!(ServerConfig::default().wire, "v3");
+        assert_eq!(ServerConfig::default().max_conns, 4096);
+        let cfg = ServerConfig::from_kv_text("wire = \"v2\"\nmax_conns = 128\n").unwrap();
+        assert_eq!(cfg.wire, "v2");
+        assert_eq!(cfg.max_conns, 128);
+        assert!(ServerConfig::from_kv_text("wire = \"v1\"").is_err(), "v1 is not a cap");
+        assert!(ServerConfig::from_kv_text("wire = \"binary\"").is_err());
+        assert!(ServerConfig::from_kv_text("max_conns = 0").is_err());
+        assert!(ServerConfig::from_kv_text("max_conns = many").is_err());
     }
 
     #[test]

@@ -31,7 +31,10 @@ pub use batcher::{Batch, Batcher};
 pub use engine::{Engine, EngineFactory};
 pub use executor::{BatchSource, BatchView, ExecCommand, ExecSink};
 pub use metrics::ServerMetrics;
-pub use net::{NetClient, NetFrontend, NetResponse, NetTicket, StatsReport, SubmitTarget};
+pub use net::{
+    NetClient, NetFrontend, NetOptions, NetResponse, NetStats, NetTicket, StatsReport,
+    SubmitTarget,
+};
 pub use request::{
     InferError, Priority, Reply, Request, RequestId, Response, SubmitOptions, Ticket, TicketError,
 };

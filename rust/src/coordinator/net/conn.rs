@@ -1,0 +1,919 @@
+//! The readiness-driven frontend: one event-loop thread owns every socket
+//! (accept + read + write), one demux thread owns reply fan-in.
+//!
+//! Connections never get a thread.  The event loop drains each readable
+//! socket into a per-connection buffer, peels complete protocol messages
+//! off the front (first-byte sniffing per message: `0x00` opens a v3
+//! frame, anything else is a v1/v2 text line), and submits inference work
+//! without blocking.  Completions funnel through one shared channel into
+//! [`demux_loop`], which appends the encoded reply to the connection's
+//! write buffer and wakes the poller through its pipe; the event loop then
+//! flushes opportunistically, falling back to `EPOLLOUT` interest only
+//! while a socket's kernel buffer is full.
+//!
+//! The v1 lockstep invariant (at most one untagged request in flight; the
+//! reply is written before later commands are parsed) survives without a
+//! blocking wait: an untagged `INFER`/`SWAP` sets the connection's
+//! `lockstep` flag, which pauses *parsing* (and read interest — input
+//! already buffered stays buffered) until the demux clears the flag and
+//! marks the connection dirty.  Tagged and binary replies keep draining
+//! around it, exactly as before.
+//!
+//! `stop()` is bounded with no polling anywhere: the stop flag plus one
+//! waker write unblocks the poller; dropping the event loop drops the
+//! master completion sender, so the demux exits once every in-flight
+//! request has replied (the executor's exactly-one-reply invariant bounds
+//! that).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::frame;
+use super::poller::{fd_of, Event, Poller, Waker};
+use super::{render_ok, NetOptions, NetStats, SubmitTarget, PROTO_V1, PROTO_V2, PROTO_V3};
+use crate::coordinator::request::{
+    Priority, Reply, RequestId, Response, TicketError, SHED_MESSAGE,
+};
+use crate::obs::trace::{SpanKind, TraceRing};
+
+/// Poller token of the accept socket (the waker owns `usize::MAX`).
+const LISTENER_TOKEN: usize = usize::MAX - 1;
+
+/// Where a completed request's reply goes on the wire.
+pub(super) enum ReplyRoute {
+    /// v1 untagged text reply; clears the connection's lockstep latch.
+    Lockstep,
+    /// v2 tagged text reply.
+    Tagged(u64),
+    /// v3 binary reply frame (`index` = sample position in its batch).
+    Binary { tag: u64, index: u16 },
+}
+
+/// Pending-map entry: which connection, which wire form.
+pub(super) struct PendingReply {
+    pub conn: Arc<ConnShared>,
+    pub route: ReplyRoute,
+}
+
+pub(super) type PendingMap = Mutex<HashMap<RequestId, PendingReply>>;
+
+/// Write-side state a connection shares with the demux (and SWAP worker).
+pub(super) struct ConnShared {
+    pub token: usize,
+    pub out: Mutex<OutBuf>,
+    /// Set while an untagged (lockstep) command blocks this connection's
+    /// parse stream; cleared by whoever writes the untagged reply.
+    pub lockstep: AtomicBool,
+}
+
+#[derive(Default)]
+pub(super) struct OutBuf {
+    pub buf: Vec<u8>,
+    /// Flushed prefix of `buf` (compacted when fully drained).
+    pub start: usize,
+    /// The socket is gone: appends become discards (replies for a dropped
+    /// connection are consumed, never leaked).
+    pub closed: bool,
+}
+
+impl OutBuf {
+    /// Append an encoded reply unless the connection already closed;
+    /// returns the bytes actually queued (0 when discarded).
+    fn push(&mut self, bytes: &[u8]) -> usize {
+        if self.closed {
+            return 0;
+        }
+        self.buf.extend_from_slice(bytes);
+        bytes.len()
+    }
+
+    fn backlog(&self) -> bool {
+        self.start < self.buf.len()
+    }
+}
+
+/// Render an untagged (v1) reply for a completed lockstep request, with
+/// the same error text the blocking `Ticket::wait` path produced.
+fn render_lockstep(reply: &Reply) -> String {
+    match &reply.result {
+        Ok(resp) => render_ok(None, resp),
+        Err(e) if e.0 == SHED_MESSAGE => {
+            format!("ERR {}", TicketError::DeadlineExceeded { id: reply.id })
+        }
+        Err(e) => {
+            format!("ERR {}", TicketError::Engine { id: reply.id, source: e.clone() })
+        }
+    }
+}
+
+/// The frontend's single reply demux: completions for every request on
+/// every connection funnel through one channel; [`Reply::id`] keys back to
+/// the connection and wire form.  Encoded replies land in the connection's
+/// write buffer, then a dirty-token note plus a waker write hand the flush
+/// to the event loop.  Exits when the last sender drops (event loop gone
+/// *and* every in-flight request replied).
+pub(super) fn demux_loop(
+    completions: mpsc::Receiver<Reply>,
+    pending: &PendingMap,
+    dirty: &Mutex<Vec<usize>>,
+    waker: &Waker,
+    stats: &NetStats,
+    trace: Option<&TraceRing>,
+) {
+    for reply in completions {
+        let Some(p) = pending.lock().unwrap().remove(&reply.id) else {
+            continue;
+        };
+        let (bytes, proto, clears_lockstep) = match p.route {
+            ReplyRoute::Lockstep => {
+                let mut b = render_lockstep(&reply).into_bytes();
+                b.push(b'\n');
+                (b, PROTO_V1, true)
+            }
+            ReplyRoute::Tagged(tag) => {
+                let line = match &reply.result {
+                    Ok(resp) => render_ok(Some(tag), resp),
+                    Err(e) => format!("ERR #{tag} {e}"),
+                };
+                let mut b = line.into_bytes();
+                b.push(b'\n');
+                (b, PROTO_V2, false)
+            }
+            ReplyRoute::Binary { tag, index } => {
+                let bytes = match &reply.result {
+                    Ok(resp) => frame::encode_reply_ok(&ok_frame(tag, index, resp)),
+                    Err(e) => frame::encode_reply_err(tag, index, &e.0),
+                };
+                (bytes, PROTO_V3, false)
+            }
+        };
+        let queued = p.conn.out.lock().unwrap().push(&bytes);
+        stats.bytes_out[proto].fetch_add(queued as u64, Ordering::Relaxed);
+        if clears_lockstep {
+            // clear *after* the reply bytes are queued: when the event loop
+            // processes the dirty note it resumes parsing behind the reply
+            p.conn.lockstep.store(false, Ordering::SeqCst);
+        }
+        dirty.lock().unwrap().push(p.conn.token);
+        waker.wake();
+        // overwrite the executor's channel-send stamp with the moment the
+        // reply was handed to the wire path (always later, so monotonicity
+        // of the span sequence is preserved)
+        if let Some(r) = trace {
+            r.stamp(reply.id, SpanKind::ReplySent);
+        }
+    }
+}
+
+/// Saturating µs conversion for the binary reply's fixed-width fields.
+fn us_u32(seconds: f64) -> u32 {
+    (seconds * 1e6).round().clamp(0.0, u32::MAX as f64) as u32
+}
+
+fn ok_frame(tag: u64, index: u16, resp: &Response) -> frame::OkFrame {
+    frame::OkFrame {
+        tag,
+        index,
+        class: resp.class.min(u16::MAX as usize) as u16,
+        queue_us: us_u32(resp.queue_seconds),
+        compute_us: us_u32(resp.compute_seconds),
+        occupancy: resp.batch_occupancy.min(u16::MAX as usize) as u16,
+        outputs: resp.output.clone(),
+    }
+}
+
+/// One connection's event-loop-private state.
+struct Conn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    in_buf: Vec<u8>,
+    /// Remaining bytes of an oversized declared frame being discarded
+    /// without buffering (the allocation guard's resync path).
+    discard: u64,
+    /// Read side saw EOF; finish parsing what's buffered, then close.
+    peer_closed: bool,
+    /// Close once the write buffer drains (QUIT, fatal protocol error).
+    closing: bool,
+    /// Interest currently registered with the poller.
+    reg_read: bool,
+    reg_write: bool,
+    /// Remove and drop this connection at the end of the dispatch step.
+    dead: bool,
+}
+
+pub(super) struct EventLoop {
+    listener: TcpListener,
+    target: Arc<dyn SubmitTarget>,
+    poller: Poller,
+    stop: Arc<AtomicBool>,
+    pending: Arc<PendingMap>,
+    completions: mpsc::Sender<Reply>,
+    dirty: Arc<Mutex<Vec<usize>>>,
+    stats: Arc<NetStats>,
+    opts: NetOptions,
+    trace: Option<Arc<TraceRing>>,
+    waker: Arc<Waker>,
+    conns: HashMap<usize, Conn>,
+    next_token: usize,
+}
+
+impl EventLoop {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        listener: TcpListener,
+        target: Arc<dyn SubmitTarget>,
+        poller: Poller,
+        waker: Arc<Waker>,
+        stop: Arc<AtomicBool>,
+        pending: Arc<PendingMap>,
+        completions: mpsc::Sender<Reply>,
+        dirty: Arc<Mutex<Vec<usize>>>,
+        stats: Arc<NetStats>,
+        opts: NetOptions,
+    ) -> Self {
+        let trace = target.traces();
+        Self {
+            listener,
+            target,
+            poller,
+            stop,
+            pending,
+            completions,
+            dirty,
+            stats,
+            opts,
+            trace,
+            waker,
+            conns: HashMap::new(),
+            next_token: 0,
+        }
+    }
+
+    pub fn run(&mut self) {
+        if self.poller.register(fd_of(&self.listener), LISTENER_TOKEN, true, false).is_err() {
+            return;
+        }
+        let mut events: Vec<Event> = Vec::new();
+        let mut scratch = vec![0u8; 64 * 1024];
+        while !self.stop.load(Ordering::SeqCst) {
+            if self.poller.wait(&mut events, None).is_err() {
+                break;
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            // demux handoffs first: flush freshly queued replies and resume
+            // parse streams whose lockstep reply just landed
+            let dirty = std::mem::take(&mut *self.dirty.lock().unwrap());
+            for token in dirty {
+                self.service(token, false, &mut scratch);
+            }
+            let batch = std::mem::take(&mut events);
+            for ev in &batch {
+                if ev.token == LISTENER_TOKEN {
+                    self.accept_ready();
+                } else {
+                    self.service(ev.token, ev.readable, &mut scratch);
+                }
+            }
+            events = batch;
+        }
+        // frontend going down: mark every surviving connection closed so
+        // the demux discards late replies instead of growing dead buffers
+        for (_, c) in self.conns.drain() {
+            c.shared.out.lock().unwrap().closed = true;
+            self.stats.connections_open.fetch_sub(1, Ordering::Relaxed);
+            self.poller.deregister(fd_of(&c.stream), c.shared.token);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((mut stream, _peer)) => {
+                    self.stats.connections_total.fetch_add(1, Ordering::Relaxed);
+                    if self.conns.len() >= self.opts.max_conns {
+                        // bounded accept: one ERR line, then close — the
+                        // conns map never grows past the cap
+                        self.stats.connections_rejected.fetch_add(1, Ordering::Relaxed);
+                        let line = format!("ERR busy (max_conns={})\n", self.opts.max_conns);
+                        let _ = stream.write_all(line.as_bytes());
+                        let _ = stream.shutdown(std::net::Shutdown::Both);
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(fd_of(&stream), token, true, false).is_err() {
+                        continue;
+                    }
+                    let shared = Arc::new(ConnShared {
+                        token,
+                        out: Mutex::new(OutBuf::default()),
+                        lockstep: AtomicBool::new(false),
+                    });
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            shared,
+                            in_buf: Vec::new(),
+                            discard: 0,
+                            peer_closed: false,
+                            closing: false,
+                            reg_read: true,
+                            reg_write: false,
+                            dead: false,
+                        },
+                    );
+                    self.stats.connections_open.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    // transient accept failure (EMFILE under a flood,
+                    // ECONNABORTED race): back off briefly so level-
+                    // triggered readiness doesn't spin, then let the next
+                    // poll retry
+                    std::thread::sleep(Duration::from_millis(5));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Drive one connection: drain the socket (when readable), parse every
+    /// complete message, flush the write buffer, update poller interest.
+    fn service(&mut self, token: usize, readable: bool, scratch: &mut [u8]) {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return; // stale dirty note or event for an already-closed conn
+        };
+        if readable && !conn.peer_closed {
+            fill_in_buf(&mut conn, scratch);
+        }
+        self.parse_stream(&mut conn);
+        flush(&mut conn);
+        self.update_interest(&mut conn);
+        if conn.dead {
+            conn.shared.out.lock().unwrap().closed = true;
+            self.poller.deregister(fd_of(&conn.stream), token);
+            self.stats.connections_open.fetch_sub(1, Ordering::Relaxed);
+            // conn (and its socket) drops here; pending entries for this
+            // connection self-clean as their replies arrive and discard
+        } else {
+            self.conns.insert(token, conn);
+        }
+    }
+
+    /// Peel complete messages off the front of the connection's buffer,
+    /// sniffing each message's first byte: `0x00` opens a v3 frame, any
+    /// other byte starts a v1/v2 text line.
+    fn parse_stream(&mut self, conn: &mut Conn) {
+        loop {
+            if conn.dead || conn.closing {
+                return;
+            }
+            // resync: swallow the remainder of an oversized declared frame
+            if conn.discard > 0 {
+                let n = (conn.discard as usize).min(conn.in_buf.len());
+                conn.in_buf.drain(..n);
+                conn.discard -= n as u64;
+                if conn.discard > 0 {
+                    if conn.peer_closed {
+                        conn.dead = true;
+                    }
+                    return; // need more bytes
+                }
+            }
+            if conn.shared.lockstep.load(Ordering::SeqCst) {
+                return; // untagged reply outstanding: parsing paused
+            }
+            if conn.in_buf.is_empty() {
+                if conn.peer_closed {
+                    conn.closing = true; // drain any queued replies, then go
+                }
+                return;
+            }
+            if conn.in_buf[0] == frame::MAGIC {
+                if !self.consume_frame(conn) {
+                    return;
+                }
+            } else if !self.consume_line(conn) {
+                return;
+            }
+        }
+    }
+
+    /// Try to consume one v3 frame; `false` = need more bytes (or the
+    /// connection is done).
+    fn consume_frame(&mut self, conn: &mut Conn) -> bool {
+        if !self.opts.accept_v3 {
+            // wire=v2 downgrade: binary is refused in text (the only form
+            // a v2-only peer speaks), and the stream can't be resynced
+            let queued = conn
+                .shared
+                .out
+                .lock()
+                .unwrap()
+                .push(b"ERR binary frames disabled (wire=v2)\n");
+            self.stats.bytes_out[PROTO_V1].fetch_add(queued as u64, Ordering::Relaxed);
+            conn.closing = true;
+            return false;
+        }
+        if conn.in_buf.len() < frame::PRELUDE_LEN {
+            if conn.peer_closed {
+                conn.dead = true; // truncated prelude at EOF
+            }
+            return false;
+        }
+        let prelude: [u8; frame::PRELUDE_LEN] =
+            conn.in_buf[..frame::PRELUDE_LEN].try_into().expect("length checked");
+        let hdr = match frame::parse_prelude(&prelude) {
+            Ok(hdr) => hdr,
+            Err(e) => {
+                // bad version/kind: the stream offset is untrustworthy, so
+                // answer and close (a lying body_len can't be skipped)
+                let queued =
+                    conn.shared.out.lock().unwrap().push(&frame::encode_reply_err(0, 0, &e));
+                self.stats.bytes_out[PROTO_V3].fetch_add(queued as u64, Ordering::Relaxed);
+                conn.closing = true;
+                return false;
+            }
+        };
+        if hdr.body_len > frame::MAX_FRAME_BYTES {
+            // allocation guard: never buffer the declared length — peel the
+            // tag for a routable ERR, then stream-discard the body
+            if conn.in_buf.len() < frame::PRELUDE_LEN + 8 {
+                if conn.peer_closed {
+                    conn.dead = true;
+                }
+                return false;
+            }
+            let tag = frame::peek_tag(&conn.in_buf[frame::PRELUDE_LEN..frame::PRELUDE_LEN + 8]);
+            let msg = format!(
+                "frame too large: declared {} bytes (cap {})",
+                hdr.body_len,
+                frame::MAX_FRAME_BYTES
+            );
+            let queued =
+                conn.shared.out.lock().unwrap().push(&frame::encode_reply_err(tag, 0, &msg));
+            self.stats.bytes_out[PROTO_V3].fetch_add(queued as u64, Ordering::Relaxed);
+            self.stats.bytes_in[PROTO_V3]
+                .fetch_add((frame::PRELUDE_LEN + 8) as u64, Ordering::Relaxed);
+            conn.in_buf.drain(..frame::PRELUDE_LEN + 8);
+            conn.discard = hdr.body_len as u64 - 8;
+            return true;
+        }
+        let total = frame::PRELUDE_LEN + hdr.body_len;
+        if conn.in_buf.len() < total {
+            if conn.peer_closed {
+                conn.dead = true; // truncated frame at EOF
+            }
+            return false;
+        }
+        // move the buffer out so the body slice doesn't fight the borrow
+        // of `conn` inside the handler (no copy)
+        let buf = std::mem::take(&mut conn.in_buf);
+        self.handle_frame(conn, hdr.kind, hdr.flags, &buf[frame::PRELUDE_LEN..total]);
+        conn.in_buf = buf;
+        conn.in_buf.drain(..total);
+        self.stats.bytes_in[PROTO_V3].fetch_add(total as u64, Ordering::Relaxed);
+        true
+    }
+
+    /// Try to consume one text line; `false` = need more bytes.
+    fn consume_line(&mut self, conn: &mut Conn) -> bool {
+        let Some(pos) = conn.in_buf.iter().position(|&b| b == b'\n') else {
+            if conn.peer_closed && !conn.in_buf.is_empty() {
+                // final line without a trailing newline
+                let buf = std::mem::take(&mut conn.in_buf);
+                let line = String::from_utf8_lossy(&buf);
+                let proto = self.handle_line(conn, line.trim_end());
+                self.stats.bytes_in[proto].fetch_add(buf.len() as u64, Ordering::Relaxed);
+                return true;
+            }
+            if conn.peer_closed {
+                conn.closing = true;
+            }
+            return false;
+        };
+        let buf = std::mem::take(&mut conn.in_buf);
+        let line = String::from_utf8_lossy(&buf[..pos]);
+        let proto = self.handle_line(conn, line.trim_end());
+        conn.in_buf = buf;
+        conn.in_buf.drain(..=pos);
+        self.stats.bytes_in[proto].fetch_add(pos as u64 + 1, Ordering::Relaxed);
+        true
+    }
+
+    /// Append a text reply line to the connection's write buffer.
+    fn push_line(&self, conn: &Conn, line: &str, proto: usize) {
+        let mut bytes = line.as_bytes().to_vec();
+        bytes.push(b'\n');
+        let queued = conn.shared.out.lock().unwrap().push(&bytes);
+        self.stats.bytes_out[proto].fetch_add(queued as u64, Ordering::Relaxed);
+    }
+
+    /// Dispatch one text command; returns the protocol generation the line
+    /// is accounted under (v2 when tagged, v1 otherwise).
+    fn handle_line(&mut self, conn: &mut Conn, line: &str) -> usize {
+        match parse_command(line) {
+            Ok(Command::Quit) => {
+                // close silently (no reply) once queued replies drain
+                conn.closing = true;
+                PROTO_V1
+            }
+            Ok(Command::Stats) => {
+                let report = self.target.stats().render();
+                let line = format!("{report}{}", self.stats.render_suffix());
+                self.push_line(conn, &line, PROTO_V1);
+                PROTO_V1
+            }
+            Ok(Command::StatsJson) => {
+                let line = splice_json(self.target.stats().render_json(), &self.stats);
+                self.push_line(conn, &line, PROTO_V1);
+                PROTO_V1
+            }
+            Ok(Command::StatsProm) => {
+                // multi-line reply; "# EOF" frames it for clients.  The net
+                // section is spliced in front of the terminator.
+                let text = splice_prometheus(self.target.prometheus(), &self.stats);
+                let queued = conn.shared.out.lock().unwrap().push(text.as_bytes());
+                self.stats.bytes_out[PROTO_V1].fetch_add(queued as u64, Ordering::Relaxed);
+                PROTO_V1
+            }
+            Ok(Command::TraceOne(id)) => {
+                let reply = match self.target.traces().and_then(|r| r.get(id)) {
+                    Some(t) => t.render(),
+                    None => {
+                        format!("ERR trace #{id} not found (tracing off, sampled out, or evicted)")
+                    }
+                };
+                self.push_line(conn, &reply, PROTO_V1);
+                PROTO_V1
+            }
+            Ok(Command::TraceLast(n)) => {
+                let traces = self.target.traces().map(|r| r.last(n)).unwrap_or_default();
+                self.push_line(conn, &format!("TRACES {}", traces.len()), PROTO_V1);
+                for t in &traces {
+                    self.push_line(conn, &t.render(), PROTO_V1);
+                }
+                PROTO_V1
+            }
+            Ok(Command::Models) => {
+                match self.target.models() {
+                    // count-framed like TRACES: "MODELS <k>" then k lines
+                    Some(lines) => {
+                        self.push_line(conn, &format!("MODELS {}", lines.len()), PROTO_V1);
+                        for l in &lines {
+                            self.push_line(conn, l, PROTO_V1);
+                        }
+                    }
+                    None => {
+                        self.push_line(conn, "ERR MODELS: single-model serving target", PROTO_V1)
+                    }
+                }
+                PROTO_V1
+            }
+            Ok(Command::Swap { model, path }) => {
+                self.start_swap(conn, model, path);
+                PROTO_V1
+            }
+            Ok(Command::Infer { values, priority, tag: None, model }) => {
+                // v1 lockstep without a blocking thread: submit, then latch
+                // the connection's parse stream until the reply lands
+                let input = crate::fixedpoint::quantize_slice(&values);
+                let submitted = {
+                    let mut p = self.pending.lock().unwrap();
+                    self.target
+                        .submit_model(
+                            model.as_deref(),
+                            input,
+                            priority,
+                            None,
+                            self.completions.clone(),
+                        )
+                        .map(|id| {
+                            p.insert(
+                                id,
+                                PendingReply {
+                                    conn: conn.shared.clone(),
+                                    route: ReplyRoute::Lockstep,
+                                },
+                            );
+                        })
+                };
+                match submitted {
+                    Ok(()) => conn.shared.lockstep.store(true, Ordering::SeqCst),
+                    Err(e) => self.push_line(conn, &format!("ERR {e:#}"), PROTO_V1),
+                }
+                PROTO_V1
+            }
+            Ok(Command::Infer { values, priority, tag: Some(tag), model }) => {
+                let input = crate::fixedpoint::quantize_slice(&values);
+                // holding `pending` across submit makes the tag insertion
+                // atomic with the submission, so the demux can never see a
+                // completion whose mapping is missing
+                let submitted = {
+                    let mut p = self.pending.lock().unwrap();
+                    self.target
+                        .submit_model(
+                            model.as_deref(),
+                            input,
+                            priority,
+                            None,
+                            self.completions.clone(),
+                        )
+                        .map(|id| {
+                            p.insert(
+                                id,
+                                PendingReply {
+                                    conn: conn.shared.clone(),
+                                    route: ReplyRoute::Tagged(tag),
+                                },
+                            );
+                        })
+                };
+                if let Err(e) = submitted {
+                    self.push_line(conn, &format!("ERR #{tag} {e:#}"), PROTO_V2);
+                }
+                PROTO_V2
+            }
+            Err((Some(tag), e)) => {
+                self.push_line(conn, &format!("ERR #{tag} {e}"), PROTO_V2);
+                PROTO_V2
+            }
+            Err((None, e)) => {
+                self.push_line(conn, &format!("ERR {e}"), PROTO_V1);
+                PROTO_V1
+            }
+        }
+    }
+
+    /// `SWAP` blocks its own connection (lockstep semantics) but must not
+    /// block the event loop for the drain — run it on a detached thread
+    /// that reports back exactly like a demuxed reply.
+    fn start_swap(&self, conn: &mut Conn, model: String, path: String) {
+        conn.shared.lockstep.store(true, Ordering::SeqCst);
+        let target = self.target.clone();
+        let shared = conn.shared.clone();
+        let dirty = self.dirty.clone();
+        let waker = self.waker.clone();
+        let stats = self.stats.clone();
+        let spawned = std::thread::Builder::new().name("zdnn-net-swap".into()).spawn(move || {
+            let line = match target.swap_model(&model, &path) {
+                Ok(summary) => format!("OK {summary}\n"),
+                Err(e) => format!("ERR SWAP {model}: {e:#}\n"),
+            };
+            let queued = shared.out.lock().unwrap().push(line.as_bytes());
+            stats.bytes_out[PROTO_V1].fetch_add(queued as u64, Ordering::Relaxed);
+            shared.lockstep.store(false, Ordering::SeqCst);
+            dirty.lock().unwrap().push(shared.token);
+            waker.wake();
+        });
+        if spawned.is_err() {
+            self.push_line(conn, &format!("ERR SWAP {model}: spawn failed"), PROTO_V1);
+            conn.shared.lockstep.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Dispatch one complete v3 frame body.
+    fn handle_frame(&mut self, conn: &mut Conn, kind: u8, flags: u8, body: &[u8]) {
+        if kind != frame::KIND_REQ {
+            let err = frame::encode_reply_err(
+                frame::peek_tag(body),
+                0,
+                &format!("unexpected frame kind {kind} (clients send REQ)"),
+            );
+            let queued = conn.shared.out.lock().unwrap().push(&err);
+            self.stats.bytes_out[PROTO_V3].fetch_add(queued as u64, Ordering::Relaxed);
+            return;
+        }
+        let req = match frame::decode_request(flags, body) {
+            Ok(req) => req,
+            Err(e) => {
+                // frame-scoped error: the framing stayed consistent, so the
+                // connection survives for the next message
+                let err = frame::encode_reply_err(frame::peek_tag(body), 0, &e);
+                let queued = conn.shared.out.lock().unwrap().push(&err);
+                self.stats.bytes_out[PROTO_V3].fetch_add(queued as u64, Ordering::Relaxed);
+                return;
+            }
+        };
+        let priority = if req.bulk { Priority::Bulk } else { Priority::Interactive };
+        // relative wire deadline → absolute instant at receipt; rides to
+        // the executor so expired requests shed before batch formation
+        let deadline = if req.deadline_us > 0 {
+            Some(Instant::now() + Duration::from_micros(req.deadline_us as u64))
+        } else {
+            None
+        };
+        for i in 0..req.batch as usize {
+            let input = req.sample_q78(i);
+            let submitted = {
+                let mut p = self.pending.lock().unwrap();
+                self.target
+                    .submit_model(
+                        req.model.as_deref(),
+                        input,
+                        priority,
+                        deadline,
+                        self.completions.clone(),
+                    )
+                    .map(|id| {
+                        p.insert(
+                            id,
+                            PendingReply {
+                                conn: conn.shared.clone(),
+                                route: ReplyRoute::Binary { tag: req.tag, index: i as u16 },
+                            },
+                        );
+                    })
+            };
+            if let Err(e) = submitted {
+                // per-sample: later samples of the batch still submit
+                let err = frame::encode_reply_err(req.tag, i as u16, &format!("{e:#}"));
+                let queued = conn.shared.out.lock().unwrap().push(&err);
+                self.stats.bytes_out[PROTO_V3].fetch_add(queued as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn update_interest(&self, conn: &mut Conn) {
+        if conn.dead {
+            return;
+        }
+        let want_read =
+            !conn.peer_closed && !conn.closing && !conn.shared.lockstep.load(Ordering::SeqCst);
+        let want_write = conn.shared.out.lock().unwrap().backlog();
+        if conn.closing && !want_write {
+            conn.dead = true; // everything flushed: close now
+            return;
+        }
+        if (want_read, want_write) != (conn.reg_read, conn.reg_write) {
+            let fd = fd_of(&conn.stream);
+            let _ = self.poller.modify(fd, conn.shared.token, want_read, want_write);
+            conn.reg_read = want_read;
+            conn.reg_write = want_write;
+        }
+    }
+}
+
+/// Drain the socket into the connection's buffer until `WouldBlock` (the
+/// level-triggered contract: leave nothing readable behind).
+fn fill_in_buf(conn: &mut Conn, scratch: &mut [u8]) {
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.peer_closed = true;
+                return;
+            }
+            Ok(n) => conn.in_buf.extend_from_slice(&scratch[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Flush the write buffer as far as the kernel will take it.
+fn flush(conn: &mut Conn) {
+    let mut o = conn.shared.out.lock().unwrap();
+    while o.start < o.buf.len() {
+        match conn.stream.write(&o.buf[o.start..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => o.start += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if o.start >= o.buf.len() {
+        o.buf.clear();
+        o.start = 0;
+    }
+}
+
+/// Splice the net section into the target's `STATS JSON` object (append
+/// a `"net"` key before the closing brace — outer keys stay untouched).
+fn splice_json(mut json: String, stats: &NetStats) -> String {
+    if json.ends_with('}') {
+        json.pop();
+        json.push_str(",\"net\":");
+        json.push_str(&stats.render_json());
+        json.push('}');
+    }
+    json
+}
+
+/// Splice the net section into a Prometheus exposition, in front of the
+/// `# EOF` terminator.
+fn splice_prometheus(text: String, stats: &NetStats) -> String {
+    let body = text.strip_suffix("# EOF\n").unwrap_or(&text);
+    format!("{body}{}# EOF\n", stats.render_prometheus())
+}
+
+pub(super) enum Command {
+    Infer {
+        values: Vec<f32>,
+        priority: Priority,
+        tag: Option<u64>,
+        /// `@<model>` routing target (`None` = the default model).
+        model: Option<String>,
+    },
+    Stats,
+    StatsJson,
+    StatsProm,
+    TraceOne(RequestId),
+    TraceLast(usize),
+    Models,
+    Swap { model: String, path: String },
+    Quit,
+}
+
+/// Parse failures carry the request's tag when one was readable, so a
+/// pipelined client gets the error routed to the right ticket.
+pub(super) fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
+    let mut parts = line.split_ascii_whitespace().peekable();
+    match parts.next() {
+        Some("INFER") => {
+            // fixed operand order: @<model>, then BULK, then #<tag>
+            let model = match parts.peek() {
+                Some(m) if m.starts_with('@') => {
+                    let name = &parts.next().expect("peeked")[1..];
+                    if name.is_empty() {
+                        return Err((None, "empty model name (want @<model>)".into()));
+                    }
+                    Some(name.to_string())
+                }
+                _ => None,
+            };
+            let priority = if parts.peek().copied() == Some("BULK") {
+                parts.next();
+                Priority::Bulk
+            } else {
+                Priority::Interactive
+            };
+            let tag = match parts.peek() {
+                Some(t) if t.starts_with('#') => {
+                    let raw = &parts.next().expect("peeked")[1..];
+                    match raw.parse::<u64>() {
+                        Ok(t) => Some(t),
+                        Err(_) => {
+                            return Err((None, format!("bad tag {raw:?} (want #<u64>)")));
+                        }
+                    }
+                }
+                _ => None,
+            };
+            let values: Result<Vec<f32>, _> = parts.map(str::parse::<f32>).collect();
+            match values {
+                Ok(v) if !v.is_empty() => Ok(Command::Infer { values: v, priority, tag, model }),
+                Ok(_) => Err((tag, "INFER needs at least one value".into())),
+                Err(e) => Err((tag, format!("bad number: {e}"))),
+            }
+        }
+        Some("STATS") => match parts.next() {
+            None => Ok(Command::Stats),
+            Some("JSON") => Ok(Command::StatsJson),
+            Some("PROM") => Ok(Command::StatsProm),
+            Some(other) => Err((None, format!("unknown STATS form {other:?} (want JSON or PROM)"))),
+        },
+        Some("TRACE") => match parts.next() {
+            Some(t) if t.starts_with('#') => match t[1..].parse::<u64>() {
+                Ok(id) => Ok(Command::TraceOne(id)),
+                Err(_) => Err((None, format!("bad trace id {:?} (want #<u64>)", &t[1..]))),
+            },
+            Some("LAST") => match parts.next().map(str::parse::<usize>) {
+                Some(Ok(n)) => Ok(Command::TraceLast(n)),
+                _ => Err((None, "TRACE LAST wants a count".into())),
+            },
+            _ => Err((None, "TRACE wants #<id> or LAST <n>".into())),
+        },
+        Some("MODELS") => Ok(Command::Models),
+        Some("SWAP") => match (parts.next(), parts.next()) {
+            (Some(model), Some(path)) => {
+                Ok(Command::Swap { model: model.to_string(), path: path.to_string() })
+            }
+            _ => Err((None, "SWAP wants <model> <path.rpz>".into())),
+        },
+        Some("QUIT") => Ok(Command::Quit),
+        Some(other) => Err((None, format!("unknown command {other:?}"))),
+        None => Err((None, "empty command".into())),
+    }
+}

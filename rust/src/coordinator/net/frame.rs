@@ -1,0 +1,589 @@
+//! Wire protocol v3: length-prefixed binary frames.
+//!
+//! Every frame opens with an 8-byte prelude:
+//!
+//! ```text
+//! byte 0      1        2      3       4..8
+//!      magic  version  kind   flags   body_len (u32 LE)
+//!      0x00   3        1|2|3  bits    bytes after the prelude
+//! ```
+//!
+//! The `0x00` magic is what first-byte sniffing keys on: no v1/v2 text line
+//! can start with a NUL, so both generations share one port.  `body_len` is
+//! validated against [`MAX_FRAME_BYTES`] *before* any allocation — a crafted
+//! header can make the peer discard, never allocate (same discipline as the
+//! `.rpz` crafted-header path).
+//!
+//! Frame kinds and body layouts (all integers little-endian):
+//!
+//! ```text
+//! REQ (1), client → server:
+//!   tag u64 | deadline_us u32 | batch u16 | width u16 | model_len u8 |
+//!   model utf8 | payload (batch × width elems; f32, or i16 Q7.8 when
+//!   flags bit 1 is set)
+//! REPLY_OK (2), server → client, one per sample in the batch:
+//!   tag u64 | index u16 | class u16 | queue_us u32 | compute_us u32 |
+//!   occupancy u16 | out_len u16 | outputs (i32 Q7.8 × out_len)
+//! REPLY_ERR (3), server → client, frame-scoped error:
+//!   tag u64 | index u16 | msg_len u16 | msg utf8
+//! ```
+//!
+//! Flags: bit 0 = bulk priority, bit 1 = i16 payload.  `deadline_us` is
+//! relative (microseconds from server receipt; 0 = none) and feeds the
+//! PR 8 server-side shedder: a request whose deadline lapses before batch
+//! formation comes back as `REPLY_ERR` without touching an engine.
+
+use crate::fixedpoint::quantize;
+
+/// First byte of every v3 frame; sniffed to split binary from text.
+pub const MAGIC: u8 = 0x00;
+/// Protocol generation carried in byte 1.
+pub const VERSION: u8 = 3;
+/// Client request frame.
+pub const KIND_REQ: u8 = 1;
+/// Per-sample success reply.
+pub const KIND_REPLY_OK: u8 = 2;
+/// Per-sample (or per-frame) error reply.
+pub const KIND_REPLY_ERR: u8 = 3;
+/// Bulk priority (flags bit 0).
+pub const FLAG_BULK: u8 = 0x01;
+/// Payload elements are i16 Q7.8 instead of f32 (flags bit 1).
+pub const FLAG_I16: u8 = 0x02;
+/// Hard cap on a declared body length; larger frames are answered with an
+/// `ERR` frame and stream-discarded without buffering.
+pub const MAX_FRAME_BYTES: usize = 1 << 24;
+
+/// Bytes in the fixed prelude.
+pub const PRELUDE_LEN: usize = 8;
+
+/// Decoded prelude of any v3 frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Prelude {
+    pub kind: u8,
+    pub flags: u8,
+    pub body_len: usize,
+}
+
+/// Request payload: one flat row-major `batch × width` block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I16(Vec<i16>),
+}
+
+impl Payload {
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn elem_size(&self) -> usize {
+        match self {
+            Payload::F32(_) => 4,
+            Payload::I16(_) => 2,
+        }
+    }
+}
+
+/// A decoded (or to-be-encoded) REQ frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    pub tag: u64,
+    pub bulk: bool,
+    /// Relative deadline in microseconds; 0 means none.
+    pub deadline_us: u32,
+    pub batch: u16,
+    pub width: u16,
+    pub model: Option<String>,
+    pub payload: Payload,
+}
+
+impl RequestFrame {
+    /// Sample `i` of the batch as server-side Q7.8 input, matching what the
+    /// text path produces via [`crate::fixedpoint::quantize_slice`].
+    pub fn sample_q78(&self, i: usize) -> Vec<i32> {
+        let (w, lo) = (self.width as usize, i * self.width as usize);
+        match &self.payload {
+            Payload::F32(v) => v[lo..lo + w].iter().map(|&x| quantize(x as f64)).collect(),
+            Payload::I16(v) => v[lo..lo + w].iter().map(|&x| x as i32).collect(),
+        }
+    }
+}
+
+/// A decoded REPLY_OK frame (one inference result).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OkFrame {
+    pub tag: u64,
+    /// Position of this sample inside its request batch.
+    pub index: u16,
+    pub class: u16,
+    pub queue_us: u32,
+    pub compute_us: u32,
+    pub occupancy: u16,
+    pub outputs: Vec<i32>,
+}
+
+/// A decoded REPLY_ERR frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrFrame {
+    pub tag: u64,
+    pub index: u16,
+    pub msg: String,
+}
+
+/// Either reply kind, as the client reader sees them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplyFrame {
+    Ok(OkFrame),
+    Err(ErrFrame),
+}
+
+fn put_u16(out: &mut Vec<u8>, x: u16) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Little-endian cursor over a frame body; every take is bounds-checked so
+/// a truncated or lying body becomes a frame-scoped error, never a panic.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.b.len() - self.pos < n {
+            return Err(format!(
+                "frame body truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            ));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest_len(&self) -> usize {
+        self.b.len() - self.pos
+    }
+}
+
+fn prelude(out: &mut Vec<u8>, kind: u8, flags: u8, body_len: usize) {
+    out.push(MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.push(flags);
+    put_u32(out, body_len as u32);
+}
+
+/// Parse and validate the fixed 8-byte prelude.  `body_len` over the cap is
+/// *not* an error here — the caller must see it to run the discard path —
+/// but version/kind/magic mismatches are.
+pub fn parse_prelude(b: &[u8; PRELUDE_LEN]) -> Result<Prelude, String> {
+    if b[0] != MAGIC {
+        return Err(format!("bad frame magic 0x{:02x} (want 0x00)", b[0]));
+    }
+    if b[1] != VERSION {
+        return Err(format!("unsupported wire version {} (this build speaks v3)", b[1]));
+    }
+    if !(KIND_REQ..=KIND_REPLY_ERR).contains(&b[2]) {
+        return Err(format!("unknown frame kind {}", b[2]));
+    }
+    Ok(Prelude {
+        kind: b[2],
+        flags: b[3],
+        body_len: u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize,
+    })
+}
+
+/// Best-effort tag of a malformed frame body, so the error reply can still
+/// be routed to the ticket that sent it; 0 when even the tag is missing.
+pub fn peek_tag(body: &[u8]) -> u64 {
+    if body.len() >= 8 {
+        u64::from_le_bytes(body[..8].try_into().unwrap())
+    } else {
+        0
+    }
+}
+
+/// Encode a REQ frame (prelude + body).
+pub fn encode_request(f: &RequestFrame) -> Vec<u8> {
+    let model = f.model.as_deref().unwrap_or("");
+    debug_assert!(model.len() <= u8::MAX as usize, "model name too long for wire");
+    debug_assert_eq!(f.payload.len(), f.batch as usize * f.width as usize);
+    let body_len = 17 + model.len() + f.payload.len() * f.payload.elem_size();
+    let mut out = Vec::with_capacity(PRELUDE_LEN + body_len);
+    let mut flags = 0u8;
+    if f.bulk {
+        flags |= FLAG_BULK;
+    }
+    if matches!(f.payload, Payload::I16(_)) {
+        flags |= FLAG_I16;
+    }
+    prelude(&mut out, KIND_REQ, flags, body_len);
+    put_u64(&mut out, f.tag);
+    put_u32(&mut out, f.deadline_us);
+    put_u16(&mut out, f.batch);
+    put_u16(&mut out, f.width);
+    out.push(model.len() as u8);
+    out.extend_from_slice(model.as_bytes());
+    match &f.payload {
+        Payload::F32(v) => {
+            for x in v {
+                put_u32(&mut out, x.to_bits());
+            }
+        }
+        Payload::I16(v) => {
+            for x in v {
+                put_u16(&mut out, *x as u16);
+            }
+        }
+    }
+    out
+}
+
+/// Decode a REQ body (everything after the prelude).
+pub fn decode_request(flags: u8, body: &[u8]) -> Result<RequestFrame, String> {
+    let mut rd = Rd::new(body);
+    let tag = rd.u64()?;
+    let deadline_us = rd.u32()?;
+    let batch = rd.u16()?;
+    let width = rd.u16()?;
+    let model_len = rd.take(1)?[0] as usize;
+    let model = match rd.take(model_len) {
+        Ok(b) => match std::str::from_utf8(b) {
+            Ok("") => None,
+            Ok(s) => Some(s.to_string()),
+            Err(_) => return Err("model name is not utf-8".to_string()),
+        },
+        Err(e) => return Err(format!("model name overruns body: {e}")),
+    };
+    if batch == 0 {
+        return Err("batch must be >= 1".to_string());
+    }
+    if width == 0 {
+        return Err("width must be >= 1".to_string());
+    }
+    let elems = batch as usize * width as usize;
+    let i16_payload = flags & FLAG_I16 != 0;
+    let esz = if i16_payload { 2 } else { 4 };
+    if rd.rest_len() != elems * esz {
+        return Err(format!(
+            "payload length mismatch: batch {batch} x width {width} wants {} bytes, frame has {}",
+            elems * esz,
+            rd.rest_len()
+        ));
+    }
+    let payload = if i16_payload {
+        let mut v = Vec::with_capacity(elems);
+        for _ in 0..elems {
+            v.push(rd.u16()? as i16);
+        }
+        Payload::I16(v)
+    } else {
+        let mut v = Vec::with_capacity(elems);
+        for _ in 0..elems {
+            v.push(f32::from_bits(rd.u32()?));
+        }
+        Payload::F32(v)
+    };
+    Ok(RequestFrame {
+        tag,
+        bulk: flags & FLAG_BULK != 0,
+        deadline_us,
+        batch,
+        width,
+        model,
+        payload,
+    })
+}
+
+/// Encode a REPLY_OK frame.
+pub fn encode_reply_ok(f: &OkFrame) -> Vec<u8> {
+    let body_len = 24 + 4 * f.outputs.len();
+    let mut out = Vec::with_capacity(PRELUDE_LEN + body_len);
+    prelude(&mut out, KIND_REPLY_OK, 0, body_len);
+    put_u64(&mut out, f.tag);
+    put_u16(&mut out, f.index);
+    put_u16(&mut out, f.class);
+    put_u32(&mut out, f.queue_us);
+    put_u32(&mut out, f.compute_us);
+    put_u16(&mut out, f.occupancy);
+    put_u16(&mut out, f.outputs.len() as u16);
+    for x in &f.outputs {
+        put_u32(&mut out, *x as u32);
+    }
+    out
+}
+
+/// Encode a REPLY_ERR frame; the message is truncated to fit u16 length.
+pub fn encode_reply_err(tag: u64, index: u16, msg: &str) -> Vec<u8> {
+    let mut msg = msg.as_bytes();
+    if msg.len() > u16::MAX as usize {
+        msg = &msg[..u16::MAX as usize];
+    }
+    let body_len = 12 + msg.len();
+    let mut out = Vec::with_capacity(PRELUDE_LEN + body_len);
+    prelude(&mut out, KIND_REPLY_ERR, 0, body_len);
+    put_u64(&mut out, tag);
+    put_u16(&mut out, index);
+    put_u16(&mut out, msg.len() as u16);
+    out.extend_from_slice(msg);
+    out
+}
+
+/// Decode a reply body of the given kind.
+pub fn decode_reply(kind: u8, body: &[u8]) -> Result<ReplyFrame, String> {
+    let mut rd = Rd::new(body);
+    match kind {
+        KIND_REPLY_OK => {
+            let tag = rd.u64()?;
+            let index = rd.u16()?;
+            let class = rd.u16()?;
+            let queue_us = rd.u32()?;
+            let compute_us = rd.u32()?;
+            let occupancy = rd.u16()?;
+            let out_len = rd.u16()? as usize;
+            if rd.rest_len() != out_len * 4 {
+                return Err(format!(
+                    "reply outputs length mismatch: declared {out_len}, body holds {} bytes",
+                    rd.rest_len()
+                ));
+            }
+            let mut outputs = Vec::with_capacity(out_len);
+            for _ in 0..out_len {
+                outputs.push(rd.u32()? as i32);
+            }
+            Ok(ReplyFrame::Ok(OkFrame {
+                tag,
+                index,
+                class,
+                queue_us,
+                compute_us,
+                occupancy,
+                outputs,
+            }))
+        }
+        KIND_REPLY_ERR => {
+            let tag = rd.u64()?;
+            let index = rd.u16()?;
+            let msg_len = rd.u16()? as usize;
+            if rd.rest_len() != msg_len {
+                return Err(format!(
+                    "reply message length mismatch: declared {msg_len}, body holds {} bytes",
+                    rd.rest_len()
+                ));
+            }
+            let msg = String::from_utf8_lossy(rd.take(msg_len)?).into_owned();
+            Ok(ReplyFrame::Err(ErrFrame { tag, index, msg }))
+        }
+        other => Err(format!("frame kind {other} is not a reply")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn arb_request(g: &mut crate::util::prop::Gen) -> RequestFrame {
+        let batch = g.u64(1..=4) as u16;
+        let width = g.u64(1..=48) as u16;
+        let elems = batch as usize * width as usize;
+        let model = match g.u64(0..=2) {
+            0 => None,
+            1 => Some("mnist4".to_string()),
+            _ => Some(format!("m{}", g.u64(0..=999))),
+        };
+        let payload = if g.bool(0.5) {
+            Payload::I16((0..elems).map(|_| g.i64(-32768..=32767) as i16).collect())
+        } else {
+            Payload::F32((0..elems).map(|_| g.f64(-8.0, 8.0) as f32).collect())
+        };
+        RequestFrame {
+            tag: g.rng().next_u64_inline(),
+            bulk: g.bool(0.5),
+            deadline_us: g.u64(0..=u32::MAX as u64) as u32,
+            batch,
+            width,
+            model,
+            payload,
+        }
+    }
+
+    #[test]
+    fn prop_request_round_trips_bit_exact() {
+        prop_check(200, |g| {
+            let f = arb_request(g);
+            let bytes = encode_request(&f);
+            let p = parse_prelude(bytes[..PRELUDE_LEN].try_into().unwrap()).expect("prelude");
+            assert_eq!(p.kind, KIND_REQ);
+            assert_eq!(p.body_len, bytes.len() - PRELUDE_LEN);
+            let back = decode_request(p.flags, &bytes[PRELUDE_LEN..]).expect("decode");
+            back == f
+        });
+    }
+
+    #[test]
+    fn prop_replies_round_trip_bit_exact() {
+        prop_check(200, |g| {
+            let ok = if g.bool(0.5) {
+                let f = OkFrame {
+                    tag: g.rng().next_u64_inline(),
+                    index: g.u64(0..=u16::MAX as u64) as u16,
+                    class: g.u64(0..=u16::MAX as u64) as u16,
+                    queue_us: g.u64(0..=u32::MAX as u64) as u32,
+                    compute_us: g.u64(0..=u32::MAX as u64) as u32,
+                    occupancy: g.u64(0..=u16::MAX as u64) as u16,
+                    outputs: (0..g.usize(0..17)).map(|_| g.i32_full()).collect(),
+                };
+                let bytes = encode_reply_ok(&f);
+                let p = parse_prelude(bytes[..PRELUDE_LEN].try_into().unwrap()).expect("prelude");
+                assert_eq!(p.kind, KIND_REPLY_OK);
+                let back = decode_reply(p.kind, &bytes[PRELUDE_LEN..]).expect("decode");
+                back == ReplyFrame::Ok(f)
+            } else {
+                let msg: String =
+                    (0..g.usize(0..40)).map(|_| char::from(b'a' + (g.u64(0..=25) as u8))).collect();
+                let tag = g.rng().next_u64_inline();
+                let index = g.u64(0..=u16::MAX as u64) as u16;
+                let bytes = encode_reply_err(tag, index, &msg);
+                let p = parse_prelude(bytes[..PRELUDE_LEN].try_into().unwrap()).expect("prelude");
+                let back = decode_reply(p.kind, &bytes[PRELUDE_LEN..]).expect("decode");
+                back == ReplyFrame::Err(ErrFrame { tag, index, msg })
+            };
+            ok
+        });
+    }
+
+    #[test]
+    fn i16_samples_match_text_path_quantization() {
+        let values = [0.25f32, -0.5, 0.4999, -0.1];
+        let q: Vec<i16> = values.iter().map(|&v| quantize(v as f64) as i16).collect();
+        let via_i16 = RequestFrame {
+            tag: 1,
+            bulk: false,
+            deadline_us: 0,
+            batch: 1,
+            width: 4,
+            model: None,
+            payload: Payload::I16(q),
+        };
+        let via_f32 = RequestFrame { payload: Payload::F32(values.to_vec()), ..via_i16.clone() };
+        assert_eq!(via_i16.sample_q78(0), via_f32.sample_q78(0));
+        assert_eq!(via_f32.sample_q78(0), crate::fixedpoint::quantize_slice(&values));
+    }
+
+    #[test]
+    fn prelude_rejects_bad_magic_version_and_kind() {
+        let good = encode_reply_err(9, 0, "x");
+        let mut b: [u8; PRELUDE_LEN] = good[..PRELUDE_LEN].try_into().unwrap();
+        assert!(parse_prelude(&b).is_ok());
+        b[0] = b'I';
+        assert!(parse_prelude(&b).unwrap_err().contains("magic"));
+        b[0] = MAGIC;
+        b[1] = 2;
+        assert!(parse_prelude(&b).unwrap_err().contains("version"));
+        b[1] = VERSION;
+        b[2] = 9;
+        assert!(parse_prelude(&b).unwrap_err().contains("kind"));
+    }
+
+    #[test]
+    fn oversized_declared_length_is_visible_not_allocated() {
+        // parse_prelude reports the liar's length; the caller compares it to
+        // MAX_FRAME_BYTES and runs the discard path without allocating
+        let mut b = [0u8; PRELUDE_LEN];
+        b[1] = VERSION;
+        b[2] = KIND_REQ;
+        b[4..8].copy_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
+        let p = parse_prelude(&b).expect("prelude itself is well-formed");
+        assert!(p.body_len > MAX_FRAME_BYTES);
+    }
+
+    #[test]
+    fn malformed_bodies_error_without_panicking() {
+        // truncated header region
+        assert!(decode_request(0, &[0u8; 5]).is_err());
+        // model_len overruns the body
+        let mut f = encode_request(&RequestFrame {
+            tag: 3,
+            bulk: false,
+            deadline_us: 0,
+            batch: 1,
+            width: 1,
+            model: Some("abc".into()),
+            payload: Payload::F32(vec![0.5]),
+        });
+        let body = &mut f[PRELUDE_LEN..];
+        body[16] = 200; // model_len byte
+        assert!(decode_request(0, body).unwrap_err().contains("model name"));
+        // zero batch / zero width
+        let mut raw = Vec::new();
+        put_u64(&mut raw, 1);
+        put_u32(&mut raw, 0);
+        put_u16(&mut raw, 0); // batch = 0
+        put_u16(&mut raw, 1);
+        raw.push(0);
+        raw.extend_from_slice(&0.5f32.to_bits().to_le_bytes());
+        assert!(decode_request(0, &raw).unwrap_err().contains("batch"));
+        // payload shorter than batch x width claims
+        let mut raw = Vec::new();
+        put_u64(&mut raw, 1);
+        put_u32(&mut raw, 0);
+        put_u16(&mut raw, 2);
+        put_u16(&mut raw, 8);
+        raw.push(0);
+        raw.extend_from_slice(&0.5f32.to_bits().to_le_bytes());
+        assert!(decode_request(0, &raw).unwrap_err().contains("payload length mismatch"));
+        // reply with lying out_len
+        let ok = OkFrame {
+            tag: 1,
+            index: 0,
+            class: 2,
+            queue_us: 10,
+            compute_us: 20,
+            occupancy: 1,
+            outputs: vec![1, 2, 3],
+        };
+        let mut bytes = encode_reply_ok(&ok);
+        bytes[PRELUDE_LEN + 22] = 99; // out_len lo byte
+        assert!(decode_reply(KIND_REPLY_OK, &bytes[PRELUDE_LEN..]).is_err());
+    }
+
+    #[test]
+    fn peek_tag_survives_short_bodies() {
+        assert_eq!(peek_tag(&[1, 0, 0, 0, 0, 0, 0, 0, 7]), 1);
+        assert_eq!(peek_tag(&[1, 2, 3]), 0);
+    }
+}

@@ -1,13 +1,47 @@
-//! TCP serving frontend: a line-oriented protocol over `std::net` so any
-//! serving stack — the single-engine server *or* the sharded pool — can be
-//! driven by external clients (tokio is not in the offline crate set;
-//! blocking accept + thread-per-connection is plenty at
-//! embedded-accelerator request rates).  The frontend is generic over a
-//! [`SubmitTarget`], implemented by `ServerHandle`, `PoolHandle`, and the
-//! `Serving` delegator, so `serve --listen --workers N` exposes the pool's
-//! priority classes on the wire.
+//! TCP serving frontend: wire protocols v1/v2/v3 on one port, served by a
+//! readiness-driven event loop over `std::net` (tokio/mio are not in the
+//! offline crate set; see [`poller`] for the small self-built poller).
+//! The frontend is generic over a [`SubmitTarget`], implemented by
+//! `ServerHandle`, `PoolHandle`, the `Serving` delegator, and the model
+//! registry, so `serve --listen --workers N` exposes the pool's priority
+//! classes on the wire.
 //!
-//! # Protocol v2 — tagged, pipelined
+//! # Protocol v3 — length-prefixed binary frames
+//!
+//! Every v3 frame opens with a NUL magic byte, which is how one port
+//! serves all three generations: **the first byte of every message is
+//! sniffed** — `0x00` opens a binary frame, anything else falls through
+//! to the text line reader.  No v1/v2 text line can start with a NUL, so
+//! the split is unambiguous, per message, on the same connection.
+//!
+//! ```text
+//! prelude  | 0x00 | ver=3 | kind | flags | body_len u32 LE |
+//! REQ      | tag u64 | deadline_us u32 | batch u16 | width u16 |
+//!  (kind 1)| model_len u8 | model | payload: batch x width elems,
+//!          | f32 LE (or i16 Q7.8 LE when flags bit 1), row-major
+//! REPLY_OK | tag u64 | index u16 | class u16 | queue_us u32 |
+//!  (kind 2)| compute_us u32 | occupancy u16 | out_len u16 |
+//!          | outputs: i32 Q7.8 LE x out_len
+//! REPLY_ERR| tag u64 | index u16 | msg_len u16 | msg utf8
+//!  (kind 3)|
+//! ```
+//!
+//! Flags: bit 0 = bulk priority, bit 1 = i16 payload.  A REQ carries a
+//! whole **batch** in one frame; the server answers one reply frame per
+//! sample (`index` = row), out of order like v2.  `deadline_us` is a
+//! *relative* client deadline (µs from server receipt, 0 = none): it
+//! converts to an absolute instant on arrival and rides to the executor,
+//! so a request whose deadline lapses before batch formation is shed
+//! server-side and answered `REPLY_ERR` without touching an engine —
+//! the wire face of the PR 8 shedder.  Declared body lengths are capped
+//! (16 MiB): an oversized header gets a routable `REPLY_ERR` and the
+//! body is stream-discarded, never allocated.
+//!
+//! Where v2 text spends ~12 ASCII bytes per activation, a v3 i16 frame
+//! spends 2 — the wire stops undoing the compute-side batching wins the
+//! paper argues for (`bench net` races the two head-to-head).
+//!
+//! # Protocol v2 — tagged, pipelined text
 //!
 //! A request line may carry a client-chosen tag (`#<u64>`); tagged
 //! requests are *pipelined*: one connection can hold many in flight, and
@@ -15,113 +49,79 @@
 //!
 //! ```text
 //! -> INFER [@<model>] [BULK] [#<id>] <f32> ... <f32>\n
-//!                                           (s_0 values, real units;
-//!                                            BULK opts down from the
-//!                                            Interactive default;
-//!                                            @<model> routes on a
-//!                                            multi-model registry)
 //! <- OK #<id> <class> <queue_us> <compute_us> <occupancy> <q78 outputs...>\n
-//! <- ERR #<id> <message>\n                  (parse/backpressure/engine
-//!                                            errors route to their tag)
+//! <- ERR #<id> <message>\n
 //! ```
 //!
 //! Tags are the client's namespace: the server never interprets them
 //! beyond echoing, and reusing a tag with two in-flight requests is the
-//! client's own ambiguity to avoid.  Pipelining is what keeps the
-//! accelerator's batch slots full from few connections — lockstep clients
-//! cap themselves at one sample per round trip, so batch formation only
-//! sees as many samples as there are connections.
+//! client's own ambiguity to avoid.
 //!
-//! # Protocol v1 — untagged, lockstep (backward compatible)
+//! # Protocol v1 — untagged, lockstep text (backward compatible)
 //!
 //! Untagged lines keep the original semantics: the connection serves one
-//! request at a time, in order, with untagged replies:
+//! untagged request at a time, in order, with untagged replies:
 //!
 //! ```text
 //! -> INFER [BULK] <f32> ... <f32>\n
 //! <- OK <class> <queue_us> <compute_us> <occupancy> <q78 outputs...>\n
 //! <- ERR <message>\n
 //! -> STATS\n
-//! <- STATS requests=<n> batches=<n> rejected=<n> mean_latency_us=<x>
-//!      p50_latency_us=<x> p95_latency_us=<x> p99_latency_us=<x>
-//!      occupancy=<x> promoted=<n> throughput=<x> workers=<n>\n
-//!      (one line; keys are identical for both stacks — a pool reports
-//!       its *merged* per-shard snapshot, a single engine reports
-//!       workers=1 and promoted=0)
+//! <- STATS requests=<n> ... shed=<n> conn_open=<n> conn_total=<n>
+//!      conn_rejected=<n>\n     (append-only keys; `key=` parsers hold)
 //! -> QUIT\n
 //! ```
 //!
-//! v1 and v2 may be mixed on one connection: an untagged `INFER` blocks
-//! the connection's reader until its untagged reply is written (lockstep
-//! invariant: at most one untagged request in flight), while tagged
-//! replies keep draining around it.  `STATS`/`QUIT` are always untagged.
+//! All three generations may be mixed on one connection: an untagged
+//! `INFER` pauses the connection's *parse stream* until its untagged
+//! reply is queued (lockstep invariant: at most one untagged request in
+//! flight), while tagged and binary replies keep draining around it.
+//! `STATS`/`QUIT` are always untagged.
 //!
 //! # Observability commands
 //!
 //! ```text
 //! -> STATS JSON\n
-//! <- {"requests":...,"throughput":...,"throughput_10s":...,...}\n
-//!      (one line: the STATS payload as a JSON object, same keys plus
-//!       the ~10 s windowed throughput)
+//! <- {"requests":...,"net":{"connections_open":...,...}}\n
 //! -> STATS PROM\n
 //! <- <Prometheus-style text exposition, multiple lines>
 //! <- # EOF\n
-//!      (the OpenMetrics-style terminator frames the multi-line reply;
-//!       read until "# EOF")
-//! -> TRACE #<id>\n
-//! <- TRACE #<id> t0_ns=<..> submitted_us=0.0 enqueued_us=<..> ...\n
-//!      (the request's span timeline, offsets in µs from submission;
-//!       ERR when the id was sampled out, evicted, or never seen)
-//! -> TRACE LAST <n>\n
-//! <- TRACES <k>\n           (k <= n, newest first)
-//! <- TRACE #<id> ...\n      (k trace lines)
+//! -> TRACE #<id>\n            / TRACE LAST <n>\n
 //! ```
 //!
-//! Traces are recorded server-side in a fixed ring (see
-//! [`TraceRing`](crate::obs::trace::TraceRing)); `trace_sample` in the
-//! server config picks every n-th request id, 0 disables.  The frontend
-//! re-stamps `reply_sent` for pipelined requests when the reply line
-//! actually hits the socket, so wire traces include demux/write time.
-//! On a registry, trace lines carry a trailing `model=<name>` tag.
+//! The net section carries `zdnn_connections_{open,total}`,
+//! `zdnn_connections_rejected_total`, and `zdnn_wire_bytes_{in,out}_total`
+//! tagged `{proto="v1|v2|v3"}` — per-generation wire accounting, spliced
+//! into both exports in front of the `# EOF` terminator.  Traces are
+//! recorded server-side in a fixed ring; the frontend re-stamps
+//! `reply_sent` when the reply is handed to the wire path.
 //!
 //! # Multi-model serving (registry)
 //!
-//! When the serving target is a model registry (`serve --models`), any
-//! `INFER` form may name its model with `@<model>` right after the verb:
+//! `INFER @<model>` (text) or the frame's model field (binary) routes on
+//! a registry target; `MODELS` lists, `SWAP <model> <path.rpz>` hot-swaps
+//! with zero-downtime drain semantics (the reply lockstep-blocks its own
+//! connection only).  On single-model targets these answer ERR.
 //!
-//! ```text
-//! -> INFER @<model> [BULK] [#<id>] <f32> ... <f32>\n
-//!      (no @<model> = the registry's configured default model; an
-//!       unloaded name answers ERR [#<id>] with "unknown model ...",
-//!       routed to the tag when one was given)
-//! -> MODELS\n
-//! <- MODELS <k>\n            (k registered models, sorted by name)
-//! <- MODEL name=<n> version=<v> replicas=<r> share=<s> requests=<q>
-//!      default=<0|1>\n       (k lines, mirroring the TRACES framing)
-//! -> SWAP <model> <path.rpz>\n
-//! <- OK SWAP <model> v<old> -> v<new> replicas=<r> drained=<n>\n
-//! <- ERR SWAP <model>: <message>\n
-//! ```
+//! # Frontend internals
 //!
-//! `SWAP` is an untagged admin command with zero-downtime semantics: the
-//! new version is loaded and warmed off the serving path, the registry
-//! entry flips atomically, and the old replica set drains — in-flight
-//! and queued requests complete on the old version, later submissions
-//! land on the new one, nothing is dropped or double-replied.  The reply
-//! is written only after the drain finishes, so it lockstep-blocks *its
-//! own connection* (tagged replies keep draining around it; other
-//! connections are unaffected).  On single-model targets `@<model>`,
-//! `MODELS`, and `SWAP` answer ERR.
-//!
-//! The priority class is deliberately a wire concept: `INFER` defaults to
-//! Interactive (a remote caller waiting on the reply is latency traffic),
-//! and batch jobs opt *down* to `INFER BULK`.
+//! One event-loop thread owns every socket (accept, read, write) behind
+//! the [`poller`]; one demux thread fans completions back into
+//! per-connection write buffers (see [`conn`]).  There is **no
+//! thread-per-connection and no read polling**: idle connections cost a
+//! poller registration, `stop()` is one flag store plus one waker write,
+//! and the accept path is bounded by `max_conns` ([`NetOptions`]) —
+//! over-cap connections get one `ERR busy` line and a close.
+
+mod conn;
+pub mod frame;
+mod poller;
 
 use std::cell::Cell;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -130,7 +130,9 @@ use anyhow::{bail, Context, Result};
 
 use super::request::{Priority, Reply, RequestId, Response, SubmitOptions, Ticket};
 use crate::obs::registry::json_f64;
-use crate::obs::trace::{SpanKind, TraceRing};
+use crate::obs::trace::TraceRing;
+use conn::{demux_loop, EventLoop, PendingMap};
+use poller::Poller;
 
 /// Anything the serving frontends can drive.  One submission primitive —
 /// completion-queue style, into a caller-supplied sender — plus the
@@ -142,7 +144,7 @@ use crate::obs::trace::{SpanKind, TraceRing};
 pub trait SubmitTarget: Send + Sync {
     /// Submit one quantized sample, completing into `reply` (which may be
     /// shared across requests — [`Reply::id`] disambiguates; the TCP
-    /// frontend demuxes a whole connection through one such channel).
+    /// frontend demuxes every connection through one such channel).
     /// `deadline` is the client's [`SubmitOptions::deadline`]: when it
     /// passes before batch formation, the executor sheds the request with
     /// a `DeadlineExceeded` error reply instead of executing it (`None` =
@@ -327,78 +329,170 @@ impl StatsReport {
     }
 }
 
-/// A running TCP frontend.
+/// Index of protocol v1 in the per-generation stats arrays.
+pub const PROTO_V1: usize = 0;
+/// Index of protocol v2.
+pub const PROTO_V2: usize = 1;
+/// Index of protocol v3.
+pub const PROTO_V3: usize = 2;
+/// Label per generation, `PROTO_*`-indexed.
+pub const PROTO_NAMES: [&str; 3] = ["v1", "v2", "v3"];
+
+/// Connection-level observability counters, exported through `STATS` /
+/// `STATS JSON` / `STATS PROM` and readable in-process via
+/// [`NetFrontend::net_stats`].  Wire bytes are attributed per protocol
+/// generation at message granularity (a partial message that never
+/// completes is not counted).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub connections_open: AtomicU64,
+    pub connections_total: AtomicU64,
+    pub connections_rejected: AtomicU64,
+    pub bytes_in: [AtomicU64; 3],
+    pub bytes_out: [AtomicU64; 3],
+}
+
+impl NetStats {
+    fn load(&self) -> (u64, u64, u64, [u64; 3], [u64; 3]) {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        (
+            ld(&self.connections_open),
+            ld(&self.connections_total),
+            ld(&self.connections_rejected),
+            [ld(&self.bytes_in[0]), ld(&self.bytes_in[1]), ld(&self.bytes_in[2])],
+            [ld(&self.bytes_out[0]), ld(&self.bytes_out[1]), ld(&self.bytes_out[2])],
+        )
+    }
+
+    /// Appended to the classic `STATS` line (append-only discipline).
+    pub fn render_suffix(&self) -> String {
+        let (open, total, rejected, _, _) = self.load();
+        format!(" conn_open={open} conn_total={total} conn_rejected={rejected}")
+    }
+
+    /// The `"net"` object spliced into `STATS JSON`.
+    pub fn render_json(&self) -> String {
+        let (open, total, rejected, bin, bout) = self.load();
+        format!(
+            "{{\"connections_open\":{open},\"connections_total\":{total},\
+             \"connections_rejected\":{rejected},\
+             \"wire_bytes_in\":{{\"v1\":{},\"v2\":{},\"v3\":{}}},\
+             \"wire_bytes_out\":{{\"v1\":{},\"v2\":{},\"v3\":{}}}}}",
+            bin[0], bin[1], bin[2], bout[0], bout[1], bout[2]
+        )
+    }
+
+    /// Prometheus-style section (no `# EOF` terminator — spliced in front
+    /// of the target's own).
+    pub fn render_prometheus(&self) -> String {
+        let (open, total, rejected, bin, bout) = self.load();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "# TYPE zdnn_connections_open gauge\nzdnn_connections_open {open}\n\
+             # TYPE zdnn_connections_total counter\nzdnn_connections_total {total}\n\
+             # TYPE zdnn_connections_rejected_total counter\n\
+             zdnn_connections_rejected_total {rejected}\n"
+        ));
+        out.push_str("# TYPE zdnn_wire_bytes_in_total counter\n");
+        for (i, name) in PROTO_NAMES.iter().enumerate() {
+            out.push_str(&format!("zdnn_wire_bytes_in_total{{proto=\"{name}\"}} {}\n", bin[i]));
+        }
+        out.push_str("# TYPE zdnn_wire_bytes_out_total counter\n");
+        for (i, name) in PROTO_NAMES.iter().enumerate() {
+            out.push_str(&format!("zdnn_wire_bytes_out_total{{proto=\"{name}\"}} {}\n", bout[i]));
+        }
+        out
+    }
+}
+
+/// Frontend tuning knobs (config keys `max_conns` / `wire`).
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Open-connection cap: accepts past it get one `ERR busy` line and a
+    /// close (counted in `conn_rejected=`).
+    pub max_conns: usize,
+    /// `false` (config `wire=v2`) refuses binary frames with a text ERR —
+    /// an operational downgrade for fleets mid-rollout.
+    pub accept_v3: bool,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        Self { max_conns: 4096, accept_v3: true }
+    }
+}
+
+/// A running TCP frontend: one event-loop thread (accept + all socket
+/// I/O) plus one reply-demux thread, fixed regardless of connection count.
 pub struct NetFrontend {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<thread::JoinHandle<()>>,
-}
-
-/// Join every finished connection handle in place (no allocation; order
-/// doesn't matter).  Without this the accept loop accumulated one handle
-/// per connection ever accepted — an unbounded leak on a long-lived
-/// frontend.
-fn reap_finished(conns: &mut Vec<thread::JoinHandle<()>>) {
-    let mut i = 0;
-    while i < conns.len() {
-        if conns[i].is_finished() {
-            let _ = conns.swap_remove(i).join();
-        } else {
-            i += 1;
-        }
-    }
+    waker: Arc<poller::Waker>,
+    stats: Arc<NetStats>,
+    event_thread: Option<thread::JoinHandle<()>>,
+    demux_thread: Option<thread::JoinHandle<()>>,
 }
 
 impl NetFrontend {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve until
-    /// [`NetFrontend::stop`].
+    /// [`NetFrontend::stop`], with default [`NetOptions`].
     pub fn start(addr: &str, target: Arc<dyn SubmitTarget>) -> Result<Self> {
+        Self::start_with(addr, target, NetOptions::default())
+    }
+
+    /// [`NetFrontend::start`] with explicit frontend options.
+    pub fn start_with(addr: &str, target: Arc<dyn SubmitTarget>, opts: NetOptions) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let (poller, waker) = Poller::new().context("event poller")?;
+        let waker = Arc::new(waker);
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let accept_thread = thread::Builder::new()
-            .name("zdnn-net-accept".into())
-            .spawn(move || {
-                let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
-                while !stop2.load(Ordering::SeqCst) {
-                    reap_finished(&mut conns);
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            let t = target.clone();
-                            let flag = stop2.clone();
-                            conns.push(
-                                thread::Builder::new()
-                                    .name("zdnn-net-conn".into())
-                                    .spawn(move || {
-                                        let _ = handle_connection(stream, t.as_ref(), &flag);
-                                    })
-                                    .expect("spawn conn"),
-                            );
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => {
-                            // transient accept failures (EMFILE under a
-                            // connection flood, ECONNABORTED races) must
-                            // not kill the frontend: back off and retry
-                            // until stop() says otherwise
-                            thread::sleep(Duration::from_millis(50));
-                        }
-                    }
-                }
-                // connection threads poll the stop flag between reads, so
-                // this join is bounded even with idle clients attached
-                for c in conns {
-                    let _ = c.join();
-                }
-            })?;
+        let stats = Arc::new(NetStats::default());
+        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
+        let dirty: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let (completions, completion_rx) = mpsc::channel::<Reply>();
+
+        let demux_thread = {
+            let pending = pending.clone();
+            let dirty = dirty.clone();
+            let waker = waker.clone();
+            let stats = stats.clone();
+            let trace = target.traces();
+            thread::Builder::new().name("zdnn-net-demux".into()).spawn(move || {
+                demux_loop(completion_rx, &pending, &dirty, &waker, &stats, trace.as_deref())
+            })?
+        };
+        let event_thread = {
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let waker = waker.clone();
+            thread::Builder::new().name("zdnn-net-loop".into()).spawn(move || {
+                EventLoop::new(
+                    listener,
+                    target,
+                    poller,
+                    waker,
+                    stop,
+                    pending,
+                    completions,
+                    dirty,
+                    stats,
+                    opts,
+                )
+                .run();
+                // EventLoop (and with it the master completion sender)
+                // drops here, so the demux drains in-flight replies and
+                // exits — bounded by exactly-one-reply
+            })?
+        };
         Ok(Self {
             addr: local,
             stop,
-            accept_thread: Some(accept_thread),
+            waker,
+            stats,
+            event_thread: Some(event_thread),
+            demux_thread: Some(demux_thread),
         })
     }
 
@@ -406,20 +500,34 @@ impl NetFrontend {
         self.addr
     }
 
-    pub fn stop(mut self) {
+    /// The frontend's connection/byte counters (shared with the live
+    /// event loop; benches and tests read them directly).
+    pub fn net_stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_thread.take() {
+        self.waker.wake();
+        if let Some(h) = self.event_thread.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.demux_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop serving: one flag store + one waker write, then two bounded
+    /// joins — no polling, regardless of how many idle connections are
+    /// attached.
+    pub fn stop(mut self) {
+        self.shutdown();
     }
 }
 
 impl Drop for NetFrontend {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -443,323 +551,8 @@ fn render_ok(tag: Option<u64>, resp: &Response) -> String {
     out
 }
 
-/// Write one whole reply line under the connection's writer lock.  Lines
-/// are the protocol's framing unit, so holding the lock per line is what
-/// keeps lockstep replies and demuxed tagged replies from interleaving
-/// mid-line.
-fn write_line(writer: &Mutex<TcpStream>, line: &str) -> std::io::Result<()> {
-    let mut w = writer.lock().unwrap();
-    w.write_all(line.as_bytes())?;
-    w.write_all(b"\n")
-}
-
-/// The connection's writer-side demux: completions for every tagged
-/// request on this connection funnel through one channel ([`Reply::id`]
-/// keys back to the wire tag), so replies go out the moment they are
-/// ready — out of order, which is the whole point of pipelining.  Exits
-/// when the last sender drops (reader gone *and* every in-flight request
-/// replied — the executor's exactly-one-reply invariant bounds that).
-fn demux_loop(
-    completions: mpsc::Receiver<Reply>,
-    pending: &Mutex<HashMap<RequestId, u64>>,
-    writer: &Mutex<TcpStream>,
-    trace: Option<&TraceRing>,
-) {
-    // after a write error the peer is gone: keep draining so in-flight
-    // completions are consumed (nothing leaks, the loop still terminates),
-    // but stop touching the dead socket
-    let mut broken = false;
-    for reply in completions {
-        let Some(tag) = pending.lock().unwrap().remove(&reply.id) else {
-            continue;
-        };
-        if broken {
-            continue;
-        }
-        let line = match &reply.result {
-            Ok(resp) => render_ok(Some(tag), resp),
-            Err(e) => format!("ERR #{tag} {e}"),
-        };
-        if write_line(writer, &line).is_err() {
-            broken = true;
-        }
-        // overwrite the executor's channel-send stamp with the moment the
-        // reply actually hit the socket (always later, so monotonicity of
-        // the span sequence is preserved)
-        if let Some(r) = trace {
-            r.stamp(reply.id, SpanKind::ReplySent);
-        }
-    }
-}
-
-fn handle_connection(
-    stream: TcpStream,
-    target: &dyn SubmitTarget,
-    stop: &AtomicBool,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // bounded reads: the connection polls the stop flag between timeouts,
-    // so NetFrontend::stop doesn't hang on idle clients
-    stream.set_read_timeout(Some(Duration::from_millis(50)))?;
-    let reader = BufReader::new(stream.try_clone()?);
-    let writer = Arc::new(Mutex::new(stream));
-    let pending: Arc<Mutex<HashMap<RequestId, u64>>> = Arc::new(Mutex::new(HashMap::new()));
-    let (completions, completion_rx) = mpsc::channel::<Reply>();
-    let demux = {
-        let pending = pending.clone();
-        let writer = writer.clone();
-        let trace = target.traces();
-        thread::Builder::new()
-            .name("zdnn-net-demux".into())
-            .spawn(move || demux_loop(completion_rx, &pending, &writer, trace.as_deref()))?
-    };
-    let result = serve_lines(reader, &writer, target, stop, &pending, &completions);
-    // drop our sender so the demux exits once every in-flight request has
-    // completed (bounded by the executor's exactly-one-reply invariant);
-    // replies racing the close are drained, written if the peer is still
-    // there, discarded if not — never leaked
-    drop(completions);
-    let _ = demux.join();
-    result
-}
-
-fn serve_lines(
-    mut reader: BufReader<TcpStream>,
-    writer: &Mutex<TcpStream>,
-    target: &dyn SubmitTarget,
-    stop: &AtomicBool,
-    pending: &Mutex<HashMap<RequestId, u64>>,
-    completions: &mpsc::Sender<Reply>,
-) -> Result<()> {
-    let mut line = String::new();
-    loop {
-        line.clear();
-        // a timeout can land mid-line; read_line keeps the partial bytes
-        // in `line`, so looping resumes the same line rather than
-        // corrupting the stream framing
-        loop {
-            match reader.read_line(&mut line) {
-                Ok(0) => {
-                    if line.is_empty() {
-                        return Ok(()); // peer closed
-                    }
-                    break; // final line without a trailing newline
-                }
-                Ok(_) => break,
-                Err(e) => {
-                    let kind = e.kind();
-                    let timed_out = kind == std::io::ErrorKind::WouldBlock
-                        || kind == std::io::ErrorKind::TimedOut;
-                    if !timed_out {
-                        return Err(e.into());
-                    }
-                    if stop.load(Ordering::SeqCst) {
-                        return Ok(());
-                    }
-                }
-            }
-        }
-        match parse_command(line.trim_end()) {
-            Ok(Command::Quit) => return Ok(()),
-            Ok(Command::Stats) => write_line(writer, &target.stats().render())?,
-            Ok(Command::StatsJson) => write_line(writer, &target.stats().render_json())?,
-            Ok(Command::StatsProm) => {
-                // multi-line reply; the "# EOF" line frames it for clients
-                let text = target.prometheus();
-                let mut w = writer.lock().unwrap();
-                w.write_all(text.as_bytes())?;
-            }
-            Ok(Command::TraceOne(id)) => {
-                let reply = match target.traces().and_then(|r| r.get(id)) {
-                    Some(t) => t.render(),
-                    None => {
-                        format!("ERR trace #{id} not found (tracing off, sampled out, or evicted)")
-                    }
-                };
-                write_line(writer, &reply)?;
-            }
-            Ok(Command::TraceLast(n)) => {
-                let traces = target.traces().map(|r| r.last(n)).unwrap_or_default();
-                write_line(writer, &format!("TRACES {}", traces.len()))?;
-                for t in &traces {
-                    write_line(writer, &t.render())?;
-                }
-            }
-            Ok(Command::Models) => match target.models() {
-                // count-framed like TRACES: "MODELS <k>" then k lines
-                Some(lines) => {
-                    write_line(writer, &format!("MODELS {}", lines.len()))?;
-                    for l in &lines {
-                        write_line(writer, l)?;
-                    }
-                }
-                None => write_line(writer, "ERR MODELS: single-model serving target")?,
-            },
-            Ok(Command::Swap { model, path }) => {
-                // untagged lockstep admin: the reply is written only after
-                // the old replica set drains, blocking this connection's
-                // untagged stream (tagged replies keep demuxing around it)
-                let reply = match target.swap_model(&model, &path) {
-                    Ok(summary) => format!("OK {summary}"),
-                    Err(e) => format!("ERR SWAP {model}: {e:#}"),
-                };
-                write_line(writer, &reply)?;
-            }
-            Ok(Command::Infer {
-                values,
-                priority,
-                tag: None,
-                model,
-            }) => {
-                // v1 lockstep: block right here until the reply is out
-                let reply = match infer_lockstep(target, model.as_deref(), values, priority) {
-                    Ok(reply) => reply,
-                    Err(e) => format!("ERR {e}"),
-                };
-                write_line(writer, &reply)?;
-            }
-            Ok(Command::Infer {
-                values,
-                priority,
-                tag: Some(tag),
-                model,
-            }) => {
-                let input = crate::fixedpoint::quantize_slice(&values);
-                // holding `pending` across submit makes the tag insertion
-                // atomic with the submission, so the demux can never
-                // receive a completion whose mapping is missing
-                let submitted = {
-                    let mut p = pending.lock().unwrap();
-                    target
-                        .submit_model(model.as_deref(), input, priority, None, completions.clone())
-                        .map(|id| {
-                            p.insert(id, tag);
-                        })
-                };
-                if let Err(e) = submitted {
-                    write_line(writer, &format!("ERR #{tag} {e:#}"))?;
-                }
-            }
-            Err((Some(tag), e)) => write_line(writer, &format!("ERR #{tag} {e}"))?,
-            Err((None, e)) => write_line(writer, &format!("ERR {e}"))?,
-        }
-    }
-}
-
-enum Command {
-    Infer {
-        values: Vec<f32>,
-        priority: Priority,
-        tag: Option<u64>,
-        /// `@<model>` routing target (`None` = the default model).
-        model: Option<String>,
-    },
-    Stats,
-    StatsJson,
-    StatsProm,
-    TraceOne(RequestId),
-    TraceLast(usize),
-    Models,
-    Swap { model: String, path: String },
-    Quit,
-}
-
-/// Parse failures carry the request's tag when one was readable, so a
-/// pipelined client gets the error routed to the right ticket.
-fn parse_command(line: &str) -> Result<Command, (Option<u64>, String)> {
-    let mut parts = line.split_ascii_whitespace().peekable();
-    match parts.next() {
-        Some("INFER") => {
-            // fixed operand order: @<model>, then BULK, then #<tag>
-            let model = match parts.peek() {
-                Some(m) if m.starts_with('@') => {
-                    let name = &parts.next().expect("peeked")[1..];
-                    if name.is_empty() {
-                        return Err((None, "empty model name (want @<model>)".into()));
-                    }
-                    Some(name.to_string())
-                }
-                _ => None,
-            };
-            let priority = if parts.peek().copied() == Some("BULK") {
-                parts.next();
-                Priority::Bulk
-            } else {
-                Priority::Interactive
-            };
-            let tag = match parts.peek() {
-                Some(t) if t.starts_with('#') => {
-                    let raw = &parts.next().expect("peeked")[1..];
-                    match raw.parse::<u64>() {
-                        Ok(t) => Some(t),
-                        Err(_) => {
-                            return Err((None, format!("bad tag {raw:?} (want #<u64>)")));
-                        }
-                    }
-                }
-                _ => None,
-            };
-            let values: Result<Vec<f32>, _> = parts.map(str::parse::<f32>).collect();
-            match values {
-                Ok(v) if !v.is_empty() => Ok(Command::Infer {
-                    values: v,
-                    priority,
-                    tag,
-                    model,
-                }),
-                Ok(_) => Err((tag, "INFER needs at least one value".into())),
-                Err(e) => Err((tag, format!("bad number: {e}"))),
-            }
-        }
-        Some("STATS") => match parts.next() {
-            None => Ok(Command::Stats),
-            Some("JSON") => Ok(Command::StatsJson),
-            Some("PROM") => Ok(Command::StatsProm),
-            Some(other) => Err((None, format!("unknown STATS form {other:?} (want JSON or PROM)"))),
-        },
-        Some("TRACE") => match parts.next() {
-            Some(t) if t.starts_with('#') => match t[1..].parse::<u64>() {
-                Ok(id) => Ok(Command::TraceOne(id)),
-                Err(_) => Err((None, format!("bad trace id {:?} (want #<u64>)", &t[1..]))),
-            },
-            Some("LAST") => match parts.next().map(str::parse::<usize>) {
-                Some(Ok(n)) => Ok(Command::TraceLast(n)),
-                _ => Err((None, "TRACE LAST wants a count".into())),
-            },
-            _ => Err((None, "TRACE wants #<id> or LAST <n>".into())),
-        },
-        Some("MODELS") => Ok(Command::Models),
-        Some("SWAP") => match (parts.next(), parts.next()) {
-            (Some(model), Some(path)) => Ok(Command::Swap {
-                model: model.to_string(),
-                path: path.to_string(),
-            }),
-            _ => Err((None, "SWAP wants <model> <path.rpz>".into())),
-        },
-        Some("QUIT") => Ok(Command::Quit),
-        Some(other) => Err((None, format!("unknown command {other:?}"))),
-        None => Err((None, "empty command".into())),
-    }
-}
-
-fn infer_lockstep(
-    target: &dyn SubmitTarget,
-    model: Option<&str>,
-    values: Vec<f32>,
-    priority: Priority,
-) -> Result<String, String> {
-    let input = crate::fixedpoint::quantize_slice(&values);
-    let opts = SubmitOptions::with_priority(priority);
-    let (tx, rx) = mpsc::channel();
-    let id = target
-        .submit_model(model, input, priority, None, tx)
-        .map_err(|e| format!("{e:#}"))?;
-    let mut ticket = Ticket::new(id, &opts, rx);
-    let resp = ticket.wait().map_err(|e| format!("{e}"))?;
-    Ok(render_ok(None, &resp))
-}
-
-/// One parsed `OK` reply off the wire.
+/// One parsed `OK` reply off the wire (either generation — binary replies
+/// decode into the same shape the text parser produces).
 #[derive(Debug, Clone)]
 pub struct NetResponse {
     pub class: usize,
@@ -794,15 +587,31 @@ impl NetResponse {
             outputs,
         })
     }
+
+    fn from_ok_frame(f: frame::OkFrame) -> Self {
+        Self {
+            class: f.class as usize,
+            queue_us: f.queue_us as f64,
+            compute_us: f.compute_us as f64,
+            batch_occupancy: f.occupancy as usize,
+            outputs: f.outputs,
+        }
+    }
 }
 
 type WireResult = std::result::Result<NetResponse, String>;
 
+/// Client-side reply routing key: wire tag plus batch index (text replies
+/// always use index 0 — a text request is a batch of one).
+type ReplyKey = (u64, u16);
+
 /// Completion handle for one pipelined wire request: the tagged twin of
-/// the in-process [`Ticket`].
+/// the in-process [`Ticket`].  Binary batch submissions return one ticket
+/// per sample, sharing a tag and distinguished by [`NetTicket::index`].
 #[derive(Debug)]
 pub struct NetTicket {
     tag: u64,
+    index: u16,
     priority: Priority,
     rx: mpsc::Receiver<WireResult>,
     done: bool,
@@ -812,6 +621,11 @@ impl NetTicket {
     /// The wire tag this request was submitted under.
     pub fn tag(&self) -> u64 {
         self.tag
+    }
+
+    /// Sample position inside its request frame (0 for text requests).
+    pub fn index(&self) -> u16 {
+        self.index
     }
 
     pub fn priority(&self) -> Priority {
@@ -874,7 +688,7 @@ impl NetTicket {
 
 /// Client-side routing state shared with the reader thread.
 struct ClientShared {
-    pending: HashMap<u64, mpsc::Sender<WireResult>>,
+    pending: HashMap<ReplyKey, mpsc::Sender<WireResult>>,
     poisoned: Option<String>,
 }
 
@@ -907,52 +721,99 @@ fn parse_tagged_reply(line: &str) -> Option<(u64, WireResult)> {
     }
 }
 
-/// The client's reader thread: routes tagged replies to their tickets and
-/// untagged (lockstep) replies to the blocking helpers, in arrival order.
+/// Route one completed reply to its ticket; a missing entry is a reply
+/// for a dropped ticket — discarded.
+fn route_reply(shared: &Mutex<ClientShared>, key: ReplyKey, result: WireResult) {
+    let entry = shared.lock().unwrap().pending.remove(&key);
+    if let Some(tx) = entry {
+        let _ = tx.send(result);
+    }
+}
+
+/// The client's reader thread: sniffs each reply's first byte (0x00 =
+/// binary frame, else text line), routes tagged/indexed replies to their
+/// tickets and untagged (lockstep) replies to the blocking helpers, in
+/// arrival order.
 fn client_reader(
     mut reader: BufReader<TcpStream>,
     shared: Arc<Mutex<ClientShared>>,
     lockstep: mpsc::Sender<String>,
+    bytes_in: Arc<AtomicU64>,
 ) {
-    let mut line = String::new();
     loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return poison_client(&shared, "connection closed by server"),
-            Ok(_) => {
-                let trimmed = line.trim_end();
-                match parse_tagged_reply(trimmed) {
-                    Some((tag, result)) => {
-                        let entry = shared.lock().unwrap().pending.remove(&tag);
-                        // a missing entry is a reply for a dropped ticket:
-                        // discard (the send below also discards if the
-                        // ticket was dropped after registration)
-                        if let Some(tx) = entry {
-                            let _ = tx.send(result);
+        let first = loop {
+            match reader.fill_buf() {
+                Ok([]) => return poison_client(&shared, "connection closed by server"),
+                Ok(buf) => break buf[0],
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return poison_client(&shared, &format!("read error: {e}")),
+            }
+        };
+        if first == frame::MAGIC {
+            let mut prelude = [0u8; frame::PRELUDE_LEN];
+            if let Err(e) = reader.read_exact(&mut prelude) {
+                return poison_client(&shared, &format!("read error: {e}"));
+            }
+            let hdr = match frame::parse_prelude(&prelude) {
+                Ok(hdr) if hdr.body_len <= frame::MAX_FRAME_BYTES => hdr,
+                Ok(hdr) => {
+                    let m = format!("oversized reply frame ({} bytes)", hdr.body_len);
+                    return poison_client(&shared, &m);
+                }
+                Err(e) => return poison_client(&shared, &format!("bad reply frame: {e}")),
+            };
+            let mut body = vec![0u8; hdr.body_len];
+            if let Err(e) = reader.read_exact(&mut body) {
+                return poison_client(&shared, &format!("read error: {e}"));
+            }
+            bytes_in.fetch_add((frame::PRELUDE_LEN + body.len()) as u64, Ordering::Relaxed);
+            match frame::decode_reply(hdr.kind, &body) {
+                Ok(frame::ReplyFrame::Ok(ok)) => {
+                    let key = (ok.tag, ok.index);
+                    route_reply(&shared, key, Ok(NetResponse::from_ok_frame(ok)));
+                }
+                Ok(frame::ReplyFrame::Err(err)) => {
+                    route_reply(&shared, (err.tag, err.index), Err(err.msg));
+                }
+                Err(e) => return poison_client(&shared, &format!("bad reply frame: {e}")),
+            }
+        } else {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) => return poison_client(&shared, "connection closed by server"),
+                Ok(n) => {
+                    bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                    let trimmed = line.trim_end();
+                    match parse_tagged_reply(trimmed) {
+                        Some((tag, result)) => route_reply(&shared, (tag, 0), result),
+                        None => {
+                            let _ = lockstep.send(trimmed.to_string());
                         }
                     }
-                    None => {
-                        let _ = lockstep.send(trimmed.to_string());
-                    }
                 }
+                Err(e) => return poison_client(&shared, &format!("read error: {e}")),
             }
-            Err(e) => return poison_client(&shared, &format!("read error: {e}")),
         }
     }
 }
 
 /// Pipelined client for the protocol (used by benches, examples, tests).
 ///
-/// Two faces over one connection:
+/// Three faces over one connection:
 ///
-/// * [`NetClient::submit`] — protocol-v2 pipelining: tag the request,
-///   return a [`NetTicket`]; a background reader routes each tagged reply
-///   to its ticket, so any number of requests ride the connection at
-///   once, completing out of order.
+/// * [`NetClient::submit_binary`]/[`NetClient::submit_binary_batch`] —
+///   protocol v3: one length-prefixed binary frame per call (a whole
+///   batch per frame), one [`NetTicket`] per sample, replies as binary
+///   frames routed by (tag, index).  [`NetClient::infer_binary`] is the
+///   blocking convenience.
+/// * [`NetClient::submit`] — protocol-v2 text pipelining: tag the
+///   request, return a [`NetTicket`]; the reader routes each tagged
+///   reply to its ticket.
 /// * [`NetClient::infer`]/[`NetClient::infer_with`]/[`NetClient::stats`]
 ///   — the v1 untagged lockstep forms, kept byte-identical on the wire
 ///   (they double as the backward-compat coverage for v1 servers).
 ///
+/// All three may be interleaved freely; the server sniffs per message.
 /// The poison rule carries over from the lockstep client: a read error or
 /// a lockstep reply timeout desyncs untagged request/reply pairing, so
 /// the connection fails every pending ticket and refuses further use —
@@ -968,6 +829,8 @@ pub struct NetClient {
     shared: Arc<Mutex<ClientShared>>,
     lockstep: mpsc::Receiver<String>,
     reader: Option<thread::JoinHandle<()>>,
+    bytes_in: Arc<AtomicU64>,
+    bytes_out: u64,
 }
 
 impl NetClient {
@@ -981,9 +844,11 @@ impl NetClient {
         let (lockstep_tx, lockstep_rx) = mpsc::channel();
         let buf = BufReader::new(stream.try_clone()?);
         let shared2 = shared.clone();
+        let bytes_in = Arc::new(AtomicU64::new(0));
+        let bytes_in2 = bytes_in.clone();
         let reader = thread::Builder::new()
             .name("zdnn-net-client".into())
-            .spawn(move || client_reader(buf, shared2, lockstep_tx))?;
+            .spawn(move || client_reader(buf, shared2, lockstep_tx, bytes_in2))?;
         Ok(Self {
             writer: stream,
             next_tag: 0,
@@ -991,6 +856,8 @@ impl NetClient {
             shared,
             lockstep: lockstep_rx,
             reader: Some(reader),
+            bytes_in,
+            bytes_out: 0,
         })
     }
 
@@ -1004,10 +871,32 @@ impl NetClient {
         Ok(())
     }
 
+    /// Total wire traffic this client has seen: `(bytes_in, bytes_out)`.
+    /// `bench net` divides by request count for the bytes-per-inference
+    /// comparison across protocol generations.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (self.bytes_in.load(Ordering::Relaxed), self.bytes_out)
+    }
+
     fn check_poisoned(&self) -> Result<()> {
         if let Some(reason) = &self.shared.lock().unwrap().poisoned {
             bail!("connection poisoned ({reason}); reconnect");
         }
+        Ok(())
+    }
+
+    fn send_bytes(&mut self, bytes: &[u8], cleanup: &[ReplyKey]) -> Result<()> {
+        if let Err(e) = self.writer.write_all(bytes) {
+            {
+                let mut s = self.shared.lock().unwrap();
+                for key in cleanup {
+                    s.pending.remove(key);
+                }
+            }
+            poison_client(&self.shared, &format!("write error: {e}"));
+            return Err(e.into());
+        }
+        self.bytes_out += bytes.len() as u64;
         Ok(())
     }
 
@@ -1034,7 +923,7 @@ impl NetClient {
         let tag = self.next_tag;
         self.next_tag += 1;
         let (tx, rx) = mpsc::channel();
-        self.shared.lock().unwrap().pending.insert(tag, tx);
+        self.shared.lock().unwrap().pending.insert((tag, 0), tx);
         let mut line = String::from("INFER");
         if let Some(m) = model {
             line.push_str(&format!(" @{m}"));
@@ -1048,23 +937,118 @@ impl NetClient {
             line.push_str(&v.to_string());
         }
         line.push('\n');
-        if let Err(e) = self.writer.write_all(line.as_bytes()) {
-            self.shared.lock().unwrap().pending.remove(&tag);
-            poison_client(&self.shared, &format!("write error: {e}"));
-            return Err(e.into());
+        self.send_bytes(&line.into_bytes(), &[(tag, 0)])?;
+        Ok(NetTicket { tag, index: 0, priority, rx, done: false })
+    }
+
+    /// Protocol v3: submit one sample as a binary frame (batch of one,
+    /// f32 payload) and return its completion ticket.
+    pub fn submit_binary(&mut self, values: &[f32], priority: Priority) -> Result<NetTicket> {
+        let mut tickets =
+            self.submit_binary_batch(None, &[values], priority, None)?;
+        Ok(tickets.pop().expect("batch of one yields one ticket"))
+    }
+
+    /// Protocol v3, full form: one frame carrying `samples.len()` rows
+    /// (each the same width), optional model routing and a relative
+    /// deadline (shed server-side once it lapses, µs resolution).
+    /// Returns one ticket per sample, completing independently and out
+    /// of order.
+    pub fn submit_binary_batch(
+        &mut self,
+        model: Option<&str>,
+        samples: &[&[f32]],
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<NetTicket>> {
+        let flat: Vec<f32> = samples.iter().flat_map(|s| s.iter().copied()).collect();
+        self.submit_frame(model, frame::Payload::F32(flat), samples, priority, deadline)
+    }
+
+    /// Protocol v3 with a pre-quantized i16 Q7.8 payload — half the f32
+    /// wire bytes, and the server skips quantization entirely.  Values
+    /// must be `fixedpoint::quantize` outputs (they widen bit-exactly).
+    pub fn submit_binary_i16(
+        &mut self,
+        model: Option<&str>,
+        samples: &[&[i16]],
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<NetTicket>> {
+        let flat: Vec<i16> = samples.iter().flat_map(|s| s.iter().copied()).collect();
+        self.submit_frame(model, frame::Payload::I16(flat), samples, priority, deadline)
+    }
+
+    fn submit_frame<T>(
+        &mut self,
+        model: Option<&str>,
+        payload: frame::Payload,
+        samples: &[&[T]],
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<NetTicket>> {
+        self.check_poisoned()?;
+        let batch = samples.len();
+        if batch == 0 || batch > u16::MAX as usize {
+            bail!("binary batch must hold 1..={} samples, got {batch}", u16::MAX);
         }
-        Ok(NetTicket {
+        let width = samples[0].len();
+        if width == 0 || width > u16::MAX as usize {
+            bail!("sample width must be 1..={}, got {width}", u16::MAX);
+        }
+        if samples.iter().any(|s| s.len() != width) {
+            bail!("binary batch samples must share one width ({width})");
+        }
+        if let Some(m) = model {
+            if m.len() > u8::MAX as usize {
+                bail!("model name too long for the wire ({} > 255 bytes)", m.len());
+            }
+        }
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let deadline_us = deadline
+            .map(|d| d.as_micros().clamp(1, u32::MAX as u128) as u32)
+            .unwrap_or(0);
+        let bytes = frame::encode_request(&frame::RequestFrame {
             tag,
-            priority,
-            rx,
-            done: false,
-        })
+            bulk: priority == Priority::Bulk,
+            deadline_us,
+            batch: batch as u16,
+            width: width as u16,
+            model: model.map(str::to_string),
+            payload,
+        });
+        let mut tickets = Vec::with_capacity(batch);
+        let mut keys = Vec::with_capacity(batch);
+        {
+            let mut s = self.shared.lock().unwrap();
+            for i in 0..batch as u16 {
+                let (tx, rx) = mpsc::channel();
+                s.pending.insert((tag, i), tx);
+                keys.push((tag, i));
+                tickets.push(NetTicket { tag, index: i, priority, rx, done: false });
+            }
+        }
+        self.send_bytes(&bytes, &keys)?;
+        Ok(tickets)
+    }
+
+    /// Blocking v3 convenience: one binary round trip, returns
+    /// (class, q7.8 outputs).  Honors [`NetClient::set_timeout`].
+    pub fn infer_binary(&mut self, values: &[f32]) -> Result<(usize, Vec<i32>)> {
+        let mut ticket = self.submit_binary(values, Priority::Interactive)?;
+        let resp = match self.timeout.get() {
+            Some(t) => ticket.wait_timeout(t)?,
+            None => ticket.wait()?,
+        };
+        Ok((resp.class, resp.outputs))
     }
 
     fn round_trip(&mut self, line: &str) -> Result<String> {
         self.check_poisoned()?;
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
+        let mut bytes = line.as_bytes().to_vec();
+        bytes.push(b'\n');
+        self.send_bytes(&bytes, &[])?;
         self.recv_lockstep()
     }
 
@@ -1156,7 +1140,7 @@ impl NetClient {
     }
 
     pub fn quit(mut self) -> Result<()> {
-        self.writer.write_all(b"QUIT\n")?;
+        self.send_bytes(b"QUIT\n", &[])?;
         Ok(())
     }
 }
@@ -1173,6 +1157,7 @@ impl Drop for NetClient {
 
 #[cfg(test)]
 mod tests {
+    use super::conn::{parse_command, Command};
     use super::*;
     use crate::bench::random_qnet;
     use crate::config::ServerConfig;
@@ -1201,17 +1186,98 @@ mod tests {
         (fe, server, net)
     }
 
+    fn golden_row(net: &crate::nn::QNetwork, values: &[f32]) -> (usize, Vec<i32>) {
+        let xq = crate::fixedpoint::quantize_slice(values);
+        let x = crate::tensor::MatI::from_vec(1, values.len(), xq);
+        let out = crate::nn::forward::forward_q(net, &x).unwrap();
+        (crate::nn::forward::argmax_rows(&out)[0], out.row(0))
+    }
+
     #[test]
     fn infer_round_trip_matches_golden() {
         let (fe, _server, net) = start_stack();
         let mut client = NetClient::connect(&fe.addr()).unwrap();
         let values: Vec<f32> = (0..64).map(|i| (i as f32) / 64.0 - 0.5).collect();
         let (class, outputs) = client.infer(&values).unwrap();
-        let xq = crate::fixedpoint::quantize_slice(&values);
-        let x = crate::tensor::MatI::from_vec(1, 64, xq);
-        let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
-        assert_eq!(outputs, golden.row(0));
-        assert_eq!(class, crate::nn::forward::argmax_rows(&golden)[0]);
+        let (golden_class, golden) = golden_row(&net, &values);
+        assert_eq!(outputs, golden);
+        assert_eq!(class, golden_class);
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn binary_round_trip_matches_golden() {
+        // the same request through a v3 frame must hit the same engine
+        // path bit-exactly — and spend far fewer wire bytes doing it
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+        let values: Vec<f32> = (0..64).map(|i| (i as f32) / 64.0 - 0.5).collect();
+        let (class, outputs) = client.infer_binary(&values).unwrap();
+        let (golden_class, golden) = golden_row(&net, &values);
+        assert_eq!(outputs, golden);
+        assert_eq!(class, golden_class);
+        let (bin, bout) = client.wire_bytes();
+        assert!(bout > 0 && bin > 0, "wire byte counters must move");
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn binary_batch_fans_out_one_ticket_per_sample() {
+        // one frame, three rows: three tickets share the tag, complete
+        // independently, and each matches its own golden row — including
+        // an i16 payload, which must quantize identically to text f32
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..64).map(|k| ((k + i) as f32) / 70.0 - 0.4).collect())
+            .collect();
+        let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let tickets = client
+            .submit_binary_batch(None, &row_refs, Priority::Bulk, None)
+            .unwrap();
+        assert_eq!(tickets.len(), 3);
+        assert!(tickets.iter().all(|t| t.tag() == tickets[0].tag()));
+        for (i, mut t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.index(), i as u16);
+            let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
+            let (_, golden) = golden_row(&net, &rows[i]);
+            assert_eq!(resp.outputs, golden, "sample {i}");
+        }
+        // i16 path: pre-quantized client-side, widened server-side
+        let q: Vec<i16> = rows[0]
+            .iter()
+            .map(|&v| crate::fixedpoint::quantize(v as f64) as i16)
+            .collect();
+        let mut t = client
+            .submit_binary_i16(None, &[&q], Priority::Interactive, None)
+            .unwrap()
+            .pop()
+            .unwrap();
+        let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
+        let (_, golden) = golden_row(&net, &rows[0]);
+        assert_eq!(resp.outputs, golden, "i16 payload quantizes identically");
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn mixed_generations_interleave_on_one_connection() {
+        // v1 lockstep, v2 tagged text, and v3 binary on the same socket,
+        // interleaved — per-message sniffing keeps all three coherent
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+        let values: Vec<f32> = (0..64).map(|i| (i as f32) / 80.0 - 0.3).collect();
+        let (_, golden) = golden_row(&net, &values);
+        let mut t2 = client.submit(&values, Priority::Interactive).unwrap();
+        let mut t3 = client.submit_binary(&values, Priority::Bulk).unwrap();
+        let (_, v1_out) = client.infer(&values).unwrap();
+        assert_eq!(v1_out, golden);
+        assert_eq!(t2.wait_timeout(Duration::from_secs(30)).unwrap().outputs, golden);
+        assert_eq!(t3.wait_timeout(Duration::from_secs(30)).unwrap().outputs, golden);
         client.quit().unwrap();
         fe.stop();
     }
@@ -1224,10 +1290,8 @@ mod tests {
         let mut client = NetClient::connect(&fe.addr()).unwrap();
         let values: Vec<f32> = (0..64).map(|i| (i as f32) / 100.0).collect();
         let (_, bulk_out) = client.infer_with(&values, Priority::Bulk).unwrap();
-        let xq = crate::fixedpoint::quantize_slice(&values);
-        let x = crate::tensor::MatI::from_vec(1, 64, xq);
-        let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
-        assert_eq!(bulk_out, golden.row(0));
+        let (_, golden) = golden_row(&net, &values);
+        assert_eq!(bulk_out, golden);
         client.quit().unwrap();
         fe.stop();
     }
@@ -1253,10 +1317,8 @@ mod tests {
         for (i, mut t) in tickets.into_iter().enumerate() {
             assert_eq!(t.tag(), i as u64);
             let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
-            let xq = crate::fixedpoint::quantize_slice(&values[i]);
-            let x = crate::tensor::MatI::from_vec(1, 64, xq);
-            let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
-            assert_eq!(resp.outputs, golden.row(0), "ticket {i}");
+            let (_, golden) = golden_row(&net, &values[i]);
+            assert_eq!(resp.outputs, golden, "ticket {i}");
             assert!(resp.batch_occupancy >= 1, "occupancy rides the wire");
         }
         client.quit().unwrap();
@@ -1285,6 +1347,10 @@ mod tests {
         assert!(stats.contains("workers=1"), "{stats}");
         assert!(stats.contains("promoted=0"), "{stats}");
         assert!(stats.contains("p99_latency_us="), "{stats}");
+        // the net section rides the same line, append-only
+        assert!(stats.contains("conn_open=1"), "{stats}");
+        assert!(stats.contains("conn_total=1"), "{stats}");
+        assert!(stats.contains("conn_rejected=0"), "{stats}");
         client.quit().unwrap();
         fe.stop();
     }
@@ -1304,6 +1370,26 @@ mod tests {
         let _ = client.infer(&vec![0.25f32; 64]).expect("lockstep after tagged ERR");
         let mut ok = client.submit(&vec![0.25f32; 64], Priority::Bulk).unwrap();
         ok.wait_timeout(Duration::from_secs(10)).expect("tagged after tagged ERR");
+        client.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn binary_submit_errors_route_to_their_ticket() {
+        // same contract on the v3 wire: a width the engine rejects comes
+        // back as REPLY_ERR on exactly the right (tag, index)
+        let (fe, _server, net) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        let mut short = client.submit_binary(&[1.0, 2.0], Priority::Interactive).unwrap();
+        let e = short.wait_timeout(Duration::from_secs(10)).unwrap_err();
+        assert!(e.to_string().contains("server error"), "{e}");
+        assert!(e.to_string().contains("input width"), "{e}");
+        // the connection survives for every generation
+        let values: Vec<f32> = (0..64).map(|i| (i as f32) / 90.0).collect();
+        let (_, golden) = golden_row(&net, &values);
+        client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+        let (_, out) = client.infer_binary(&values).unwrap();
+        assert_eq!(out, golden);
         client.quit().unwrap();
         fe.stop();
     }
@@ -1332,11 +1418,11 @@ mod tests {
 
     #[test]
     fn stop_with_idle_connection_attached_returns() {
-        // regression for the accept-loop leak fix: stop() must not hang
-        // joining a connection whose client never sent QUIT
+        // stop() must not hang with a client attached that never sent
+        // QUIT — bounded by the waker, not by read polling
         let (fe, _server, _) = start_stack();
         let client = NetClient::connect(&fe.addr()).unwrap();
-        fe.stop(); // returns because connections poll the stop flag
+        fe.stop(); // returns: one flag store + one wake, two joins
         drop(client);
     }
 
@@ -1433,16 +1519,22 @@ mod tests {
             .unwrap();
         let e = t.wait_timeout(Duration::from_secs(10)).unwrap_err();
         assert!(e.to_string().contains("unknown model"), "{e}");
+        // and on the v3 wire: the frame's model field routes the same way
+        let mut t = client
+            .submit_binary_batch(Some("ghost"), &[&[0.25f32; 64]], Priority::Bulk, None)
+            .unwrap()
+            .pop()
+            .unwrap();
+        let e = t.wait_timeout(Duration::from_secs(10)).unwrap_err();
+        assert!(e.to_string().contains("unknown model"), "{e}");
         assert!(client.models().unwrap_err().to_string().contains("MODELS"));
         let e = client.swap("ghost", "/tmp/x.rpz").unwrap_err();
         assert!(e.to_string().contains("server error"), "{e}");
         // and the connection still serves plain inference afterwards
         let values: Vec<f32> = (0..64).map(|i| (i as f32) / 80.0 - 0.3).collect();
         let (_, outputs) = client.infer(&values).unwrap();
-        let xq = crate::fixedpoint::quantize_slice(&values);
-        let x = crate::tensor::MatI::from_vec(1, 64, xq);
-        let golden = crate::nn::forward::forward_q(&net, &x).unwrap();
-        assert_eq!(outputs, golden.row(0));
+        let (_, golden) = golden_row(&net, &values);
+        assert_eq!(outputs, golden);
         client.quit().unwrap();
         fe.stop();
     }
@@ -1458,6 +1550,53 @@ mod tests {
         assert!(parse_command("TRACE LAST notanumber").is_err());
         assert!(parse_command("TRACE #nope").is_err());
         assert!(parse_command("STATS YAML").is_err());
+    }
+
+    #[test]
+    fn stats_exports_carry_the_net_section() {
+        let (fe, _server, _) = start_stack();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = client.infer(&vec![0.25f32; 64]).unwrap();
+        // JSON: outer keys intact, "net" object spliced in
+        let json_line = client.round_trip("STATS JSON").unwrap();
+        let json = crate::config::json::parse(&json_line).unwrap();
+        assert!(json.get("requests").is_some(), "{json_line}");
+        let net = json.get("net").expect("net section");
+        assert_eq!(
+            net.get("connections_open").and_then(|v| v.as_f64().ok()),
+            Some(1.0),
+            "{json_line}"
+        );
+        assert!(net.get("wire_bytes_in").is_some(), "{json_line}");
+        // PROM: read until the terminator; per-proto byte series present
+        client.send_bytes(b"STATS PROM\n", &[]).unwrap();
+        let mut prom = Vec::new();
+        loop {
+            let line = client.recv_lockstep().unwrap();
+            if line == "# EOF" {
+                break;
+            }
+            prom.push(line);
+        }
+        assert!(
+            prom.iter().any(|l| l.starts_with("zdnn_connections_open ")),
+            "{prom:?}"
+        );
+        assert!(
+            prom.iter()
+                .any(|l| l.starts_with("zdnn_wire_bytes_in_total{proto=\"v1\"} ")),
+            "{prom:?}"
+        );
+        // v1 lockstep traffic was accounted under v1, not v2/v3
+        let v1_line = prom
+            .iter()
+            .find(|l| l.starts_with("zdnn_wire_bytes_in_total{proto=\"v1\"} "))
+            .unwrap();
+        let v1_bytes: f64 = v1_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(v1_bytes > 0.0, "{v1_line}");
+        client.quit().unwrap();
+        fe.stop();
     }
 
     #[test]
@@ -1514,5 +1653,82 @@ mod tests {
         // untagged lines belong to the lockstep path
         assert!(parse_tagged_reply(&render_ok(None, &resp)).is_none());
         assert!(parse_tagged_reply("STATS requests=1").is_none());
+    }
+
+    #[test]
+    fn max_conns_cap_rejects_with_busy_line() {
+        use std::io::Read as _;
+        let net = random_qnet(&quickstart(), 0xA0);
+        let cfg = ServerConfig { batch: 4, batch_deadline_us: 300, ..Default::default() };
+        let factory = EngineFactory {
+            backend: "native".into(),
+            batch: 4,
+            net: net.clone(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            native_threads: 1,
+            sparse_threshold: None,
+            artifact: None,
+        };
+        let server = Arc::new(Server::start(&cfg, factory).unwrap());
+        let fe = NetFrontend::start_with(
+            "127.0.0.1:0",
+            server.clone(),
+            NetOptions { max_conns: 2, accept_v3: true },
+        )
+        .unwrap();
+        // fill the cap with two live clients (a round trip each proves
+        // they are registered server-side, not racing the accept)
+        let mut a = NetClient::connect(&fe.addr()).unwrap();
+        let mut b = NetClient::connect(&fe.addr()).unwrap();
+        a.set_timeout(Some(Duration::from_secs(10))).unwrap();
+        b.set_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = a.stats().unwrap();
+        let _ = b.stats().unwrap();
+        // the third connection gets one ERR busy line, then EOF
+        let mut raw = TcpStream::connect(fe.addr()).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut text = String::new();
+        raw.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("ERR busy"), "{text:?}");
+        assert!(text.contains("max_conns=2"), "{text:?}");
+        // rejected count is visible on a surviving connection
+        let stats = a.stats().unwrap();
+        assert!(stats.contains("conn_rejected=1"), "{stats}");
+        a.quit().unwrap();
+        b.quit().unwrap();
+        fe.stop();
+    }
+
+    #[test]
+    fn wire_v2_mode_refuses_binary_frames() {
+        let net = random_qnet(&quickstart(), 0xA0);
+        let cfg = ServerConfig { batch: 4, batch_deadline_us: 300, ..Default::default() };
+        let factory = EngineFactory {
+            backend: "native".into(),
+            batch: 4,
+            net: net.clone(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            native_threads: 1,
+            sparse_threshold: None,
+            artifact: None,
+        };
+        let server = Arc::new(Server::start(&cfg, factory).unwrap());
+        let fe = NetFrontend::start_with(
+            "127.0.0.1:0",
+            server.clone(),
+            NetOptions { max_conns: 16, accept_v3: false },
+        )
+        .unwrap();
+        let mut client = NetClient::connect(&fe.addr()).unwrap();
+        client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+        // text still serves
+        let _ = client.infer(&vec![0.25f32; 64]).unwrap();
+        // a binary frame gets a text ERR and the connection closes; the
+        // pending ticket fails through the poison path
+        let mut t = client.submit_binary(&vec![0.25f32; 64], Priority::Interactive).unwrap();
+        let e = t.wait_timeout(Duration::from_secs(10)).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("server error") || msg.contains("poisoned"), "{msg}");
+        fe.stop();
     }
 }

@@ -1,0 +1,357 @@
+//! Minimal readiness poller for the network frontend (vendor-free).
+//!
+//! The ROADMAP calls for multiplexing thousands of idle connections over a
+//! fixed thread count without pulling in mio/tokio; the offline crate set
+//! has neither, so this is a small self-built poller:
+//!
+//! * **Linux**: direct `epoll` via `extern "C"` declarations (std already
+//!   links libc, so no new dependency).  Level-triggered, which keeps the
+//!   event loop simple: unread input re-fires until drained.
+//! * **Everywhere else**: a portable fallback that reports every registered
+//!   token as readable+writable once per ~1 ms tick.  With non-blocking
+//!   sockets a spurious-readiness report is a cheap no-op (`WouldBlock`),
+//!   so correctness is identical — only idle efficiency differs, and only
+//!   off-Linux.
+//!
+//! A [`Waker`] rides a self-pipe registered under [`WAKE_TOKEN`]: the reply
+//! demux (or `stop()`) writes one byte to interrupt a blocked `wait`.  The
+//! waker owns its write end, so it stays valid on detached threads that
+//! outlive the poller; writes after the read end closed are ignored (Rust
+//! ignores `SIGPIPE`).
+
+use std::time::Duration;
+
+/// Token the poller reserves for its internal wakeup channel; never
+/// reported to callers.
+pub const WAKE_TOKEN: usize = usize::MAX;
+
+/// Raw file descriptor (only meaningful on unix; `-1` elsewhere).
+pub type Fd = i32;
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Raw fd of any socket-like handle (listener or stream).
+#[cfg(unix)]
+pub fn fd_of<T: std::os::unix::io::AsRawFd>(x: &T) -> Fd {
+    x.as_raw_fd()
+}
+
+/// Non-unix stand-in: the fallback poller keys on tokens, not fds.
+#[cfg(not(unix))]
+pub fn fd_of<T>(_x: &T) -> Fd {
+    -1
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::{Event, Fd, WAKE_TOKEN};
+    use std::io;
+    use std::os::raw::{c_int, c_void};
+    use std::time::Duration;
+
+    // The x86-64 kernel ABI packs epoll_event to 12 bytes; other Linux
+    // targets use natural alignment.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(epfd: c_int, events: *mut EpollEvent, max: c_int, timeout: c_int) -> c_int;
+        fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EPOLL_CLOEXEC: c_int = 0o200_0000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const O_NONBLOCK: c_int = 0o4000;
+    const O_CLOEXEC: c_int = 0o200_0000;
+
+    const MAX_EVENTS: usize = 64;
+
+    fn cvt(r: c_int) -> io::Result<c_int> {
+        if r < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(r)
+        }
+    }
+
+    fn mask(readable: bool, writable: bool) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if readable {
+            m |= EPOLLIN;
+        }
+        if writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    pub struct Poller {
+        epfd: c_int,
+        wake_rx: c_int,
+    }
+
+    pub struct Waker {
+        wake_tx: c_int,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<(Poller, Waker)> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            let mut fds = [0 as c_int; 2];
+            if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } < 0 {
+                let e = io::Error::last_os_error();
+                unsafe { close(epfd) };
+                return Err(e);
+            }
+            let poller = Poller { epfd, wake_rx: fds[0] };
+            let waker = Waker { wake_tx: fds[1] };
+            poller.ctl(EPOLL_CTL_ADD, fds[0], WAKE_TOKEN, true, false)?;
+            Ok((poller, waker))
+        }
+
+        fn ctl(&self, op: c_int, fd: Fd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            let mut ev = EpollEvent { events: mask(r, w), data: token as u64 };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) }).map(|_| ())
+        }
+
+        pub fn register(&self, fd: Fd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, r, w)
+        }
+
+        pub fn modify(&self, fd: Fd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, r, w)
+        }
+
+        pub fn deregister(&self, fd: Fd, _token: usize) {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+        }
+
+        /// Block until readiness or a wake; `None` blocks indefinitely.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_millis().min(i32::MAX as u128) as c_int,
+            };
+            let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let n = loop {
+                let r = unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), MAX_EVENTS as c_int, ms) };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            for ev in buf.iter().take(n) {
+                // copy out of the (possibly packed) struct before use
+                let bits = { ev.events };
+                let token = { ev.data } as usize;
+                if token == WAKE_TOKEN {
+                    self.drain_wake_pipe();
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+
+        fn drain_wake_pipe(&self) {
+            let mut sink = [0u8; 256];
+            loop {
+                let r = unsafe { read(self.wake_rx, sink.as_mut_ptr() as *mut c_void, sink.len()) };
+                if r <= 0 {
+                    break; // empty (EAGAIN) or closed — either way drained
+                }
+            }
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+                close(self.wake_rx);
+            }
+        }
+    }
+
+    impl Waker {
+        /// Interrupt a blocked `wait`.  Errors are ignored by design: a full
+        /// pipe means a wake is already pending, EPIPE means the poller is
+        /// gone and nobody is left to wake.
+        pub fn wake(&self) {
+            let byte = [1u8];
+            unsafe { write(self.wake_tx, byte.as_ptr() as *const c_void, 1) };
+        }
+    }
+
+    impl Drop for Waker {
+        fn drop(&mut self) {
+            unsafe { close(self.wake_tx) };
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    use super::{Event, Fd};
+    use std::collections::BTreeSet;
+    use std::io;
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    const TICK: Duration = Duration::from_millis(1);
+
+    struct Shared {
+        tokens: Mutex<BTreeSet<usize>>,
+        wake: Mutex<bool>,
+        cv: Condvar,
+    }
+
+    pub struct Poller {
+        shared: Arc<Shared>,
+    }
+
+    pub struct Waker {
+        shared: Arc<Shared>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<(Poller, Waker)> {
+            let shared = Arc::new(Shared {
+                tokens: Mutex::new(BTreeSet::new()),
+                wake: Mutex::new(false),
+                cv: Condvar::new(),
+            });
+            Ok((Poller { shared: shared.clone() }, Waker { shared }))
+        }
+
+        pub fn register(&self, _fd: Fd, token: usize, _r: bool, _w: bool) -> io::Result<()> {
+            self.shared.tokens.lock().unwrap().insert(token);
+            Ok(())
+        }
+
+        pub fn modify(&self, _fd: Fd, token: usize, _r: bool, _w: bool) -> io::Result<()> {
+            self.shared.tokens.lock().unwrap().insert(token);
+            Ok(())
+        }
+
+        pub fn deregister(&self, _fd: Fd, token: usize) {
+            self.shared.tokens.lock().unwrap().remove(&token);
+        }
+
+        /// Report every registered token ready after at most one tick; a
+        /// non-blocking socket turns over-reporting into `WouldBlock` no-ops.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let nap = timeout.unwrap_or(TICK).min(TICK);
+            {
+                let mut woken = self.shared.wake.lock().unwrap();
+                if !*woken {
+                    let (guard, _) = self.shared.cv.wait_timeout(woken, nap).unwrap();
+                    woken = guard;
+                }
+                *woken = false;
+            }
+            for &token in self.shared.tokens.lock().unwrap().iter() {
+                out.push(Event { token, readable: true, writable: true });
+            }
+            Ok(())
+        }
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            *self.shared.wake.lock().unwrap() = true;
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+pub use sys::{Poller, Waker};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Instant;
+
+    #[test]
+    fn waker_interrupts_indefinite_wait() {
+        let (poller, waker) = Poller::new().expect("poller");
+        let waker = std::sync::Arc::new(waker);
+        let w = waker.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            w.wake();
+        });
+        let mut events = Vec::new();
+        let start = Instant::now();
+        poller.wait(&mut events, Some(Duration::from_secs(30))).expect("wait");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "wake should interrupt long wait, took {:?}",
+            start.elapsed()
+        );
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn socket_readability_is_reported() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        server.set_nonblocking(true).expect("nonblocking");
+
+        let (poller, _waker) = Poller::new().expect("poller");
+        poller.register(fd_of(&server), 7, true, false).expect("register");
+
+        client.write_all(b"ping").expect("write");
+        let mut events = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut got = false;
+        while Instant::now() < deadline && !got {
+            poller.wait(&mut events, Some(Duration::from_millis(100))).expect("wait");
+            got = events.iter().any(|e| e.token == 7 && e.readable);
+        }
+        assert!(got, "readable event for token 7 never arrived");
+
+        let mut server = server;
+        let mut buf = [0u8; 4];
+        server.read_exact(&mut buf).expect("read");
+        assert_eq!(&buf, b"ping");
+        poller.deregister(fd_of(&server), 7);
+    }
+}

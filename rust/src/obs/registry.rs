@@ -132,6 +132,15 @@ impl Registry {
     /// (the terminator doubles as the end-of-reply marker on the line
     /// protocol).  Histograms export count/mean/percentiles as gauges.
     pub fn render_prometheus(&self) -> String {
+        let mut out = self.render_prometheus_body();
+        out.push_str("# EOF\n");
+        out
+    }
+
+    /// The exposition without its `# EOF` terminator — for callers that
+    /// splice extra sections (the TCP frontend appends its connection
+    /// counters) before terminating the reply themselves.
+    pub fn render_prometheus_body(&self) -> String {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
@@ -155,7 +164,6 @@ impl Registry {
                 ));
             }
         }
-        out.push_str("# EOF\n");
         out
     }
 
@@ -303,6 +311,11 @@ mod tests {
         assert!(text.contains("zdnn_latency_count 2"), "{text}");
         assert!(text.contains("zdnn_latency_p99_ns"), "{text}");
         assert!(text.ends_with("# EOF\n"), "{text}");
+        // the body form is the same exposition minus the terminator, so
+        // splicing callers can append sections then terminate themselves
+        let body = r.render_prometheus_body();
+        assert!(!body.contains("# EOF"), "{body}");
+        assert_eq!(format!("{body}# EOF\n"), text);
     }
 
     #[test]

@@ -94,9 +94,11 @@ fn slo_pool_scaling_quick() {
 
 #[test]
 fn net_pipelining_beats_lockstep_quick() {
-    // acceptance gate for wire protocol v2: a single pipelined connection
+    // acceptance gates for the wire bench: a single pipelined connection
     // at depth 16 must beat the same connection at depth 1 (≙ v1
-    // lockstep) against the 4-worker pool.  Wall-clock; contended or
+    // lockstep), v3 binary must spend < 0.3x the bytes of v2 text at rps
+    // no worse, the 256-connection fan-in must lose nothing, and the
+    // churn soak must leak nothing.  Wall-clock; contended or
     // single-core runners opt out rather than report phantom failures.
     quick();
     if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
@@ -109,8 +111,8 @@ fn net_pipelining_beats_lockstep_quick() {
     }
     let b = bench::netbench::run();
     bench::netbench::check_shape(&b).unwrap();
-    let cells = bench::netbench::DEPTH_SWEEP.len() * bench::netbench::CLIENT_SWEEP.len();
-    assert_eq!(b.rows.len(), cells, "depths {{1,4,16,64}} x clients {{1,4}}");
+    let cells = 2 * bench::netbench::DEPTH_SWEEP.len() * bench::netbench::CLIENT_SWEEP.len();
+    assert_eq!(b.rows.len(), cells, "protos {{v2,v3}} x depths {{1,4,16,64}} x clients {{1,4}}");
 }
 
 #[test]

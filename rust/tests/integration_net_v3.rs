@@ -1,0 +1,454 @@
+//! Integration: wire protocol v3 over real TCP against the readiness-
+//! driven frontend — the PR 9 acceptance surface.
+//!
+//! What this locks in:
+//!
+//! * binary frames pipeline over a real socket with bit-exact outputs
+//!   (single-sample and batch-of-N frames, f32 and i16 payloads),
+//! * all three wire generations interleave on ONE connection via
+//!   first-byte sniffing,
+//! * the frame's relative deadline reaches the server-side shedder: an
+//!   expired request comes back `REPLY_ERR` without touching an engine,
+//! * malformed frames (bad magic, bad version, truncated, oversized
+//!   declared length) get frame-scoped errors with the allocation guard
+//!   holding; the connection survives where the stream stays parseable,
+//! * `max_conns` bounds the accept path with an `ERR busy` reply,
+//! * open/infer/close churn leaks neither fds nor threads, and `stop()`
+//!   returns bounded with idle v3 connections attached (no read polling
+//!   left in the frontend).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zynq_dnn::bench::random_qnet;
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::net::frame;
+use zynq_dnn::coordinator::{EngineFactory, NetClient, NetFrontend, NetOptions, Priority};
+use zynq_dnn::nn::forward_q;
+use zynq_dnn::nn::spec::quickstart;
+use zynq_dnn::serve::{start_serving, Serving};
+use zynq_dnn::tensor::MatI;
+
+fn start_stack_with(
+    workers: usize,
+    batch: usize,
+    batch_deadline_us: u64,
+    opts: NetOptions,
+) -> (NetFrontend, Arc<Serving>, zynq_dnn::nn::QNetwork) {
+    let net = random_qnet(&quickstart(), 0xC3);
+    let factory = EngineFactory {
+        backend: "native".into(),
+        batch,
+        net: net.clone(),
+        artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    };
+    let cfg = ServerConfig {
+        workers,
+        batch,
+        batch_deadline_us,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let serving = Arc::new(start_serving(&cfg, factory).unwrap());
+    let fe = NetFrontend::start_with("127.0.0.1:0", serving.clone(), opts).unwrap();
+    (fe, serving, net)
+}
+
+fn start_stack(
+    workers: usize,
+    batch: usize,
+) -> (NetFrontend, Arc<Serving>, zynq_dnn::nn::QNetwork) {
+    start_stack_with(workers, batch, 300, NetOptions::default())
+}
+
+fn values_for(seed: usize) -> Vec<f32> {
+    (0..64)
+        .map(|k| ((k * 7 + seed * 13) % 101) as f32 / 101.0 - 0.5)
+        .collect()
+}
+
+fn golden_for(net: &zynq_dnn::nn::QNetwork, values: &[f32]) -> (usize, Vec<i32>) {
+    let xq = zynq_dnn::fixedpoint::quantize_slice(values);
+    let y = forward_q(net, &MatI::from_vec(1, 64, xq)).unwrap();
+    let class = zynq_dnn::nn::forward::argmax_rows(&y)[0];
+    (class, y.row(0).to_vec())
+}
+
+/// Read one complete v3 frame off a raw socket: `(kind, body)`.
+fn read_frame(r: &mut impl Read) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut prelude = [0u8; frame::PRELUDE_LEN];
+    r.read_exact(&mut prelude)?;
+    let hdr = frame::parse_prelude(&prelude).expect("well-formed reply prelude");
+    let mut body = vec![0u8; hdr.body_len];
+    r.read_exact(&mut body)?;
+    Ok((hdr.kind, body))
+}
+
+/// Binary requests pipeline over real TCP with bit-exact outputs: a
+/// 16-deep window of single-sample frames, then batch-of-4 frames, on
+/// both payload encodings.
+#[test]
+fn binary_pipelining_bit_exact_over_tcp() {
+    let (fe, _serving, net) = start_stack(4, 4);
+    let mut client = NetClient::connect(&fe.addr()).unwrap();
+    let mut window = std::collections::VecDeque::new();
+    let mut inputs = std::collections::VecDeque::new();
+    for i in 0..80usize {
+        if window.len() == 16 {
+            let mut t: zynq_dnn::coordinator::NetTicket = window.pop_front().unwrap();
+            let vals: Vec<f32> = inputs.pop_front().unwrap();
+            let resp = t.wait_timeout(Duration::from_secs(60)).unwrap();
+            let (want_class, want_out) = golden_for(&net, &vals);
+            assert_eq!(resp.outputs, want_out);
+            assert_eq!(resp.class, want_class);
+        }
+        let vals = values_for(i);
+        window.push_back(client.submit_binary(&vals, Priority::Interactive).unwrap());
+        inputs.push_back(vals);
+    }
+    for mut t in window {
+        let vals: Vec<f32> = inputs.pop_front().unwrap();
+        let resp = t.wait_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.outputs, golden_for(&net, &vals).1);
+    }
+    // batch-of-4 in ONE frame, i16 payload: four tickets, each golden
+    let rows: Vec<Vec<f32>> = (100..104).map(values_for).collect();
+    let qrows: Vec<Vec<i16>> = rows
+        .iter()
+        .map(|r| {
+            r.iter()
+                .map(|&v| zynq_dnn::fixedpoint::quantize(v as f64) as i16)
+                .collect()
+        })
+        .collect();
+    let qrefs: Vec<&[i16]> = qrows.iter().map(|r| r.as_slice()).collect();
+    let tickets = client
+        .submit_binary_i16(None, &qrefs, Priority::Bulk, None)
+        .unwrap();
+    assert_eq!(tickets.len(), 4);
+    for (i, mut t) in tickets.into_iter().enumerate() {
+        let resp = t.wait_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.outputs, golden_for(&net, &rows[i]).1, "batch row {i}");
+    }
+    client.quit().unwrap();
+    fe.stop();
+}
+
+/// All three generations on ONE raw connection, sniffed per message:
+/// a v1 untagged line, then a v3 binary frame, then a v2 tagged line.
+#[test]
+fn three_generations_interleave_on_one_connection() {
+    let (fe, _serving, net) = start_stack(2, 4);
+    let stream = TcpStream::connect(fe.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let vals = values_for(9);
+    let (want_class, want_out) = golden_for(&net, &vals);
+
+    // v1: untagged lockstep line
+    let mut line = String::from("INFER");
+    for v in &vals {
+        line.push(' ');
+        line.push_str(&v.to_string());
+    }
+    line.push('\n');
+    writer.write_all(line.as_bytes()).unwrap();
+    let mut reply = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut reply).unwrap();
+    assert!(reply.starts_with("OK "), "{reply}");
+
+    // v3: binary frame on the same socket
+    let req = frame::RequestFrame {
+        tag: 77,
+        bulk: false,
+        deadline_us: 0,
+        batch: 1,
+        width: 64,
+        model: None,
+        payload: frame::Payload::F32(vals.clone()),
+    };
+    writer.write_all(&frame::encode_request(&req)).unwrap();
+    let (kind, body) = read_frame(&mut reader).unwrap();
+    assert_eq!(kind, frame::KIND_REPLY_OK);
+    let frame::ReplyFrame::Ok(ok) = frame::decode_reply(kind, &body).unwrap() else {
+        panic!("expected OK reply frame");
+    };
+    assert_eq!(ok.tag, 77);
+    assert_eq!(ok.index, 0);
+    assert_eq!(ok.outputs, want_out);
+    assert_eq!(ok.class as usize, want_class);
+
+    // v2: tagged text, still on the same socket
+    let mut line = String::from("INFER #5");
+    for v in &vals {
+        line.push(' ');
+        line.push_str(&v.to_string());
+    }
+    line.push('\n');
+    writer.write_all(line.as_bytes()).unwrap();
+    let mut reply = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut reply).unwrap();
+    assert!(reply.starts_with("OK #5 "), "{reply}");
+
+    writer.write_all(b"QUIT\n").unwrap();
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "QUIT closes silently, got {rest:?}");
+    fe.stop();
+}
+
+/// The frame's relative deadline lights up PR 8's server-side shedder
+/// over the wire: with a long batch-formation deadline, an
+/// already-expired request is shed with `REPLY_ERR` while an
+/// undeadlined sibling completes.
+#[test]
+fn deadline_shed_over_binary_wire() {
+    // batch 4 never fills from one client, so formation waits the full
+    // 200 ms flush deadline — plenty for a 1 µs request deadline to lapse
+    let (fe, _serving, net) = start_stack_with(1, 4, 200_000, NetOptions::default());
+    let mut client = NetClient::connect(&fe.addr()).unwrap();
+    let vals = values_for(3);
+    let q: Vec<i16> = vals
+        .iter()
+        .map(|&v| zynq_dnn::fixedpoint::quantize(v as f64) as i16)
+        .collect();
+    let mut doomed = client
+        .submit_binary_i16(None, &[&q], Priority::Interactive, Some(Duration::from_micros(1)))
+        .unwrap()
+        .pop()
+        .unwrap();
+    let e = doomed.wait_timeout(Duration::from_secs(30)).unwrap_err();
+    let msg = e.to_string();
+    assert!(msg.contains("shed") || msg.contains("deadline"), "{msg}");
+    // no deadline: same wire, same connection, completes fine
+    let mut t = client
+        .submit_binary_i16(None, &[&q], Priority::Interactive, None)
+        .unwrap()
+        .pop()
+        .unwrap();
+    let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.outputs, golden_for(&net, &vals).1);
+    // the shed is visible in the uniform STATS payload
+    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("shed=1"), "{stats}");
+    client.quit().unwrap();
+    fe.stop();
+}
+
+/// Malformed binary traffic gets frame-scoped errors; the connection
+/// survives whenever the stream stays parseable, and the oversized-
+/// declared-length guard answers without allocating the claimed body.
+#[test]
+fn malformed_frames_scoped_err_and_guarded_allocation() {
+    let (fe, _serving, net) = start_stack(2, 4);
+    let stream = TcpStream::connect(fe.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // bad magic is just a text line: ERR reply, connection lives
+    writer.write_all(b"XYZZY plugh\n").unwrap();
+    let mut reply = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut reply).unwrap();
+    assert!(reply.starts_with("ERR"), "{reply}");
+
+    // oversized declared length: REPLY_ERR carries the echoed tag and the
+    // cap, the declared body is stream-discarded (never allocated), and
+    // the connection resyncs for valid traffic afterwards
+    let declared = frame::MAX_FRAME_BYTES + 1;
+    let mut evil = Vec::new();
+    evil.push(frame::MAGIC);
+    evil.push(frame::VERSION);
+    evil.push(frame::KIND_REQ);
+    evil.push(0u8); // flags
+    evil.extend_from_slice(&(declared as u32).to_le_bytes());
+    evil.extend_from_slice(&0xDEADu64.to_le_bytes()); // tag prefix of the body
+    writer.write_all(&evil).unwrap();
+    let (kind, body) = read_frame(&mut reader).unwrap();
+    assert_eq!(kind, frame::KIND_REPLY_ERR);
+    let frame::ReplyFrame::Err(err) = frame::decode_reply(kind, &body).unwrap() else {
+        panic!("expected ERR reply frame");
+    };
+    assert_eq!(err.tag, 0xDEAD, "tag echoed so the client can route the error");
+    assert!(err.msg.contains("frame too large"), "{}", err.msg);
+    // feed the rest of the declared body as junk; the server discards it
+    let mut remaining = declared - 8;
+    let junk = vec![0u8; 1 << 16];
+    while remaining > 0 {
+        let n = remaining.min(junk.len());
+        writer.write_all(&junk[..n]).unwrap();
+        remaining -= n;
+    }
+    // resynced: a valid frame round-trips golden on the same connection
+    let vals = values_for(11);
+    let req = frame::RequestFrame {
+        tag: 42,
+        bulk: false,
+        deadline_us: 0,
+        batch: 1,
+        width: 64,
+        model: None,
+        payload: frame::Payload::F32(vals.clone()),
+    };
+    writer.write_all(&frame::encode_request(&req)).unwrap();
+    let (kind, body) = read_frame(&mut reader).unwrap();
+    assert_eq!(kind, frame::KIND_REPLY_OK);
+    let frame::ReplyFrame::Ok(ok) = frame::decode_reply(kind, &body).unwrap() else {
+        panic!("expected OK reply frame");
+    };
+    assert_eq!(ok.tag, 42);
+    assert_eq!(ok.outputs, golden_for(&net, &vals).1);
+
+    // bad version: the stream offset is untrustworthy, so the server
+    // answers one ERR frame (tag 0) and closes
+    let stream2 = TcpStream::connect(fe.addr()).unwrap();
+    stream2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader2 = std::io::BufReader::new(stream2.try_clone().unwrap());
+    let mut writer2 = stream2;
+    writer2
+        .write_all(&[frame::MAGIC, 9, frame::KIND_REQ, 0, 4, 0, 0, 0])
+        .unwrap();
+    let (kind, body) = read_frame(&mut reader2).unwrap();
+    assert_eq!(kind, frame::KIND_REPLY_ERR);
+    let frame::ReplyFrame::Err(err) = frame::decode_reply(kind, &body).unwrap() else {
+        panic!("expected ERR reply frame");
+    };
+    assert_eq!(err.tag, 0);
+    let mut rest = Vec::new();
+    reader2.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "connection closes after a bad version");
+
+    // truncated prelude then EOF: the server just drops the connection
+    let stream3 = TcpStream::connect(fe.addr()).unwrap();
+    stream3.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer3 = stream3.try_clone().unwrap();
+    writer3.write_all(&[frame::MAGIC, frame::VERSION, frame::KIND_REQ]).unwrap();
+    writer3.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    stream3.try_clone().unwrap().read_to_end(&mut buf).unwrap();
+    assert!(buf.is_empty(), "no reply for a frame that never completed");
+
+    writer.write_all(b"QUIT\n").unwrap();
+    fe.stop();
+}
+
+/// `max_conns` bounds the accept path: over-cap connections get one
+/// `ERR busy` line and a close, counted in `conn_rejected=`, and a slot
+/// frees once a capped connection leaves.
+#[test]
+fn max_conns_cap_bounds_the_accept_path() {
+    let (fe, _serving, _net) = start_stack_with(
+        2,
+        4,
+        300,
+        NetOptions { max_conns: 2, accept_v3: true },
+    );
+    let mut a = NetClient::connect(&fe.addr()).unwrap();
+    let mut b = NetClient::connect(&fe.addr()).unwrap();
+    a.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    b.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    // a round trip each proves both are registered, not racing the accept
+    a.stats().unwrap();
+    b.stats().unwrap();
+    let mut raw = TcpStream::connect(fe.addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut text = String::new();
+    raw.read_to_string(&mut text).unwrap();
+    assert!(text.starts_with("ERR busy"), "{text:?}");
+    let stats = a.stats().unwrap();
+    assert!(stats.contains("conn_rejected=1"), "{stats}");
+    // free a slot; the frontend notices on its next wake, so retry briefly
+    b.quit().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut c = NetClient::connect(&fe.addr()).unwrap();
+        c.set_timeout(Some(Duration::from_secs(5))).unwrap();
+        // a rejected connection answers "ERR busy" to anything; only a
+        // real STATS line proves the freed slot was granted
+        if c.stats().map(|s| s.starts_with("STATS ")).unwrap_or(false) {
+            c.quit().unwrap();
+            break;
+        }
+        assert!(Instant::now() < deadline, "freed slot never became acceptable");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    a.quit().unwrap();
+    fe.stop();
+}
+
+/// Open/infer/close churn over the v3 wire leaks neither file
+/// descriptors nor threads: the frontend's thread count is fixed and
+/// per-connection state dies with the connection.
+#[test]
+fn connection_churn_leaks_nothing() {
+    let (fe, _serving, net) = start_stack(2, 4);
+    #[cfg(target_os = "linux")]
+    let count = |p: &str| std::fs::read_dir(p).map(|d| d.count() as i64).unwrap_or(-1);
+    #[cfg(target_os = "linux")]
+    let (fd_base, th_base) = (count("/proc/self/fd"), count("/proc/self/task"));
+    for i in 0..60usize {
+        let mut c = NetClient::connect(&fe.addr()).unwrap();
+        c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+        let vals = values_for(i);
+        let (_, out) = c.infer_binary(&vals).unwrap();
+        assert_eq!(out, golden_for(&net, &vals).1, "cycle {i}");
+        c.quit().unwrap();
+    }
+    // server-side teardown is asynchronous; let the populations settle
+    #[cfg(target_os = "linux")]
+    {
+        let mut fd_now = count("/proc/self/fd");
+        let mut th_now = count("/proc/self/task");
+        for _ in 0..40 {
+            if fd_now <= fd_base && th_now <= th_base {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+            fd_now = count("/proc/self/fd");
+            th_now = count("/proc/self/task");
+        }
+        assert!(fd_now <= fd_base, "leaked fds: {fd_base} -> {fd_now}");
+        assert!(th_now <= th_base, "leaked threads: {th_base} -> {th_now}");
+    }
+    let open = fe
+        .net_stats()
+        .connections_open
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(open, 0, "every churned connection deregistered");
+    let total = fe
+        .net_stats()
+        .connections_total
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(total, 60);
+    fe.stop();
+}
+
+/// `stop()` returns bounded with idle v3 connections attached — the
+/// waker interrupts the indefinite poll; nothing 50 ms-polls anymore.
+#[test]
+fn stop_is_bounded_with_idle_v3_connections() {
+    let (fe, _serving, _net) = start_stack(2, 4);
+    let mut idlers = Vec::new();
+    for i in 0..8usize {
+        let mut c = NetClient::connect(&fe.addr()).unwrap();
+        c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+        // one binary round trip marks the connection live on the v3 path
+        c.infer_binary(&values_for(i)).unwrap();
+        idlers.push(c);
+    }
+    let t0 = Instant::now();
+    fe.stop();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "stop() took {:?} with idle connections",
+        t0.elapsed()
+    );
+    drop(idlers);
+}
