@@ -1,0 +1,297 @@
+//! Step-load autoscaling bench (`bench autoscale`): the acceptance
+//! harness for the perfmodel-driven controller.
+//!
+//! Both phases run on the `sim` backend, whose engine paces the wall
+//! clock to the modeled ZedBoard batch time — the service rate is the
+//! model's, not the host's, so the controller dynamics reproduce across
+//! machines.  The offered load is an open-loop paced stream at a fixed
+//! multiple of the modeled single-worker capacity:
+//!
+//! * **Phase A (static ceiling)** — a pool provisioned at the maximum
+//!   worker count, autoscale off: the steady-provisioning baseline p99.
+//! * **Phase B (autoscaled)** — the same workload against a pool that
+//!   *starts* at the floor with `autoscale = on`: the controller must
+//!   scale up under the step (peak workers above the floor), keep the
+//!   steady tail of the run within 2x the static baseline p99, lose
+//!   nothing, and park back down to the floor once the load stops.
+//!
+//! The gates are wall-clock-dependent (`ZDNN_SKIP_PERF=1` skips them);
+//! the exactly-once-across-scale-events property is covered
+//! deterministically by the pool's unit suite.
+
+use std::time::{Duration, Instant};
+
+use super::report::{ms, Table};
+use super::{quick_mode, random_qnet};
+use crate::config::ServerConfig;
+use crate::coordinator::{EngineFactory, SubmitOptions, SubmitTarget};
+use crate::nn::spec::har_4;
+use crate::nn::QNetwork;
+use crate::serve::{PoolHandle, Priority, ServePool};
+use crate::sim::batch::BatchAccelerator;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::summarize;
+
+/// Offered load as a multiple of the modeled single-worker capacity —
+/// past one worker, below the ceiling's capacity.
+pub const OVERLOAD: f64 = 1.4;
+/// Provisioned ceiling (phase A's static worker count).
+pub const MAX_WORKERS: usize = 3;
+/// Autoscaled floor.
+pub const MIN_WORKERS: usize = 1;
+
+/// The benchmark result.
+#[derive(Debug, Clone)]
+pub struct AutoscaleBench {
+    pub network: String,
+    pub batch: usize,
+    pub requests: usize,
+    pub offered_rps: f64,
+    /// Modeled seconds per batch (what each sim engine paces to).
+    pub modeled_batch_s: f64,
+    /// p99 across the whole run on the statically-provisioned ceiling.
+    pub static_p99_s: f64,
+    /// p99 of the second half of the autoscaled run (post-step steady
+    /// state — the cold-start transient is the controller's job to end).
+    pub scaled_tail_p99_s: f64,
+    /// Highest active worker count observed during the autoscaled run.
+    pub peak_workers: usize,
+    /// Active workers after the load stopped and the pool settled.
+    pub settled_workers: usize,
+    /// Requests that never got a reply (both phases combined).
+    pub lost: usize,
+    pub spawns: u64,
+    pub parks: u64,
+}
+
+fn sim_factory(net: &QNetwork, batch: usize) -> EngineFactory {
+    EngineFactory {
+        backend: "sim".into(),
+        batch,
+        net: net.clone(),
+        artifacts_dir: crate::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    }
+}
+
+struct DriveOut {
+    /// `(submit_index, client_total_seconds)` per answered request.
+    latencies: Vec<(usize, f64)>,
+    lost: usize,
+    peak_workers: usize,
+}
+
+/// Open-loop paced submission + full drain, sampling the active worker
+/// count the whole way (pacing spins and drain polls are the sample
+/// points — cheap atomic reads).
+fn drive(pool: &PoolHandle, requests: usize, s_in: usize, offered: f64, seed: u64) -> DriveOut {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let dt = Duration::from_secs_f64(1.0 / offered.max(1.0));
+    let t0 = Instant::now();
+    let mut peak = pool.workers();
+    let mut lost = 0usize;
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let due = t0 + dt * (i as u32);
+        while Instant::now() < due {
+            peak = peak.max(pool.workers());
+            std::hint::spin_loop();
+        }
+        let input: Vec<i32> = (0..s_in)
+            .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let prio = if i % 5 == 0 { Priority::Interactive } else { Priority::Bulk };
+        match pool.submit(input, SubmitOptions::with_priority(prio)) {
+            Ok(t) => pending.push((i, t)),
+            Err(_) => lost += 1,
+        }
+    }
+    let mut latencies = Vec::with_capacity(pending.len());
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for (i, mut t) in pending {
+        loop {
+            match t.wait_timeout(Duration::from_millis(5)) {
+                Ok(resp) => {
+                    latencies.push((i, resp.total_seconds()));
+                    break;
+                }
+                Err(_) if Instant::now() < deadline => {
+                    peak = peak.max(pool.workers());
+                }
+                Err(_) => {
+                    lost += 1;
+                    break;
+                }
+            }
+        }
+    }
+    DriveOut {
+        latencies,
+        lost,
+        peak_workers: peak,
+    }
+}
+
+fn p99(samples: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = samples.collect();
+    summarize(&v).map(|s| s.p99).unwrap_or(0.0)
+}
+
+pub fn run() -> AutoscaleBench {
+    let spec = har_4();
+    let batch = 4;
+    let net = random_qnet(&spec, 0xA57A);
+    let s_in = spec.inputs();
+    let modeled = BatchAccelerator::zedboard(batch).timing_only(&net).total_seconds;
+    let capacity_1 = batch as f64 / modeled.max(1e-9);
+    let offered = OVERLOAD * capacity_1;
+    let duration_s = if quick_mode() { 0.6 } else { 1.0 };
+    let requests = ((offered * duration_s) as usize).clamp(200, 4000);
+
+    let base = ServerConfig {
+        network: spec.name.clone(),
+        batch,
+        batch_deadline_us: 500,
+        queue_depth: requests.max(1024),
+        backend: "sim".into(),
+        ..Default::default()
+    };
+
+    // phase A: static ceiling, autoscale off
+    let static_cfg = ServerConfig {
+        workers: MAX_WORKERS,
+        ..base.clone()
+    };
+    let pool = ServePool::start(&static_cfg, sim_factory(&net, batch)).expect("static pool");
+    let stat = drive(&pool, requests, s_in, offered, 0xA001);
+    pool.shutdown().expect("static pool shuts down");
+
+    // phase B: start at the floor, let the controller chase the step
+    let scaled_cfg = ServerConfig {
+        workers: MIN_WORKERS,
+        autoscale: true,
+        autoscale_min_workers: MIN_WORKERS,
+        autoscale_max_workers: MAX_WORKERS,
+        autoscale_target_p99_us: 2_000,
+        ..base
+    };
+    let pool = ServePool::start(&scaled_cfg, sim_factory(&net, batch)).expect("scaled pool");
+    let scal = drive(&pool, requests, s_in, offered, 0xA002);
+    // the load is gone: the controller must park back down to the floor
+    let settle_deadline = Instant::now() + Duration::from_secs(5);
+    while pool.workers() > MIN_WORKERS && Instant::now() < settle_deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let settled = pool.workers();
+    let (spawns, parks) = pool.autoscale_counts();
+    pool.shutdown().expect("scaled pool shuts down");
+
+    AutoscaleBench {
+        network: spec.name,
+        batch,
+        requests,
+        offered_rps: offered,
+        modeled_batch_s: modeled,
+        static_p99_s: p99(stat.latencies.iter().map(|&(_, s)| s)),
+        scaled_tail_p99_s: p99(
+            scal.latencies.iter().filter(|&&(i, _)| i >= requests / 2).map(|&(_, s)| s),
+        ),
+        peak_workers: scal.peak_workers,
+        settled_workers: settled,
+        lost: stat.lost + scal.lost,
+        spawns,
+        parks,
+    }
+}
+
+pub fn render(b: &AutoscaleBench) -> String {
+    let mut t = Table::new(
+        &format!(
+            "autoscale step load ({} on sim, {OVERLOAD}x single-worker capacity)",
+            b.network
+        ),
+        &["phase", "workers", "p99 ms"],
+    );
+    t.row(vec![
+        "static ceiling".into(),
+        MAX_WORKERS.to_string(),
+        ms(b.static_p99_s),
+    ]);
+    t.row(vec![
+        format!("autoscaled (peak {})", b.peak_workers),
+        format!("{}..{}", MIN_WORKERS, MAX_WORKERS),
+        ms(b.scaled_tail_p99_s),
+    ]);
+    t.footnote(&format!(
+        "{} requests at {:.0}/s, modeled batch {} ms; settled to {} worker(s), \
+         {} spawns / {} parks, {} lost",
+        b.requests,
+        b.offered_rps,
+        ms(b.modeled_batch_s),
+        b.settled_workers,
+        b.spawns,
+        b.parks,
+        b.lost
+    ));
+    t.footnote("autoscaled p99 is the tail half of the run (post-step steady state)");
+    t.render()
+}
+
+/// Machine-readable twin of [`render`], written to `BENCH_autoscale.json`.
+pub fn to_json(b: &AutoscaleBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    format!(
+        "{{\"bench\":\"autoscale\",\"network\":\"{}\",\"batch\":{},\"requests\":{},\
+         \"offered_rps\":{},\"modeled_batch_s\":{},\"static_p99_s\":{},\
+         \"scaled_tail_p99_s\":{},\"peak_workers\":{},\"settled_workers\":{},\
+         \"lost\":{},\"spawns\":{},\"parks\":{}}}",
+        json_escape(&b.network),
+        b.batch,
+        b.requests,
+        json_f64(b.offered_rps),
+        json_f64(b.modeled_batch_s),
+        json_f64(b.static_p99_s),
+        json_f64(b.scaled_tail_p99_s),
+        b.peak_workers,
+        b.settled_workers,
+        b.lost,
+        b.spawns,
+        b.parks,
+    )
+}
+
+/// Wall-clock acceptance gates (skip with `ZDNN_SKIP_PERF=1`):
+/// scale-up happened, the steady tail held within 2x the static ceiling's
+/// p99, nothing was lost, and the pool parked back to the floor.
+pub fn check_shape(b: &AutoscaleBench) -> Result<(), String> {
+    if b.lost != 0 {
+        return Err(format!("{} requests lost", b.lost));
+    }
+    if b.peak_workers <= MIN_WORKERS {
+        return Err(format!(
+            "no scale-up: peak {} workers at the {MIN_WORKERS}-worker floor",
+            b.peak_workers
+        ));
+    }
+    if b.spawns < 1 || b.parks < 1 {
+        return Err(format!(
+            "controller idle: {} spawns / {} parks",
+            b.spawns, b.parks
+        ));
+    }
+    if b.settled_workers != MIN_WORKERS {
+        return Err(format!(
+            "did not park to the floor: settled at {} workers",
+            b.settled_workers
+        ));
+    }
+    if b.scaled_tail_p99_s > 2.0 * b.static_p99_s {
+        return Err(format!(
+            "steady tail p99 {:.6}s above 2x the static ceiling's {:.6}s",
+            b.scaled_tail_p99_s, b.static_p99_s
+        ));
+    }
+    Ok(())
+}

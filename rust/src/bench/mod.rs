@@ -5,6 +5,7 @@
 //! the publication.  The same code backs the `zynq-dnn bench …` CLI.
 
 pub mod ablation;
+pub mod autoscale;
 pub mod calibrate;
 pub mod combined;
 pub mod compress;
@@ -15,6 +16,7 @@ pub mod nopt;
 pub mod obsbench;
 pub mod registry;
 pub mod report;
+pub mod simserve;
 pub mod slo;
 pub mod sparse;
 pub mod table2;

@@ -1,0 +1,244 @@
+//! Simulated-serving functional bench (`bench sim`): the deterministic
+//! gate behind the `sim` backend.
+//!
+//! Three checks, none wall-clock-dependent:
+//!
+//! 1. **Batch amortization curve** — the modeled per-sample latency over
+//!    the paper's hardware batch sweep, plus the co-tuned batch size
+//!    (argmin per-sample).  The curve must actually amortize: the
+//!    co-tuned batch beats batch 1.
+//! 2. **Bit-exactness under serving** — a sharded pool on `backend =
+//!    "sim"` must return the same outputs as a direct
+//!    [`forward_q`](crate::nn::forward_q) golden for every request.
+//! 3. **Timing injection** — every reply's `compute_seconds` must be the
+//!    modeled batch time (the constant the engine derives from
+//!    [`BatchAccelerator::timing_only`]), not host wall-clock.
+//!
+//! Because all three are deterministic, `check_shape` runs unconditionally
+//! (no `ZDNN_SKIP_PERF` escape hatch) — this is the CI "sim smoke" gate.
+
+use std::time::Duration;
+
+use super::report::{ms, Table};
+use super::{quick_mode, random_qnet, PAPER_BATCH_SWEEP};
+use crate::config::ServerConfig;
+use crate::coordinator::{EngineFactory, SubmitOptions, SubmitTarget};
+use crate::nn::forward_q;
+use crate::nn::spec::mnist_4;
+use crate::serve::{Priority, ServePool};
+use crate::sim::batch::BatchAccelerator;
+use crate::sim::engine::co_tuned_batch;
+use crate::tensor::MatI;
+use crate::util::rng::Xoshiro256;
+
+/// One batch size of the modeled amortization sweep.
+#[derive(Debug, Clone)]
+pub struct SimRow {
+    pub batch: usize,
+    pub per_sample_s: f64,
+    pub total_s: f64,
+    pub weight_bytes: u64,
+}
+
+/// The benchmark result.
+#[derive(Debug, Clone)]
+pub struct SimBench {
+    pub network: String,
+    pub rows: Vec<SimRow>,
+    /// Batch size minimizing modeled per-sample latency...
+    pub co_tuned_batch: usize,
+    /// ...and that minimum.
+    pub co_tuned_per_sample_s: f64,
+    /// Requests pushed through the `sim`-backend pool.
+    pub smoke_requests: usize,
+    /// Replies received (must equal `smoke_requests`).
+    pub smoke_replies: usize,
+    /// Replies whose payload differed from the `forward_q` golden.
+    pub smoke_mismatches: usize,
+    /// Replies whose `compute_seconds` was not the modeled batch time.
+    pub smoke_time_mismatches: usize,
+    /// The modeled batch time every reply must carry.
+    pub modeled_batch_s: f64,
+}
+
+fn smoke_factory(net: &crate::nn::QNetwork, batch: usize) -> EngineFactory {
+    EngineFactory {
+        backend: "sim".into(),
+        batch,
+        net: net.clone(),
+        artifacts_dir: crate::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    }
+}
+
+pub fn run() -> SimBench {
+    let spec = mnist_4();
+    let net = random_qnet(&spec, 0x51A);
+    let rows: Vec<SimRow> = PAPER_BATCH_SWEEP
+        .iter()
+        .map(|&n| {
+            let t = BatchAccelerator::zedboard(n).timing_only(&net);
+            SimRow {
+                batch: n,
+                per_sample_s: t.per_sample(),
+                total_s: t.total_seconds,
+                weight_bytes: t.total_weight_bytes(),
+            }
+        })
+        .collect();
+    let (co_batch, co_per_sample) = co_tuned_batch(&net, &PAPER_BATCH_SWEEP);
+
+    // serving smoke: a 2-shard pool on the sim backend, mixed priorities
+    let batch = 4;
+    let requests = if quick_mode() { 48 } else { 160 };
+    let modeled = BatchAccelerator::zedboard(batch).timing_only(&net).total_seconds;
+    let cfg = ServerConfig {
+        network: spec.name.clone(),
+        batch,
+        workers: 2,
+        queue_depth: requests.max(64),
+        batch_deadline_us: 500,
+        backend: "sim".into(),
+        ..Default::default()
+    };
+    let pool = ServePool::start(&cfg, smoke_factory(&net, batch)).expect("sim pool starts");
+    let s_in = spec.inputs();
+    let mut rng = Xoshiro256::seed_from_u64(0x51B);
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let input: Vec<i32> = (0..s_in)
+            .map(|_| crate::fixedpoint::quantize(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let prio = if i % 5 == 0 { Priority::Interactive } else { Priority::Bulk };
+        let t = pool
+            .submit(input.clone(), SubmitOptions::with_priority(prio))
+            .expect("queue sized to the run");
+        pending.push((input, t));
+    }
+    let (mut replies, mut mismatches, mut time_mismatches) = (0usize, 0usize, 0usize);
+    for (input, mut t) in pending {
+        let Ok(resp) = t.wait_timeout(Duration::from_secs(30)) else {
+            continue;
+        };
+        replies += 1;
+        let want = forward_q(&net, &MatI::from_vec(1, s_in, input)).expect("golden forward");
+        if resp.output != want.row(0) {
+            mismatches += 1;
+        }
+        if (resp.compute_seconds - modeled).abs() > 1e-12 {
+            time_mismatches += 1;
+        }
+    }
+    pool.shutdown().expect("sim pool shuts down");
+
+    SimBench {
+        network: spec.name,
+        rows,
+        co_tuned_batch: co_batch,
+        co_tuned_per_sample_s: co_per_sample,
+        smoke_requests: requests,
+        smoke_replies: replies,
+        smoke_mismatches: mismatches,
+        smoke_time_mismatches: time_mismatches,
+        modeled_batch_s: modeled,
+    }
+}
+
+pub fn render(b: &SimBench) -> String {
+    let mut t = Table::new(
+        &format!("simulated serving ({}, ZedBoard batch design)", b.network),
+        &["batch", "ms/sample", "ms/batch", "weight KiB", "samples/s"],
+    );
+    for r in &b.rows {
+        t.row(vec![
+            r.batch.to_string(),
+            ms(r.per_sample_s),
+            ms(r.total_s),
+            format!("{:.1}", r.weight_bytes as f64 / 1024.0),
+            format!("{:.0}", 1.0 / r.per_sample_s.max(1e-12)),
+        ]);
+    }
+    t.footnote(&format!(
+        "co-tuned batch {} at {} ms/sample (argmin over the sweep)",
+        b.co_tuned_batch,
+        ms(b.co_tuned_per_sample_s)
+    ));
+    t.footnote(&format!(
+        "serving smoke on backend=sim: {}/{} replies, {} payload mismatches, \
+         {} timing mismatches (modeled batch {} ms)",
+        b.smoke_replies,
+        b.smoke_requests,
+        b.smoke_mismatches,
+        b.smoke_time_mismatches,
+        ms(b.modeled_batch_s)
+    ));
+    t.render()
+}
+
+/// Machine-readable twin of [`render`], written to `BENCH_sim.json`.
+pub fn to_json(b: &SimBench) -> String {
+    use crate::obs::registry::{json_escape, json_f64};
+    let rows: Vec<String> = b
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"batch\":{},\"per_sample_s\":{},\"total_s\":{},\"weight_bytes\":{}}}",
+                r.batch,
+                json_f64(r.per_sample_s),
+                json_f64(r.total_s),
+                r.weight_bytes
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"sim\",\"network\":\"{}\",\"co_tuned_batch\":{},\
+         \"co_tuned_per_sample_s\":{},\"smoke_requests\":{},\"smoke_replies\":{},\
+         \"smoke_mismatches\":{},\"smoke_time_mismatches\":{},\
+         \"modeled_batch_s\":{},\"rows\":[{}]}}",
+        json_escape(&b.network),
+        b.co_tuned_batch,
+        json_f64(b.co_tuned_per_sample_s),
+        b.smoke_requests,
+        b.smoke_replies,
+        b.smoke_mismatches,
+        b.smoke_time_mismatches,
+        json_f64(b.modeled_batch_s),
+        rows.join(","),
+    )
+}
+
+/// The deterministic acceptance gate (run unconditionally — nothing here
+/// depends on host wall-clock).
+pub fn check_shape(b: &SimBench) -> Result<(), String> {
+    let Some(b1) = b.rows.iter().find(|r| r.batch == 1) else {
+        return Err("missing batch-1 row".into());
+    };
+    if b.co_tuned_batch <= 1 || b.co_tuned_per_sample_s >= b1.per_sample_s {
+        return Err(format!(
+            "co-tuning failed to amortize: batch {} at {:.9}s/sample vs batch 1 at {:.9}s",
+            b.co_tuned_batch, b.co_tuned_per_sample_s, b1.per_sample_s
+        ));
+    }
+    if b.smoke_replies != b.smoke_requests {
+        return Err(format!(
+            "lost replies: {}/{} answered",
+            b.smoke_replies, b.smoke_requests
+        ));
+    }
+    if b.smoke_mismatches != 0 {
+        return Err(format!(
+            "{} replies differed from the forward_q golden",
+            b.smoke_mismatches
+        ));
+    }
+    if b.smoke_time_mismatches != 0 {
+        return Err(format!(
+            "{} replies did not carry the modeled batch time",
+            b.smoke_time_mismatches
+        ));
+    }
+    Ok(())
+}

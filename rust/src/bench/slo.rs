@@ -51,6 +51,9 @@ pub struct SloRow {
 #[derive(Debug, Clone)]
 pub struct SloBench {
     pub network: String,
+    /// Engine backend every pool in the sweep ran on (`native` unless
+    /// `bench slo --backend sim` asked for the simulated ZedBoard).
+    pub backend: String,
     pub policy: String,
     pub rows: Vec<SloRow>,
     /// Batch size the 1-worker priority-vs-FIFO head-to-head ran at.
@@ -73,9 +76,9 @@ fn batch_sweep(quick: bool) -> &'static [usize] {
     }
 }
 
-fn factory(net: &QNetwork, batch: usize) -> EngineFactory {
+fn factory(net: &QNetwork, batch: usize, backend: &str) -> EngineFactory {
     EngineFactory {
-        backend: "native".into(),
+        backend: backend.into(),
         batch,
         net: net.clone(),
         artifacts_dir: crate::runtime::default_artifacts_dir(),
@@ -168,7 +171,13 @@ fn drive(serving: &Serving, requests: usize, offered_rps: f64, seed: u64) -> Dri
     }
 }
 
-fn config(net_name: &str, workers: usize, batch: usize, requests: usize) -> ServerConfig {
+fn config(
+    net_name: &str,
+    workers: usize,
+    batch: usize,
+    requests: usize,
+    backend: &str,
+) -> ServerConfig {
     ServerConfig {
         network: net_name.into(),
         batch,
@@ -180,12 +189,19 @@ fn config(net_name: &str, workers: usize, batch: usize, requests: usize) -> Serv
         // long enough that aging cannot neutralize the priority effect
         // inside one bench run (starvation-freedom is property-tested)
         bulk_promote_us: 200_000,
-        backend: "native".into(),
+        backend: backend.into(),
         ..Default::default()
     }
 }
 
 pub fn run() -> SloBench {
+    run_with_backend("native")
+}
+
+/// The same sweep on an explicit engine backend — `sim` drives the whole
+/// serving stack (pool, shards, priority queues) over the simulated
+/// ZedBoard engine, so reply latencies carry modeled accelerator time.
+pub fn run_with_backend(backend: &str) -> SloBench {
     let quick = quick_mode();
     let spec = if quick { har_4() } else { har_6() };
     let requests = if quick { 150 } else { 500 };
@@ -194,8 +210,9 @@ pub fn run() -> SloBench {
     for &batch in batch_sweep(quick) {
         let offered = OVERLOAD * estimate_capacity(&net, batch, 0x511 + batch as u64);
         for &workers in worker_sweep() {
-            let cfg = config(&spec.name, workers, batch, requests);
-            let pool = ServePool::start(&cfg, factory(&net, batch)).expect("pool starts");
+            let cfg = config(&spec.name, workers, batch, requests, backend);
+            let pool =
+                ServePool::start(&cfg, factory(&net, batch, backend)).expect("pool starts");
             let serving = Serving::Pool(pool);
             let out = drive(&serving, requests, offered, 0x600 + workers as u64);
             let occupancy = match &serving {
@@ -220,17 +237,21 @@ pub fn run() -> SloBench {
     // identical workload and batch
     let batch = batch_sweep(quick)[1];
     let offered = OVERLOAD * estimate_capacity(&net, batch, 0x512);
-    let cfg = config(&spec.name, 1, batch, requests);
-    let pool = Serving::Pool(ServePool::start(&cfg, factory(&net, batch)).expect("pool starts"));
+    let cfg = config(&spec.name, 1, batch, requests, backend);
+    let pool = Serving::Pool(
+        ServePool::start(&cfg, factory(&net, batch, backend)).expect("pool starts"),
+    );
     let prio = drive(&pool, requests, offered, 0x700);
     pool.shutdown().expect("pool shuts down");
-    let single = crate::serve::start_serving(&cfg, factory(&net, batch)).expect("server starts");
+    let single =
+        crate::serve::start_serving(&cfg, factory(&net, batch, backend)).expect("server starts");
     debug_assert!(matches!(single, Serving::Single(_)));
     let fifo = drive(&single, requests, offered, 0x700);
     single.shutdown().expect("server shuts down");
 
     SloBench {
         network: spec.name,
+        backend: backend.to_string(),
         policy: cfg.policy,
         rows,
         head_to_head_batch: batch,
@@ -241,7 +262,10 @@ pub fn run() -> SloBench {
 
 pub fn render(b: &SloBench) -> String {
     let mut t = Table::new(
-        &format!("serving SLO sweep ({}, open loop at {OVERLOAD}x capacity)", b.network),
+        &format!(
+            "serving SLO sweep ({} on {}, open loop at {OVERLOAD}x capacity)",
+            b.network, b.backend
+        ),
         &[
             "batch",
             "workers",
@@ -303,10 +327,11 @@ pub fn to_json(b: &SloBench) -> String {
         })
         .collect();
     format!(
-        "{{\"bench\":\"slo\",\"network\":\"{}\",\"policy\":\"{}\",\
+        "{{\"bench\":\"slo\",\"network\":\"{}\",\"backend\":\"{}\",\"policy\":\"{}\",\
          \"head_to_head_batch\":{},\"priority_interactive_p99_s\":{},\
          \"fifo_interactive_p99_s\":{},\"rows\":[{}]}}",
         json_escape(&b.network),
+        json_escape(&b.backend),
         json_escape(&b.policy),
         b.head_to_head_batch,
         json_f64(b.priority_interactive_p99_s),

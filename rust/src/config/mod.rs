@@ -26,10 +26,13 @@ pub struct ServerConfig {
     pub policy: String,
     /// Aging threshold (µs): a Bulk request older than this is promoted to
     /// Interactive at batch-formation time so priorities cannot starve it.
+    /// 0 (the default) derives the threshold adaptively per shard from the
+    /// measured interactive arrival rate; a nonzero value pins it.
     pub bulk_promote_us: u64,
     /// Bounded request-queue depth (backpressure beyond this).
     pub queue_depth: usize,
-    /// Backend: "pjrt", "native", "native-sparse", "sim-batch", "sim-prune".
+    /// Backend: "pjrt", "native", "native-sparse", "sim" (simulated-FPGA
+    /// serving), "sim-batch", "sim-prune".
     pub backend: String,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
@@ -61,6 +64,17 @@ pub struct ServerConfig {
     /// Open-connection cap for the TCP frontend: accepts past it get one
     /// `ERR busy` line and a close (`conn_rejected=` in STATS).
     pub max_conns: usize,
+    /// Perfmodel-driven worker autoscaling ("on"/"off").  On: the pool
+    /// provisions `autoscale_max_workers` shards, starts `workers` of
+    /// them active, and spawns/parks between the min/max bounds from
+    /// queue depth + predicted service time.
+    pub autoscale: bool,
+    /// Latency budget (µs) the autoscaler drains the backlog within.
+    pub autoscale_target_p99_us: u64,
+    /// Parked floor for the autoscaler (≥ 1).
+    pub autoscale_min_workers: usize,
+    /// Provisioned ceiling for the autoscaler (0 = use `workers`).
+    pub autoscale_max_workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -71,7 +85,7 @@ impl Default for ServerConfig {
             batch_deadline_us: 2000,
             workers: 1,
             policy: "round-robin".into(),
-            bulk_promote_us: 20_000,
+            bulk_promote_us: 0,
             queue_depth: 1024,
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
@@ -82,6 +96,10 @@ impl Default for ServerConfig {
             default_model: String::new(),
             wire: "v3".into(),
             max_conns: 4096,
+            autoscale: false,
+            autoscale_target_p99_us: 5_000,
+            autoscale_min_workers: 1,
+            autoscale_max_workers: 0,
         }
     }
 }
@@ -197,6 +215,23 @@ impl ServerConfig {
                 "default_model" => cfg.default_model = v.clone(),
                 "wire" => cfg.wire = v.clone(),
                 "max_conns" => cfg.max_conns = v.parse().context("max_conns")?,
+                "autoscale" => {
+                    cfg.autoscale = match v.as_str() {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => bail!("autoscale must be on|off, got {other:?}"),
+                    }
+                }
+                "autoscale_target_p99_us" => {
+                    cfg.autoscale_target_p99_us =
+                        v.parse().context("autoscale_target_p99_us")?
+                }
+                "autoscale_min_workers" => {
+                    cfg.autoscale_min_workers = v.parse().context("autoscale_min_workers")?
+                }
+                "autoscale_max_workers" => {
+                    cfg.autoscale_max_workers = v.parse().context("autoscale_max_workers")?
+                }
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -233,7 +268,7 @@ impl ServerConfig {
             bail!("listen must be host:port (e.g. 127.0.0.1:7878), got {:?}", self.listen);
         }
         match self.backend.as_str() {
-            "pjrt" | "native" | "native-sparse" | "sim-batch" | "sim-prune" => {}
+            "pjrt" | "native" | "native-sparse" | "sim" | "sim-batch" | "sim-prune" => {}
             other => bail!("unknown backend {other:?}"),
         }
         match self.wire.as_str() {
@@ -242,6 +277,28 @@ impl ServerConfig {
         }
         if self.max_conns == 0 {
             bail!("max_conns must be >= 1");
+        }
+        if self.autoscale {
+            if self.autoscale_min_workers == 0 {
+                bail!("autoscale_min_workers must be >= 1");
+            }
+            let max = if self.autoscale_max_workers == 0 {
+                self.workers
+            } else {
+                self.autoscale_max_workers
+            };
+            if max > 64 {
+                bail!("autoscale_max_workers must be <= 64, got {max}");
+            }
+            if self.autoscale_min_workers > max {
+                bail!(
+                    "autoscale_min_workers ({}) must be <= the ceiling ({max})",
+                    self.autoscale_min_workers
+                );
+            }
+            if self.autoscale_target_p99_us == 0 {
+                bail!("autoscale_target_p99_us must be >= 1");
+            }
         }
         if !self.models.is_empty() {
             let specs = parse_model_specs(&self.models)?;
@@ -339,6 +396,48 @@ mod tests {
             .validate()
             .unwrap();
         }
+    }
+
+    #[test]
+    fn bulk_promote_defaults_to_adaptive() {
+        // 0 is the adaptive sentinel; a nonzero value pins the threshold
+        assert_eq!(ServerConfig::default().bulk_promote_us, 0);
+        ServerConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn sim_backend_accepted() {
+        let cfg = ServerConfig::from_kv_text("backend = \"sim\"\nworkers = 2\n").unwrap();
+        assert_eq!(cfg.backend, "sim");
+    }
+
+    #[test]
+    fn autoscale_keys_parse_and_validate() {
+        let cfg = ServerConfig::from_kv_text(
+            "autoscale = on\nworkers = 2\nautoscale_min_workers = 1\n\
+             autoscale_max_workers = 8\nautoscale_target_p99_us = 2000\n",
+        )
+        .unwrap();
+        assert!(cfg.autoscale);
+        assert_eq!(cfg.autoscale_min_workers, 1);
+        assert_eq!(cfg.autoscale_max_workers, 8);
+        assert_eq!(cfg.autoscale_target_p99_us, 2000);
+        // off by default, and "off" parses back
+        assert!(!ServerConfig::default().autoscale);
+        assert!(!ServerConfig::from_kv_text("autoscale = off\n").unwrap().autoscale);
+        // invalid shapes fail loudly
+        assert!(ServerConfig::from_kv_text("autoscale = maybe").is_err());
+        assert!(ServerConfig::from_kv_text("autoscale = on\nautoscale_min_workers = 0").is_err());
+        assert!(ServerConfig::from_kv_text(
+            "autoscale = on\nworkers = 2\nautoscale_min_workers = 4\nautoscale_max_workers = 3"
+        )
+        .is_err());
+        let big = "autoscale = on\nautoscale_max_workers = 99";
+        assert!(ServerConfig::from_kv_text(big).is_err());
+        let zero = "autoscale = on\nautoscale_target_p99_us = 0";
+        assert!(ServerConfig::from_kv_text(zero).is_err());
+        // bounds are only enforced when the loop is on
+        ServerConfig::from_kv_text("autoscale_max_workers = 99\n").unwrap();
     }
 
     #[test]

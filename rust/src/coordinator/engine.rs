@@ -13,6 +13,7 @@ use crate::exec::{ExecPlan, PlanOptions};
 use crate::nn::forward::QNetwork;
 use crate::runtime::Runtime;
 use crate::sim::batch::BatchAccelerator;
+use crate::sim::engine::SimEngine;
 use crate::sim::pruning::{PruningAccelerator, SparseNetwork};
 use crate::tensor::MatI;
 
@@ -122,17 +123,26 @@ impl EngineFactory {
         ExecPlan::compile_q(&self.net, &opts.with_threads(self.native_threads))
     }
 
-    /// True when [`Self::build`] would run on an [`ExecPlan`] (and shards
-    /// can therefore share one compiled plan).
+    /// True for the host-kernel backends (wall-clock latency).
     pub fn is_native(&self) -> bool {
         matches!(self.backend.as_str(), "native" | "native-sparse")
     }
 
-    /// Build a native engine around an already-compiled (possibly shared)
-    /// plan; panics on non-native backends (callers gate on
-    /// [`Self::is_native`]).
+    /// True when [`Self::build`] would run on an [`ExecPlan`] (and shards
+    /// can therefore share one compiled plan): the native backends plus
+    /// the plan-backed `sim` engine.
+    pub fn plan_backed(&self) -> bool {
+        self.is_native() || self.backend == "sim"
+    }
+
+    /// Build a plan-backed engine around an already-compiled (possibly
+    /// shared) plan; panics on other backends (callers gate on
+    /// [`Self::plan_backed`]).
     pub fn build_from_plan(&self, plan: ExecPlan) -> Box<dyn Engine> {
-        assert!(self.is_native(), "build_from_plan needs a native backend");
+        assert!(self.plan_backed(), "build_from_plan needs a plan-backed backend");
+        if self.backend == "sim" {
+            return Box::new(SimEngine::from_plan(plan, &self.net, self.batch));
+        }
         let name: &'static str = if self.backend == "native-sparse" {
             "native-sparse"
         } else {
@@ -148,7 +158,7 @@ impl EngineFactory {
     pub fn build(&self) -> Result<Box<dyn Engine>> {
         ensure!(self.batch >= 1, "batch must be >= 1");
         Ok(match self.backend.as_str() {
-            "native" | "native-sparse" => {
+            "native" | "native-sparse" | "sim" => {
                 let plan = self.compile_plan()?;
                 self.build_from_plan(plan)
             }
@@ -320,7 +330,7 @@ mod tests {
     fn native_and_simulators_bit_identical() {
         let x = rand_x(4);
         let mut outs = Vec::new();
-        for backend in ["native", "native-sparse", "sim-batch", "sim-prune"] {
+        for backend in ["native", "native-sparse", "sim", "sim-batch", "sim-prune"] {
             let mut e = factory(backend, 4).build().unwrap();
             assert_eq!(e.name(), backend);
             outs.push((backend, e.infer(&x).unwrap()));
@@ -337,7 +347,7 @@ mod tests {
         // path matches the dense golden engine and the stream simulator
         let x = rand_x(6);
         let mut outs = Vec::new();
-        for backend in ["native", "native-sparse", "sim-batch", "sim-prune"] {
+        for backend in ["native", "native-sparse", "sim", "sim-batch", "sim-prune"] {
             let mut f = factory(backend, 6);
             f.net = crate::sim::pruning::prune_qnetwork(&f.net, 0.9);
             outs.push((backend, f.build().unwrap().infer(&x).unwrap()));
@@ -355,6 +365,18 @@ mod tests {
         assert!(e.simulated_seconds().is_none());
         e.infer(&x).unwrap();
         assert!(e.simulated_seconds().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sim_backend_is_plan_backed_and_injects_zedboard_timing() {
+        let f = factory("sim", 4);
+        assert!(f.plan_backed() && !f.is_native());
+        let expect = crate::sim::batch::BatchAccelerator::zedboard(4)
+            .timing_only(&f.net)
+            .total_seconds;
+        let mut e = f.build().unwrap();
+        e.infer(&rand_x(4)).unwrap();
+        assert!((e.simulated_seconds().unwrap() - expect).abs() < 1e-15);
     }
 
     #[test]

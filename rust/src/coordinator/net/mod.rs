@@ -277,6 +277,11 @@ pub struct StatsReport {
     /// Queued requests shed server-side because their deadline passed
     /// before batch formation.
     pub shed: u64,
+    /// Autoscaler scale-up decisions applied (0 when `autoscale = off`
+    /// or on the single-engine server).
+    pub autoscale_spawns: u64,
+    /// Autoscaler scale-down (park) decisions applied.
+    pub autoscale_parks: u64,
 }
 
 impl StatsReport {
@@ -287,7 +292,8 @@ impl StatsReport {
             "STATS requests={} batches={} rejected={} mean_latency_us={:.1} \
              p50_latency_us={:.1} p95_latency_us={:.1} p99_latency_us={:.1} \
              occupancy={:.3} promoted={} throughput={:.1} workers={} \
-             win_throughput={:.1} shed={}",
+             win_throughput={:.1} shed={} autoscale_workers={} \
+             autoscale_spawns={} autoscale_parks={}",
             self.requests,
             self.batches,
             self.rejected,
@@ -300,7 +306,10 @@ impl StatsReport {
             self.throughput,
             self.workers,
             self.throughput_10s,
-            self.shed
+            self.shed,
+            self.workers,
+            self.autoscale_spawns,
+            self.autoscale_parks
         )
     }
 
@@ -311,7 +320,8 @@ impl StatsReport {
              \"mean_latency_us\":{},\"p50_latency_us\":{},\
              \"p95_latency_us\":{},\"p99_latency_us\":{},\
              \"occupancy\":{},\"promoted\":{},\"throughput\":{},\
-             \"throughput_10s\":{},\"workers\":{},\"shed\":{}}}",
+             \"throughput_10s\":{},\"workers\":{},\"shed\":{},\
+             \"autoscale_spawns\":{},\"autoscale_parks\":{}}}",
             self.requests,
             self.batches,
             self.rejected,
@@ -324,7 +334,9 @@ impl StatsReport {
             json_f64(self.throughput),
             json_f64(self.throughput_10s),
             self.workers,
-            self.shed
+            self.shed,
+            self.autoscale_spawns,
+            self.autoscale_parks
         )
     }
 }
@@ -1615,11 +1627,16 @@ mod tests {
             throughput_10s: 42.5,
             workers: 4,
             shed: 3,
+            autoscale_spawns: 5,
+            autoscale_parks: 2,
         };
         let line = s.render();
         assert!(line.contains("win_throughput=42.5"), "{line}");
         assert!(line.contains("throughput=100.0"), "{line}");
         assert!(line.contains("shed=3"), "{line}");
+        assert!(line.contains("autoscale_workers=4"), "{line}");
+        assert!(line.contains("autoscale_spawns=5"), "{line}");
+        assert!(line.contains("autoscale_parks=2"), "{line}");
         let v = crate::config::json::parse(&s.render_json()).expect("valid JSON");
         assert_eq!(v.get("requests").and_then(|x| x.as_f64().ok()), Some(12.0));
         assert_eq!(
@@ -1628,6 +1645,14 @@ mod tests {
         );
         assert_eq!(v.get("workers").and_then(|x| x.as_f64().ok()), Some(4.0));
         assert_eq!(v.get("shed").and_then(|x| x.as_f64().ok()), Some(3.0));
+        assert_eq!(
+            v.get("autoscale_spawns").and_then(|x| x.as_f64().ok()),
+            Some(5.0)
+        );
+        assert_eq!(
+            v.get("autoscale_parks").and_then(|x| x.as_f64().ok()),
+            Some(2.0)
+        );
     }
 
     #[test]

@@ -193,6 +193,8 @@ impl SubmitTarget for ServerHandle {
             throughput_10s: s.throughput_10s,
             workers: 1,
             shed: s.shed,
+            autoscale_spawns: 0,
+            autoscale_parks: 0,
         }
     }
 

@@ -24,9 +24,10 @@
 //!   bench <which>                regenerate a paper table/figure, or run the
 //!                                serving benches (table2|table3|table4|fig7|
 //!                                gops|nopt|combined|ablation|sparse|slo|
-//!                                calibrate|compress|net|obs|registry|all);
-//!                                sparse/slo/compress/net/obs/registry also
-//!                                write BENCH_<which>.json
+//!                                calibrate|compress|net|obs|registry|sim|
+//!                                autoscale|all); sparse/slo/compress/net/
+//!                                obs/registry/sim/autoscale also write
+//!                                BENCH_<which>.json
 //!
 //! `infer`, `serve`, `serve-pool`, and `profile` take `--artifact model.rpz`
 //! to serve a compressed model directly: the network weights AND the
@@ -71,7 +72,8 @@ const GLOBAL_FLAGS: &[FlagSpec] = &[
     FlagSpec {
         name: "backend",
         takes_value: true,
-        help: "pjrt|native|native-sparse|sim-batch|sim-prune",
+        help: "pjrt|native|native-sparse|sim|sim-batch|sim-prune \
+               (sim = serving-grade simulated ZedBoard: plan outputs, modeled latency)",
     },
     FlagSpec {
         name: "weights",
@@ -137,7 +139,29 @@ const GLOBAL_FLAGS: &[FlagSpec] = &[
     FlagSpec {
         name: "promote-us",
         takes_value: true,
-        help: "bulk aging threshold before promotion",
+        help: "bulk aging threshold before promotion \
+               (0 = adapt to the measured interactive arrival rate, the default)",
+    },
+    FlagSpec {
+        name: "autoscale",
+        takes_value: false,
+        help: "serve: grow/park pool shards from queue depth + the perfmodel \
+               service-time prediction (exports zdnn_autoscale_* counters)",
+    },
+    FlagSpec {
+        name: "autoscale-target-p99-us",
+        takes_value: true,
+        help: "autoscale: queueing-delay budget the controller sizes for (default 5000)",
+    },
+    FlagSpec {
+        name: "autoscale-min-workers",
+        takes_value: true,
+        help: "autoscale: floor the pool parks down to (default 1)",
+    },
+    FlagSpec {
+        name: "autoscale-max-workers",
+        takes_value: true,
+        help: "autoscale: provisioned ceiling (default 0 = --workers)",
     },
     FlagSpec {
         name: "interactive-every",
@@ -559,7 +583,7 @@ fn serve(args: &Args) -> Result<()> {
             bail!("--models serves over TCP only; add --listen <addr:port>");
         };
         let policy = args.get_or("policy", "round-robin");
-        let promote = args.get_usize("promote-us", 20_000)? as u64;
+        let promote = args.get_usize("promote-us", 0)? as u64;
         let cfg = ServerConfig {
             batch,
             batch_deadline_us: deadline,
@@ -614,7 +638,7 @@ fn serve(args: &Args) -> Result<()> {
         // count selects — single engine or sharded pool — with the
         // Interactive/Bulk classes on the wire; block until Ctrl-C
         let policy = args.get_or("policy", "round-robin");
-        let promote = args.get_usize("promote-us", 20_000)? as u64;
+        let promote = args.get_usize("promote-us", 0)? as u64;
         let (factory, name) = build_factory(args, backend, batch)?;
         let cfg = ServerConfig {
             network: name.clone(),
@@ -629,13 +653,27 @@ fn serve(args: &Args) -> Result<()> {
             trace_sample: args.get_usize("trace-sample", 1)? as u64,
             wire: args.get_or("wire", "v3").to_string(),
             max_conns: args.get_usize("max-conns", 4096)?,
+            autoscale: args.has("autoscale"),
+            autoscale_target_p99_us: args.get_usize("autoscale-target-p99-us", 5_000)? as u64,
+            autoscale_min_workers: args.get_usize("autoscale-min-workers", 1)?,
+            autoscale_max_workers: args.get_usize("autoscale-max-workers", 0)?,
             ..Default::default()
         };
         cfg.validate()?;
         let serving = std::sync::Arc::new(start_serving(&cfg, factory)?);
         eprintln!(
-            "serving {name} on {backend}, {} worker(s), batch {batch}, deadline {deadline} µs",
-            serving.workers()
+            "serving {name} on {backend}, {} worker(s), batch {batch}, deadline {deadline} µs{}",
+            serving.workers(),
+            if cfg.autoscale {
+                format!(
+                    " (autoscale on: {}..{} workers, target p99 {} µs)",
+                    cfg.autoscale_min_workers,
+                    zynq_dnn::serve::autoscale::effective_max(&cfg),
+                    cfg.autoscale_target_p99_us
+                )
+            } else {
+                String::new()
+            }
         );
         let fe = zynq_dnn::coordinator::NetFrontend::start_with(
             &cfg.listen,
@@ -715,7 +753,7 @@ fn serve_pool(args: &Args) -> Result<()> {
     let deadline = args.get_usize("deadline-us", 2000)? as u64;
     let workers = args.get_usize("workers", 4)?;
     let policy = args.get_or("policy", "round-robin");
-    let promote = args.get_usize("promote-us", 20_000)? as u64;
+    let promote = args.get_usize("promote-us", 0)? as u64;
     let every = args.get_usize("interactive-every", 5)?.max(1);
     let (factory, name) = build_factory(args, backend, batch)?;
     let s_in = factory.net.spec.inputs();
@@ -731,8 +769,13 @@ fn serve_pool(args: &Args) -> Result<()> {
         backend: backend.into(),
         artifact: args.get("artifact").unwrap_or("").to_string(),
         trace_sample: args.get_usize("trace-sample", 1)? as u64,
+        autoscale: args.has("autoscale"),
+        autoscale_target_p99_us: args.get_usize("autoscale-target-p99-us", 5_000)? as u64,
+        autoscale_min_workers: args.get_usize("autoscale-min-workers", 1)?,
+        autoscale_max_workers: args.get_usize("autoscale-max-workers", 0)?,
         ..Default::default()
     };
+    cfg.validate()?;
     let serving = start_serving(&cfg, factory)?;
     eprintln!(
         "pool: {name} on {backend}, {} worker(s), batch {batch}, policy {policy}, \
@@ -881,12 +924,21 @@ fn sim(args: &Args) -> Result<()> {
 /// runtime twin of the paper's Fig. 7 layer breakdown.  `--artifact`
 /// profiles the compressed model's own kernels (calibrated threshold,
 /// codebook layers intact); otherwise `--network`/`--weights` pick the
-/// net and `--threshold` the kernel-selection policy.
+/// net and `--threshold` the kernel-selection policy.  `--backend sim`
+/// swaps the measured host kernels for the simulated ZedBoard's modeled
+/// DMA + compute breakdown (the same timing the `sim` serving backend
+/// stamps on every reply).
 fn profile(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 25)?;
     let quick = bench::quick_mode();
     let runs = args.get_usize("runs", if quick { 8 } else { 64 })?;
     let threads = args.get_usize("threads", 1)?;
+    if args.get_or("backend", "native") == "sim" {
+        let (factory, name) = build_factory(args, "sim", batch)?;
+        let report = BatchAccelerator::zedboard(batch.max(1)).timing_only(&factory.net);
+        println!("{}", zynq_dnn::sim::engine::timing_table(&name, batch, &report));
+        return Ok(());
+    }
     let (factory, name) = build_factory(args, "native", batch)?;
     let s_in = factory.net.spec.inputs();
 
@@ -992,7 +1044,7 @@ fn run_bench(args: &Args) -> Result<()> {
         ran = true;
     }
     if all || which == "slo" {
-        let slo = bench::slo::run();
+        let slo = bench::slo::run_with_backend(args.get_or("backend", "native"));
         println!("{}", bench::slo::render(&slo));
         emit("slo", &bench::slo::to_json(&slo))?;
         // the CI smoke job runs `bench slo --quick`: scheduler regressions
@@ -1037,6 +1089,32 @@ fn run_bench(args: &Args) -> Result<()> {
         }
         ran = true;
     }
+    if all || which == "sim" {
+        let s = bench::simserve::run();
+        println!("{}", bench::simserve::render(&s));
+        emit("sim", &bench::simserve::to_json(&s))?;
+        // deterministic gate (modeled timing, golden outputs — no
+        // wall-clock dependence): run unconditionally, CI "sim smoke" job
+        if let Err(e) = bench::simserve::check_shape(&s) {
+            bail!("sim shape check failed: {e}");
+        }
+        ran = true;
+    }
+    if all || which == "autoscale" {
+        let a = bench::autoscale::run();
+        println!("{}", bench::autoscale::render(&a));
+        emit("autoscale", &bench::autoscale::to_json(&a))?;
+        // wall-clock gates: scale-up under the step, steady tail within
+        // 2x the static ceiling, park back to the floor, nothing lost
+        if let Err(e) = bench::autoscale::check_shape(&a) {
+            if std::env::var("ZDNN_SKIP_PERF").map(|v| v == "1").unwrap_or(false) {
+                eprintln!("autoscale shape check FAILED (ignored, ZDNN_SKIP_PERF=1): {e}");
+            } else {
+                bail!("autoscale shape check failed: {e}");
+            }
+        }
+        ran = true;
+    }
     if all || which == "registry" {
         let r = bench::registry::run()?;
         println!("{}", bench::registry::render(&r));
@@ -1051,7 +1129,7 @@ fn run_bench(args: &Args) -> Result<()> {
     if !ran {
         bail!(
             "unknown bench {which:?} (table2|table3|table4|fig7|gops|nopt|combined|\
-             ablation|sparse|calibrate|compress|slo|net|obs|registry|all)"
+             ablation|sparse|calibrate|compress|slo|net|obs|registry|sim|autoscale|all)"
         );
     }
     Ok(())

@@ -492,6 +492,14 @@ impl SubmitTarget for Registry {
             throughput_10s: aggregate.throughput_10s,
             workers: models.values().map(|e| e.pool.workers()).sum(),
             shed: aggregate.shed,
+            autoscale_spawns: models
+                .values()
+                .map(|e| e.pool.autoscale_counts().0)
+                .sum(),
+            autoscale_parks: models
+                .values()
+                .map(|e| e.pool.autoscale_counts().1)
+                .sum(),
         }
     }
 

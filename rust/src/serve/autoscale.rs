@@ -1,0 +1,293 @@
+//! Perfmodel-driven worker autoscaling for the sharded pool (ROADMAP:
+//! "use the `perfmodel` cost model for admission control and worker
+//! autoscaling — spawn/park shards from queue depth + predicted service
+//! time").
+//!
+//! Mechanism: the pool provisions `autoscale_max_workers` shard threads up
+//! front and routes new requests only to the first `active` of them (an
+//! atomic prefix).  Scaling up grows the prefix; scaling down shrinks it —
+//! a *parked* shard keeps its thread and simply stops receiving picks, so
+//! whatever it already queued drains normally and the exactly-one-reply /
+//! exactly-one-slot-release invariant needs no new machinery.  Both moves
+//! are a single atomic store between batches.
+//!
+//! Policy: a control thread wakes every [`AutoscaleConfig::interval`] and
+//! computes the workers needed to (a) absorb the observed completion rate
+//! (the arrival-rate proxy once the queue is stable) and (b) drain the
+//! current backlog within the p99 budget, both priced with the predicted
+//! per-sample service time from
+//! [`MachineModel::network_time`](crate::perfmodel::machine::MachineModel::network_time)
+//! — the paper's roofline model closing the loop into the runtime.
+//! Scale-up applies immediately (queues hurt now); scale-down takes
+//! [`AutoscaleConfig::down_ticks`] consecutive low readings plus a
+//! cooldown, one worker at a time (hysteresis against flapping).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerConfig;
+use crate::nn::QNetwork;
+use crate::perfmodel::machine::I7_5600U;
+use crate::sim::batch::BatchAccelerator;
+
+use super::histogram::ShardMetrics;
+
+/// Control-loop parameters (derived from the `autoscale_*` config keys).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Parked floor: never route to fewer shards than this.
+    pub min_workers: usize,
+    /// Provisioned ceiling: shard threads spawned at pool start.
+    pub max_workers: usize,
+    /// Latency budget the backlog must drain within.
+    pub target_p99: Duration,
+    /// Predicted seconds/sample from the roofline model.
+    pub service_s: f64,
+    /// Control period.
+    pub interval: Duration,
+    /// Minimum time between two applied scale decisions.
+    pub cooldown: Duration,
+    /// Consecutive below-target readings required before parking one.
+    pub down_ticks: u32,
+}
+
+/// The ceiling the pool provisions: `autoscale_max_workers`, with `0`
+/// meaning "use `workers`" (and never below the configured start size).
+pub fn effective_max(config: &ServerConfig) -> usize {
+    let max = if config.autoscale_max_workers == 0 {
+        config.workers
+    } else {
+        config.autoscale_max_workers
+    };
+    max.max(config.workers).max(1)
+}
+
+impl AutoscaleConfig {
+    /// Derive the loop parameters from the server config.  Native backends
+    /// price the service time with the host-class roofline ([`I7_5600U`] —
+    /// the kernels run on the host CPU, not the simulated ZedBoard); the
+    /// `sim` backend prices it from the same
+    /// [`BatchAccelerator`] timing model the engine paces with, so the
+    /// controller and the device agree on the service rate.
+    pub fn from_server(config: &ServerConfig, net: &QNetwork, threads: usize) -> Self {
+        let max = effective_max(config);
+        let service_s = if config.backend == "sim" {
+            BatchAccelerator::zedboard(config.batch.max(1)).timing_only(net).per_sample()
+        } else {
+            I7_5600U.network_time(&net.spec, threads.max(1))
+        };
+        Self {
+            min_workers: config.autoscale_min_workers.clamp(1, max),
+            max_workers: max,
+            target_p99: Duration::from_micros(config.autoscale_target_p99_us.max(1)),
+            service_s,
+            interval: Duration::from_millis(10),
+            cooldown: Duration::from_millis(75),
+            down_ticks: 3,
+        }
+    }
+}
+
+/// Monotonic spawn/park totals (the `zdnn_autoscale_*_total` series).
+#[derive(Debug, Default)]
+pub struct AutoscaleCounters {
+    pub spawns: AtomicU64,
+    pub parks: AtomicU64,
+}
+
+/// Move the routing prefix and account the delta as spawns or parks.
+pub(crate) fn apply_scale(active: &AtomicUsize, counters: &AutoscaleCounters, to: usize) {
+    let from = active.swap(to, Ordering::SeqCst);
+    if to > from {
+        counters.spawns.fetch_add((to - from) as u64, Ordering::Relaxed);
+    } else if to < from {
+        counters.parks.fetch_add((from - to) as u64, Ordering::Relaxed);
+    }
+}
+
+/// Workers needed right now: enough to absorb the arrival rate *and*
+/// drain the standing backlog within the p99 budget, priced at the
+/// model-predicted service time.
+pub fn desired_workers(
+    queue_depth: usize,
+    arrival_rps: f64,
+    service_s: f64,
+    target_p99_s: f64,
+    min: usize,
+    max: usize,
+) -> usize {
+    let absorb = arrival_rps.max(0.0) * service_s;
+    let drain = queue_depth as f64 * service_s / target_p99_s.max(1e-9);
+    ((absorb + drain).ceil() as usize).clamp(min, max)
+}
+
+/// Hysteresis + cooldown around the raw [`desired_workers`] signal: up
+/// moves apply at once (after cooldown), down moves need `down_ticks`
+/// consecutive low readings and step one worker at a time.
+#[derive(Debug)]
+pub struct ScaleDecider {
+    cooldown: Duration,
+    down_ticks: u32,
+    below: u32,
+    last_change: Option<Instant>,
+}
+
+impl ScaleDecider {
+    pub fn new(cooldown: Duration, down_ticks: u32) -> Self {
+        Self {
+            cooldown,
+            down_ticks: down_ticks.max(1),
+            below: 0,
+            last_change: None,
+        }
+    }
+
+    fn cooled(&self, now: Instant) -> bool {
+        self.last_change
+            .map_or(true, |t| now.duration_since(t) >= self.cooldown)
+    }
+
+    /// One control tick: returns the new active count when a change
+    /// should be applied now.
+    pub fn step(&mut self, now: Instant, active: usize, desired: usize) -> Option<usize> {
+        if desired > active {
+            self.below = 0;
+            if self.cooled(now) {
+                self.last_change = Some(now);
+                return Some(desired);
+            }
+            return None;
+        }
+        if desired < active {
+            self.below += 1;
+            if self.below >= self.down_ticks && self.cooled(now) {
+                self.below = 0;
+                self.last_change = Some(now);
+                return Some(active - 1);
+            }
+            return None;
+        }
+        self.below = 0;
+        None
+    }
+}
+
+/// Everything the control thread needs, all `Arc`-shared with the pool.
+pub(crate) struct Controller {
+    pub cfg: AutoscaleConfig,
+    pub active: Arc<AtomicUsize>,
+    pub in_flight: Arc<AtomicUsize>,
+    pub counters: Arc<AutoscaleCounters>,
+    pub metrics: Vec<Arc<ShardMetrics>>,
+    pub stop: Arc<AtomicBool>,
+}
+
+pub(crate) fn autoscale_loop(ctl: Controller) {
+    let mut decider = ScaleDecider::new(ctl.cfg.cooldown, ctl.cfg.down_ticks);
+    let target_s = ctl.cfg.target_p99.as_secs_f64();
+    while !ctl.stop.load(Ordering::SeqCst) {
+        thread::sleep(ctl.cfg.interval);
+        let backlog = ctl.in_flight.load(Ordering::SeqCst);
+        let rate = ShardMetrics::merged(ctl.metrics.iter().map(|m| m.as_ref())).throughput_10s;
+        let want = desired_workers(
+            backlog,
+            rate,
+            ctl.cfg.service_s,
+            target_s,
+            ctl.cfg.min_workers,
+            ctl.cfg.max_workers,
+        );
+        let active = ctl.active.load(Ordering::SeqCst);
+        if let Some(next) = decider.step(Instant::now(), active, want) {
+            apply_scale(&ctl.active, &ctl.counters, next);
+        }
+    }
+}
+
+/// Join handle for the control thread; the pool stops it before draining
+/// shards so no scale decision races the shutdown.
+pub(crate) struct ScalerHandle {
+    pub stop: Arc<AtomicBool>,
+    pub thread: Option<thread::JoinHandle<()>>,
+}
+
+impl ScalerHandle {
+    pub(crate) fn stop_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn desired_workers_absorbs_rate_and_drains_backlog() {
+        // idle → floor
+        assert_eq!(desired_workers(0, 0.0, 1e-4, 1e-3, 1, 8), 1);
+        // pure rate: 25k rps × 100 µs = 2.5 busy workers → 3
+        assert_eq!(desired_workers(0, 25_000.0, 1e-4, 1e-3, 1, 8), 3);
+        // pure backlog: 50 queued × 100 µs / 1 ms budget = 5
+        assert_eq!(desired_workers(50, 0.0, 1e-4, 1e-3, 1, 8), 5);
+        // both clamp at the ceiling
+        assert_eq!(desired_workers(500, 50_000.0, 1e-4, 1e-3, 1, 8), 8);
+        // and never below the floor
+        assert_eq!(desired_workers(0, 0.0, 1e-4, 1e-3, 2, 8), 2);
+    }
+
+    #[test]
+    fn decider_scales_up_fast_and_down_slow() {
+        let mut d = ScaleDecider::new(Duration::from_millis(50), 3);
+        let t0 = Instant::now();
+        // up: applied on the first tick, straight to the target
+        assert_eq!(d.step(t0, 1, 4), Some(4));
+        // down: needs 3 consecutive low readings after the cooldown...
+        let t1 = t0 + Duration::from_millis(60);
+        assert_eq!(d.step(t1, 4, 1), None);
+        assert_eq!(d.step(t1 + Duration::from_millis(1), 4, 1), None);
+        // ...and then steps one worker at a time
+        assert_eq!(d.step(t1 + Duration::from_millis(2), 4, 1), Some(3));
+    }
+
+    #[test]
+    fn decider_cooldown_blocks_immediate_moves() {
+        let mut d = ScaleDecider::new(Duration::from_millis(50), 1);
+        let t0 = Instant::now();
+        assert_eq!(d.step(t0, 1, 4), Some(4));
+        // another up inside the cooldown window is held back
+        assert_eq!(d.step(t0 + Duration::from_millis(10), 4, 6), None);
+        assert_eq!(d.step(t0 + Duration::from_millis(60), 4, 6), Some(6));
+        // a desired == active tick resets the down streak
+        assert_eq!(d.step(t0 + Duration::from_millis(200), 6, 6), None);
+    }
+
+    #[test]
+    fn apply_scale_accounts_spawns_and_parks() {
+        let active = AtomicUsize::new(2);
+        let c = AutoscaleCounters::default();
+        apply_scale(&active, &c, 5);
+        apply_scale(&active, &c, 1);
+        apply_scale(&active, &c, 1);
+        assert_eq!(active.load(Ordering::SeqCst), 1);
+        assert_eq!(c.spawns.load(Ordering::Relaxed), 3);
+        assert_eq!(c.parks.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn effective_max_honours_workers_floor_and_zero_default() {
+        let mut cfg = ServerConfig {
+            workers: 4,
+            ..Default::default()
+        };
+        assert_eq!(effective_max(&cfg), 4, "0 means `workers`");
+        cfg.autoscale_max_workers = 2;
+        assert_eq!(effective_max(&cfg), 4, "never below the start size");
+        cfg.autoscale_max_workers = 8;
+        assert_eq!(effective_max(&cfg), 8);
+    }
+}

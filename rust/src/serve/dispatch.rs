@@ -9,11 +9,16 @@
 //! queue first and only then topped up from the bulk queue.  Two rules
 //! keep this starvation-free and predictable:
 //!
-//! * **Aging**: a bulk request older than `promote_after` is *promoted* —
-//!   it competes with interactive requests in global FIFO order (by
-//!   enqueue time), so a steady interactive flood cannot hold it back
-//!   forever.  Promoted bulk is never overtaken by a younger request
-//!   (property-tested below).
+//! * **Aging**: a bulk request older than the promotion threshold is
+//!   *promoted* — it competes with interactive requests in global FIFO
+//!   order (by enqueue time), so a steady interactive flood cannot hold
+//!   it back forever.  Promoted bulk is never overtaken by a younger
+//!   request (property-tested below).  The threshold is either pinned
+//!   (`bulk_promote_us > 0`) or — the default — derived *adaptively* from
+//!   the measured interactive arrival rate: roughly two interactive
+//!   batches' worth of arrivals, clamped to [1 ms, 100 ms], so bulk waits
+//!   longer under a hot interactive tenant and dispatches sooner on a
+//!   quiet one.
 //! * **Deadline**: the flush deadline applies to the oldest request of
 //!   either class, so a lone bulk request still dispatches within the
 //!   deadline even when no interactive traffic arrives.
@@ -86,32 +91,84 @@ impl PrioBatch {
     }
 }
 
+/// Interactive arrivals remembered for the adaptive promotion threshold.
+const ARRIVAL_WINDOW: usize = 32;
+/// Adaptive threshold before two arrivals are observed.
+const ADAPTIVE_DEFAULT: Duration = Duration::from_millis(20);
+/// Adaptive clamp: a quiet tenant still promotes within 1 ms...
+const ADAPTIVE_MIN: Duration = Duration::from_millis(1);
+/// ...and a flooded one within 100 ms (the no-starvation ceiling).
+const ADAPTIVE_MAX: Duration = Duration::from_millis(100);
+
 /// Two-level batching queue (single consumer: one shard thread).
 pub struct PriorityBatcher {
     interactive: VecDeque<Request>,
     bulk: VecDeque<Request>,
     batch_size: usize,
     deadline: Duration,
-    promote_after: Duration,
+    /// Pinned promotion threshold; `None` = adaptive from arrival rate.
+    promote_override: Option<Duration>,
+    /// Recent interactive `queued_at` stamps (adaptive mode only).
+    recent_interactive: VecDeque<Instant>,
 }
 
 impl PriorityBatcher {
+    /// Fixed-threshold batcher (`bulk_promote_us` pinned in the config).
     pub fn new(batch_size: usize, deadline: Duration, promote_after: Duration) -> Self {
+        Self::build(batch_size, deadline, Some(promote_after))
+    }
+
+    /// Adaptive batcher: the promotion threshold follows the measured
+    /// interactive arrival rate (the `bulk_promote_us = 0` default).
+    pub fn new_adaptive(batch_size: usize, deadline: Duration) -> Self {
+        Self::build(batch_size, deadline, None)
+    }
+
+    fn build(batch_size: usize, deadline: Duration, promote_override: Option<Duration>) -> Self {
         assert!(batch_size >= 1);
         Self {
             interactive: VecDeque::new(),
             bulk: VecDeque::new(),
             batch_size,
             deadline,
-            promote_after,
+            promote_override,
+            recent_interactive: VecDeque::new(),
         }
     }
 
     pub fn push(&mut self, req: Request, priority: Priority) {
         match priority {
-            Priority::Interactive => self.interactive.push_back(req),
+            Priority::Interactive => {
+                // the arrival window records `queued_at` (not the wall
+                // clock) so replayed/property-test timelines stay exact
+                if self.promote_override.is_none() {
+                    if self.recent_interactive.len() == ARRIVAL_WINDOW {
+                        self.recent_interactive.pop_front();
+                    }
+                    self.recent_interactive.push_back(req.queued_at);
+                }
+                self.interactive.push_back(req);
+            }
             Priority::Bulk => self.bulk.push_back(req),
         }
+    }
+
+    /// The promotion threshold in force right now: the pinned override,
+    /// or ~two batches of interactive arrivals at the windowed mean
+    /// interarrival time, clamped to [1 ms, 100 ms].
+    pub fn promote_threshold(&self) -> Duration {
+        if let Some(d) = self.promote_override {
+            return d;
+        }
+        let n = self.recent_interactive.len();
+        if n < 2 {
+            return ADAPTIVE_DEFAULT;
+        }
+        let first = self.recent_interactive.front().unwrap();
+        let last = self.recent_interactive.back().unwrap();
+        let interarrival = last.saturating_duration_since(*first) / (n as u32 - 1);
+        let thr = interarrival * (2 * self.batch_size).min(u32::MAX as usize) as u32;
+        thr.clamp(ADAPTIVE_MIN, ADAPTIVE_MAX)
     }
 
     pub fn pending(&self) -> usize {
@@ -161,15 +218,16 @@ impl PriorityBatcher {
 
     /// Batch-formation rule: interactive first (FIFO), bulk fills the
     /// remaining slots (FIFO) — except that a *promoted* bulk request
-    /// (older than `promote_after`) competes in global FIFO order and is
-    /// therefore taken before any younger interactive request.
+    /// (older than the promotion threshold) competes in global FIFO order
+    /// and is therefore taken before any younger interactive request.
     fn form(&mut self, now: Instant) -> PrioBatch {
+        let promote_after = self.promote_threshold();
         let mut requests = Vec::with_capacity(self.batch_size.min(self.pending()));
         let mut promoted = 0;
         while requests.len() < self.batch_size {
             let take_bulk = match (self.interactive.front(), self.bulk.front()) {
                 (Some(i), Some(b)) => {
-                    now.duration_since(b.queued_at) >= self.promote_after
+                    now.duration_since(b.queued_at) >= promote_after
                         && b.queued_at <= i.queued_at
                 }
                 (None, Some(_)) => true,
@@ -178,7 +236,7 @@ impl PriorityBatcher {
             };
             if take_bulk {
                 let req = self.bulk.pop_front().unwrap();
-                if now.duration_since(req.queued_at) >= self.promote_after {
+                if now.duration_since(req.queued_at) >= promote_after {
                     promoted += 1;
                 }
                 requests.push((req, Priority::Bulk));
@@ -434,6 +492,81 @@ mod tests {
                     seen.iter().filter(|(_, p)| *p == class).map(|(id, _)| *id).collect();
                 if ids.windows(2).any(|w| w[0] > w[1]) {
                     return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn adaptive_threshold_tracks_interactive_arrival_rate() {
+        let t0 = Instant::now();
+        let mut q = PriorityBatcher::new_adaptive(4, Duration::from_millis(1));
+        // below two observed arrivals: the fixed default
+        q.push(mk_request(0, t0), Priority::Interactive);
+        assert_eq!(q.promote_threshold(), ADAPTIVE_DEFAULT);
+        // 1 ms interarrival × 2×batch(4) → 8 ms
+        for i in 1..9u64 {
+            q.push(mk_request(i, t0 + Duration::from_millis(i)), Priority::Interactive);
+        }
+        assert_eq!(q.promote_threshold(), Duration::from_millis(8));
+        // bulk arrivals never move the window
+        q.push(mk_request(99, t0 + Duration::from_secs(5)), Priority::Bulk);
+        assert_eq!(q.promote_threshold(), Duration::from_millis(8));
+        // a quiet tenant (1 s apart) clamps at the ceiling...
+        let mut slow = PriorityBatcher::new_adaptive(4, Duration::from_millis(1));
+        slow.push(mk_request(0, t0), Priority::Interactive);
+        slow.push(mk_request(1, t0 + Duration::from_secs(1)), Priority::Interactive);
+        assert_eq!(slow.promote_threshold(), ADAPTIVE_MAX);
+        // ...and a flood (1 µs apart) at the floor
+        let mut fast = PriorityBatcher::new_adaptive(1, Duration::from_millis(1));
+        fast.push(mk_request(0, t0), Priority::Interactive);
+        fast.push(mk_request(1, t0 + Duration::from_micros(1)), Priority::Interactive);
+        assert_eq!(fast.promote_threshold(), ADAPTIVE_MIN);
+        // a pinned override ignores the measurements entirely
+        let mut pinned = PriorityBatcher::new(4, Duration::from_millis(1), Duration::from_secs(9));
+        pinned.push(mk_request(0, t0), Priority::Interactive);
+        pinned.push(mk_request(1, t0 + Duration::from_millis(1)), Priority::Interactive);
+        assert_eq!(pinned.promote_threshold(), Duration::from_secs(9));
+    }
+
+    #[test]
+    fn prop_promoted_bulk_never_overtaken_adaptive() {
+        // the same no-starvation invariant with the threshold *moving*
+        // under the measured interactive arrival rate: whatever value is
+        // in force when a batch forms, promoted bulk is never overtaken
+        prop_check(150, |g| {
+            let n = g.usize(1..6);
+            let mut q = PriorityBatcher::new_adaptive(n, Duration::from_millis(1));
+            let t0 = Instant::now();
+            let mut now = t0;
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1..30) {
+                now += Duration::from_millis(g.u64(0..=4));
+                for _ in 0..g.usize(0..4) {
+                    let prio = if g.bool(0.6) {
+                        Priority::Interactive
+                    } else {
+                        Priority::Bulk
+                    };
+                    q.push(mk_request(next_id, now), prio);
+                    next_id += 1;
+                }
+                // the threshold the forming batch will use (no pushes
+                // happen between here and form, so the window is stable)
+                let promote = q.promote_threshold();
+                if let Some(batch) = q.poll(now) {
+                    let oldest_promoted = q
+                        .bulk
+                        .iter()
+                        .filter(|r| now.duration_since(r.queued_at) >= promote)
+                        .map(|r| r.queued_at)
+                        .min();
+                    if let Some(cutoff) = oldest_promoted {
+                        if batch.requests.iter().any(|(r, _)| r.queued_at > cutoff) {
+                            return false;
+                        }
+                    }
                 }
             }
             true

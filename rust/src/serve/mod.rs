@@ -36,14 +36,20 @@
 //! * [`histogram`] — per-shard latency recorders (p50/p95/p99), batch
 //!   occupancy, padded-slot waste, and per-priority breakdowns, mergeable
 //!   into a pool aggregate.
+//! * [`autoscale`] — the perfmodel-driven control loop that grows/parks
+//!   the pool's active shard prefix from queue depth + predicted service
+//!   time (`autoscale = on`; decisions exported as `zdnn_autoscale_*`).
 //!
-//! The SLO benchmark over this runtime lives in [`crate::bench::slo`].
+//! The SLO benchmark over this runtime lives in [`crate::bench::slo`];
+//! the step-load autoscaling benchmark in [`crate::bench::autoscale`].
 
+pub mod autoscale;
 pub mod dispatch;
 pub mod histogram;
 pub mod pool;
 pub(crate) mod shard;
 
+pub use autoscale::{desired_workers, AutoscaleConfig, AutoscaleCounters, ScaleDecider};
 pub use dispatch::{Policy, PrioBatch, Priority, PriorityBatcher};
 pub use histogram::{LatencyRecorder, ShardMetrics, ShardSnapshot};
 pub use pool::{start_serving, PoolHandle, PoolSnapshot, ServePool, Serving};

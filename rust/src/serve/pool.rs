@@ -6,9 +6,14 @@
 //! [`ExecPlan::clone_shared`](crate::exec::ExecPlan::clone_shared): shards
 //! share the read-only dense/CSR weight storage behind `Arc` and own only
 //! their activation buffers, so memory scales with activations — not with
-//! `workers × weights`.  Non-native backends (simulators, PJRT) construct
+//! `workers × weights`.  Non-plan backends (simulators, PJRT) construct
 //! their engine inside the shard thread exactly like the single-engine
 //! coordinator does.
+//!
+//! With `autoscale = on` the pool provisions `autoscale_max_workers`
+//! shards up front and routes only to an atomic *active prefix* of them;
+//! the [`autoscale`](super::autoscale) control loop grows/shrinks that
+//! prefix from queue depth + the perfmodel-predicted service time.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -17,6 +22,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use super::autoscale::{self, AutoscaleConfig, AutoscaleCounters, Controller, ScalerHandle};
 use super::dispatch::{Policy, Priority};
 use super::histogram::{ShardMetrics, ShardSnapshot};
 use super::shard::{shard_loop, ShardCommand, ShardConfig};
@@ -62,6 +68,13 @@ pub struct PoolHandle {
     trace: Arc<TraceRing>,
     /// Export-time metrics registry backing `STATS PROM` / `STATS JSON`.
     registry: Arc<Registry>,
+    /// Routing prefix: picks go to `shards[..active]`; parked shards keep
+    /// their threads and drain whatever they already queued.
+    active: Arc<AtomicUsize>,
+    /// Spawn/park totals (exported whether or not the loop is running).
+    autoscale: Arc<AutoscaleCounters>,
+    /// The running control loop, when `autoscale = on`.
+    scaler: Option<ScalerHandle>,
 }
 
 /// Pool-wide view: the merged aggregate plus each shard's snapshot.
@@ -92,12 +105,24 @@ impl ServePool {
         config.validate()?;
         factory.apply_config_artifact(config)?;
         let policy = Policy::parse(&config.policy)?;
-        let workers = config.workers;
+        // with autoscaling on, provision the ceiling and serve only the
+        // active prefix; otherwise provision exactly `workers`
+        let scale_cfg = config
+            .autoscale
+            .then(|| AutoscaleConfig::from_server(config, &factory.net, factory.native_threads));
+        let workers = match &scale_cfg {
+            Some(sc) => sc.max_workers,
+            None => config.workers,
+        };
+        let initial = match &scale_cfg {
+            Some(sc) => config.workers.clamp(sc.min_workers, sc.max_workers),
+            None => workers,
+        };
         let input_width = factory.net.spec.inputs();
         // compile once, replicate cheaply: plan compilation (and any CSR
         // encoding) happens here, on the caller thread, so errors surface
         // at start rather than inside a worker
-        let shared_plan = if factory.is_native() {
+        let shared_plan = if factory.plan_backed() {
             Some(factory.compile_plan()?)
         } else {
             None
@@ -105,7 +130,9 @@ impl ServePool {
         let shard_cfg = ShardConfig {
             batch: config.batch,
             deadline: Duration::from_micros(config.batch_deadline_us),
-            promote_after: Duration::from_micros(config.bulk_promote_us),
+            // 0 = derive the promotion threshold adaptively per shard
+            promote_after: (config.bulk_promote_us > 0)
+                .then(|| Duration::from_micros(config.bulk_promote_us)),
         };
         let in_flight = Arc::new(AtomicUsize::new(0));
         let mut shards = Vec::with_capacity(workers);
@@ -129,6 +156,26 @@ impl ServePool {
                 thread: Some(thread),
             });
         }
+        let active = Arc::new(AtomicUsize::new(initial));
+        let counters = Arc::new(AutoscaleCounters::default());
+        let scaler = scale_cfg.map(|cfg| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let ctl = Controller {
+                cfg,
+                active: active.clone(),
+                in_flight: in_flight.clone(),
+                counters: counters.clone(),
+                metrics: shards.iter().map(|s| s.metrics.clone()).collect(),
+                stop: stop.clone(),
+            };
+            ScalerHandle {
+                stop,
+                thread: thread::Builder::new()
+                    .name("zdnn-autoscale".into())
+                    .spawn(move || autoscale::autoscale_loop(ctl))
+                    .ok(),
+            }
+        });
         Ok(PoolHandle {
             shards,
             policy,
@@ -142,6 +189,9 @@ impl ServePool {
             input_width,
             trace,
             registry: Arc::new(Registry::new()),
+            active,
+            autoscale: counters,
+            scaler,
         })
     }
 }
@@ -156,8 +206,30 @@ fn splitmix64(mut z: u64) -> u64 {
 }
 
 impl PoolHandle {
+    /// Workers currently receiving picks (the active prefix).
     pub fn workers(&self) -> usize {
+        self.active.load(Ordering::SeqCst).clamp(1, self.shards.len())
+    }
+
+    /// Shard threads provisioned (the autoscale ceiling; `== workers()`
+    /// without autoscaling).
+    pub fn provisioned_workers(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Move the routing prefix by hand — the autoscaler's actuator,
+    /// exposed so the exactly-once scale test and `bench autoscale` can
+    /// drive deterministic scale events.
+    pub fn set_active(&self, n: usize) {
+        autoscale::apply_scale(&self.active, &self.autoscale, n.clamp(1, self.shards.len()));
+    }
+
+    /// Monotonic (spawns, parks) totals across all scale decisions.
+    pub fn autoscale_counts(&self) -> (u64, u64) {
+        (
+            self.autoscale.spawns.load(Ordering::Relaxed),
+            self.autoscale.parks.load(Ordering::Relaxed),
+        )
     }
 
     /// Requests currently occupying pool-wide queue slots.
@@ -176,9 +248,10 @@ impl PoolHandle {
         self.shards.iter().map(|s| s.metrics.as_ref())
     }
 
-    /// Pick a shard for the next request under the configured policy.
+    /// Pick a shard for the next request under the configured policy,
+    /// among the active prefix only (parked shards get no new work).
     fn pick_shard(&self) -> usize {
-        let n = self.shards.len();
+        let n = self.workers();
         if n == 1 {
             return 0;
         }
@@ -187,7 +260,7 @@ impl PoolHandle {
             Policy::LeastLoaded => {
                 let mut best = 0;
                 let mut best_depth = usize::MAX;
-                for (i, s) in self.shards.iter().enumerate() {
+                for (i, s) in self.shards[..n].iter().enumerate() {
                     let d = s.depth.load(Ordering::Relaxed);
                     if d < best_depth {
                         best = i;
@@ -286,9 +359,13 @@ impl PoolHandle {
         }
     }
 
-    /// Graceful shutdown: every shard drains its backlog, then joins.
+    /// Graceful shutdown: the scaler stops first (no decision races the
+    /// drain), then every shard drains its backlog and joins.
     pub fn shutdown(mut self) -> Result<()> {
         self.shutting_down.store(true, Ordering::SeqCst);
+        if let Some(s) = self.scaler.as_mut() {
+            s.stop_join();
+        }
         for s in &self.shards {
             let _ = s.tx.send(ShardCommand::Shutdown);
         }
@@ -341,6 +418,8 @@ impl SubmitTarget for PoolHandle {
             throughput_10s: a.throughput_10s,
             workers: self.workers(),
             shed: a.shed,
+            autoscale_spawns: self.autoscale.spawns.load(Ordering::Relaxed),
+            autoscale_parks: self.autoscale.parks.load(Ordering::Relaxed),
         }
     }
 
@@ -366,6 +445,10 @@ impl SubmitTarget for PoolHandle {
         r.set_gauge("zdnn_p99_latency_s", a.p99_latency_s);
         r.set_gauge("zdnn_in_flight", self.in_flight.load(Ordering::SeqCst) as f64);
         r.set_gauge("zdnn_workers", self.workers() as f64);
+        let (spawns, parks) = self.autoscale_counts();
+        r.set_gauge("zdnn_autoscale_workers", self.workers() as f64);
+        r.set_counter("zdnn_autoscale_spawns_total", spawns);
+        r.set_counter("zdnn_autoscale_parks_total", parks);
         for (i, (shard, s)) in self.shards.iter().zip(snap.shards.iter()).enumerate() {
             r.set_gauge(
                 &format!("zdnn_shard{i}_depth"),
@@ -383,6 +466,9 @@ impl SubmitTarget for PoolHandle {
 
 impl Drop for PoolHandle {
     fn drop(&mut self) {
+        if let Some(s) = self.scaler.as_mut() {
+            s.stop_join();
+        }
         for s in &self.shards {
             let _ = s.tx.send(ShardCommand::Shutdown);
         }
@@ -402,10 +488,11 @@ pub enum Serving {
 }
 
 /// The one serving entry point: delegates to the sharded pool when
-/// `workers > 1`, otherwise to the classic single-engine [`Server`]
-/// (whose FIFO batcher ignores priorities by construction).
+/// `workers > 1` (or when autoscaling, which needs shards to park),
+/// otherwise to the classic single-engine [`Server`] (whose FIFO batcher
+/// ignores priorities by construction).
 pub fn start_serving(config: &ServerConfig, factory: EngineFactory) -> Result<Serving> {
-    if config.workers > 1 {
+    if config.workers > 1 || config.autoscale {
         Ok(Serving::Pool(ServePool::start(config, factory)?))
     } else {
         Ok(Serving::Single(Server::start(config, factory)?))
@@ -621,5 +708,71 @@ mod tests {
         let resp = pool.infer_blocking(rand_sample(2), Priority::Bulk).unwrap();
         assert_eq!(resp.output.len(), 10);
         pool.shutdown().unwrap();
+    }
+
+    /// The registry-swap-style exactly-once property, across scale events:
+    /// interleave submissions with random active-prefix moves on every
+    /// policy — every ticket gets exactly one golden reply, nothing is
+    /// lost or doubled, and the spawn/park counters account every move.
+    #[test]
+    fn prop_exactly_once_replies_across_scale_events() {
+        for policy in ["round-robin", "least-loaded", "p2c"] {
+            let factory = test_factory(2);
+            let net = factory.net.clone();
+            let mut cfg = test_config(4, 2, policy);
+            cfg.queue_depth = 512;
+            let pool = ServePool::start(&cfg, factory).unwrap();
+            let mut rng = Xoshiro256::seed_from_u64(0xA5_CA1E);
+            let mut pending = Vec::new();
+            for i in 0..160u64 {
+                if i % 13 == 0 {
+                    let n = 1 + (rng.uniform(0.0, 4.0) as usize).min(3);
+                    pool.set_active(n);
+                    assert_eq!(pool.workers(), n);
+                }
+                let prio = if i % 4 == 0 {
+                    Priority::Interactive
+                } else {
+                    Priority::Bulk
+                };
+                let input = rand_sample(i);
+                let t = pool.submit(input.clone(), SubmitOptions::with_priority(prio)).unwrap();
+                pending.push((input, t));
+            }
+            let total = pending.len() as u64;
+            for (input, mut t) in pending {
+                let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
+                let want = forward_q(&net, &MatI::from_vec(1, 64, input)).unwrap();
+                assert_eq!(resp.output, want.row(0), "{policy}");
+            }
+            let snap = pool.snapshot();
+            assert_eq!(snap.aggregate.requests, total, "{policy}: exactly once");
+            let (spawns, parks) = pool.autoscale_counts();
+            assert!(spawns >= 1 && parks >= 1, "{policy}: {spawns}/{parks}");
+            pool.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn autoscale_provisions_ceiling_and_serves_from_the_floor() {
+        let mut cfg = test_config(1, 2, "least-loaded");
+        cfg.autoscale = true;
+        cfg.autoscale_min_workers = 1;
+        cfg.autoscale_max_workers = 3;
+        // autoscale forces the pool even at workers = 1 (shards must park)
+        let serving = start_serving(&cfg, test_factory(2)).unwrap();
+        let pool = match &serving {
+            Serving::Pool(p) => p,
+            Serving::Single(_) => panic!("autoscale must pick the pool"),
+        };
+        assert_eq!(pool.provisioned_workers(), 3);
+        assert_eq!(pool.workers(), 1);
+        let resp = serving.infer_blocking(rand_sample(7), Priority::Interactive).unwrap();
+        assert_eq!(resp.output.len(), 10);
+        // the decision counters ride the STATS wire line
+        let line = SubmitTarget::stats(&serving).render();
+        assert!(line.contains("autoscale_workers="), "{line}");
+        assert!(line.contains("autoscale_spawns="), "{line}");
+        serving.shutdown().unwrap();
     }
 }

@@ -30,7 +30,9 @@ pub(crate) type ShardCommand = ExecCommand<Priority>;
 pub(crate) struct ShardConfig {
     pub batch: usize,
     pub deadline: Duration,
-    pub promote_after: Duration,
+    /// Pinned bulk-promotion threshold; `None` (`bulk_promote_us = 0`)
+    /// derives it per shard from the measured interactive arrival rate.
+    pub promote_after: Option<Duration>,
 }
 
 /// A shard's face of the generic executor: per-class metrics, and two
@@ -89,7 +91,10 @@ pub(crate) fn shard_loop(
             Some(plan) => Ok(factory.build_from_plan(plan)),
             None => factory.build(),
         },
-        PriorityBatcher::new(cfg.batch, cfg.deadline, cfg.promote_after),
+        match cfg.promote_after {
+            Some(d) => PriorityBatcher::new(cfg.batch, cfg.deadline, d),
+            None => PriorityBatcher::new_adaptive(cfg.batch, cfg.deadline),
+        },
         ShardSink {
             metrics: &*metrics,
             depth: &*depth,

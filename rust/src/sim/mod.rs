@@ -8,6 +8,7 @@
 //! ignore (DMA prologues, per-layer control handshakes, activation drain).
 //!
 //! Modules:
+//! * [`engine`]    — serving-grade `sim` backend (plan compute, sim time)
 //! * [`zynq`]      — device model: clocks, DSP/BRAM/LUT budgets, HP ports
 //! * [`memory`]    — DDR3 weight-stream interface model + calibration
 //! * [`resources`] — feasible MAC count per batch size (Table 2's m column)
@@ -19,6 +20,7 @@
 pub mod batch;
 pub mod combined;
 pub mod dma;
+pub mod engine;
 pub mod memory;
 pub mod power;
 pub mod pruning;

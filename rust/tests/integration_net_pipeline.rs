@@ -219,6 +219,8 @@ impl SubmitTarget for ShuffleTarget {
             throughput_10s: 0.0,
             workers: 1,
             shed: 0,
+            autoscale_spawns: 0,
+            autoscale_parks: 0,
         }
     }
 }

@@ -1,15 +1,22 @@
 //! Integration: the cycle-level simulators vs the golden model and the
 //! §4.4 closed forms — functional bit-exactness on real paper networks,
-//! timing agreement with the analytic formulas.
+//! timing agreement with the analytic formulas — plus the serving-grade
+//! `sim` backend end-to-end: engine bit-equality vs native, and a TCP
+//! loopback over a `serve --backend sim` pool.
+
+use std::sync::Arc;
 
 use zynq_dnn::bench::random_qnet;
+use zynq_dnn::config::ServerConfig;
+use zynq_dnn::coordinator::{Engine as _, EngineFactory, NetClient, NetFrontend, Priority};
 use zynq_dnn::nn::forward::forward_q;
-use zynq_dnn::nn::spec::{har_4, mnist_4, paper_networks};
+use zynq_dnn::nn::spec::{har_4, mnist_4, paper_networks, quickstart, NetworkSpec};
 use zynq_dnn::nn::quantize_matrix;
 use zynq_dnn::perfmodel::hw::{per_sample_time, HwConfig};
+use zynq_dnn::serve::start_serving;
 use zynq_dnn::sim::batch::BatchAccelerator;
 use zynq_dnn::sim::pruning::{prune_qnetwork, PruningAccelerator, SparseNetwork};
-use zynq_dnn::tensor::MatF;
+use zynq_dnn::tensor::{MatF, MatI};
 use zynq_dnn::util::rng::Xoshiro256;
 
 fn rand_input(n: usize, cols: usize, seed: u64) -> zynq_dnn::tensor::MatI {
@@ -102,4 +109,82 @@ fn all_backends_agree_on_one_network() {
     let snet = SparseNetwork::encode(&net).unwrap();
     let (y_sparse, _) = PruningAccelerator::zedboard().run(&snet, &x).unwrap();
     assert_eq!(y_sparse.data, golden.data);
+}
+
+// ---- the serving-grade `sim` backend -------------------------------------
+
+fn factory(spec: &NetworkSpec, backend: &str, batch: usize, seed: u64) -> EngineFactory {
+    EngineFactory {
+        backend: backend.into(),
+        batch,
+        net: random_qnet(spec, seed),
+        artifacts_dir: zynq_dnn::runtime::default_artifacts_dir(),
+        native_threads: 1,
+        sparse_threshold: None,
+        artifact: None,
+    }
+}
+
+/// The `sim` engine must be bit-identical to the native engine on random
+/// networks and batch sizes, while reporting the modeled (not wall-clock)
+/// batch time.
+#[test]
+fn sim_engine_bit_equal_to_native_on_random_networks() {
+    for (spec, s_in) in [(quickstart(), 64), (mnist_4(), 784), (har_4(), 561)] {
+        for batch in [1usize, 4] {
+            let seed = 0x100 + batch as u64;
+            let mut native = factory(&spec, "native", batch, seed).build().unwrap();
+            let mut sim = factory(&spec, "sim", batch, seed).build().unwrap();
+            let x = rand_input(batch, s_in, seed + 1);
+            assert_eq!(
+                sim.infer(&x).unwrap().data,
+                native.infer(&x).unwrap().data,
+                "{} batch {batch}",
+                spec.name
+            );
+            let net = random_qnet(&spec, seed);
+            let expect = BatchAccelerator::zedboard(batch).timing_only(&net).total_seconds;
+            let got = sim.simulated_seconds().unwrap();
+            assert!((got - expect).abs() < 1e-15, "{} {got} vs {expect}", spec.name);
+            assert!(native.simulated_seconds().is_none(), "native reports wall-clock");
+        }
+    }
+}
+
+/// Full TCP loopback over `serve --backend sim`: a 2-shard pool of sim
+/// engines behind the network frontend must answer mixed-priority INFER
+/// traffic with golden outputs — the whole wire + pool + engine stack on
+/// simulated Zynq timing with zero special cases.
+#[test]
+fn serve_sim_backend_over_tcp_loopback() {
+    let spec = quickstart();
+    let factory = factory(&spec, "sim", 2, 0x77);
+    let net = factory.net.clone();
+    let cfg = ServerConfig {
+        network: spec.name.clone(),
+        workers: 2,
+        batch: 2,
+        batch_deadline_us: 300,
+        queue_depth: 256,
+        backend: "sim".into(),
+        ..Default::default()
+    };
+    let serving = Arc::new(start_serving(&cfg, factory).unwrap());
+    let fe = NetFrontend::start("127.0.0.1:0", serving.clone()).unwrap();
+    let mut client = NetClient::connect(&fe.addr()).unwrap();
+    client.set_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(0x78);
+    for i in 0..12 {
+        let vals: Vec<f32> = (0..64).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let prio = if i % 3 == 0 { Priority::Interactive } else { Priority::Bulk };
+        let (class, out) = client.infer_with(&vals, prio).unwrap();
+        let q = zynq_dnn::fixedpoint::quantize_slice(&vals);
+        let want = forward_q(&net, &MatI::from_vec(1, 64, q)).unwrap();
+        assert_eq!(out, want.row(0), "request {i}");
+        assert!(class < 10);
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("requests=12"), "{stats}");
+    client.quit().unwrap();
+    fe.stop();
 }
